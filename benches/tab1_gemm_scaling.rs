@@ -1,0 +1,55 @@
+//! TAB1 — GEMM cycles and speedup vs the scalar GPP baseline across
+//! square sizes (§IV-B1 "parallelism reduces time to compute").
+//!
+//! Expected shape: CGRA speedup grows with size toward the array
+//! roofline (64 MACs/cycle vs ~0.25 on the scalar core), saturating once
+//! streams hit steady state.
+
+use cgra_edge::baseline::Gpp;
+use cgra_edge::bench_util::{f1, f2, Table};
+use cgra_edge::config::ArchConfig;
+use cgra_edge::energy::EnergyModel;
+use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, OutputMode};
+use cgra_edge::sim::CgraSim;
+use cgra_edge::util::mat::MatI8;
+use cgra_edge::util::rng::XorShiftRng;
+
+fn main() -> anyhow::Result<()> {
+    println!("TAB1: blocked GEMM on the 4x4+4x2 CGRA vs scalar edge GPP");
+    println!("      ({})\n", ArchConfig::default().summary());
+    let mut table = Table::new(&[
+        "size", "strategy", "cycles", "config", "ideal", "util", "MAC/cy",
+        "GPP cycles", "speedup", "E ratio",
+    ]);
+    let gpp = Gpp::default();
+    let em = EnergyModel::default();
+    for &s in &[16usize, 32, 64, 96, 128, 192, 256] {
+        let mut rng = XorShiftRng::new(0xAB1 + s as u64);
+        let mut a = MatI8::zeros(s, s);
+        let mut b = MatI8::zeros(s, s);
+        rng.fill_i8(&mut a.data, 16);
+        rng.fill_i8(&mut b.data, 16);
+        let mut sim = CgraSim::new(ArchConfig::default());
+        let plan = GemmPlan::new(&sim.cfg, s, s, s, OutputMode::Quant { shift: 8 })?;
+        let run = run_gemm(&mut sim, &a, &b, &plan)?;
+        assert_eq!(run.c_i8.as_ref().unwrap(), &oracle_quant(&a, &b, 8), "size {s}");
+        let total = run.outcome.cycles + run.outcome.config_cycles;
+        let gc = gpp.gemm_cost(s, s, s);
+        let e_cgra = em.evaluate(&sim.stats, 100.0).total_pj();
+        table.row(&[
+            format!("{s}^3"),
+            format!("{:?}", plan.strategy),
+            run.outcome.cycles.to_string(),
+            run.outcome.config_cycles.to_string(),
+            plan.ideal_cycles().to_string(),
+            f2(sim.stats.pe_utilization(16)),
+            f1(sim.stats.macs_per_cycle()),
+            gc.cycles.to_string(),
+            f1(gc.cycles as f64 / total as f64),
+            f1(gc.energy_pj / e_cgra),
+        ]);
+    }
+    table.print();
+    println!("\nspeedup = GPP cycles / (CGRA cycles + config); E ratio = GPP energy / CGRA energy");
+    Ok(())
+}

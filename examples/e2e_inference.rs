@@ -1,0 +1,127 @@
+//! END-TO-END driver (DESIGN.md experiment E2E): all layers composed.
+//!
+//! 1. Load the AOT-compiled JAX encoder (HLO text + parameter blob +
+//!    manifest, produced by `make artifacts` — L2 calling the L1 Pallas
+//!    kernels) and execute it through the PJRT runtime.
+//! 2. Build the rust host model from the *same* parameter blob and serve
+//!    a batch of synthetic requests through the coordinator, every GEMM
+//!    running int8 on the cycle-level CGRA simulator (L3).
+//! 3. Cross-validate: XLA float output vs rust float reference
+//!    (must agree to float tolerance) vs CGRA int8 path (must agree to
+//!    quantization tolerance). Report latency/throughput/energy.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_inference`
+
+use cgra_edge::config::ArchConfig;
+use cgra_edge::coordinator::{Coordinator, Request};
+use cgra_edge::energy::EnergyModel;
+use cgra_edge::runtime::{assemble_inputs, read_f32_blob, Manifest, XlaRuntime};
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::{EncoderModel, XformerConfig};
+
+const ART: &str = "artifacts";
+
+fn main() -> anyhow::Result<()> {
+    // The canonical exported model (python/compile/aot.py ENCODER_CFG).
+    let xcfg = XformerConfig { d_model: 64, n_heads: 4, d_ff: 128, n_layers: 2, seq: 32 };
+    let manifest = Manifest::load(format!("{ART}/encoder.manifest.txt"))?;
+    let blob = read_f32_blob(format!("{ART}/encoder.params.bin"))?;
+    let model = EncoderModel::from_blob(xcfg, &blob)?;
+    println!("model    : {:?} ({} params)", xcfg, xcfg.param_count());
+
+    // --- 1. XLA reference path (PJRT) ---
+    let rt = XlaRuntime::cpu()?;
+    println!("runtime  : PJRT platform = {}", rt.platform());
+    let xla_model = rt.load_hlo_text(format!("{ART}/encoder.hlo.txt"))?;
+
+    let n_requests = 8u64;
+    let cfg = ArchConfig::default();
+    let mut rng = XorShiftRng::new(123);
+    let mut inputs = Vec::new();
+    for _ in 0..n_requests {
+        let mut x = MatF32::zeros(xcfg.seq, xcfg.d_model);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        inputs.push(x);
+    }
+
+    // XLA outputs for every request.
+    let mut xla_outs = Vec::new();
+    let t0 = std::time::Instant::now();
+    for x in &inputs {
+        let run_inputs = assemble_inputs(&manifest, &blob, &[("x", x.data.clone())])?;
+        let flat = xla_model.run_f32(&run_inputs)?;
+        xla_outs.push(MatF32 { rows: xcfg.seq, cols: xcfg.d_model, data: flat });
+    }
+    let xla_wall = t0.elapsed().as_secs_f64();
+
+    // Rust float reference must track XLA bit-for-bit-ish.
+    let mut max_ref_err = 0.0f32;
+    for (x, xo) in inputs.iter().zip(&xla_outs) {
+        let ro = model.forward_f32(x)?;
+        max_ref_err = max_ref_err.max(ro.max_abs_diff(xo));
+    }
+    println!(
+        "validate : rust-float vs XLA max |Δ| = {max_ref_err:.2e} over {n_requests} requests \
+         (float tolerance)"
+    );
+    anyhow::ensure!(max_ref_err < 2e-3, "reference paths diverged");
+
+    // --- 2. Serve through the coordinator on the simulated CGRA ---
+    let coord = Coordinator::spawn(cfg.clone(), model.clone(), 4);
+    // Poisson arrivals at 200 req/s.
+    let mut t = 0.0f64;
+    let mut arrival_rng = XorShiftRng::new(9);
+    for (id, x) in inputs.iter().enumerate() {
+        t += arrival_rng.exp(200.0);
+        coord.submit(Request {
+            id: id as u64,
+            input: x.clone(),
+            arrival_cycle: (t * cfg.freq_mhz * 1e6) as u64,
+        })?;
+    }
+    let mut cgra_outs: Vec<Option<MatF32>> = (0..n_requests).map(|_| None).collect();
+    let mut lat_cycles = Vec::new();
+    for _ in 0..n_requests {
+        let r = coord.recv()?;
+        lat_cycles.push(r.queue_cycles + r.service_cycles);
+        cgra_outs[r.id as usize] = Some(r.output);
+    }
+    let metrics = coord.shutdown()?;
+
+    // --- 3. Cross-validate the CGRA path and report ---
+    let mut max_q_err = 0.0f32;
+    for (xo, co) in xla_outs.iter().zip(&cgra_outs) {
+        max_q_err = max_q_err.max(co.as_ref().unwrap().max_abs_diff(xo));
+    }
+    let amax = xla_outs.iter().map(|m| m.abs_max()).fold(0.0f32, f32::max);
+    println!(
+        "validate : CGRA-int8 vs XLA max |Δ| = {max_q_err:.4} (output amax {amax:.3}, \
+         int8 tolerance)"
+    );
+    anyhow::ensure!(max_q_err < amax * 0.15 + 0.05, "quantized path diverged");
+
+    lat_cycles.sort_unstable();
+    let p50 = lat_cycles[lat_cycles.len() / 2];
+    let p99 = lat_cycles[(lat_cycles.len() * 99 / 100).min(lat_cycles.len() - 1)];
+    let em = EnergyModel::default();
+    let e = em.evaluate(&metrics.stats, cfg.freq_mhz);
+    println!("serving  : {} requests, batch 4, Poisson 200 req/s", metrics.completed);
+    println!(
+        "latency  : p50 {:.3} ms, p99 {:.3} ms (simulated @ {} MHz)",
+        p50 as f64 / (cfg.freq_mhz * 1e3),
+        p99 as f64 / (cfg.freq_mhz * 1e3),
+        cfg.freq_mhz
+    );
+    println!("thruput  : {:.1} req/s simulated", metrics.throughput_rps(cfg.freq_mhz));
+    println!(
+        "energy   : {:.1} µJ/request, avg power {:.3} mW",
+        e.total_uj() / metrics.completed as f64,
+        em.avg_power_mw(&metrics.stats, cfg.freq_mhz)
+    );
+    println!("xla wall : {:.1} ms for {n_requests} reference inferences", xla_wall * 1e3);
+    println!("\nE2E OK: all three layers compose and agree.");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT pipeline: lower the L2 model (and standalone L1 kernels) to HLO
+*text* artifacts the rust runtime loads via PJRT.
+
+HLO text — not ``.serialize()`` — is the interchange format: the `xla`
+crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id
+protos, while the text parser reassigns ids (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Artifacts (``make artifacts`` → ``artifacts/``):
+  gemm_{M}x{K}x{N}.hlo.txt      — standalone blocked-GEMM kernels
+  attention_h{H}_s{S}_d{D}.hlo.txt — fused per-head attention
+  encoder.hlo.txt               — full tiny-encoder forward pass
+  encoder.params.bin            — raw LE f32 parameter blob
+  encoder.manifest.txt          — input list (name, shape, blob offset)
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from ``python/``).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.attention_pallas import attention
+from .kernels.gemm_pallas import gemm
+from .model import EncoderConfig, init_params, make_forward_fn
+
+# The canonical exported encoder (matches the e2e example's expectations).
+ENCODER_CFG = EncoderConfig(d_model=64, n_heads=4, d_ff=128, n_layers=2, seq=32)
+ENCODER_SEED = 0
+
+GEMM_SHAPES = [(16, 16, 16), (32, 32, 32), (64, 64, 64)]
+ATTN_SHAPES = [(4, 32, 16)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def export_gemms(outdir: str) -> None:
+    for (m, k, n) in GEMM_SHAPES:
+        def fn(a, b):
+            return (gemm(a, b),)
+
+        spec_a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        spec_b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+        lowered = jax.jit(fn).lower(spec_a, spec_b)
+        write(os.path.join(outdir, f"gemm_{m}x{k}x{n}.hlo.txt"), to_hlo_text(lowered))
+
+
+def export_attention(outdir: str) -> None:
+    for (h, s, d) in ATTN_SHAPES:
+        def fn(q, k, v):
+            return (attention(q, k, v),)
+
+        spec = jax.ShapeDtypeStruct((h, s, d), jnp.float32)
+        lowered = jax.jit(fn).lower(spec, spec, spec)
+        write(os.path.join(outdir, f"attention_h{h}_s{s}_d{d}.hlo.txt"), to_hlo_text(lowered))
+
+
+def export_encoder(outdir: str) -> None:
+    cfg = ENCODER_CFG
+    params = init_params(cfg, ENCODER_SEED)
+    fn = make_forward_fn(cfg)
+    x_spec = jax.ShapeDtypeStruct((cfg.seq, cfg.d_model), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params]
+    lowered = jax.jit(fn).lower(x_spec, *p_specs)
+    write(os.path.join(outdir, "encoder.hlo.txt"), to_hlo_text(lowered))
+
+    # Parameter blob + manifest.
+    import numpy as np
+
+    blob = np.concatenate([np.asarray(p, np.float32).reshape(-1) for p in params])
+    blob.tofile(os.path.join(outdir, "encoder.params.bin"))
+    lines = [f"input x {cfg.seq}x{cfg.d_model}"]
+    off = 0
+    for (name, shape), p in zip(cfg.param_shapes(), params):
+        dims = "x".join(str(d) for d in shape)
+        lines.append(f"input {name} {dims} param {off}")
+        off += int(np.prod(shape))
+    with open(os.path.join(outdir, "encoder.manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote encoder.manifest.txt ({len(lines)} inputs, blob {off} f32 words)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    export_gemms(args.out)
+    export_attention(args.out)
+    export_encoder(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: per-head fused attention.
+
+Maps the attention mechanism's two GEMMs + softmax into one kernel with a
+grid over heads — the analogue of the CGRA executing the per-head score
+and context GEMMs back-to-back from L1-resident Q/K/V panels (paper
+§IV-B1). Edge sequence lengths are small (≤128), so each head's full
+S×S score tile fits on-chip (VMEM / the 32 KiB L1) without flash-style
+streaming; the BlockSpec keeps one head resident per grid step.
+
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]  # [S, D] (leading head axis blocked to 1)
+    k = k_ref[0]
+    v = v_ref[0]
+    d = q.shape[-1]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    # Numerically-stable softmax, in-kernel.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Fused multi-head attention. q, k, v: [H, S, D] → [H, S, D]."""
+    h, s, d = q.shape
+    assert k.shape == (h, s, d) and v.shape == (h, s, d)
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads",))
+def mha_from_packed(x_heads: jax.Array, *, n_heads: int) -> jax.Array:
+    """Convenience wrapper splitting a packed [S, H*D] tensor into heads,
+    running fused attention with q = k = v (self-similarity smoke shape
+    used by the AOT artifact tests)."""
+    s, hd = x_heads.shape
+    d = hd // n_heads
+    xh = x_heads.reshape(s, n_heads, d).transpose(1, 0, 2)
+    out = attention(xh, xh, xh)
+    return out.transpose(1, 0, 2).reshape(s, hd)

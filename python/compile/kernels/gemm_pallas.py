@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: block-wise GEMM (paper §IV-A1).
+
+The BlockSpec tiling *is* the paper's execution strategy translated to the
+TPU memory hierarchy (DESIGN.md §2 Hardware-Adaptation):
+
+- the output-stationary ``(bm, bn)`` tile corresponds to the 4×4 PE array
+  holding a C tile in accumulators (our default ``bm = bn = 16`` is
+  exactly the CGRA tile: 4×4 PEs × 4×4-element sub-tiles);
+- the k-grid dimension streams ``(bm, bk)`` / ``(bk, bn)`` operand panels
+  through VMEM the way the 4×2 MOB array streams packed operands from the
+  shared L1 (BlockSpec index maps = MOB address generators);
+- revisiting the same output block across the k dimension keeps C resident
+  (data reuse; the paper's "keeping data within the PE array as long as
+  possible").
+
+On a real TPU one would pick MXU-shaped tiles (``bm = bn = bk = 128``,
+bf16 operands); the ``tpu_tiles()`` helper below returns that
+configuration and DESIGN.md §6 records the estimated VMEM footprint.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO the rust runtime can
+run (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The CGRA-equivalent tile (4x4 PEs × 4x4-element sub-tiles).
+DEFAULT_BM = 16
+DEFAULT_BN = 16
+DEFAULT_BK = 32
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: accumulate an (bm, bk) × (bk, bn) product into the
+    output block. Grid dim 2 is the k loop; the first step zeroes C."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def pad_to(x: int, mult: int) -> int:
+    """Round ``x`` up to a multiple of ``mult``."""
+    return (x + mult - 1) // mult * mult
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(a: jax.Array, b: jax.Array, *, bm: int = DEFAULT_BM,
+         bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> jax.Array:
+    """Blocked GEMM ``C = A·B`` via Pallas. Arbitrary shapes (internally
+    zero-padded to tile multiples, result sliced back)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    mp, kp, np_ = pad_to(m, bm), pad_to(k, bk), pad_to(n, bn)
+    a_p = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def tpu_tiles() -> dict:
+    """MXU-shaped tile configuration for a real-TPU build, with the VMEM
+    footprint estimate recorded in DESIGN.md §6 / EXPERIMENTS.md §Perf.
+
+    Footprint per grid step (f32): A block 128×128×4 B + B block + C block
+    = 3 × 64 KiB = 192 KiB, ×2 for double buffering = 384 KiB — well
+    under the ~16 MiB VMEM budget, leaving room to widen bk to 512
+    (0.75 MiB ×2) for fewer grid steps and better MXU occupancy.
+    """
+    return {"bm": 128, "bn": 128, "bk": 512, "vmem_bytes_est": 2 * 3 * 128 * 512 * 4}
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, *, dtype_bytes: int = 4,
+                         double_buffered: bool = True) -> int:
+    """VMEM bytes a grid step holds: A, B and C blocks (×2 if double
+    buffered)."""
+    blocks = bm * bk + bk * bn + bm * bn
+    mult = 2 if double_buffered else 1
+    return blocks * dtype_bytes * mult

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+contract: every kernel in this package must match its oracle to float32
+tolerance across the pytest/hypothesis sweeps in ``python/tests``)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference GEMM with f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Reference multi-head scaled dot-product attention.
+
+    Shapes: q, k, v are [heads, seq, d_head]; output matches.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (same formula as the rust host model)."""
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """Row-wise LayerNorm over the last axis."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,114 @@
+"""Layer-2 JAX model: the tiny transformer encoder, matmuls routed
+through the Layer-1 Pallas kernels.
+
+The op sequence (pre-LN residual blocks, tanh-GELU, per-head attention)
+mirrors `rust/src/xformer/model.rs` operation-for-operation; the rust
+float model loads the parameters this module exports (see ``aot.py``),
+so the three paths — rust float, rust CGRA-int8, and the AOT-compiled
+XLA artifact — are directly comparable.
+
+Parameter order per layer (the manifest contract):
+``ln1_gamma, ln1_beta, wq, wk, wv, wo, ln2_gamma, ln2_beta, w1, w2``.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm_pallas import gemm
+from .kernels.ref import gelu_ref, layernorm_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 128
+    n_layers: int = 2
+    seq: int = 32
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_shapes(self):
+        """Flat parameter shape list, model order (see module docstring)."""
+        shapes = []
+        for _ in range(self.n_layers):
+            shapes += [
+                ("ln1_gamma", (self.d_model,)),
+                ("ln1_beta", (self.d_model,)),
+                ("wq", (self.d_model, self.d_model)),
+                ("wk", (self.d_model, self.d_model)),
+                ("wv", (self.d_model, self.d_model)),
+                ("wo", (self.d_model, self.d_model)),
+                ("ln2_gamma", (self.d_model,)),
+                ("ln2_beta", (self.d_model,)),
+                ("w1", (self.d_model, self.d_ff)),
+                ("w2", (self.d_ff, self.d_model)),
+            ]
+        return shapes
+
+
+def init_params(cfg: EncoderConfig, seed: int = 0):
+    """Xavier-ish init, flat list in model order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_shapes():
+        if name.endswith("gamma"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("beta"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            scale = (2.0 / sum(shape)) ** 0.5
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _attention(cfg: EncoderConfig, x, wq, wk, wv, wo):
+    """Multi-head attention; all four projections and the per-head GEMMs
+    go through the Pallas blocked-GEMM kernel."""
+    s, d = x.shape
+    q = gemm(x, wq)
+    k = gemm(x, wk)
+    v = gemm(x, wv)
+    dh = cfg.d_head
+    outs = []
+    for h in range(cfg.n_heads):
+        lo = h * dh
+        qh, kh, vh = q[:, lo:lo + dh], k[:, lo:lo + dh], v[:, lo:lo + dh]
+        scores = gemm(qh, kh.T) / jnp.sqrt(jnp.float32(dh))
+        probs = jax.nn.softmax(scores, axis=-1)
+        outs.append(gemm(probs, vh))
+    ctx = jnp.concatenate(outs, axis=1)
+    return gemm(ctx, wo)
+
+
+def encoder_forward(cfg: EncoderConfig, x, params):
+    """Full encoder forward pass. ``params`` is the flat list from
+    :func:`init_params` (10 entries per layer)."""
+    h = x
+    per = 10
+    for layer in range(cfg.n_layers):
+        (ln1_g, ln1_b, wq, wk, wv, wo, ln2_g, ln2_b, w1, w2) = params[
+            layer * per:(layer + 1) * per
+        ]
+        ln1 = layernorm_ref(h, ln1_g, ln1_b)
+        h = h + _attention(cfg, ln1, wq, wk, wv, wo)
+        ln2 = layernorm_ref(h, ln2_g, ln2_b)
+        h = h + gemm(gelu_ref(gemm(ln2, w1)), w2)
+    return h
+
+
+def make_forward_fn(cfg: EncoderConfig):
+    """A jit-able ``fn(x, *params) -> (out,)`` for AOT lowering (tuple
+    return per the HLO-text interchange recipe)."""
+
+    @functools.partial(jax.jit)
+    def fn(x, *params):
+        return (encoder_forward(cfg, x, list(params)),)
+
+    return fn

@@ -1,0 +1,407 @@
+//! Memory hierarchy: shared L1 scratchpad + external memory + DMA engine.
+//!
+//! Functional state and timing are decoupled: data moves at *issue* time
+//! (so numerics are exact and simple), while the timing model hands back a
+//! `ready_at` cycle from per-bank / per-channel reservation calendars.
+//! Generated programs separate produce/consume with fences, so
+//! functional-at-issue never observes a stale value (DESIGN.md §5.2).
+//!
+//! - **L1**: software-managed scratchpad (the "shared L1 memory" of
+//!   Fig. 1), banked word-interleaved, fixed access latency, one access
+//!   per bank per cycle.
+//! - **External memory**: single channel, `ext_bw` words/cycle peak,
+//!   `ext_latency` cycles. This is the expensive boundary TAB2 counts.
+//! - **DMA engine**: bulk Ext↔L1 staging used by the block-wise GEMM plan
+//!   to realize the paper's data-reuse claim.
+
+use crate::isa::MemSpace;
+use crate::sim::stats::Stats;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Timing + functional parameters of the memory system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemParams {
+    /// L1 capacity in 32-bit words.
+    pub l1_words: usize,
+    /// Number of L1 banks (word-interleaved).
+    pub l1_banks: usize,
+    /// L1 access latency in cycles.
+    pub l1_latency: u64,
+    /// External memory latency in cycles.
+    pub ext_latency: u64,
+    /// External memory peak bandwidth in words/cycle.
+    pub ext_bw: u64,
+    /// DMA engine bandwidth in words/cycle (additionally bounded by
+    /// `ext_bw` since DMA crosses the external boundary).
+    pub dma_bw: u64,
+}
+
+impl Default for MemParams {
+    fn default() -> Self {
+        Self {
+            l1_words: 32 * 1024 / 4, // 32 KiB
+            l1_banks: 8,
+            l1_latency: 2,
+            ext_latency: 20,
+            ext_bw: 4,
+            dma_bw: 4,
+        }
+    }
+}
+
+/// An in-flight DMA job.
+#[derive(Debug, Clone, Copy)]
+struct DmaJob {
+    words_left: u64,
+    /// Cycle the whole job completes (data already moved functionally).
+    done_at: u64,
+}
+
+/// The memory system: functional arrays + reservation calendars.
+#[derive(Debug, Clone)]
+pub struct MemSystem {
+    pub params: MemParams,
+    l1: Vec<u32>,
+    ext: Vec<u32>,
+    /// Per-bank next-free cycle.
+    bank_next: Vec<u64>,
+    /// External channel next-free slot, in units of (1/ext_bw) cycles.
+    ext_next_slot: u64,
+    /// Queue of DMA jobs (served in order, one at a time).
+    dma_jobs: VecDeque<DmaJob>,
+    /// Cycle the DMA engine frees up.
+    dma_free_at: u64,
+    /// Same-cycle L1 read-coalescing memo: multiple units reading the
+    /// same word in the same cycle share one bank access (a read-multicast
+    /// port — this is how the row MOBs all stream the shared B panel
+    /// without serializing on a bank; DESIGN.md §5.2).
+    coalesce_cycle: u64,
+    coalesce: Vec<(u32, u64)>,
+}
+
+impl MemSystem {
+    /// Build with `ext_words` of external memory.
+    pub fn new(params: MemParams, ext_words: usize) -> Self {
+        Self {
+            params,
+            l1: vec![0; params.l1_words],
+            ext: vec![0; ext_words],
+            bank_next: vec![0; params.l1_banks],
+            ext_next_slot: 0,
+            dma_jobs: VecDeque::new(),
+            dma_free_at: 0,
+            coalesce_cycle: u64::MAX,
+            coalesce: Vec::new(),
+        }
+    }
+
+    // ---------- host (testbench / coordinator) functional access ----------
+
+    /// Host write into external memory (grows it if needed). Host access
+    /// happens between kernels and is not timed.
+    pub fn host_write_ext(&mut self, addr: u32, data: &[u32]) {
+        let end = addr as usize + data.len();
+        if end > self.ext.len() {
+            self.ext.resize(end, 0);
+        }
+        self.ext[addr as usize..end].copy_from_slice(data);
+    }
+
+    /// Host read from external memory.
+    pub fn host_read_ext(&self, addr: u32, len: usize) -> Vec<u32> {
+        let end = addr as usize + len;
+        assert!(end <= self.ext.len(), "host read past end of ext memory");
+        self.ext[addr as usize..end].to_vec()
+    }
+
+    /// Host write into the L1 scratchpad (untimed; used by tests and the
+    /// TAB4 ablation where both variants start from pre-staged panels).
+    pub fn host_write_l1(&mut self, addr: u32, data: &[u32]) {
+        let end = addr as usize + data.len();
+        assert!(end <= self.l1.len(), "host write past end of L1");
+        self.l1[addr as usize..end].copy_from_slice(data);
+    }
+
+    /// Host read from the L1 scratchpad (used by tests).
+    pub fn host_read_l1(&self, addr: u32, len: usize) -> Vec<u32> {
+        let end = addr as usize + len;
+        assert!(end <= self.l1.len(), "host read past end of L1");
+        self.l1[addr as usize..end].to_vec()
+    }
+
+    /// External memory size in words.
+    pub fn ext_len(&self) -> usize {
+        self.ext.len()
+    }
+
+    // ---------- timed word access (MOB streams, PE direct loads) ----------
+
+    /// Timed word read: returns `(value, ready_at)`.
+    pub fn read(&mut self, space: MemSpace, addr: u32, cycle: u64, stats: &mut Stats) -> (u32, u64) {
+        match space {
+            MemSpace::L1 => {
+                let a = addr as usize;
+                assert!(a < self.l1.len(), "L1 read OOB: {addr:#x}");
+                // Same-cycle same-address reads coalesce into one bank
+                // access (read multicast).
+                if self.coalesce_cycle != cycle {
+                    self.coalesce_cycle = cycle;
+                    self.coalesce.clear();
+                }
+                if let Some(&(_, ready)) = self.coalesce.iter().find(|&&(ca, _)| ca == addr) {
+                    return (self.l1[a], ready);
+                }
+                let ready = self.l1_slot(a, cycle, stats);
+                self.coalesce.push((addr, ready));
+                stats.l1_reads += 1;
+                (self.l1[a], ready)
+            }
+            MemSpace::Ext => {
+                let a = addr as usize;
+                assert!(a < self.ext.len(), "ext read OOB: {addr:#x}");
+                let ready = self.ext_slot(cycle, stats);
+                stats.ext_reads += 1;
+                (self.ext[a], ready)
+            }
+        }
+    }
+
+    /// Timed word write: returns the cycle the write retires.
+    pub fn write(&mut self, space: MemSpace, addr: u32, value: u32, cycle: u64, stats: &mut Stats) -> u64 {
+        match space {
+            MemSpace::L1 => {
+                let a = addr as usize;
+                assert!(a < self.l1.len(), "L1 write OOB: {addr:#x}");
+                let ready = self.l1_slot(a, cycle, stats);
+                self.l1[a] = value;
+                stats.l1_writes += 1;
+                ready
+            }
+            MemSpace::Ext => {
+                let a = addr as usize;
+                if a >= self.ext.len() {
+                    self.ext.resize(a + 1, 0);
+                }
+                let ready = self.ext_slot(cycle, stats);
+                self.ext[a] = value;
+                stats.ext_writes += 1;
+                ready
+            }
+        }
+    }
+
+    fn l1_slot(&mut self, addr: usize, cycle: u64, stats: &mut Stats) -> u64 {
+        let bank = addr % self.params.l1_banks;
+        let slot = self.bank_next[bank].max(cycle);
+        if slot > cycle {
+            stats.l1_bank_conflicts += slot - cycle;
+        }
+        self.bank_next[bank] = slot + 1;
+        slot + self.params.l1_latency
+    }
+
+    fn ext_slot(&mut self, cycle: u64, stats: &mut Stats) -> u64 {
+        let bw = self.params.ext_bw;
+        let slot = self.ext_next_slot.max(cycle * bw);
+        if slot > cycle * bw {
+            stats.ext_queue_cycles += slot / bw - cycle;
+        }
+        self.ext_next_slot = slot + 1;
+        slot / bw + self.params.ext_latency
+    }
+
+    // ---------- DMA ----------
+
+    /// Enqueue a bulk copy. Data moves functionally *now*; the returned
+    /// cycle is when the transfer completes architecturally.
+    pub fn dma(
+        &mut self,
+        ext_base: u32,
+        l1_base: u32,
+        count: u32,
+        to_l1: bool,
+        cycle: u64,
+        stats: &mut Stats,
+    ) -> Result<u64> {
+        let (eb, lb, n) = (ext_base as usize, l1_base as usize, count as usize);
+        if lb + n > self.l1.len() {
+            bail!("DMA overruns L1: base {lb} + {n} > {}", self.l1.len());
+        }
+        if to_l1 {
+            if eb + n > self.ext.len() {
+                bail!("DMA reads past end of ext memory");
+            }
+            self.l1[lb..lb + n].copy_from_slice(&self.ext[eb..eb + n]);
+        } else {
+            if eb + n > self.ext.len() {
+                self.ext.resize(eb + n, 0);
+            }
+            self.ext[eb..eb + n].copy_from_slice(&self.l1[lb..lb + n]);
+        }
+        // Timing: serialized on the DMA engine, bounded by min(dma_bw, ext_bw).
+        let bw = self.params.dma_bw.min(self.params.ext_bw).max(1);
+        let start = self.dma_free_at.max(cycle);
+        let done = start + (count as u64).div_ceil(bw) + self.params.ext_latency;
+        self.dma_free_at = done;
+        self.dma_jobs.push_back(DmaJob { words_left: count as u64, done_at: done });
+        // Boundary + scratchpad traffic accounting.
+        if to_l1 {
+            stats.ext_reads += count as u64;
+            stats.l1_writes += count as u64;
+        } else {
+            stats.l1_reads += count as u64;
+            stats.ext_writes += count as u64;
+        }
+        stats.dma_words += count as u64;
+        Ok(done)
+    }
+
+    /// Is any DMA job still in flight at `cycle`? (MOB `Fence` polls this.)
+    pub fn dma_busy(&mut self, cycle: u64) -> bool {
+        while let Some(front) = self.dma_jobs.front() {
+            if front.done_at <= cycle {
+                self.dma_jobs.pop_front();
+            } else {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Reset timing calendars (between kernels); functional contents stay.
+    pub fn reset_timing(&mut self) {
+        self.bank_next.iter_mut().for_each(|v| *v = 0);
+        self.ext_next_slot = 0;
+        self.dma_jobs.clear();
+        self.dma_free_at = 0;
+        self.coalesce_cycle = u64::MAX;
+        self.coalesce.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> MemSystem {
+        MemSystem::new(MemParams::default(), 4096)
+    }
+
+    #[test]
+    fn host_roundtrip() {
+        let mut m = sys();
+        m.host_write_ext(100, &[1, 2, 3]);
+        assert_eq!(m.host_read_ext(100, 3), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn host_write_grows_ext() {
+        let mut m = sys();
+        m.host_write_ext(10_000, &[9]);
+        assert_eq!(m.host_read_ext(10_000, 1), vec![9]);
+    }
+
+    #[test]
+    fn l1_read_latency() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        m.write(MemSpace::L1, 0, 42, 0, &mut s);
+        let mut s2 = Stats::default();
+        let mut m2 = sys();
+        m2.reset_timing();
+        m2.write(MemSpace::L1, 0, 42, 0, &mut s2);
+        m2.reset_timing();
+        let (v, ready) = m2.read(MemSpace::L1, 0, 10, &mut s2);
+        assert_eq!(v, 42);
+        assert_eq!(ready, 10 + m2.params.l1_latency);
+    }
+
+    #[test]
+    fn l1_bank_conflict_detected() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        let banks = m.params.l1_banks as u32;
+        // Two same-cycle accesses to the same bank: second is delayed.
+        let (_, r1) = m.read(MemSpace::L1, 0, 5, &mut s);
+        let (_, r2) = m.read(MemSpace::L1, banks, 5, &mut s);
+        assert_eq!(r1, 5 + m.params.l1_latency);
+        assert_eq!(r2, 6 + m.params.l1_latency);
+        assert_eq!(s.l1_bank_conflicts, 1);
+        // Different banks: no conflict.
+        let (_, r3) = m.read(MemSpace::L1, 1, 5, &mut s);
+        assert_eq!(r3, 5 + m.params.l1_latency);
+    }
+
+    #[test]
+    fn ext_bandwidth_limits_issue() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        m.host_write_ext(0, &[0; 64]);
+        let bw = m.params.ext_bw;
+        let lat = m.params.ext_latency;
+        // First `bw` accesses in cycle 0 are on time; the next spills.
+        for i in 0..bw {
+            let (_, r) = m.read(MemSpace::Ext, i as u32, 0, &mut s);
+            assert_eq!(r, lat, "access {i}");
+        }
+        let (_, r) = m.read(MemSpace::Ext, bw as u32, 0, &mut s);
+        assert_eq!(r, 1 + lat);
+        assert!(s.ext_queue_cycles >= 1);
+    }
+
+    #[test]
+    fn ext_traffic_counted() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        m.host_write_ext(0, &[1, 2, 3, 4]);
+        m.read(MemSpace::Ext, 0, 0, &mut s);
+        m.write(MemSpace::Ext, 9, 7, 0, &mut s);
+        assert_eq!(s.ext_reads, 1);
+        assert_eq!(s.ext_writes, 1);
+    }
+
+    #[test]
+    fn dma_moves_data_and_counts_boundary() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        m.host_write_ext(0, &[10, 20, 30, 40]);
+        let done = m.dma(0, 100, 4, true, 0, &mut s).unwrap();
+        assert_eq!(m.host_read_l1(100, 4), vec![10, 20, 30, 40]);
+        assert!(done > 0);
+        assert_eq!(s.ext_reads, 4);
+        assert_eq!(s.l1_writes, 4);
+        assert_eq!(s.dma_words, 4);
+        // Busy until done, free after.
+        assert!(m.dma_busy(done - 1));
+        assert!(!m.dma_busy(done));
+    }
+
+    #[test]
+    fn dma_l1_to_ext() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        m.host_write_ext(0, &[1, 2]);
+        m.dma(0, 0, 2, true, 0, &mut s).unwrap();
+        m.dma(500, 0, 2, false, 0, &mut s).unwrap();
+        assert_eq!(m.host_read_ext(500, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn dma_overrun_errors() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        let l1 = m.params.l1_words as u32;
+        assert!(m.dma(0, l1 - 1, 2, true, 0, &mut s).is_err());
+    }
+
+    #[test]
+    fn dma_jobs_serialize() {
+        let mut m = sys();
+        let mut s = Stats::default();
+        m.host_write_ext(0, &[0; 256]);
+        let d1 = m.dma(0, 0, 128, true, 0, &mut s).unwrap();
+        let d2 = m.dma(128, 128, 128, true, 0, &mut s).unwrap();
+        assert!(d2 > d1);
+    }
+}

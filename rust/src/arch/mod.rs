@@ -1,0 +1,14 @@
+//! Structural component models of the CGRA integrated system (Fig. 1 +
+//! Fig. 2): processing elements, memory-operation blocks, the shared
+//! L1 / external-memory hierarchy, and the context memory + memory
+//! controller that configure the array before each kernel launch.
+
+pub mod context;
+pub mod mem;
+pub mod mob;
+pub mod pe;
+
+pub use context::ContextMemory;
+pub use mem::MemSystem;
+pub use mob::Mob;
+pub use pe::Pe;

@@ -1,0 +1,779 @@
+//! Processing-element model (§III-B1).
+//!
+//! A PE is single-issue and fully pipelined: one instruction per cycle
+//! when operands and output latches are available, otherwise it stalls
+//! (and the stall reason is counted — the TAB4/FIG4 metrics come straight
+//! from these counters).
+//!
+//! Datapath: a 16-entry word register file, 16 `i32` accumulators (one
+//! 4×4 int8 output sub-tile in the GEMM mapping), a 4-lane packed int8
+//! MAC, and a scalar int/fp32 ALU. Port reads may carry *riders* (latch
+//! and/or forward) and MAC slots may carry a network *take* — the
+//! switchless routing of §III-C compiled into the context.
+
+use crate::interconnect::fabric::Fabric;
+use crate::isa::{AluOp, Dir, Dst, PeInstr, PeProgram, Rider, Src, Take};
+use crate::sim::stats::Stats;
+use crate::util::quant::{dot4, f32_to_word, requant_shift, word_to_f32};
+
+/// Word registers per PE.
+pub const NUM_REGS: usize = 16;
+/// Accumulators per PE (4×4 output sub-tile).
+pub const NUM_ACCS: usize = 16;
+
+/// Program phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Prologue,
+    Body,
+    TileEpilogue,
+    Epilogue,
+    Halted,
+}
+
+/// Why the PE could not issue this cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallKind {
+    None,
+    Operand,
+    Output,
+    LoadPending,
+}
+
+/// One processing element.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    /// Flat node id in the combined grid.
+    pub node: usize,
+    pub(crate) regs: [u32; NUM_REGS],
+    pub(crate) accs: [i32; NUM_ACCS],
+    /// Per-register scoreboard: cycle at which the register's pending
+    /// load value becomes readable.
+    reg_ready: [u64; NUM_REGS],
+    program: PeProgram,
+    phase: Phase,
+    pc: usize,
+    /// Body iteration within the current tile.
+    iter: u32,
+    /// Tile index.
+    tile: u32,
+    /// Last cycle's stall diagnosis (for tracing / FIG4).
+    pub last_stall: StallKind,
+}
+
+impl Pe {
+    /// Create a halted PE at a grid node.
+    pub fn new(node: usize) -> Self {
+        Self {
+            node,
+            regs: [0; NUM_REGS],
+            accs: [0; NUM_ACCS],
+            reg_ready: [0; NUM_REGS],
+            program: PeProgram::idle(),
+            phase: Phase::Halted,
+            pc: 0,
+            iter: 0,
+            tile: 0,
+            last_stall: StallKind::None,
+        }
+    }
+
+    /// Load a program and reset execution state (context distribution).
+    pub fn load_program(&mut self, program: PeProgram) {
+        self.program = program;
+        self.regs = [0; NUM_REGS];
+        self.accs = [0; NUM_ACCS];
+        self.reg_ready = [0; NUM_REGS];
+        self.pc = 0;
+        self.iter = 0;
+        self.tile = 0;
+        self.phase = Phase::Prologue;
+        self.last_stall = StallKind::None;
+        self.advance_phase_if_needed();
+    }
+
+    /// Is the PE done?
+    pub fn halted(&self) -> bool {
+        self.phase == Phase::Halted
+    }
+
+    /// Read an accumulator (tests / drain checks).
+    pub fn acc(&self, i: usize) -> i32 {
+        self.accs[i]
+    }
+
+    /// One-line execution-state summary (deadlock diagnosis).
+    pub fn debug_state(&self) -> String {
+        let instr = self.cur_slice().get(self.pc).map(|i| format!("{i:?}"));
+        format!(
+            "{:?} pc={} iter={} tile={} stall={:?} instr={}",
+            self.phase,
+            self.pc,
+            self.iter,
+            self.tile,
+            self.last_stall,
+            instr.unwrap_or_else(|| "-".into())
+        )
+    }
+
+    fn cur_slice(&self) -> &[PeInstr] {
+        match self.phase {
+            Phase::Prologue => &self.program.prologue,
+            Phase::Body => &self.program.body,
+            Phase::TileEpilogue => &self.program.tile_epilogue,
+            Phase::Epilogue => &self.program.epilogue,
+            Phase::Halted => &[],
+        }
+    }
+
+    /// Skip over empty phases / exhausted loops.
+    fn advance_phase_if_needed(&mut self) {
+        loop {
+            match self.phase {
+                Phase::Prologue => {
+                    if self.pc < self.program.prologue.len() {
+                        return;
+                    }
+                    self.phase = Phase::Body;
+                    self.pc = 0;
+                    self.iter = 0;
+                    self.tile = 0;
+                }
+                Phase::Body => {
+                    if self.tile >= self.program.tiles {
+                        self.phase = Phase::Epilogue;
+                        self.pc = 0;
+                        continue;
+                    }
+                    if self.iter < self.program.trip && self.pc < self.program.body.len() {
+                        return;
+                    }
+                    self.phase = Phase::TileEpilogue;
+                    self.pc = 0;
+                }
+                Phase::TileEpilogue => {
+                    if self.pc < self.program.tile_epilogue.len() {
+                        return;
+                    }
+                    self.tile += 1;
+                    self.iter = 0;
+                    self.pc = 0;
+                    self.phase = Phase::Body;
+                }
+                Phase::Epilogue => {
+                    if self.pc < self.program.epilogue.len() {
+                        return;
+                    }
+                    self.phase = Phase::Halted;
+                }
+                Phase::Halted => return,
+            }
+        }
+    }
+
+    fn step_pc(&mut self) {
+        self.pc += 1;
+        if self.phase == Phase::Body && self.pc >= self.program.body.len() {
+            self.iter += 1;
+            self.pc = 0;
+        }
+        self.advance_phase_if_needed();
+    }
+
+    /// Is `src` readable this cycle?
+    fn src_ready(&self, src: Src, fabric: &Fabric, cycle: u64) -> Option<StallKind> {
+        match src {
+            Src::Reg(r) => {
+                if self.reg_ready[r as usize] > cycle {
+                    Some(StallKind::LoadPending)
+                } else {
+                    None
+                }
+            }
+            Src::Port(d) => {
+                if fabric.port_ready(self.node, d) {
+                    None
+                } else {
+                    Some(StallKind::Operand)
+                }
+            }
+            Src::Imm(_) => None,
+        }
+    }
+
+    /// Read `src` (consuming a port word), applying the rider.
+    fn read_src(
+        &mut self,
+        src: Src,
+        rider: Rider,
+        fabric: &mut Fabric,
+        cycle: u64,
+        stats: &mut Stats,
+    ) -> u32 {
+        match src {
+            Src::Reg(r) => {
+                stats.pe_reg_reads += 1;
+                self.regs[r as usize]
+            }
+            Src::Imm(v) => v as i32 as u32,
+            Src::Port(d) => {
+                let w = fabric.port_take(self.node, d).expect("checked by src_ready");
+                if let Some(r) = rider.latch {
+                    self.regs[r as usize] = w;
+                    stats.pe_reg_writes += 1;
+                }
+                if let Some(fd) = rider.fwd {
+                    let ok = fabric.send(self.node, fd, w, cycle, stats);
+                    debug_assert!(ok, "rider fwd checked in outputs_ready");
+                }
+                w
+            }
+        }
+    }
+
+    fn exec_take(&mut self, take: &Take, fabric: &mut Fabric, cycle: u64, stats: &mut Stats) {
+        let w = fabric.port_take(self.node, take.port).expect("checked before issue");
+        if let Some(r) = take.latch {
+            self.regs[r as usize] = w;
+            stats.pe_reg_writes += 1;
+        }
+        if let Some(fd) = take.fwd {
+            let ok = fabric.send(self.node, fd, w, cycle, stats);
+            debug_assert!(ok, "take fwd checked before issue");
+        }
+    }
+
+    /// All output latches this instruction needs, including riders/takes.
+    fn out_dirs(ins: &PeInstr, dirs: &mut Vec<Dir>) {
+        dirs.clear();
+        let mut push_rider = |r: &Rider, dirs: &mut Vec<Dir>| {
+            if let Some(d) = r.fwd {
+                dirs.push(d);
+            }
+        };
+        match ins {
+            PeInstr::MacP { ra, rb, take, .. } => {
+                push_rider(ra, dirs);
+                push_rider(rb, dirs);
+                if let Some(t) = take {
+                    if let Some(d) = t.fwd {
+                        dirs.push(d);
+                    }
+                }
+            }
+            PeInstr::Alu { dst, ra, rb, .. } => {
+                push_rider(ra, dirs);
+                push_rider(rb, dirs);
+                if let Dst::Port(d) = dst {
+                    dirs.push(*d);
+                }
+            }
+            PeInstr::Mov { dst, ra, .. } => {
+                push_rider(ra, dirs);
+                if let Dst::Port(d) = dst {
+                    dirs.push(*d);
+                }
+            }
+            PeInstr::AccOut { dst, .. } | PeInstr::AccOutQ { dst, .. } => {
+                if let Dst::Port(d) = dst {
+                    dirs.push(*d);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn write_dst(&mut self, dst: Dst, value: u32, fabric: &mut Fabric, cycle: u64, stats: &mut Stats) {
+        match dst {
+            Dst::Reg(r) => {
+                self.regs[r as usize] = value;
+                stats.pe_reg_writes += 1;
+            }
+            Dst::Port(d) => {
+                let ok = fabric.send(self.node, d, value, cycle, stats);
+                debug_assert!(ok, "dst port checked in outputs_ready");
+            }
+            Dst::Null => {}
+        }
+    }
+
+    /// Execute one cycle. Returns `true` if an instruction issued.
+    pub fn tick(
+        &mut self,
+        fabric: &mut Fabric,
+        mem: &mut crate::arch::mem::MemSystem,
+        cycle: u64,
+        stats: &mut Stats,
+    ) -> bool {
+        if self.halted() {
+            stats.pe_halted_cycles += 1;
+            self.last_stall = StallKind::None;
+            return false;
+        }
+        let ins = self.cur_slice()[self.pc];
+
+        // ---- readiness checks (no side effects) ----
+        let srcs: [(Option<Src>, Rider); 2] = match ins {
+            PeInstr::MacP { a, ra, b, rb, .. } => [(Some(a), ra), (Some(b), rb)],
+            PeInstr::Alu { a, ra, b, rb, .. } => [(Some(a), ra), (Some(b), rb)],
+            PeInstr::Mov { a, ra, .. } => [(Some(a), ra), (None, Rider::NONE)],
+            PeInstr::LoadW { addr_reg, .. } => {
+                [(Some(Src::Reg(addr_reg)), Rider::NONE), (None, Rider::NONE)]
+            }
+            PeInstr::StoreW { src, addr_reg, .. } => {
+                [(Some(Src::Reg(src)), Rider::NONE), (Some(Src::Reg(addr_reg)), Rider::NONE)]
+            }
+            _ => [(None, Rider::NONE), (None, Rider::NONE)],
+        };
+        for (s, _) in srcs.iter() {
+            if let Some(s) = s {
+                if let Some(kind) = self.src_ready(*s, fabric, cycle) {
+                    match kind {
+                        StallKind::Operand => stats.pe_stall_operand += 1,
+                        StallKind::LoadPending => stats.pe_stall_load += 1,
+                        _ => {}
+                    }
+                    self.last_stall = kind;
+                    return false;
+                }
+            }
+        }
+        // Take rider: word must be present.
+        if let PeInstr::MacP { take: Some(t), .. } = &ins {
+            if !fabric.port_ready(self.node, t.port) {
+                stats.pe_stall_operand += 1;
+                self.last_stall = StallKind::Operand;
+                return false;
+            }
+        }
+        let mut dirs = Vec::with_capacity(3);
+        Self::out_dirs(&ins, &mut dirs);
+        for d in &dirs {
+            if !fabric.can_send(self.node, *d, cycle) {
+                stats.pe_stall_output += 1;
+                self.last_stall = StallKind::Output;
+                return false;
+            }
+        }
+        self.last_stall = StallKind::None;
+
+        // ---- execute ----
+        match ins {
+            PeInstr::Nop => {
+                stats.pe_nop += 1;
+            }
+            PeInstr::MacP { d, a, ra, b, rb, take } => {
+                let av = self.read_src(a, ra, fabric, cycle, stats);
+                let bv = self.read_src(b, rb, fabric, cycle, stats);
+                self.accs[d as usize] = self.accs[d as usize].wrapping_add(dot4(av, bv));
+                if let Some(t) = take {
+                    self.exec_take(&t, fabric, cycle, stats);
+                }
+                stats.pe_macp += 1;
+                stats.pe_acc_access += 1;
+            }
+            PeInstr::Alu { op, dst, a, ra, b, rb } => {
+                let av = self.read_src(a, ra, fabric, cycle, stats);
+                let bv = self.read_src(b, rb, fabric, cycle, stats);
+                let r = alu_exec(op, av, bv);
+                self.write_dst(dst, r, fabric, cycle, stats);
+                stats.pe_alu += 1;
+            }
+            PeInstr::Mov { dst, a, ra } => {
+                let av = self.read_src(a, ra, fabric, cycle, stats);
+                self.write_dst(dst, av, fabric, cycle, stats);
+                stats.pe_mov += 1;
+            }
+            PeInstr::AccClr { d } => {
+                self.accs[d as usize] = 0;
+                stats.pe_acc_access += 1;
+            }
+            PeInstr::AccOut { d, dst, clear } => {
+                let v = self.accs[d as usize] as u32;
+                if clear {
+                    self.accs[d as usize] = 0;
+                }
+                self.write_dst(dst, v, fabric, cycle, stats);
+                stats.pe_acc_access += 1;
+            }
+            PeInstr::AccOutQ { d, shift, dst, clear } => {
+                let base = d as usize;
+                let mut bytes = [0u8; 4];
+                for (i, b) in bytes.iter_mut().enumerate() {
+                    *b = requant_shift(self.accs[base + i], shift) as u8;
+                    if clear {
+                        self.accs[base + i] = 0;
+                    }
+                }
+                self.write_dst(dst, u32::from_le_bytes(bytes), fabric, cycle, stats);
+                stats.pe_acc_access += 4;
+            }
+            PeInstr::LoadW { dst, space, addr_reg, post_inc } => {
+                let addr = self.regs[addr_reg as usize];
+                let (value, ready) = mem.read(space, addr, cycle, stats);
+                self.regs[dst as usize] = value;
+                self.reg_ready[dst as usize] = ready;
+                self.regs[addr_reg as usize] = (addr as i64 + post_inc as i64) as u32;
+                stats.pe_loads += 1;
+                stats.pe_reg_reads += 1;
+                stats.pe_reg_writes += 2;
+            }
+            PeInstr::StoreW { src, space, addr_reg, post_inc } => {
+                let addr = self.regs[addr_reg as usize];
+                mem.write(space, addr, self.regs[src as usize], cycle, stats);
+                self.regs[addr_reg as usize] = (addr as i64 + post_inc as i64) as u32;
+                stats.pe_loads += 1; // direct memory op (ablation metric)
+                stats.pe_reg_reads += 2;
+                stats.pe_reg_writes += 1;
+            }
+            PeInstr::Halt => {
+                self.phase = Phase::Halted;
+                return true;
+            }
+        }
+        self.step_pc();
+        true
+    }
+}
+
+/// Scalar ALU semantics. Integer ops wrap; float ops are IEEE-754 on the
+/// word's bits.
+fn alu_exec(op: AluOp, a: u32, b: u32) -> u32 {
+    let (ai, bi) = (a as i32, b as i32);
+    match op {
+        AluOp::AddI => ai.wrapping_add(bi) as u32,
+        AluOp::SubI => ai.wrapping_sub(bi) as u32,
+        AluOp::MulI => ai.wrapping_mul(bi) as u32,
+        AluOp::MaxI => ai.max(bi) as u32,
+        AluOp::MinI => ai.min(bi) as u32,
+        AluOp::ShrI => (ai >> (bi & 31)) as u32,
+        AluOp::AndI => a & b,
+        AluOp::OrI => a | b,
+        AluOp::XorI => a ^ b,
+        AluOp::AddF => f32_to_word(word_to_f32(a) + word_to_f32(b)),
+        AluOp::SubF => f32_to_word(word_to_f32(a) - word_to_f32(b)),
+        AluOp::MulF => f32_to_word(word_to_f32(a) * word_to_f32(b)),
+        AluOp::MaxF => f32_to_word(word_to_f32(a).max(word_to_f32(b))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::mem::{MemParams, MemSystem};
+    use crate::interconnect::fabric::FabricKind;
+    use crate::interconnect::topology::Topology;
+    use crate::isa::MemSpace;
+    use crate::util::quant::pack4;
+
+    fn rig() -> (Fabric, MemSystem, Stats) {
+        (
+            Fabric::new(FabricKind::Torus, Topology::default(), 0),
+            MemSystem::new(MemParams::default(), 1024),
+            Stats::default(),
+        )
+    }
+
+    fn run_alone(pe: &mut Pe, fabric: &mut Fabric, mem: &mut MemSystem, stats: &mut Stats, max: u64) {
+        let mut cycle = 0;
+        while !pe.halted() && cycle < max {
+            pe.tick(fabric, mem, cycle, stats);
+            fabric.commit(cycle, stats);
+            cycle += 1;
+        }
+        assert!(pe.halted(), "PE did not halt within {max} cycles");
+    }
+
+    fn single_tile(body: Vec<PeInstr>, trip: u32) -> PeProgram {
+        PeProgram { prologue: vec![], body, trip, tile_epilogue: vec![], tiles: 1, epilogue: vec![] }
+    }
+
+    #[test]
+    fn macp_from_registers() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        pe.load_program(single_tile(
+            vec![PeInstr::MacP {
+                d: 0,
+                a: Src::Reg(0),
+                ra: Rider::NONE,
+                b: Src::Reg(0),
+                rb: Rider::NONE,
+                take: None,
+            }],
+            3,
+        ));
+        pe.regs[0] = pack4([2, 3, 4, 5]);
+        run_alone(&mut pe, &mut f, &mut m, &mut s, 100);
+        // dot4(x,x) = 4+9+16+25 = 54, three iterations.
+        assert_eq!(pe.acc(0), 3 * 54);
+        assert_eq!(s.pe_macp, 3);
+    }
+
+    #[test]
+    fn take_rider_latches_and_forwards() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let node = t.pe(1, 1);
+        let mut pe = Pe::new(node);
+        pe.load_program(single_tile(
+            vec![PeInstr::MacP {
+                d: 0,
+                a: Src::Reg(0),
+                ra: Rider::NONE,
+                b: Src::Reg(1),
+                rb: Rider::NONE,
+                take: Some(Take { port: Dir::East, latch: Some(5), fwd: Some(Dir::West) }),
+            }],
+            1,
+        ));
+        // Put a word in the east in-port.
+        let east = t.node_id(t.neighbor(t.coord(node), Dir::East));
+        f.send(east, Dir::West, 0xBEEF, 0, &mut s);
+        f.commit(0, &mut s);
+        assert!(pe.tick(&mut f, &mut m, 1, &mut s));
+        assert_eq!(pe.regs[5], 0xBEEF);
+        f.commit(1, &mut s);
+        let west = t.node_id(t.neighbor(t.coord(node), Dir::West));
+        assert_eq!(f.port_take(west, Dir::East), Some(0xBEEF));
+    }
+
+    #[test]
+    fn take_missing_word_stalls() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        pe.load_program(single_tile(
+            vec![PeInstr::MacP {
+                d: 0,
+                a: Src::Reg(0),
+                ra: Rider::NONE,
+                b: Src::Reg(1),
+                rb: Rider::NONE,
+                take: Some(Take::latch(Dir::East, 2)),
+            }],
+            1,
+        ));
+        assert!(!pe.tick(&mut f, &mut m, 0, &mut s));
+        assert_eq!(pe.last_stall, StallKind::Operand);
+    }
+
+    #[test]
+    fn tile_loop_runs_body_then_epilogue_per_tile() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        pe.load_program(PeProgram {
+            prologue: vec![],
+            body: vec![PeInstr::MacP {
+                d: 0,
+                a: Src::Reg(0),
+                ra: Rider::NONE,
+                b: Src::Reg(0),
+                rb: Rider::NONE,
+                take: None,
+            }],
+            trip: 2,
+            tile_epilogue: vec![PeInstr::AccOut { d: 0, dst: Dst::Reg(7), clear: true }],
+            tiles: 3,
+            epilogue: vec![PeInstr::Halt],
+        });
+        pe.regs[0] = pack4([1, 1, 1, 1]); // dot4 = 4 per MAC
+        run_alone(&mut pe, &mut f, &mut m, &mut s, 100);
+        assert_eq!(s.pe_macp, 6, "2 MACs × 3 tiles");
+        // Each tile drained 2 MACs × 4 = 8 and cleared.
+        assert_eq!(pe.regs[7], 8);
+        assert_eq!(pe.acc(0), 0, "cleared by AccOut");
+    }
+
+    #[test]
+    fn stalls_on_missing_operand() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        pe.load_program(single_tile(
+            vec![PeInstr::Mov { dst: Dst::Null, a: Src::Port(Dir::North), ra: Rider::NONE }],
+            1,
+        ));
+        assert!(!pe.tick(&mut f, &mut m, 0, &mut s));
+        assert_eq!(s.pe_stall_operand, 1);
+        assert_eq!(pe.last_stall, StallKind::Operand);
+        assert!(!pe.halted());
+    }
+
+    #[test]
+    fn stalls_on_full_output() {
+        let (_, mut m, mut s) = rig();
+        let t = Topology::default();
+        // Depth-1 FIFO so the second send saturates the downstream port.
+        let mut f = Fabric::with_fifo(FabricKind::Torus, t, 0, 1);
+        let node = t.pe(0, 0);
+        let mut pe = Pe::new(node);
+        pe.load_program(single_tile(
+            vec![PeInstr::AccOut { d: 0, dst: Dst::Port(Dir::East), clear: false }],
+            3,
+        ));
+        assert!(pe.tick(&mut f, &mut m, 0, &mut s));
+        f.commit(0, &mut s);
+        assert!(pe.tick(&mut f, &mut m, 1, &mut s));
+        f.commit(1, &mut s);
+        // Neighbour latch and staging both full now.
+        assert!(!pe.tick(&mut f, &mut m, 2, &mut s));
+        assert_eq!(pe.last_stall, StallKind::Output);
+        assert!(s.pe_stall_output >= 1);
+    }
+
+    #[test]
+    fn accoutq_packs_saturates_and_clears() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        pe.load_program(PeProgram {
+            prologue: vec![],
+            body: vec![],
+            trip: 0,
+            tile_epilogue: vec![],
+            tiles: 0,
+            epilogue: vec![
+                PeInstr::AccOutQ { d: 0, shift: 0, dst: Dst::Reg(5), clear: true },
+                PeInstr::Halt,
+            ],
+        });
+        pe.accs[0] = 1000;
+        pe.accs[1] = -1000;
+        pe.accs[2] = 5;
+        pe.accs[3] = -5;
+        run_alone(&mut pe, &mut f, &mut m, &mut s, 10);
+        let bytes = pe.regs[5].to_le_bytes();
+        assert_eq!(bytes[0] as i8, 127);
+        assert_eq!(bytes[1] as i8, -128);
+        assert_eq!(bytes[2] as i8, 5);
+        assert_eq!(bytes[3] as i8, -5);
+        assert_eq!(pe.acc(0), 0);
+        assert_eq!(pe.acc(3), 0);
+    }
+
+    #[test]
+    fn loadw_scoreboard_stalls_consumer() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        {
+            let mut s2 = Stats::default();
+            m.write(MemSpace::L1, 3, 99, 0, &mut s2);
+            m.reset_timing();
+        }
+        pe.load_program(PeProgram {
+            prologue: vec![
+                PeInstr::Alu {
+                    op: AluOp::AddI,
+                    dst: Dst::Reg(0),
+                    a: Src::Imm(3),
+                    ra: Rider::NONE,
+                    b: Src::Imm(0),
+                    rb: Rider::NONE,
+                },
+                PeInstr::LoadW { dst: 1, space: MemSpace::L1, addr_reg: 0, post_inc: 1 },
+                PeInstr::Alu {
+                    op: AluOp::AddI,
+                    dst: Dst::Reg(2),
+                    a: Src::Reg(1),
+                    ra: Rider::NONE,
+                    b: Src::Imm(1),
+                    rb: Rider::NONE,
+                },
+            ],
+            body: vec![],
+            trip: 0,
+            tile_epilogue: vec![],
+            tiles: 0,
+            epilogue: vec![PeInstr::Halt],
+        });
+        run_alone(&mut pe, &mut f, &mut m, &mut s, 50);
+        assert_eq!(pe.regs[2], 100);
+        assert_eq!(pe.regs[0], 4, "post-increment applied");
+        assert!(s.pe_stall_load >= 1, "consumer must stall on L1 latency");
+    }
+
+    #[test]
+    fn storew_writes_memory() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        pe.load_program(PeProgram {
+            prologue: vec![
+                PeInstr::Alu {
+                    op: AluOp::AddI,
+                    dst: Dst::Reg(0),
+                    a: Src::Imm(20),
+                    ra: Rider::NONE,
+                    b: Src::Imm(0),
+                    rb: Rider::NONE,
+                },
+                PeInstr::Alu {
+                    op: AluOp::AddI,
+                    dst: Dst::Reg(1),
+                    a: Src::Imm(1234),
+                    ra: Rider::NONE,
+                    b: Src::Imm(0),
+                    rb: Rider::NONE,
+                },
+                PeInstr::StoreW { src: 1, space: MemSpace::L1, addr_reg: 0, post_inc: 2 },
+            ],
+            body: vec![],
+            trip: 0,
+            tile_epilogue: vec![],
+            tiles: 0,
+            epilogue: vec![PeInstr::Halt],
+        });
+        run_alone(&mut pe, &mut f, &mut m, &mut s, 20);
+        assert_eq!(m.host_read_l1(20, 1), vec![1234]);
+        assert_eq!(pe.regs[0], 22);
+    }
+
+    #[test]
+    fn trip_zero_body_skipped() {
+        let (mut f, mut m, mut s) = rig();
+        let t = Topology::default();
+        let mut pe = Pe::new(t.pe(0, 0));
+        pe.load_program(PeProgram {
+            prologue: vec![],
+            body: vec![PeInstr::MacP {
+                d: 0,
+                a: Src::Reg(0),
+                ra: Rider::NONE,
+                b: Src::Reg(0),
+                rb: Rider::NONE,
+                take: None,
+            }],
+            trip: 0,
+            tile_epilogue: vec![],
+            tiles: 1,
+            epilogue: vec![PeInstr::Halt],
+        });
+        run_alone(&mut pe, &mut f, &mut m, &mut s, 10);
+        assert_eq!(s.pe_macp, 0);
+    }
+
+    #[test]
+    fn alu_float_ops() {
+        assert_eq!(word_to_f32(alu_exec(AluOp::AddF, f32_to_word(1.5), f32_to_word(2.25))), 3.75);
+        assert_eq!(word_to_f32(alu_exec(AluOp::MulF, f32_to_word(-2.0), f32_to_word(4.0))), -8.0);
+        assert_eq!(word_to_f32(alu_exec(AluOp::MaxF, f32_to_word(-2.0), f32_to_word(4.0))), 4.0);
+    }
+
+    #[test]
+    fn alu_int_ops_wrap() {
+        assert_eq!(alu_exec(AluOp::AddI, i32::MAX as u32, 1) as i32, i32::MIN);
+        assert_eq!(alu_exec(AluOp::ShrI, (-8i32) as u32, 1) as i32, -4);
+        assert_eq!(alu_exec(AluOp::MinI, (-3i32) as u32, 2) as i32, -3);
+    }
+
+    #[test]
+    fn empty_program_halts_immediately() {
+        let mut pe = Pe::new(0);
+        pe.load_program(PeProgram::idle());
+        assert!(pe.halted());
+    }
+}

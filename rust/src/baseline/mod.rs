@@ -1,0 +1,154 @@
+//! Scalar general-purpose-processor baseline (the comparison point the
+//! paper's introduction motivates: transformers are "challenging to
+//! deploy" on GPPs at the edge).
+//!
+//! An in-order, single-issue edge-class core (Cortex-M/RV32-class) with a
+//! small data cache, modelled analytically: cycle and energy costs per
+//! int8 MAC including the load/loop overhead a scalar ISA pays. The model
+//! is deliberately *favourable* to the baseline (perfect cache for
+//! blocked panels, no branch mispredicts) so the CGRA's reported speedups
+//! are conservative.
+
+use crate::util::mat::MatI8;
+
+/// Scalar core cost parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GppParams {
+    /// Cycles per inner-loop int8 MAC: 2 loads + mul-acc + index/branch
+    /// amortised (a tight hand-scheduled loop on an M33-class core).
+    pub cycles_per_mac: f64,
+    /// Cycles per element of output traffic (store + requant).
+    pub cycles_per_output: f64,
+    /// Core + cache dynamic energy per executed instruction-equivalent
+    /// cycle (pJ). Fetch/decode/regfile dominate — this is why scalar
+    /// GPPs lose on energy even at equal cycle counts.
+    pub pj_per_cycle: f64,
+    /// Leakage + always-on power in microwatts.
+    pub leakage_uw: f64,
+    /// Core clock in MHz (edge-class).
+    pub freq_mhz: f64,
+}
+
+impl Default for GppParams {
+    fn default() -> Self {
+        Self {
+            cycles_per_mac: 4.0,
+            cycles_per_output: 6.0,
+            pj_per_cycle: 12.0,
+            leakage_uw: 40.0,
+            freq_mhz: 100.0,
+        }
+    }
+}
+
+/// Cost estimate for one workload on the scalar baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GppCost {
+    pub cycles: u64,
+    pub energy_pj: f64,
+}
+
+impl GppCost {
+    /// Wall time in microseconds at the configured frequency.
+    pub fn us(&self, p: &GppParams) -> f64 {
+        self.cycles as f64 / p.freq_mhz
+    }
+
+    /// Average power in milliwatts.
+    pub fn avg_power_mw(&self, p: &GppParams) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let seconds = self.cycles as f64 / (p.freq_mhz * 1e6);
+        (self.energy_pj / 1e12) / seconds * 1e3
+    }
+}
+
+/// Scalar baseline model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Gpp {
+    pub params: GppParams,
+}
+
+impl Gpp {
+    pub fn new(params: GppParams) -> Self {
+        Self { params }
+    }
+
+    /// Cost of an `m×k×n` int8 GEMM.
+    pub fn gemm_cost(&self, m: usize, k: usize, n: usize) -> GppCost {
+        let macs = (m * k * n) as f64;
+        let outputs = (m * n) as f64;
+        let cycles = macs * self.params.cycles_per_mac + outputs * self.params.cycles_per_output;
+        let dyn_pj = cycles * self.params.pj_per_cycle;
+        let leak_pj = self.params.leakage_uw * (cycles / (self.params.freq_mhz * 1e6)) * 1e6;
+        GppCost { cycles: cycles as u64, energy_pj: dyn_pj + leak_pj }
+    }
+
+    /// Cost of an element-wise pass over `n` elements with `ops_per_elem`
+    /// arithmetic ops each (softmax/LayerNorm/GELU host-side steps).
+    pub fn elementwise_cost(&self, n: usize, ops_per_elem: f64) -> GppCost {
+        let cycles = n as f64 * ops_per_elem;
+        let dyn_pj = cycles * self.params.pj_per_cycle;
+        let leak_pj = self.params.leakage_uw * (cycles / (self.params.freq_mhz * 1e6)) * 1e6;
+        GppCost { cycles: cycles as u64, energy_pj: dyn_pj + leak_pj }
+    }
+
+    /// Functional scalar GEMM (identical numerics to the matrix oracle —
+    /// here so benches can validate the baseline path produces the same
+    /// answers it is being timed for).
+    pub fn gemm_exec(&self, a: &MatI8, b: &MatI8) -> crate::util::mat::MatI32 {
+        a.matmul(b)
+    }
+}
+
+impl std::ops::Add for GppCost {
+    type Output = GppCost;
+    fn add(self, rhs: GppCost) -> GppCost {
+        GppCost { cycles: self.cycles + rhs.cycles, energy_pj: self.energy_pj + rhs.energy_pj }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_cost_scales_cubically() {
+        let g = Gpp::default();
+        let c1 = g.gemm_cost(16, 16, 16);
+        let c2 = g.gemm_cost(32, 32, 32);
+        let ratio = c2.cycles as f64 / c1.cycles as f64;
+        assert!(ratio > 7.0 && ratio < 9.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn energy_positive_and_monotone() {
+        let g = Gpp::default();
+        assert!(g.gemm_cost(8, 8, 8).energy_pj > 0.0);
+        assert!(g.gemm_cost(16, 16, 16).energy_pj > g.gemm_cost(8, 8, 8).energy_pj);
+    }
+
+    #[test]
+    fn power_in_plausible_edge_range() {
+        // A busy scalar core at 100 MHz with 12 pJ/cycle ≈ 1.2 mW dynamic.
+        let g = Gpp::default();
+        let c = g.gemm_cost(64, 64, 64);
+        let mw = c.avg_power_mw(&g.params);
+        assert!(mw > 0.5 && mw < 5.0, "GPP power {mw} mW");
+    }
+
+    #[test]
+    fn exec_matches_oracle() {
+        let a = MatI8::from_slice(2, 2, &[1, 2, 3, 4]);
+        let b = MatI8::from_slice(2, 2, &[5, 6, 7, 8]);
+        assert_eq!(Gpp::default().gemm_exec(&a, &b), a.matmul(&b));
+    }
+
+    #[test]
+    fn cost_add_composes() {
+        let g = Gpp::default();
+        let c = g.gemm_cost(8, 8, 8) + g.elementwise_cost(64, 10.0);
+        assert!(c.cycles > g.gemm_cost(8, 8, 8).cycles);
+    }
+}

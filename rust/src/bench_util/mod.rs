@@ -1,0 +1,118 @@
+//! Shared bench harness (no criterion in the vendored crate set).
+//!
+//! Benches here measure *simulated* quantities (cycles, energy) which
+//! are deterministic — repetitions exist only for wall-clock simulation
+//! throughput numbers. The harness provides warmup + repetition timing
+//! and an aligned-column table printer that every `benches/tabN_*.rs`
+//! uses so EXPERIMENTS.md can paste the output verbatim.
+
+use std::time::Instant;
+
+/// Wall-clock timing of `f`, with warmup. Returns (median_secs, runs).
+pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, usize) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[times.len() / 2], reps.max(1))
+}
+
+/// Minimal aligned-column table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers used across benches.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn time_median_runs() {
+        let mut n = 0;
+        let (t, reps) = time_median(1, 3, || n += 1);
+        assert_eq!(n, 4);
+        assert_eq!(reps, 3);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

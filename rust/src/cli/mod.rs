@@ -1,0 +1,112 @@
+//! Minimal command-line argument parser (no clap in the vendored set).
+//!
+//! Grammar: `prog <subcommand> [positional…] [--flag value] [--switch]`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        out.subcommand = it.next().unwrap_or_default();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // A flag with a value unless the next token is another
+                // flag (then it's a switch).
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        if out.flags.insert(name.to_string(), v).is_some() {
+                            bail!("duplicate flag --{name}");
+                        }
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Flag value, if present.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// Parsed flag with a default.
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: bad value '{v}': {e}")),
+        }
+    }
+
+    /// Boolean switch.
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Required positional argument.
+    pub fn pos(&self, i: usize) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(String::as_str)
+            .with_context(|| format!("missing positional argument {i}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse("gemm 64 64 --shift 6 --verbose --cfg path.txt");
+        assert_eq!(a.subcommand, "gemm");
+        assert_eq!(a.positional, vec!["64", "64"]);
+        assert_eq!(a.flag("shift"), Some("6"));
+        assert_eq!(a.flag("cfg"), Some("path.txt"));
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn flag_parse_defaults_and_errors() {
+        let a = parse("x --n 5");
+        assert_eq!(a.flag_parse("n", 1usize).unwrap(), 5);
+        assert_eq!(a.flag_parse("m", 7usize).unwrap(), 7);
+        let bad = parse("x --n five");
+        assert!(bad.flag_parse("n", 1usize).is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_rejected() {
+        assert!(Args::parse(["x", "--a", "1", "--a", "2"].map(String::from)).is_err());
+    }
+}

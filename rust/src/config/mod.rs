@@ -1,0 +1,225 @@
+//! Configuration system.
+//!
+//! [`ArchConfig`] bundles every architectural parameter the simulator,
+//! mapper and energy model consume. Configs can be parsed from simple
+//! `key = value` files (`#` comments; no vendored TOML crate — see
+//! DESIGN.md §1) so benches and the CLI can sweep parameters without
+//! recompiling.
+
+use crate::arch::mem::MemParams;
+use crate::interconnect::{FabricKind, Topology};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Full architectural configuration. Defaults are the paper's system:
+/// 4×4 PEs + 4×2 MOBs, switchless torus, 4 KiB context memory, 100 MHz
+/// edge clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Grid geometry.
+    pub topo: Topology,
+    /// Interconnect model.
+    pub fabric: FabricKind,
+    /// Router pipeline depth per hop (switched fabric only).
+    pub hop_latency: u64,
+    /// Input-port FIFO depth per node (elastic buffering; ≥ 4 sustains
+    /// the GEMM schedule at one MAC/PE/cycle — see fabric docs).
+    pub port_fifo: usize,
+    /// Memory hierarchy parameters.
+    pub mem: MemParams,
+    /// Context memory capacity in bytes.
+    pub ctx_bytes: usize,
+    /// Clock frequency in MHz (power reporting only; the cycle model is
+    /// frequency-independent).
+    pub freq_mhz: f64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            topo: Topology::default(),
+            fabric: FabricKind::Torus,
+            hop_latency: 3,
+            port_fifo: crate::interconnect::fabric::DEFAULT_PORT_FIFO,
+            mem: MemParams::default(),
+            ctx_bytes: crate::arch::context::DEFAULT_CTX_BYTES,
+            freq_mhz: 100.0,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// The paper's configuration with the switched-NoC baseline fabric
+    /// (TAB3's comparison arm).
+    pub fn switched_baseline() -> Self {
+        Self { fabric: FabricKind::Switched, ..Self::default() }
+    }
+
+    /// Parse from `key = value` text. Unknown keys are rejected (typos in
+    /// sweep scripts should fail loudly).
+    pub fn from_kv_text(text: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        let kv = parse_kv(text)?;
+        for (k, v) in &kv {
+            match k.as_str() {
+                "rows" => cfg.topo.rows = parse_num(k, v)?,
+                "pe_cols" => cfg.topo.pe_cols = parse_num(k, v)?,
+                "mob_cols" => cfg.topo.mob_cols = parse_num(k, v)?,
+                "fabric" => {
+                    cfg.fabric = match v.as_str() {
+                        "torus" => FabricKind::Torus,
+                        "switched" => FabricKind::Switched,
+                        other => bail!("unknown fabric '{other}' (torus|switched)"),
+                    }
+                }
+                "hop_latency" => cfg.hop_latency = parse_num(k, v)?,
+                "port_fifo" => cfg.port_fifo = parse_num(k, v)?,
+                "l1_kib" => cfg.mem.l1_words = parse_num::<usize>(k, v)? * 1024 / 4,
+                "l1_banks" => cfg.mem.l1_banks = parse_num(k, v)?,
+                "l1_latency" => cfg.mem.l1_latency = parse_num(k, v)?,
+                "ext_latency" => cfg.mem.ext_latency = parse_num(k, v)?,
+                "ext_bw" => cfg.mem.ext_bw = parse_num(k, v)?,
+                "dma_bw" => cfg.mem.dma_bw = parse_num(k, v)?,
+                "ctx_bytes" => cfg.ctx_bytes = parse_num(k, v)?,
+                "freq_mhz" => cfg.freq_mhz = parse_num(k, v)?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_kv_text(&text)
+    }
+
+    /// Sanity-check parameter combinations.
+    pub fn validate(&self) -> Result<()> {
+        if self.topo.rows == 0 || self.topo.pe_cols == 0 || self.topo.mob_cols == 0 {
+            bail!("grid dimensions must be positive");
+        }
+        if self.mem.l1_banks == 0 || !self.mem.l1_banks.is_power_of_two() {
+            bail!("l1_banks must be a positive power of two");
+        }
+        if self.mem.ext_bw == 0 {
+            bail!("ext_bw must be positive");
+        }
+        if self.port_fifo == 0 {
+            bail!("port_fifo must be at least 1");
+        }
+        if self.freq_mhz <= 0.0 {
+            bail!("freq_mhz must be positive");
+        }
+        Ok(())
+    }
+
+    /// One-line summary for logs and bench headers.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}x{} PEs + {}x{} MOBs, {} fabric, L1 {} KiB, {} MHz",
+            self.topo.rows,
+            self.topo.pe_cols,
+            self.topo.rows,
+            self.topo.mob_cols,
+            match self.fabric {
+                FabricKind::Torus => "torus",
+                FabricKind::Switched => "switched",
+            },
+            self.mem.l1_words * 4 / 1024,
+            self.freq_mhz
+        )
+    }
+}
+
+/// Parse `key = value` lines; `#` starts a comment; blank lines ignored.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+        };
+        let key = k.trim().to_string();
+        if out.contains_key(&key) {
+            bail!("line {}: duplicate key '{key}'", lineno + 1);
+        }
+        out.insert(key, v.trim().to_string());
+    }
+    Ok(out)
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse::<T>()
+        .map_err(|e| anyhow::anyhow!("config key '{key}': bad value '{v}': {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_system() {
+        let c = ArchConfig::default();
+        assert_eq!(c.topo.rows, 4);
+        assert_eq!(c.topo.pe_cols, 4);
+        assert_eq!(c.topo.mob_cols, 2);
+        assert_eq!(c.ctx_bytes, 4096);
+        assert_eq!(c.fabric, FabricKind::Torus);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let c = ArchConfig::from_kv_text(
+            "rows = 8\npe_cols=8 # big array\nfabric = switched\nl1_kib = 64\nfreq_mhz = 200\n",
+        )
+        .unwrap();
+        assert_eq!(c.topo.rows, 8);
+        assert_eq!(c.topo.pe_cols, 8);
+        assert_eq!(c.fabric, FabricKind::Switched);
+        assert_eq!(c.mem.l1_words, 64 * 1024 / 4);
+        assert_eq!(c.freq_mhz, 200.0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ArchConfig::from_kv_text("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn bad_fabric_rejected() {
+        assert!(ArchConfig::from_kv_text("fabric = crossbar").is_err());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(ArchConfig::from_kv_text("rows = 1\nrows = 2").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_banks() {
+        assert!(ArchConfig::from_kv_text("l1_banks = 3").is_err());
+        assert!(ArchConfig::from_kv_text("l1_banks = 0").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let kv = parse_kv("# header\n\n a = 1 # trailing\n").unwrap();
+        assert_eq!(kv.get("a").map(String::as_str), Some("1"));
+    }
+
+    #[test]
+    fn summary_mentions_geometry() {
+        let s = ArchConfig::default().summary();
+        assert!(s.contains("4x4 PEs"));
+        assert!(s.contains("torus"));
+    }
+}

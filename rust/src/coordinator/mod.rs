@@ -1,0 +1,227 @@
+//! Inference coordinator: the serving layer for §IV-B2's edge scenario.
+//!
+//! A worker thread owns the CGRA (one accelerator per edge device) and
+//! drains a request queue in batches; clients submit token inputs and
+//! receive encoder outputs. Timing is accounted in *simulated cycles*
+//! (queueing by arrival stamps, service by measured kernel cycles), so
+//! latency/throughput numbers are deterministic and frequency-scalable —
+//! wall-clock simulation speed is reported separately.
+//!
+//! The build environment vendors no tokio; the runtime is `std::thread`
+//! + `mpsc`, which an edge deployment would arguably prefer anyway.
+
+use crate::config::ArchConfig;
+use crate::sim::{CgraSim, Stats};
+use crate::util::mat::MatF32;
+use crate::xformer::{run_encoder_on_cgra, EncoderModel};
+use anyhow::Result;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A single inference request.
+pub struct Request {
+    /// Client-assigned id.
+    pub id: u64,
+    /// Input activations (seq × d_model).
+    pub input: MatF32,
+    /// Arrival time in simulated cycles (from the workload generator's
+    /// arrival process).
+    pub arrival_cycle: u64,
+}
+
+/// A completed inference.
+pub struct Response {
+    pub id: u64,
+    pub output: MatF32,
+    /// Cycles the request waited before service began.
+    pub queue_cycles: u64,
+    /// Cycles of array execution + configuration for this request.
+    pub service_cycles: u64,
+    /// Simulated completion time.
+    pub completion_cycle: u64,
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub completed: u64,
+    pub total_queue_cycles: u64,
+    pub total_service_cycles: u64,
+    /// Latest completion time (simulated makespan).
+    pub makespan_cycles: u64,
+    /// Cumulative simulator stats over all served requests.
+    pub stats: Stats,
+}
+
+impl ServeMetrics {
+    /// Mean end-to-end latency in cycles.
+    pub fn mean_latency_cycles(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        (self.total_queue_cycles + self.total_service_cycles) as f64 / self.completed as f64
+    }
+
+    /// Throughput in requests per second at `freq_mhz`.
+    pub fn throughput_rps(&self, freq_mhz: f64) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.makespan_cycles as f64 / (freq_mhz * 1e6))
+    }
+}
+
+/// The coordinator: owns the worker thread and the request channel.
+pub struct Coordinator {
+    tx: Option<mpsc::Sender<Request>>,
+    rx_out: mpsc::Receiver<Response>,
+    worker: Option<JoinHandle<Result<ServeMetrics>>>,
+}
+
+impl Coordinator {
+    /// Spawn a worker owning a fresh simulator and model.
+    pub fn spawn(cfg: ArchConfig, model: EncoderModel, batch: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx_out, rx_out) = mpsc::channel::<Response>();
+        let worker = std::thread::spawn(move || -> Result<ServeMetrics> {
+            let mut sim = CgraSim::new(cfg);
+            let mut metrics = ServeMetrics::default();
+            // The accelerator's own clock: a request can't start before
+            // it arrives nor before the previous one finishes.
+            let mut now: u64 = 0;
+            let mut pending: Vec<Request> = Vec::new();
+            loop {
+                if pending.is_empty() {
+                    match rx.recv() {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break, // all clients gone
+                    }
+                }
+                // Opportunistically drain up to `batch` (dynamic batching).
+                while pending.len() < batch {
+                    match rx.try_recv() {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break,
+                    }
+                }
+                for req in pending.drain(..) {
+                    let start = now.max(req.arrival_cycle);
+                    let queue_cycles = start - req.arrival_cycle;
+                    sim.reset_stats();
+                    let (output, report) = run_encoder_on_cgra(&mut sim, &model, &req.input)?;
+                    let service = report.cycles + report.config_cycles;
+                    now = start + service;
+                    metrics.completed += 1;
+                    metrics.total_queue_cycles += queue_cycles;
+                    metrics.total_service_cycles += service;
+                    metrics.makespan_cycles = metrics.makespan_cycles.max(now);
+                    metrics.stats.merge(&sim.stats);
+                    let _ = tx_out.send(Response {
+                        id: req.id,
+                        output,
+                        queue_cycles,
+                        service_cycles: service,
+                        completion_cycle: now,
+                    });
+                }
+            }
+            Ok(metrics)
+        });
+        Self { tx: Some(tx), rx_out, worker: Some(worker) }
+    }
+
+    /// Submit a request (non-blocking).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("coordinator already shut down")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("worker terminated"))
+    }
+
+    /// Receive the next completed response (blocking).
+    pub fn recv(&self) -> Result<Response> {
+        self.rx_out.recv().map_err(|_| anyhow::anyhow!("worker terminated"))
+    }
+
+    /// Close the queue and join the worker, returning final metrics.
+    pub fn shutdown(mut self) -> Result<ServeMetrics> {
+        drop(self.tx.take());
+        let worker = self.worker.take().expect("already joined");
+        worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShiftRng;
+    use crate::xformer::XformerConfig;
+
+    fn tiny_model() -> EncoderModel {
+        EncoderModel::new(
+            XformerConfig { n_layers: 1, seq: 16, d_model: 32, n_heads: 2, d_ff: 64 },
+            42,
+        )
+    }
+
+    fn input(seed: u64) -> MatF32 {
+        let mut rng = XorShiftRng::new(seed);
+        let mut x = MatF32::zeros(16, 32);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        x
+    }
+
+    #[test]
+    fn serves_requests_in_order_with_metrics() {
+        let coord = Coordinator::spawn(ArchConfig::default(), tiny_model(), 4);
+        for id in 0..6 {
+            coord
+                .submit(Request { id, input: input(id), arrival_cycle: id * 100 })
+                .unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            let resp = coord.recv().unwrap();
+            assert!(resp.service_cycles > 0);
+            assert!(resp.output.data.iter().all(|v| v.is_finite()));
+            seen.push(resp.id);
+        }
+        let metrics = coord.shutdown().unwrap();
+        assert_eq!(metrics.completed, 6);
+        assert!(metrics.mean_latency_cycles() > 0.0);
+        assert!(metrics.throughput_rps(100.0) > 0.0);
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5], "FIFO service order");
+    }
+
+    #[test]
+    fn queueing_accumulates_under_burst() {
+        // All requests arrive at cycle 0: later ones must queue.
+        let coord = Coordinator::spawn(ArchConfig::default(), tiny_model(), 8);
+        for id in 0..4 {
+            coord.submit(Request { id, input: input(id), arrival_cycle: 0 }).unwrap();
+        }
+        let mut queue_cycles = Vec::new();
+        for _ in 0..4 {
+            queue_cycles.push(coord.recv().unwrap().queue_cycles);
+        }
+        let metrics = coord.shutdown().unwrap();
+        assert_eq!(metrics.completed, 4);
+        assert_eq!(queue_cycles[0], 0, "first request starts immediately");
+        assert!(queue_cycles[3] > queue_cycles[1], "burst builds queueing delay");
+    }
+
+    #[test]
+    fn identical_inputs_identical_outputs() {
+        let coord = Coordinator::spawn(ArchConfig::default(), tiny_model(), 2);
+        coord.submit(Request { id: 0, input: input(7), arrival_cycle: 0 }).unwrap();
+        coord.submit(Request { id: 1, input: input(7), arrival_cycle: 0 }).unwrap();
+        let a = coord.recv().unwrap();
+        let b = coord.recv().unwrap();
+        coord.shutdown().unwrap();
+        assert_eq!(a.output.max_abs_diff(&b.output), 0.0);
+        assert_eq!(a.service_cycles, b.service_cycles, "deterministic service time");
+    }
+}

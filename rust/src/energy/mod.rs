@@ -1,0 +1,201 @@
+//! Energy and power model (§IV-B2, "ultra-low-power").
+//!
+//! Energy is a dot product of the [`Stats`] event vector with per-event
+//! energies, plus leakage × time. Default per-event values are
+//! 22 nm-class numbers in the range published for TRANSPIRE-class
+//! ultra-low-power CGRAs (DESIGN.md §5.3); everything is a parameter so
+//! TAB6 can report sensitivity sweeps. **Ratios** (switched/switchless
+//! hop, ext/L1 access) drive the paper-shape conclusions, not absolute
+//! picojoules.
+
+pub mod params;
+
+pub use params::EnergyParams;
+
+use crate::sim::stats::Stats;
+
+/// Energy breakdown in picojoules, by component group.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub compute_pj: f64,
+    pub regfile_pj: f64,
+    pub interconnect_pj: f64,
+    pub l1_pj: f64,
+    pub ext_mem_pj: f64,
+    pub mob_pj: f64,
+    pub config_pj: f64,
+    pub leakage_pj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy in picojoules.
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj
+            + self.regfile_pj
+            + self.interconnect_pj
+            + self.l1_pj
+            + self.ext_mem_pj
+            + self.mob_pj
+            + self.config_pj
+            + self.leakage_pj
+    }
+
+    /// Total energy in microjoules.
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() / 1e6
+    }
+}
+
+/// Energy model: evaluates a [`Stats`] vector.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    pub params: EnergyParams,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self { params: EnergyParams::default() }
+    }
+}
+
+impl EnergyModel {
+    pub fn new(params: EnergyParams) -> Self {
+        Self { params }
+    }
+
+    /// Evaluate the energy of a run at a clock frequency (MHz). Frequency
+    /// enters only through leakage (leakage power × wall time).
+    pub fn evaluate(&self, stats: &Stats, freq_mhz: f64) -> EnergyBreakdown {
+        let p = &self.params;
+        let total_cycles = stats.cycles + stats.config_cycles;
+        let seconds = total_cycles as f64 / (freq_mhz * 1e6);
+        EnergyBreakdown {
+            compute_pj: stats.pe_macp as f64 * p.pe_macp_pj
+                + stats.pe_alu as f64 * p.pe_alu_pj
+                + stats.pe_mov as f64 * p.pe_mov_pj
+                + stats.pe_acc_access as f64 * p.pe_acc_pj,
+            regfile_pj: (stats.pe_reg_reads + stats.pe_reg_writes) as f64 * p.pe_reg_pj,
+            interconnect_pj: stats.torus_hops as f64 * p.torus_hop_pj
+                + stats.noc_link_hops as f64 * p.noc_link_pj
+                + stats.noc_router_traversals as f64 * p.noc_router_pj,
+            l1_pj: (stats.l1_reads + stats.l1_writes) as f64 * p.l1_access_pj,
+            ext_mem_pj: (stats.ext_reads + stats.ext_writes) as f64 * p.ext_access_pj,
+            mob_pj: stats.mob_agu_ops as f64 * p.mob_agu_pj,
+            config_pj: stats.ctx_bytes as f64 * p.ctx_byte_pj,
+            leakage_pj: p.leakage_uw * seconds * 1e6, // µW × s = µJ → pJ: ×1e6
+        }
+    }
+
+    /// Average power in milliwatts over the run at `freq_mhz`.
+    pub fn avg_power_mw(&self, stats: &Stats, freq_mhz: f64) -> f64 {
+        let total_cycles = stats.cycles + stats.config_cycles;
+        if total_cycles == 0 {
+            return 0.0;
+        }
+        let seconds = total_cycles as f64 / (freq_mhz * 1e6);
+        let pj = self.evaluate(stats, freq_mhz).total_pj();
+        (pj / 1e12) / seconds * 1e3
+    }
+
+    /// Energy efficiency in int8 GOPS/W (2 ops per MAC: mul + add).
+    pub fn gops_per_watt(&self, stats: &Stats, freq_mhz: f64) -> f64 {
+        let pj = self.evaluate(stats, freq_mhz).total_pj();
+        if pj == 0.0 {
+            return 0.0;
+        }
+        let ops = (stats.macs() * 2) as f64;
+        // ops / (pj * 1e-12 J) = ops/J; GOPS/W = ops/J / 1e9.
+        ops / (pj * 1e-12) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_stats() -> Stats {
+        Stats {
+            cycles: 1000,
+            pe_macp: 16_000,
+            pe_reg_reads: 32_000,
+            pe_reg_writes: 8_000,
+            pe_acc_access: 16_000,
+            torus_hops: 5_000,
+            l1_reads: 5_000,
+            ext_reads: 500,
+            mob_agu_ops: 5_000,
+            ctx_bytes: 512,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let m = EnergyModel::default();
+        let b = m.evaluate(&busy_stats(), 100.0);
+        let sum = b.compute_pj
+            + b.regfile_pj
+            + b.interconnect_pj
+            + b.l1_pj
+            + b.ext_mem_pj
+            + b.mob_pj
+            + b.config_pj
+            + b.leakage_pj;
+        assert!((b.total_pj() - sum).abs() < 1e-9);
+        assert!(b.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn energy_monotone_in_events() {
+        let m = EnergyModel::default();
+        let s1 = busy_stats();
+        let mut s2 = s1.clone();
+        s2.pe_macp *= 2;
+        assert!(
+            m.evaluate(&s2, 100.0).total_pj() > m.evaluate(&s1, 100.0).total_pj(),
+            "more MACs must cost more energy"
+        );
+    }
+
+    #[test]
+    fn leakage_dominates_at_low_frequency() {
+        // Same work at lower frequency takes longer wall time → more
+        // leakage energy; dynamic part unchanged.
+        let m = EnergyModel::default();
+        let s = busy_stats();
+        let lo = m.evaluate(&s, 10.0);
+        let hi = m.evaluate(&s, 1000.0);
+        assert!(lo.leakage_pj > hi.leakage_pj * 50.0);
+        assert!((lo.compute_pj - hi.compute_pj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_scales_roughly_with_frequency() {
+        let m = EnergyModel::default();
+        let s = busy_stats();
+        let p100 = m.avg_power_mw(&s, 100.0);
+        let p200 = m.avg_power_mw(&s, 200.0);
+        // Dynamic part doubles with frequency; leakage constant.
+        assert!(p200 > p100 * 1.5 && p200 < p100 * 2.5, "{p100} {p200}");
+    }
+
+    #[test]
+    fn zero_stats_zero_power() {
+        let m = EnergyModel::default();
+        assert_eq!(m.avg_power_mw(&Stats::default(), 100.0), 0.0);
+        assert_eq!(m.gops_per_watt(&Stats::default(), 100.0), 0.0);
+    }
+
+    #[test]
+    fn switched_hop_costs_more_than_torus() {
+        // The claim-C3 premise must hold in the default parameters.
+        let p = EnergyParams::default();
+        assert!(p.noc_link_pj + p.noc_router_pj > 2.0 * p.torus_hop_pj);
+    }
+
+    #[test]
+    fn ext_access_costs_more_than_l1() {
+        let p = EnergyParams::default();
+        assert!(p.ext_access_pj > 3.0 * p.l1_access_pj);
+    }
+}

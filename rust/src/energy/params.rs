@@ -1,0 +1,169 @@
+//! Per-event energy parameters.
+//!
+//! Defaults are 22 nm-class values consistent with published
+//! ultra-low-power CGRA numbers (TRANSPIRE [12], NP-CGRA [6] report
+//! sub-pJ ALU ops and low-pJ memory accesses at similar nodes). Absolute
+//! values are *calibratable* — `from_kv_text` lets benches sweep them —
+//! and EXPERIMENTS.md reports which conclusions are ratio-driven.
+
+use anyhow::{bail, Result};
+
+/// Per-event energies (picojoules) + leakage (microwatts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyParams {
+    /// Packed 4-lane int8 MAC (4 multiplies + 4 adds).
+    pub pe_macp_pj: f64,
+    /// Scalar 32-bit ALU op (int or fp32-lite).
+    pub pe_alu_pj: f64,
+    /// Register-file access (read or write).
+    pub pe_reg_pj: f64,
+    /// Accumulator access.
+    pub pe_acc_pj: f64,
+    /// Mov/route issue slot.
+    pub pe_mov_pj: f64,
+    /// Switchless torus link hop (neighbour latch-to-latch, 32-bit).
+    pub torus_hop_pj: f64,
+    /// Switched NoC: link traversal component.
+    pub noc_link_pj: f64,
+    /// Switched NoC: router traversal (buffer + arbitration + crossbar).
+    pub noc_router_pj: f64,
+    /// L1 scratchpad access per 32-bit word.
+    pub l1_access_pj: f64,
+    /// External memory access per 32-bit word.
+    pub ext_access_pj: f64,
+    /// MOB address-generation + issue per word.
+    pub mob_agu_pj: f64,
+    /// Context decode/distribution per byte.
+    pub ctx_byte_pj: f64,
+    /// Array-total leakage power in microwatts.
+    pub leakage_uw: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        Self {
+            pe_macp_pj: 1.2,
+            pe_alu_pj: 0.9,
+            pe_reg_pj: 0.10,
+            pe_acc_pj: 0.12,
+            pe_mov_pj: 0.25,
+            torus_hop_pj: 0.15,
+            noc_link_pj: 0.30,
+            noc_router_pj: 0.60,
+            l1_access_pj: 1.5,
+            ext_access_pj: 8.0,
+            mob_agu_pj: 0.30,
+            ctx_byte_pj: 0.20,
+            leakage_uw: 18.0,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Parse overrides from `key = value` text (same format as
+    /// [`crate::config::ArchConfig::from_kv_text`]).
+    pub fn from_kv_text(text: &str) -> Result<Self> {
+        let mut p = Self::default();
+        for (k, v) in crate::config::parse_kv(text)? {
+            let val: f64 = v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("energy key '{k}': bad value '{v}': {e}"))?;
+            match k.as_str() {
+                "pe_macp_pj" => p.pe_macp_pj = val,
+                "pe_alu_pj" => p.pe_alu_pj = val,
+                "pe_reg_pj" => p.pe_reg_pj = val,
+                "pe_acc_pj" => p.pe_acc_pj = val,
+                "pe_mov_pj" => p.pe_mov_pj = val,
+                "torus_hop_pj" => p.torus_hop_pj = val,
+                "noc_link_pj" => p.noc_link_pj = val,
+                "noc_router_pj" => p.noc_router_pj = val,
+                "l1_access_pj" => p.l1_access_pj = val,
+                "ext_access_pj" => p.ext_access_pj = val,
+                "mob_agu_pj" => p.mob_agu_pj = val,
+                "ctx_byte_pj" => p.ctx_byte_pj = val,
+                "leakage_uw" => p.leakage_uw = val,
+                other => bail!("unknown energy key '{other}'"),
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// All parameters must be non-negative.
+    pub fn validate(&self) -> Result<()> {
+        let all = [
+            self.pe_macp_pj,
+            self.pe_alu_pj,
+            self.pe_reg_pj,
+            self.pe_acc_pj,
+            self.pe_mov_pj,
+            self.torus_hop_pj,
+            self.noc_link_pj,
+            self.noc_router_pj,
+            self.l1_access_pj,
+            self.ext_access_pj,
+            self.mob_agu_pj,
+            self.ctx_byte_pj,
+            self.leakage_uw,
+        ];
+        if all.iter().any(|v| !v.is_finite() || *v < 0.0) {
+            bail!("energy parameters must be finite and non-negative");
+        }
+        Ok(())
+    }
+
+    /// Scale all dynamic energies by a factor (voltage/tech scaling
+    /// studies; leakage scales separately in practice, kept simple here).
+    pub fn scaled(&self, dynamic_factor: f64, leakage_factor: f64) -> Self {
+        Self {
+            pe_macp_pj: self.pe_macp_pj * dynamic_factor,
+            pe_alu_pj: self.pe_alu_pj * dynamic_factor,
+            pe_reg_pj: self.pe_reg_pj * dynamic_factor,
+            pe_acc_pj: self.pe_acc_pj * dynamic_factor,
+            pe_mov_pj: self.pe_mov_pj * dynamic_factor,
+            torus_hop_pj: self.torus_hop_pj * dynamic_factor,
+            noc_link_pj: self.noc_link_pj * dynamic_factor,
+            noc_router_pj: self.noc_router_pj * dynamic_factor,
+            l1_access_pj: self.l1_access_pj * dynamic_factor,
+            ext_access_pj: self.ext_access_pj * dynamic_factor,
+            mob_agu_pj: self.mob_agu_pj * dynamic_factor,
+            ctx_byte_pj: self.ctx_byte_pj * dynamic_factor,
+            leakage_uw: self.leakage_uw * leakage_factor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        EnergyParams::default().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_overrides_apply() {
+        let p = EnergyParams::from_kv_text("pe_macp_pj = 2.5\nleakage_uw = 30").unwrap();
+        assert_eq!(p.pe_macp_pj, 2.5);
+        assert_eq!(p.leakage_uw, 30.0);
+        assert_eq!(p.pe_alu_pj, EnergyParams::default().pe_alu_pj);
+    }
+
+    #[test]
+    fn negative_rejected() {
+        assert!(EnergyParams::from_kv_text("pe_macp_pj = -1").is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(EnergyParams::from_kv_text("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn scaled_applies_factors() {
+        let p = EnergyParams::default().scaled(0.5, 2.0);
+        assert_eq!(p.pe_macp_pj, EnergyParams::default().pe_macp_pj * 0.5);
+        assert_eq!(p.leakage_uw, EnergyParams::default().leakage_uw * 2.0);
+    }
+}

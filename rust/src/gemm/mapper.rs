@@ -1,0 +1,1010 @@
+//! Kernel-context generation for blocked GEMM.
+//!
+//! The schedule is *elastic*: programs only fix the **order** of port
+//! reads/writes per link; blocking port semantics self-synchronize the
+//! timing. The steady state is one packed MAC per PE per cycle.
+//!
+//! ## Dual-feed dataflow (the paper's torus, DESIGN.md §2)
+//!
+//! PE(r,c) owns the 4×4 output sub-tile at rows `i0+4r..+4`, cols
+//! `j0+4c..+4`. Per k-chunk each PE performs 16 packed MACs (4 a-words ×
+//! 4 B lanes) over 16 slots; slot `4g+i` is MAC `(rr=g, lane=i)`.
+//!
+//! - **East wire** (MOB(r,0) → PE3 → … → PE0): interleaved stream
+//!   `[a_g, b(g,col3), b(g,col2)]` per lane group g. The A word is read
+//!   at slot `4g` and rider-forwarded west; PE3 latches its own B word
+//!   (take at `4g+1`) and relays PE2's (`4g+2`); PE2 latches at `4g+2`.
+//! - **West wire** (MOB(r,1) → PE0 → PE1): `[b(g,col0), b(g,col1)]`;
+//!   PE0 latches its own at slot `4g` (take rider alongside the A-read)
+//!   and relays PE1's at `4g+1`; PE1 latches at `4g+3`.
+//! - B words are prefetched one chunk ahead into the inactive register
+//!   bank (the body is a two-chunk unroll so banks swap statically).
+//! - **C drain**: per tile each PE requantizes its sub-tile west;
+//!   eastern PEs' words are pass-forwarded, giving column-ascending wire
+//!   order into MOB(r,1)'s store windows.
+//!
+//! Every dependency in this schedule points the same way as the skew of
+//! the data it needs (A west-bound defines skews PE3=0 … PE0=3; both B
+//! relays are satisfiable with equality at those skews), so there are no
+//! steady-state bubbles — unlike the single-feed relay, which couples
+//! opposed skews and sustains only ≈0.45 of peak (EXPERIMENTS.md §Perf).
+//!
+//! ## Single feed
+//!
+//! One west-bound B stream from MOB(r,0) with in-row relays; used by the
+//! PanelB strategy (in-place panel re-staging breaks dual-feed's
+//! cross-tile prefetch continuity), the switched-NoC baseline (with
+//! route tables and A broadcast by replication) and narrow arrays.
+
+use super::plan::{FeedKind, GemmPlan, MapVariant, OutputMode, Strategy, DUAL_SLACK_WORDS};
+use crate::interconnect::fabric::RouteTable;
+use crate::interconnect::topology::Topology;
+use crate::isa::{
+    AluOp, Dir, DirMode, Dst, KernelContext, MemSpace, MobOp, MobProgram, PeInstr, PeProgram,
+    Rider, Src, Take,
+};
+use anyhow::{bail, ensure, Result};
+
+// Register allocation (PE register file, 16 entries).
+const A_REG: u8 = 0; // r0..r3: current a-words
+const B_BANK0: u8 = 4; // r4..r7: B bank 0
+const B_BANK1: u8 = 8; // r8..r11: B bank 1
+const ADDR_A: u8 = 12; // PeLoad: A pointer
+const ADDR_B: u8 = 13; // PeLoad: B pointer
+const ADDR_C: u8 = 14; // PeLoad: C pointer
+const TMP: u8 = 15; // PeLoad: requant staging
+
+/// Build the kernel context (and route tables for the switched variant).
+pub fn build_context(plan: &GemmPlan) -> Result<(KernelContext, Option<RouteTable>)> {
+    let topo = Topology::new(plan.rows, plan.pe_cols, 2);
+    let mut ctx = KernelContext {
+        pe_programs: Vec::with_capacity(topo.num_pes()),
+        mob_programs: Vec::with_capacity(topo.num_mobs()),
+        name: format!(
+            "gemm{}x{}x{}-{:?}-{:?}-{:?}",
+            plan.m, plan.k, plan.n, plan.strategy, plan.variant, plan.feed
+        ),
+    };
+
+    match plan.variant {
+        MapVariant::Torus | MapVariant::Switched => {
+            for _r in 0..plan.rows {
+                for c in 0..plan.pe_cols {
+                    ctx.pe_programs.push(match plan.feed {
+                        FeedKind::Dual => pe_program_dual(plan, c),
+                        FeedKind::Single => pe_program_single(plan, c),
+                    });
+                }
+            }
+            for r in 0..plan.rows {
+                match plan.feed {
+                    FeedKind::Dual => {
+                        ctx.mob_programs.push(mob_east_dual(plan, r));
+                        ctx.mob_programs.push(mob_west_dual(plan, r));
+                    }
+                    FeedKind::Single => {
+                        ctx.mob_programs.push(mob_b_single(plan, r));
+                        ctx.mob_programs.push(mob_a_single(plan, r));
+                    }
+                }
+            }
+        }
+        MapVariant::PeLoad => {
+            if plan.tiles() != 1 {
+                bail!("PeLoad ablation supports a single tile-block only");
+            }
+            for r in 0..plan.rows {
+                for c in 0..plan.pe_cols {
+                    ctx.pe_programs.push(pe_program_peload(plan, r, c)?);
+                }
+            }
+            for _ in 0..topo.num_mobs() {
+                ctx.mob_programs.push(MobProgram::idle());
+            }
+        }
+    }
+    validate_barrier_counts(&ctx)?;
+
+    let routes = match plan.variant {
+        MapVariant::Switched => Some(build_routes(plan, &topo)),
+        _ => None,
+    };
+    Ok((ctx, routes))
+}
+
+/// Each MOB must emit the same dynamic number of `Barrier` descriptors,
+/// or the global rendezvous deadlocks.
+fn validate_barrier_counts(ctx: &KernelContext) -> Result<()> {
+    fn dynamic_barriers(ops: &[MobOp]) -> u64 {
+        fn count(ops: &[MobOp], lo: usize, hi: usize) -> u64 {
+            let mut total = 0u64;
+            let mut i = lo;
+            while i < hi {
+                match ops[i] {
+                    MobOp::Barrier => total += 1,
+                    MobOp::Loop { start, extra } => {
+                        total += extra as u64 * count(ops, start as usize, i);
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            total
+        }
+        count(ops, 0, ops.len())
+    }
+    let counts: Vec<u64> = ctx.mob_programs.iter().map(|m| dynamic_barriers(&m.ops)).collect();
+    if let Some(&first) = counts.first() {
+        ensure!(
+            counts.iter().all(|&c| c == first),
+            "mapper bug: unequal barrier counts across MOBs: {counts:?}"
+        );
+    }
+    Ok(())
+}
+
+/// Per-tile C drain: own sub-tile west, then pass-forward the eastern
+/// PEs' drains (wire order = column ascending). Shared by both feeds.
+fn drain_epilogue(plan: &GemmPlan, c: usize) -> Vec<PeInstr> {
+    let cols = plan.pe_cols;
+    let own_words = match plan.output {
+        OutputMode::Quant { .. } => 4,
+        OutputMode::Raw => 16,
+    };
+    let mut epi = Vec::with_capacity(own_words * (cols - c));
+    match plan.output {
+        OutputMode::Quant { shift } => {
+            for rr in 0..4u8 {
+                epi.push(PeInstr::AccOutQ {
+                    d: 4 * rr,
+                    shift,
+                    dst: Dst::Port(Dir::West),
+                    clear: true,
+                });
+            }
+        }
+        OutputMode::Raw => {
+            for d in 0..16u8 {
+                epi.push(PeInstr::AccOut { d, dst: Dst::Port(Dir::West), clear: true });
+            }
+        }
+    }
+    for _ in 0..own_words * (cols - 1 - c) {
+        epi.push(PeInstr::Mov {
+            dst: Dst::Port(Dir::West),
+            a: Src::Port(Dir::East),
+            ra: Rider::NONE,
+        });
+    }
+    epi
+}
+
+// ====================================================================
+// Dual feed (paper torus, pe_cols == 4)
+// ====================================================================
+
+/// PE program for the dual-feed mapping, parameterised by grid column.
+fn pe_program_dual(plan: &GemmPlan, c: usize) -> PeProgram {
+    debug_assert_eq!(plan.pe_cols, 4);
+    let chunk_pairs = plan.chunks() / 2;
+
+    // Prologue: latch chunk 0's B lanes into bank 0 (+ relay the
+    // neighbour half's words).
+    let mut prologue = Vec::new();
+    for g in 0..4u8 {
+        match c {
+            3 => {
+                prologue.push(PeInstr::Mov {
+                    dst: Dst::Reg(B_BANK0 + g),
+                    a: Src::Port(Dir::East),
+                    ra: Rider::NONE,
+                });
+                prologue.push(PeInstr::Mov {
+                    dst: Dst::Port(Dir::West),
+                    a: Src::Port(Dir::East),
+                    ra: Rider::NONE,
+                });
+            }
+            2 => prologue.push(PeInstr::Mov {
+                dst: Dst::Reg(B_BANK0 + g),
+                a: Src::Port(Dir::East),
+                ra: Rider::NONE,
+            }),
+            1 => prologue.push(PeInstr::Mov {
+                dst: Dst::Reg(B_BANK0 + g),
+                a: Src::Port(Dir::West),
+                ra: Rider::NONE,
+            }),
+            0 => {
+                prologue.push(PeInstr::Mov {
+                    dst: Dst::Reg(B_BANK0 + g),
+                    a: Src::Port(Dir::West),
+                    ra: Rider::NONE,
+                });
+                prologue.push(PeInstr::Mov {
+                    dst: Dst::Port(Dir::East),
+                    a: Src::Port(Dir::West),
+                    ra: Rider::NONE,
+                });
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    // Body: two unrolled chunks (banks swap). A arrives on the EAST port
+    // (west-bound stream) at slot 4g; takes are per-column as derived in
+    // the module docs.
+    let mut body = Vec::with_capacity(32);
+    for parity in 0..2u8 {
+        let cur = if parity == 0 { B_BANK0 } else { B_BANK1 };
+        let pre = if parity == 0 { B_BANK1 } else { B_BANK0 };
+        for g in 0..4u8 {
+            for i in 0..4u8 {
+                let (a, ra) = if i == 0 {
+                    let fwd = if c > 0 { Some(Dir::West) } else { None };
+                    (Src::Port(Dir::East), Rider { latch: Some(A_REG + g), fwd })
+                } else {
+                    (Src::Reg(A_REG + g), Rider::NONE)
+                };
+                let take = match (c, i) {
+                    (3, 1) => Some(Take { port: Dir::East, latch: Some(pre + g), fwd: None }),
+                    (3, 2) => Some(Take { port: Dir::East, latch: None, fwd: Some(Dir::West) }),
+                    (2, 2) => Some(Take { port: Dir::East, latch: Some(pre + g), fwd: None }),
+                    (1, 3) => Some(Take { port: Dir::West, latch: Some(pre + g), fwd: None }),
+                    (0, 0) => Some(Take { port: Dir::West, latch: Some(pre + g), fwd: None }),
+                    (0, 1) => Some(Take { port: Dir::West, latch: None, fwd: Some(Dir::East) }),
+                    _ => None,
+                };
+                body.push(PeInstr::MacP {
+                    d: g * 4 + i,
+                    a,
+                    ra,
+                    b: Src::Reg(cur + i),
+                    rb: Rider::NONE,
+                    take,
+                });
+            }
+        }
+    }
+
+    PeProgram {
+        prologue,
+        body,
+        trip: chunk_pairs as u32,
+        tile_epilogue: drain_epilogue(plan, c),
+        tiles: plan.tiles() as u32,
+        epilogue: vec![PeInstr::Halt],
+    }
+}
+
+/// Split `total` words into `parts` DMA slices: (offset, count) for `i`.
+fn slice(total: usize, parts: usize, i: usize) -> (u32, u32) {
+    let base_size = total / parts;
+    let rem = total % parts;
+    let off = i * base_size + i.min(rem);
+    let cnt = base_size + usize::from(i < rem);
+    (off as u32, cnt as u32)
+}
+
+/// East MOB (grid column `pe_cols`): interleaved A + east-half-B stream,
+/// west-bound into PE3.
+fn mob_east_dual(plan: &GemmPlan, r: usize) -> MobProgram {
+    let kp = plan.kp as u32;
+    let rows = plan.rows;
+    let half = plan.half_panel_words() as u32; // 2·kp for pe_cols = 4
+    let (n_it, n_jt) = (plan.n_it as u32, plan.n_jt as u32);
+    let mut ops = Vec::new();
+    match plan.strategy {
+        Strategy::WholeB => {
+            // The DMA engine is serial, so slicing the region across
+            // rows buys nothing; a single staging DMA keeps the other
+            // rows' programs identical (context dedup).
+            if r == 0 && !plan.prestaged {
+                let whole = (plan.n_jt * plan.half_panel_words() + DUAL_SLACK_WORDS) as u32;
+                ops.push(MobOp::Dma {
+                    ext_base: plan.b_east_ext,
+                    l1_base: plan.b_east_l1,
+                    count: whole,
+                    to_l1: true,
+                    ext_steps: [0, 0],
+                    l1_steps: [0, 0],
+                });
+            }
+            if !plan.prestaged {
+                ops.push(MobOp::Barrier);
+            }
+            // One-time preamble: chunk 0 of panel 0 (PE prologue fill).
+            ops.push(MobOp::load(MemSpace::L1, plan.b_east_l1, 1, 8, Dir::West));
+            // it outer: stage this row-group's A slice, then jt inner.
+            let it_start = ops.len() as u16;
+            if !plan.prestaged {
+                ops.push(MobOp::Dma {
+                    ext_base: plan.a_ext + (r as u32) * kp,
+                    l1_base: plan.a_slice_l1(r),
+                    count: kp,
+                    to_l1: true,
+                    ext_steps: [(rows as u32 * kp) as i32, 0],
+                    l1_steps: [0, 0],
+                });
+                ops.push(MobOp::Fence);
+            }
+            let jt_start = ops.len() as u16;
+            ops.push(MobOp::LoadDual {
+                space: MemSpace::L1,
+                a_base: plan.a_slice_l1(r),
+                a_stride: 1,
+                a_count: kp,
+                a_per: 1,
+                b_base: plan.b_east_l1 + 8,
+                b_stride: 1,
+                b_count: 2 * kp,
+                b_per: 2,
+                dir: Dir::West,
+                a_steps: [0, 0],
+                b_steps: [half as i32, 0],
+            });
+            ops.push(MobOp::Loop { start: jt_start, extra: n_jt - 1 });
+            ops.push(MobOp::Loop { start: it_start, extra: n_it - 1 });
+        }
+        Strategy::NaiveExt => {
+            ops.push(MobOp::load(MemSpace::Ext, plan.b_east_ext, 1, 8, Dir::West));
+            let jt_start = ops.len() as u16;
+            ops.push(MobOp::LoadDual {
+                space: MemSpace::Ext,
+                a_base: plan.a_ext + (r as u32) * kp,
+                a_stride: 1,
+                a_count: kp,
+                a_per: 1,
+                b_base: plan.b_east_ext + 8,
+                b_stride: 1,
+                b_count: 2 * kp,
+                b_per: 2,
+                dir: Dir::West,
+                a_steps: [0, (rows as u32 * kp) as i32],
+                b_steps: [half as i32, 0],
+            });
+            ops.push(MobOp::Loop { start: jt_start, extra: n_jt - 1 });
+            ops.push(MobOp::Loop { start: jt_start, extra: n_it - 1 });
+        }
+        Strategy::PanelB => unreachable!("PanelB uses the single feed"),
+    }
+    ops.push(MobOp::Halt);
+    MobProgram { ops }
+}
+
+/// West MOB (grid column `pe_cols + 1`): west-half-B stream east-bound
+/// into PE0, plus the C-store windows (absorbing the drain on its east
+/// input).
+fn mob_west_dual(plan: &GemmPlan, r: usize) -> MobProgram {
+    let kp = plan.kp as u32;
+    let rows = plan.rows;
+    let c_cols = plan.pe_cols;
+    let half = plan.half_panel_words() as u32;
+    let (n_it, n_jt) = (plan.n_it as u32, plan.n_jt as u32);
+    let crw = plan.c_row_words() as i32;
+
+    // Store windows. Loop order is it-outer/jt-inner for both dual
+    // strategies: steps[0] = jt (step pe_cols words across), steps[1] =
+    // it (step 4·rows rows down).
+    let store_steps = [c_cols as i32, rows as i32 * crw * 4];
+    let push_stores = |ops: &mut Vec<MobOp>| match plan.output {
+        OutputMode::Quant { .. } => {
+            for c in 0..c_cols {
+                ops.push(MobOp::Store {
+                    space: MemSpace::Ext,
+                    base: plan.c_ext + (4 * r as u32) * crw as u32 + c as u32,
+                    stride: crw,
+                    count: 4,
+                    dir: Dir::East,
+                    steps: store_steps,
+                });
+            }
+        }
+        OutputMode::Raw => {
+            for c in 0..c_cols {
+                for rr in 0..4 {
+                    ops.push(MobOp::Store {
+                        space: MemSpace::Ext,
+                        base: plan.c_ext + ((4 * r + rr) as u32) * crw as u32 + (4 * c) as u32,
+                        stride: 1,
+                        count: 4,
+                        dir: Dir::East,
+                        steps: store_steps,
+                    });
+                }
+            }
+        }
+    };
+
+    let mut ops = Vec::new();
+    let (space, region) = match plan.strategy {
+        Strategy::WholeB => (MemSpace::L1, plan.b_west_l1),
+        Strategy::NaiveExt => (MemSpace::Ext, plan.b_west_ext),
+        Strategy::PanelB => unreachable!("PanelB uses the single feed"),
+    };
+    if plan.strategy == Strategy::WholeB && !plan.prestaged {
+        if r == 0 {
+            let whole = (plan.n_jt * plan.half_panel_words() + DUAL_SLACK_WORDS) as u32;
+            ops.push(MobOp::Dma {
+                ext_base: plan.b_west_ext,
+                l1_base: plan.b_west_l1,
+                count: whole,
+                to_l1: true,
+                ext_steps: [0, 0],
+                l1_steps: [0, 0],
+            });
+        }
+        ops.push(MobOp::Barrier);
+    }
+    // One-time preamble: chunk 0 of panel 0.
+    ops.push(MobOp::load(space, region, 1, 8, Dir::East));
+    let tile_start = ops.len() as u16;
+    // Mid: this tile's chunks 1..chunks.
+    ops.push(MobOp::Load {
+        space,
+        base: region + 8,
+        stride: 1,
+        count: 2 * kp - 8,
+        dir: DirMode::Fixed(Dir::East),
+        replicate: 1,
+        steps: [half as i32, 0],
+    });
+    // Next8: the following tile's chunk 0 (slack copy at the region end
+    // keeps i-tile-boundary overruns valid). Emitted BEFORE the stores so
+    // the PEs' final-chunk prefetch never deadlocks against the drain.
+    ops.push(MobOp::Load {
+        space,
+        base: region + half,
+        stride: 1,
+        count: 8,
+        dir: DirMode::Fixed(Dir::East),
+        replicate: 1,
+        steps: [half as i32, 0],
+    });
+    push_stores(&mut ops);
+    ops.push(MobOp::Loop { start: tile_start, extra: n_jt - 1 });
+    ops.push(MobOp::Loop { start: tile_start, extra: n_it - 1 });
+    ops.push(MobOp::Halt);
+    MobProgram { ops }
+}
+
+// ====================================================================
+// Single feed (PanelB, switched baseline, narrow arrays)
+// ====================================================================
+
+/// PE program for the single-feed mapping, parameterised by grid column.
+fn pe_program_single(plan: &GemmPlan, c: usize) -> PeProgram {
+    let cols = plan.pe_cols;
+    let last_col = c == cols - 1;
+    let chunk_pairs = plan.chunks() / 2;
+
+    // Prologue: column-ascending emission → `c` pass-throughs then the
+    // own latch, per lane.
+    let mut prologue = Vec::with_capacity(4 * (c + 1));
+    for cc in 0..4u8 {
+        for _ in 0..c {
+            prologue.push(PeInstr::Mov {
+                dst: Dst::Port(Dir::West),
+                a: Src::Port(Dir::East),
+                ra: Rider::NONE,
+            });
+        }
+        prologue.push(PeInstr::Mov {
+            dst: Dst::Reg(B_BANK0 + cc),
+            a: Src::Port(Dir::East),
+            ra: Rider::NONE,
+        });
+    }
+
+    // Body: takes at slot `4cc + p + (3-c)` (group-aligned, skewed later
+    // for western columns). This relay couples the east-bound A skew
+    // with the west-bound B relay and sustains ≈0.45 of peak — accepted
+    // for the variants that need it (see module docs).
+    let mut body = Vec::with_capacity(32);
+    for parity in 0..2u8 {
+        let cur = if parity == 0 { B_BANK0 } else { B_BANK1 };
+        let pre = if parity == 0 { B_BANK1 } else { B_BANK0 };
+        let mut takes: [Option<Take>; 16] = [None; 16];
+        for cc in 0..4usize {
+            for p in 0..=c {
+                let slot = 4 * cc + p + (3 - c);
+                debug_assert!(slot < 16 && takes[slot].is_none());
+                takes[slot] = Some(if p == c {
+                    Take { port: Dir::East, latch: Some(pre + cc as u8), fwd: None }
+                } else {
+                    Take { port: Dir::East, latch: None, fwd: Some(Dir::West) }
+                });
+            }
+        }
+        for s in 0..16usize {
+            let rr = (s / 4) as u8;
+            let cc = (s % 4) as u8;
+            let (a, ra) = if cc == 0 {
+                let fwd = if !last_col && plan.variant == MapVariant::Torus {
+                    Some(Dir::East)
+                } else {
+                    None
+                };
+                (Src::Port(Dir::West), Rider { latch: Some(A_REG + rr), fwd })
+            } else {
+                (Src::Reg(A_REG + rr), Rider::NONE)
+            };
+            body.push(PeInstr::MacP {
+                d: rr * 4 + cc,
+                a,
+                ra,
+                b: Src::Reg(cur + cc),
+                rb: Rider::NONE,
+                take: takes[s],
+            });
+        }
+    }
+
+    PeProgram {
+        prologue,
+        body,
+        trip: chunk_pairs as u32,
+        tile_epilogue: drain_epilogue(plan, c),
+        tiles: plan.tiles() as u32,
+        epilogue: vec![PeInstr::Halt],
+    }
+}
+
+/// Single-feed B-stream MOB (grid column `pe_cols`, sends west).
+fn mob_b_single(plan: &GemmPlan, r: usize) -> MobProgram {
+    let c_cols = plan.pe_cols;
+    let kp = plan.kp;
+    let panel = c_cols * kp;
+    let stream_words = panel as u32;
+    let dummy = (4 * c_cols) as u32;
+    let (n_it, n_jt) = (plan.n_it as u32, plan.n_jt as u32);
+    let mut ops = Vec::new();
+    match plan.strategy {
+        Strategy::WholeB => {
+            if r == 0 {
+                ops.push(MobOp::Dma {
+                    ext_base: plan.b_ext,
+                    l1_base: plan.b_l1,
+                    count: (plan.n_jt * panel) as u32,
+                    to_l1: true,
+                    ext_steps: [0, 0],
+                    l1_steps: [0, 0],
+                });
+            }
+            ops.push(MobOp::Barrier);
+            let load_pc = ops.len() as u16;
+            ops.push(MobOp::Load {
+                space: MemSpace::L1,
+                base: plan.b_l1,
+                stride: 1,
+                count: stream_words,
+                dir: DirMode::Fixed(Dir::West),
+                replicate: 1,
+                steps: [panel as i32, 0],
+            });
+            ops.push(MobOp::Loop { start: load_pc, extra: n_jt - 1 });
+            ops.push(MobOp::Loop { start: load_pc, extra: n_it - 1 });
+            ops.push(MobOp::load(MemSpace::L1, plan.b_l1, 1, dummy, Dir::West));
+        }
+        Strategy::PanelB => {
+            // Per jt: stage the panel, stream it n_it times, then — still
+            // before the end-of-panel barrier — deliver the *next* jt's
+            // first chunk straight from external memory, so the PEs'
+            // cross-tile prefetch can complete and drain (otherwise the
+            // last tile of each jt deadlocks against the barrier). The
+            // packed B region carries a slack copy of panel 0's first
+            // chunk at its end for the final wrap (written by
+            // `stage_operands`).
+            // One-time preamble: panel 0's first chunk from ext (the PE
+            // prologues consume it before any panel is staged).
+            ops.push(MobOp::load(MemSpace::Ext, plan.b_ext, 1, dummy, Dir::West));
+            let jt_start = ops.len() as u16;
+            if r == 0 {
+                ops.push(MobOp::Dma {
+                    ext_base: plan.b_ext,
+                    l1_base: plan.b_l1,
+                    count: panel as u32,
+                    to_l1: true,
+                    ext_steps: [panel as i32, 0],
+                    l1_steps: [0, 0],
+                });
+            }
+            ops.push(MobOp::Barrier);
+            // First tile of the jt: chunk 0 was already delivered (by the
+            // previous jt's ext-prefetch, or the preamble for jt 0).
+            ops.push(MobOp::Load {
+                space: MemSpace::L1,
+                base: plan.b_l1 + dummy,
+                stride: 1,
+                count: stream_words - dummy,
+                dir: DirMode::Fixed(Dir::West),
+                replicate: 1,
+                steps: [0, 0],
+            });
+            if n_it > 1 {
+                let load_pc = ops.len() as u16;
+                ops.push(MobOp::Load {
+                    space: MemSpace::L1,
+                    base: plan.b_l1,
+                    stride: 1,
+                    count: stream_words,
+                    dir: DirMode::Fixed(Dir::West),
+                    replicate: 1,
+                    steps: [0, 0],
+                });
+                if n_it > 2 {
+                    ops.push(MobOp::Loop { start: load_pc, extra: n_it - 2 });
+                }
+            }
+            // Next panel's first chunk, from ext (valid before the
+            // re-stage; the slack copy handles the last jt's wrap).
+            ops.push(MobOp::Load {
+                space: MemSpace::Ext,
+                base: plan.b_ext + panel as u32,
+                stride: 1,
+                count: dummy,
+                dir: DirMode::Fixed(Dir::West),
+                replicate: 1,
+                steps: [panel as i32, 0],
+            });
+            ops.push(MobOp::Barrier);
+            ops.push(MobOp::Loop { start: jt_start, extra: n_jt - 1 });
+        }
+        Strategy::NaiveExt => {
+            ops.push(MobOp::Load {
+                space: MemSpace::Ext,
+                base: plan.b_ext,
+                stride: 1,
+                count: stream_words,
+                dir: DirMode::Fixed(Dir::West),
+                replicate: 1,
+                steps: [panel as i32, 0],
+            });
+            ops.push(MobOp::Loop { start: 0, extra: n_jt - 1 });
+            ops.push(MobOp::Loop { start: 0, extra: n_it - 1 });
+            ops.push(MobOp::load(MemSpace::Ext, plan.b_ext, 1, dummy, Dir::West));
+        }
+    }
+    ops.push(MobOp::Halt);
+    MobProgram { ops }
+}
+
+/// Single-feed A-stream + C-store MOB (grid column `pe_cols + 1`).
+fn mob_a_single(plan: &GemmPlan, r: usize) -> MobProgram {
+    let kp = plan.kp as u32;
+    let rows = plan.rows;
+    let c_cols = plan.pe_cols;
+    let (n_it, n_jt) = (plan.n_it as u32, plan.n_jt as u32);
+    let crw = plan.c_row_words() as i32;
+    let a_slice_ext = plan.a_ext + (r as u32) * kp;
+    let a_slice_l1 = plan.a_slice_l1(r);
+
+    // Switched NoC: the MOB unicasts each a-word to every PE column
+    // (replicate + rotate through the route-table slots).
+    let (a_dir, a_rep) = match plan.variant {
+        MapVariant::Switched => (DirMode::Rotate, c_cols as u8),
+        _ => (DirMode::Fixed(Dir::East), 1),
+    };
+    let a_load = |space: MemSpace, base: u32, steps: [i32; 2]| MobOp::Load {
+        space,
+        base,
+        stride: 1,
+        count: kp,
+        dir: a_dir,
+        replicate: a_rep,
+        steps,
+    };
+    let store_ops = |ops: &mut Vec<MobOp>, steps: [i32; 2]| match plan.output {
+        OutputMode::Quant { .. } => {
+            for c in 0..c_cols {
+                ops.push(MobOp::Store {
+                    space: MemSpace::Ext,
+                    base: plan.c_ext + (4 * r as u32) * crw as u32 + c as u32,
+                    stride: crw,
+                    count: 4,
+                    dir: Dir::East,
+                    steps,
+                });
+            }
+        }
+        OutputMode::Raw => {
+            for c in 0..c_cols {
+                for rr in 0..4 {
+                    ops.push(MobOp::Store {
+                        space: MemSpace::Ext,
+                        base: plan.c_ext
+                            + ((4 * r + rr) as u32) * crw as u32
+                            + (4 * c) as u32,
+                        stride: 1,
+                        count: 4,
+                        dir: Dir::East,
+                        steps,
+                    });
+                }
+            }
+        }
+    };
+
+    let mut ops = Vec::new();
+    match plan.strategy {
+        Strategy::WholeB => {
+            ops.push(MobOp::Barrier);
+            let it_start = ops.len() as u16;
+            ops.push(MobOp::Dma {
+                ext_base: a_slice_ext,
+                l1_base: a_slice_l1,
+                count: kp,
+                to_l1: true,
+                ext_steps: [(rows as u32 * kp) as i32, 0],
+                l1_steps: [0, 0],
+            });
+            ops.push(MobOp::Fence);
+            let jt_start = ops.len() as u16;
+            ops.push(a_load(MemSpace::L1, a_slice_l1, [0, 0]));
+            store_ops(&mut ops, [c_cols as i32, rows as i32 * crw * 4]);
+            ops.push(MobOp::Loop { start: jt_start, extra: n_jt - 1 });
+            ops.push(MobOp::Loop { start: it_start, extra: n_it - 1 });
+        }
+        Strategy::PanelB => {
+            ops.push(MobOp::Barrier);
+            let it_start = ops.len() as u16;
+            ops.push(MobOp::Dma {
+                ext_base: a_slice_ext,
+                l1_base: a_slice_l1,
+                count: kp,
+                to_l1: true,
+                ext_steps: [(rows as u32 * kp) as i32, 0],
+                l1_steps: [0, 0],
+            });
+            ops.push(MobOp::Fence);
+            ops.push(a_load(MemSpace::L1, a_slice_l1, [0, 0]));
+            store_ops(&mut ops, [rows as i32 * crw * 4, c_cols as i32]);
+            ops.push(MobOp::Loop { start: it_start, extra: n_it - 1 });
+            ops.push(MobOp::Barrier);
+            ops.push(MobOp::Loop { start: 0, extra: n_jt - 1 });
+        }
+        Strategy::NaiveExt => {
+            ops.push(a_load(MemSpace::Ext, a_slice_ext, [0, (rows as u32 * kp) as i32]));
+            store_ops(&mut ops, [c_cols as i32, rows as i32 * crw * 4]);
+            ops.push(MobOp::Loop { start: 0, extra: n_jt - 1 });
+            ops.push(MobOp::Loop { start: 0, extra: n_it - 1 });
+        }
+    }
+    ops.push(MobOp::Halt);
+    MobProgram { ops }
+}
+
+// ====================================================================
+// No-MOB ablation (TAB4)
+// ====================================================================
+
+/// PE program for the no-MOB ablation: inline L1 loads + direct stores.
+fn pe_program_peload(plan: &GemmPlan, r: usize, c: usize) -> Result<PeProgram> {
+    let OutputMode::Quant { shift } = plan.output else {
+        bail!("PeLoad ablation supports quantized output only");
+    };
+    let c_cols = plan.pe_cols;
+    let crw = plan.c_row_words() as i32;
+    let a_base = plan.a_slice_l1(r) as i64;
+    // Single-layout B panel: word (t, cc, col) at `t*4C + cc*C + col`.
+    let b_base = plan.b_l1 as i64 + c as i64;
+    let c_base = plan.c_ext as i64 + (4 * r) as i64 * crw as i64 + c as i64;
+    for (name, v) in [("a", a_base), ("b", b_base), ("c", c_base + 3 * crw as i64)] {
+        ensure!(v <= i16::MAX as i64, "PeLoad {name} base {v} exceeds immediate range");
+    }
+
+    let imm = |v: i64| Src::Imm(v as i16);
+    let set = |reg: u8, v: i64| PeInstr::Alu {
+        op: AluOp::AddI,
+        dst: Dst::Reg(reg),
+        a: imm(v),
+        ra: Rider::NONE,
+        b: Src::Imm(0),
+        rb: Rider::NONE,
+    };
+    let prologue = vec![set(ADDR_A, a_base), set(ADDR_B, b_base), set(ADDR_C, c_base)];
+
+    let mut body = Vec::with_capacity(24);
+    for rr in 0..4u8 {
+        body.push(PeInstr::LoadW {
+            dst: A_REG + rr,
+            space: MemSpace::L1,
+            addr_reg: ADDR_A,
+            post_inc: 1,
+        });
+    }
+    for cc in 0..4u8 {
+        body.push(PeInstr::LoadW {
+            dst: B_BANK0 + cc,
+            space: MemSpace::L1,
+            addr_reg: ADDR_B,
+            post_inc: c_cols as i16,
+        });
+    }
+    for s in 0..16usize {
+        let rr = (s / 4) as u8;
+        let cc = (s % 4) as u8;
+        body.push(PeInstr::MacP {
+            d: rr * 4 + cc,
+            a: Src::Reg(A_REG + rr),
+            ra: Rider::NONE,
+            b: Src::Reg(B_BANK0 + cc),
+            rb: Rider::NONE,
+            take: None,
+        });
+    }
+
+    let mut tile_epilogue = Vec::with_capacity(8);
+    for rr in 0..4u8 {
+        tile_epilogue.push(PeInstr::AccOutQ {
+            d: 4 * rr,
+            shift,
+            dst: Dst::Reg(TMP),
+            clear: true,
+        });
+        tile_epilogue.push(PeInstr::StoreW {
+            src: TMP,
+            space: MemSpace::Ext,
+            addr_reg: ADDR_C,
+            post_inc: crw as i16,
+        });
+    }
+
+    Ok(PeProgram {
+        prologue,
+        body,
+        trip: plan.chunks() as u32,
+        tile_epilogue,
+        tiles: 1,
+        epilogue: vec![PeInstr::Halt],
+    })
+}
+
+/// Route tables for the switched NoC: every statically-used link becomes
+/// a configured unicast route.
+fn build_routes(plan: &GemmPlan, topo: &Topology) -> RouteTable {
+    let mut rt = RouteTable::new(topo.nodes());
+    let c_cols = plan.pe_cols;
+    for r in 0..plan.rows {
+        let b_mob = topo.mob(r, 0);
+        let a_mob = topo.mob(r, 1);
+        rt.set(b_mob, Dir::West, topo.pe(r, c_cols - 1), Dir::East);
+        for (slot, c) in Dir::ALL.iter().zip(0..c_cols) {
+            rt.set(a_mob, *slot, topo.pe(r, c), Dir::West);
+        }
+        for c in 0..c_cols {
+            let dst = if c == 0 { (a_mob, Dir::East) } else { (topo.pe(r, c - 1), Dir::East) };
+            rt.set(topo.pe(r, c), Dir::West, dst.0, dst.1);
+        }
+    }
+    rt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+
+    fn plan(m: usize, k: usize, n: usize) -> GemmPlan {
+        GemmPlan::new(&ArchConfig::default(), m, k, n, OutputMode::Quant { shift: 6 }).unwrap()
+    }
+
+    #[test]
+    fn pe_programs_dedupe_by_column() {
+        let p = plan(64, 64, 64);
+        let (ctx, _) = build_context(&p).unwrap();
+        let mut uniq = std::collections::HashSet::new();
+        for prog in &ctx.pe_programs {
+            uniq.insert(format!("{prog:?}"));
+        }
+        assert_eq!(uniq.len(), 4, "rows share programs; one per column");
+    }
+
+    #[test]
+    fn dual_body_full_mac_coverage() {
+        let p = plan(16, 16, 16);
+        assert_eq!(p.feed, FeedKind::Dual);
+        let (ctx, _) = build_context(&p).unwrap();
+        for prog in &ctx.pe_programs {
+            assert_eq!(prog.body.len(), 32);
+            for half in prog.body.chunks(16) {
+                let mut seen = [false; 16];
+                for ins in half {
+                    if let PeInstr::MacP { d, .. } = ins {
+                        assert!(!seen[*d as usize]);
+                        seen[*d as usize] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s));
+            }
+        }
+    }
+
+    #[test]
+    fn dual_take_budget_per_column() {
+        let p = plan(16, 16, 16);
+        let (ctx, _) = build_context(&p).unwrap();
+        // Per chunk: PE3 absorbs 2 east words (own + relay), PE2 one,
+        // PE1 one (west), PE0 two (west own + relay). ×4 lanes ×2 chunks.
+        let takes = |c: usize| {
+            ctx.pe_programs[c]
+                .body
+                .iter()
+                .filter(|i| matches!(i, PeInstr::MacP { take: Some(_), .. }))
+                .count()
+        };
+        assert_eq!(takes(0), 16);
+        assert_eq!(takes(1), 8);
+        assert_eq!(takes(2), 8);
+        assert_eq!(takes(3), 16);
+    }
+
+    #[test]
+    fn single_feed_selected_for_panel_b() {
+        let p = plan(256, 128, 256);
+        assert_eq!(p.strategy, Strategy::PanelB);
+        assert_eq!(p.feed, FeedKind::Single);
+        build_context(&p).unwrap();
+    }
+
+    #[test]
+    fn barrier_counts_validated() {
+        for (m, k, n) in [(64, 64, 64), (256, 128, 256), (16, 16, 16)] {
+            build_context(&plan(m, k, n)).unwrap();
+        }
+    }
+
+    #[test]
+    fn switched_routes_cover_all_senders() {
+        let p = GemmPlan::for_variant(
+            &ArchConfig::default(),
+            32,
+            16,
+            32,
+            OutputMode::Quant { shift: 6 },
+            MapVariant::Switched,
+        )
+        .unwrap();
+        let (_, routes) = build_context(&p).unwrap();
+        let rt = routes.unwrap();
+        let topo = Topology::new(4, 4, 2);
+        for r in 0..4 {
+            assert!(rt.get(topo.mob(r, 0), Dir::West).is_some());
+            for d in Dir::ALL {
+                assert!(rt.get(topo.mob(r, 1), d).is_some(), "a-MOB slot {d}");
+            }
+            for c in 0..4 {
+                assert!(rt.get(topo.pe(r, c), Dir::West).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn peload_multi_tile_rejected() {
+        let p = GemmPlan::for_variant(
+            &ArchConfig::default(),
+            64,
+            16,
+            16,
+            OutputMode::Quant { shift: 6 },
+            MapVariant::PeLoad,
+        )
+        .unwrap();
+        assert!(build_context(&p).is_err());
+    }
+
+    #[test]
+    fn slice_partitions_exactly() {
+        for total in [16usize, 17, 100, 3] {
+            for parts in [1usize, 3, 4] {
+                let mut covered = 0u32;
+                for i in 0..parts {
+                    let (off, cnt) = slice(total, parts, i);
+                    assert_eq!(off, covered);
+                    covered += cnt;
+                }
+                assert_eq!(covered as usize, total);
+            }
+        }
+    }
+}

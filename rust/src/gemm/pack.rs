@@ -1,0 +1,268 @@
+//! Host-side operand packing into the CGRA stream layouts.
+//!
+//! Real deployments pack weights offline (as cuBLAS/XNNPACK do); here the
+//! host CPU of Fig. 1 does it for both operands. The layouts are chosen
+//! so every MOB stream is a *unit-stride* L1 read:
+//!
+//! **A layout** (per i-tile panel of `4·rows × kp`): row-group-major;
+//! within row-group `r` (4 matrix rows), word `(t, rr)` at offset
+//! `t*4 + rr` is packed `A[i0+4r+rr][4t..4t+4]`. The a-MOB of grid row
+//! `r` streams its row-group sequentially.
+//!
+//! **B layout** (per j-tile panel of `4·pe_cols × kp`, transposed):
+//! word `(t, cc, c)` at offset `t*4*C + cc*C + c` is packed
+//! `B[4t..4t+4][j0+4c+cc]` — exactly the emission order of the b-stream
+//! (k-chunk major, then lane `cc`, then PE column *ascending*: the
+//! west-most PE's word leads, so at every hop the pass-through forwards
+//! precede the PE's own latch — the ordering that makes the elastic
+//! schedule deadlock- and bubble-free, see `mapper`). One sequential
+//! read per row MOB.
+//!
+//! **C layout**: natural row-major over the padded `mp × np` output
+//! (int8-packed words in quant mode, one word per element in raw mode) —
+//! C leaves the array in standard layout, no host unpacking beyond
+//! removing padding.
+
+use super::plan::GemmPlan;
+use crate::util::mat::MatI8;
+use crate::util::quant::pack4;
+
+/// Element of padded A at (i, k), zero outside bounds.
+#[inline]
+fn a_at(a: &MatI8, i: usize, k: usize) -> i8 {
+    if i < a.rows && k < a.cols {
+        a.at(i, k)
+    } else {
+        0
+    }
+}
+
+/// Element of padded B at (k, j), zero outside bounds.
+#[inline]
+fn b_at(b: &MatI8, k: usize, j: usize) -> i8 {
+    if k < b.rows && j < b.cols {
+        b.at(k, j)
+    } else {
+        0
+    }
+}
+
+/// Pack A (M×K) into the per-i-tile stream layout. Output length:
+/// `n_it * rows * kp` words.
+pub fn pack_a(a: &MatI8, plan: &GemmPlan) -> Vec<u32> {
+    let (rows, kp) = (plan.rows, plan.kp);
+    let chunks = plan.chunks();
+    let mut out = Vec::with_capacity(plan.n_it * rows * kp);
+    for it in 0..plan.n_it {
+        let i0 = it * 4 * rows;
+        for r in 0..rows {
+            for t in 0..chunks {
+                for rr in 0..4 {
+                    let i = i0 + 4 * r + rr;
+                    out.push(pack4([
+                        a_at(a, i, 4 * t),
+                        a_at(a, i, 4 * t + 1),
+                        a_at(a, i, 4 * t + 2),
+                        a_at(a, i, 4 * t + 3),
+                    ]));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack B (K×N) into the per-j-tile transposed stream layout. Output
+/// length: `n_jt * pe_cols * kp + 4 * pe_cols` words (one chunk of slack
+/// — a copy of panel 0's first chunk — appended for the PanelB
+/// cross-panel prefetch wrap).
+pub fn pack_b(b: &MatI8, plan: &GemmPlan) -> Vec<u32> {
+    let c_cols = plan.pe_cols;
+    let chunks = plan.chunks();
+    let mut out = Vec::with_capacity(plan.n_jt * c_cols * plan.kp + 4 * c_cols);
+    for jt in 0..plan.n_jt {
+        let j0 = jt * 4 * c_cols;
+        for t in 0..chunks {
+            for cc in 0..4 {
+                for c in 0..c_cols {
+                    let j = j0 + 4 * c + cc;
+                    out.push(pack4([
+                        b_at(b, 4 * t, j),
+                        b_at(b, 4 * t + 1, j),
+                        b_at(b, 4 * t + 2, j),
+                        b_at(b, 4 * t + 3, j),
+                    ]));
+                }
+            }
+        }
+    }
+    let slack: Vec<u32> = out[..(4 * c_cols).min(out.len())].to_vec();
+    out.extend_from_slice(&slack);
+    out
+}
+
+/// Pack one half of B for the dual feed. `east = true` packs the lanes
+/// of the eastern PE columns in consumption order `[own-of-outermost,
+/// relay…]` — per (j-tile, chunk, lane): columns `C-1, C-2, …, C/2` for
+/// east, `0, 1, …, C/2-1` for west. A copy of panel 0's first chunk is
+/// appended as slack so cross-tile prefetch overruns at i-tile boundaries
+/// read valid data (see `plan::DUAL_SLACK_WORDS`).
+pub fn pack_b_half(b: &MatI8, plan: &GemmPlan, east: bool) -> Vec<u32> {
+    let c_cols = plan.pe_cols;
+    let half = (c_cols / 2).max(1);
+    let chunks = plan.chunks();
+    let cols: Vec<usize> = if east {
+        // East-most first (its own word leads each group).
+        (c_cols - half..c_cols).rev().collect()
+    } else {
+        (0..half).collect()
+    };
+    let mut out = Vec::with_capacity(plan.n_jt * half * plan.kp + crate::gemm::plan::DUAL_SLACK_WORDS);
+    for jt in 0..plan.n_jt {
+        let j0 = jt * 4 * c_cols;
+        for t in 0..chunks {
+            for cc in 0..4 {
+                for &c in &cols {
+                    let j = j0 + 4 * c + cc;
+                    out.push(pack4([
+                        b_at(b, 4 * t, j),
+                        b_at(b, 4 * t + 1, j),
+                        b_at(b, 4 * t + 2, j),
+                        b_at(b, 4 * t + 3, j),
+                    ]));
+                }
+            }
+        }
+    }
+    // Slack: copy of panel 0's first chunk (the i-tile-boundary prefetch
+    // target).
+    let slack: Vec<u32> = out[..crate::gemm::plan::DUAL_SLACK_WORDS.min(out.len())].to_vec();
+    out.extend_from_slice(&slack);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::gemm::plan::OutputMode;
+    use crate::util::quant::unpack4;
+
+    fn plan(m: usize, k: usize, n: usize) -> GemmPlan {
+        GemmPlan::new(&ArchConfig::default(), m, k, n, OutputMode::Quant { shift: 6 }).unwrap()
+    }
+
+    #[test]
+    fn pack_a_sizes() {
+        let p = plan(16, 16, 16);
+        let a = MatI8::zeros(16, 16);
+        assert_eq!(pack_a(&a, &p).len(), p.n_it * p.rows * p.kp);
+    }
+
+    #[test]
+    fn pack_a_layout_spot_checks() {
+        let p = plan(16, 16, 16);
+        let mut a = MatI8::zeros(16, 16);
+        for i in 0..16 {
+            for k in 0..16 {
+                *a.at_mut(i, k) = (i * 16 + k) as i8;
+            }
+        }
+        let w = pack_a(&a, &p);
+        // Row-group 0, chunk 0, rr 0 = A[0][0..4].
+        assert_eq!(unpack4(w[0]), [0, 1, 2, 3]);
+        // Row-group 0, chunk 0, rr 2 = A[2][0..4].
+        assert_eq!(unpack4(w[2]), [32, 33, 34, 35]);
+        // Row-group 1 (rows 4..8) starts at offset kp = 16 words.
+        assert_eq!(unpack4(w[16]), [64, 65, 66, 67]);
+        // Row-group 0, chunk 1, rr 0 = A[0][4..8].
+        assert_eq!(unpack4(w[4]), [4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn pack_a_pads_with_zeros() {
+        let p = plan(3, 5, 16); // mp=16, kp=8
+        let mut a = MatI8::zeros(3, 5);
+        a.data.iter_mut().for_each(|v| *v = 1);
+        let w = pack_a(&a, &p);
+        // Row 3 (padding) chunk 0 rr 3 must be zero.
+        assert_eq!(unpack4(w[3]), [0, 0, 0, 0]);
+        // Row 0 chunk 1 = A[0][4..8]: only k=4 in bounds.
+        assert_eq!(unpack4(w[4]), [1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn pack_b_layout_emission_order() {
+        let p = plan(16, 8, 16);
+        let mut b = MatI8::zeros(8, 16);
+        for k in 0..8 {
+            for j in 0..16 {
+                *b.at_mut(k, j) = (k * 16 + j) as i8;
+            }
+        }
+        let w = pack_b(&b, &p);
+        // First word: chunk 0, cc 0, c = 0 (west-most) → column j = 0,
+        // packed B[0..4][0].
+        assert_eq!(unpack4(w[0]), [0, 16, 32, 48]);
+        // Fourth word: chunk 0, cc 0, c = 3 → column 12.
+        assert_eq!(unpack4(w[3]), [12, 28, 44, 60]);
+        // Fifth word: chunk 0, cc 1, c = 0 → column 1.
+        assert_eq!(unpack4(w[4]), [1, 17, 33, 49]);
+        // Chunk 1 starts at 16 words: cc 0, c 0 → B[4..8][0].
+        assert_eq!(unpack4(w[16]), [64, 80, 96, 112]);
+    }
+
+    #[test]
+    fn pack_b_sizes_multi_tile() {
+        let p = plan(16, 16, 64);
+        let b = MatI8::zeros(16, 64);
+        // Panel words plus one chunk of wrap slack.
+        assert_eq!(pack_b(&b, &p).len(), p.n_jt * p.pe_cols * p.kp + 4 * p.pe_cols);
+    }
+
+    #[test]
+    fn pack_b_half_covers_all_columns() {
+        let p = plan(16, 8, 16);
+        let mut b = MatI8::zeros(8, 16);
+        for k in 0..8 {
+            for j in 0..16 {
+                *b.at_mut(k, j) = (k * 16 + j) as i8;
+            }
+        }
+        let east = pack_b_half(&b, &p, true);
+        let west = pack_b_half(&b, &p, false);
+        use crate::gemm::plan::DUAL_SLACK_WORDS;
+        assert_eq!(east.len(), 2 * p.kp + DUAL_SLACK_WORDS);
+        assert_eq!(west.len(), 2 * p.kp + DUAL_SLACK_WORDS);
+        // East order per group: column 3 (own of PE3) then column 2.
+        assert_eq!(unpack4(east[0]), [12, 28, 44, 60]); // B[0..4][12]
+        assert_eq!(unpack4(east[1]), [8, 24, 40, 56]); // B[0..4][8]
+        // West order: column 0 then column 1.
+        assert_eq!(unpack4(west[0]), [0, 16, 32, 48]);
+        assert_eq!(unpack4(west[1]), [4, 20, 36, 52]);
+        // Slack is a copy of the first chunk's 8 words.
+        assert_eq!(&east[east.len() - DUAL_SLACK_WORDS..], &east[..DUAL_SLACK_WORDS]);
+    }
+
+    #[test]
+    fn prop_pack_preserves_all_elements() {
+        use crate::util::prop::{ensure, prop_check, PropConfig};
+        prop_check("pack_a/pack_b are permutations with padding", PropConfig { cases: 16, base_seed: 9 }, |rng| {
+            let m = rng.range(1, 33);
+            let k = rng.range(1, 33);
+            let n = rng.range(1, 33);
+            let p = plan(m, k, n);
+            let mut a = MatI8::zeros(m, k);
+            rng.fill_i8(&mut a.data, 127);
+            let aw = pack_a(&a, &p);
+            // Sum of absolute values must be preserved (padding adds 0s).
+            let sum_in: i64 = a.data.iter().map(|&v| (v as i64).abs()).sum();
+            let sum_out: i64 = aw
+                .iter()
+                .flat_map(|&w| unpack4(w))
+                .map(|v| (v as i64).abs())
+                .sum();
+            ensure(sum_in == sum_out, || format!("m={m} k={k}: {sum_in} != {sum_out}"))
+        });
+    }
+}

@@ -1,0 +1,469 @@
+//! GEMM tiling plan: geometry, padding, L1 allocation, loop structure.
+//!
+//! A plan fixes everything the packer and mapper need:
+//!
+//! - Padded dims `mp × kp × np`: `mp` to a multiple of the tile height
+//!   (4·rows), `np` to the tile width (4·pe_cols), `kp` to a multiple of
+//!   8 (the PE body is a two-chunk unrolled loop over packed-4 k-chunks).
+//! - Loop strategy (§IV-A1 "increased data reuse"):
+//!   [`Strategy::WholeB`] keeps all of B^T resident in L1 (B crosses the
+//!   external boundary once, A once); [`Strategy::PanelB`] stages one
+//!   j-tile panel of B at a time (B once, A once per j-tile);
+//!   [`Strategy::NaiveExt`] is the TAB2 baseline with no staging at all.
+//! - The *feed* ([`FeedKind`]): the paper-geometry torus uses the
+//!   **dual-feed** mapping — the B panel split into east/west halves,
+//!   each streamed from its adjacent MOB column, with the A stream
+//!   interleaved on the east wire. This keeps every relay chain pointing
+//!   the same way as the data it depends on and sustains one MAC per PE
+//!   per cycle (the single-feed relay couples opposed skews and tops out
+//!   at ≈0.45 of peak — EXPERIMENTS.md §Perf). PanelB re-stages panels
+//!   in place, which breaks dual-feed's cross-tile prefetch continuity,
+//!   so it (and the switched/no-MOB variants) use the single feed.
+
+use crate::config::ArchConfig;
+use anyhow::{bail, Result};
+
+/// Which hardware variant a plan targets (determines feed and layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapVariant {
+    /// The paper's switchless mesh torus.
+    Torus,
+    /// Switched mesh-NoC baseline (TAB3).
+    Switched,
+    /// No-MOB ablation: PEs load operands themselves (TAB4).
+    PeLoad,
+}
+
+/// Output handling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputMode {
+    /// Requantize accumulators to int8 with a right-shift (the standard
+    /// quantized-inference path; multi-tile capable).
+    Quant { shift: u8 },
+    /// Emit raw i32 accumulators (single tile-block only — used for
+    /// attention score matrices that go to the host for softmax).
+    Raw,
+}
+
+/// Data-reuse strategy (TAB2's comparison axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// All of packed B^T resident in L1 for the whole GEMM.
+    WholeB,
+    /// One j-tile panel of B^T staged per outer iteration.
+    PanelB,
+    /// No staging: streams read external memory directly (baseline).
+    NaiveExt,
+}
+
+/// How B reaches the PE rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedKind {
+    /// B split across both MOB columns; A interleaved on the east wire.
+    Dual,
+    /// Single west-bound B stream with in-row relay (baseline mapping,
+    /// also used by the switched and no-MOB variants).
+    Single,
+}
+
+/// Words of slack after each dual-feed B half-region, pre-filled with a
+/// copy of panel 0's first chunk so cross-tile prefetch overruns read
+/// valid data at i-tile boundaries.
+pub const DUAL_SLACK_WORDS: usize = 8;
+
+/// A complete tiling plan. All addresses are 32-bit word addresses.
+#[derive(Debug, Clone)]
+pub struct GemmPlan {
+    // Logical dims.
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    // Padded dims.
+    pub mp: usize,
+    pub kp: usize,
+    pub np: usize,
+    // Array geometry.
+    pub rows: usize,
+    pub pe_cols: usize,
+    // Tile counts.
+    pub n_it: usize,
+    pub n_jt: usize,
+    pub output: OutputMode,
+    pub strategy: Strategy,
+    pub variant: MapVariant,
+    pub feed: FeedKind,
+    /// Host pre-stages all panels in L1 and the kernel skips DMA/barriers
+    /// (TAB4 fairness: both the MOB-streaming and PE-load arms start from
+    /// staged data). Requires a single i-tile and `WholeB` residency.
+    pub prestaged: bool,
+    // External layout (word addresses).
+    pub a_ext: u32,
+    /// Single-feed packed B (also used by PeLoad).
+    pub b_ext: u32,
+    /// Dual-feed east-half B region (lanes for the eastern PE columns).
+    pub b_east_ext: u32,
+    /// Dual-feed west-half B region.
+    pub b_west_ext: u32,
+    pub c_ext: u32,
+    // L1 layout (word addresses).
+    pub a_l1: u32,
+    pub b_l1: u32,
+    pub b_east_l1: u32,
+    pub b_west_l1: u32,
+}
+
+impl GemmPlan {
+    /// Plan for the paper's torus with an auto-chosen reuse strategy.
+    pub fn new(cfg: &ArchConfig, m: usize, k: usize, n: usize, output: OutputMode) -> Result<Self> {
+        Self::build(cfg, m, k, n, output, None, MapVariant::Torus)
+    }
+
+    /// Plan for an explicit hardware variant.
+    pub fn for_variant(
+        cfg: &ArchConfig,
+        m: usize,
+        k: usize,
+        n: usize,
+        output: OutputMode,
+        variant: MapVariant,
+    ) -> Result<Self> {
+        Self::build(cfg, m, k, n, output, None, variant)
+    }
+
+    /// Plan with a forced strategy (benches / TAB2 baseline).
+    pub fn new_with_strategy(
+        cfg: &ArchConfig,
+        m: usize,
+        k: usize,
+        n: usize,
+        output: OutputMode,
+        strategy: Strategy,
+    ) -> Result<Self> {
+        Self::build(cfg, m, k, n, output, Some(strategy), MapVariant::Torus)
+    }
+
+    fn build(
+        cfg: &ArchConfig,
+        m: usize,
+        k: usize,
+        n: usize,
+        output: OutputMode,
+        forced: Option<Strategy>,
+        variant: MapVariant,
+    ) -> Result<Self> {
+        if m == 0 || k == 0 || n == 0 {
+            bail!("GEMM dims must be positive");
+        }
+        let rows = cfg.topo.rows;
+        let pe_cols = cfg.topo.pe_cols;
+        if pe_cols > 4 {
+            bail!(
+                "stream mapping supports up to 4 PE columns: the per-row entry \
+                 links saturate (wider arrays need more MOB columns — the FIG5 finding)"
+            );
+        }
+        let mt = 4 * rows;
+        let nt = 4 * pe_cols;
+        let mp = m.div_ceil(mt) * mt;
+        let np = n.div_ceil(nt) * nt;
+        let kp = k.div_ceil(8) * 8;
+        let n_it = mp / mt;
+        let n_jt = np / nt;
+        if matches!(output, OutputMode::Raw) && (n_it != 1 || n_jt != 1) {
+            bail!(
+                "Raw output supports a single tile-block only \
+                 (m ≤ {mt}, n ≤ {nt}); requested {m}×{n}"
+            );
+        }
+
+        // L1 budget check / strategy choice. The +1 staggers each
+        // row-group's A slice to a different bank (slices at multiples of
+        // kp would all start on bank 0 and the four a-streams would
+        // collide every cycle).
+        let a_panel = rows * (kp + 1);
+        let b_panel = pe_cols * kp; // per j-tile (both halves combined)
+        let b_whole = n_jt * b_panel;
+        let l1 = cfg.mem.l1_words;
+        let dual_slack = 2 * DUAL_SLACK_WORDS; // one per half-region
+        let strategy = match forced {
+            Some(s) => s,
+            None => {
+                if a_panel + b_whole + dual_slack <= l1 {
+                    Strategy::WholeB
+                } else if a_panel + b_panel <= l1 {
+                    Strategy::PanelB
+                } else {
+                    bail!(
+                        "K = {k} too large: A panel ({a_panel} w) + B panel ({b_panel} w) \
+                         exceed L1 ({l1} w)"
+                    )
+                }
+            }
+        };
+        if matches!(strategy, Strategy::WholeB) && a_panel + b_whole + dual_slack > l1 {
+            bail!("WholeB strategy does not fit L1 ({} w needed, {l1} available)", a_panel + b_whole);
+        }
+        if matches!(strategy, Strategy::PanelB) && a_panel + b_panel > l1 {
+            bail!("PanelB strategy does not fit L1");
+        }
+
+        // Feed choice: dual needs the paper geometry (4 PE columns, even
+        // split) and cross-tile stream continuity (not PanelB's in-place
+        // re-staging), and only the torus mapping implements it.
+        let feed = if variant == MapVariant::Torus
+            && pe_cols == 4
+            && !matches!(strategy, Strategy::PanelB)
+        {
+            FeedKind::Dual
+        } else {
+            FeedKind::Single
+        };
+
+        // External layout: A panels | B (single layout) | B east | B west | C.
+        // Only the regions the feed uses get written, but reserving both
+        // keeps addresses independent of late feed changes.
+        let a_words = n_it * rows * kp;
+        // Single-layout B carries one chunk of slack for the PanelB wrap.
+        let b_words = n_jt * pe_cols * kp + 4 * pe_cols;
+        let half_words = n_jt * (pe_cols / 2).max(1) * kp + DUAL_SLACK_WORDS;
+        let a_ext = 0u32;
+        let b_ext = a_words as u32;
+        let b_east_ext = b_ext + b_words as u32;
+        let b_west_ext = b_east_ext + half_words as u32;
+        let c_ext = b_west_ext + half_words as u32;
+
+        // L1 layout.
+        let a_l1 = 0u32;
+        let b_l1 = a_panel as u32;
+        let (b_east_l1, b_west_l1) = match strategy {
+            Strategy::WholeB => {
+                let east = a_panel as u32;
+                let west = east + (n_jt * (pe_cols / 2).max(1) * kp + DUAL_SLACK_WORDS) as u32;
+                (east, west)
+            }
+            _ => {
+                // PanelB never uses dual; NaiveExt streams straight from
+                // external memory, so the L1 halves are unused.
+                (b_l1, b_l1)
+            }
+        };
+
+        Ok(Self {
+            m,
+            k,
+            n,
+            mp,
+            kp,
+            np,
+            rows,
+            pe_cols,
+            n_it,
+            n_jt,
+            output,
+            strategy,
+            variant,
+            feed,
+            a_ext,
+            b_ext,
+            b_east_ext,
+            b_west_ext,
+            c_ext,
+            a_l1,
+            b_l1,
+            b_east_l1,
+            b_west_l1,
+            prestaged: false,
+        })
+    }
+
+    /// Switch to host-prestaged mode (see the `prestaged` field).
+    pub fn with_prestaged(mut self) -> Result<Self> {
+        if self.n_it != 1 || !matches!(self.strategy, Strategy::WholeB) {
+            bail!("prestaged mode requires a single i-tile and WholeB residency");
+        }
+        self.prestaged = true;
+        Ok(self)
+    }
+
+    /// Packed-4 k-chunks.
+    pub fn chunks(&self) -> usize {
+        self.kp / 4
+    }
+
+    /// L1 stride between row-group A slices (bank-staggered, see
+    /// [`GemmPlan`] construction).
+    pub fn a_slice_stride(&self) -> u32 {
+        self.kp as u32 + 1
+    }
+
+    /// L1 address of row-group `r`'s A slice.
+    pub fn a_slice_l1(&self, r: usize) -> u32 {
+        self.a_l1 + r as u32 * self.a_slice_stride()
+    }
+
+    /// Words per j-tile panel *half* (dual feed).
+    pub fn half_panel_words(&self) -> usize {
+        (self.pe_cols / 2).max(1) * self.kp
+    }
+
+    /// Total tiles.
+    pub fn tiles(&self) -> usize {
+        self.n_it * self.n_jt
+    }
+
+    /// Words of C in external memory (padded).
+    pub fn c_ext_words(&self) -> usize {
+        match self.output {
+            OutputMode::Quant { .. } => self.mp * self.np / 4,
+            OutputMode::Raw => self.mp * self.np,
+        }
+    }
+
+    /// C row stride in words.
+    pub fn c_row_words(&self) -> usize {
+        match self.output {
+            OutputMode::Quant { .. } => self.np / 4,
+            OutputMode::Raw => self.np,
+        }
+    }
+
+    /// Useful MAC operations (unpadded).
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+
+    /// Ideal steady-state cycles: one packed MAC per PE per cycle over
+    /// the padded volume.
+    pub fn ideal_cycles(&self) -> u64 {
+        (self.mp * self.kp * self.np) as u64 / (4 * self.rows * self.pe_cols) as u64
+    }
+
+    /// Simulation cycle budget (generous multiple of ideal + fixed
+    /// overhead for fills, drains and DMA).
+    pub fn max_cycles(&self) -> u64 {
+        40 * self.ideal_cycles() + 2_000_000
+    }
+
+    /// Predicted external-memory traffic in words (the TAB2 analytical
+    /// line printed next to the simulator's measured counters).
+    pub fn predicted_ext_words(&self) -> u64 {
+        let a = (self.rows * self.kp * self.n_it) as u64;
+        let b = (self.pe_cols * self.kp * self.n_jt) as u64;
+        let c = self.c_ext_words() as u64;
+        match self.strategy {
+            Strategy::WholeB => a + b + c,
+            Strategy::PanelB => a * self.n_jt as u64 + b + c,
+            // Without staging there is no multicast reuse: every row MOB
+            // re-fetches its B stream from external memory.
+            Strategy::NaiveExt => {
+                a * self.n_jt as u64 + b * (self.n_it * self.rows) as u64 + c
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn padding_to_tile_multiples() {
+        let p = GemmPlan::new(&cfg(), 10, 12, 22, OutputMode::Quant { shift: 6 }).unwrap();
+        assert_eq!(p.mp, 16);
+        assert_eq!(p.kp, 16);
+        assert_eq!(p.np, 32);
+        assert_eq!(p.n_it, 1);
+        assert_eq!(p.n_jt, 2);
+    }
+
+    #[test]
+    fn small_problem_chooses_whole_b_dual() {
+        let p = GemmPlan::new(&cfg(), 64, 64, 64, OutputMode::Quant { shift: 6 }).unwrap();
+        assert_eq!(p.strategy, Strategy::WholeB);
+        assert_eq!(p.feed, FeedKind::Dual);
+    }
+
+    #[test]
+    fn large_problem_falls_back_to_panel_b_single() {
+        let p = GemmPlan::new(&cfg(), 256, 256, 256, OutputMode::Quant { shift: 6 }).unwrap();
+        assert_eq!(p.strategy, Strategy::PanelB);
+        assert_eq!(p.feed, FeedKind::Single);
+    }
+
+    #[test]
+    fn switched_uses_single_feed() {
+        let p = GemmPlan::for_variant(&cfg(), 32, 32, 32, OutputMode::Quant { shift: 6 }, MapVariant::Switched)
+            .unwrap();
+        assert_eq!(p.feed, FeedKind::Single);
+    }
+
+    #[test]
+    fn naive_keeps_dual_feed() {
+        let p = GemmPlan::new_with_strategy(
+            &cfg(),
+            64,
+            32,
+            64,
+            OutputMode::Quant { shift: 6 },
+            Strategy::NaiveExt,
+        )
+        .unwrap();
+        assert_eq!(p.feed, FeedKind::Dual);
+    }
+
+    #[test]
+    fn oversized_k_rejected() {
+        let err = GemmPlan::new(&cfg(), 16, 8192, 16, OutputMode::Quant { shift: 6 }).unwrap_err();
+        assert!(err.to_string().contains("too large"));
+    }
+
+    #[test]
+    fn raw_multi_tile_rejected() {
+        assert!(GemmPlan::new(&cfg(), 32, 16, 16, OutputMode::Raw).is_err());
+        assert!(GemmPlan::new(&cfg(), 16, 16, 16, OutputMode::Raw).is_ok());
+    }
+
+    #[test]
+    fn ext_layout_is_disjoint_and_ordered() {
+        let p = GemmPlan::new(&cfg(), 48, 32, 64, OutputMode::Quant { shift: 6 }).unwrap();
+        assert!(p.a_ext < p.b_ext);
+        assert!(p.b_ext < p.b_east_ext);
+        assert!(p.b_east_ext < p.b_west_ext);
+        assert!(p.b_west_ext < p.c_ext);
+        let half = p.n_jt * p.half_panel_words() + DUAL_SLACK_WORDS;
+        assert_eq!((p.b_west_ext - p.b_east_ext) as usize, half);
+    }
+
+    #[test]
+    fn predicted_traffic_ordering() {
+        let mk = |s| {
+            GemmPlan::new_with_strategy(&cfg(), 128, 64, 128, OutputMode::Quant { shift: 6 }, s)
+                .unwrap()
+                .predicted_ext_words()
+        };
+        let whole = mk(Strategy::WholeB);
+        let panel = mk(Strategy::PanelB);
+        let naive = mk(Strategy::NaiveExt);
+        assert!(whole <= panel);
+        assert!(panel < naive);
+    }
+
+    #[test]
+    fn ideal_cycles_matches_hand_calc() {
+        // 16×16×16 on 16 PEs × 4 lanes: 4096 MACs / 64 per cycle = 64.
+        let p = GemmPlan::new(&cfg(), 16, 16, 16, OutputMode::Quant { shift: 6 }).unwrap();
+        assert_eq!(p.ideal_cycles(), 64);
+    }
+
+    #[test]
+    fn narrow_array_uses_single_feed() {
+        let mut c = cfg();
+        c.topo.pe_cols = 2;
+        let p = GemmPlan::new(&c, 16, 16, 16, OutputMode::Quant { shift: 6 }).unwrap();
+        assert_eq!(p.feed, FeedKind::Single);
+    }
+}

@@ -1,0 +1,20 @@
+//! Interconnect models.
+//!
+//! [`topology`] defines the combined PE+MOB grid geometry (Fig. 2) and
+//! torus neighbour math. [`fabric`] implements the two word-transport
+//! models compared in TAB3:
+//!
+//! - **Switchless mesh torus** (the paper's contribution, §III-C): output
+//!   latches wired directly to neighbour input latches; a hop costs one
+//!   cycle and link energy only. Multi-hop routes exist only as compiled
+//!   pass-through *riders* in PE instructions — there is no router.
+//! - **Switched mesh NoC** (the conventional baseline the paper argues
+//!   against): every word is a routed unicast packet traversing
+//!   `hop_latency`-cycle routers with XY routing; broadcast words must be
+//!   replicated per consumer; each router hop costs router + link energy.
+
+pub mod fabric;
+pub mod topology;
+
+pub use fabric::{Fabric, FabricKind, RouteTable};
+pub use topology::{Coord, NodeKind, Topology};

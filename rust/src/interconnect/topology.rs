@@ -1,0 +1,301 @@
+//! Grid geometry: the heterogeneous array of Fig. 2.
+//!
+//! The combined grid has `rows` rows and `pe_cols + mob_cols` columns;
+//! columns `[0, pe_cols)` hold PEs, columns `[pe_cols, pe_cols+mob_cols)`
+//! hold MOBs. The torus wraps both dimensions, so MOB column
+//! `pe_cols + mob_cols - 1` is the *west* neighbour (via wraparound) of PE
+//! column 0 — this adjacency is what lets the block-wise GEMM dataflow be
+//! entirely nearest-neighbour (DESIGN.md §2).
+
+use crate::isa::Dir;
+
+/// Node coordinate in the combined grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub r: usize,
+    pub c: usize,
+}
+
+impl Coord {
+    pub fn new(r: usize, c: usize) -> Self {
+        Self { r, c }
+    }
+}
+
+/// What occupies a grid cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Processing element (arithmetic).
+    Pe,
+    /// Memory operation block (LOAD/STORE).
+    Mob,
+}
+
+/// Grid geometry + torus neighbour math. Default is the paper's 4×4 PE
+/// array with a 4×2 MOB array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub rows: usize,
+    pub pe_cols: usize,
+    pub mob_cols: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Self { rows: 4, pe_cols: 4, mob_cols: 2 }
+    }
+}
+
+impl Topology {
+    pub fn new(rows: usize, pe_cols: usize, mob_cols: usize) -> Self {
+        assert!(rows > 0 && pe_cols > 0 && mob_cols > 0);
+        Self { rows, pe_cols, mob_cols }
+    }
+
+    /// Total columns in the combined grid.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.pe_cols + self.mob_cols
+    }
+
+    /// Total nodes.
+    #[inline]
+    pub fn nodes(&self) -> usize {
+        self.rows * self.cols()
+    }
+
+    /// Number of PEs.
+    #[inline]
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.pe_cols
+    }
+
+    /// Number of MOBs.
+    #[inline]
+    pub fn num_mobs(&self) -> usize {
+        self.rows * self.mob_cols
+    }
+
+    /// Flat node index of a coordinate (row-major over the combined grid).
+    #[inline]
+    pub fn node_id(&self, c: Coord) -> usize {
+        debug_assert!(c.r < self.rows && c.c < self.cols());
+        c.r * self.cols() + c.c
+    }
+
+    /// Coordinate of a flat node index.
+    #[inline]
+    pub fn coord(&self, id: usize) -> Coord {
+        debug_assert!(id < self.nodes());
+        Coord { r: id / self.cols(), c: id % self.cols() }
+    }
+
+    /// Kind of the node at a coordinate.
+    #[inline]
+    pub fn kind(&self, c: Coord) -> NodeKind {
+        if c.c < self.pe_cols {
+            NodeKind::Pe
+        } else {
+            NodeKind::Mob
+        }
+    }
+
+    /// Flat node id of PE (r, c) where `c < pe_cols`.
+    #[inline]
+    pub fn pe(&self, r: usize, c: usize) -> usize {
+        debug_assert!(c < self.pe_cols);
+        self.node_id(Coord::new(r, c))
+    }
+
+    /// Flat node id of MOB (r, m) where `m < mob_cols` (m = 0 is the
+    /// column adjacent to the PE array's east edge).
+    #[inline]
+    pub fn mob(&self, r: usize, m: usize) -> usize {
+        debug_assert!(m < self.mob_cols);
+        self.node_id(Coord::new(r, self.pe_cols + m))
+    }
+
+    /// Dense PE index (row-major over the PE sub-array) of a PE node id.
+    #[inline]
+    pub fn pe_index(&self, id: usize) -> usize {
+        let c = self.coord(id);
+        debug_assert!(matches!(self.kind(c), NodeKind::Pe));
+        c.r * self.pe_cols + c.c
+    }
+
+    /// Dense MOB index (row-major over the MOB sub-array) of a MOB node id.
+    #[inline]
+    pub fn mob_index(&self, id: usize) -> usize {
+        let c = self.coord(id);
+        debug_assert!(matches!(self.kind(c), NodeKind::Mob));
+        c.r * self.mob_cols + (c.c - self.pe_cols)
+    }
+
+    /// Torus neighbour of `c` in direction `d` (always exists: the grid
+    /// wraps both ways — this is the "mesh torus" of §III-C).
+    pub fn neighbor(&self, c: Coord, d: Dir) -> Coord {
+        let (rows, cols) = (self.rows, self.cols());
+        match d {
+            Dir::North => Coord::new((c.r + rows - 1) % rows, c.c),
+            Dir::South => Coord::new((c.r + 1) % rows, c.c),
+            Dir::East => Coord::new(c.r, (c.c + 1) % cols),
+            Dir::West => Coord::new(c.r, (c.c + cols - 1) % cols),
+        }
+    }
+
+    /// Minimal torus hop distance between two coordinates (used by the
+    /// switched baseline's latency/energy model: XY routing takes this
+    /// many router traversals).
+    pub fn hop_distance(&self, a: Coord, b: Coord) -> usize {
+        let wrap = |d: usize, n: usize| d.min(n - d);
+        let dr = wrap((a.r as isize - b.r as isize).unsigned_abs(), self.rows);
+        let dc = wrap((a.c as isize - b.c as isize).unsigned_abs(), self.cols());
+        dr + dc
+    }
+
+    /// The XY-routing path (exclusive of `a`, inclusive of `b`): first
+    /// along the row (shorter wrap direction), then along the column.
+    /// Used by the switched fabric to charge per-link contention.
+    pub fn xy_path(&self, a: Coord, b: Coord) -> Vec<Coord> {
+        let mut path = Vec::new();
+        let mut cur = a;
+        let cols = self.cols();
+        // Column-wise (east/west) first.
+        while cur.c != b.c {
+            let east = (b.c + cols - cur.c) % cols;
+            let west = (cur.c + cols - b.c) % cols;
+            let d = if east <= west { Dir::East } else { Dir::West };
+            cur = self.neighbor(cur, d);
+            path.push(cur);
+        }
+        // Then row-wise (north/south).
+        let rows = self.rows;
+        while cur.r != b.r {
+            let south = (b.r + rows - cur.r) % rows;
+            let north = (cur.r + rows - b.r) % rows;
+            let d = if south <= north { Dir::South } else { Dir::North };
+            cur = self.neighbor(cur, d);
+            path.push(cur);
+        }
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, prop_check, PropConfig};
+
+    #[test]
+    fn default_is_paper_geometry() {
+        let t = Topology::default();
+        assert_eq!(t.num_pes(), 16);
+        assert_eq!(t.num_mobs(), 8);
+        assert_eq!(t.nodes(), 24);
+        assert_eq!(t.cols(), 6);
+    }
+
+    #[test]
+    fn node_id_coord_roundtrip() {
+        let t = Topology::default();
+        for id in 0..t.nodes() {
+            assert_eq!(t.node_id(t.coord(id)), id);
+        }
+    }
+
+    #[test]
+    fn kinds_partition_grid() {
+        let t = Topology::default();
+        let pes = (0..t.nodes())
+            .filter(|&id| matches!(t.kind(t.coord(id)), NodeKind::Pe))
+            .count();
+        assert_eq!(pes, 16);
+    }
+
+    #[test]
+    fn fig2_adjacency_mob_west_wraparound() {
+        // FIG2 structural check: the last MOB column is the west
+        // neighbour (via wraparound) of PE column 0, and MOB column 0 is
+        // the east neighbour of the PE array's last column.
+        let t = Topology::default();
+        let pe00 = Coord::new(0, 0);
+        let west = t.neighbor(pe00, Dir::West);
+        assert_eq!(west, Coord::new(0, 5));
+        assert!(matches!(t.kind(west), NodeKind::Mob));
+        let pe03 = Coord::new(0, 3);
+        let east = t.neighbor(pe03, Dir::East);
+        assert_eq!(east, Coord::new(0, 4));
+        assert!(matches!(t.kind(east), NodeKind::Mob));
+    }
+
+    #[test]
+    fn torus_wraps_rows() {
+        let t = Topology::default();
+        assert_eq!(t.neighbor(Coord::new(0, 2), Dir::North), Coord::new(3, 2));
+        assert_eq!(t.neighbor(Coord::new(3, 2), Dir::South), Coord::new(0, 2));
+    }
+
+    #[test]
+    fn prop_neighbor_is_invertible() {
+        prop_check("torus neighbour invertible", PropConfig::default(), |rng| {
+            let t = Topology::new(rng.range(2, 9), rng.range(2, 9), rng.range(1, 4));
+            let c = Coord::new(rng.range(0, t.rows), rng.range(0, t.cols()));
+            for d in Dir::ALL {
+                let n = t.neighbor(c, d);
+                let back = t.neighbor(n, d.opposite());
+                if back != c {
+                    return ensure(false, || format!("{t:?} {c:?} {d}"));
+                }
+            }
+            ensure(true, String::new)
+        });
+    }
+
+    #[test]
+    fn prop_hop_distance_symmetric_and_triangle() {
+        prop_check("hop distance metric", PropConfig::default(), |rng| {
+            let t = Topology::new(rng.range(2, 9), rng.range(2, 9), rng.range(1, 4));
+            let p = Coord::new(rng.range(0, t.rows), rng.range(0, t.cols()));
+            let q = Coord::new(rng.range(0, t.rows), rng.range(0, t.cols()));
+            let z = Coord::new(rng.range(0, t.rows), rng.range(0, t.cols()));
+            let d = |a, b| t.hop_distance(a, b);
+            if d(p, q) != d(q, p) {
+                return ensure(false, || format!("asym {p:?} {q:?}"));
+            }
+            if d(p, q) + d(q, z) < d(p, z) {
+                return ensure(false, || format!("triangle {p:?} {q:?} {z:?}"));
+            }
+            ensure(d(p, p) == 0, || "identity".into())
+        });
+    }
+
+    #[test]
+    fn prop_xy_path_length_matches_distance() {
+        prop_check("xy path length == hop distance", PropConfig::default(), |rng| {
+            let t = Topology::new(rng.range(2, 9), rng.range(2, 9), rng.range(1, 4));
+            let a = Coord::new(rng.range(0, t.rows), rng.range(0, t.cols()));
+            let b = Coord::new(rng.range(0, t.rows), rng.range(0, t.cols()));
+            let path = t.xy_path(a, b);
+            if path.len() != t.hop_distance(a, b) {
+                return ensure(false, || format!("{a:?}->{b:?}: {} vs {}", path.len(), t.hop_distance(a, b)));
+            }
+            if a != b && path.last() != Some(&b) {
+                return ensure(false, || "path must end at destination".into());
+            }
+            ensure(true, String::new)
+        });
+    }
+
+    #[test]
+    fn xy_path_steps_are_adjacent() {
+        let t = Topology::default();
+        let a = Coord::new(0, 0);
+        let b = Coord::new(3, 5);
+        let path = t.xy_path(a, b);
+        let mut prev = a;
+        for &step in &path {
+            assert_eq!(t.hop_distance(prev, step), 1);
+            prev = step;
+        }
+    }
+}

@@ -1,0 +1,481 @@
+//! The CGRA instruction set.
+//!
+//! Contexts (per-PE instruction programs and per-MOB stream descriptor
+//! programs) are what the 4 KiB context memory holds (paper §III-A). The
+//! memory controller decodes and distributes them before kernel launch.
+//!
+//! Design notes (DESIGN.md §2):
+//! - PEs are single-issue, fully-pipelined, with a small word register
+//!   file, 16 `i32` accumulators (a 4×4 output sub-tile), and a 4-lane
+//!   packed int8 MAC (`dot4`).
+//! - Operand *riders*: an instruction that reads a torus input port may
+//!   simultaneously latch the word into a register and/or forward it out
+//!   of another port. Additionally a [`Take`] rider lets any MAC slot
+//!   absorb one unrelated network word (latch and/or forward) in the same
+//!   cycle — the register file's dedicated network write port. Together
+//!   these are the "switchless" routing of the paper: all routing is
+//!   compiled into the context; there are no routers.
+//! - MOBs execute stream descriptors (LOAD/STORE/DMA/loop/fence)
+//!   decoupled from PE execution (paper §III-B2). Descriptors support
+//!   two levels of enclosing loops with per-level address steps, so a
+//!   whole blocked GEMM is one context.
+
+pub mod encode;
+
+use std::fmt;
+
+/// Torus direction. Also indexes input/output port arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    North = 0,
+    East = 1,
+    South = 2,
+    West = 3,
+}
+
+impl Dir {
+    /// All directions, in port-index order.
+    pub const ALL: [Dir; 4] = [Dir::North, Dir::East, Dir::South, Dir::West];
+
+    /// The input port a word sent through this output port arrives on at
+    /// the neighbour.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::North => Dir::South,
+            Dir::East => Dir::West,
+            Dir::South => Dir::North,
+            Dir::West => Dir::East,
+        }
+    }
+
+    /// Port array index.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+impl fmt::Display for Dir {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Dir::North => "N",
+            Dir::East => "E",
+            Dir::South => "S",
+            Dir::West => "W",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Word register index inside a PE.
+pub type Reg = u8;
+
+/// Accumulator index inside a PE (16 accumulators = 4×4 output sub-tile).
+pub type AccReg = u8;
+
+/// Where an operand comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Src {
+    /// Word register.
+    Reg(Reg),
+    /// Torus input port (blocking read: stalls until a word is present;
+    /// consumes the word).
+    Port(Dir),
+    /// Immediate (sign-extended to 32 bits at decode).
+    Imm(i16),
+}
+
+/// Where a result goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dst {
+    /// Word register.
+    Reg(Reg),
+    /// Torus output port (blocking write: stalls while the downstream
+    /// latch is full).
+    Port(Dir),
+    /// Discard (for instructions executed for their riders only).
+    Null,
+}
+
+/// Rider attached to a port-read operand: optionally latch the consumed
+/// word into a register and/or forward it out of a port, in the same
+/// cycle, for free (dedicated bypass wiring).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Rider {
+    /// Latch the word into this register.
+    pub latch: Option<Reg>,
+    /// Forward the word out of this port.
+    pub fwd: Option<Dir>,
+}
+
+impl Rider {
+    /// No rider.
+    pub const NONE: Rider = Rider { latch: None, fwd: None };
+
+    /// Latch only.
+    pub fn latch(r: Reg) -> Rider {
+        Rider { latch: Some(r), fwd: None }
+    }
+
+    /// Forward only.
+    pub fn fwd(d: Dir) -> Rider {
+        Rider { latch: None, fwd: Some(d) }
+    }
+
+    /// Latch and forward.
+    pub fn latch_fwd(r: Reg, d: Dir) -> Rider {
+        Rider { latch: Some(r), fwd: Some(d) }
+    }
+}
+
+/// Network-take rider: absorb one word from `port` this cycle (stalling
+/// until it is present), optionally latching it into a register and/or
+/// forwarding it out of another port. This is the register file's network
+/// write port; the GEMM schedule uses it to double-buffer the B operand
+/// one k-chunk ahead while the MAC consumes the current one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Take {
+    pub port: Dir,
+    pub latch: Option<Reg>,
+    pub fwd: Option<Dir>,
+}
+
+impl Take {
+    /// Latch `port` into `reg`.
+    pub fn latch(port: Dir, reg: Reg) -> Take {
+        Take { port, latch: Some(reg), fwd: None }
+    }
+
+    /// Pure pass-through: forward `port` out of `fwd`.
+    pub fn pass(port: Dir, fwd: Dir) -> Take {
+        Take { port, latch: None, fwd: Some(fwd) }
+    }
+}
+
+/// Scalar ALU operation set (fp32 ops interpret the word as IEEE-754).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    AddI,
+    SubI,
+    MulI,
+    MaxI,
+    MinI,
+    /// Arithmetic shift right by `b` (low 5 bits).
+    ShrI,
+    AndI,
+    OrI,
+    XorI,
+    AddF,
+    SubF,
+    MulF,
+    MaxF,
+}
+
+/// Which memory a MOB / PE-load accesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemSpace {
+    /// Shared on-chip L1 (software-managed scratchpad, Fig. 1).
+    L1,
+    /// External memory (off-array; the costly boundary TAB2 counts).
+    Ext,
+}
+
+/// One PE instruction (one issue slot; the PE is single-issue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PeInstr {
+    /// Do nothing this cycle (schedule alignment).
+    Nop,
+    /// Packed 4-lane MAC: `acc[d] += dot4(a, b)`, with optional network
+    /// take rider.
+    MacP {
+        d: AccReg,
+        a: Src,
+        ra: Rider,
+        b: Src,
+        rb: Rider,
+        take: Option<Take>,
+    },
+    /// Scalar ALU op: `dst = op(a, b)`.
+    Alu {
+        op: AluOp,
+        dst: Dst,
+        a: Src,
+        ra: Rider,
+        b: Src,
+        rb: Rider,
+    },
+    /// Move / route: `dst = a` (with rider). `Mov {dst: Port(W), a: Port(E)}`
+    /// is a pure pass-through routing slot.
+    Mov { dst: Dst, a: Src, ra: Rider },
+    /// Reset accumulator `d` to zero.
+    AccClr { d: AccReg },
+    /// Emit accumulator `d` raw to `dst`; optionally clear it (so the
+    /// next tile's accumulation starts from zero without extra slots).
+    AccOut { d: AccReg, dst: Dst, clear: bool },
+    /// Emit four accumulators `d..d+4` requantized to packed int8
+    /// (round-half-away, saturating, right-shift `shift`) as one word;
+    /// optionally clear them.
+    AccOutQ { d: AccReg, shift: u8, dst: Dst, clear: bool },
+    /// Direct word load (no-MOB ablation, TAB4): `dst <- mem[addr_reg]`,
+    /// `addr_reg += post_inc`. Result arrives after memory latency; the
+    /// consumer stalls via the register scoreboard, not the issuer.
+    LoadW { dst: Reg, space: MemSpace, addr_reg: Reg, post_inc: i16 },
+    /// Direct word store (no-MOB ablation): `mem[addr_reg] <- src`,
+    /// `addr_reg += post_inc`.
+    StoreW { src: Reg, space: MemSpace, addr_reg: Reg, post_inc: i16 },
+    /// Halt the PE (kernel done).
+    Halt,
+}
+
+/// How a MOB LOAD chooses its output port per emitted word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DirMode {
+    /// Always the same port.
+    Fixed(Dir),
+    /// Rotate through N, E, S, W by emitted-word index — the switched
+    /// baseline uses this to unicast a stream round-robin to the four
+    /// route-table destinations.
+    Rotate,
+}
+
+/// One MOB stream descriptor.
+///
+/// `steps` give the per-iteration address offset (in words) contributed
+/// by each *enclosing loop level*: `steps[0]` for the innermost enclosing
+/// [`MobOp::Loop`], `steps[1]` for the next one out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MobOp {
+    /// Stream `count` words from `space` starting at `base` (plus loop
+    /// offsets), step `stride`, emitting each word `replicate` times into
+    /// the port(s) selected by `dir`.
+    Load {
+        space: MemSpace,
+        base: u32,
+        stride: i32,
+        count: u32,
+        dir: DirMode,
+        replicate: u8,
+        steps: [i32; 2],
+    },
+    /// Two interleaved sub-streams out of one port: repeat
+    /// `[a_per from A, b_per from B]` until both are exhausted (when one
+    /// runs out the other continues alone). The dual-feed GEMM mapping
+    /// uses this to interleave the A operand stream with the east-half B
+    /// stream on the east MOB's single wire, in exactly the consumption
+    /// order of the PE schedule.
+    LoadDual {
+        space: MemSpace,
+        a_base: u32,
+        a_stride: i32,
+        a_count: u32,
+        a_per: u8,
+        b_base: u32,
+        b_stride: i32,
+        b_count: u32,
+        b_per: u8,
+        dir: Dir,
+        a_steps: [i32; 2],
+        b_steps: [i32; 2],
+    },
+    /// Absorb `count` words from input port `dir` into `space` at `base`
+    /// (plus loop offsets), step `stride`.
+    Store {
+        space: MemSpace,
+        base: u32,
+        stride: i32,
+        count: u32,
+        dir: Dir,
+        steps: [i32; 2],
+    },
+    /// Bulk copy `count` words Ext→L1 (`to_l1`) or L1→Ext through the
+    /// DMA engine. Loop offsets apply independently to both addresses.
+    Dma {
+        ext_base: u32,
+        l1_base: u32,
+        count: u32,
+        to_l1: bool,
+        ext_steps: [i32; 2],
+        l1_steps: [i32; 2],
+    },
+    /// Loop back to descriptor `start`, executing the window
+    /// `[start, this op)` a total of `extra + 1` times. Two levels may
+    /// nest.
+    Loop { start: u16, extra: u32 },
+    /// Wait until this MOB's outstanding requests have drained and the
+    /// DMA engine is idle.
+    Fence,
+    /// Global rendezvous: this MOB waits until *every* non-halted MOB in
+    /// the array is waiting at a `Barrier` and the DMA engine is idle,
+    /// then all proceed together. The blocked-GEMM mapper uses this to
+    /// publish shared L1 panels (every MOB must emit the same number of
+    /// barriers — validated by the mapper).
+    Barrier,
+    /// Done.
+    Halt,
+}
+
+impl MobOp {
+    /// Convenience: fixed-direction single-emission load with no steps.
+    pub fn load(space: MemSpace, base: u32, stride: i32, count: u32, dir: Dir) -> MobOp {
+        MobOp::Load {
+            space,
+            base,
+            stride,
+            count,
+            dir: DirMode::Fixed(dir),
+            replicate: 1,
+            steps: [0, 0],
+        }
+    }
+
+    /// Convenience: store with no steps.
+    pub fn store(space: MemSpace, base: u32, stride: i32, count: u32, dir: Dir) -> MobOp {
+        MobOp::Store { space, base, stride, count, dir, steps: [0, 0] }
+    }
+
+    /// Convenience: DMA with no steps.
+    pub fn dma(ext_base: u32, l1_base: u32, count: u32, to_l1: bool) -> MobOp {
+        MobOp::Dma { ext_base, l1_base, count, to_l1, ext_steps: [0, 0], l1_steps: [0, 0] }
+    }
+}
+
+/// A complete PE program.
+///
+/// Execution: `prologue`; then for each of `tiles` tiles: `body` × `trip`
+/// followed by `tile_epilogue`; then `epilogue`; then halt. The two loop
+/// levels let one compact context cover an entire blocked GEMM (the
+/// context size is independent of the matrix dimensions — §III-A's 4 KiB
+/// budget is checked against exactly this structure).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct PeProgram {
+    pub prologue: Vec<PeInstr>,
+    pub body: Vec<PeInstr>,
+    /// Inner trip count (k-chunk pairs per tile).
+    pub trip: u32,
+    /// Per-tile drain (runs after `body` × `trip`).
+    pub tile_epilogue: Vec<PeInstr>,
+    /// Outer trip count (tiles).
+    pub tiles: u32,
+    pub epilogue: Vec<PeInstr>,
+}
+
+impl PeProgram {
+    /// A program that halts immediately (unused PE).
+    pub fn idle() -> Self {
+        Self::default()
+    }
+
+    /// Static instruction slots occupied in context memory.
+    pub fn len(&self) -> usize {
+        self.prologue.len() + self.body.len() + self.tile_epilogue.len() + self.epilogue.len()
+    }
+
+    /// True if the program performs no work.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total dynamic instruction count when run to completion.
+    pub fn dynamic_len(&self) -> u64 {
+        self.prologue.len() as u64
+            + self.tiles as u64
+                * (self.body.len() as u64 * self.trip as u64 + self.tile_epilogue.len() as u64)
+            + self.epilogue.len() as u64
+    }
+}
+
+/// A complete MOB program.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct MobProgram {
+    pub ops: Vec<MobOp>,
+}
+
+impl MobProgram {
+    /// A program that halts immediately (unused MOB).
+    pub fn idle() -> Self {
+        Self::default()
+    }
+}
+
+/// Everything the context memory holds for one kernel launch: one program
+/// per PE (row-major over the PE sub-array) and per MOB (row-major over
+/// the MOB sub-array). Identical programs are stored once and broadcast
+/// (column-multicast configuration) — see [`encode`].
+#[derive(Debug, Clone, Default)]
+pub struct KernelContext {
+    pub pe_programs: Vec<PeProgram>,
+    pub mob_programs: Vec<MobProgram>,
+    /// Human-readable kernel tag carried through traces and metrics.
+    pub name: String,
+}
+
+impl KernelContext {
+    /// Total encoded size in bytes (must fit the 4 KiB context memory;
+    /// checked by [`crate::arch::context::ContextMemory::load`]).
+    pub fn encoded_size(&self) -> usize {
+        encode::encode_context(self).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dir_opposite_is_involution() {
+        for d in Dir::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+            assert_ne!(d.opposite(), d);
+        }
+    }
+
+    #[test]
+    fn dir_indices_unique() {
+        let mut seen = [false; 4];
+        for d in Dir::ALL {
+            assert!(!seen[d.idx()]);
+            seen[d.idx()] = true;
+        }
+    }
+
+    #[test]
+    fn pe_program_lengths() {
+        let p = PeProgram {
+            prologue: vec![PeInstr::Nop; 3],
+            body: vec![PeInstr::Nop; 32],
+            trip: 8,
+            tile_epilogue: vec![PeInstr::Nop; 7],
+            tiles: 4,
+            epilogue: vec![PeInstr::Halt],
+        };
+        assert_eq!(p.len(), 3 + 32 + 7 + 1);
+        assert_eq!(p.dynamic_len(), 3 + 4 * (32 * 8 + 7) + 1);
+        assert!(!p.is_empty());
+        assert!(PeProgram::idle().is_empty());
+    }
+
+    #[test]
+    fn riders_and_takes_compose() {
+        let r = Rider::latch_fwd(3, Dir::East);
+        assert_eq!(r.latch, Some(3));
+        assert_eq!(r.fwd, Some(Dir::East));
+        assert_eq!(Rider::NONE, Rider::default());
+        let t = Take::latch(Dir::East, 5);
+        assert_eq!(t.port, Dir::East);
+        assert_eq!(t.latch, Some(5));
+        let p = Take::pass(Dir::East, Dir::West);
+        assert_eq!(p.fwd, Some(Dir::West));
+        assert_eq!(p.latch, None);
+    }
+
+    #[test]
+    fn mob_op_helpers() {
+        let l = MobOp::load(MemSpace::L1, 10, 1, 64, Dir::East);
+        assert!(matches!(
+            l,
+            MobOp::Load { replicate: 1, dir: DirMode::Fixed(Dir::East), steps: [0, 0], .. }
+        ));
+        let d = MobOp::dma(0, 0, 16, true);
+        assert!(matches!(d, MobOp::Dma { to_l1: true, .. }));
+    }
+}

@@ -1,0 +1,43 @@
+//! `cgra-edge` — reproduction of *"An ultra-low-power CGRA for accelerating
+//! Transformers at the edge"* (R. Prasad, CS.AR 2025).
+//!
+//! The crate is organised as the paper's system plus every substrate it
+//! depends on (see DESIGN.md §3):
+//!
+//! - [`isa`] — the CGRA instruction set: PE ops, MOB stream descriptors,
+//!   binary context encoding (what lives in the 4 KiB context memory).
+//! - [`arch`] — structural models: processing elements, memory-operation
+//!   blocks, context memory, memory controller, shared L1, external memory.
+//! - [`interconnect`] — the paper's switchless mesh torus and the switched
+//!   mesh-NoC baseline it is compared against.
+//! - [`sim`] — the cycle-level simulation engine tying the above together.
+//! - [`energy`] — per-event energy accounting and power reporting.
+//! - [`gemm`] — the paper's block-wise GEMM execution strategy: tiling
+//!   plans, context generation, host-side oracles, the naive baseline.
+//! - [`xformer`] — transformer workloads (attention + FFN) lowered to GEMM
+//!   sequences with int8 quantization.
+//! - [`coordinator`] — the inference-serving layer: request queue, batcher,
+//!   kernel dispatch, metrics.
+//! - [`baseline`] — scalar general-purpose-processor cost/energy model.
+//! - [`runtime`] — PJRT wrapper used to validate numerics against the
+//!   AOT-compiled JAX model (build-time Python, never on the request path).
+//! - [`cli`], [`config`], [`util`], [`bench_util`], [`trace`] — glue.
+
+pub mod arch;
+pub mod baseline;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod gemm;
+pub mod interconnect;
+pub mod isa;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod xformer;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

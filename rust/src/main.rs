@@ -1,0 +1,161 @@
+//! `cgra-edge` CLI: drive the simulated CGRA from the command line.
+//!
+//! Subcommands:
+//!   info                         — print the configuration summary
+//!   gemm M K N [--cfg f] [--shift s] [--variant torus|switched|peload]
+//!                                — run + verify one GEMM, print metrics
+//!   encoder [--layers n] [--seq s] [--dmodel d] [--heads h] [--dff f]
+//!                                — run a tiny encoder on the array
+//!   serve [--requests n] [--rate rps] [--batch b]
+//!                                — closed-loop serving demo (coordinator)
+
+use anyhow::{bail, Result};
+use cgra_edge::baseline::Gpp;
+use cgra_edge::cli::Args;
+use cgra_edge::config::ArchConfig;
+use cgra_edge::coordinator::{Coordinator, Request};
+use cgra_edge::energy::EnergyModel;
+use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, MapVariant, OutputMode};
+use cgra_edge::sim::CgraSim;
+use cgra_edge::util::mat::{MatF32, MatI8};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::{run_encoder_on_cgra, EncoderModel, XformerConfig};
+
+fn load_cfg(args: &Args) -> Result<ArchConfig> {
+    match args.flag("cfg") {
+        Some(path) => ArchConfig::from_file(path),
+        None => Ok(ArchConfig::default()),
+    }
+}
+
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let m: usize = args.pos(0)?.parse()?;
+    let k: usize = args.pos(1)?.parse()?;
+    let n: usize = args.pos(2)?.parse()?;
+    let shift: u8 = args.flag_parse("shift", 6u8)?;
+    let variant = match args.flag("variant").unwrap_or("torus") {
+        "torus" => MapVariant::Torus,
+        "switched" => MapVariant::Switched,
+        "peload" => MapVariant::PeLoad,
+        other => bail!("unknown variant {other}"),
+    };
+    let mut cfg = load_cfg(args)?;
+    if variant == MapVariant::Switched {
+        cfg.fabric = cgra_edge::interconnect::FabricKind::Switched;
+    }
+    let mut rng = XorShiftRng::new(args.flag_parse("seed", 1u64)?);
+    let mut a = MatI8::zeros(m, k);
+    let mut b = MatI8::zeros(k, n);
+    rng.fill_i8(&mut a.data, 16);
+    rng.fill_i8(&mut b.data, 16);
+    let mut sim = CgraSim::new(cfg.clone());
+    let plan = GemmPlan::for_variant(&sim.cfg, m, k, n, OutputMode::Quant { shift }, variant)?;
+    let run = run_gemm(&mut sim, &a, &b, &plan)?;
+    let exact = run.c_i8.as_ref().unwrap() == &oracle_quant(&a, &b, shift);
+    let em = EnergyModel::default();
+    let e = em.evaluate(&sim.stats, cfg.freq_mhz);
+    println!("config  : {}", cfg.summary());
+    println!("plan    : {:?} feed={:?} tiles={}", plan.strategy, plan.feed, plan.tiles());
+    println!("cycles  : {} (+{} config; ideal {})", run.outcome.cycles, run.outcome.config_cycles, plan.ideal_cycles());
+    println!("exact   : {exact}");
+    println!("util    : {:.3}", sim.stats.pe_utilization(16));
+    println!("energy  : {:.2} µJ  avg power {:.3} mW  {:.1} GOPS/W",
+        e.total_uj(), em.avg_power_mw(&sim.stats, cfg.freq_mhz), em.gops_per_watt(&sim.stats, cfg.freq_mhz));
+    let gpp = Gpp::default();
+    let gc = gpp.gemm_cost(m, k, n);
+    println!("vs GPP  : {:.1}× cycles, {:.1}× energy",
+        gc.cycles as f64 / (run.outcome.cycles + run.outcome.config_cycles) as f64,
+        gc.energy_pj / e.total_pj());
+    if !exact {
+        bail!("output mismatch vs oracle");
+    }
+    Ok(())
+}
+
+fn cmd_encoder(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let xcfg = XformerConfig {
+        n_layers: args.flag_parse("layers", 2usize)?,
+        seq: args.flag_parse("seq", 32usize)?,
+        d_model: args.flag_parse("dmodel", 64usize)?,
+        n_heads: args.flag_parse("heads", 4usize)?,
+        d_ff: args.flag_parse("dff", 128usize)?,
+    };
+    let model = EncoderModel::new(xcfg, args.flag_parse("seed", 42u64)?);
+    let mut rng = XorShiftRng::new(7);
+    let mut x = MatF32::zeros(xcfg.seq, xcfg.d_model);
+    for v in &mut x.data {
+        *v = rng.normal() * 0.5;
+    }
+    let want = model.forward_f32(&x)?;
+    let mut sim = CgraSim::new(cfg.clone());
+    let (got, rep) = run_encoder_on_cgra(&mut sim, &model, &x)?;
+    let em = EnergyModel::default();
+    let e = em.evaluate(&sim.stats, cfg.freq_mhz);
+    println!("model    : {xcfg:?} ({} params)", xcfg.param_count());
+    println!("kernels  : {} ({} GEMM MACs)", rep.kernels, xcfg.gemm_macs());
+    println!("cycles   : {} (+{} config) = {:.2} ms @ {} MHz",
+        rep.cycles, rep.config_cycles,
+        (rep.cycles + rep.config_cycles) as f64 / (cfg.freq_mhz * 1e3), cfg.freq_mhz);
+    println!("accuracy : max |Δ| vs float reference = {:.4} (out amax {:.3})",
+        got.max_abs_diff(&want), want.abs_max());
+    println!("energy   : {:.2} µJ, avg power {:.3} mW",
+        e.total_uj(), em.avg_power_mw(&sim.stats, cfg.freq_mhz));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let n: u64 = args.flag_parse("requests", 16u64)?;
+    let rate: f64 = args.flag_parse("rate", 50.0f64)?; // requests/sec
+    let batch: usize = args.flag_parse("batch", 4usize)?;
+    let xcfg = XformerConfig { n_layers: 1, seq: 16, d_model: 32, n_heads: 2, d_ff: 64 };
+    let model = EncoderModel::new(xcfg, 42);
+    let coord = Coordinator::spawn(cfg.clone(), model, batch);
+    let mut rng = XorShiftRng::new(99);
+    let mut t = 0.0f64;
+    for id in 0..n {
+        t += rng.exp(rate);
+        let arrival_cycle = (t * cfg.freq_mhz * 1e6) as u64;
+        let mut x = MatF32::zeros(xcfg.seq, xcfg.d_model);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        coord.submit(Request { id, input: x, arrival_cycle })?;
+    }
+    for _ in 0..n {
+        let r = coord.recv()?;
+        println!(
+            "req {:>3}: queue {:>8} cy, service {:>8} cy, done @ {:>10}",
+            r.id, r.queue_cycles, r.service_cycles, r.completion_cycle
+        );
+    }
+    let m = coord.shutdown()?;
+    println!(
+        "served {} requests: mean latency {:.0} cycles ({:.2} ms), throughput {:.1} req/s",
+        m.completed,
+        m.mean_latency_cycles(),
+        m.mean_latency_cycles() / (cfg.freq_mhz * 1e3),
+        m.throughput_rps(cfg.freq_mhz)
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "info" => {
+            let cfg = load_cfg(&args)?;
+            println!("{}", cfg.summary());
+            Ok(())
+        }
+        "gemm" => cmd_gemm(&args),
+        "encoder" => cmd_encoder(&args),
+        "serve" => cmd_serve(&args),
+        "" => {
+            eprintln!("usage: cgra-edge <info|gemm|encoder|serve> …");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'"),
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the CPU client (the `xla` crate, docs.rs/xla 0.1.6).
+//!
+//! Python (jax + the Pallas kernels) runs only at build time: `make
+//! artifacts` lowers the L2 model to HLO *text* (xla_extension 0.5.1
+//! rejects jax≥0.5's serialized protos — see /opt/xla-example/README.md)
+//! plus a line-oriented manifest + raw little-endian f32 parameter blob.
+//! This module loads all three and executes inference — it is how the
+//! CGRA simulator's numerics are validated against the real XLA
+//! computation (FIG-E2E), and the reference serving path in
+//! `examples/e2e_inference.rs`.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A loaded + compiled artifact.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("compiling HLO")?;
+        Ok(LoadedModel { exe })
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs of the given shapes; returns the first
+    /// tuple element flattened (our artifacts are lowered with
+    /// `return_tuple=True` and produce a single output).
+    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// One entry of an artifact manifest: an input tensor's name and shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset (in f32 words) into the parameter blob; `None` for runtime
+    /// inputs (activations).
+    pub offset: Option<usize>,
+}
+
+/// Parsed artifact manifest (`<name>.manifest.txt`): line format
+/// `input <name> <d0>x<d1>… [param <offset_words>]`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("input") => {
+                    let name = it.next().context("manifest: missing name")?.to_string();
+                    let shape_s = it.next().context("manifest: missing shape")?;
+                    let shape = shape_s
+                        .split('x')
+                        .map(|d| d.parse::<usize>().map_err(Into::into))
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(|| format!("manifest line {}", lineno + 1))?;
+                    let offset = match it.next() {
+                        Some("param") => {
+                            Some(it.next().context("manifest: missing offset")?.parse()?)
+                        }
+                        Some(other) => bail!("manifest line {}: unknown tag {other}", lineno + 1),
+                        None => None,
+                    };
+                    entries.push(ManifestEntry { name, shape, offset });
+                }
+                Some(other) => bail!("manifest line {}: unknown record {other}", lineno + 1),
+                None => {}
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading manifest {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Read a raw little-endian f32 blob (the exported parameters).
+pub fn read_f32_blob(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading blob {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("blob length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// Assemble the runtime input list for an artifact: activations provided
+/// by the caller (keyed by name), parameters sliced from the blob.
+pub fn assemble_inputs(
+    manifest: &Manifest,
+    blob: &[f32],
+    activations: &[(&str, Vec<f32>)],
+) -> Result<Vec<(Vec<f32>, Vec<i64>)>> {
+    let mut out = Vec::with_capacity(manifest.entries.len());
+    for e in &manifest.entries {
+        let len: usize = e.shape.iter().product();
+        let shape: Vec<i64> = e.shape.iter().map(|&d| d as i64).collect();
+        let data = match e.offset {
+            Some(off) => {
+                if off + len > blob.len() {
+                    bail!("param {} overruns blob ({} + {len} > {})", e.name, off, blob.len());
+                }
+                blob[off..off + len].to_vec()
+            }
+            None => {
+                let (_, act) = activations
+                    .iter()
+                    .find(|(n, _)| *n == e.name)
+                    .with_context(|| format!("missing activation '{}'", e.name))?;
+                if act.len() != len {
+                    bail!("activation '{}' length {} != {len}", e.name, act.len());
+                }
+                act.clone()
+            }
+        };
+        out.push((data, shape));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_inputs_and_params() {
+        let m = Manifest::parse(
+            "# comment\ninput x 32x64\ninput wq 64x64 param 0\ninput w1 64x128 param 4096\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries[0].name, "x");
+        assert_eq!(m.entries[0].shape, vec![32, 64]);
+        assert_eq!(m.entries[0].offset, None);
+        assert_eq!(m.entries[1].offset, Some(0));
+        assert_eq!(m.entries[2].offset, Some(4096));
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("bogus line here").is_err());
+        assert!(Manifest::parse("input x 3x3 zzz 1").is_err());
+    }
+
+    #[test]
+    fn assemble_slices_params_and_matches_activations() {
+        let m = Manifest::parse("input x 1x2\ninput w 2x2 param 1\n").unwrap();
+        let blob = vec![9.0, 1.0, 2.0, 3.0, 4.0];
+        let inputs =
+            assemble_inputs(&m, &blob, &[("x", vec![5.0, 6.0])]).unwrap();
+        assert_eq!(inputs[0].0, vec![5.0, 6.0]);
+        assert_eq!(inputs[1].0, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(inputs[1].1, vec![2, 2]);
+    }
+
+    #[test]
+    fn assemble_checks_lengths() {
+        let m = Manifest::parse("input x 1x2\n").unwrap();
+        assert!(assemble_inputs(&m, &[], &[("x", vec![1.0])]).is_err());
+        assert!(assemble_inputs(&m, &[], &[]).is_err());
+    }
+}

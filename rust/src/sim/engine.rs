@@ -1,0 +1,380 @@
+//! The cycle-level engine: owns all architectural state and advances it
+//! one cycle at a time.
+//!
+//! Cycle semantics (two-phase, order-independent across nodes):
+//! 1. every PE and MOB observes the input latches as committed at the end
+//!    of the previous cycle, executes at most one instruction / stream
+//!    action, and *stages* any output words;
+//! 2. [`Fabric::commit`] moves staged words across links (torus) or
+//!    delivers due packets (switched NoC).
+//!
+//! A kernel is complete when every PE and MOB has halted; the engine also
+//! asserts fabric quiescence at completion so a mapper bug that leaves
+//! words in flight is caught loudly.
+
+use crate::arch::context::ContextMemory;
+use crate::arch::mem::MemSystem;
+use crate::arch::mob::Mob;
+use crate::arch::pe::Pe;
+use crate::config::ArchConfig;
+use crate::interconnect::fabric::{Fabric, RouteTable};
+use crate::interconnect::topology::NodeKind;
+use crate::isa::KernelContext;
+use crate::sim::stats::Stats;
+use anyhow::{bail, Result};
+
+/// Result of running one kernel to completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimOutcome {
+    /// Execution cycles (excludes configuration time, which is reported
+    /// separately in [`Stats::config_cycles`]).
+    pub cycles: u64,
+    /// Configuration (context distribution) cycles for this kernel.
+    pub config_cycles: u64,
+}
+
+/// The simulated CGRA subsystem of Fig. 1.
+pub struct CgraSim {
+    pub cfg: ArchConfig,
+    pub fabric: Fabric,
+    pub mem: MemSystem,
+    pub ctx_mem: ContextMemory,
+    pes: Vec<Pe>,
+    mobs: Vec<Mob>,
+    pub stats: Stats,
+    /// Global cycle counter (monotonic across kernels).
+    cycle: u64,
+}
+
+impl CgraSim {
+    /// Build a simulator from a configuration.
+    pub fn new(cfg: ArchConfig) -> Self {
+        let topo = cfg.topo;
+        let fabric = Fabric::with_fifo(cfg.fabric, topo, cfg.hop_latency, cfg.port_fifo);
+        let mem = MemSystem::new(cfg.mem, 1 << 16);
+        let mut pes = Vec::with_capacity(topo.num_pes());
+        let mut mobs = Vec::with_capacity(topo.num_mobs());
+        for id in 0..topo.nodes() {
+            match topo.kind(topo.coord(id)) {
+                NodeKind::Pe => pes.push(Pe::new(id)),
+                NodeKind::Mob => mobs.push(Mob::new(id)),
+            }
+        }
+        Self {
+            ctx_mem: ContextMemory::with_capacity(cfg.ctx_bytes),
+            cfg,
+            fabric,
+            mem,
+            pes,
+            mobs,
+            stats: Stats::default(),
+            cycle: 0,
+        }
+    }
+
+    /// Paper-default simulator.
+    pub fn default_paper() -> Self {
+        Self::new(ArchConfig::default())
+    }
+
+    /// Host access: write words into external memory (untimed, between
+    /// kernels — Fig. 1's CPU side of the shared interconnect).
+    pub fn host_write_ext(&mut self, addr: u32, data: &[u32]) {
+        self.mem.host_write_ext(addr, data);
+    }
+
+    /// Host access: read words from external memory.
+    pub fn host_read_ext(&self, addr: u32, len: usize) -> Vec<u32> {
+        self.mem.host_read_ext(addr, len)
+    }
+
+    /// Load a kernel context: capacity check, configuration-time charge,
+    /// program distribution, transient-state reset.
+    pub fn load_context(&mut self, ctx: &KernelContext, routes: Option<RouteTable>) -> Result<u64> {
+        let topo = self.cfg.topo;
+        if ctx.pe_programs.len() != topo.num_pes() {
+            bail!(
+                "kernel '{}' has {} PE programs, array has {} PEs",
+                ctx.name,
+                ctx.pe_programs.len(),
+                topo.num_pes()
+            );
+        }
+        if ctx.mob_programs.len() != topo.num_mobs() {
+            bail!(
+                "kernel '{}' has {} MOB programs, array has {} MOBs",
+                ctx.name,
+                ctx.mob_programs.len(),
+                topo.num_mobs()
+            );
+        }
+        let config_cycles = self.ctx_mem.load(ctx, &mut self.stats)?;
+        for (i, pe) in self.pes.iter_mut().enumerate() {
+            pe.load_program(ctx.pe_programs[i].clone());
+        }
+        for (i, mob) in self.mobs.iter_mut().enumerate() {
+            mob.load_program(ctx.mob_programs[i].clone());
+        }
+        self.fabric.reset();
+        if let Some(r) = routes {
+            self.fabric.routes = r;
+        }
+        self.mem.reset_timing();
+        Ok(config_cycles)
+    }
+
+    /// All units halted?
+    fn all_halted(&self) -> bool {
+        self.pes.iter().all(Pe::halted) && self.mobs.iter().all(Mob::halted)
+    }
+
+    /// Advance one cycle.
+    fn tick(&mut self) {
+        for pe in &mut self.pes {
+            pe.tick(&mut self.fabric, &mut self.mem, self.cycle, &mut self.stats);
+        }
+        for mob in &mut self.mobs {
+            mob.tick(&mut self.fabric, &mut self.mem, self.cycle, &mut self.stats);
+        }
+        // Global barrier release: when every non-halted MOB is parked at a
+        // Barrier and the DMA engine is idle, all proceed together.
+        {
+            let mut any_waiting = false;
+            let mut all_waiting = true;
+            for mob in &self.mobs {
+                if mob.halted() {
+                    continue;
+                }
+                if mob.waiting_at_barrier() {
+                    any_waiting = true;
+                } else {
+                    all_waiting = false;
+                }
+            }
+            if any_waiting && all_waiting && !self.mem.dma_busy(self.cycle) {
+                for mob in &mut self.mobs {
+                    if !mob.halted() {
+                        mob.release_barrier();
+                    }
+                }
+            }
+        }
+        self.fabric.commit(self.cycle, &mut self.stats);
+        self.cycle += 1;
+        self.stats.cycles += 1;
+    }
+
+    /// Run the loaded kernel to completion (or `max_cycles`).
+    pub fn run(&mut self, max_cycles: u64) -> Result<SimOutcome> {
+        let start = self.cycle;
+        let config_cycles = self.stats.config_cycles;
+        while !self.all_halted() {
+            if self.cycle - start >= max_cycles {
+                bail!(
+                    "kernel did not complete within {max_cycles} cycles \
+                     (deadlock or mis-scheduled context?)"
+                );
+            }
+            self.tick();
+        }
+        if !self.fabric.quiescent() {
+            bail!("kernel halted with words still in flight (mapper bug)");
+        }
+        Ok(SimOutcome {
+            cycles: self.cycle - start,
+            config_cycles: self.stats.config_cycles - config_cycles,
+        })
+    }
+
+    /// Advance exactly one cycle (single-step tracing / debugging).
+    /// Returns `false` once all units have halted.
+    pub fn step(&mut self) -> bool {
+        if self.all_halted() {
+            return false;
+        }
+        self.tick();
+        true
+    }
+
+    /// Convenience: load then run.
+    pub fn execute(&mut self, ctx: &KernelContext, routes: Option<RouteTable>, max_cycles: u64) -> Result<SimOutcome> {
+        let config_cycles = self.load_context(ctx, routes)?;
+        let mut out = self.run(max_cycles)?;
+        out.config_cycles = config_cycles;
+        Ok(out)
+    }
+
+    /// Per-PE accumulator peek (tests).
+    pub fn pe_acc(&self, pe_index: usize, acc: usize) -> i32 {
+        self.pes[pe_index].acc(acc)
+    }
+
+    /// Number of PEs in the array.
+    pub fn num_pes(&self) -> usize {
+        self.pes.len()
+    }
+
+    /// Reset cumulative statistics (e.g. to exclude warm-up kernels from
+    /// a measurement window).
+    pub fn reset_stats(&mut self) {
+        self.stats = Stats::default();
+    }
+
+    /// Human-readable snapshot of every unit's execution state (phase,
+    /// pc, last stall, port occupancy) — the deadlock post-mortem tool.
+    pub fn dump_state(&self) -> String {
+        use std::fmt::Write;
+        let topo = self.cfg.topo;
+        let mut s = String::new();
+        let _ = writeln!(s, "cycle {}", self.cycle);
+        for (i, pe) in self.pes.iter().enumerate() {
+            let c = topo.coord(pe.node);
+            let ports: String = crate::isa::Dir::ALL
+                .iter()
+                .map(|&d| {
+                    if self.fabric.port_ready(pe.node, d) { format!("{d}✓") } else { format!("{d}·") }
+                })
+                .collect();
+            let _ = writeln!(
+                s,
+                "PE[{i}] ({},{}) {} in:{ports}",
+                c.r,
+                c.c,
+                pe.debug_state(),
+            );
+        }
+        for (i, mob) in self.mobs.iter().enumerate() {
+            let c = topo.coord(mob.node);
+            let ports: String = crate::isa::Dir::ALL
+                .iter()
+                .map(|&d| {
+                    if self.fabric.port_ready(mob.node, d) { format!("{d}✓") } else { format!("{d}·") }
+                })
+                .collect();
+            let _ = writeln!(s, "MOB[{i}] ({},{}) {} in:{ports}", c.r, c.c, mob.debug_state());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Dir, Dst, MemSpace, MobOp, MobProgram, PeInstr, PeProgram, Rider, Src};
+    use crate::util::quant::pack_slice;
+
+    /// A minimal hand-written kernel: MOB(0,1) streams 4 packed words of
+    /// A into PE(0,0) which MACs them against a constant held in a
+    /// register... here against themselves via latch, then halts.
+    /// Everything else idles.
+    fn tiny_kernel(topo: &crate::interconnect::Topology) -> KernelContext {
+        let mut pe_programs = vec![PeProgram::idle(); topo.num_pes()];
+        let mut mob_programs = vec![MobProgram::idle(); topo.num_mobs()];
+        // PE(0,0): acc0 += dot4(w, w) for each arriving word.
+        pe_programs[0] = PeProgram {
+            prologue: vec![],
+            body: vec![PeInstr::MacP {
+                d: 0,
+                a: Src::Port(Dir::West),
+                ra: Rider::latch(0),
+                b: Src::Reg(0),
+                rb: Rider::NONE,
+                take: None,
+            }],
+            trip: 4,
+            tile_epilogue: vec![],
+            tiles: 1,
+            epilogue: vec![],
+        };
+        // NB: `a` consumes the port word and latches it to r0; `b` reads
+        // r0 — the *previous* word (registers read at operand fetch see
+        // the pre-latch value only if b is fetched first; our PE reads
+        // operands in order a then b, so b sees the *new* value: this
+        // kernel computes dot4(w, w)). That ordering is part of the ISA
+        // contract and is what this test pins down.
+        let mob_idx = topo.mob_index(topo.mob(0, 1));
+        mob_programs[mob_idx] = MobProgram {
+            ops: vec![
+                MobOp::dma(0, 0, 4, true),
+                MobOp::Fence,
+                MobOp::load(MemSpace::L1, 0, 1, 4, Dir::East),
+            ],
+        };
+        KernelContext { pe_programs, mob_programs, name: "tiny".into() }
+    }
+
+    #[test]
+    fn end_to_end_tiny_kernel() {
+        let mut sim = CgraSim::default_paper();
+        let a: Vec<i8> = (1..=16).collect();
+        let words = pack_slice(&a);
+        sim.host_write_ext(0, &words);
+        let ctx = tiny_kernel(&sim.cfg.topo);
+        let out = sim.execute(&ctx, None, 10_000).unwrap();
+        // Expected: Σ dot4(chunk, chunk) over 4 chunks = Σ i² for i=1..16.
+        let expect: i32 = (1..=16).map(|i| i * i).sum();
+        assert_eq!(sim.pe_acc(0, 0), expect);
+        assert!(out.cycles > 0);
+        assert!(out.config_cycles > 0);
+        assert_eq!(sim.stats.pe_macp, 4);
+        assert_eq!(sim.stats.mob_load_words, 4);
+        assert_eq!(sim.stats.ext_reads, 4, "DMA staged 4 words across the boundary");
+    }
+
+    #[test]
+    fn wrong_program_count_rejected() {
+        let mut sim = CgraSim::default_paper();
+        let ctx = KernelContext {
+            pe_programs: vec![PeProgram::idle(); 3],
+            mob_programs: vec![MobProgram::idle(); 8],
+            name: "bad".into(),
+        };
+        assert!(sim.load_context(&ctx, None).is_err());
+    }
+
+    #[test]
+    fn deadlock_reports_error() {
+        let mut sim = CgraSim::default_paper();
+        let topo = sim.cfg.topo;
+        let mut ctx = KernelContext {
+            pe_programs: vec![PeProgram::idle(); topo.num_pes()],
+            mob_programs: vec![MobProgram::idle(); topo.num_mobs()],
+            name: "deadlock".into(),
+        };
+        // PE waits forever on a word that never comes.
+        ctx.pe_programs[0] = PeProgram {
+            prologue: vec![],
+            body: vec![PeInstr::Mov { dst: Dst::Null, a: Src::Port(Dir::North), ra: Rider::NONE }],
+            trip: 1,
+            tile_epilogue: vec![],
+            tiles: 1,
+            epilogue: vec![],
+        };
+        let err = sim.execute(&ctx, None, 100).unwrap_err();
+        assert!(err.to_string().contains("did not complete"));
+    }
+
+    #[test]
+    fn stats_accumulate_across_kernels() {
+        let mut sim = CgraSim::default_paper();
+        let a: Vec<i8> = (1..=16).collect();
+        sim.host_write_ext(0, &pack_slice(&a));
+        let ctx = tiny_kernel(&sim.cfg.topo);
+        sim.execute(&ctx, None, 10_000).unwrap();
+        sim.execute(&ctx, None, 10_000).unwrap();
+        assert_eq!(sim.stats.kernels, 2);
+        assert_eq!(sim.stats.pe_macp, 8);
+    }
+
+    #[test]
+    fn reset_stats_clears_window() {
+        let mut sim = CgraSim::default_paper();
+        let a: Vec<i8> = (1..=16).collect();
+        sim.host_write_ext(0, &pack_slice(&a));
+        let ctx = tiny_kernel(&sim.cfg.topo);
+        sim.execute(&ctx, None, 10_000).unwrap();
+        sim.reset_stats();
+        assert_eq!(sim.stats.pe_macp, 0);
+        assert_eq!(sim.stats.cycles, 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Cycle-level simulation engine.
+//!
+//! [`engine::CgraSim`] owns the architectural state (PEs, MOBs, fabric,
+//! memories, context memory) and advances it one cycle at a time until the
+//! loaded kernel halts. [`stats`] holds the event counters that the energy
+//! model ([`crate::energy`]) converts to joules and the benches convert to
+//! the paper's tables.
+
+pub mod engine;
+pub mod stats;
+
+pub use engine::{CgraSim, SimOutcome};
+pub use stats::Stats;

@@ -1,0 +1,181 @@
+//! Event counters collected during simulation.
+//!
+//! Every architecturally-significant event increments exactly one counter
+//! here; the energy model (DESIGN.md §5.3) is a dot product over these.
+//! Keeping them in one flat struct makes the accounting auditable: a bench
+//! can print the whole vector and EXPERIMENTS.md can cite it.
+
+/// Flat event-counter vector. All counts are cumulative over a run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Stats {
+    // ---- time ----
+    /// Total cycles simulated.
+    pub cycles: u64,
+    /// Cycles spent distributing contexts before kernel start (§III-A).
+    pub config_cycles: u64,
+
+    // ---- PE activity ----
+    /// Packed 4-lane MAC operations executed (4 int8 MACs each).
+    pub pe_macp: u64,
+    /// Scalar ALU operations executed.
+    pub pe_alu: u64,
+    /// Register file reads.
+    pub pe_reg_reads: u64,
+    /// Register file writes.
+    pub pe_reg_writes: u64,
+    /// Accumulator updates (MAC writes + clears + readouts).
+    pub pe_acc_access: u64,
+    /// Mov/route instructions executed.
+    pub pe_mov: u64,
+    /// Nop slots issued.
+    pub pe_nop: u64,
+    /// Cycles a PE wanted to issue but an input operand was missing.
+    pub pe_stall_operand: u64,
+    /// Cycles a PE wanted to issue but an output latch was full.
+    pub pe_stall_output: u64,
+    /// Cycles a PE stalled on an outstanding LoadW result (TAB4 ablation).
+    pub pe_stall_load: u64,
+    /// Cycles PEs spent halted while the kernel was still running.
+    pub pe_halted_cycles: u64,
+    /// Direct PE-issued loads (TAB4 ablation only).
+    pub pe_loads: u64,
+
+    // ---- MOB activity ----
+    /// Words issued by MOB LOAD streams.
+    pub mob_load_words: u64,
+    /// Words absorbed by MOB STORE streams.
+    pub mob_store_words: u64,
+    /// Cycles a MOB stalled waiting for memory data.
+    pub mob_stall_mem: u64,
+    /// Cycles a MOB stalled on fabric backpressure.
+    pub mob_stall_fabric: u64,
+    /// Address-generation operations (one per issued word).
+    pub mob_agu_ops: u64,
+
+    // ---- interconnect ----
+    /// Words moved across torus links (switchless fabric).
+    pub torus_hops: u64,
+    /// Cycles a staged torus word could not advance (latch full).
+    pub torus_backpressure_cycles: u64,
+    /// Packets injected into the switched NoC.
+    pub noc_packets: u64,
+    /// Router traversals on the switched NoC (one per hop).
+    pub noc_router_traversals: u64,
+    /// Link traversals on the switched NoC.
+    pub noc_link_hops: u64,
+    /// Cycles a packet waited for the destination latch (switched).
+    pub noc_eject_contention_cycles: u64,
+
+    // ---- memory ----
+    /// Word reads served by L1.
+    pub l1_reads: u64,
+    /// Word writes absorbed by L1.
+    pub l1_writes: u64,
+    /// L1 bank-conflict stall cycles.
+    pub l1_bank_conflicts: u64,
+    /// Word reads served by external memory.
+    pub ext_reads: u64,
+    /// Word writes absorbed by external memory.
+    pub ext_writes: u64,
+    /// Cycles requests waited in the external-memory queue.
+    pub ext_queue_cycles: u64,
+    /// Words moved by the DMA engine (Ext↔L1 staging).
+    pub dma_words: u64,
+
+    // ---- context / control ----
+    /// Bytes of context decoded and distributed.
+    pub ctx_bytes: u64,
+    /// Kernels launched.
+    pub kernels: u64,
+}
+
+impl Stats {
+    /// Merge another stats vector into this one (used when aggregating
+    /// multi-kernel workloads or per-thread shards).
+    pub fn merge(&mut self, other: &Stats) {
+        macro_rules! add {
+            ($($f:ident),* $(,)?) => { $( self.$f += other.$f; )* };
+        }
+        add!(
+            cycles, config_cycles, pe_macp, pe_alu, pe_reg_reads, pe_reg_writes,
+            pe_acc_access, pe_mov, pe_nop, pe_stall_operand, pe_stall_output,
+            pe_stall_load, pe_halted_cycles, pe_loads, mob_load_words,
+            mob_store_words, mob_stall_mem, mob_stall_fabric, mob_agu_ops,
+            torus_hops, torus_backpressure_cycles, noc_packets,
+            noc_router_traversals, noc_link_hops, noc_eject_contention_cycles,
+            l1_reads, l1_writes, l1_bank_conflicts, ext_reads, ext_writes,
+            ext_queue_cycles, dma_words, ctx_bytes, kernels,
+        );
+    }
+
+    /// Total int8 MAC count (4 per packed op) — the useful-work numerator
+    /// of utilization and MACs/cycle metrics.
+    pub fn macs(&self) -> u64 {
+        self.pe_macp * 4
+    }
+
+    /// MACs per cycle (array-level throughput).
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs() as f64 / self.cycles as f64
+        }
+    }
+
+    /// PE-issue utilization: fraction of PE-cycles that issued useful work
+    /// (MAC/ALU/MOV), given the number of PEs. Stall and halt cycles count
+    /// against it.
+    pub fn pe_utilization(&self, num_pes: u64) -> f64 {
+        if self.cycles == 0 || num_pes == 0 {
+            return 0.0;
+        }
+        let useful = self.pe_macp + self.pe_alu + self.pe_mov;
+        useful as f64 / (self.cycles * num_pes) as f64
+    }
+
+    /// Words that crossed the external-memory boundary (the TAB2 metric).
+    pub fn ext_words(&self) -> u64 {
+        self.ext_reads + self.ext_writes
+    }
+
+    /// All external traffic including DMA staging (DMA words cross the
+    /// boundary exactly once each).
+    pub fn ext_traffic_words(&self) -> u64 {
+        self.ext_words()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = Stats { cycles: 10, pe_macp: 5, ..Default::default() };
+        let b = Stats { cycles: 3, pe_macp: 2, ext_reads: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 13);
+        assert_eq!(a.pe_macp, 7);
+        assert_eq!(a.ext_reads, 7);
+    }
+
+    #[test]
+    fn macs_counts_lanes() {
+        let s = Stats { pe_macp: 3, ..Default::default() };
+        assert_eq!(s.macs(), 12);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let s = Stats { cycles: 100, pe_macp: 1600, ..Default::default() };
+        let u = s.pe_utilization(16);
+        assert!((u - 1.0).abs() < 1e-12);
+        assert_eq!(Stats::default().pe_utilization(16), 0.0);
+    }
+
+    #[test]
+    fn macs_per_cycle_zero_safe() {
+        assert_eq!(Stats::default().macs_per_cycle(), 0.0);
+    }
+}

@@ -1,0 +1,401 @@
+//! Host-side dense matrix containers and reference kernels.
+//!
+//! These are the *oracles*: the cycle-level CGRA simulation must match
+//! `MatI8::matmul` bit-exactly (int8 × int8 → int32 accumulation), and the
+//! quantized transformer path is checked against `MatF32` math.
+
+use std::fmt;
+
+/// Row-major `i8` matrix (activations/weights in the quantized edge path).
+#[derive(Clone, PartialEq, Eq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+/// Row-major `i32` matrix (accumulator domain).
+#[derive(Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+/// Row-major `f32` matrix (host float domain).
+#[derive(Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+macro_rules! common_impl {
+    ($ty:ident, $elem:ty, $zero:expr) => {
+        impl $ty {
+            /// All-zero matrix.
+            pub fn zeros(rows: usize, cols: usize) -> Self {
+                Self { rows, cols, data: vec![$zero; rows * cols] }
+            }
+
+            /// Build from a row-major slice; panics on size mismatch.
+            pub fn from_slice(rows: usize, cols: usize, data: &[$elem]) -> Self {
+                assert_eq!(data.len(), rows * cols, "shape mismatch");
+                Self { rows, cols, data: data.to_vec() }
+            }
+
+            /// Element accessor.
+            #[inline]
+            pub fn at(&self, r: usize, c: usize) -> $elem {
+                debug_assert!(r < self.rows && c < self.cols);
+                self.data[r * self.cols + c]
+            }
+
+            /// Mutable element accessor.
+            #[inline]
+            pub fn at_mut(&mut self, r: usize, c: usize) -> &mut $elem {
+                debug_assert!(r < self.rows && c < self.cols);
+                &mut self.data[r * self.cols + c]
+            }
+
+            /// Row slice.
+            #[inline]
+            pub fn row(&self, r: usize) -> &[$elem] {
+                &self.data[r * self.cols..(r + 1) * self.cols]
+            }
+
+            /// Transposed copy.
+            pub fn transpose(&self) -> Self {
+                let mut t = Self::zeros(self.cols, self.rows);
+                for r in 0..self.rows {
+                    for c in 0..self.cols {
+                        *t.at_mut(c, r) = self.at(r, c);
+                    }
+                }
+                t
+            }
+        }
+
+        impl fmt::Debug for $ty {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                writeln!(f, "{}[{}x{}]", stringify!($ty), self.rows, self.cols)?;
+                let show_r = self.rows.min(8);
+                let show_c = self.cols.min(8);
+                for r in 0..show_r {
+                    write!(f, "  ")?;
+                    for c in 0..show_c {
+                        write!(f, "{:?} ", self.at(r, c))?;
+                    }
+                    writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+                }
+                if self.rows > show_r {
+                    writeln!(f, "  …")?;
+                }
+                Ok(())
+            }
+        }
+    };
+}
+
+common_impl!(MatI8, i8, 0i8);
+common_impl!(MatI32, i32, 0i32);
+common_impl!(MatF32, f32, 0.0f32);
+
+impl MatI8 {
+    /// Reference int8 GEMM: `C = A·B` with i32 accumulation. This is the
+    /// bit-exact oracle the CGRA simulation is tested against (FIG3).
+    pub fn matmul(&self, b: &MatI8) -> MatI32 {
+        assert_eq!(self.cols, b.rows, "inner dims must agree");
+        let mut c = MatI32::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k) as i32;
+                if a == 0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for j in 0..b.cols {
+                    crow[j] += a * brow[j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    /// Widen to f32 with a dequantization scale.
+    pub fn dequant(&self, scale: f32) -> MatF32 {
+        MatF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f32 * scale).collect(),
+        }
+    }
+}
+
+impl MatI32 {
+    /// Dequantize an accumulator matrix with the product of input scales.
+    pub fn dequant(&self, scale: f32) -> MatF32 {
+        MatF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f32 * scale).collect(),
+        }
+    }
+
+    /// Requantize accumulators back to i8 with a scale (saturating).
+    pub fn requant(&self, scale: f32) -> MatI8 {
+        MatI8 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .map(|&v| {
+                    let q = (v as f32 * scale).round();
+                    q.clamp(i8::MIN as f32, i8::MAX as f32) as i8
+                })
+                .collect(),
+        }
+    }
+}
+
+impl MatF32 {
+    /// Reference f32 GEMM.
+    pub fn matmul(&self, b: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, b.rows, "inner dims must agree");
+        let mut c = MatF32::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                let brow = b.row(k);
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for j in 0..b.cols {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Element-wise addition.
+    pub fn add(&self, other: &MatF32) -> MatF32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        MatF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    /// Add a row vector (bias broadcast).
+    pub fn add_bias(&self, bias: &[f32]) -> MatF32 {
+        assert_eq!(bias.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(r, c) += bias[c];
+            }
+        }
+        out
+    }
+
+    /// Row-wise softmax (reference for the host-executed attention step).
+    pub fn softmax_rows(&self) -> MatF32 {
+        let mut out = MatF32::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for c in 0..self.cols {
+                let e = (row[c] - m).exp();
+                *out.at_mut(r, c) = e;
+                denom += e;
+            }
+            for c in 0..self.cols {
+                *out.at_mut(r, c) /= denom;
+            }
+        }
+        out
+    }
+
+    /// Row-wise LayerNorm with learned scale/shift.
+    pub fn layernorm_rows(&self, gamma: &[f32], beta: &[f32], eps: f32) -> MatF32 {
+        assert_eq!(gamma.len(), self.cols);
+        assert_eq!(beta.len(), self.cols);
+        let mut out = MatF32::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mean = row.iter().sum::<f32>() / self.cols as f32;
+            let var =
+                row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / self.cols as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            for c in 0..self.cols {
+                *out.at_mut(r, c) = (row[c] - mean) * inv * gamma[c] + beta[c];
+            }
+        }
+        out
+    }
+
+    /// Element-wise GELU (tanh approximation, as in the JAX model).
+    pub fn gelu(&self) -> MatF32 {
+        MatF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| gelu_scalar(x)).collect(),
+        }
+    }
+
+    /// Max absolute value (for symmetric quantization calibration).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Symmetric per-tensor quantization to i8; returns (matrix, scale)
+    /// such that `data ≈ q * scale`.
+    pub fn quantize(&self) -> (MatI8, f32) {
+        let amax = self.abs_max().max(1e-8);
+        let scale = amax / 127.0;
+        let q = MatI8 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+                .collect(),
+        };
+        (q, scale)
+    }
+
+    /// Max absolute element-wise difference to another matrix.
+    pub fn max_abs_diff(&self, other: &MatF32) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// GELU with the tanh approximation used by the JAX model
+/// (`0.5x(1+tanh(√(2/π)(x+0.044715x³)))`).
+pub fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShiftRng;
+
+    #[test]
+    fn i8_matmul_small_exact() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = MatI8::from_slice(2, 2, &[1, 2, 3, 4]);
+        let b = MatI8::from_slice(2, 2, &[5, 6, 7, 8]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn i8_matmul_identity() {
+        let mut id = MatI8::zeros(3, 3);
+        for i in 0..3 {
+            *id.at_mut(i, i) = 1;
+        }
+        let a = MatI8::from_slice(3, 3, &[1, -2, 3, 4, 5, -6, 7, 8, 9]);
+        let c = a.matmul(&id);
+        assert_eq!(c.data, a.data.iter().map(|&v| v as i32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn i8_matmul_negative_saturating_free() {
+        // Extreme values must not overflow i32: 128 terms of 127*127.
+        let a = MatI8::from_slice(1, 128, &[127; 128]);
+        let b = MatI8::from_slice(128, 1, &[127; 128]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data[0], 127 * 127 * 128);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = MatI8::from_slice(2, 3, &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6);
+    }
+
+    #[test]
+    fn f32_matmul_matches_i8_on_small_ints() {
+        let mut rng = XorShiftRng::new(21);
+        let mut a8 = MatI8::zeros(5, 7);
+        let mut b8 = MatI8::zeros(7, 3);
+        rng.fill_i8(&mut a8.data, 9);
+        rng.fill_i8(&mut b8.data, 9);
+        let cf = a8.dequant(1.0).matmul(&b8.dequant(1.0));
+        let ci = a8.matmul(&b8);
+        for (x, y) in cf.data.iter().zip(&ci.data) {
+            assert_eq!(*x, *y as f32);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let m = MatF32::from_slice(2, 3, &[1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = m.softmax_rows();
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // Monotone: larger logits → larger probabilities.
+        assert!(s.at(0, 2) > s.at(0, 1) && s.at(0, 1) > s.at(0, 0));
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let m = MatF32::from_slice(1, 2, &[1000.0, 1001.0]);
+        let s = m.softmax_rows();
+        assert!(s.data.iter().all(|v| v.is_finite()));
+        assert!((s.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let m = MatF32::from_slice(1, 4, &[1.0, 2.0, 3.0, 4.0]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let out = m.layernorm_rows(&g, &b, 1e-5);
+        let mean: f32 = out.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = out.row(0).iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quantize_dequantize_bounded_error() {
+        let mut rng = XorShiftRng::new(31);
+        let data: Vec<f32> = (0..64).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let m = MatF32::from_slice(8, 8, &data);
+        let (q, scale) = m.quantize();
+        let back = q.dequant(scale);
+        // Error bounded by half a quantization step.
+        assert!(m.max_abs_diff(&back) <= scale * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!(gelu_scalar(0.0).abs() < 1e-7);
+        assert!((gelu_scalar(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu_scalar(-100.0).abs() < 1e-3);
+        // gelu(1) ≈ 0.8412
+        assert!((gelu_scalar(1.0) - 0.8412).abs() < 1e-3);
+    }
+
+    #[test]
+    fn requant_saturates() {
+        let m = MatI32::from_slice(1, 2, &[100_000, -100_000]);
+        let q = m.requant(0.01);
+        assert_eq!(q.data, vec![127, -128]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic RNG, property-test
+//! harness, host-side matrix helpers, fixed-point/quantization math.
+//!
+//! The build environment vendors no `rand`/`proptest`, so these are
+//! hand-rolled and deliberately tiny but well-tested.
+
+pub mod mat;
+pub mod prop;
+pub mod quant;
+pub mod rng;
+
+pub use mat::{MatI8, MatI32, MatF32};
+pub use prop::{prop_check, PropConfig};
+pub use rng::XorShiftRng;

@@ -1,0 +1,145 @@
+//! Minimal property-testing harness (no `proptest` in the vendored crate
+//! set). A property is a closure over a seeded [`XorShiftRng`]; the harness
+//! runs it for `cases` seeds and reports the first failing seed so a
+//! failure is reproducible with `prop_check_seed`.
+
+use super::rng::XorShiftRng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of random cases to execute.
+    pub cases: u64,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, base_seed: 0xC64A_ED6E }
+    }
+}
+
+/// Outcome of a single property case.
+pub enum CaseResult {
+    /// Property held.
+    Ok,
+    /// Property failed with a description of the counterexample.
+    Fail(String),
+    /// Case was vacuous (generated inputs outside the property's domain);
+    /// does not count towards the case budget.
+    Discard,
+}
+
+/// Run `prop` for `cfg.cases` seeded cases; panic with the failing seed and
+/// message on the first failure.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the xla_extension rpath)
+/// use cgra_edge::util::prop::{prop_check, PropConfig, CaseResult};
+/// prop_check("addition commutes", PropConfig::default(), |rng| {
+///     let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+///     if a + b == b + a { CaseResult::Ok } else { CaseResult::Fail(format!("{a} {b}")) }
+/// });
+/// ```
+pub fn prop_check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut XorShiftRng) -> CaseResult,
+{
+    let mut executed = 0u64;
+    let mut attempts = 0u64;
+    let max_attempts = cfg.cases * 16;
+    while executed < cfg.cases {
+        if attempts >= max_attempts {
+            panic!(
+                "property '{name}': too many discards ({attempts} attempts for {executed} cases)"
+            );
+        }
+        let seed = cfg.base_seed.wrapping_add(attempts);
+        attempts += 1;
+        let mut rng = XorShiftRng::new(seed);
+        match prop(&mut rng) {
+            CaseResult::Ok => executed += 1,
+            CaseResult::Discard => {}
+            CaseResult::Fail(msg) => {
+                panic!("property '{name}' failed (seed {seed:#x}): {msg}")
+            }
+        }
+    }
+}
+
+/// Re-run a single case of a property at a known seed (for debugging a
+/// failure reported by [`prop_check`]).
+pub fn prop_check_seed<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut XorShiftRng) -> CaseResult,
+{
+    let mut rng = XorShiftRng::new(seed);
+    match prop(&mut rng) {
+        CaseResult::Ok | CaseResult::Discard => {}
+        CaseResult::Fail(msg) => panic!("property '{name}' failed (seed {seed:#x}): {msg}"),
+    }
+}
+
+/// Convenience: build a [`CaseResult`] from a boolean condition.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> CaseResult {
+    if cond {
+        CaseResult::Ok
+    } else {
+        CaseResult::Fail(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("trivial", PropConfig { cases: 32, base_seed: 1 }, |_| {
+            count += 1;
+            CaseResult::Ok
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check("always-fails", PropConfig::default(), |_| {
+            CaseResult::Fail("nope".into())
+        });
+    }
+
+    #[test]
+    fn discards_do_not_count() {
+        let mut executed = 0;
+        let mut calls = 0;
+        prop_check("half-discard", PropConfig { cases: 16, base_seed: 5 }, |rng| {
+            calls += 1;
+            if rng.next_u64() % 2 == 0 {
+                CaseResult::Discard
+            } else {
+                executed += 1;
+                CaseResult::Ok
+            }
+        });
+        assert_eq!(executed, 16);
+        assert!(calls > 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn all_discards_panics() {
+        prop_check("all-discard", PropConfig { cases: 4, base_seed: 2 }, |_| {
+            CaseResult::Discard
+        });
+    }
+
+    #[test]
+    fn ensure_builds_results() {
+        assert!(matches!(ensure(true, || "x".into()), CaseResult::Ok));
+        assert!(matches!(ensure(false, || "x".into()), CaseResult::Fail(_)));
+    }
+}

@@ -1,0 +1,181 @@
+//! Packed-word and quantization helpers.
+//!
+//! The CGRA datapath is 32-bit; the packed int8 mode carries four lanes per
+//! word (paper §III-B1: "dot-product by incorporating additions and
+//! multiplications on packed data"). These helpers define the bit-level
+//! packing used by the ISA, the MOBs and the host-side data marshalling —
+//! one definition, used everywhere, tested here.
+
+/// Pack four i8 lanes into a little-endian u32 word (lane 0 = low byte).
+#[inline]
+pub fn pack4(lanes: [i8; 4]) -> u32 {
+    u32::from_le_bytes([
+        lanes[0] as u8,
+        lanes[1] as u8,
+        lanes[2] as u8,
+        lanes[3] as u8,
+    ])
+}
+
+/// Unpack a u32 word into four i8 lanes.
+#[inline]
+pub fn unpack4(word: u32) -> [i8; 4] {
+    let b = word.to_le_bytes();
+    [b[0] as i8, b[1] as i8, b[2] as i8, b[3] as i8]
+}
+
+/// 4-lane signed dot product with i32 accumulation — the PE's packed MAC
+/// primitive. `dot4(a, b) = Σ a[i]·b[i]`.
+#[inline]
+pub fn dot4(a: u32, b: u32) -> i32 {
+    let av = unpack4(a);
+    let bv = unpack4(b);
+    av.iter()
+        .zip(bv.iter())
+        .map(|(&x, &y)| x as i32 * y as i32)
+        .sum()
+}
+
+/// Pack a slice of i8 into u32 words, zero-padding the tail lane-wise.
+pub fn pack_slice(src: &[i8]) -> Vec<u32> {
+    src.chunks(4)
+        .map(|ch| {
+            let mut lanes = [0i8; 4];
+            lanes[..ch.len()].copy_from_slice(ch);
+            pack4(lanes)
+        })
+        .collect()
+}
+
+/// Unpack u32 words into i8 values, truncated to `len`.
+pub fn unpack_slice(words: &[u32], len: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(len);
+    'outer: for &w in words {
+        for lane in unpack4(w) {
+            if out.len() == len {
+                break 'outer;
+            }
+            out.push(lane);
+        }
+    }
+    assert_eq!(out.len(), len, "not enough words to unpack {len} values");
+    out
+}
+
+/// f32 <-> u32 bit transmutation for carrying floats over the 32-bit fabric.
+#[inline]
+pub fn f32_to_word(v: f32) -> u32 {
+    v.to_bits()
+}
+
+/// See [`f32_to_word`].
+#[inline]
+pub fn word_to_f32(w: u32) -> f32 {
+    f32::from_bits(w)
+}
+
+/// Saturating i32 → i8 requantization with a power-of-two right shift and
+/// round-to-nearest-even-free rounding (round-half-away, matching the
+/// hardware's cheap rounder). Used by the PE's ACCOUT-requant mode.
+#[inline]
+pub fn requant_shift(acc: i32, shift: u8) -> i8 {
+    if shift == 0 {
+        return acc.clamp(i8::MIN as i32, i8::MAX as i32) as i8;
+    }
+    let half = 1i64 << (shift - 1);
+    let v = ((acc as i64 + if acc >= 0 { half } else { -half }) >> shift) as i32;
+    v.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, prop_check, PropConfig};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let lanes = [-128i8, -1, 0, 127];
+        assert_eq!(unpack4(pack4(lanes)), lanes);
+    }
+
+    #[test]
+    fn dot4_known() {
+        let a = pack4([1, 2, 3, 4]);
+        let b = pack4([5, 6, 7, 8]);
+        assert_eq!(dot4(a, b), 5 + 12 + 21 + 32);
+    }
+
+    #[test]
+    fn dot4_extremes_no_overflow() {
+        let a = pack4([-128; 4]);
+        let b = pack4([-128; 4]);
+        assert_eq!(dot4(a, b), 4 * 128 * 128);
+        let b = pack4([127; 4]);
+        assert_eq!(dot4(a, b), 4 * -128 * 127);
+    }
+
+    #[test]
+    fn pack_slice_pads_tail() {
+        let words = pack_slice(&[1, 2, 3, 4, 5]);
+        assert_eq!(words.len(), 2);
+        assert_eq!(unpack4(words[1]), [5, 0, 0, 0]);
+    }
+
+    #[test]
+    fn unpack_slice_truncates() {
+        let words = pack_slice(&[1, 2, 3, 4, 5]);
+        assert_eq!(unpack_slice(&words, 5), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn f32_word_roundtrip() {
+        for v in [0.0f32, -1.5, f32::MAX, f32::MIN_POSITIVE, 3.14159] {
+            assert_eq!(word_to_f32(f32_to_word(v)), v);
+        }
+    }
+
+    #[test]
+    fn requant_shift_zero_is_clamp() {
+        assert_eq!(requant_shift(300, 0), 127);
+        assert_eq!(requant_shift(-300, 0), -128);
+        assert_eq!(requant_shift(5, 0), 5);
+    }
+
+    #[test]
+    fn requant_shift_rounds_half_away() {
+        assert_eq!(requant_shift(3, 1), 2); // 1.5 → 2
+        assert_eq!(requant_shift(-3, 1), -2); // -1.5 → -2
+        assert_eq!(requant_shift(2, 1), 1);
+        assert_eq!(requant_shift(100, 3), 13); // 12.5 → 13
+    }
+
+    #[test]
+    fn prop_pack_roundtrip_random() {
+        prop_check("pack4 roundtrip", PropConfig::default(), |rng| {
+            let lanes = [rng.i8(), rng.i8(), rng.i8(), rng.i8()];
+            ensure(unpack4(pack4(lanes)) == lanes, || format!("{lanes:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_dot4_matches_scalar() {
+        prop_check("dot4 == scalar dot", PropConfig::default(), |rng| {
+            let a = [rng.i8(), rng.i8(), rng.i8(), rng.i8()];
+            let b = [rng.i8(), rng.i8(), rng.i8(), rng.i8()];
+            let expect: i32 =
+                a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            ensure(dot4(pack4(a), pack4(b)) == expect, || format!("{a:?} {b:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_pack_slice_roundtrip() {
+        prop_check("pack_slice roundtrip", PropConfig::default(), |rng| {
+            let len = rng.range(1, 64);
+            let mut v = vec![0i8; len];
+            rng.fill_i8(&mut v, 127);
+            let words = pack_slice(&v);
+            ensure(unpack_slice(&words, len) == v, || format!("len {len}"))
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! Deterministic xorshift* PRNG.
+//!
+//! Used everywhere randomness is needed (workload generation, property
+//! tests, request arrival processes) so every experiment in EXPERIMENTS.md
+//! is reproducible from a printed seed.
+
+/// xorshift64* generator. Not cryptographic; fast, well-distributed enough
+/// for workload synthesis and property testing.
+#[derive(Debug, Clone)]
+pub struct XorShiftRng {
+    state: u64,
+}
+
+impl XorShiftRng {
+    /// Create a generator from a seed. A zero seed is remapped (xorshift
+    /// has an all-zero fixed point).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Next 32-bit value.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be non-zero.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Multiply-shift bounded sampling (Lemire); slight modulo bias is
+        // irrelevant at our bounds (<2^32).
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform i8 over the full range.
+    pub fn i8(&mut self) -> i8 {
+        self.next_u32() as i8
+    }
+
+    /// Uniform i8 in `[-bound, bound]` (inclusive); used for quantized
+    /// weights where full-scale values would saturate accumulators in
+    /// hand-written expectation tests.
+    pub fn i8_bounded(&mut self, bound: i8) -> i8 {
+        debug_assert!(bound > 0);
+        let span = 2 * bound as i64 + 1;
+        (self.below(span as u64) as i64 - bound as i64) as i8
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Approximately standard-normal f32 (sum of 12 uniforms minus 6 —
+    /// Irwin–Hall; adequate for synthetic activations/weights).
+    pub fn normal(&mut self) -> f32 {
+        let mut acc = 0.0f32;
+        for _ in 0..12 {
+            acc += self.f32();
+        }
+        acc - 6.0
+    }
+
+    /// Exponentially-distributed f64 with the given rate (for Poisson
+    /// request arrival processes in the coordinator benches).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        // Avoid ln(0).
+        -(1.0 - u).max(f64::MIN_POSITIVE).ln() / rate
+    }
+
+    /// Fill a slice with uniform i8 values in `[-bound, bound]`.
+    pub fn fill_i8(&mut self, buf: &mut [i8], bound: i8) {
+        for v in buf.iter_mut() {
+            *v = self.i8_bounded(bound);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = XorShiftRng::new(7);
+        let mut b = XorShiftRng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShiftRng::new(1);
+        let mut b = XorShiftRng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = XorShiftRng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = XorShiftRng::new(42);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn range_inclusive_exclusive() {
+        let mut r = XorShiftRng::new(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let v = r.range(5, 8);
+            assert!((5..8).contains(&v));
+            seen_lo |= v == 5;
+            seen_hi |= v == 7;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn i8_bounded_within_bounds() {
+        let mut r = XorShiftRng::new(9);
+        let mut min = i8::MAX;
+        let mut max = i8::MIN;
+        for _ in 0..10_000 {
+            let v = r.i8_bounded(5);
+            assert!((-5..=5).contains(&v));
+            min = min.min(v);
+            max = max.max(v);
+        }
+        assert_eq!(min, -5);
+        assert_eq!(max, 5);
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut r = XorShiftRng::new(11);
+        for _ in 0..10_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_rough_moments() {
+        let mut r = XorShiftRng::new(13);
+        let n = 50_000;
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for _ in 0..n {
+            let v = r.normal() as f64;
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn exp_positive_mean_close() {
+        let mut r = XorShiftRng::new(17);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.exp(2.0);
+            assert!(v >= 0.0);
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.05, "mean {mean}");
+    }
+}

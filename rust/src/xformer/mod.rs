@@ -1,0 +1,17 @@
+//! Transformer workloads (§IV-B): the encoder layer lowered to the GEMM
+//! sequence the CGRA accelerates, with host-side softmax / LayerNorm /
+//! GELU (the paper's system accelerates GEMM; everything else runs on the
+//! host CPU of Fig. 1 and is costed by the scalar GPP model).
+//!
+//! Quantization scheme: symmetric per-tensor int8 for every GEMM operand
+//! (weights offline, activations per layer), exact int32 accumulation on
+//! the array, float dequantization on the host between ops. The float
+//! reference path ([`model::EncoderModel::forward_f32`]) is the oracle
+//! the quantized CGRA path is compared against (and itself matches the
+//! AOT-compiled JAX model via the runtime, FIG-E2E).
+
+pub mod model;
+pub mod run;
+
+pub use model::{EncoderModel, EncoderParams, XformerConfig};
+pub use run::{run_encoder_on_cgra, CgraEncoderReport};

@@ -1,0 +1,312 @@
+//! Host-side transformer encoder model (float reference + parameters).
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation so the rust
+//! float path, the CGRA int8 path and the AOT-compiled JAX artifact can
+//! be cross-checked three ways.
+
+use crate::util::mat::MatF32;
+use crate::util::rng::XorShiftRng;
+use anyhow::{ensure, Result};
+
+/// Encoder hyper-parameters (a tiny edge-class encoder by default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct XformerConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+}
+
+impl Default for XformerConfig {
+    fn default() -> Self {
+        Self { d_model: 64, n_heads: 4, d_ff: 128, n_layers: 2, seq: 32 }
+    }
+}
+
+impl XformerConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (weights only; biases omitted in this
+    /// model, as in the JAX artifact).
+    pub fn param_count(&self) -> usize {
+        // Per layer: Wq, Wk, Wv, Wo (d×d each) + W1 (d×ff) + W2 (ff×d)
+        // + 2 LayerNorm scale/shift pairs.
+        self.n_layers * (4 * self.d_model * self.d_model
+            + 2 * self.d_model * self.d_ff
+            + 4 * self.d_model)
+    }
+
+    /// GEMM MAC count for one forward pass (the CGRA-accelerated part).
+    pub fn gemm_macs(&self) -> u64 {
+        let (s, d, f) = (self.seq as u64, self.d_model as u64, self.d_ff as u64);
+        let h = self.n_heads as u64;
+        let dh = d / h;
+        let per_layer = 4 * s * d * d // Q,K,V,O projections
+            + h * (s * s * dh) * 2 // scores + context
+            + 2 * s * d * f; // FFN
+        per_layer * self.n_layers as u64
+    }
+}
+
+/// One encoder layer's weights.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub wq: MatF32,
+    pub wk: MatF32,
+    pub wv: MatF32,
+    pub wo: MatF32,
+    pub w1: MatF32,
+    pub w2: MatF32,
+    pub ln1_gamma: Vec<f32>,
+    pub ln1_beta: Vec<f32>,
+    pub ln2_gamma: Vec<f32>,
+    pub ln2_beta: Vec<f32>,
+}
+
+/// All model weights.
+#[derive(Debug, Clone)]
+pub struct EncoderParams {
+    pub layers: Vec<LayerParams>,
+}
+
+impl EncoderParams {
+    /// Xavier-ish random initialization from a seed (deterministic; the
+    /// same seed reproduces the model across runs and matches the
+    /// AOT-export path which loads these weights from the manifest).
+    pub fn init(cfg: &XformerConfig, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let mut mat = |rows: usize, cols: usize| {
+            let scale = (2.0 / (rows + cols) as f32).sqrt();
+            let mut m = MatF32::zeros(rows, cols);
+            for v in &mut m.data {
+                *v = rng.normal() * scale;
+            }
+            m
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerParams {
+                wq: mat(cfg.d_model, cfg.d_model),
+                wk: mat(cfg.d_model, cfg.d_model),
+                wv: mat(cfg.d_model, cfg.d_model),
+                wo: mat(cfg.d_model, cfg.d_model),
+                w1: mat(cfg.d_model, cfg.d_ff),
+                w2: mat(cfg.d_ff, cfg.d_model),
+                ln1_gamma: vec![1.0; cfg.d_model],
+                ln1_beta: vec![0.0; cfg.d_model],
+                ln2_gamma: vec![1.0; cfg.d_model],
+                ln2_beta: vec![0.0; cfg.d_model],
+            })
+            .collect();
+        Self { layers }
+    }
+}
+
+impl EncoderParams {
+    /// Load from the AOT export's flat f32 blob (manifest order per
+    /// layer: ln1_gamma, ln1_beta, wq, wk, wv, wo, ln2_gamma, ln2_beta,
+    /// w1, w2 — the contract shared with `python/compile/model.py`).
+    pub fn from_blob(cfg: &XformerConfig, blob: &[f32]) -> Result<Self> {
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Result<Vec<f32>> {
+            ensure!(off + n <= blob.len(), "param blob too short at offset {off}");
+            let v = blob[off..off + n].to_vec();
+            off += n;
+            Ok(v)
+        };
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let ln1_gamma = take(d)?;
+            let ln1_beta = take(d)?;
+            let wq = MatF32 { rows: d, cols: d, data: take(d * d)? };
+            let wk = MatF32 { rows: d, cols: d, data: take(d * d)? };
+            let wv = MatF32 { rows: d, cols: d, data: take(d * d)? };
+            let wo = MatF32 { rows: d, cols: d, data: take(d * d)? };
+            let ln2_gamma = take(d)?;
+            let ln2_beta = take(d)?;
+            let w1 = MatF32 { rows: d, cols: f, data: take(d * f)? };
+            let w2 = MatF32 { rows: f, cols: d, data: take(f * d)? };
+            layers.push(LayerParams {
+                wq,
+                wk,
+                wv,
+                wo,
+                w1,
+                w2,
+                ln1_gamma,
+                ln1_beta,
+                ln2_gamma,
+                ln2_beta,
+            });
+        }
+        ensure!(off == blob.len(), "param blob has {} trailing words", blob.len() - off);
+        Ok(Self { layers })
+    }
+}
+
+/// The float encoder (reference path).
+#[derive(Debug, Clone)]
+pub struct EncoderModel {
+    pub cfg: XformerConfig,
+    pub params: EncoderParams,
+}
+
+impl EncoderModel {
+    pub fn new(cfg: XformerConfig, seed: u64) -> Self {
+        Self { cfg, params: EncoderParams::init(&cfg, seed) }
+    }
+
+    /// Build from the AOT artifact's parameter blob.
+    pub fn from_blob(cfg: XformerConfig, blob: &[f32]) -> Result<Self> {
+        Ok(Self { cfg, params: EncoderParams::from_blob(&cfg, blob)? })
+    }
+
+    /// Multi-head self-attention in float (reference).
+    pub fn attention_f32(&self, layer: &LayerParams, x: &MatF32) -> MatF32 {
+        let cfg = &self.cfg;
+        let (s, dh) = (cfg.seq, cfg.d_head());
+        let q = x.matmul(&layer.wq);
+        let k = x.matmul(&layer.wk);
+        let v = x.matmul(&layer.wv);
+        let mut ctx = MatF32::zeros(s, cfg.d_model);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for h in 0..cfg.n_heads {
+            let lo = h * dh;
+            // Slice head h.
+            let slice = |m: &MatF32| {
+                let mut out = MatF32::zeros(s, dh);
+                for r in 0..s {
+                    for c in 0..dh {
+                        *out.at_mut(r, c) = m.at(r, lo + c);
+                    }
+                }
+                out
+            };
+            let (qh, kh, vh) = (slice(&q), slice(&k), slice(&v));
+            let mut scores = qh.matmul(&kh.transpose());
+            for v in &mut scores.data {
+                *v *= scale;
+            }
+            let probs = scores.softmax_rows();
+            let out = probs.matmul(&vh);
+            for r in 0..s {
+                for c in 0..dh {
+                    *ctx.at_mut(r, lo + c) = out.at(r, c);
+                }
+            }
+        }
+        ctx.matmul(&layer.wo)
+    }
+
+    /// One encoder layer (pre-LN residual structure).
+    pub fn layer_f32(&self, layer: &LayerParams, x: &MatF32) -> MatF32 {
+        let ln1 = x.layernorm_rows(&layer.ln1_gamma, &layer.ln1_beta, 1e-5);
+        let attn = self.attention_f32(layer, &ln1);
+        let x1 = x.add(&attn);
+        let ln2 = x1.layernorm_rows(&layer.ln2_gamma, &layer.ln2_beta, 1e-5);
+        let ff = ln2.matmul(&layer.w1).gelu().matmul(&layer.w2);
+        x1.add(&ff)
+    }
+
+    /// Full forward pass in float.
+    pub fn forward_f32(&self, x: &MatF32) -> Result<MatF32> {
+        ensure!(
+            x.rows == self.cfg.seq && x.cols == self.cfg.d_model,
+            "input must be seq×d_model"
+        );
+        let mut h = x.clone();
+        for layer in &self.params.layers {
+            h = self.layer_f32(layer, &h);
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(cfg: &XformerConfig, seed: u64) -> MatF32 {
+        let mut rng = XorShiftRng::new(seed);
+        let mut x = MatF32::zeros(cfg.seq, cfg.d_model);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        x
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let cfg = XformerConfig::default();
+        let m = EncoderModel::new(cfg, 7);
+        let x = input(&cfg, 9);
+        let y1 = m.forward_f32(&x).unwrap();
+        let y2 = m.forward_f32(&x).unwrap();
+        assert_eq!(y1.rows, cfg.seq);
+        assert_eq!(y1.cols, cfg.d_model);
+        assert_eq!(y1.max_abs_diff(&y2), 0.0);
+        assert!(y1.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let cfg = XformerConfig::default();
+        let x = input(&cfg, 9);
+        let y1 = EncoderModel::new(cfg, 1).forward_f32(&x).unwrap();
+        let y2 = EncoderModel::new(cfg, 2).forward_f32(&x).unwrap();
+        assert!(y1.max_abs_diff(&y2) > 1e-3);
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // With Wv = I and Wo = I, each attention output row lies in the
+        // convex hull of the value rows — check max bound.
+        let cfg = XformerConfig { n_layers: 1, ..Default::default() };
+        let mut m = EncoderModel::new(cfg, 3);
+        let d = cfg.d_model;
+        let mut eye = MatF32::zeros(d, d);
+        for i in 0..d {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        m.params.layers[0].wv = eye.clone();
+        m.params.layers[0].wo = eye;
+        let x = input(&cfg, 5);
+        let out = m.attention_f32(&m.params.layers[0].clone(), &x);
+        let xmax = x.abs_max();
+        assert!(out.abs_max() <= xmax + 1e-4);
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let cfg = XformerConfig::default();
+        let p = EncoderParams::init(&cfg, 1);
+        let counted: usize = p
+            .layers
+            .iter()
+            .map(|l| {
+                l.wq.data.len()
+                    + l.wk.data.len()
+                    + l.wv.data.len()
+                    + l.wo.data.len()
+                    + l.w1.data.len()
+                    + l.w2.data.len()
+                    + l.ln1_gamma.len()
+                    + l.ln1_beta.len()
+                    + l.ln2_gamma.len()
+                    + l.ln2_beta.len()
+            })
+            .sum();
+        assert_eq!(counted, cfg.param_count());
+    }
+
+    #[test]
+    fn gemm_macs_positive_and_scales() {
+        let small = XformerConfig::default().gemm_macs();
+        let big = XformerConfig { d_model: 128, d_ff: 256, ..Default::default() }.gemm_macs();
+        assert!(big > 3 * small);
+    }
+}

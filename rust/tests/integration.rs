@@ -1,0 +1,172 @@
+//! Cross-module integration tests (FIG1/FIG2 structural checks plus the
+//! runtime↔simulator numeric bridge).
+
+use cgra_edge::config::ArchConfig;
+use cgra_edge::energy::EnergyModel;
+use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, OutputMode};
+use cgra_edge::sim::CgraSim;
+use cgra_edge::util::mat::{MatF32, MatI8};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::{run_encoder_on_cgra, EncoderModel, XformerConfig};
+
+/// FIG1 structural: the host↔CGRA round trip of Fig. 1 — host writes
+/// operands to the shared external memory, configures the array through
+/// the 4 KiB context memory (configuration time charged), the kernel
+/// runs, and the host reads results back. No simulator-internal access.
+#[test]
+fn fig1_system_roundtrip() {
+    let mut rng = XorShiftRng::new(0x0F16_1);
+    let mut sim = CgraSim::new(ArchConfig::default());
+    let (m, k, n) = (32, 32, 32);
+    let mut a = MatI8::zeros(m, k);
+    let mut b = MatI8::zeros(k, n);
+    rng.fill_i8(&mut a.data, 12);
+    rng.fill_i8(&mut b.data, 12);
+    let plan = GemmPlan::new(&sim.cfg, m, k, n, OutputMode::Quant { shift: 7 }).unwrap();
+    let run = run_gemm(&mut sim, &a, &b, &plan).unwrap();
+    assert!(run.outcome.config_cycles > 0, "context distribution must take time");
+    assert!(sim.stats.ctx_bytes > 0 && sim.stats.ctx_bytes <= 4096);
+    assert_eq!(run.c_i8.unwrap(), oracle_quant(&a, &b, 7));
+}
+
+/// Whole-stack determinism: same seed → identical cycles, stats, output.
+#[test]
+fn whole_stack_deterministic() {
+    let once = || {
+        let mut rng = XorShiftRng::new(0xDE7);
+        let mut sim = CgraSim::new(ArchConfig::default());
+        let mut a = MatI8::zeros(24, 40);
+        let mut b = MatI8::zeros(40, 24);
+        rng.fill_i8(&mut a.data, 20);
+        rng.fill_i8(&mut b.data, 20);
+        let plan = GemmPlan::new(&sim.cfg, 24, 40, 24, OutputMode::Quant { shift: 6 }).unwrap();
+        let run = run_gemm(&mut sim, &a, &b, &plan).unwrap();
+        (run.outcome.cycles, sim.stats.clone(), run.c_i8.unwrap())
+    };
+    let (c1, s1, o1) = once();
+    let (c2, s2, o2) = once();
+    assert_eq!(c1, c2);
+    assert_eq!(s1, s2);
+    assert_eq!(o1, o2);
+}
+
+/// Energy accounting sanity across the full encoder path: every
+/// component group is exercised and the total is stable.
+#[test]
+fn encoder_energy_breakdown_complete() {
+    let xcfg = XformerConfig { d_model: 32, n_heads: 2, d_ff: 64, n_layers: 1, seq: 16 };
+    let model = EncoderModel::new(xcfg, 42);
+    let mut rng = XorShiftRng::new(3);
+    let mut x = MatF32::zeros(xcfg.seq, xcfg.d_model);
+    for v in &mut x.data {
+        *v = rng.normal() * 0.5;
+    }
+    let mut sim = CgraSim::new(ArchConfig::default());
+    run_encoder_on_cgra(&mut sim, &model, &x).unwrap();
+    let em = EnergyModel::default();
+    let e = em.evaluate(&sim.stats, 100.0);
+    assert!(e.compute_pj > 0.0);
+    assert!(e.interconnect_pj > 0.0);
+    assert!(e.l1_pj > 0.0);
+    assert!(e.ext_mem_pj > 0.0);
+    assert!(e.mob_pj > 0.0);
+    assert!(e.config_pj > 0.0);
+    assert!(e.leakage_pj > 0.0);
+}
+
+/// Runtime bridge: load the AOT gemm artifact and check the simulator's
+/// dequantized int8 GEMM against XLA's float result. Skips (passes
+/// trivially) when `make artifacts` hasn't run.
+#[test]
+fn runtime_gemm_artifact_matches_sim() {
+    use cgra_edge::runtime::XlaRuntime;
+    let path = "artifacts/gemm_32x32x32.hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} missing (run `make artifacts`)");
+        return;
+    }
+    let rt = XlaRuntime::cpu().unwrap();
+    let model = rt.load_hlo_text(path).unwrap();
+    let mut rng = XorShiftRng::new(0xAE5);
+    let n = 32usize;
+    let mut af = MatF32::zeros(n, n);
+    let mut bf = MatF32::zeros(n, n);
+    for v in &mut af.data {
+        *v = rng.normal() * 0.5;
+    }
+    for v in &mut bf.data {
+        *v = rng.normal() * 0.5;
+    }
+    // XLA float result.
+    let flat = model
+        .run_f32(&[
+            (af.data.clone(), vec![n as i64, n as i64]),
+            (bf.data.clone(), vec![n as i64, n as i64]),
+        ])
+        .unwrap();
+    let want = MatF32 { rows: n, cols: n, data: flat };
+    // Simulator int8 path.
+    let mut sim = CgraSim::new(ArchConfig::default());
+    let mut report = cgra_edge::xformer::CgraEncoderReport::default();
+    let got = cgra_edge::xformer::run::cgra_matmul_f32(&mut sim, &af, &bf, &mut report).unwrap();
+    let tol = want.abs_max() * 0.05 + 1e-2;
+    assert!(
+        got.max_abs_diff(&want) < tol,
+        "sim vs XLA: {} > {tol}",
+        got.max_abs_diff(&want)
+    );
+}
+
+/// Failure injection: a kernel whose MOB program under-delivers words
+/// must be reported as a deadlock, not hang or corrupt.
+#[test]
+fn underfed_kernel_reports_deadlock() {
+    use cgra_edge::gemm::build_context;
+    let mut rng = XorShiftRng::new(5);
+    let mut sim = CgraSim::new(ArchConfig::default());
+    let (m, k, n) = (16, 16, 16);
+    let mut a = MatI8::zeros(m, k);
+    let mut b = MatI8::zeros(k, n);
+    rng.fill_i8(&mut a.data, 8);
+    rng.fill_i8(&mut b.data, 8);
+    let plan = GemmPlan::new(&sim.cfg, m, k, n, OutputMode::Quant { shift: 6 }).unwrap();
+    cgra_edge::gemm::stage_operands(&mut sim, &a, &b, &plan);
+    let (mut ctx, routes) = build_context(&plan).unwrap();
+    // Sabotage: drop the east MOBs' stream descriptors entirely.
+    for i in (0..ctx.mob_programs.len()).step_by(2) {
+        ctx.mob_programs[i].ops.truncate(1);
+    }
+    let err = sim.execute(&ctx, routes, 50_000).unwrap_err();
+    assert!(err.to_string().contains("did not complete"));
+}
+
+/// Config sweep smoke: odd-but-legal architectures still compute exactly.
+#[test]
+fn config_sweep_exactness() {
+    let mut rng = XorShiftRng::new(0xC0F);
+    for (rows, l1_kib, banks, fifo) in [(2usize, 16usize, 4usize, 2usize), (4, 64, 16, 8), (8, 64, 8, 4)] {
+        let mut cfg = ArchConfig::default();
+        cfg.topo.rows = rows;
+        cfg.mem.l1_words = l1_kib * 1024 / 4;
+        cfg.mem.l1_banks = banks;
+        cfg.port_fifo = fifo;
+        if rows > 4 {
+            // More rows -> more unique per-row MOB programs; the context
+            // memory scales with the array (itself a scaling finding).
+            cfg.ctx_bytes = 8192;
+        }
+        let mut sim = CgraSim::new(cfg);
+        let (m, k, n) = (24, 24, 24);
+        let mut a = MatI8::zeros(m, k);
+        let mut b = MatI8::zeros(k, n);
+        rng.fill_i8(&mut a.data, 10);
+        rng.fill_i8(&mut b.data, 10);
+        let plan = GemmPlan::new(&sim.cfg, m, k, n, OutputMode::Quant { shift: 6 }).unwrap();
+        let run = run_gemm(&mut sim, &a, &b, &plan).unwrap();
+        assert_eq!(
+            run.c_i8.unwrap(),
+            oracle_quant(&a, &b, 6),
+            "rows={rows} l1={l1_kib}KiB banks={banks} fifo={fifo}"
+        );
+    }
+}
