@@ -1,0 +1,95 @@
+//! FIG7 — fleet scaling: throughput and tail latency of 1→16 devices
+//! serving the same Poisson request stream under each placement policy.
+//!
+//! The workload is deliberately saturating (arrival rate far above one
+//! device's service rate), so makespan — and therefore throughput — is
+//! work-limited and must scale with the device count until the arrival
+//! window itself becomes the bound. The table reports p50/p99 latency,
+//! mean utilization, SLA misses and fleet energy per request; the
+//! monotonicity of throughput from 1→4 devices is asserted for at least
+//! one policy (the acceptance criterion for the cluster subsystem).
+
+use cgra_edge::bench_util::{f1, f2, f3, Table};
+use cgra_edge::cluster::{
+    ArrivalProcess, Discipline, FleetConfig, FleetSim, ModelClass, Placement, WorkloadGen,
+};
+use cgra_edge::config::ArchConfig;
+use cgra_edge::energy::EnergyModel;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ArchConfig::default();
+    let freq = arch.freq_mhz;
+    let classes = ModelClass::edge_mix();
+    let n_requests = 60;
+    let rate_rps = 20_000.0; // saturating: the whole stream arrives in a few ms
+    let seed = 0xF1E7u64;
+    println!(
+        "FIG7: {n_requests} requests, Poisson {rate_rps} req/s, mix = \
+         {} + {}, per-device {}\n",
+        classes[0].name,
+        classes[1].name,
+        arch.summary()
+    );
+
+    let policies = [
+        ("rr", Placement::RoundRobin),
+        ("least", Placement::LeastLoaded),
+        ("sjf", Placement::ShortestExpectedJob),
+    ];
+    let em = EnergyModel::default();
+    let ms = |cy: u64| cy as f64 / (freq * 1e3);
+    let mut table = Table::new(&[
+        "policy", "devices", "served", "miss", "thruput r/s", "p50 ms", "p99 ms", "util", "uJ/req",
+    ]);
+    let mut any_monotone = false;
+    for (name, policy) in policies {
+        let mut prev_tput = 0.0f64;
+        let mut monotone_1_to_4 = true;
+        for devices in [1usize, 2, 4, 8, 16] {
+            // Same seed each run: every fleet size serves the identical
+            // request stream, so rows are directly comparable.
+            let mut wg =
+                WorkloadGen::new(ArrivalProcess::Poisson { rate_rps }, classes.clone(), freq, seed);
+            let requests = wg.generate(n_requests);
+            let mut fleet = FleetSim::new(
+                FleetConfig { devices, policy, discipline: Discipline::Fifo, arch: arch.clone() },
+                &classes,
+                42,
+            );
+            let m = fleet.run(requests)?;
+            let tput = m.throughput_rps(freq);
+            if devices <= 4 {
+                if tput <= prev_tput {
+                    monotone_1_to_4 = false;
+                }
+                prev_tput = tput;
+            }
+            let energy = m.fleet_energy(&em, freq);
+            table.row(&[
+                name.to_string(),
+                devices.to_string(),
+                m.completed.to_string(),
+                m.sla_misses.to_string(),
+                f1(tput),
+                f3(ms(m.latency.p50())),
+                f3(ms(m.latency.p99())),
+                f2(m.mean_utilization()),
+                f2(energy.total_uj() / m.completed.max(1) as f64),
+            ]);
+        }
+        if monotone_1_to_4 {
+            any_monotone = true;
+        }
+    }
+    table.print();
+    assert!(
+        any_monotone,
+        "throughput must increase monotonically from 1→4 devices for at least one policy"
+    );
+    println!("\nThroughput scales with devices while the stream saturates the fleet;");
+    println!("past the saturation knee the arrival window bounds makespan and the");
+    println!("curve flattens. Tail latency (p99) collapses as queueing disappears —");
+    println!("the scheduling-policy lever the full-stack serving literature (EdgeTran,");
+    println!("Kim et al. 2023) identifies as first-class alongside the kernel.");
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Fleet-serving walkthrough: scale one CGRA to a dispatched fleet.
+//!
+//! 1. Generate a reproducible bursty workload over a two-model mix.
+//! 2. Serve it on 1 vs 4 devices and watch tail latency collapse.
+//! 3. Compare placement policies under the same stream.
+//! 4. Compare FIFO vs EDF-with-drop under an impossible SLA.
+//! 5. Split one large GEMM across devices (tile-level model
+//!    parallelism) and verify the merged output is bit-identical.
+//!
+//! Run with: `cargo run --release --example fleet_serving`
+
+use cgra_edge::cluster::{
+    run_gemm_sharded, ArrivalProcess, Discipline, FleetConfig, FleetSim, ModelClass, Placement,
+    WorkloadGen,
+};
+use cgra_edge::config::ArchConfig;
+use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, OutputMode};
+use cgra_edge::sim::CgraSim;
+use cgra_edge::util::mat::MatI8;
+use cgra_edge::util::rng::XorShiftRng;
+
+fn main() -> anyhow::Result<()> {
+    let arch = ArchConfig::default();
+    let freq = arch.freq_mhz;
+    let classes = ModelClass::edge_mix();
+    let ms = |cy: u64| cy as f64 / (freq * 1e3);
+    let bursty = ArrivalProcess::BurstyOnOff {
+        rate_on_rps: 8000.0,
+        rate_off_rps: 100.0,
+        mean_on_s: 0.002,
+        mean_off_s: 0.004,
+    };
+    let n = 24;
+    let seed = 7u64;
+    let workload = |s: u64| {
+        WorkloadGen::new(bursty, classes.clone(), freq, s).generate(n)
+    };
+
+    // --- 1+2: one device vs a small fleet on the same burst ---
+    println!("== bursty stream, {n} requests, 1 vs 4 devices (least-loaded / FIFO) ==");
+    for devices in [1usize, 4] {
+        let mut fleet = FleetSim::new(
+            FleetConfig { devices, ..Default::default() },
+            &classes,
+            42,
+        );
+        let m = fleet.run(workload(seed))?;
+        println!(
+            "{devices} device(s): {} served, p50 {:.3} ms, p99 {:.3} ms, {:.0} req/s, util {:.2}",
+            m.completed,
+            ms(m.latency.p50()),
+            ms(m.latency.p99()),
+            m.throughput_rps(freq),
+            m.mean_utilization()
+        );
+    }
+
+    // --- 3: placement policies under the identical stream ---
+    println!("\n== placement policies, 4 devices, same stream ==");
+    for (name, policy) in [
+        ("round-robin", Placement::RoundRobin),
+        ("least-loaded", Placement::LeastLoaded),
+        ("shortest-expected-job", Placement::ShortestExpectedJob),
+    ] {
+        let mut fleet = FleetSim::new(
+            FleetConfig { devices: 4, policy, ..Default::default() },
+            &classes,
+            42,
+        );
+        let m = fleet.run(workload(seed))?;
+        println!(
+            "{name:>22}: p99 {:.3} ms, queue-wait p99 {:.3} ms, SLA misses {}",
+            ms(m.latency.p99()),
+            ms(m.queue_wait.p99()),
+            m.sla_misses
+        );
+    }
+
+    // --- 4: FIFO vs EDF under an SLA the burst cannot meet ---
+    println!("\n== queue disciplines under a 0.2 ms SLA, 1 device ==");
+    let mut tight = classes.clone();
+    for c in &mut tight {
+        c.sla_ms = 0.2;
+    }
+    for (name, discipline) in [("fifo", Discipline::Fifo), ("edf+drop", Discipline::Edf)] {
+        let reqs = WorkloadGen::new(bursty, tight.clone(), freq, seed).generate(n);
+        let mut fleet = FleetSim::new(
+            FleetConfig { devices: 1, discipline, ..Default::default() },
+            &tight,
+            42,
+        );
+        let m = fleet.run(reqs)?;
+        println!(
+            "{name:>8}: served {} / dropped {} / late {}, p99 {:.3} ms",
+            m.completed,
+            m.dropped,
+            m.sla_misses,
+            ms(m.latency.p99())
+        );
+    }
+
+    // --- 5: tile-level model parallelism on one large GEMM ---
+    println!("\n== 128x64x128 GEMM split across devices (tile sharding) ==");
+    let (m_dim, k, n_dim) = (128usize, 64, 128);
+    let mut rng = XorShiftRng::new(0x5AAD);
+    let mut a = MatI8::zeros(m_dim, k);
+    let mut b = MatI8::zeros(k, n_dim);
+    rng.fill_i8(&mut a.data, 14);
+    rng.fill_i8(&mut b.data, 14);
+    let want = oracle_quant(&a, &b, 7);
+
+    let mut single = CgraSim::new(arch.clone());
+    let plan = GemmPlan::new(&single.cfg, m_dim, k, n_dim, OutputMode::Quant { shift: 7 })?;
+    let run1 = run_gemm(&mut single, &a, &b, &plan)?;
+    let t1 = run1.outcome.cycles + run1.outcome.config_cycles;
+    assert_eq!(run1.c_i8.as_ref().unwrap(), &want);
+    println!("1 device : {t1} cycles");
+
+    for devices in [2usize, 4] {
+        let mut sims: Vec<CgraSim> = (0..devices).map(|_| CgraSim::new(arch.clone())).collect();
+        let sharded = run_gemm_sharded(&mut sims, &a, &b, 7)?;
+        assert_eq!(sharded.c, want, "sharded output must be bit-identical");
+        println!(
+            "{devices} devices: {} cycles makespan ({:.2}x speedup, {:?} split, bit-identical ✓)",
+            sharded.parallel_cycles(),
+            t1 as f64 / sharded.parallel_cycles() as f64,
+            sharded.axis
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,357 @@
+//! The fleet simulator: N independent CGRA devices serving a shared
+//! request stream in simulated cycles.
+//!
+//! [`DeviceEngine`] wraps one [`CgraSim`] with the serving-side clock
+//! and accounting; it is the *single*-device engine the
+//! [`crate::coordinator`] worker thread adapts, so one-device serving
+//! and fleet serving share the exact same timing rules. [`FleetSim`]
+//! owns N engines plus a [`Dispatcher`] and advances a discrete-event
+//! loop over request arrivals and device completions. Every decision is
+//! a pure function of (workload, policy, discipline), so identical
+//! seeds produce identical [`FleetMetrics`] — the determinism contract
+//! the integration tests pin down.
+//!
+//! ## Context-reuse accounting
+//!
+//! The engine charges a request its kernel execution cycles plus, when
+//! the device starts it *back-to-back* after a request of the same
+//! model class, zero reconfiguration cycles: the kernel-context
+//! sequence is still resident in context memory, so only the first
+//! request of a busy run pays the distribution cost. After any idle
+//! gap the context memory is assumed power-collapsed (the
+//! ultra-low-power idle mode) and the full configuration cost is
+//! charged again. The rule depends only on simulated arrival stamps —
+//! never on wall-clock channel races — which keeps serving runs
+//! deterministic.
+
+use super::dispatch::{Discipline, Dispatcher, Placement};
+use super::metrics::{DeviceMetrics, FleetMetrics};
+use super::workload::{FleetRequest, ModelClass};
+use crate::config::ArchConfig;
+use crate::sim::{CgraSim, Stats};
+use crate::util::mat::MatF32;
+use crate::xformer::{run_encoder_on_cgra, EncoderModel};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// One serving device: a simulator plus its serving clock and counters.
+pub struct DeviceEngine {
+    pub sim: CgraSim,
+    /// Earliest cycle at which the array is free.
+    pub free_at: u64,
+    /// Total charged service cycles.
+    pub busy_cycles: u64,
+    /// Requests completed.
+    pub served: u64,
+    /// Model class of the most recent request (context-reuse tracking).
+    pub last_model: Option<usize>,
+    /// Simulator event counters accumulated over all served requests.
+    pub stats: Stats,
+}
+
+impl DeviceEngine {
+    pub fn new(cfg: ArchConfig) -> Self {
+        Self {
+            sim: CgraSim::new(cfg),
+            free_at: 0,
+            busy_cycles: 0,
+            served: 0,
+            last_model: None,
+            stats: Stats::default(),
+        }
+    }
+
+    /// Serve one encoder request starting at `start` (must be ≥
+    /// [`Self::free_at`]). Returns the output and the charged service
+    /// cycles (execution + configuration, minus the context-reuse
+    /// discount — see the module docs).
+    pub fn serve_encoder(
+        &mut self,
+        model_key: usize,
+        model: &EncoderModel,
+        input: &MatF32,
+        start: u64,
+    ) -> Result<(MatF32, u64)> {
+        debug_assert!(start >= self.free_at, "service cannot start before the device is free");
+        self.sim.reset_stats();
+        let (output, report) = run_encoder_on_cgra(&mut self.sim, model, input)?;
+        let reuse = self.served > 0 && start == self.free_at && self.last_model == Some(model_key);
+        let charged = report.cycles + if reuse { 0 } else { report.config_cycles };
+        // Keep event accounting consistent with the timing model: a
+        // reused context is not redistributed, so its configuration
+        // cycles and bytes must not be billed to energy either.
+        let mut run_stats = self.sim.stats.clone();
+        if reuse {
+            run_stats.config_cycles = 0;
+            run_stats.ctx_bytes = 0;
+        }
+        self.stats.merge(&run_stats);
+        self.busy_cycles += charged;
+        self.free_at = start + charged;
+        self.served += 1;
+        self.last_model = Some(model_key);
+        Ok((output, charged))
+    }
+}
+
+/// Fleet-level configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub devices: usize,
+    pub policy: Placement,
+    pub discipline: Discipline,
+    /// Per-device architecture (the fleet is homogeneous).
+    pub arch: ArchConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            devices: 4,
+            policy: Placement::LeastLoaded,
+            discipline: Discipline::Fifo,
+            arch: ArchConfig::default(),
+        }
+    }
+}
+
+/// N devices + dispatcher + model catalog: the discrete-event fleet.
+pub struct FleetSim {
+    pub cfg: FleetConfig,
+    devices: Vec<DeviceEngine>,
+    dispatcher: Dispatcher,
+    models: Vec<EncoderModel>,
+    /// Charged service cycles observed per model class — the
+    /// shortest-expected-job placement estimate. Shared across devices
+    /// (the fleet is homogeneous).
+    cost_cache: BTreeMap<usize, u64>,
+    /// `run` is single-shot: device clocks and counters are not reset
+    /// between runs, so a second call would silently misaccount.
+    ran: bool,
+}
+
+/// Expected service cycles for a model class: the cached observation,
+/// or an optimistic analytic estimate (ideal MACs/cycle on the paper
+/// array) before the class has ever completed.
+fn est_cost(cache: &BTreeMap<usize, u64>, models: &[EncoderModel], model: usize) -> u64 {
+    cache
+        .get(&model)
+        .copied()
+        .unwrap_or_else(|| models[model].cfg.gemm_macs() / 64 + 1)
+}
+
+impl FleetSim {
+    /// Build a fleet: one fresh simulator per device, one model per
+    /// catalog class (weights seeded deterministically per class).
+    pub fn new(cfg: FleetConfig, classes: &[ModelClass], model_seed: u64) -> Self {
+        assert!(cfg.devices > 0, "fleet needs at least one device");
+        assert!(!classes.is_empty(), "fleet needs at least one model class");
+        let devices = (0..cfg.devices).map(|_| DeviceEngine::new(cfg.arch.clone())).collect();
+        let models = classes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| EncoderModel::new(c.cfg, model_seed + i as u64))
+            .collect();
+        let dispatcher = Dispatcher::new(cfg.policy, cfg.discipline, cfg.devices);
+        Self { cfg, devices, dispatcher, models, cost_cache: BTreeMap::new(), ran: false }
+    }
+
+    /// The served model catalog (index-aligned with request `model`).
+    pub fn models(&self) -> &[EncoderModel] {
+        &self.models
+    }
+
+    /// Run the fleet over a request stream to completion and return the
+    /// aggregated metrics. Requests may be in any order; they are
+    /// sorted by (arrival, id) first. Single-shot: build a fresh
+    /// [`FleetSim`] per run (device clocks, counters and the cost cache
+    /// all carry state).
+    pub fn run(&mut self, mut requests: Vec<FleetRequest>) -> Result<FleetMetrics> {
+        assert!(!self.ran, "FleetSim::run is single-shot; build a fresh fleet per run");
+        self.ran = true;
+        let Self { cfg: _, devices, dispatcher, models, cost_cache, ran: _ } = self;
+        requests.sort_by_key(|r| (r.arrival_cycle, r.id));
+        let mut arrivals = requests.into_iter().peekable();
+        let mut metrics = FleetMetrics::default();
+        let mut now: u64 = 0;
+        loop {
+            // 1. Admit every request that has arrived by `now`. The
+            // placement decision sees the device states at admission
+            // time, including earlier same-cycle placements.
+            while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
+                let r = arrivals.next().expect("peeked");
+                let free: Vec<u64> = devices.iter().map(|d| d.free_at).collect();
+                dispatcher.dispatch(r, now, &free, |m| est_cost(cost_cache, models, m));
+            }
+            // 2. Serve: every idle device takes work per its queue
+            // discipline until it is busy past `now` or its queue dries.
+            for d in 0..devices.len() {
+                while devices[d].free_at <= now {
+                    let (dropped, job) = dispatcher.pop(d, now);
+                    metrics.dropped += dropped.len() as u64;
+                    let Some(req) = job else { break };
+                    let (_output, charged) =
+                        devices[d].serve_encoder(req.model, &models[req.model], &req.input, now)?;
+                    cost_cache.entry(req.model).or_insert(charged);
+                    let completion = now + charged;
+                    metrics.completed += 1;
+                    metrics.latency.record(completion - req.arrival_cycle);
+                    metrics.queue_wait.record(now - req.arrival_cycle);
+                    metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
+                    if req.deadline_cycle.is_some_and(|dl| completion > dl) {
+                        metrics.sla_misses += 1;
+                    }
+                }
+            }
+            // 3. Advance to the next event: the next arrival, or the
+            // earliest completion on a device that still has queued
+            // work. Both are strictly after `now`, so time always moves.
+            let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
+            for d in 0..devices.len() {
+                if dispatcher.queued(d) > 0 && devices[d].free_at > now {
+                    let t = devices[d].free_at;
+                    next = Some(next.map_or(t, |n| n.min(t)));
+                }
+            }
+            match next {
+                Some(t) => {
+                    debug_assert!(t > now, "event horizon must advance");
+                    now = t;
+                }
+                None => break,
+            }
+        }
+        metrics.per_device = devices
+            .iter()
+            .map(|d| DeviceMetrics { served: d.served, busy_cycles: d.busy_cycles })
+            .collect();
+        for d in devices.iter() {
+            metrics.stats.merge(&d.stats);
+        }
+        Ok(metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::workload::{ArrivalProcess, WorkloadGen};
+    use crate::util::rng::XorShiftRng;
+
+    fn tiny_classes() -> Vec<ModelClass> {
+        vec![ModelClass::tiny()]
+    }
+
+    fn tiny_input(seed: u64) -> MatF32 {
+        let cfg = ModelClass::tiny().cfg;
+        let mut rng = XorShiftRng::new(seed);
+        let mut x = MatF32::zeros(cfg.seq, cfg.d_model);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        x
+    }
+
+    #[test]
+    fn engine_back_to_back_reuses_context() {
+        let classes = tiny_classes();
+        let model = EncoderModel::new(classes[0].cfg, 42);
+        let mut engine = DeviceEngine::new(ArchConfig::default());
+        let x = tiny_input(1);
+        let (_, c1) = engine.serve_encoder(0, &model, &x, 0).unwrap();
+        // Back-to-back: starts exactly when the previous finished.
+        let (_, c2) = engine.serve_encoder(0, &model, &x, engine.free_at).unwrap();
+        assert!(c2 < c1, "context reuse must discount configuration: {c2} vs {c1}");
+        // After an idle gap the full configuration cost returns.
+        let (_, c3) = engine.serve_encoder(0, &model, &x, engine.free_at + 1_000_000).unwrap();
+        assert_eq!(c3, c1, "idle gap re-charges configuration");
+    }
+
+    #[test]
+    fn fleet_completes_all_and_fills_cache() {
+        let classes = tiny_classes();
+        let mut gen = WorkloadGen::new(
+            ArrivalProcess::Poisson { rate_rps: 2000.0 },
+            classes.clone(),
+            100.0,
+            5,
+        );
+        let reqs = gen.generate(6);
+        let mut fleet = FleetSim::new(
+            FleetConfig { devices: 2, ..Default::default() },
+            &classes,
+            42,
+        );
+        let m = fleet.run(reqs).unwrap();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.dropped, 0);
+        assert_eq!(m.per_device.len(), 2);
+        assert_eq!(m.per_device.iter().map(|d| d.served).sum::<u64>(), 6);
+        assert!(m.latency.p50() > 0);
+        assert!(m.latency.p99() >= m.latency.p50());
+        assert!(m.makespan_cycles > 0);
+        assert!(m.mean_utilization() > 0.0 && m.mean_utilization() <= 1.0);
+        assert!(fleet.cost_cache.contains_key(&0), "first completion must seed the cost cache");
+        assert!(m.stats.kernels > 0, "merged device stats must carry kernel counts");
+    }
+
+    #[test]
+    fn more_devices_shrink_makespan_under_burst() {
+        let classes = tiny_classes();
+        let mk = |devices: usize| {
+            let mut gen = WorkloadGen::new(
+                ArrivalProcess::Poisson { rate_rps: 1e6 }, // effectively simultaneous
+                classes.clone(),
+                100.0,
+                9,
+            );
+            let reqs = gen.generate(8);
+            let mut fleet = FleetSim::new(
+                FleetConfig { devices, ..Default::default() },
+                &classes,
+                42,
+            );
+            fleet.run(reqs).unwrap()
+        };
+        let m1 = mk(1);
+        let m4 = mk(4);
+        assert_eq!(m1.completed, 8);
+        assert_eq!(m4.completed, 8);
+        assert!(
+            m4.makespan_cycles < m1.makespan_cycles,
+            "4 devices must finish the burst sooner: {} vs {}",
+            m4.makespan_cycles,
+            m1.makespan_cycles
+        );
+        assert!(m4.throughput_rps(100.0) > m1.throughput_rps(100.0));
+    }
+
+    #[test]
+    fn edf_drops_instead_of_serving_late() {
+        // One slow device, a burst with tight deadlines: EDF must shed
+        // load that FIFO would serve hopelessly late.
+        let mut classes = tiny_classes();
+        classes[0].sla_ms = 0.05; // 5_000 cycles at 100 MHz — tighter than service
+        let mk = |discipline| {
+            let mut gen = WorkloadGen::new(
+                ArrivalProcess::Poisson { rate_rps: 1e6 },
+                classes.clone(),
+                100.0,
+                13,
+            );
+            let reqs = gen.generate(6);
+            let mut fleet = FleetSim::new(
+                FleetConfig { devices: 1, discipline, ..Default::default() },
+                &classes,
+                42,
+            );
+            fleet.run(reqs).unwrap()
+        };
+        let fifo = mk(Discipline::Fifo);
+        let edf = mk(Discipline::Edf);
+        assert_eq!(fifo.dropped, 0, "FIFO never drops");
+        assert!(fifo.sla_misses > 0, "the burst must overrun the tight SLA");
+        assert!(edf.dropped > 0, "EDF must shed expired work");
+        assert_eq!(edf.completed + edf.dropped, 6);
+    }
+}

@@ -1,0 +1,212 @@
+//! Fleet-level serving metrics: latency percentiles, per-device
+//! utilization, SLA accounting, fleet energy.
+//!
+//! [`LatencyHistogram`] is the *shared* latency container — the
+//! single-device [`crate::coordinator::ServeMetrics`] and the fleet's
+//! [`FleetMetrics`] both record into it, so the p50/p95/p99 definition
+//! (nearest-rank over exact samples) is identical at both scales. At
+//! serving-simulation sizes (10³–10⁵ requests) storing exact samples is
+//! cheaper than maintaining bucketed sketches and keeps percentiles
+//! exact, which matters for determinism tests.
+
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::sim::Stats;
+
+/// Exact-sample latency recorder with nearest-rank percentiles.
+///
+/// All values are in simulated cycles; convert with the clock frequency
+/// for wall-time reporting (`cycles / (freq_mhz * 1e3)` → ms).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    /// Kept sorted on insert, so every percentile query is O(1).
+    samples: Vec<u64>,
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample (cycles).
+    pub fn record(&mut self, cycles: u64) {
+        let idx = self.samples.partition_point(|&s| s <= cycles);
+        self.samples.insert(idx, cycles);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Mean over all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.samples.last().copied().unwrap_or(0)
+    }
+
+    /// Nearest-rank percentile: the smallest sample ≥ `q`% of the
+    /// distribution. `q` in (0, 100]; returns 0 when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let rank = ((q / 100.0) * self.samples.len() as f64).ceil() as usize;
+        self.samples[rank.clamp(1, self.samples.len()) - 1]
+    }
+
+    /// Median latency.
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th-percentile latency.
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th-percentile tail latency.
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Per-device accounting inside a fleet run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DeviceMetrics {
+    /// Requests this device completed.
+    pub served: u64,
+    /// Cycles this device spent executing (charged service time).
+    pub busy_cycles: u64,
+}
+
+/// Aggregated metrics for one fleet run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FleetMetrics {
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests dropped by the queue discipline (EDF drop-on-SLA-miss).
+    pub dropped: u64,
+    /// Completed requests that finished after their deadline.
+    pub sla_misses: u64,
+    /// Latest completion time across all devices (simulated makespan).
+    pub makespan_cycles: u64,
+    /// End-to-end latency (queue + service) of completed requests.
+    pub latency: LatencyHistogram,
+    /// Queue-wait component of latency (diagnostic for placement).
+    pub queue_wait: LatencyHistogram,
+    /// Per-device service counters, indexed by device id.
+    pub per_device: Vec<DeviceMetrics>,
+    /// Merged simulator event counters across every device.
+    pub stats: Stats,
+}
+
+impl FleetMetrics {
+    /// Fleet throughput in requests per second at `freq_mhz`.
+    pub fn throughput_rps(&self, freq_mhz: f64) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.makespan_cycles as f64 / (freq_mhz * 1e6))
+    }
+
+    /// Fraction of the makespan device `d` spent busy.
+    pub fn utilization(&self, d: usize) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.per_device[d].busy_cycles as f64 / self.makespan_cycles as f64
+    }
+
+    /// Mean utilization across the fleet.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.per_device.is_empty() {
+            return 0.0;
+        }
+        (0..self.per_device.len()).map(|d| self.utilization(d)).sum::<f64>()
+            / self.per_device.len() as f64
+    }
+
+    /// Fleet energy: dynamic energy from the merged event counters, plus
+    /// leakage for *every* device over the *whole* makespan — an idle
+    /// device still leaks, which is exactly the scale-out cost the
+    /// ultra-low-power story cares about.
+    pub fn fleet_energy(&self, em: &EnergyModel, freq_mhz: f64) -> EnergyBreakdown {
+        let mut e = em.evaluate(&self.stats, freq_mhz);
+        let seconds = self.makespan_cycles as f64 / (freq_mhz * 1e6);
+        e.leakage_pj = em.params.leakage_uw * seconds * self.per_device.len() as f64 * 1e6;
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut h = LatencyHistogram::default();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.p50(), 50);
+        assert_eq!(h.p95(), 95);
+        assert_eq!(h.p99(), 99);
+        assert_eq!(h.percentile(100.0), 100);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut h = LatencyHistogram::default();
+        h.record(42);
+        assert_eq!(h.p50(), 42);
+        assert_eq!(h.p99(), 42);
+    }
+
+    #[test]
+    fn utilization_and_throughput() {
+        let m = FleetMetrics {
+            completed: 10,
+            makespan_cycles: 1_000_000,
+            per_device: vec![
+                DeviceMetrics { served: 6, busy_cycles: 900_000 },
+                DeviceMetrics { served: 4, busy_cycles: 300_000 },
+            ],
+            ..Default::default()
+        };
+        // 10 requests over 10 ms at 100 MHz = 1000 req/s.
+        assert!((m.throughput_rps(100.0) - 1000.0).abs() < 1e-9);
+        assert!((m.utilization(0) - 0.9).abs() < 1e-12);
+        assert!((m.mean_utilization() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_leakage_scales_with_device_count() {
+        let em = EnergyModel::default();
+        let base = FleetMetrics {
+            makespan_cycles: 1_000_000,
+            per_device: vec![DeviceMetrics::default(); 2],
+            ..Default::default()
+        };
+        let wide = FleetMetrics {
+            per_device: vec![DeviceMetrics::default(); 8],
+            ..base.clone()
+        };
+        let e2 = base.fleet_energy(&em, 100.0).leakage_pj;
+        let e8 = wide.fleet_energy(&em, 100.0).leakage_pj;
+        assert!((e8 / e2 - 4.0).abs() < 1e-9, "leakage must scale 4x: {e2} vs {e8}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Multi-device fleet serving: the scale-out layer above one CGRA.
+//!
+//! The paper positions the 4×4 array as a scalable pathway for edge
+//! transformer inference; a real deployment runs *fleets* of such
+//! accelerators behind a dispatcher. This subsystem is a deterministic
+//! discrete-event simulator of exactly that:
+//!
+//! - [`workload`] — reproducible request streams: Poisson / bursty
+//!   on-off / diurnal-ramp arrival processes over a model-class mix,
+//!   all drawn from one [`crate::util::rng::XorShiftRng`] seed.
+//! - [`dispatch`] — the [`Dispatcher`]: pluggable placement policies
+//!   (round-robin, least-loaded, shortest-expected-job via a per-model
+//!   cycle-cost cache) and queue disciplines (FIFO, priority tiers,
+//!   earliest-deadline-first with drop-on-SLA-miss).
+//! - [`fleet`] — [`DeviceEngine`] (one simulator + serving clock; the
+//!   engine the single-device [`crate::coordinator`] adapts) and
+//!   [`FleetSim`], the N-device event loop.
+//! - [`metrics`] — [`FleetMetrics`] with exact p50/p95/p99 latency
+//!   percentiles ([`LatencyHistogram`], shared with the coordinator's
+//!   `ServeMetrics`), per-device utilization, SLA-miss / drop counts,
+//!   and fleet energy (idle devices still leak).
+//! - [`parallel`] — tile-level model parallelism: one large GEMM's
+//!   i-/j-tile grid split across ≥2 devices with bit-identical merged
+//!   output, reusing `gemm::plan`/`mapper` unchanged.
+//!
+//! Everything is accounted in simulated cycles, so fleet experiments
+//! are reproducible from a printed seed and frequency-scalable, like
+//! the rest of the cycle model.
+
+pub mod dispatch;
+pub mod fleet;
+pub mod metrics;
+pub mod parallel;
+pub mod workload;
+
+pub use dispatch::{Discipline, Dispatcher, Placement};
+pub use fleet::{DeviceEngine, FleetConfig, FleetSim};
+pub use metrics::{DeviceMetrics, FleetMetrics, LatencyHistogram};
+pub use parallel::{run_gemm_sharded, ShardedGemmRun, SplitAxis};
+pub use workload::{ArrivalProcess, FleetRequest, ModelClass, WorkloadGen};

@@ -1,0 +1,211 @@
+//! Tile-level model parallelism: one GEMM split across several devices.
+//!
+//! A blocked GEMM's output tiles are independent, so the tile grid the
+//! planner already produces ([`GemmPlan::n_it`] × [`GemmPlan::n_jt`])
+//! is a ready-made sharding map: give each device a contiguous band of
+//! i-tiles (rows of A / C) or j-tiles (columns of B / C) and run the
+//! *unchanged* per-device pipeline — `plan` → `pack` → `mapper` →
+//! simulate — on the sub-problem. Each output element is still
+//! `requant(Σ a·b, shift)` over the full K reduction on one device, so
+//! the merged result is **bit-identical** to the single-device run (the
+//! acceptance check in the integration tests).
+//!
+//! This is the paper's "scalable pathway" argument made concrete: scale
+//! *out* with more arrays rather than *up* with a wider fabric (FIG5
+//! shows columns stop paying past 4).
+
+use crate::gemm::{run_gemm, GemmPlan, OutputMode};
+use crate::sim::{CgraSim, SimOutcome};
+use crate::util::mat::MatI8;
+use anyhow::{ensure, Result};
+
+/// Which tile axis a sharded run split on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitAxis {
+    /// i-tile bands: each device gets a row band of A and all of B.
+    Rows,
+    /// j-tile bands: each device gets a column band of B and all of A.
+    Cols,
+    /// Problem had a single tile block (or one device): no split.
+    None,
+}
+
+/// Result of a multi-device GEMM.
+pub struct ShardedGemmRun {
+    /// Merged requantized output, bit-identical to a single-device run.
+    pub c: MatI8,
+    /// Per-shard simulator outcomes (index-aligned with the devices
+    /// actually used; may be fewer than offered).
+    pub outcomes: Vec<SimOutcome>,
+    pub axis: SplitAxis,
+}
+
+impl ShardedGemmRun {
+    /// Makespan of the parallel execution: the slowest shard, counting
+    /// its configuration time (each device configures independently).
+    pub fn parallel_cycles(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.cycles + o.config_cycles).max().unwrap_or(0)
+    }
+
+    /// Total device-cycles spent (the energy-relevant sum).
+    pub fn total_cycles(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.cycles + o.config_cycles).sum()
+    }
+}
+
+/// Split `tiles` tiles of size `tile` (covering `total` rows/cols) into
+/// at most `devices` contiguous bands, as evenly as possible.
+fn split_tiles(tiles: usize, tile: usize, total: usize, devices: usize) -> Vec<(usize, usize)> {
+    let shards = devices.min(tiles).max(1);
+    let per = tiles / shards;
+    let rem = tiles % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut t0 = 0usize;
+    for s in 0..shards {
+        let nt = per + usize::from(s < rem);
+        let lo = t0 * tile;
+        let hi = ((t0 + nt) * tile).min(total);
+        out.push((lo, hi - lo));
+        t0 += nt;
+    }
+    out
+}
+
+fn row_band(m: &MatI8, lo: usize, len: usize) -> MatI8 {
+    MatI8::from_slice(len, m.cols, &m.data[lo * m.cols..(lo + len) * m.cols])
+}
+
+fn col_band(m: &MatI8, lo: usize, len: usize) -> MatI8 {
+    let mut out = MatI8::zeros(m.rows, len);
+    for r in 0..m.rows {
+        for c in 0..len {
+            *out.at_mut(r, c) = m.at(r, lo + c);
+        }
+    }
+    out
+}
+
+/// Run `C = A·B` (requantized with `shift`) across the given devices,
+/// splitting the tile grid of the single-device plan. With one device —
+/// or a single-tile problem — this degrades to a plain [`run_gemm`].
+pub fn run_gemm_sharded(
+    sims: &mut [CgraSim],
+    a: &MatI8,
+    b: &MatI8,
+    shift: u8,
+) -> Result<ShardedGemmRun> {
+    ensure!(!sims.is_empty(), "need at least one device");
+    ensure!(a.cols == b.rows, "inner dims must agree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let output = OutputMode::Quant { shift };
+    // The reference plan's tile grid decides the shard axis; each shard
+    // then re-plans its own sub-problem through the unchanged planner.
+    let ref_plan = GemmPlan::new(&sims[0].cfg, m, k, n, output)?;
+    let mt = 4 * ref_plan.rows;
+    let nt = 4 * ref_plan.pe_cols;
+
+    let mut c = MatI8::zeros(m, n);
+    let mut outcomes = Vec::new();
+    let axis = if sims.len() >= 2 && ref_plan.n_it >= 2 {
+        for (d, (lo, len)) in split_tiles(ref_plan.n_it, mt, m, sims.len()).into_iter().enumerate()
+        {
+            let sub_a = row_band(a, lo, len);
+            let plan = GemmPlan::new(&sims[d].cfg, len, k, n, output)?;
+            let run = run_gemm(&mut sims[d], &sub_a, b, &plan)?;
+            let part = run.c_i8.expect("quant mode");
+            c.data[lo * n..(lo + len) * n].copy_from_slice(&part.data);
+            outcomes.push(run.outcome);
+        }
+        SplitAxis::Rows
+    } else if sims.len() >= 2 && ref_plan.n_jt >= 2 {
+        for (d, (lo, len)) in split_tiles(ref_plan.n_jt, nt, n, sims.len()).into_iter().enumerate()
+        {
+            let sub_b = col_band(b, lo, len);
+            let plan = GemmPlan::new(&sims[d].cfg, m, k, len, output)?;
+            let run = run_gemm(&mut sims[d], a, &sub_b, &plan)?;
+            let part = run.c_i8.expect("quant mode");
+            for r in 0..m {
+                for j in 0..len {
+                    *c.at_mut(r, lo + j) = part.at(r, j);
+                }
+            }
+            outcomes.push(run.outcome);
+        }
+        SplitAxis::Cols
+    } else {
+        let run = run_gemm(&mut sims[0], a, b, &ref_plan)?;
+        c = run.c_i8.expect("quant mode");
+        outcomes.push(run.outcome);
+        SplitAxis::None
+    };
+    Ok(ShardedGemmRun { c, outcomes, axis })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::gemm::oracle_quant;
+    use crate::util::rng::XorShiftRng;
+
+    fn fleet(n: usize) -> Vec<CgraSim> {
+        (0..n).map(|_| CgraSim::new(ArchConfig::default())).collect()
+    }
+
+    fn random_mat(rng: &mut XorShiftRng, rows: usize, cols: usize) -> MatI8 {
+        let mut m = MatI8::zeros(rows, cols);
+        rng.fill_i8(&mut m.data, 12);
+        m
+    }
+
+    #[test]
+    fn split_tiles_covers_exactly() {
+        assert_eq!(split_tiles(4, 16, 64, 2), vec![(0, 32), (32, 32)]);
+        assert_eq!(split_tiles(3, 16, 48, 2), vec![(0, 32), (32, 16)]);
+        // Ragged final tile: 2 tiles of 16 covering 20 rows.
+        assert_eq!(split_tiles(2, 16, 20, 2), vec![(0, 16), (16, 4)]);
+        // More devices than tiles: only `tiles` shards.
+        assert_eq!(split_tiles(2, 16, 32, 8), vec![(0, 16), (16, 16)]);
+    }
+
+    #[test]
+    fn column_split_matches_oracle() {
+        // m = 16: a single i-tile forces the j-tile split path.
+        let mut rng = XorShiftRng::new(0xC01);
+        let (m, k, n) = (16, 24, 64);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = fleet(2);
+        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
+        assert_eq!(run.axis, SplitAxis::Cols);
+        assert_eq!(run.outcomes.len(), 2);
+        assert_eq!(run.c, oracle_quant(&a, &b, 6));
+    }
+
+    #[test]
+    fn single_device_degrades_to_plain_run() {
+        let mut rng = XorShiftRng::new(0xC02);
+        let (m, k, n) = (32, 16, 32);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = fleet(1);
+        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
+        assert_eq!(run.axis, SplitAxis::None);
+        assert_eq!(run.outcomes.len(), 1);
+        assert_eq!(run.c, oracle_quant(&a, &b, 6));
+    }
+
+    #[test]
+    fn ragged_row_split_matches_oracle() {
+        // 3 i-tiles over 44 rows across 2 devices: uneven bands, last
+        // one ragged.
+        let mut rng = XorShiftRng::new(0xC03);
+        let (m, k, n) = (44, 16, 16);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = fleet(2);
+        let run = run_gemm_sharded(&mut sims, &a, &b, 5).unwrap();
+        assert_eq!(run.axis, SplitAxis::Rows);
+        assert_eq!(run.c, oracle_quant(&a, &b, 5));
+    }
+}

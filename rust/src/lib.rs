@@ -16,17 +16,25 @@
 //!   plans, context generation, host-side oracles, the naive baseline.
 //! - [`xformer`] — transformer workloads (attention + FFN) lowered to GEMM
 //!   sequences with int8 quantization.
-//! - [`coordinator`] — the inference-serving layer: request queue, batcher,
-//!   kernel dispatch, metrics.
+//! - [`coordinator`] — the single-device inference-serving layer: request
+//!   queue, batcher, kernel dispatch, metrics (a thin adapter over the
+//!   cluster layer's per-device engine).
+//! - [`cluster`] — multi-device fleet serving: workload generation,
+//!   dispatcher with pluggable placement policies and queue disciplines,
+//!   tile-sharded multi-device GEMM, and fleet metrics with p50/p95/p99
+//!   latency percentiles, per-device utilization and fleet energy.
 //! - [`baseline`] — scalar general-purpose-processor cost/energy model.
 //! - [`runtime`] — PJRT wrapper used to validate numerics against the
-//!   AOT-compiled JAX model (build-time Python, never on the request path).
+//!   AOT-compiled JAX model (build-time Python, never on the request
+//!   path; the XLA client is gated behind the `xla-runtime` feature so
+//!   the default build has no native dependencies).
 //! - [`cli`], [`config`], [`util`], [`bench_util`], [`trace`] — glue.
 
 pub mod arch;
 pub mod baseline;
 pub mod bench_util;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

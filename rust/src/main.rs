@@ -8,10 +8,16 @@
 //!                                — run a tiny encoder on the array
 //!   serve [--requests n] [--rate rps] [--batch b]
 //!                                — closed-loop serving demo (coordinator)
+//!   cluster [--devices d] [--requests n] [--rate rps] [--policy p]
+//!           [--queue q] [--arrival a] [--seed s]
+//!                                — fleet-serving simulation (cluster)
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
 use cgra_edge::cli::Args;
+use cgra_edge::cluster::{
+    ArrivalProcess, Discipline, FleetConfig, FleetSim, ModelClass, Placement, WorkloadGen,
+};
 use cgra_edge::config::ArchConfig;
 use cgra_edge::coordinator::{Coordinator, Request};
 use cgra_edge::energy::EnergyModel;
@@ -132,11 +138,90 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let m = coord.shutdown()?;
     println!(
-        "served {} requests: mean latency {:.0} cycles ({:.2} ms), throughput {:.1} req/s",
+        "served {} requests: latency p50 {} / p99 {} cycles ({:.2} / {:.2} ms), throughput {:.1} req/s",
         m.completed,
-        m.mean_latency_cycles(),
-        m.mean_latency_cycles() / (cfg.freq_mhz * 1e3),
+        m.p50_latency_cycles(),
+        m.p99_latency_cycles(),
+        m.p50_latency_cycles() as f64 / (cfg.freq_mhz * 1e3),
+        m.p99_latency_cycles() as f64 / (cfg.freq_mhz * 1e3),
         m.throughput_rps(cfg.freq_mhz)
+    );
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let arch = load_cfg(args)?;
+    let devices: usize = args.flag_parse("devices", 4usize)?;
+    if devices == 0 {
+        bail!("--devices must be at least 1");
+    }
+    let n: usize = args.flag_parse("requests", 64usize)?;
+    let rate: f64 = args.flag_parse("rate", 400.0f64)?;
+    let seed: u64 = args.flag_parse("seed", 1u64)?;
+    let policy = match args.flag("policy").unwrap_or("least") {
+        "rr" => Placement::RoundRobin,
+        "least" => Placement::LeastLoaded,
+        "sjf" => Placement::ShortestExpectedJob,
+        other => bail!("unknown policy '{other}' (rr|least|sjf)"),
+    };
+    let discipline = match args.flag("queue").unwrap_or("fifo") {
+        "fifo" => Discipline::Fifo,
+        "prio" => Discipline::Priority,
+        "edf" => Discipline::Edf,
+        other => bail!("unknown queue discipline '{other}' (fifo|prio|edf)"),
+    };
+    let arrival = match args.flag("arrival").unwrap_or("poisson") {
+        "poisson" => ArrivalProcess::Poisson { rate_rps: rate },
+        "bursty" => ArrivalProcess::BurstyOnOff {
+            rate_on_rps: rate * 4.0,
+            rate_off_rps: rate * 0.1,
+            mean_on_s: 0.05,
+            mean_off_s: 0.05,
+        },
+        "diurnal" => ArrivalProcess::DiurnalRamp {
+            base_rps: rate * 0.2,
+            peak_rps: rate * 2.0,
+            period_s: 1.0,
+        },
+        other => bail!("unknown arrival process '{other}' (poisson|bursty|diurnal)"),
+    };
+    let classes = ModelClass::edge_mix();
+    let mut gen = WorkloadGen::new(arrival, classes.clone(), arch.freq_mhz, seed);
+    let requests = gen.generate(n);
+    let mut fleet = FleetSim::new(
+        FleetConfig { devices, policy, discipline, arch: arch.clone() },
+        &classes,
+        42,
+    );
+    let m = fleet.run(requests)?;
+    let em = EnergyModel::default();
+    let e = m.fleet_energy(&em, arch.freq_mhz);
+    let ms = |cy: u64| cy as f64 / (arch.freq_mhz * 1e3);
+    println!("fleet    : {} devices × ({})", devices, arch.summary());
+    println!("policy   : {policy:?} / {discipline:?}, arrival {arrival:?}");
+    println!(
+        "served   : {} completed, {} dropped, {} SLA misses",
+        m.completed, m.dropped, m.sla_misses
+    );
+    println!(
+        "latency  : p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms (queue p99 {:.3} ms)",
+        ms(m.latency.p50()),
+        ms(m.latency.p95()),
+        ms(m.latency.p99()),
+        ms(m.queue_wait.p99())
+    );
+    println!(
+        "thruput  : {:.1} req/s over {:.2} ms makespan",
+        m.throughput_rps(arch.freq_mhz),
+        ms(m.makespan_cycles)
+    );
+    let utils: Vec<String> =
+        (0..devices).map(|d| format!("{:.2}", m.utilization(d))).collect();
+    println!("util     : mean {:.3} [{}]", m.mean_utilization(), utils.join(" "));
+    println!(
+        "energy   : {:.2} µJ fleet total, {:.3} µJ/request",
+        e.total_uj(),
+        if m.completed > 0 { e.total_uj() / m.completed as f64 } else { 0.0 }
     );
     Ok(())
 }
@@ -152,8 +237,9 @@ fn main() -> Result<()> {
         "gemm" => cmd_gemm(&args),
         "encoder" => cmd_encoder(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "" => {
-            eprintln!("usage: cgra-edge <info|gemm|encoder|serve> …");
+            eprintln!("usage: cgra-edge <info|gemm|encoder|serve|cluster> …");
             Ok(())
         }
         other => bail!("unknown subcommand '{other}'"),

@@ -9,20 +9,29 @@
 //! CGRA simulator's numerics are validated against the real XLA
 //! computation (FIG-E2E), and the reference serving path in
 //! `examples/e2e_inference.rs`.
+//!
+//! The PJRT client ([`XlaRuntime`] / [`LoadedModel`]) is gated behind
+//! the `xla-runtime` cargo feature: the `xla` crate drags in a native
+//! XLA build, which offline/CI environments don't have. Manifest and
+//! parameter-blob parsing stay unconditional — they have no native
+//! dependencies and the AOT contract tests rely on them.
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// A loaded + compiled artifact.
+#[cfg(feature = "xla-runtime")]
 pub struct LoadedModel {
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The PJRT CPU runtime.
+#[cfg(feature = "xla-runtime")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl XlaRuntime {
     /// Create the CPU client.
     pub fn cpu() -> Result<Self> {
@@ -48,6 +57,7 @@ impl XlaRuntime {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 impl LoadedModel {
     /// Execute with f32 inputs of the given shapes; returns the first
     /// tuple element flattened (our artifacts are lowered with

@@ -76,7 +76,9 @@ fn encoder_energy_breakdown_complete() {
 
 /// Runtime bridge: load the AOT gemm artifact and check the simulator's
 /// dequantized int8 GEMM against XLA's float result. Skips (passes
-/// trivially) when `make artifacts` hasn't run.
+/// trivially) when `make artifacts` hasn't run. Requires the
+/// `xla-runtime` feature (native XLA client).
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn runtime_gemm_artifact_matches_sim() {
     use cgra_edge::runtime::XlaRuntime;
@@ -138,6 +140,75 @@ fn underfed_kernel_reports_deadlock() {
     }
     let err = sim.execute(&ctx, routes, 50_000).unwrap_err();
     assert!(err.to_string().contains("did not complete"));
+}
+
+/// Cluster determinism: the fleet simulator is a pure function of
+/// (workload seed, policy, discipline) — two runs with identical
+/// inputs must produce *identical* FleetMetrics, down to every latency
+/// sample and merged event counter.
+#[test]
+fn cluster_fleet_deterministic() {
+    use cgra_edge::cluster::{
+        ArrivalProcess, Discipline, FleetConfig, FleetSim, ModelClass, Placement, WorkloadGen,
+    };
+    let classes = vec![ModelClass::tiny()];
+    let once = |policy, discipline| {
+        let mut wg = WorkloadGen::new(
+            ArrivalProcess::Poisson { rate_rps: 5000.0 },
+            classes.clone(),
+            100.0,
+            0xDE7E,
+        );
+        let requests = wg.generate(8);
+        let mut fleet = FleetSim::new(
+            FleetConfig { devices: 3, policy, discipline, arch: ArchConfig::default() },
+            &classes,
+            42,
+        );
+        fleet.run(requests).unwrap()
+    };
+    for (policy, discipline) in [
+        (Placement::RoundRobin, Discipline::Fifo),
+        (Placement::ShortestExpectedJob, Discipline::Edf),
+    ] {
+        let a = once(policy, discipline);
+        let b = once(policy, discipline);
+        assert_eq!(a, b, "fleet run must be deterministic for {policy:?}/{discipline:?}");
+        assert_eq!(a.completed + a.dropped, 8);
+        assert!(a.latency.p99() >= a.latency.p50());
+    }
+}
+
+/// Tile-level model parallelism: one large GEMM split across 2 devices
+/// must produce output bit-identical to the single-device run (and to
+/// the host oracle), while finishing sooner than one device.
+#[test]
+fn sharded_gemm_bit_identical_to_single_device() {
+    use cgra_edge::cluster::{run_gemm_sharded, SplitAxis};
+    let mut rng = XorShiftRng::new(0x51AD);
+    let (m, k, n) = (64, 32, 64);
+    let mut a = MatI8::zeros(m, k);
+    let mut b = MatI8::zeros(k, n);
+    rng.fill_i8(&mut a.data, 12);
+    rng.fill_i8(&mut b.data, 12);
+
+    let mut single = CgraSim::new(ArchConfig::default());
+    let plan = GemmPlan::new(&single.cfg, m, k, n, OutputMode::Quant { shift: 6 }).unwrap();
+    let run1 = run_gemm(&mut single, &a, &b, &plan).unwrap();
+    let want = run1.c_i8.unwrap();
+    assert_eq!(want, oracle_quant(&a, &b, 6));
+
+    let mut sims: Vec<CgraSim> = (0..2).map(|_| CgraSim::new(ArchConfig::default())).collect();
+    let sharded = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
+    assert_eq!(sharded.axis, SplitAxis::Rows);
+    assert_eq!(sharded.outcomes.len(), 2, "both devices must take a shard");
+    assert_eq!(sharded.c, want, "sharded output must be bit-identical to single-device");
+    assert!(
+        sharded.parallel_cycles() < run1.outcome.cycles + run1.outcome.config_cycles,
+        "2-device makespan must beat 1 device: {} vs {}",
+        sharded.parallel_cycles(),
+        run1.outcome.cycles + run1.outcome.config_cycles
+    );
 }
 
 /// Config sweep smoke: odd-but-legal architectures still compute exactly.
