@@ -21,7 +21,10 @@ fn main() -> anyhow::Result<()> {
         ("d64 L1 s32", XformerConfig { d_model: 64, n_heads: 4, d_ff: 128, n_layers: 1, seq: 32 }),
         ("d64 L2 s32", XformerConfig { d_model: 64, n_heads: 4, d_ff: 128, n_layers: 2, seq: 32 }),
         ("d64 L2 s64", XformerConfig { d_model: 64, n_heads: 4, d_ff: 128, n_layers: 2, seq: 64 }),
-        ("d128 L2 s64", XformerConfig { d_model: 128, n_heads: 4, d_ff: 256, n_layers: 2, seq: 64 }),
+        (
+            "d128 L2 s64",
+            XformerConfig { d_model: 128, n_heads: 4, d_ff: 256, n_layers: 2, seq: 64 },
+        ),
     ];
     let acfg = ArchConfig::default();
     let gpp = Gpp::default();

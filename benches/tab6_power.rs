@@ -63,7 +63,8 @@ fn main() -> anyhow::Result<()> {
     };
     for (pname, params) in param_sets {
         println!("energy parameters: {pname}");
-        let mut table = Table::new(&["workload", "corner", "freq MHz", "mW", "GOPS", "GOPS/W", "sub-mW"]);
+        let mut table =
+            Table::new(&["workload", "corner", "freq MHz", "mW", "GOPS", "GOPS/W", "sub-mW"]);
         for (wname, stats) in &workloads {
             for (cname, dyn_f, leak_f) in corners {
                 let em = EnergyModel::new(params.scaled(dyn_f, leak_f));

@@ -18,7 +18,10 @@ fn main() -> anyhow::Result<()> {
     let xcfg = XformerConfig { n_layers: 1, seq: 64, d_model: 64, n_heads: 4, d_ff: 128 };
     let model = EncoderModel::new(xcfg, 7);
     println!("architecture : {}", cfg.summary());
-    println!("workload     : 1 encoder layer, seq={} d_model={} heads={}", xcfg.seq, xcfg.d_model, xcfg.n_heads);
+    println!(
+        "workload     : 1 encoder layer, seq={} d_model={} heads={}",
+        xcfg.seq, xcfg.d_model, xcfg.n_heads
+    );
     println!("GEMM MACs    : {}", xcfg.gemm_macs());
 
     let mut rng = XorShiftRng::new(3);
@@ -63,7 +66,8 @@ fn main() -> anyhow::Result<()> {
 
     // The all-scalar alternative.
     let sc = gpp.gemm_cost(xcfg.seq, xcfg.d_model, xcfg.d_model); // representative proj
-    let scalar_total: u64 = xcfg.gemm_macs() * sc.cycles / (xcfg.seq as u64 * xcfg.d_model as u64 * xcfg.d_model as u64);
+    let scalar_total: u64 = xcfg.gemm_macs() * sc.cycles
+        / (xcfg.seq as u64 * xcfg.d_model as u64 * xcfg.d_model as u64);
     println!(
         "vs GPP-only  : GEMMs alone would take ≈{} cycles on the scalar core ({:.1}× slower)",
         scalar_total,

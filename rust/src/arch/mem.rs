@@ -138,7 +138,13 @@ impl MemSystem {
     // ---------- timed word access (MOB streams, PE direct loads) ----------
 
     /// Timed word read: returns `(value, ready_at)`.
-    pub fn read(&mut self, space: MemSpace, addr: u32, cycle: u64, stats: &mut Stats) -> (u32, u64) {
+    pub fn read(
+        &mut self,
+        space: MemSpace,
+        addr: u32,
+        cycle: u64,
+        stats: &mut Stats,
+    ) -> (u32, u64) {
         match space {
             MemSpace::L1 => {
                 let a = addr as usize;
@@ -168,7 +174,14 @@ impl MemSystem {
     }
 
     /// Timed word write: returns the cycle the write retires.
-    pub fn write(&mut self, space: MemSpace, addr: u32, value: u32, cycle: u64, stats: &mut Stats) -> u64 {
+    pub fn write(
+        &mut self,
+        space: MemSpace,
+        addr: u32,
+        value: u32,
+        cycle: u64,
+        stats: &mut Stats,
+    ) -> u64 {
         match space {
             MemSpace::L1 => {
                 let a = addr as usize;

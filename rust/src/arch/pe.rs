@@ -283,7 +283,14 @@ impl Pe {
         }
     }
 
-    fn write_dst(&mut self, dst: Dst, value: u32, fabric: &mut Fabric, cycle: u64, stats: &mut Stats) {
+    fn write_dst(
+        &mut self,
+        dst: Dst,
+        value: u32,
+        fabric: &mut Fabric,
+        cycle: u64,
+        stats: &mut Stats,
+    ) {
         match dst {
             Dst::Reg(r) => {
                 self.regs[r as usize] = value;
@@ -474,7 +481,13 @@ mod tests {
         )
     }
 
-    fn run_alone(pe: &mut Pe, fabric: &mut Fabric, mem: &mut MemSystem, stats: &mut Stats, max: u64) {
+    fn run_alone(
+        pe: &mut Pe,
+        fabric: &mut Fabric,
+        mem: &mut MemSystem,
+        stats: &mut Stats,
+        max: u64,
+    ) {
         let mut cycle = 0;
         while !pe.halted() && cycle < max {
             pe.tick(fabric, mem, cycle, stats);
@@ -485,7 +498,14 @@ mod tests {
     }
 
     fn single_tile(body: Vec<PeInstr>, trip: u32) -> PeProgram {
-        PeProgram { prologue: vec![], body, trip, tile_epilogue: vec![], tiles: 1, epilogue: vec![] }
+        PeProgram {
+            prologue: vec![],
+            body,
+            trip,
+            tile_epilogue: vec![],
+            tiles: 1,
+            epilogue: vec![],
+        }
     }
 
     #[test]

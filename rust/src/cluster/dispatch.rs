@@ -43,6 +43,48 @@ pub enum Discipline {
     Edf,
 }
 
+/// Same-model batch coalescing applied at pop time: when a device takes
+/// work, it also takes up to `max_batch - 1` further queued requests of
+/// the *same model class* (in discipline order), so the engine can run
+/// them as one stacked encoder job with the weights streamed once.
+///
+/// `max_wait_cycles` bounds the fill delay: a device whose coalescible
+/// batch is still short may stay idle until `head_arrival +
+/// max_wait_cycles` waiting for more same-model arrivals; at the
+/// deadline (or when no arrivals remain) it serves the partial batch.
+/// All decisions depend only on simulated stamps, so batched fleet runs
+/// stay seed-deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Largest number of same-model requests one device job may stack
+    /// (1 = no batching; 0 is treated as 1 — see [`Self::cap`], the
+    /// single normalization point every consumer reads).
+    pub max_batch: usize,
+    /// Longest the discipline head may be held waiting for the batch to
+    /// fill before the device serves a partial batch.
+    pub max_wait_cycles: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 1, max_wait_cycles: 0 }
+    }
+}
+
+impl BatchPolicy {
+    /// Batching without any fill delay: stack whatever is queued.
+    pub fn greedy(max_batch: usize) -> Self {
+        Self { max_batch, max_wait_cycles: 0 }
+    }
+
+    /// The effective batch bound: `max_batch` clamped to ≥ 1, so a
+    /// zero (a plausible "batching off" spelling) serves singly
+    /// instead of deadlocking or panicking.
+    pub fn cap(&self) -> usize {
+        self.max_batch.max(1)
+    }
+}
+
 /// Per-device request queues plus the placement/discipline state.
 #[derive(Debug)]
 pub struct Dispatcher {
@@ -107,41 +149,54 @@ impl Dispatcher {
         dev
     }
 
-    /// Pop device `d`'s next request per the discipline. Returns the
-    /// requests dropped on the way (EDF deadline misses) and the request
-    /// to serve, if any.
-    pub fn pop(&mut self, d: usize, now: u64) -> (Vec<FleetRequest>, Option<FleetRequest>) {
-        let discipline = self.discipline;
-        let q = &mut self.queues[d];
-        let mut dropped = Vec::new();
-        let job = loop {
-            if q.is_empty() {
-                break None;
+    /// Index of the next request in `q` per `discipline`, optionally
+    /// restricted to one model class (batch coalescing). `None` when no
+    /// candidate exists.
+    fn select(
+        q: &VecDeque<FleetRequest>,
+        discipline: Discipline,
+        model: Option<usize>,
+    ) -> Option<usize> {
+        let key = |r: &FleetRequest| r.deadline_cycle.unwrap_or(u64::MAX);
+        let mut best: Option<usize> = None;
+        for (i, r) in q.iter().enumerate() {
+            if model.is_some_and(|m| r.model != m) {
+                continue;
             }
-            let idx = match discipline {
-                Discipline::Fifo => 0,
-                Discipline::Priority => {
-                    let mut best = 0;
-                    for i in 1..q.len() {
-                        if q[i].priority < q[best].priority {
-                            best = i;
-                        }
+            best = Some(match best {
+                None => i,
+                Some(b) => {
+                    let better = match discipline {
+                        // Queue order is arrival order, so the first
+                        // candidate wins.
+                        Discipline::Fifo => false,
+                        Discipline::Priority => r.priority < q[b].priority,
+                        Discipline::Edf => key(r) < key(&q[b]),
+                    };
+                    if better {
+                        i
+                    } else {
+                        b
                     }
-                    best
                 }
-                Discipline::Edf => {
-                    let key = |r: &FleetRequest| r.deadline_cycle.unwrap_or(u64::MAX);
-                    let mut best = 0;
-                    for i in 1..q.len() {
-                        if key(&q[i]) < key(&q[best]) {
-                            best = i;
-                        }
-                    }
-                    best
-                }
-            };
-            let req = q.remove(idx).expect("index in range");
-            if discipline == Discipline::Edf {
+            });
+        }
+        best
+    }
+
+    /// Pop the next request per the discipline (restricted to `model`
+    /// when coalescing), appending EDF deadline misses to `dropped`.
+    fn pop_filtered(
+        &mut self,
+        d: usize,
+        now: u64,
+        model: Option<usize>,
+        dropped: &mut Vec<FleetRequest>,
+    ) -> Option<FleetRequest> {
+        loop {
+            let idx = Self::select(&self.queues[d], self.discipline, model)?;
+            let req = self.queues[d].remove(idx).expect("index in range");
+            if self.discipline == Discipline::Edf {
                 if let Some(dl) = req.deadline_cycle {
                     if dl < now {
                         dropped.push(req);
@@ -149,10 +204,74 @@ impl Dispatcher {
                     }
                 }
             }
-            break Some(req);
-        };
+            return Some(req);
+        }
+    }
+
+    /// Pop device `d`'s next request per the discipline. Returns the
+    /// requests dropped on the way (EDF deadline misses) and the request
+    /// to serve, if any.
+    pub fn pop(&mut self, d: usize, now: u64) -> (Vec<FleetRequest>, Option<FleetRequest>) {
+        let mut dropped = Vec::new();
+        let job = self.pop_filtered(d, now, None, &mut dropped);
         (dropped, job)
     }
+
+    /// Pop the discipline head plus up to `max_batch - 1` further queued
+    /// requests of the same model class (in discipline order): the batch
+    /// one device job will serve as a single stacked encoder run.
+    pub fn pop_batch(
+        &mut self,
+        d: usize,
+        now: u64,
+        max_batch: usize,
+    ) -> (Vec<FleetRequest>, Vec<FleetRequest>) {
+        let mut dropped = Vec::new();
+        let mut batch = Vec::new();
+        let Some(head) = self.pop_filtered(d, now, None, &mut dropped) else {
+            return (dropped, batch);
+        };
+        let model = head.model;
+        batch.push(head);
+        while batch.len() < max_batch.max(1) {
+            match self.pop_filtered(d, now, Some(model), &mut dropped) {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        (dropped, batch)
+    }
+
+    /// Preview the batch a pop would form on device `d` (the fleet's
+    /// hold-for-fill decision). `None` when the queue is empty. EDF
+    /// expiry is ignored here — an expired head resolves at pop time.
+    pub fn peek_batch(&self, d: usize) -> Option<BatchOutlook> {
+        let q = &self.queues[d];
+        let idx = Self::select(q, self.discipline, None)?;
+        let model = q[idx].model;
+        let count = q.iter().filter(|r| r.model == model).count();
+        Some(BatchOutlook {
+            count,
+            model,
+            head_arrival: q[idx].arrival_cycle,
+            head_deadline: q[idx].deadline_cycle,
+        })
+    }
+}
+
+/// What a pop would take from a device queue right now — the input to
+/// the fleet's hold-for-fill decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchOutlook {
+    /// Queued requests sharing the discipline head's model class.
+    pub count: usize,
+    /// The head's model class.
+    pub model: usize,
+    /// The head's arrival cycle (the anchor for `max_wait_cycles`).
+    pub head_arrival: u64,
+    /// The head's absolute deadline, if any (caps how long a hold may
+    /// defer service).
+    pub head_deadline: Option<u64>,
 }
 
 #[cfg(test)]
@@ -232,6 +351,68 @@ mod tests {
         assert_eq!(job.unwrap().id, 0);
         let (dropped, job) = d.pop(0, 100);
         assert!(dropped.is_empty() && job.is_none());
+    }
+
+    #[test]
+    fn pop_batch_coalesces_same_model_in_fifo_order() {
+        let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
+        // Interleaved models: 0, 1, 0, 0, 1.
+        for (id, model) in [(0u64, 0usize), (1, 1), (2, 0), (3, 0), (4, 1)] {
+            d.dispatch(req(id, model, 0, None), 0, &[0], |_| 1);
+        }
+        let (dropped, batch) = d.pop_batch(0, 0, 4);
+        assert!(dropped.is_empty());
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 3], "head's model coalesced in arrival order");
+        let (_, batch2) = d.pop_batch(0, 0, 4);
+        let ids2: Vec<u64> = batch2.iter().map(|r| r.id).collect();
+        assert_eq!(ids2, vec![1, 4], "other model forms the next batch");
+        assert!(d.pop_batch(0, 0, 4).1.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_respects_max_batch() {
+        let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
+        for id in 0..5 {
+            d.dispatch(req(id, 0, 0, None), 0, &[0], |_| 1);
+        }
+        let (_, batch) = d.pop_batch(0, 0, 2);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(d.queued(0), 3);
+        // max_batch 0 is clamped to 1 (no batching), never an empty pop.
+        let (_, batch) = d.pop_batch(0, 0, 0);
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn pop_batch_edf_drops_expired_followers() {
+        let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Edf, 1);
+        d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_| 1);
+        d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_| 1); // expired at now=100
+        d.dispatch(req(2, 0, 0, Some(400)), 0, &[0], |_| 1);
+        let (dropped, batch) = d.pop_batch(0, 100, 3);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].id, 1);
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 0], "live requests batched in deadline order");
+    }
+
+    #[test]
+    fn peek_batch_reports_head_model_count_and_arrival() {
+        let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
+        assert_eq!(d.peek_batch(0), None);
+        let mut r0 = req(0, 0, 0, Some(900));
+        r0.arrival_cycle = 7;
+        d.dispatch(r0, 7, &[0], |_| 1);
+        d.dispatch(req(1, 1, 0, None), 8, &[0], |_| 1);
+        d.dispatch(req(2, 0, 0, None), 9, &[0], |_| 1);
+        assert_eq!(
+            d.peek_batch(0),
+            Some(BatchOutlook { count: 2, model: 0, head_arrival: 7, head_deadline: Some(900) }),
+            "two model-0 requests behind the head"
+        );
+        // Peeking must not consume anything.
+        assert_eq!(d.queued(0), 3);
     }
 
     #[test]

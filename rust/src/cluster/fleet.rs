@@ -23,14 +23,30 @@
 //! charged again. The rule depends only on simulated arrival stamps —
 //! never on wall-clock channel races — which keeps serving runs
 //! deterministic.
+//!
+//! ## True batch GEMM
+//!
+//! With a [`BatchPolicy`] (`max_batch > 1`), a freed device coalesces
+//! same-model queued requests at pop time and executes them as **one**
+//! stacked encoder job ([`crate::xformer::run_encoder_batch`]): every
+//! projection/FFN GEMM runs as a single `(B·seq) × d_model` kernel with
+//! the weights streamed once, while attention stays per-sequence. All
+//! requests of a batch complete together; per-request latency is
+//! attributed from that shared completion. Because the batched path
+//! uses the fleet's static per-model calibration ([`EncoderQuant`]),
+//! each request's output is bit-identical whichever batch serves it —
+//! batching changes timing and energy, never results.
 
-use super::dispatch::{Discipline, Dispatcher, Placement};
+use super::dispatch::{BatchPolicy, Discipline, Dispatcher, Placement};
 use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::workload::{FleetRequest, ModelClass};
 use crate::config::ArchConfig;
+use crate::gemm::{GemmPlan, OutputMode};
 use crate::sim::{CgraSim, Stats};
 use crate::util::mat::MatF32;
-use crate::xformer::{run_encoder_on_cgra, EncoderModel};
+use crate::xformer::{
+    run_encoder_batch, CgraEncoderReport, EncoderModel, EncoderQuant, XformerConfig,
+};
 use anyhow::Result;
 use std::collections::BTreeMap;
 
@@ -61,20 +77,18 @@ impl DeviceEngine {
         }
     }
 
-    /// Serve one encoder request starting at `start` (must be ≥
-    /// [`Self::free_at`]). Returns the output and the charged service
-    /// cycles (execution + configuration, minus the context-reuse
-    /// discount — see the module docs).
-    pub fn serve_encoder(
+    /// Shared post-run accounting for both serving paths: apply the
+    /// context-reuse discount, merge event counters, advance the
+    /// serving clock. Returns the charged service cycles. Keeping this
+    /// in one place guarantees single-request and batched serving can
+    /// never drift apart on timing or energy.
+    fn charge_run(
         &mut self,
         model_key: usize,
-        model: &EncoderModel,
-        input: &MatF32,
         start: u64,
-    ) -> Result<(MatF32, u64)> {
-        debug_assert!(start >= self.free_at, "service cannot start before the device is free");
-        self.sim.reset_stats();
-        let (output, report) = run_encoder_on_cgra(&mut self.sim, model, input)?;
+        report: &CgraEncoderReport,
+        requests: u64,
+    ) -> u64 {
         let reuse = self.served > 0 && start == self.free_at && self.last_model == Some(model_key);
         let charged = report.cycles + if reuse { 0 } else { report.config_cycles };
         // Keep event accounting consistent with the timing model: a
@@ -88,10 +102,56 @@ impl DeviceEngine {
         self.stats.merge(&run_stats);
         self.busy_cycles += charged;
         self.free_at = start + charged;
-        self.served += 1;
+        self.served += requests;
         self.last_model = Some(model_key);
-        Ok((output, charged))
+        charged
     }
+
+    /// Serve one stacked same-model batch starting at `start` (must be
+    /// ≥ [`Self::free_at`]): one encoder job over every input, weights
+    /// streamed once per layer GEMM — a single input is the per-request
+    /// case. Returns the per-request outputs (stacking order), the
+    /// charged service cycles for the whole batch (execution +
+    /// configuration, minus the context-reuse discount — see the module
+    /// docs), and the run report (batch-occupancy / weight-reuse
+    /// accounting for [`FleetMetrics`]).
+    pub fn serve_encoder_batch(
+        &mut self,
+        model_key: usize,
+        model: &EncoderModel,
+        quant: &EncoderQuant,
+        inputs: &[&MatF32],
+        start: u64,
+    ) -> Result<(Vec<MatF32>, u64, CgraEncoderReport)> {
+        debug_assert!(start >= self.free_at, "service cannot start before the device is free");
+        self.sim.reset_stats();
+        let (outputs, report) = run_encoder_batch(&mut self.sim, model, quant, inputs)?;
+        let charged = self.charge_run(model_key, start, &report, inputs.len() as u64);
+        Ok((outputs, charged, report))
+    }
+}
+
+/// Optimistic analytic estimate of one encoder request's service cycles:
+/// the sum of [`GemmPlan::ideal_cycles`] (one packed MAC per PE per
+/// cycle over the padded volume) across every GEMM site of the model.
+/// It ignores fills, drains, DMA and configuration, so it lower-bounds
+/// the observed charge — exactly what the shortest-expected-job
+/// placement needs before a class has ever completed (the cold-start
+/// pre-seed the ROADMAP called for).
+pub fn analytic_encoder_cycles(arch: &ArchConfig, cfg: &XformerConfig) -> u64 {
+    let peak = (4 * arch.topo.rows * arch.topo.pe_cols) as u64;
+    let ideal = |m: usize, k: usize, n: usize| -> u64 {
+        GemmPlan::new(arch, m, k, n, OutputMode::Quant { shift: 0 })
+            .map(|p| p.ideal_cycles())
+            .unwrap_or_else(|_| ((m * k * n) as u64).div_ceil(peak).max(1))
+    };
+    let (s, d, f) = (cfg.seq, cfg.d_model, cfg.d_ff);
+    let dh = cfg.d_head();
+    let per_layer = 4 * ideal(s, d, d)
+        + cfg.n_heads as u64 * (ideal(s, dh, s) + ideal(s, s, dh))
+        + ideal(s, d, f)
+        + ideal(s, f, d);
+    (per_layer * cfg.n_layers as u64).max(1)
 }
 
 /// Fleet-level configuration.
@@ -100,6 +160,8 @@ pub struct FleetConfig {
     pub devices: usize,
     pub policy: Placement,
     pub discipline: Discipline,
+    /// Same-model batch coalescing (default: off, `max_batch = 1`).
+    pub batch: BatchPolicy,
     /// Per-device architecture (the fleet is homogeneous).
     pub arch: ArchConfig,
 }
@@ -110,6 +172,7 @@ impl Default for FleetConfig {
             devices: 4,
             policy: Placement::LeastLoaded,
             discipline: Discipline::Fifo,
+            batch: BatchPolicy::default(),
             arch: ArchConfig::default(),
         }
     }
@@ -121,18 +184,25 @@ pub struct FleetSim {
     devices: Vec<DeviceEngine>,
     dispatcher: Dispatcher,
     models: Vec<EncoderModel>,
-    /// Charged service cycles observed per model class — the
-    /// shortest-expected-job placement estimate. Shared across devices
-    /// (the fleet is homogeneous).
+    /// Static per-model quantization calibration (index-aligned with
+    /// `models`); shared by every device so batching is output-neutral.
+    quants: Vec<EncoderQuant>,
+    /// Expected service cycles per model class — the shortest-expected-
+    /// job placement estimate. Pre-seeded from the analytic cycle model
+    /// at construction; the first observed completion replaces the
+    /// analytic value. Shared across devices (the fleet is homogeneous).
     cost_cache: BTreeMap<usize, u64>,
+    /// Which classes have had their analytic pre-seed replaced by an
+    /// observed charge.
+    observed: Vec<bool>,
     /// `run` is single-shot: device clocks and counters are not reset
     /// between runs, so a second call would silently misaccount.
     ran: bool,
 }
 
-/// Expected service cycles for a model class: the cached observation,
-/// or an optimistic analytic estimate (ideal MACs/cycle on the paper
-/// array) before the class has ever completed.
+/// Expected service cycles for a model class: the observed charge, or
+/// the analytic pre-seed (always present after `FleetSim::new`; the
+/// MACs/cycle fallback only guards direct map misuse).
 fn est_cost(cache: &BTreeMap<usize, u64>, models: &[EncoderModel], model: usize) -> u64 {
     cache
         .get(&model)
@@ -142,23 +212,52 @@ fn est_cost(cache: &BTreeMap<usize, u64>, models: &[EncoderModel], model: usize)
 
 impl FleetSim {
     /// Build a fleet: one fresh simulator per device, one model per
-    /// catalog class (weights seeded deterministically per class).
+    /// catalog class (weights seeded deterministically per class), one
+    /// static calibration per model, and the shortest-expected-job cost
+    /// cache pre-seeded from [`analytic_encoder_cycles`] so the first
+    /// wave of requests is placed sensibly before anything completes.
     pub fn new(cfg: FleetConfig, classes: &[ModelClass], model_seed: u64) -> Self {
         assert!(cfg.devices > 0, "fleet needs at least one device");
         assert!(!classes.is_empty(), "fleet needs at least one model class");
         let devices = (0..cfg.devices).map(|_| DeviceEngine::new(cfg.arch.clone())).collect();
-        let models = classes
+        let models: Vec<EncoderModel> = classes
             .iter()
             .enumerate()
             .map(|(i, c)| EncoderModel::new(c.cfg, model_seed + i as u64))
             .collect();
+        let quants = models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                EncoderQuant::calibrate_seeded(m, model_seed.wrapping_add(0xCA11B + i as u64))
+            })
+            .collect();
+        let mut cost_cache = BTreeMap::new();
+        for (i, c) in classes.iter().enumerate() {
+            cost_cache.insert(i, analytic_encoder_cycles(&cfg.arch, &c.cfg));
+        }
         let dispatcher = Dispatcher::new(cfg.policy, cfg.discipline, cfg.devices);
-        Self { cfg, devices, dispatcher, models, cost_cache: BTreeMap::new(), ran: false }
+        Self {
+            cfg,
+            devices,
+            dispatcher,
+            models,
+            quants,
+            cost_cache,
+            observed: vec![false; classes.len()],
+            ran: false,
+        }
     }
 
     /// The served model catalog (index-aligned with request `model`).
     pub fn models(&self) -> &[EncoderModel] {
         &self.models
+    }
+
+    /// The dispatcher's current expected service cycles for a model
+    /// class (analytic pre-seed until the class first completes).
+    pub fn expected_cost(&self, model: usize) -> u64 {
+        est_cost(&self.cost_cache, &self.models, model)
     }
 
     /// Run the fleet over a request stream to completion and return the
@@ -169,7 +268,8 @@ impl FleetSim {
     pub fn run(&mut self, mut requests: Vec<FleetRequest>) -> Result<FleetMetrics> {
         assert!(!self.ran, "FleetSim::run is single-shot; build a fresh fleet per run");
         self.ran = true;
-        let Self { cfg: _, devices, dispatcher, models, cost_cache, ran: _ } = self;
+        let Self { cfg, devices, dispatcher, models, quants, cost_cache, observed, ran: _ } = self;
+        let policy = cfg.batch;
         requests.sort_by_key(|r| (r.arrival_cycle, r.id));
         let mut arrivals = requests.into_iter().peekable();
         let mut metrics = FleetMetrics::default();
@@ -184,33 +284,83 @@ impl FleetSim {
                 dispatcher.dispatch(r, now, &free, |m| est_cost(cost_cache, models, m));
             }
             // 2. Serve: every idle device takes work per its queue
-            // discipline until it is busy past `now` or its queue dries.
+            // discipline until it is busy past `now`, its queue dries,
+            // or it holds for a fuller batch (`max_wait_cycles`).
+            let mut hold_until: Vec<Option<u64>> = vec![None; devices.len()];
             for d in 0..devices.len() {
                 while devices[d].free_at <= now {
-                    let (dropped, job) = dispatcher.pop(d, now);
+                    let Some(outlook) = dispatcher.peek_batch(d) else { break };
+                    if policy.cap() > 1
+                        && outlook.count < policy.cap()
+                        && arrivals.peek().is_some()
+                    {
+                        // Hold for a fuller batch, but not past the
+                        // point where the head's deadline becomes
+                        // unmeetable by the current cost estimate for
+                        // the batch it would join — waiting out the
+                        // fill budget should not turn a servable
+                        // request into an SLA miss / EDF drop. (The
+                        // estimate is optimistic, so a tight deadline
+                        // can still be missed; the cap only keeps the
+                        // hold itself from causing the miss.)
+                        let mut hold =
+                            outlook.head_arrival.saturating_add(policy.max_wait_cycles);
+                        if let Some(dl) = outlook.head_deadline {
+                            let est = est_cost(cost_cache, models, outlook.model)
+                                .saturating_mul(outlook.count as u64);
+                            hold = hold.min(dl.saturating_sub(est));
+                        }
+                        if now < hold {
+                            // A future event either way: the batch
+                            // fills, or the hold expires.
+                            hold_until[d] = Some(hold);
+                            break;
+                        }
+                    }
+                    let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap());
                     metrics.dropped += dropped.len() as u64;
-                    let Some(req) = job else { break };
-                    let (_output, charged) =
-                        devices[d].serve_encoder(req.model, &models[req.model], &req.input, now)?;
-                    cost_cache.entry(req.model).or_insert(charged);
+                    let Some(first) = batch.first() else { continue };
+                    let model = first.model;
+                    let inputs: Vec<&MatF32> = batch.iter().map(|r| &r.input).collect();
+                    let (_outputs, charged, report) = devices[d].serve_encoder_batch(
+                        model,
+                        &models[model],
+                        &quants[model],
+                        &inputs,
+                        now,
+                    )?;
+                    if !observed[model] {
+                        // First observed completion replaces the
+                        // analytic pre-seed with a per-request charge.
+                        cost_cache.insert(model, (charged / batch.len() as u64).max(1));
+                        observed[model] = true;
+                    }
                     let completion = now + charged;
-                    metrics.completed += 1;
-                    metrics.latency.record(completion - req.arrival_cycle);
-                    metrics.queue_wait.record(now - req.arrival_cycle);
+                    metrics.batch_occupancy.record(batch.len() as u64);
+                    metrics.weight_reuse_words += report.weight_reuse_words;
                     metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
-                    if req.deadline_cycle.is_some_and(|dl| completion > dl) {
-                        metrics.sla_misses += 1;
+                    for req in &batch {
+                        metrics.completed += 1;
+                        metrics.latency.record(completion - req.arrival_cycle);
+                        metrics.queue_wait.record(now - req.arrival_cycle);
+                        if req.deadline_cycle.is_some_and(|dl| completion > dl) {
+                            metrics.sla_misses += 1;
+                        }
                     }
                 }
             }
-            // 3. Advance to the next event: the next arrival, or the
+            // 3. Advance to the next event: the next arrival, the
             // earliest completion on a device that still has queued
-            // work. Both are strictly after `now`, so time always moves.
+            // work, or the earliest batch-hold deadline. All are
+            // strictly after `now`, so time always moves.
             let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
             for d in 0..devices.len() {
                 if dispatcher.queued(d) > 0 && devices[d].free_at > now {
                     let t = devices[d].free_at;
                     next = Some(next.map_or(t, |n| n.min(t)));
+                }
+                if let Some(hold) = hold_until[d] {
+                    next = Some(next.map_or(hold, |n| n.min(hold)));
                 }
             }
             match next {
@@ -256,14 +406,18 @@ mod tests {
     fn engine_back_to_back_reuses_context() {
         let classes = tiny_classes();
         let model = EncoderModel::new(classes[0].cfg, 42);
+        let quant = EncoderQuant::calibrate_seeded(&model, 1);
         let mut engine = DeviceEngine::new(ArchConfig::default());
         let x = tiny_input(1);
-        let (_, c1) = engine.serve_encoder(0, &model, &x, 0).unwrap();
+        let (_, c1, _) = engine.serve_encoder_batch(0, &model, &quant, &[&x], 0).unwrap();
         // Back-to-back: starts exactly when the previous finished.
-        let (_, c2) = engine.serve_encoder(0, &model, &x, engine.free_at).unwrap();
+        let (_, c2, _) =
+            engine.serve_encoder_batch(0, &model, &quant, &[&x], engine.free_at).unwrap();
         assert!(c2 < c1, "context reuse must discount configuration: {c2} vs {c1}");
         // After an idle gap the full configuration cost returns.
-        let (_, c3) = engine.serve_encoder(0, &model, &x, engine.free_at + 1_000_000).unwrap();
+        let gap_start = engine.free_at + 1_000_000;
+        let (_, c3, _) =
+            engine.serve_encoder_batch(0, &model, &quant, &[&x], gap_start).unwrap();
         assert_eq!(c3, c1, "idle gap re-charges configuration");
     }
 
@@ -324,6 +478,188 @@ mod tests {
             m1.makespan_cycles
         );
         assert!(m4.throughput_rps(100.0) > m1.throughput_rps(100.0));
+    }
+
+    #[test]
+    fn analytic_preseed_spreads_first_wave_and_yields_to_observation() {
+        // Regression for the SJF cold start: before any completion the
+        // cost cache must already hold the analytic estimate, so a
+        // simultaneous first wave spreads across the fleet instead of
+        // piling onto device 0 (which a zero/constant estimate would
+        // cause, since ties break to the lowest index).
+        let classes = tiny_classes();
+        let fleet_cfg = FleetConfig {
+            devices: 4,
+            policy: Placement::ShortestExpectedJob,
+            ..Default::default()
+        };
+        let mut fleet = FleetSim::new(fleet_cfg, &classes, 42);
+        let analytic = analytic_encoder_cycles(&ArchConfig::default(), &classes[0].cfg);
+        assert!(analytic > 0);
+        assert!(
+            analytic >= classes[0].cfg.gemm_macs() / 64,
+            "padded ideal cycles can never undercut raw MACs/peak"
+        );
+        assert_eq!(
+            fleet.expected_cost(0),
+            analytic,
+            "cache must be pre-seeded before any completion"
+        );
+        let cfg = classes[0].cfg;
+        let mut rng = XorShiftRng::new(5);
+        let requests: Vec<FleetRequest> = (0..8)
+            .map(|id| {
+                let mut input = MatF32::zeros(cfg.seq, cfg.d_model);
+                for v in &mut input.data {
+                    *v = rng.normal() * 0.5;
+                }
+                FleetRequest {
+                    id,
+                    model: 0,
+                    input,
+                    arrival_cycle: 0,
+                    priority: 0,
+                    deadline_cycle: None,
+                }
+            })
+            .collect();
+        let m = fleet.run(requests).unwrap();
+        assert_eq!(m.completed, 8);
+        for d in 0..4 {
+            assert_eq!(m.per_device[d].served, 2, "first wave misplaced: {:?}", m.per_device);
+        }
+        let observed = fleet.expected_cost(0);
+        assert!(observed > analytic, "observed charge must replace the optimistic pre-seed");
+    }
+
+    #[test]
+    fn batched_fleet_serves_fewer_jobs_and_reuses_weights() {
+        let classes = tiny_classes();
+        let mk = |batch: BatchPolicy| {
+            // Effectively simultaneous arrivals: the queue builds, so a
+            // batching device can coalesce.
+            let mut gen = WorkloadGen::new(
+                ArrivalProcess::Poisson { rate_rps: 1e6 },
+                classes.clone(),
+                100.0,
+                21,
+            );
+            let reqs = gen.generate(8);
+            let mut fleet = FleetSim::new(
+                FleetConfig { devices: 1, batch, ..Default::default() },
+                &classes,
+                42,
+            );
+            fleet.run(reqs).unwrap()
+        };
+        let solo = mk(BatchPolicy::default());
+        let batched = mk(BatchPolicy::greedy(4));
+        assert_eq!(solo.completed, 8);
+        assert_eq!(batched.completed, 8);
+        assert_eq!(solo.batches(), 8, "no batching → one job per request");
+        assert!((solo.mean_batch_occupancy() - 1.0).abs() < 1e-12);
+        assert!(batched.batches() < solo.batches(), "coalescing must merge jobs");
+        assert!(batched.mean_batch_occupancy() > 1.0);
+        assert!(batched.weight_reuse_words > 0);
+        assert_eq!(solo.weight_reuse_words, 0);
+        assert!(
+            batched.makespan_cycles < solo.makespan_cycles,
+            "stacked serving must finish the burst sooner: {} vs {}",
+            batched.makespan_cycles,
+            solo.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn batch_hold_waits_for_fill_but_never_past_deadline() {
+        // One device, two same-model requests 10k cycles apart, and a
+        // wait budget that covers the gap: the device must hold and
+        // serve both as one batch. With a zero wait budget it must
+        // serve them separately.
+        let classes = tiny_classes();
+        let cfg = classes[0].cfg;
+        let mk_reqs = || {
+            let mut rng = XorShiftRng::new(9);
+            (0..2u64)
+                .map(|id| {
+                    let mut input = MatF32::zeros(cfg.seq, cfg.d_model);
+                    for v in &mut input.data {
+                        *v = rng.normal() * 0.5;
+                    }
+                    FleetRequest {
+                        id,
+                        model: 0,
+                        input,
+                        arrival_cycle: id * 10_000,
+                        priority: 0,
+                        deadline_cycle: None,
+                    }
+                })
+                .collect::<Vec<_>>()
+        };
+        let run = |batch: BatchPolicy| {
+            let mut fleet = FleetSim::new(
+                FleetConfig { devices: 1, batch, ..Default::default() },
+                &classes,
+                42,
+            );
+            fleet.run(mk_reqs()).unwrap()
+        };
+        let held = run(BatchPolicy { max_batch: 2, max_wait_cycles: 50_000 });
+        assert_eq!(held.batches(), 1, "wait budget must let the batch fill");
+        assert_eq!(held.completed, 2);
+        let eager = run(BatchPolicy::greedy(2));
+        assert_eq!(eager.batches(), 2, "zero wait budget serves the head immediately");
+        assert_eq!(eager.completed, 2);
+    }
+
+    #[test]
+    fn batch_hold_is_capped_by_the_head_deadline() {
+        // A head with a deadline must not be held past the point where
+        // the deadline becomes unmeetable by the cost estimate: the
+        // device serves a partial batch early instead of waiting out
+        // the fill budget for the second arrival.
+        let classes = tiny_classes();
+        let cfg = classes[0].cfg;
+        let mk_reqs = |deadline: Option<u64>| {
+            let mut rng = XorShiftRng::new(9);
+            (0..2u64)
+                .map(|id| {
+                    let mut input = MatF32::zeros(cfg.seq, cfg.d_model);
+                    for v in &mut input.data {
+                        *v = rng.normal() * 0.5;
+                    }
+                    FleetRequest {
+                        id,
+                        model: 0,
+                        input,
+                        arrival_cycle: id * 40_000,
+                        priority: 0,
+                        deadline_cycle: if id == 0 { deadline } else { None },
+                    }
+                })
+                .collect::<Vec<_>>()
+        };
+        let run = |reqs: Vec<FleetRequest>| {
+            let policy = BatchPolicy { max_batch: 2, max_wait_cycles: 100_000 };
+            let mut fleet = FleetSim::new(
+                FleetConfig { devices: 1, batch: policy, ..Default::default() },
+                &classes,
+                42,
+            );
+            fleet.run(reqs).unwrap()
+        };
+        let unconstrained = run(mk_reqs(None));
+        assert_eq!(
+            unconstrained.batches(),
+            1,
+            "no deadline: the hold lasts until the batch fills at 40k"
+        );
+        // Deadline 20k: hold capped at 20k - analytic estimate, which is
+        // before the second arrival, so the head is served alone.
+        let tight = run(mk_reqs(Some(20_000)));
+        assert_eq!(tight.batches(), 2, "deadline cap must end the hold early");
+        assert_eq!(tight.completed, 2);
     }
 
     #[test]

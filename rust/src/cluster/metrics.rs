@@ -97,6 +97,12 @@ pub struct FleetMetrics {
     pub latency: LatencyHistogram,
     /// Queue-wait component of latency (diagnostic for placement).
     pub queue_wait: LatencyHistogram,
+    /// Requests per executed batch, one sample per device job
+    /// (`mean()` is the average occupancy, `count()` the job count).
+    pub batch_occupancy: LatencyHistogram,
+    /// External-memory words avoided by streaming shared weights once
+    /// per stacked kernel instead of once per request.
+    pub weight_reuse_words: u64,
     /// Per-device service counters, indexed by device id.
     pub per_device: Vec<DeviceMetrics>,
     /// Merged simulator event counters across every device.
@@ -118,6 +124,17 @@ impl FleetMetrics {
             return 0.0;
         }
         self.per_device[d].busy_cycles as f64 / self.makespan_cycles as f64
+    }
+
+    /// Device jobs executed (a stacked batch of any size is one job).
+    pub fn batches(&self) -> u64 {
+        self.batch_occupancy.count() as u64
+    }
+
+    /// Mean batch occupancy: completed requests per device job (1.0
+    /// when batching is off; 0 when nothing ran).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        self.batch_occupancy.mean()
     }
 
     /// Mean utilization across the fleet.
@@ -191,6 +208,18 @@ mod tests {
         assert!((m.throughput_rps(100.0) - 1000.0).abs() < 1e-9);
         assert!((m.utilization(0) - 0.9).abs() < 1e-12);
         assert!((m.mean_utilization() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_occupancy_mean_and_job_count() {
+        let mut m = FleetMetrics::default();
+        assert_eq!(m.mean_batch_occupancy(), 0.0);
+        assert_eq!(m.batches(), 0);
+        for occ in [1u64, 3, 4, 4] {
+            m.batch_occupancy.record(occ);
+        }
+        assert_eq!(m.batches(), 4);
+        assert!((m.mean_batch_occupancy() - 3.0).abs() < 1e-12);
     }
 
     #[test]

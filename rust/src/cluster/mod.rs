@@ -10,15 +10,21 @@
 //!   all drawn from one [`crate::util::rng::XorShiftRng`] seed.
 //! - [`dispatch`] — the [`Dispatcher`]: pluggable placement policies
 //!   (round-robin, least-loaded, shortest-expected-job via a per-model
-//!   cycle-cost cache) and queue disciplines (FIFO, priority tiers,
-//!   earliest-deadline-first with drop-on-SLA-miss).
+//!   cycle-cost cache pre-seeded from the analytic cycle model), queue
+//!   disciplines (FIFO, priority tiers, earliest-deadline-first with
+//!   drop-on-SLA-miss), and [`BatchPolicy`] same-model coalescing at
+//!   pop time.
 //! - [`fleet`] — [`DeviceEngine`] (one simulator + serving clock; the
 //!   engine the single-device [`crate::coordinator`] adapts) and
-//!   [`FleetSim`], the N-device event loop.
+//!   [`FleetSim`], the N-device event loop. With batching on, a freed
+//!   device serves its coalesced batch as one stacked encoder job
+//!   (true batch GEMM: weights streamed once per layer), bit-identical
+//!   per request to unbatched serving.
 //! - [`metrics`] — [`FleetMetrics`] with exact p50/p95/p99 latency
 //!   percentiles ([`LatencyHistogram`], shared with the coordinator's
 //!   `ServeMetrics`), per-device utilization, SLA-miss / drop counts,
-//!   and fleet energy (idle devices still leak).
+//!   batch occupancy, weight-reuse words, and fleet energy (idle
+//!   devices still leak).
 //! - [`parallel`] — tile-level model parallelism: one large GEMM's
 //!   i-/j-tile grid split across ≥2 devices with bit-identical merged
 //!   output, reusing `gemm::plan`/`mapper` unchanged.
@@ -33,8 +39,8 @@ pub mod metrics;
 pub mod parallel;
 pub mod workload;
 
-pub use dispatch::{Discipline, Dispatcher, Placement};
-pub use fleet::{DeviceEngine, FleetConfig, FleetSim};
+pub use dispatch::{BatchOutlook, BatchPolicy, Discipline, Dispatcher, Placement};
+pub use fleet::{analytic_encoder_cycles, DeviceEngine, FleetConfig, FleetSim};
 pub use metrics::{DeviceMetrics, FleetMetrics, LatencyHistogram};
 pub use parallel::{run_gemm_sharded, ShardedGemmRun, SplitAxis};
 pub use workload::{ArrivalProcess, FleetRequest, ModelClass, WorkloadGen};

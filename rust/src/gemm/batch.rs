@@ -1,0 +1,256 @@
+//! True batch GEMM: one stacked `(Σmᵢ) × K × N` kernel over row-blocks
+//! that share the B operand.
+//!
+//! Serving workloads multiply many small activation matrices against the
+//! *same* weight matrix. Running them as separate kernels re-streams B
+//! (and re-pays context configuration, DMA staging and fill/drain) once
+//! per request. Stacking the activations into one tall A matrix turns
+//! the whole batch into a single blocked GEMM: B crosses the external
+//! boundary once, the context is distributed once, and the steady-state
+//! MAC pipeline amortizes its fill across every block — the
+//! batching-driven weight-reuse lever the edge-serving literature
+//! (EdgeTran; Kim et al. 2023) identifies as the dominant throughput
+//! and energy win.
+//!
+//! Numerical contract: the int8 GEMM is row-wise independent and the
+//! simulated kernel is bit-exact against [`MatI8::matmul`] for every
+//! plan, so each unstacked block is **bit-identical** to running that
+//! block as its own GEMM with the same requant shift. The encoder-level
+//! batching in [`crate::xformer::run::run_encoder_batch`] builds on
+//! exactly this property.
+
+use super::plan::{GemmPlan, OutputMode};
+use super::run_gemm;
+use crate::config::ArchConfig;
+use crate::sim::{CgraSim, SimOutcome};
+use crate::util::mat::MatI8;
+use anyhow::{ensure, Result};
+
+/// Stack row-blocks that share a column count into one tall matrix.
+pub fn stack_i8(blocks: &[&MatI8]) -> MatI8 {
+    assert!(!blocks.is_empty(), "stack needs at least one block");
+    let cols = blocks[0].cols;
+    assert!(blocks.iter().all(|b| b.cols == cols), "all blocks must share the column count");
+    let rows = blocks.iter().map(|b| b.rows).sum();
+    let mut out = MatI8::zeros(rows, cols);
+    let mut off = 0usize;
+    for b in blocks {
+        out.data[off..off + b.data.len()].copy_from_slice(&b.data);
+        off += b.data.len();
+    }
+    out
+}
+
+/// Split a stacked matrix back into its row-blocks.
+pub fn unstack_i8(stacked: &MatI8, block_rows: &[usize]) -> Vec<MatI8> {
+    assert_eq!(
+        stacked.rows,
+        block_rows.iter().sum::<usize>(),
+        "stacked rows must match the block partition"
+    );
+    let mut out = Vec::with_capacity(block_rows.len());
+    let mut row = 0usize;
+    for &m in block_rows {
+        let mut blk = MatI8::zeros(m, stacked.cols);
+        blk.data
+            .copy_from_slice(&stacked.data[row * stacked.cols..(row + m) * stacked.cols]);
+        out.push(blk);
+        row += m;
+    }
+    out
+}
+
+/// Result of a batched GEMM: the shared kernel outcome plus the
+/// per-block outputs (bit-identical to per-block runs).
+pub struct BatchedGemmRun {
+    pub outcome: SimOutcome,
+    pub blocks: Vec<MatI8>,
+}
+
+/// A planned stacked GEMM over same-K/N row-blocks.
+pub struct BatchedGemm {
+    /// Row count of each stacked block, in stacking order.
+    block_rows: Vec<usize>,
+    pub k: usize,
+    pub n: usize,
+    /// The single plan covering the whole stack.
+    pub plan: GemmPlan,
+}
+
+impl BatchedGemm {
+    /// Plan one `(Σ block_rows) × k × n` GEMM. Requantized output only:
+    /// the raw-accumulator mode is single-tile and cannot stack.
+    pub fn new(
+        cfg: &ArchConfig,
+        block_rows: &[usize],
+        k: usize,
+        n: usize,
+        output: OutputMode,
+    ) -> Result<Self> {
+        ensure!(!block_rows.is_empty(), "batched GEMM needs at least one block");
+        ensure!(block_rows.iter().all(|&m| m > 0), "block rows must be positive");
+        ensure!(
+            matches!(output, OutputMode::Quant { .. }),
+            "batched GEMM requires requantized output (Raw is single-tile only)"
+        );
+        let m_total: usize = block_rows.iter().sum();
+        let plan = GemmPlan::new(cfg, m_total, k, n, output)?;
+        Ok(Self { block_rows: block_rows.to_vec(), k, n, plan })
+    }
+
+    /// Number of stacked blocks.
+    pub fn batch(&self) -> usize {
+        self.block_rows.len()
+    }
+
+    /// Total stacked rows.
+    pub fn stacked_rows(&self) -> usize {
+        self.block_rows.iter().sum()
+    }
+
+    /// Predicted external-memory words saved versus running every block
+    /// as its own GEMM: the packed B panel (`pe_cols · kp` words per
+    /// j-tile) crosses the external boundary once instead of once per
+    /// block.
+    pub fn weight_reuse_words(&self) -> u64 {
+        let b_words = (self.plan.pe_cols * self.plan.kp * self.plan.n_jt) as u64;
+        (self.batch() as u64 - 1) * b_words
+    }
+
+    /// Stack the A blocks, execute the single kernel, unstack C.
+    pub fn run(&self, sim: &mut CgraSim, blocks: &[&MatI8], b: &MatI8) -> Result<BatchedGemmRun> {
+        ensure!(blocks.len() == self.batch(), "block count mismatch with plan");
+        for (blk, &m) in blocks.iter().zip(&self.block_rows) {
+            ensure!(blk.rows == m && blk.cols == self.k, "A block shape mismatch with plan");
+        }
+        let a = stack_i8(blocks);
+        let run = run_gemm(sim, &a, b, &self.plan)?;
+        let c = run.c_i8.expect("batched GEMM plans quantized output");
+        Ok(BatchedGemmRun { outcome: run.outcome, blocks: unstack_i8(&c, &self.block_rows) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::oracle_quant;
+    use crate::util::prop::{ensure as prop_ensure, prop_check, PropConfig};
+    use crate::util::rng::XorShiftRng;
+
+    fn random_mat(rng: &mut XorShiftRng, rows: usize, cols: usize, bound: i8) -> MatI8 {
+        let mut m = MatI8::zeros(rows, cols);
+        rng.fill_i8(&mut m.data, bound);
+        m
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = MatI8::from_slice(2, 3, &[1, 2, 3, 4, 5, 6]);
+        let b = MatI8::from_slice(1, 3, &[7, 8, 9]);
+        let s = stack_i8(&[&a, &b]);
+        assert_eq!(s.rows, 3);
+        let back = unstack_i8(&s, &[2, 1]);
+        assert_eq!(back[0], a);
+        assert_eq!(back[1], b);
+    }
+
+    #[test]
+    fn batched_blocks_bit_identical_to_separate_runs() {
+        let mut rng = XorShiftRng::new(0xBA7C);
+        let cfg = ArchConfig::default();
+        let (k, n, shift) = (24, 32, 6u8);
+        let rows = [10usize, 3, 16];
+        let blocks: Vec<MatI8> = rows.iter().map(|&m| random_mat(&mut rng, m, k, 12)).collect();
+        let w = random_mat(&mut rng, k, n, 12);
+
+        let bg = BatchedGemm::new(&cfg, &rows, k, n, OutputMode::Quant { shift }).unwrap();
+        let refs: Vec<&MatI8> = blocks.iter().collect();
+        let mut sim = CgraSim::new(cfg.clone());
+        let run = bg.run(&mut sim, &refs, &w).unwrap();
+
+        for (blk, got) in blocks.iter().zip(&run.blocks) {
+            let mut solo = CgraSim::new(cfg.clone());
+            let plan = GemmPlan::new(&cfg, blk.rows, k, n, OutputMode::Quant { shift }).unwrap();
+            let want = run_gemm(&mut solo, blk, &w, &plan).unwrap().c_i8.unwrap();
+            assert_eq!(got, &want, "stacked block diverged from its solo run");
+            assert_eq!(got, &oracle_quant(blk, &w, shift), "and from the host oracle");
+        }
+    }
+
+    #[test]
+    fn batched_streams_weights_once() {
+        let mut rng = XorShiftRng::new(0xBA7D);
+        let cfg = ArchConfig::default();
+        let (k, n, shift) = (32, 32, 6u8);
+        let rows = [16usize, 16, 16, 16];
+        let blocks: Vec<MatI8> = rows.iter().map(|&m| random_mat(&mut rng, m, k, 10)).collect();
+        let w = random_mat(&mut rng, k, n, 10);
+
+        let bg = BatchedGemm::new(&cfg, &rows, k, n, OutputMode::Quant { shift }).unwrap();
+        assert!(bg.weight_reuse_words() > 0);
+        let refs: Vec<&MatI8> = blocks.iter().collect();
+        let mut sim_b = CgraSim::new(cfg.clone());
+        bg.run(&mut sim_b, &refs, &w).unwrap();
+
+        let mut solo_words = 0u64;
+        for blk in &blocks {
+            let mut sim = CgraSim::new(cfg.clone());
+            let plan = GemmPlan::new(&cfg, blk.rows, k, n, OutputMode::Quant { shift }).unwrap();
+            run_gemm(&mut sim, blk, &w, &plan).unwrap();
+            solo_words += sim.stats.ext_words();
+        }
+        assert!(
+            sim_b.stats.ext_words() < solo_words,
+            "stacking must cut external traffic: {} vs {}",
+            sim_b.stats.ext_words(),
+            solo_words
+        );
+    }
+
+    #[test]
+    fn raw_output_rejected() {
+        let cfg = ArchConfig::default();
+        assert!(BatchedGemm::new(&cfg, &[8, 8], 16, 16, OutputMode::Raw).is_err());
+        assert!(BatchedGemm::new(&cfg, &[], 16, 16, OutputMode::Quant { shift: 6 }).is_err());
+        assert!(BatchedGemm::new(&cfg, &[4, 0], 16, 16, OutputMode::Quant { shift: 6 }).is_err());
+    }
+
+    #[test]
+    fn prop_batched_random_partitions_exact() {
+        prop_check(
+            "batched GEMM == per-block GEMM over random partitions",
+            PropConfig { cases: 5, base_seed: 0xBA7C_ED },
+            |rng| {
+                let batch = rng.range(1, 5);
+                let rows: Vec<usize> = (0..batch).map(|_| rng.range(1, 13)).collect();
+                let k = rng.range(1, 33);
+                let n = rng.range(1, 25);
+                let cfg = ArchConfig::default();
+                let blocks: Vec<MatI8> = rows
+                    .iter()
+                    .map(|&m| {
+                        let mut b = MatI8::zeros(m, k);
+                        rng.fill_i8(&mut b.data, 20);
+                        b
+                    })
+                    .collect();
+                let mut w = MatI8::zeros(k, n);
+                rng.fill_i8(&mut w.data, 20);
+                let bg =
+                    BatchedGemm::new(&cfg, &rows, k, n, OutputMode::Quant { shift: 6 }).unwrap();
+                let refs: Vec<&MatI8> = blocks.iter().collect();
+                let mut sim = CgraSim::new(cfg.clone());
+                let run = bg.run(&mut sim, &refs, &w).unwrap();
+                for (blk, got) in blocks.iter().zip(&run.blocks) {
+                    if got != &oracle_quant(blk, &w, 6) {
+                        return crate::util::prop::CaseResult::Fail(format!(
+                            "block {}x{k}x{n} of batch {batch} diverged",
+                            blk.rows
+                        ));
+                    }
+                }
+                prop_ensure(true, String::new)
+            },
+        );
+    }
+}

@@ -11,10 +11,12 @@
 //! requantized path matches [`crate::util::quant::requant_shift`] applied
 //! to the exact accumulators — for every strategy, feed and variant.
 
+pub mod batch;
 pub mod mapper;
 pub mod pack;
 pub mod plan;
 
+pub use batch::{stack_i8, unstack_i8, BatchedGemm, BatchedGemmRun};
 pub use mapper::build_context;
 pub use plan::{FeedKind, GemmPlan, MapVariant, OutputMode, Strategy};
 
@@ -219,9 +221,15 @@ mod tests {
         let (m, k, n) = (32, 16, 32);
         let a = random_mat(&mut rng, m, k, 9);
         let b = random_mat(&mut rng, k, n, 9);
-        let plan =
-            GemmPlan::for_variant(&sim.cfg, m, k, n, OutputMode::Quant { shift: 6 }, MapVariant::Switched)
-                .unwrap();
+        let plan = GemmPlan::for_variant(
+            &sim.cfg,
+            m,
+            k,
+            n,
+            OutputMode::Quant { shift: 6 },
+            MapVariant::Switched,
+        )
+        .unwrap();
         let run = run_gemm(&mut sim, &a, &b, &plan).unwrap();
         assert_eq!(run.c_i8.unwrap(), oracle_quant(&a, &b, 6));
     }
@@ -240,9 +248,15 @@ mod tests {
         let run_t = run_gemm(&mut sim_t, &a, &b, &plan_t).unwrap();
 
         let mut sim_s = CgraSim::new(ArchConfig::switched_baseline());
-        let plan_s =
-            GemmPlan::for_variant(&sim_s.cfg, m, k, n, OutputMode::Quant { shift: 6 }, MapVariant::Switched)
-                .unwrap();
+        let plan_s = GemmPlan::for_variant(
+            &sim_s.cfg,
+            m,
+            k,
+            n,
+            OutputMode::Quant { shift: 6 },
+            MapVariant::Switched,
+        )
+        .unwrap();
         let run_s = run_gemm(&mut sim_s, &a, &b, &plan_s).unwrap();
 
         assert!(
@@ -275,9 +289,15 @@ mod tests {
         let run_m = run_gemm(&mut sim_m, &a, &b, &plan_m).unwrap();
 
         let mut sim_p = CgraSim::new(big_ctx_cfg());
-        let plan_p =
-            GemmPlan::for_variant(&sim_p.cfg, m, k, n, OutputMode::Quant { shift: 6 }, MapVariant::PeLoad)
-                .unwrap();
+        let plan_p = GemmPlan::for_variant(
+            &sim_p.cfg,
+            m,
+            k,
+            n,
+            OutputMode::Quant { shift: 6 },
+            MapVariant::PeLoad,
+        )
+        .unwrap();
         let run_p = run_gemm(&mut sim_p, &a, &b, &plan_p).unwrap();
 
         assert_eq!(run_m.c_i8.unwrap(), run_p.c_i8.unwrap(), "both variants exact");

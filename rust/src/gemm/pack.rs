@@ -117,7 +117,8 @@ pub fn pack_b_half(b: &MatI8, plan: &GemmPlan, east: bool) -> Vec<u32> {
     } else {
         (0..half).collect()
     };
-    let mut out = Vec::with_capacity(plan.n_jt * half * plan.kp + crate::gemm::plan::DUAL_SLACK_WORDS);
+    let mut out =
+        Vec::with_capacity(plan.n_jt * half * plan.kp + crate::gemm::plan::DUAL_SLACK_WORDS);
     for jt in 0..plan.n_jt {
         let j0 = jt * 4 * c_cols;
         for t in 0..chunks {
@@ -247,7 +248,8 @@ mod tests {
     #[test]
     fn prop_pack_preserves_all_elements() {
         use crate::util::prop::{ensure, prop_check, PropConfig};
-        prop_check("pack_a/pack_b are permutations with padding", PropConfig { cases: 16, base_seed: 9 }, |rng| {
+        let cfg = PropConfig { cases: 16, base_seed: 9 };
+        prop_check("pack_a/pack_b are permutations with padding", cfg, |rng| {
             let m = rng.range(1, 33);
             let k = rng.range(1, 33);
             let n = rng.range(1, 33);

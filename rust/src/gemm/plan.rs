@@ -201,7 +201,10 @@ impl GemmPlan {
             }
         };
         if matches!(strategy, Strategy::WholeB) && a_panel + b_whole + dual_slack > l1 {
-            bail!("WholeB strategy does not fit L1 ({} w needed, {l1} available)", a_panel + b_whole);
+            bail!(
+                "WholeB strategy does not fit L1 ({} w needed, {l1} available)",
+                a_panel + b_whole
+            );
         }
         if matches!(strategy, Strategy::PanelB) && a_panel + b_panel > l1 {
             bail!("PanelB strategy does not fit L1");
@@ -396,8 +399,15 @@ mod tests {
 
     #[test]
     fn switched_uses_single_feed() {
-        let p = GemmPlan::for_variant(&cfg(), 32, 32, 32, OutputMode::Quant { shift: 6 }, MapVariant::Switched)
-            .unwrap();
+        let p = GemmPlan::for_variant(
+            &cfg(),
+            32,
+            32,
+            32,
+            OutputMode::Quant { shift: 6 },
+            MapVariant::Switched,
+        )
+        .unwrap();
         assert_eq!(p.feed, FeedKind::Single);
     }
 

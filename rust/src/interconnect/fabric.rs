@@ -107,7 +107,12 @@ impl Fabric {
     }
 
     /// Build with an explicit input-FIFO depth (ablations).
-    pub fn with_fifo(kind: FabricKind, topo: Topology, hop_latency: u64, fifo_depth: usize) -> Self {
+    pub fn with_fifo(
+        kind: FabricKind,
+        topo: Topology,
+        hop_latency: u64,
+        fifo_depth: usize,
+    ) -> Self {
         let n = topo.nodes();
         assert!(fifo_depth >= 1);
         Self {
@@ -155,7 +160,14 @@ impl Fabric {
 
     /// Send a word out of `(node, dir)`. Caller must have checked
     /// [`Fabric::can_send`]; returns `false` (and does nothing) otherwise.
-    pub fn send(&mut self, node: usize, dir: Dir, word: u32, cycle: u64, stats: &mut Stats) -> bool {
+    pub fn send(
+        &mut self,
+        node: usize,
+        dir: Dir,
+        word: u32,
+        cycle: u64,
+        stats: &mut Stats,
+    ) -> bool {
         if !self.can_send(node, dir, cycle) {
             return false;
         }

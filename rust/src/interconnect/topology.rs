@@ -277,7 +277,9 @@ mod tests {
             let b = Coord::new(rng.range(0, t.rows), rng.range(0, t.cols()));
             let path = t.xy_path(a, b);
             if path.len() != t.hop_distance(a, b) {
-                return ensure(false, || format!("{a:?}->{b:?}: {} vs {}", path.len(), t.hop_distance(a, b)));
+                return ensure(false, || {
+                    format!("{a:?}->{b:?}: {} vs {}", path.len(), t.hop_distance(a, b))
+                });
             }
             if a != b && path.last() != Some(&b) {
                 return ensure(false, || "path must end at destination".into());

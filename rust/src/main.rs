@@ -9,14 +9,17 @@
 //!   serve [--requests n] [--rate rps] [--batch b]
 //!                                — closed-loop serving demo (coordinator)
 //!   cluster [--devices d] [--requests n] [--rate rps] [--policy p]
-//!           [--queue q] [--arrival a] [--seed s]
-//!                                — fleet-serving simulation (cluster)
+//!           [--queue q] [--arrival a] [--seed s] [--batch b]
+//!                                — fleet-serving simulation (cluster);
+//!                                  --batch > 1 stacks same-model
+//!                                  requests into true batch GEMM jobs
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
 use cgra_edge::cli::Args;
 use cgra_edge::cluster::{
-    ArrivalProcess, Discipline, FleetConfig, FleetSim, ModelClass, Placement, WorkloadGen,
+    ArrivalProcess, BatchPolicy, Discipline, FleetConfig, FleetSim, ModelClass, Placement,
+    WorkloadGen,
 };
 use cgra_edge::config::ArchConfig;
 use cgra_edge::coordinator::{Coordinator, Request};
@@ -62,16 +65,27 @@ fn cmd_gemm(args: &Args) -> Result<()> {
     let e = em.evaluate(&sim.stats, cfg.freq_mhz);
     println!("config  : {}", cfg.summary());
     println!("plan    : {:?} feed={:?} tiles={}", plan.strategy, plan.feed, plan.tiles());
-    println!("cycles  : {} (+{} config; ideal {})", run.outcome.cycles, run.outcome.config_cycles, plan.ideal_cycles());
+    println!(
+        "cycles  : {} (+{} config; ideal {})",
+        run.outcome.cycles,
+        run.outcome.config_cycles,
+        plan.ideal_cycles()
+    );
     println!("exact   : {exact}");
     println!("util    : {:.3}", sim.stats.pe_utilization(16));
-    println!("energy  : {:.2} µJ  avg power {:.3} mW  {:.1} GOPS/W",
-        e.total_uj(), em.avg_power_mw(&sim.stats, cfg.freq_mhz), em.gops_per_watt(&sim.stats, cfg.freq_mhz));
+    println!(
+        "energy  : {:.2} µJ  avg power {:.3} mW  {:.1} GOPS/W",
+        e.total_uj(),
+        em.avg_power_mw(&sim.stats, cfg.freq_mhz),
+        em.gops_per_watt(&sim.stats, cfg.freq_mhz)
+    );
     let gpp = Gpp::default();
     let gc = gpp.gemm_cost(m, k, n);
-    println!("vs GPP  : {:.1}× cycles, {:.1}× energy",
+    println!(
+        "vs GPP  : {:.1}× cycles, {:.1}× energy",
         gc.cycles as f64 / (run.outcome.cycles + run.outcome.config_cycles) as f64,
-        gc.energy_pj / e.total_pj());
+        gc.energy_pj / e.total_pj()
+    );
     if !exact {
         bail!("output mismatch vs oracle");
     }
@@ -100,13 +114,23 @@ fn cmd_encoder(args: &Args) -> Result<()> {
     let e = em.evaluate(&sim.stats, cfg.freq_mhz);
     println!("model    : {xcfg:?} ({} params)", xcfg.param_count());
     println!("kernels  : {} ({} GEMM MACs)", rep.kernels, xcfg.gemm_macs());
-    println!("cycles   : {} (+{} config) = {:.2} ms @ {} MHz",
-        rep.cycles, rep.config_cycles,
-        (rep.cycles + rep.config_cycles) as f64 / (cfg.freq_mhz * 1e3), cfg.freq_mhz);
-    println!("accuracy : max |Δ| vs float reference = {:.4} (out amax {:.3})",
-        got.max_abs_diff(&want), want.abs_max());
-    println!("energy   : {:.2} µJ, avg power {:.3} mW",
-        e.total_uj(), em.avg_power_mw(&sim.stats, cfg.freq_mhz));
+    println!(
+        "cycles   : {} (+{} config) = {:.2} ms @ {} MHz",
+        rep.cycles,
+        rep.config_cycles,
+        (rep.cycles + rep.config_cycles) as f64 / (cfg.freq_mhz * 1e3),
+        cfg.freq_mhz
+    );
+    println!(
+        "accuracy : max |Δ| vs float reference = {:.4} (out amax {:.3})",
+        got.max_abs_diff(&want),
+        want.abs_max()
+    );
+    println!(
+        "energy   : {:.2} µJ, avg power {:.3} mW",
+        e.total_uj(),
+        em.avg_power_mw(&sim.stats, cfg.freq_mhz)
+    );
     Ok(())
 }
 
@@ -138,7 +162,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let m = coord.shutdown()?;
     println!(
-        "served {} requests: latency p50 {} / p99 {} cycles ({:.2} / {:.2} ms), throughput {:.1} req/s",
+        "served {} requests: latency p50 {} / p99 {} cycles ({:.2} / {:.2} ms), \
+         throughput {:.1} req/s",
         m.completed,
         m.p50_latency_cycles(),
         m.p99_latency_cycles(),
@@ -185,11 +210,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         },
         other => bail!("unknown arrival process '{other}' (poisson|bursty|diurnal)"),
     };
+    let max_batch: usize = args.flag_parse("batch", 1usize)?;
+    if max_batch == 0 {
+        bail!("--batch must be at least 1");
+    }
     let classes = ModelClass::edge_mix();
     let mut gen = WorkloadGen::new(arrival, classes.clone(), arch.freq_mhz, seed);
     let requests = gen.generate(n);
     let mut fleet = FleetSim::new(
-        FleetConfig { devices, policy, discipline, arch: arch.clone() },
+        FleetConfig {
+            devices,
+            policy,
+            discipline,
+            batch: BatchPolicy::greedy(max_batch),
+            arch: arch.clone(),
+        },
         &classes,
         42,
     );
@@ -218,6 +253,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let utils: Vec<String> =
         (0..devices).map(|d| format!("{:.2}", m.utilization(d))).collect();
     println!("util     : mean {:.3} [{}]", m.mean_utilization(), utils.join(" "));
+    if max_batch > 1 {
+        println!(
+            "batching : {} jobs, mean occupancy {:.2}, {} ext words saved by weight reuse",
+            m.batches(),
+            m.mean_batch_occupancy(),
+            m.weight_reuse_words
+        );
+    }
     println!(
         "energy   : {:.2} µJ fleet total, {:.3} µJ/request",
         e.total_uj(),

@@ -118,6 +118,12 @@ impl Manifest {
                         Some(other) => bail!("manifest line {}: unknown tag {other}", lineno + 1),
                         None => None,
                     };
+                    if let Some(extra) = it.next() {
+                        bail!("manifest line {}: trailing field '{extra}'", lineno + 1);
+                    }
+                    if entries.iter().any(|e: &ManifestEntry| e.name == name) {
+                        bail!("manifest line {}: duplicate entry '{name}'", lineno + 1);
+                    }
                     entries.push(ManifestEntry { name, shape, offset });
                 }
                 Some(other) => bail!("manifest line {}: unknown record {other}", lineno + 1),
@@ -203,6 +209,51 @@ mod tests {
     fn manifest_rejects_garbage() {
         assert!(Manifest::parse("bogus line here").is_err());
         assert!(Manifest::parse("input x 3x3 zzz 1").is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_field_counts() {
+        assert!(Manifest::parse("input").is_err(), "missing name and shape");
+        assert!(Manifest::parse("input x").is_err(), "missing shape");
+        assert!(Manifest::parse("input x 3xq").is_err(), "non-numeric dim");
+        assert!(Manifest::parse("input x 3x3 param").is_err(), "missing offset");
+        assert!(Manifest::parse("input x 3x3 param q").is_err(), "non-numeric offset");
+        assert!(Manifest::parse("input x 3x3 param 0 junk").is_err(), "trailing field");
+    }
+
+    #[test]
+    fn manifest_rejects_duplicate_entry() {
+        let err = Manifest::parse("input x 1x2\ninput y 2x2\ninput x 3x3\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate entry 'x'"), "{err}");
+    }
+
+    #[test]
+    fn manifest_load_reports_missing_file() {
+        let err = Manifest::load("/nonexistent/cgra-edge.manifest.txt").unwrap_err();
+        assert!(err.to_string().contains("reading manifest"), "{err}");
+    }
+
+    #[test]
+    fn blob_roundtrip_and_truncation() {
+        let dir = std::env::temp_dir();
+        let ok = dir.join(format!("cgra_edge_blob_ok_{}.bin", std::process::id()));
+        let bad = dir.join(format!("cgra_edge_blob_bad_{}.bin", std::process::id()));
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&ok, &bytes).unwrap();
+        assert_eq!(read_f32_blob(&ok).unwrap(), vals);
+        // A truncated export (5 bytes) is not a whole number of f32s.
+        std::fs::write(&bad, &bytes[..5]).unwrap();
+        let err = read_f32_blob(&bad).unwrap_err();
+        assert!(err.to_string().contains("not a multiple of 4"), "{err}");
+        let _ = std::fs::remove_file(&ok);
+        let _ = std::fs::remove_file(&bad);
+    }
+
+    #[test]
+    fn blob_missing_file_reports_path() {
+        let err = read_f32_blob("/nonexistent/cgra-edge.params.bin").unwrap_err();
+        assert!(err.to_string().contains("reading blob"), "{err}");
     }
 
     #[test]

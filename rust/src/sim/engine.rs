@@ -197,7 +197,12 @@ impl CgraSim {
     }
 
     /// Convenience: load then run.
-    pub fn execute(&mut self, ctx: &KernelContext, routes: Option<RouteTable>, max_cycles: u64) -> Result<SimOutcome> {
+    pub fn execute(
+        &mut self,
+        ctx: &KernelContext,
+        routes: Option<RouteTable>,
+        max_cycles: u64,
+    ) -> Result<SimOutcome> {
         let config_cycles = self.load_context(ctx, routes)?;
         let mut out = self.run(max_cycles)?;
         out.config_cycles = config_cycles;
@@ -232,7 +237,11 @@ impl CgraSim {
             let ports: String = crate::isa::Dir::ALL
                 .iter()
                 .map(|&d| {
-                    if self.fabric.port_ready(pe.node, d) { format!("{d}✓") } else { format!("{d}·") }
+                    if self.fabric.port_ready(pe.node, d) {
+                        format!("{d}✓")
+                    } else {
+                        format!("{d}·")
+                    }
                 })
                 .collect();
             let _ = writeln!(
@@ -248,7 +257,11 @@ impl CgraSim {
             let ports: String = crate::isa::Dir::ALL
                 .iter()
                 .map(|&d| {
-                    if self.fabric.port_ready(mob.node, d) { format!("{d}✓") } else { format!("{d}·") }
+                    if self.fabric.port_ready(mob.node, d) {
+                        format!("{d}✓")
+                    } else {
+                        format!("{d}·")
+                    }
                 })
                 .collect();
             let _ = writeln!(s, "MOB[{i}] ({},{}) {} in:{ports}", c.r, c.c, mob.debug_state());

@@ -268,6 +268,31 @@ impl MatF32 {
         (q, scale)
     }
 
+    /// Copy of columns `[lo, lo + width)` — attention-head slicing,
+    /// shared by the float reference, both CGRA serving paths and the
+    /// quantization calibration so they can never disagree on layout.
+    pub fn col_slice(&self, lo: usize, width: usize) -> MatF32 {
+        assert!(lo + width <= self.cols, "column slice out of range");
+        let mut out = MatF32::zeros(self.rows, width);
+        for r in 0..self.rows {
+            out.data[r * width..(r + 1) * width]
+                .copy_from_slice(&self.data[r * self.cols + lo..r * self.cols + lo + width]);
+        }
+        out
+    }
+
+    /// Inverse of [`Self::col_slice`]: write `src` into columns
+    /// `[lo, lo + src.cols)` (attention-head scatter; same single
+    /// definition shared by every path that reassembles head outputs).
+    pub fn set_col_slice(&mut self, lo: usize, src: &MatF32) {
+        assert_eq!(src.rows, self.rows, "column scatter row mismatch");
+        assert!(lo + src.cols <= self.cols, "column scatter out of range");
+        for r in 0..self.rows {
+            self.data[r * self.cols + lo..r * self.cols + lo + src.cols]
+                .copy_from_slice(&src.data[r * src.cols..(r + 1) * src.cols]);
+        }
+    }
+
     /// Max absolute element-wise difference to another matrix.
     pub fn max_abs_diff(&self, other: &MatF32) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -370,6 +395,20 @@ mod tests {
         let var: f32 = out.row(0).iter().map(|v| v * v).sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-5);
         assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn col_slice_copies_the_right_columns() {
+        let m = MatF32::from_slice(2, 4, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let s = m.col_slice(1, 2);
+        assert_eq!((s.rows, s.cols), (2, 2));
+        assert_eq!(s.data, vec![1.0, 2.0, 5.0, 6.0]);
+        // Scatter round-trip: writing the slice back reproduces m.
+        let mut back = MatF32::zeros(2, 4);
+        back.set_col_slice(0, &m.col_slice(0, 1));
+        back.set_col_slice(1, &s);
+        back.set_col_slice(3, &m.col_slice(3, 1));
+        assert_eq!(back.data, vec![0.0, 1.0, 2.0, 0.0, 4.0, 5.0, 6.0, 0.0]);
     }
 
     #[test]

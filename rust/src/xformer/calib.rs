@@ -1,0 +1,282 @@
+//! Static (offline) quantization calibration for serving.
+//!
+//! The dynamic path ([`super::run::cgra_matmul_f32`]) calibrates every
+//! GEMM's activation scale and requant shift from the request it is
+//! serving. That is fine for one request, but it makes the int8 output a
+//! function of *which* requests share a kernel: a stacked batch sees the
+//! whole batch's activation range, so batched and per-request runs would
+//! requantize differently. Deployments solve this the standard way —
+//! calibrate once, offline, per model — and that is what this module
+//! implements: one [`GemmQuant`] (activation scale, weight scale,
+//! requant shift) per GEMM site per layer, computed from a
+//! representative input by mirroring the serving dataflow on the host.
+//!
+//! Because every scale and shift is fixed per (model, layer, site), the
+//! quantized operands and the requant epilogue are *batch-invariant*:
+//! the stacked GEMM's row-blocks are bit-identical to per-request runs
+//! (the property `rust/tests/batching_props.rs` pins down). Activations
+//! outside the calibrated range saturate symmetrically at ±127, exactly
+//! like the hardware's clamping quantizer.
+
+use super::model::EncoderModel;
+use crate::util::mat::{MatF32, MatI8, MatI32};
+use crate::util::quant::requant_shift;
+use crate::util::rng::XorShiftRng;
+
+/// Quantization parameters for one GEMM site.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmQuant {
+    /// Activation (A-operand) scale: `x ≈ q · x_scale`.
+    pub x_scale: f32,
+    /// B-operand scale (weights, or K/V activations for the attention
+    /// score and context GEMMs).
+    pub w_scale: f32,
+    /// Requant right-shift applied to the int32 accumulators by the
+    /// array's ACCOUT epilogue.
+    pub shift: u8,
+}
+
+impl GemmQuant {
+    /// Scale that maps the requantized int8 output back to float.
+    pub fn dequant_scale(&self) -> f32 {
+        self.x_scale * self.w_scale * (1u32 << self.shift) as f32
+    }
+}
+
+/// Per-layer site parameters, one per GEMM group of the encoder layer.
+/// The per-head score and context GEMMs share one site each (all heads
+/// of a layer use the same parameters).
+#[derive(Debug, Clone)]
+pub struct LayerQuant {
+    pub q: GemmQuant,
+    pub k: GemmQuant,
+    pub v: GemmQuant,
+    pub scores: GemmQuant,
+    pub attn_v: GemmQuant,
+    pub o: GemmQuant,
+    pub ff1: GemmQuant,
+    pub ff2: GemmQuant,
+    /// The six static weight matrices pre-quantized with their site's
+    /// `w_scale` (weights are fixed per model, so quantizing them per
+    /// serve call would repeat an O(K·N) host pass with an identical
+    /// result every time). The score/context GEMMs' B operands are
+    /// per-request activations and are quantized at serve time.
+    pub wq_q: MatI8,
+    pub wk_q: MatI8,
+    pub wv_q: MatI8,
+    pub wo_q: MatI8,
+    pub w1_q: MatI8,
+    pub w2_q: MatI8,
+}
+
+/// Static calibration for a whole encoder (index-aligned with the
+/// model's layers).
+#[derive(Debug, Clone)]
+pub struct EncoderQuant {
+    pub layers: Vec<LayerQuant>,
+}
+
+/// Quantize with a fixed scale, saturating symmetrically at ±127 (the
+/// same clamping quantizer as [`MatF32::quantize`], but with the scale
+/// supplied instead of derived from this tensor).
+pub fn quantize_with(x: &MatF32, scale: f32) -> MatI8 {
+    debug_assert!(scale > 0.0, "quantization scale must be positive");
+    MatI8 {
+        rows: x.rows,
+        cols: x.cols,
+        data: x
+            .data
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect(),
+    }
+}
+
+/// Calibrate one site shared by several (x, w) pairs (the per-head GEMMs
+/// of one layer): scales from the max range over all pairs, shift from
+/// the max exact accumulator, outputs fed forward through the same
+/// requant+dequant the array applies.
+fn site(pairs: &[(&MatF32, &MatF32)]) -> (GemmQuant, Vec<MatF32>) {
+    let amax_x = pairs.iter().fold(0.0f32, |m, (x, _)| m.max(x.abs_max())).max(1e-8);
+    let amax_w = pairs.iter().fold(0.0f32, |m, (_, w)| m.max(w.abs_max())).max(1e-8);
+    let x_scale = amax_x / 127.0;
+    let w_scale = amax_w / 127.0;
+    let accs: Vec<MatI32> = pairs
+        .iter()
+        .map(|(x, w)| quantize_with(x, x_scale).matmul(&quantize_with(w, w_scale)))
+        .collect();
+    let amax_acc = accs
+        .iter()
+        .flat_map(|a| a.data.iter())
+        .map(|v| v.unsigned_abs())
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let mut shift = 0u8;
+    while (amax_acc >> shift) > 127 {
+        shift += 1;
+    }
+    let spec = GemmQuant { x_scale, w_scale, shift };
+    let outs = accs
+        .iter()
+        .map(|acc| {
+            MatI8 {
+                rows: acc.rows,
+                cols: acc.cols,
+                data: acc.data.iter().map(|&v| requant_shift(v, shift)).collect(),
+            }
+            .dequant(spec.dequant_scale())
+        })
+        .collect();
+    (spec, outs)
+}
+
+/// Single-pair convenience wrapper around [`site`].
+fn site1(x: &MatF32, w: &MatF32) -> (GemmQuant, MatF32) {
+    let (spec, mut outs) = site(&[(x, w)]);
+    (spec, outs.pop().expect("one site output"))
+}
+
+impl EncoderQuant {
+    /// Calibrate from a representative input by mirroring the serving
+    /// path on the host: at every GEMM site quantize with the observed
+    /// range, compute the exact int32 accumulators, choose the smallest
+    /// shift that fits int8, and feed the requantized-then-dequantized
+    /// result forward (so downstream sites see serve-time statistics,
+    /// not the float reference).
+    pub fn calibrate(model: &EncoderModel, x_cal: &MatF32) -> Self {
+        let cfg = &model.cfg;
+        let (s, dh) = (cfg.seq, cfg.d_head());
+        let att_scale = 1.0 / (dh as f32).sqrt();
+        let mut h = x_cal.clone();
+        let mut layers = Vec::with_capacity(model.params.layers.len());
+        for layer in &model.params.layers {
+            let ln1 = h.layernorm_rows(&layer.ln1_gamma, &layer.ln1_beta, 1e-5);
+            let (q_spec, q) = site1(&ln1, &layer.wq);
+            let (k_spec, k) = site1(&ln1, &layer.wk);
+            let (v_spec, v) = site1(&ln1, &layer.wv);
+
+            let mut qh = Vec::with_capacity(cfg.n_heads);
+            let mut kht = Vec::with_capacity(cfg.n_heads);
+            let mut vh = Vec::with_capacity(cfg.n_heads);
+            for hd in 0..cfg.n_heads {
+                let lo = hd * dh;
+                qh.push(q.col_slice(lo, dh));
+                kht.push(k.col_slice(lo, dh).transpose());
+                vh.push(v.col_slice(lo, dh));
+            }
+            let score_pairs: Vec<(&MatF32, &MatF32)> =
+                qh.iter().zip(&kht).map(|(a, b)| (a, b)).collect();
+            let (scores_spec, scores) = site(&score_pairs);
+            let probs: Vec<MatF32> = scores
+                .into_iter()
+                .map(|mut sc| {
+                    for val in &mut sc.data {
+                        *val *= att_scale;
+                    }
+                    sc.softmax_rows()
+                })
+                .collect();
+            let av_pairs: Vec<(&MatF32, &MatF32)> =
+                probs.iter().zip(&vh).map(|(a, b)| (a, b)).collect();
+            let (attn_spec, head_outs) = site(&av_pairs);
+            let mut ctx = MatF32::zeros(s, cfg.d_model);
+            for (hd, out) in head_outs.iter().enumerate() {
+                ctx.set_col_slice(hd * dh, out);
+            }
+            let (o_spec, attn) = site1(&ctx, &layer.wo);
+            let x1 = h.add(&attn);
+            let ln2 = x1.layernorm_rows(&layer.ln2_gamma, &layer.ln2_beta, 1e-5);
+            let (ff1_spec, f1) = site1(&ln2, &layer.w1);
+            let f1g = f1.gelu();
+            let (ff2_spec, f2) = site1(&f1g, &layer.w2);
+            h = x1.add(&f2);
+            layers.push(LayerQuant {
+                q: q_spec,
+                k: k_spec,
+                v: v_spec,
+                scores: scores_spec,
+                attn_v: attn_spec,
+                o: o_spec,
+                ff1: ff1_spec,
+                ff2: ff2_spec,
+                wq_q: quantize_with(&layer.wq, q_spec.w_scale),
+                wk_q: quantize_with(&layer.wk, k_spec.w_scale),
+                wv_q: quantize_with(&layer.wv, v_spec.w_scale),
+                wo_q: quantize_with(&layer.wo, o_spec.w_scale),
+                w1_q: quantize_with(&layer.w1, ff1_spec.w_scale),
+                w2_q: quantize_with(&layer.w2, ff2_spec.w_scale),
+            });
+        }
+        Self { layers }
+    }
+
+    /// Calibrate with a deterministic synthetic input drawn from `seed`
+    /// (the same activation distribution the workload generator and the
+    /// encoder tests use), so a `(model, seed)` pair fully determines
+    /// the serving numerics.
+    pub fn calibrate_seeded(model: &EncoderModel, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let mut x = MatF32::zeros(model.cfg.seq, model.cfg.d_model);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        Self::calibrate(model, &x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xformer::XformerConfig;
+
+    fn tiny() -> EncoderModel {
+        EncoderModel::new(
+            XformerConfig { n_layers: 2, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+            7,
+        )
+    }
+
+    #[test]
+    fn calibration_covers_every_layer_with_sane_specs() {
+        let model = tiny();
+        let quant = EncoderQuant::calibrate_seeded(&model, 11);
+        assert_eq!(quant.layers.len(), 2);
+        for lq in &quant.layers {
+            for spec in [lq.q, lq.k, lq.v, lq.scores, lq.attn_v, lq.o, lq.ff1, lq.ff2] {
+                assert!(spec.x_scale > 0.0 && spec.w_scale > 0.0);
+                assert!(spec.shift < 32);
+                assert!(spec.dequant_scale() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_is_deterministic_per_seed() {
+        let model = tiny();
+        let a = EncoderQuant::calibrate_seeded(&model, 3);
+        let b = EncoderQuant::calibrate_seeded(&model, 3);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.q.x_scale, lb.q.x_scale);
+            assert_eq!(la.ff2.shift, lb.ff2.shift);
+            assert_eq!(la.scores.w_scale, lb.scores.w_scale);
+        }
+    }
+
+    #[test]
+    fn quantize_with_saturates_out_of_range() {
+        let m = MatF32::from_slice(1, 3, &[0.5, 10.0, -10.0]);
+        let q = quantize_with(&m, 1.0 / 127.0);
+        assert_eq!(q.data[1], 127, "over-range must clamp high");
+        assert_eq!(q.data[2], -127, "over-range must clamp low");
+        assert_eq!(q.data[0], 64, "in-range rounds normally");
+    }
+
+    #[test]
+    fn fixed_scale_matches_dynamic_quantize_at_own_range() {
+        let m = MatF32::from_slice(2, 2, &[0.25, -1.0, 0.75, 1.0]);
+        let (q_dyn, scale) = m.quantize();
+        let q_fix = quantize_with(&m, scale);
+        assert_eq!(q_dyn.data, q_fix.data);
+    }
+}

@@ -9,9 +9,20 @@
 //! reference path ([`model::EncoderModel::forward_f32`]) is the oracle
 //! the quantized CGRA path is compared against (and itself matches the
 //! AOT-compiled JAX model via the runtime, FIG-E2E).
+//!
+//! Two serving paths exist: [`run::run_encoder_on_cgra`] calibrates each
+//! GEMM dynamically from the request it serves (the single-request
+//! reference), while [`run::run_encoder_batch`] uses the static
+//! per-model calibration in [`calib`] so same-model requests can stack
+//! into one `(B·seq) × d_model` GEMM per projection/FFN site with
+//! bit-identical per-request outputs (attention stays per-sequence).
 
+pub mod calib;
 pub mod model;
 pub mod run;
 
+pub use calib::{quantize_with, EncoderQuant, GemmQuant, LayerQuant};
 pub use model::{EncoderModel, EncoderParams, XformerConfig};
-pub use run::{run_encoder_on_cgra, CgraEncoderReport};
+pub use run::{
+    cgra_matmul_f32_calibrated, run_encoder_batch, run_encoder_on_cgra, CgraEncoderReport,
+};

@@ -176,28 +176,14 @@ impl EncoderModel {
         let scale = 1.0 / (dh as f32).sqrt();
         for h in 0..cfg.n_heads {
             let lo = h * dh;
-            // Slice head h.
-            let slice = |m: &MatF32| {
-                let mut out = MatF32::zeros(s, dh);
-                for r in 0..s {
-                    for c in 0..dh {
-                        *out.at_mut(r, c) = m.at(r, lo + c);
-                    }
-                }
-                out
-            };
-            let (qh, kh, vh) = (slice(&q), slice(&k), slice(&v));
+            let (qh, kh, vh) = (q.col_slice(lo, dh), k.col_slice(lo, dh), v.col_slice(lo, dh));
             let mut scores = qh.matmul(&kh.transpose());
             for v in &mut scores.data {
                 *v *= scale;
             }
             let probs = scores.softmax_rows();
             let out = probs.matmul(&vh);
-            for r in 0..s {
-                for c in 0..dh {
-                    *ctx.at_mut(r, lo + c) = out.at(r, c);
-                }
-            }
+            ctx.set_col_slice(lo, &out);
         }
         ctx.matmul(&layer.wo)
     }

@@ -1,0 +1,145 @@
+//! Property-based differential suite for true batch GEMM (ISSUE 2).
+//!
+//! Three contracts over random shapes, seeds and batch sizes 1–8:
+//!
+//! 1. **Bit-identity** — a batched encoder run's per-request outputs
+//!    equal the per-request (singleton) runs bit-for-bit: stacking only
+//!    changes *when* work happens, never *what* comes out.
+//! 2. **Traffic** — for batch ≥ 2 the stacked run crosses the external
+//!    memory boundary with strictly fewer words than the per-request
+//!    runs combined (the weights stream once per layer GEMM).
+//! 3. **Determinism** — fleet runs under a random [`BatchPolicy`] are a
+//!    pure function of their seeds: identical seeds, identical
+//!    [`cgra_edge::cluster::FleetMetrics`] down to every latency sample.
+//!
+//! Each failure reports the `prop_check` seed, so a counterexample is
+//! reproducible with `prop_check_seed`.
+
+use cgra_edge::cluster::{
+    ArrivalProcess, BatchPolicy, FleetConfig, FleetSim, ModelClass, WorkloadGen,
+};
+use cgra_edge::config::ArchConfig;
+use cgra_edge::sim::CgraSim;
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::prop::{ensure, prop_check, CaseResult, PropConfig};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::{run_encoder_batch, EncoderModel, EncoderQuant, XformerConfig};
+
+/// Small random encoder shapes (d_model divisible by n_heads; sizes
+/// bounded so the cycle-level sim stays fast in debug builds).
+fn random_cfg(rng: &mut XorShiftRng) -> XformerConfig {
+    let n_heads = [1usize, 2][rng.range(0, 2)];
+    let d_model = [16usize, 32][rng.range(0, 2)];
+    let d_ff = [16usize, 32][rng.range(0, 2)];
+    let seq = rng.range(2, 11);
+    XformerConfig { n_layers: 1, seq, d_model, n_heads, d_ff }
+}
+
+fn random_input(rng: &mut XorShiftRng, cfg: &XformerConfig) -> MatF32 {
+    let mut x = MatF32::zeros(cfg.seq, cfg.d_model);
+    for v in &mut x.data {
+        *v = rng.normal() * 0.5;
+    }
+    x
+}
+
+#[test]
+fn prop_batched_encoder_bit_identical_to_per_request() {
+    prop_check(
+        "batched encoder == per-request encoder, bit-for-bit",
+        PropConfig { cases: 3, base_seed: 0xBA7C_0001 },
+        |rng| {
+            let cfg = random_cfg(rng);
+            let model = EncoderModel::new(cfg, rng.next_u64());
+            let quant = EncoderQuant::calibrate_seeded(&model, rng.next_u64());
+            let batch = rng.range(1, 9);
+            let inputs: Vec<MatF32> = (0..batch).map(|_| random_input(rng, &cfg)).collect();
+            let refs: Vec<&MatF32> = inputs.iter().collect();
+            let mut sim = CgraSim::new(ArchConfig::default());
+            let (batched, _) = run_encoder_batch(&mut sim, &model, &quant, &refs).unwrap();
+            for (i, x) in inputs.iter().enumerate() {
+                let mut solo = CgraSim::new(ArchConfig::default());
+                let (single, _) = run_encoder_batch(&mut solo, &model, &quant, &[x]).unwrap();
+                if batched[i].data != single[0].data {
+                    return CaseResult::Fail(format!(
+                        "request {i}/{batch} diverged for {cfg:?}"
+                    ));
+                }
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+#[test]
+fn prop_batched_ext_words_strictly_fewer() {
+    prop_check(
+        "stacked batch crosses the ext boundary with fewer words",
+        PropConfig { cases: 3, base_seed: 0xBA7C_0002 },
+        |rng| {
+            let cfg = random_cfg(rng);
+            let model = EncoderModel::new(cfg, rng.next_u64());
+            let quant = EncoderQuant::calibrate_seeded(&model, rng.next_u64());
+            let batch = rng.range(2, 7);
+            let inputs: Vec<MatF32> = (0..batch).map(|_| random_input(rng, &cfg)).collect();
+            let refs: Vec<&MatF32> = inputs.iter().collect();
+            let mut sim_b = CgraSim::new(ArchConfig::default());
+            run_encoder_batch(&mut sim_b, &model, &quant, &refs).unwrap();
+            let batched_words = sim_b.stats.ext_words();
+            let mut solo_words = 0u64;
+            for x in &inputs {
+                let mut sim = CgraSim::new(ArchConfig::default());
+                run_encoder_batch(&mut sim, &model, &quant, &[x]).unwrap();
+                solo_words += sim.stats.ext_words();
+            }
+            ensure(batched_words < solo_words, || {
+                format!(
+                    "batch {batch} of {cfg:?}: {batched_words} ≥ {solo_words} ext words"
+                )
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_fleet_with_batch_policy_is_seed_deterministic() {
+    prop_check(
+        "batched fleet runs are pure functions of their seeds",
+        PropConfig { cases: 3, base_seed: 0xBA7C_0003 },
+        |rng| {
+            let workload_seed = rng.next_u64();
+            let policy = BatchPolicy {
+                max_batch: rng.range(2, 5),
+                max_wait_cycles: [0u64, 20_000][rng.range(0, 2)],
+            };
+            let devices = rng.range(1, 4);
+            let classes = vec![ModelClass::tiny()];
+            let run = || {
+                let mut wg = WorkloadGen::new(
+                    ArrivalProcess::Poisson { rate_rps: 100_000.0 },
+                    classes.clone(),
+                    100.0,
+                    workload_seed,
+                );
+                let requests = wg.generate(8);
+                let mut fleet = FleetSim::new(
+                    FleetConfig { devices, batch: policy, ..Default::default() },
+                    &classes,
+                    42,
+                );
+                fleet.run(requests).unwrap()
+            };
+            let a = run();
+            let b = run();
+            if a.completed != 8 {
+                return CaseResult::Fail(format!(
+                    "only {}/8 requests completed under {policy:?}",
+                    a.completed
+                ));
+            }
+            ensure(a == b, || {
+                format!("metrics diverged for {policy:?} on {devices} devices")
+            })
+        },
+    );
+}

@@ -161,7 +161,7 @@ fn cluster_fleet_deterministic() {
         );
         let requests = wg.generate(8);
         let mut fleet = FleetSim::new(
-            FleetConfig { devices: 3, policy, discipline, arch: ArchConfig::default() },
+            FleetConfig { devices: 3, policy, discipline, ..Default::default() },
             &classes,
             42,
         );
@@ -215,7 +215,8 @@ fn sharded_gemm_bit_identical_to_single_device() {
 #[test]
 fn config_sweep_exactness() {
     let mut rng = XorShiftRng::new(0xC0F);
-    for (rows, l1_kib, banks, fifo) in [(2usize, 16usize, 4usize, 2usize), (4, 64, 16, 8), (8, 64, 8, 4)] {
+    let sweeps = [(2usize, 16usize, 4usize, 2usize), (4, 64, 16, 8), (8, 64, 8, 4)];
+    for (rows, l1_kib, banks, fifo) in sweeps {
         let mut cfg = ArchConfig::default();
         cfg.topo.rows = rows;
         cfg.mem.l1_words = l1_kib * 1024 / 4;
