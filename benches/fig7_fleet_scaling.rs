@@ -11,8 +11,8 @@
 
 use cgra_edge::bench_util::{f1, f2, f3, Table};
 use cgra_edge::cluster::{
-    ArrivalProcess, BatchPolicy, Discipline, FleetConfig, FleetSim, ModelClass, Placement,
-    WorkloadGen,
+    ArrivalProcess, BatchPolicy, DeviceClass, Discipline, FleetConfig, FleetSim, ModelClass,
+    Placement, WorkloadGen,
 };
 use cgra_edge::config::ArchConfig;
 use cgra_edge::energy::EnergyModel;
@@ -54,11 +54,12 @@ fn main() -> anyhow::Result<()> {
             let requests = wg.generate(n_requests);
             let mut fleet = FleetSim::new(
                 FleetConfig {
-                    devices,
                     policy,
                     discipline: Discipline::Fifo,
-                    arch: arch.clone(),
-                    ..Default::default()
+                    // Stealing off: this table isolates the placement
+                    // policies (FIG7c benchmarks stealing explicitly).
+                    steal: false,
+                    ..FleetConfig::uniform(devices, DeviceClass::from_arch(arch.clone()))
                 },
                 &classes,
                 42,
@@ -123,11 +124,11 @@ fn main() -> anyhow::Result<()> {
         let requests = wg.generate(n_batch_reqs);
         let mut fleet = FleetSim::new(
             FleetConfig {
-                devices: 1,
                 policy: Placement::LeastLoaded,
                 discipline: Discipline::Fifo,
                 batch: BatchPolicy::greedy(max_batch),
-                arch: arch.clone(),
+                steal: false, // single device — nothing to steal from
+                ..FleetConfig::uniform(1, DeviceClass::from_arch(arch.clone()))
             },
             &tiny,
             42,
@@ -158,5 +159,78 @@ fn main() -> anyhow::Result<()> {
     println!("\nStacked activations load each layer's weights once per job instead of");
     println!("once per request: the B operand, context distribution and pipeline fill");
     println!("amortize across the batch, so one device clears the same stream sooner.");
+
+    // FIG7c — heterogeneous fleet: 3×4x4@100 + 1×8x4@200 vs a
+    // homogeneous 4×4x4@100 fleet at the same arrival rate. Every arm
+    // serves the identical stream; stealing is off so the table
+    // isolates *placement*. Class-blind round-robin wastes the fast
+    // device (it gets the same 1/4 share as the little arrays, whose
+    // queues then dominate the tail); class-aware SJF — whose
+    // per-(model, class) cost cache is pre-seeded from each class's own
+    // analytic cycle model — shifts load onto the 8x4@200 and the p99
+    // collapses. The final row turns stealing back on.
+    let n_hetero_reqs = 48;
+    println!(
+        "\nFIG7c: heterogeneous fleet (3x4x4@100 + 1x8x4@200) vs homogeneous \
+         (4x4x4@100), {n_hetero_reqs} requests, Poisson {rate_rps} req/s\n"
+    );
+    let mixed = DeviceClass::parse_roster("4x4@100:3,8x4@200:1")?;
+    let homo = DeviceClass::parse_roster("4x4@100:4")?;
+    let arms: [(&str, &[DeviceClass], Placement, bool); 4] = [
+        ("homo sjf", homo.as_slice(), Placement::ShortestExpectedJob, false),
+        ("mixed rr (class-blind)", mixed.as_slice(), Placement::RoundRobin, false),
+        ("mixed sjf (class-aware)", mixed.as_slice(), Placement::ShortestExpectedJob, false),
+        ("mixed sjf + steal", mixed.as_slice(), Placement::ShortestExpectedJob, true),
+    ];
+    let mut table_c = Table::new(&[
+        "arm", "served", "miss", "p50 ms", "p99 ms", "util", "fast-dev share", "steals",
+    ]);
+    let mut p99_of = std::collections::BTreeMap::new();
+    for (name, roster, policy, steal) in arms {
+        let mut wg =
+            WorkloadGen::new(ArrivalProcess::Poisson { rate_rps }, classes.clone(), freq, seed);
+        let requests = wg.generate(n_hetero_reqs);
+        let mut fleet = FleetSim::new(
+            FleetConfig {
+                roster: roster.to_vec(),
+                policy,
+                discipline: Discipline::Fifo,
+                steal,
+                ..Default::default()
+            },
+            &classes,
+            42,
+        );
+        let m = fleet.run(requests)?;
+        p99_of.insert(name, m.latency.p99());
+        // Device 3 is the 8x4@200 only in the mixed rosters; the
+        // homogeneous arm has no fast device to report.
+        let mixed_roster = roster.iter().any(|c| c.name != roster[0].name);
+        let fast_share = if mixed_roster {
+            format!("{}/{}", m.per_device[3].served, m.completed)
+        } else {
+            "-".to_string()
+        };
+        table_c.row(&[
+            name.to_string(),
+            m.completed.to_string(),
+            m.sla_misses.to_string(),
+            f3(ms(m.latency.p50())),
+            f3(ms(m.latency.p99())),
+            f2(m.mean_utilization()),
+            fast_share,
+            m.steals.to_string(),
+        ]);
+    }
+    table_c.print();
+    assert!(
+        p99_of["mixed sjf (class-aware)"] < p99_of["mixed rr (class-blind)"],
+        "class-aware SJF must beat class-blind placement on the mixed fleet: {} vs {}",
+        p99_of["mixed sjf (class-aware)"],
+        p99_of["mixed rr (class-blind)"]
+    );
+    println!("\nThe fast class only pays off when the dispatcher knows it exists: the");
+    println!("per-(model, class) cost cache routes the expensive share of the mix to");
+    println!("the 8x4@200, and work-stealing mops up whatever placement still misjudges.");
     Ok(())
 }

@@ -3,15 +3,18 @@
 //! 1. Generate a reproducible bursty workload over a two-model mix.
 //! 2. Serve it on 1 vs 4 devices and watch tail latency collapse.
 //! 3. Compare placement policies under the same stream.
-//! 4. Compare FIFO vs EDF-with-drop under an impossible SLA.
-//! 5. Split one large GEMM across devices (tile-level model
-//!    parallelism) and verify the merged output is bit-identical.
+//! 4. Build a heterogeneous fleet (`--fleet`-style class roster) and
+//!    watch class-aware SJF + work-stealing exploit the fast silicon.
+//! 5. Compare FIFO vs EDF-with-drop under an impossible SLA.
+//! 6. Split one large GEMM across devices (2D tile sharding) and
+//!    verify the merged output is bit-identical, with the broadcast
+//!    traffic accounted per replica.
 //!
 //! Run with: `cargo run --release --example fleet_serving`
 
 use cgra_edge::cluster::{
-    run_gemm_sharded, ArrivalProcess, Discipline, FleetConfig, FleetSim, ModelClass, Placement,
-    WorkloadGen,
+    run_gemm_sharded, ArrivalProcess, DeviceClass, Discipline, FleetConfig, FleetSim,
+    ModelClass, Placement, WorkloadGen,
 };
 use cgra_edge::config::ArchConfig;
 use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, OutputMode};
@@ -39,11 +42,7 @@ fn main() -> anyhow::Result<()> {
     // --- 1+2: one device vs a small fleet on the same burst ---
     println!("== bursty stream, {n} requests, 1 vs 4 devices (least-loaded / FIFO) ==");
     for devices in [1usize, 4] {
-        let mut fleet = FleetSim::new(
-            FleetConfig { devices, ..Default::default() },
-            &classes,
-            42,
-        );
+        let mut fleet = FleetSim::new(FleetConfig::paper_fleet(devices), &classes, 42);
         let m = fleet.run(workload(seed))?;
         println!(
             "{devices} device(s): {} served, p50 {:.3} ms, p99 {:.3} ms, {:.0} req/s, util {:.2}",
@@ -61,22 +60,48 @@ fn main() -> anyhow::Result<()> {
         ("round-robin", Placement::RoundRobin),
         ("least-loaded", Placement::LeastLoaded),
         ("shortest-expected-job", Placement::ShortestExpectedJob),
+        ("model-affinity", Placement::ModelAffinity),
     ] {
         let mut fleet = FleetSim::new(
-            FleetConfig { devices: 4, policy, ..Default::default() },
+            FleetConfig { policy, ..FleetConfig::paper_fleet(4) },
             &classes,
             42,
         );
         let m = fleet.run(workload(seed))?;
         println!(
-            "{name:>22}: p99 {:.3} ms, queue-wait p99 {:.3} ms, SLA misses {}",
+            "{name:>22}: p99 {:.3} ms, queue-wait p99 {:.3} ms, SLA misses {}, steals {}",
             ms(m.latency.p99()),
             ms(m.queue_wait.p99()),
-            m.sla_misses
+            m.sla_misses,
+            m.steals
         );
     }
 
-    // --- 4: FIFO vs EDF under an SLA the burst cannot meet ---
+    // --- 4: a heterogeneous class roster (big.LITTLE fleet) ---
+    println!("\n== heterogeneous fleet: 3x4x4@100 + 1x8x4@200, SJF, same stream ==");
+    let mixed = DeviceClass::parse_roster("4x4@100:3,8x4@200:1")?;
+    for (name, steal) in [("stealing off", false), ("stealing on", true)] {
+        let mut fleet = FleetSim::new(
+            FleetConfig {
+                roster: mixed.clone(),
+                policy: Placement::ShortestExpectedJob,
+                steal,
+                ..Default::default()
+            },
+            &classes,
+            42,
+        );
+        let m = fleet.run(workload(seed))?;
+        let fast_share = m.per_device[3].served;
+        println!(
+            "{name:>13}: p99 {:.3} ms, fast device served {fast_share}/{}, steals {}",
+            ms(m.latency.p99()),
+            m.completed,
+            m.steals
+        );
+    }
+
+    // --- 5: FIFO vs EDF under an SLA the burst cannot meet ---
     println!("\n== queue disciplines under a 0.2 ms SLA, 1 device ==");
     let mut tight = classes.clone();
     for c in &mut tight {
@@ -85,7 +110,7 @@ fn main() -> anyhow::Result<()> {
     for (name, discipline) in [("fifo", Discipline::Fifo), ("edf+drop", Discipline::Edf)] {
         let reqs = WorkloadGen::new(bursty, tight.clone(), freq, seed).generate(n);
         let mut fleet = FleetSim::new(
-            FleetConfig { devices: 1, discipline, ..Default::default() },
+            FleetConfig { discipline, ..FleetConfig::paper_fleet(1) },
             &tight,
             42,
         );
@@ -99,8 +124,8 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- 5: tile-level model parallelism on one large GEMM ---
-    println!("\n== 128x64x128 GEMM split across devices (tile sharding) ==");
+    // --- 6: 2D tile sharding of one large GEMM ---
+    println!("\n== 128x64x128 GEMM split across devices (2D tile sharding) ==");
     let (m_dim, k, n_dim) = (128usize, 64, 128);
     let mut rng = XorShiftRng::new(0x5AAD);
     let mut a = MatI8::zeros(m_dim, k);
@@ -121,10 +146,28 @@ fn main() -> anyhow::Result<()> {
         let sharded = run_gemm_sharded(&mut sims, &a, &b, 7)?;
         assert_eq!(sharded.c, want, "sharded output must be bit-identical");
         println!(
-            "{devices} devices: {} cycles makespan ({:.2}x speedup, {:?} split, bit-identical ✓)",
+            "{devices} devices: {} cycles makespan ({:.2}x speedup, {}x{} grid, \
+             {} broadcast words, bit-identical ✓)",
             sharded.parallel_cycles(),
             t1 as f64 / sharded.parallel_cycles() as f64,
-            sharded.axis
+            sharded.grid.0,
+            sharded.grid.1,
+            sharded.broadcast_ext_words()
+        );
+    }
+
+    // Heterogeneous sharding: the 8x4@200 shard takes the lion's share
+    // and the merge still matches bit-for-bit.
+    let mut sims = vec![
+        CgraSim::new(arch.clone()),
+        CgraSim::new(DeviceClass::parse("8x4@200")?.arch),
+    ];
+    let sharded = run_gemm_sharded(&mut sims, &a, &b, 7)?;
+    assert_eq!(sharded.c, want, "heterogeneous shard merge must be bit-identical");
+    for s in &sharded.shards {
+        println!(
+            "hetero   : device {} ({} MHz) computed a {}x{} block",
+            s.device, s.freq_mhz, s.mi, s.nj
         );
     }
     Ok(())

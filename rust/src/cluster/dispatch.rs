@@ -6,7 +6,13 @@
 //! - **Placement** (on arrival): which device queue a request joins.
 //!   Round-robin ignores state; least-loaded balances queue depth;
 //!   shortest-expected-job balances *expected cycles* using the fleet's
-//!   per-model cycle-cost cache (EdgeTran's co-designed-runtime lever).
+//!   per-`(model, device-class)` cycle-cost cache (EdgeTran's
+//!   co-designed-runtime lever) — on a heterogeneous fleet the same
+//!   model costs different cycles on different classes, which is how
+//!   fast classes absorb the expensive models; model-affinity routes a
+//!   model class to the device that first received it (context-reuse
+//!   sticky routing — it deliberately concentrates load, the hot queues
+//!   work-stealing is designed to drain).
 //! - **Discipline** (on service): which queued request a freed device
 //!   takes next. FIFO, priority tiers (0 = highest, FIFO within a
 //!   tier), or earliest-deadline-first with drop-on-SLA-miss — a
@@ -17,7 +23,7 @@
 //! fleet run is a pure function of (workload, policy, discipline).
 
 use super::workload::FleetRequest;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Device-placement policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,8 +33,16 @@ pub enum Placement {
     /// Fewest pending requests (queued + in service).
     LeastLoaded,
     /// Earliest expected completion, estimating each queued request's
-    /// service time from the per-model cycle-cost cache.
+    /// service time from the per-`(model, device-class)` cycle-cost
+    /// cache — including the arriving request's own cost on each
+    /// candidate device, which is what steers expensive models to fast
+    /// classes on a mixed fleet.
     ShortestExpectedJob,
+    /// Sticky context-reuse routing: every request of a model class goes
+    /// to the device that first received that class (first choice by
+    /// least-loaded). Maximizes back-to-back context reuse at the price
+    /// of hot queues — pair it with work-stealing.
+    ModelAffinity,
 }
 
 /// Within-queue service discipline.
@@ -52,6 +66,9 @@ pub enum Discipline {
 /// batch is still short may stay idle until `head_arrival +
 /// max_wait_cycles` waiting for more same-model arrivals; at the
 /// deadline (or when no arrivals remain) it serves the partial batch.
+/// With `latency_aware` set, a head that carries a deadline derives its
+/// hold budget from the deadline *slack* instead of the fixed budget —
+/// the policy trades waiting against the SLA rather than a constant.
 /// All decisions depend only on simulated stamps, so batched fleet runs
 /// stay seed-deterministic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,20 +78,31 @@ pub struct BatchPolicy {
     /// single normalization point every consumer reads).
     pub max_batch: usize,
     /// Longest the discipline head may be held waiting for the batch to
-    /// fill before the device serves a partial batch.
+    /// fill before the device serves a partial batch (the fixed budget;
+    /// ignored for deadline-carrying heads when `latency_aware`).
     pub max_wait_cycles: u64,
+    /// Derive the hold budget from the head's deadline slack when the
+    /// head has a deadline (hold until `deadline − expected service`),
+    /// falling back to the fixed `max_wait_cycles` budget otherwise.
+    pub latency_aware: bool,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 1, max_wait_cycles: 0 }
+        Self { max_batch: 1, max_wait_cycles: 0, latency_aware: false }
     }
 }
 
 impl BatchPolicy {
     /// Batching without any fill delay: stack whatever is queued.
     pub fn greedy(max_batch: usize) -> Self {
-        Self { max_batch, max_wait_cycles: 0 }
+        Self { max_batch, max_wait_cycles: 0, latency_aware: false }
+    }
+
+    /// Latency-aware batching: the hold budget for a deadline-carrying
+    /// head is its full slack (no fixed budget for deadline-free heads).
+    pub fn sla_driven(max_batch: usize) -> Self {
+        Self { max_batch, max_wait_cycles: 0, latency_aware: true }
     }
 
     /// The effective batch bound: `max_batch` clamped to ≥ 1, so a
@@ -82,6 +110,28 @@ impl BatchPolicy {
     /// instead of deadlocking or panicking.
     pub fn cap(&self) -> usize {
         self.max_batch.max(1)
+    }
+
+    /// Absolute cycle until which the discipline head may be held for a
+    /// fuller batch. `est_cycles` is the expected service cost of the
+    /// batch the head would currently join. A deadline always caps the
+    /// hold at the latest start that still meets it (`deadline − est`,
+    /// by the current estimate — the estimate is optimistic, so a tight
+    /// deadline can still be missed; the cap only keeps the *hold* from
+    /// causing the miss). With `latency_aware`, that slack *is* the
+    /// budget; otherwise the fixed `max_wait_cycles` applies too.
+    pub fn hold_until(
+        &self,
+        head_arrival: u64,
+        head_deadline: Option<u64>,
+        est_cycles: u64,
+    ) -> u64 {
+        let fixed = head_arrival.saturating_add(self.max_wait_cycles);
+        match head_deadline {
+            Some(dl) if self.latency_aware => dl.saturating_sub(est_cycles),
+            Some(dl) => fixed.min(dl.saturating_sub(est_cycles)),
+            None => fixed,
+        }
     }
 }
 
@@ -92,6 +142,8 @@ pub struct Dispatcher {
     discipline: Discipline,
     queues: Vec<VecDeque<FleetRequest>>,
     rr_next: usize,
+    /// Model class → device sticky route (ModelAffinity placement).
+    affinity: BTreeMap<usize, usize>,
 }
 
 impl Dispatcher {
@@ -102,6 +154,7 @@ impl Dispatcher {
             discipline,
             queues: (0..devices).map(|_| VecDeque::new()).collect(),
             rr_next: 0,
+            affinity: BTreeMap::new(),
         }
     }
 
@@ -115,17 +168,27 @@ impl Dispatcher {
         self.queues.iter().map(VecDeque::len).sum()
     }
 
+    /// The least-loaded device (queued + in service), ties to the
+    /// lowest index — also the affinity policy's first-contact choice.
+    fn least_loaded(&self, now: u64, free_at: &[u64]) -> usize {
+        (0..self.queues.len())
+            .min_by_key(|&d| self.queues[d].len() + usize::from(free_at[d] > now))
+            .expect("non-empty fleet")
+    }
+
     /// Place `req` on a device queue and return the chosen device.
     ///
-    /// `free_at[d]` is device `d`'s earliest idle cycle; `est(model)`
-    /// returns the expected service cycles for a model class (the
-    /// cycle-cost cache lookup).
+    /// `free_at[d]` is device `d`'s earliest idle cycle; `est(model,
+    /// device)` returns the expected service cycles of one request of
+    /// that model class *on that device* (the per-`(model, class)`
+    /// cycle-cost cache lookup — on a heterogeneous fleet the same
+    /// model costs different cycles per class).
     pub fn dispatch(
         &mut self,
         req: FleetRequest,
         now: u64,
         free_at: &[u64],
-        est: impl Fn(usize) -> u64,
+        est: impl Fn(usize, usize) -> u64,
     ) -> usize {
         let n = self.queues.len();
         debug_assert_eq!(free_at.len(), n);
@@ -135,15 +198,21 @@ impl Dispatcher {
                 self.rr_next = (self.rr_next + 1) % n;
                 d
             }
-            Placement::LeastLoaded => (0..n)
-                .min_by_key(|&d| self.queues[d].len() + usize::from(free_at[d] > now))
-                .expect("non-empty fleet"),
+            Placement::LeastLoaded => self.least_loaded(now, free_at),
             Placement::ShortestExpectedJob => (0..n)
                 .min_by_key(|&d| {
-                    let backlog: u64 = self.queues[d].iter().map(|r| est(r.model)).sum();
-                    free_at[d].max(now) + backlog
+                    let backlog: u64 = self.queues[d].iter().map(|r| est(r.model, d)).sum();
+                    free_at[d].max(now) + backlog + est(req.model, d)
                 })
                 .expect("non-empty fleet"),
+            Placement::ModelAffinity => match self.affinity.get(&req.model) {
+                Some(&d) => d,
+                None => {
+                    let d = self.least_loaded(now, free_at);
+                    self.affinity.insert(req.model, d);
+                    d
+                }
+            },
         };
         self.queues[dev].push_back(req);
         dev
@@ -294,7 +363,7 @@ mod tests {
     fn round_robin_rotates() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 3);
         let picks: Vec<usize> =
-            (0..6).map(|i| d.dispatch(req(i, 0, 0, None), 0, &[0, 0, 0], |_| 1)).collect();
+            (0..6).map(|i| d.dispatch(req(i, 0, 0, None), 0, &[0, 0, 0], |_, _| 1)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -302,10 +371,10 @@ mod tests {
     fn least_loaded_avoids_busy_device() {
         let mut d = Dispatcher::new(Placement::LeastLoaded, Discipline::Fifo, 2);
         // Device 0 busy (free at 100 > now 0), device 1 idle.
-        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, &[100, 0], |_| 1), 1);
+        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, &[100, 0], |_, _| 1), 1);
         // Now both have equal pending count (0: busy, 1: one queued) —
         // the tie prefers the lower index.
-        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[100, 0], |_| 1), 0);
+        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[100, 0], |_, _| 1), 0);
     }
 
     #[test]
@@ -314,7 +383,7 @@ mod tests {
         // Model 1 is 10x the cost of model 0. Queue an expensive request
         // on device 0; the next request must go to device 1 even though
         // both queues have length 1 after it.
-        let cost = |m: usize| if m == 0 { 10u64 } else { 100u64 };
+        let cost = |m: usize, _d: usize| if m == 0 { 10u64 } else { 100u64 };
         assert_eq!(d.dispatch(req(0, 1, 0, None), 0, &[0, 0], cost), 0);
         assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[0, 0], cost), 1);
         // Device 0 backlog 100 vs device 1 backlog 10: cheap requests
@@ -325,9 +394,9 @@ mod tests {
     #[test]
     fn priority_tiers_preempt_fifo_order() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Priority, 1);
-        d.dispatch(req(0, 0, 2, None), 0, &[0], |_| 1);
-        d.dispatch(req(1, 0, 0, None), 0, &[0], |_| 1);
-        d.dispatch(req(2, 0, 0, None), 0, &[0], |_| 1);
+        d.dispatch(req(0, 0, 2, None), 0, &[0], |_, _| 1);
+        d.dispatch(req(1, 0, 0, None), 0, &[0], |_, _| 1);
+        d.dispatch(req(2, 0, 0, None), 0, &[0], |_, _| 1);
         let (_, first) = d.pop(0, 0);
         let (_, second) = d.pop(0, 0);
         let (_, third) = d.pop(0, 0);
@@ -339,9 +408,9 @@ mod tests {
     #[test]
     fn edf_orders_by_deadline_and_drops_expired() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Edf, 1);
-        d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_| 1);
-        d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_| 1); // already expired at now=100
-        d.dispatch(req(2, 0, 0, Some(200)), 0, &[0], |_| 1);
+        d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_, _| 1);
+        d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_, _| 1); // already expired at now=100
+        d.dispatch(req(2, 0, 0, Some(200)), 0, &[0], |_, _| 1);
         let (dropped, job) = d.pop(0, 100);
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].id, 1, "expired request dropped, not served");
@@ -358,7 +427,7 @@ mod tests {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
         // Interleaved models: 0, 1, 0, 0, 1.
         for (id, model) in [(0u64, 0usize), (1, 1), (2, 0), (3, 0), (4, 1)] {
-            d.dispatch(req(id, model, 0, None), 0, &[0], |_| 1);
+            d.dispatch(req(id, model, 0, None), 0, &[0], |_, _| 1);
         }
         let (dropped, batch) = d.pop_batch(0, 0, 4);
         assert!(dropped.is_empty());
@@ -374,7 +443,7 @@ mod tests {
     fn pop_batch_respects_max_batch() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
         for id in 0..5 {
-            d.dispatch(req(id, 0, 0, None), 0, &[0], |_| 1);
+            d.dispatch(req(id, 0, 0, None), 0, &[0], |_, _| 1);
         }
         let (_, batch) = d.pop_batch(0, 0, 2);
         assert_eq!(batch.len(), 2);
@@ -387,9 +456,9 @@ mod tests {
     #[test]
     fn pop_batch_edf_drops_expired_followers() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Edf, 1);
-        d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_| 1);
-        d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_| 1); // expired at now=100
-        d.dispatch(req(2, 0, 0, Some(400)), 0, &[0], |_| 1);
+        d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_, _| 1);
+        d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_, _| 1); // expired at now=100
+        d.dispatch(req(2, 0, 0, Some(400)), 0, &[0], |_, _| 1);
         let (dropped, batch) = d.pop_batch(0, 100, 3);
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].id, 1);
@@ -403,9 +472,9 @@ mod tests {
         assert_eq!(d.peek_batch(0), None);
         let mut r0 = req(0, 0, 0, Some(900));
         r0.arrival_cycle = 7;
-        d.dispatch(r0, 7, &[0], |_| 1);
-        d.dispatch(req(1, 1, 0, None), 8, &[0], |_| 1);
-        d.dispatch(req(2, 0, 0, None), 9, &[0], |_| 1);
+        d.dispatch(r0, 7, &[0], |_, _| 1);
+        d.dispatch(req(1, 1, 0, None), 8, &[0], |_, _| 1);
+        d.dispatch(req(2, 0, 0, None), 9, &[0], |_, _| 1);
         assert_eq!(
             d.peek_batch(0),
             Some(BatchOutlook { count: 2, model: 0, head_arrival: 7, head_deadline: Some(900) }),
@@ -419,10 +488,61 @@ mod tests {
     fn fifo_preserves_order() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
         for i in 0..4 {
-            d.dispatch(req(i, 0, 0, None), 0, &[0], |_| 1);
+            d.dispatch(req(i, 0, 0, None), 0, &[0], |_, _| 1);
         }
         for i in 0..4 {
             assert_eq!(d.pop(0, 0).1.unwrap().id, i);
         }
+    }
+
+    #[test]
+    fn sjf_prefers_the_cheaper_device_class() {
+        // Same model, heterogeneous devices: device 1's class serves it
+        // in a quarter of the cycles. SJF must route there even though
+        // ties normally break to the lowest index, and keep routing
+        // there until the backlog crosses over.
+        let mut d = Dispatcher::new(Placement::ShortestExpectedJob, Discipline::Fifo, 2);
+        let cost = |_m: usize, dev: usize| if dev == 0 { 100u64 } else { 25u64 };
+        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, &[0, 0], cost), 1);
+        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[0, 0], cost), 1);
+        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, &[0, 0], cost), 1);
+        // Device 1 backlog 75 + 25 = 100 vs device 0's 0 + 100: the tie
+        // finally falls back to the lower index.
+        assert_eq!(d.dispatch(req(3, 0, 0, None), 0, &[0, 0], cost), 0);
+    }
+
+    #[test]
+    fn model_affinity_sticks_to_first_contact() {
+        let mut d = Dispatcher::new(Placement::ModelAffinity, Discipline::Fifo, 3);
+        // First contact of model 0 goes least-loaded (device 0); every
+        // later model-0 request sticks there even as the queue grows.
+        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, &[0, 0, 0], |_, _| 1), 0);
+        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[0, 0, 0], |_, _| 1), 0);
+        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, &[0, 0, 0], |_, _| 1), 0);
+        // A different model class takes the next least-loaded device.
+        assert_eq!(d.dispatch(req(3, 1, 0, None), 0, &[0, 0, 0], |_, _| 1), 1);
+        assert_eq!(d.dispatch(req(4, 1, 0, None), 0, &[0, 0, 0], |_, _| 1), 1);
+        assert_eq!(d.queued(0), 3);
+        assert_eq!(d.queued(1), 2);
+        assert_eq!(d.queued(2), 0);
+    }
+
+    #[test]
+    fn hold_until_fixed_budget_and_deadline_cap() {
+        let p = BatchPolicy { max_batch: 4, max_wait_cycles: 1_000, latency_aware: false };
+        assert_eq!(p.hold_until(500, None, 200), 1_500, "fixed budget from head arrival");
+        assert_eq!(p.hold_until(500, Some(1_200), 200), 1_000, "deadline slack caps the hold");
+        assert_eq!(p.hold_until(500, Some(100), 200), 0, "expired slack saturates to zero");
+    }
+
+    #[test]
+    fn hold_until_latency_aware_uses_slack_not_budget() {
+        let p = BatchPolicy::sla_driven(4);
+        assert_eq!(p.max_wait_cycles, 0);
+        // A deadline-free head gets the (zero) fixed budget…
+        assert_eq!(p.hold_until(500, None, 200), 500);
+        // …but a deadline-carrying head may wait out its whole slack,
+        // far beyond any fixed budget.
+        assert_eq!(p.hold_until(500, Some(100_000), 200), 99_800);
     }
 }

@@ -1,15 +1,45 @@
-//! The fleet simulator: N independent CGRA devices serving a shared
-//! request stream in simulated cycles.
+//! The fleet simulator: N CGRA devices — possibly of *different device
+//! classes* — serving a shared request stream in simulated cycles.
 //!
 //! [`DeviceEngine`] wraps one [`CgraSim`] with the serving-side clock
 //! and accounting; it is the *single*-device engine the
 //! [`crate::coordinator`] worker thread adapts, so one-device serving
 //! and fleet serving share the exact same timing rules. [`FleetSim`]
 //! owns N engines plus a [`Dispatcher`] and advances a discrete-event
-//! loop over request arrivals and device completions. Every decision is
-//! a pure function of (workload, policy, discipline), so identical
-//! seeds produce identical [`FleetMetrics`] — the determinism contract
-//! the integration tests pin down.
+//! loop over request arrivals, device completions and steal
+//! opportunities. Every decision is a pure function of (workload,
+//! roster, policy, discipline), so identical seeds produce identical
+//! [`FleetMetrics`] — the determinism contract the integration tests
+//! pin down.
+//!
+//! ## Device classes and the reference clock
+//!
+//! A fleet is built from a roster of [`DeviceClass`]es (geometry +
+//! clock + memory provisioning), one entry per device. The fleet
+//! timeline runs on a single **reference clock** (`FleetConfig::
+//! ref_mhz`, the clock the workload generator stamps arrivals at); a
+//! device of class `c` serving a job of `k` device cycles occupies
+//! `ceil(k · ref_mhz / c.freq_mhz)` reference cycles ([`to_ref_cycles`]
+//! — exact integer arithmetic, so mixed-clock fleets stay
+//! deterministic). The shortest-expected-job cost cache is keyed by
+//! `(model, device class)`: the same model legitimately costs 4× fewer
+//! reference cycles on an `8x4@200` than on the paper's `4x4@100`, and
+//! pre-seeding each pair from [`analytic_encoder_cycles`] evaluated
+//! against *that class's geometry* is what lets the first wave of a
+//! mixed fleet route its expensive models to the fast silicon.
+//!
+//! ## Work-stealing
+//!
+//! With `FleetConfig::steal` (the default), a device that goes idle
+//! with an empty queue pulls work from the deepest queue whose owner is
+//! busy past the current cycle — the classic complement to sticky or
+//! mis-estimated placement. Steals take a whole coalescible batch via
+//! the dispatcher's normal pop path, so they respect the
+//! [`BatchPolicy`] grouping and EDF expiry rules; thief order (lowest
+//! idle index) and victim order (deepest queue, ties to the lowest
+//! index) are fixed, keeping stolen schedules seed-deterministic.
+//! Steal counts land in [`FleetMetrics`] and per-device
+//! [`DeviceMetrics`].
 //!
 //! ## Context-reuse accounting
 //!
@@ -34,13 +64,14 @@
 //! requests of a batch complete together; per-request latency is
 //! attributed from that shared completion. Because the batched path
 //! uses the fleet's static per-model calibration ([`EncoderQuant`]),
-//! each request's output is bit-identical whichever batch serves it —
-//! batching changes timing and energy, never results.
+//! each request's output is bit-identical whichever batch — or device
+//! class — serves it: heterogeneity changes timing and energy, never
+//! results.
 
 use super::dispatch::{BatchPolicy, Discipline, Dispatcher, Placement};
 use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::workload::{FleetRequest, ModelClass};
-use crate::config::ArchConfig;
+use crate::config::{ArchConfig, DeviceClass};
 use crate::gemm::{GemmPlan, OutputMode};
 use crate::sim::{CgraSim, Stats};
 use crate::util::mat::MatF32;
@@ -50,12 +81,30 @@ use crate::xformer::{
 use anyhow::Result;
 use std::collections::BTreeMap;
 
+/// `dev` cycles at a `dev_mhz` device clock, expressed in cycles of a
+/// `ref_mhz` reference clock (ceiling — a job never finishes earlier
+/// than its device-cycle count implies). Exact in u128, so mixed-clock
+/// fleet runs are deterministic.
+pub fn to_ref_cycles(dev: u64, dev_mhz: u64, ref_mhz: u64) -> u64 {
+    (u128::from(dev) * u128::from(ref_mhz)).div_ceil(u128::from(dev_mhz.max(1))) as u64
+}
+
 /// One serving device: a simulator plus its serving clock and counters.
+///
+/// The serving clock (`free_at`, `busy_cycles`) runs on the *reference*
+/// timeline; kernel reports come back in device cycles and are
+/// converted via [`to_ref_cycles`]. A standalone engine (e.g. under the
+/// coordinator) uses `ref_mhz == freq_mhz`, which makes the conversion
+/// the identity.
 pub struct DeviceEngine {
     pub sim: CgraSim,
-    /// Earliest cycle at which the array is free.
+    /// Device clock in integer MHz.
+    pub freq_mhz: u64,
+    /// Reference clock of the serving timeline in integer MHz.
+    pub ref_mhz: u64,
+    /// Earliest reference cycle at which the array is free.
     pub free_at: u64,
-    /// Total charged service cycles.
+    /// Total charged service cycles (reference clock).
     pub busy_cycles: u64,
     /// Requests completed.
     pub served: u64,
@@ -66,9 +115,19 @@ pub struct DeviceEngine {
 }
 
 impl DeviceEngine {
+    /// A standalone engine: the serving timeline *is* the device clock.
     pub fn new(cfg: ArchConfig) -> Self {
+        let f = cfg.freq_mhz_u64();
+        Self::with_clock(cfg, f, f)
+    }
+
+    /// An engine whose serving timeline runs at `ref_mhz` while the
+    /// device itself clocks at `freq_mhz` (fleet use).
+    pub fn with_clock(cfg: ArchConfig, freq_mhz: u64, ref_mhz: u64) -> Self {
         Self {
             sim: CgraSim::new(cfg),
+            freq_mhz: freq_mhz.max(1),
+            ref_mhz: ref_mhz.max(1),
             free_at: 0,
             busy_cycles: 0,
             served: 0,
@@ -77,11 +136,22 @@ impl DeviceEngine {
         }
     }
 
+    /// One device of a class, serving on a `ref_mhz` fleet timeline.
+    pub fn for_class(class: &DeviceClass, ref_mhz: u64) -> Self {
+        Self::with_clock(class.arch.clone(), class.freq_mhz, ref_mhz)
+    }
+
+    /// Device→reference cycle conversion for this engine's clocks.
+    fn ref_cycles(&self, dev: u64) -> u64 {
+        to_ref_cycles(dev, self.freq_mhz, self.ref_mhz)
+    }
+
     /// Shared post-run accounting for both serving paths: apply the
-    /// context-reuse discount, merge event counters, advance the
-    /// serving clock. Returns the charged service cycles. Keeping this
-    /// in one place guarantees single-request and batched serving can
-    /// never drift apart on timing or energy.
+    /// context-reuse discount, convert device cycles to the reference
+    /// timeline, merge event counters, advance the serving clock.
+    /// Returns the charged service cycles (reference clock). Keeping
+    /// this in one place guarantees single-request and batched serving
+    /// can never drift apart on timing or energy.
     fn charge_run(
         &mut self,
         model_key: usize,
@@ -90,7 +160,8 @@ impl DeviceEngine {
         requests: u64,
     ) -> u64 {
         let reuse = self.served > 0 && start == self.free_at && self.last_model == Some(model_key);
-        let charged = report.cycles + if reuse { 0 } else { report.config_cycles };
+        let charged_dev = report.cycles + if reuse { 0 } else { report.config_cycles };
+        let charged = self.ref_cycles(charged_dev);
         // Keep event accounting consistent with the timing model: a
         // reused context is not redistributed, so its configuration
         // cycles and bytes must not be billed to energy either.
@@ -111,10 +182,10 @@ impl DeviceEngine {
     /// ≥ [`Self::free_at`]): one encoder job over every input, weights
     /// streamed once per layer GEMM — a single input is the per-request
     /// case. Returns the per-request outputs (stacking order), the
-    /// charged service cycles for the whole batch (execution +
-    /// configuration, minus the context-reuse discount — see the module
-    /// docs), and the run report (batch-occupancy / weight-reuse
-    /// accounting for [`FleetMetrics`]).
+    /// charged service cycles for the whole batch on the reference
+    /// clock (execution + configuration, minus the context-reuse
+    /// discount — see the module docs), and the run report
+    /// (batch-occupancy / weight-reuse accounting for [`FleetMetrics`]).
     pub fn serve_encoder_batch(
         &mut self,
         model_key: usize,
@@ -131,15 +202,17 @@ impl DeviceEngine {
     }
 }
 
-/// Optimistic analytic estimate of one encoder request's service cycles:
-/// the sum of [`GemmPlan::ideal_cycles`] (one packed MAC per PE per
-/// cycle over the padded volume) across every GEMM site of the model.
-/// It ignores fills, drains, DMA and configuration, so it lower-bounds
-/// the observed charge — exactly what the shortest-expected-job
-/// placement needs before a class has ever completed (the cold-start
-/// pre-seed the ROADMAP called for).
+/// Optimistic analytic estimate of one encoder request's service cycles
+/// *on the given geometry*: the sum of [`GemmPlan::ideal_cycles`] (one
+/// packed MAC per PE per cycle over the padded volume) across every
+/// GEMM site of the model. It ignores fills, drains, DMA and
+/// configuration, so it lower-bounds the observed charge — exactly what
+/// the shortest-expected-job placement needs before a `(model, class)`
+/// pair has ever completed (the cold-start pre-seed the ROADMAP called
+/// for). Evaluated per device class, it is what makes the pre-seeds
+/// *differ* across classes for the same model.
 pub fn analytic_encoder_cycles(arch: &ArchConfig, cfg: &XformerConfig) -> u64 {
-    let peak = (4 * arch.topo.rows * arch.topo.pe_cols) as u64;
+    let peak = arch.peak_macs_per_cycle();
     let ideal = |m: usize, k: usize, n: usize| -> u64 {
         GemmPlan::new(arch, m, k, n, OutputMode::Quant { shift: 0 })
             .map(|p| p.ideal_cycles())
@@ -154,27 +227,60 @@ pub fn analytic_encoder_cycles(arch: &ArchConfig, cfg: &XformerConfig) -> u64 {
     (per_layer * cfg.n_layers as u64).max(1)
 }
 
+/// [`analytic_encoder_cycles`] for one device class, converted onto the
+/// fleet's reference timeline: the per-`(model, class)` cost-cache
+/// pre-seed.
+pub fn analytic_encoder_ref_cycles(
+    class: &DeviceClass,
+    cfg: &XformerConfig,
+    ref_mhz: u64,
+) -> u64 {
+    to_ref_cycles(analytic_encoder_cycles(&class.arch, cfg), class.freq_mhz, ref_mhz)
+}
+
 /// Fleet-level configuration.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
-    pub devices: usize,
+    /// One device per entry: the class roster the fleet is built from.
+    /// Mixed rosters give a big.LITTLE-style heterogeneous fleet.
+    pub roster: Vec<DeviceClass>,
     pub policy: Placement,
     pub discipline: Discipline,
     /// Same-model batch coalescing (default: off, `max_batch = 1`).
     pub batch: BatchPolicy,
-    /// Per-device architecture (the fleet is homogeneous).
-    pub arch: ArchConfig,
+    /// Idle devices pull coalescible batches from the deepest
+    /// backlogged queue instead of waiting for new arrivals.
+    pub steal: bool,
+    /// Reference clock of the fleet timeline in integer MHz: arrival
+    /// stamps and every metric are cycles of this clock.
+    pub ref_mhz: u64,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
         Self {
-            devices: 4,
+            roster: vec![DeviceClass::paper(); 4],
             policy: Placement::LeastLoaded,
             discipline: Discipline::Fifo,
             batch: BatchPolicy::default(),
-            arch: ArchConfig::default(),
+            steal: true,
+            ref_mhz: 100,
         }
+    }
+}
+
+impl FleetConfig {
+    /// Homogeneous sugar: `n` devices of one class (the `--devices N`
+    /// spelling). The reference clock is the class clock, so a uniform
+    /// fleet's cycle numbers read directly in device cycles.
+    pub fn uniform(n: usize, class: DeviceClass) -> Self {
+        let ref_mhz = class.freq_mhz;
+        Self { roster: vec![class; n], ref_mhz, ..Default::default() }
+    }
+
+    /// `n` devices of the paper's design point.
+    pub fn paper_fleet(n: usize) -> Self {
+        Self::uniform(n, DeviceClass::paper())
     }
 }
 
@@ -182,44 +288,114 @@ impl Default for FleetConfig {
 pub struct FleetSim {
     pub cfg: FleetConfig,
     devices: Vec<DeviceEngine>,
+    /// Deduplicated device-class table; `device_class[d]` indexes it.
+    device_classes: Vec<DeviceClass>,
+    device_class: Vec<usize>,
     dispatcher: Dispatcher,
     models: Vec<EncoderModel>,
     /// Static per-model quantization calibration (index-aligned with
-    /// `models`); shared by every device so batching is output-neutral.
+    /// `models`); shared by every device so batching — and placement on
+    /// any class — is output-neutral.
     quants: Vec<EncoderQuant>,
-    /// Expected service cycles per model class — the shortest-expected-
-    /// job placement estimate. Pre-seeded from the analytic cycle model
-    /// at construction; the first observed completion replaces the
-    /// analytic value. Shared across devices (the fleet is homogeneous).
-    cost_cache: BTreeMap<usize, u64>,
-    /// Which classes have had their analytic pre-seed replaced by an
-    /// observed charge.
+    /// Expected service cycles (reference clock) per `(model class,
+    /// device class)` — the shortest-expected-job placement estimate.
+    /// Pre-seeded from the analytic cycle model of *each class's
+    /// geometry* at construction; the first observed completion on a
+    /// class replaces that pair's analytic value.
+    cost_cache: BTreeMap<(usize, usize), u64>,
+    /// Which `(model, class)` slots (model · n_classes + class) have had
+    /// their analytic pre-seed replaced by an observed charge.
     observed: Vec<bool>,
     /// `run` is single-shot: device clocks and counters are not reset
     /// between runs, so a second call would silently misaccount.
     ran: bool,
 }
 
-/// Expected service cycles for a model class: the observed charge, or
-/// the analytic pre-seed (always present after `FleetSim::new`; the
-/// MACs/cycle fallback only guards direct map misuse).
-fn est_cost(cache: &BTreeMap<usize, u64>, models: &[EncoderModel], model: usize) -> u64 {
+/// Expected service cycles for a model on a device class: the observed
+/// charge, or the analytic pre-seed (always present after
+/// `FleetSim::new`; the MACs/cycle fallback only guards direct map
+/// misuse).
+fn est_cost(
+    cache: &BTreeMap<(usize, usize), u64>,
+    models: &[EncoderModel],
+    model: usize,
+    class: usize,
+) -> u64 {
     cache
-        .get(&model)
+        .get(&(model, class))
         .copied()
         .unwrap_or_else(|| models[model].cfg.gemm_macs() / 64 + 1)
 }
 
+/// Serve one already-popped batch on `engine` at `now`: execute,
+/// update the `(model, class)` cost cache on first observation, and
+/// record completion metrics. Shared by the normal serve path and the
+/// steal path so the two can never drift on accounting.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch_on(
+    engine: &mut DeviceEngine,
+    class_id: usize,
+    n_classes: usize,
+    models: &[EncoderModel],
+    quants: &[EncoderQuant],
+    cost_cache: &mut BTreeMap<(usize, usize), u64>,
+    observed: &mut [bool],
+    metrics: &mut FleetMetrics,
+    batch: &[FleetRequest],
+    now: u64,
+) -> Result<()> {
+    let Some(first) = batch.first() else { return Ok(()) };
+    let model = first.model;
+    let inputs: Vec<&MatF32> = batch.iter().map(|r| &r.input).collect();
+    let (_outputs, charged, report) =
+        engine.serve_encoder_batch(model, &models[model], &quants[model], &inputs, now)?;
+    let slot = model * n_classes + class_id;
+    if !observed[slot] {
+        // First observed completion on this class replaces the
+        // analytic pre-seed with a per-request charge.
+        cost_cache.insert((model, class_id), (charged / batch.len() as u64).max(1));
+        observed[slot] = true;
+    }
+    let completion = now + charged;
+    metrics.batch_occupancy.record(batch.len() as u64);
+    metrics.weight_reuse_words += report.weight_reuse_words;
+    metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
+    for req in batch {
+        metrics.completed += 1;
+        metrics.latency.record(completion - req.arrival_cycle);
+        metrics.queue_wait.record(now - req.arrival_cycle);
+        if req.deadline_cycle.is_some_and(|dl| completion > dl) {
+            metrics.sla_misses += 1;
+        }
+    }
+    Ok(())
+}
+
 impl FleetSim {
-    /// Build a fleet: one fresh simulator per device, one model per
-    /// catalog class (weights seeded deterministically per class), one
-    /// static calibration per model, and the shortest-expected-job cost
-    /// cache pre-seeded from [`analytic_encoder_cycles`] so the first
-    /// wave of requests is placed sensibly before anything completes.
+    /// Build a fleet: one fresh simulator per roster entry, one model
+    /// per catalog class (weights seeded deterministically per class),
+    /// one static calibration per model, and the shortest-expected-job
+    /// cost cache pre-seeded from [`analytic_encoder_cycles`] of *every*
+    /// `(model, device class)` pair, so the first wave of requests is
+    /// placed class-aware before anything completes.
     pub fn new(cfg: FleetConfig, classes: &[ModelClass], model_seed: u64) -> Self {
-        assert!(cfg.devices > 0, "fleet needs at least one device");
+        assert!(!cfg.roster.is_empty(), "fleet needs at least one device");
         assert!(!classes.is_empty(), "fleet needs at least one model class");
-        let devices = (0..cfg.devices).map(|_| DeviceEngine::new(cfg.arch.clone())).collect();
+        assert!(cfg.ref_mhz > 0, "reference clock must be positive");
+        let mut device_classes: Vec<DeviceClass> = Vec::new();
+        let mut device_class = Vec::with_capacity(cfg.roster.len());
+        for c in &cfg.roster {
+            let id = match device_classes.iter().position(|x| x == c) {
+                Some(i) => i,
+                None => {
+                    device_classes.push(c.clone());
+                    device_classes.len() - 1
+                }
+            };
+            device_class.push(id);
+        }
+        let devices: Vec<DeviceEngine> =
+            cfg.roster.iter().map(|c| DeviceEngine::for_class(c, cfg.ref_mhz)).collect();
         let models: Vec<EncoderModel> = classes
             .iter()
             .enumerate()
@@ -233,18 +409,23 @@ impl FleetSim {
             })
             .collect();
         let mut cost_cache = BTreeMap::new();
-        for (i, c) in classes.iter().enumerate() {
-            cost_cache.insert(i, analytic_encoder_cycles(&cfg.arch, &c.cfg));
+        for (i, mc) in classes.iter().enumerate() {
+            for (ci, dc) in device_classes.iter().enumerate() {
+                cost_cache.insert((i, ci), analytic_encoder_ref_cycles(dc, &mc.cfg, cfg.ref_mhz));
+            }
         }
-        let dispatcher = Dispatcher::new(cfg.policy, cfg.discipline, cfg.devices);
+        let dispatcher = Dispatcher::new(cfg.policy, cfg.discipline, cfg.roster.len());
+        let observed = vec![false; classes.len() * device_classes.len()];
         Self {
             cfg,
             devices,
+            device_classes,
+            device_class,
             dispatcher,
             models,
             quants,
             cost_cache,
-            observed: vec![false; classes.len()],
+            observed,
             ran: false,
         }
     }
@@ -254,10 +435,21 @@ impl FleetSim {
         &self.models
     }
 
-    /// The dispatcher's current expected service cycles for a model
-    /// class (analytic pre-seed until the class first completes).
-    pub fn expected_cost(&self, model: usize) -> u64 {
-        est_cost(&self.cost_cache, &self.models, model)
+    /// The deduplicated device-class table of this fleet.
+    pub fn device_classes(&self) -> &[DeviceClass] {
+        &self.device_classes
+    }
+
+    /// Class-table index of device `d`.
+    pub fn class_of(&self, d: usize) -> usize {
+        self.device_class[d]
+    }
+
+    /// The dispatcher's current expected service cycles (reference
+    /// clock) for a model class on device `d` (the analytic pre-seed
+    /// until that model first completes on `d`'s class).
+    pub fn expected_cost(&self, model: usize, d: usize) -> u64 {
+        est_cost(&self.cost_cache, &self.models, model, self.device_class[d])
     }
 
     /// Run the fleet over a request stream to completion and return the
@@ -268,24 +460,42 @@ impl FleetSim {
     pub fn run(&mut self, mut requests: Vec<FleetRequest>) -> Result<FleetMetrics> {
         assert!(!self.ran, "FleetSim::run is single-shot; build a fresh fleet per run");
         self.ran = true;
-        let Self { cfg, devices, dispatcher, models, quants, cost_cache, observed, ran: _ } = self;
+        let Self {
+            cfg,
+            devices,
+            device_classes,
+            device_class,
+            dispatcher,
+            models,
+            quants,
+            cost_cache,
+            observed,
+            ran: _,
+        } = self;
+        let n_classes = device_classes.len();
         let policy = cfg.batch;
         requests.sort_by_key(|r| (r.arrival_cycle, r.id));
         let mut arrivals = requests.into_iter().peekable();
         let mut metrics = FleetMetrics::default();
+        let mut steal_count = vec![0u64; devices.len()];
         let mut now: u64 = 0;
         loop {
             // 1. Admit every request that has arrived by `now`. The
             // placement decision sees the device states at admission
-            // time, including earlier same-cycle placements.
+            // time, including earlier same-cycle placements, and costs
+            // each candidate device by its own class.
             while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
                 let r = arrivals.next().expect("peeked");
                 let free: Vec<u64> = devices.iter().map(|d| d.free_at).collect();
-                dispatcher.dispatch(r, now, &free, |m| est_cost(cost_cache, models, m));
+                dispatcher.dispatch(r, now, &free, |m, d| {
+                    est_cost(cost_cache, models, m, device_class[d])
+                });
             }
             // 2. Serve: every idle device takes work per its queue
             // discipline until it is busy past `now`, its queue dries,
-            // or it holds for a fuller batch (`max_wait_cycles`).
+            // or it holds for a fuller batch (see `BatchPolicy::
+            // hold_until` — fixed fill budget, or deadline slack when
+            // latency-aware).
             let mut hold_until: Vec<Option<u64>> = vec![None; devices.len()];
             for d in 0..devices.len() {
                 while devices[d].free_at <= now {
@@ -294,22 +504,10 @@ impl FleetSim {
                         && outlook.count < policy.cap()
                         && arrivals.peek().is_some()
                     {
-                        // Hold for a fuller batch, but not past the
-                        // point where the head's deadline becomes
-                        // unmeetable by the current cost estimate for
-                        // the batch it would join — waiting out the
-                        // fill budget should not turn a servable
-                        // request into an SLA miss / EDF drop. (The
-                        // estimate is optimistic, so a tight deadline
-                        // can still be missed; the cap only keeps the
-                        // hold itself from causing the miss.)
-                        let mut hold =
-                            outlook.head_arrival.saturating_add(policy.max_wait_cycles);
-                        if let Some(dl) = outlook.head_deadline {
-                            let est = est_cost(cost_cache, models, outlook.model)
-                                .saturating_mul(outlook.count as u64);
-                            hold = hold.min(dl.saturating_sub(est));
-                        }
+                        let est = est_cost(cost_cache, models, outlook.model, device_class[d])
+                            .saturating_mul(outlook.count as u64);
+                        let hold =
+                            policy.hold_until(outlook.head_arrival, outlook.head_deadline, est);
                         if now < hold {
                             // A future event either way: the batch
                             // fills, or the hold expires.
@@ -319,43 +517,74 @@ impl FleetSim {
                     }
                     let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap());
                     metrics.dropped += dropped.len() as u64;
-                    let Some(first) = batch.first() else { continue };
-                    let model = first.model;
-                    let inputs: Vec<&MatF32> = batch.iter().map(|r| &r.input).collect();
-                    let (_outputs, charged, report) = devices[d].serve_encoder_batch(
-                        model,
-                        &models[model],
-                        &quants[model],
-                        &inputs,
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    serve_batch_on(
+                        &mut devices[d],
+                        device_class[d],
+                        n_classes,
+                        models,
+                        quants,
+                        cost_cache,
+                        observed,
+                        &mut metrics,
+                        &batch,
                         now,
                     )?;
-                    if !observed[model] {
-                        // First observed completion replaces the
-                        // analytic pre-seed with a per-request charge.
-                        cost_cache.insert(model, (charged / batch.len() as u64).max(1));
-                        observed[model] = true;
+                }
+            }
+            // 2b. Steal: each device now idle with an empty queue (a
+            // holding device has a queue and is skipped) pulls one
+            // coalescible batch from the deepest queue whose owner is
+            // busy past `now` — work that owner cannot start now, so a
+            // steal strictly helps. Thief order is lowest index; victim
+            // is the deepest queue, ties to the lowest index. Each
+            // iteration makes the thief busy or shrinks a queue, so the
+            // loop terminates.
+            if cfg.steal {
+                loop {
+                    let thief = (0..devices.len())
+                        .find(|&d| devices[d].free_at <= now && dispatcher.queued(d) == 0);
+                    let Some(t) = thief else { break };
+                    let victim = (0..devices.len())
+                        .filter(|&d| devices[d].free_at > now && dispatcher.queued(d) > 0)
+                        .max_by_key(|&d| (dispatcher.queued(d), std::cmp::Reverse(d)));
+                    let Some(v) = victim else { break };
+                    let (dropped, batch) = dispatcher.pop_batch(v, now, policy.cap());
+                    metrics.dropped += dropped.len() as u64;
+                    if batch.is_empty() {
+                        continue; // every candidate expired (EDF): queue shrank, retry
                     }
-                    let completion = now + charged;
-                    metrics.batch_occupancy.record(batch.len() as u64);
-                    metrics.weight_reuse_words += report.weight_reuse_words;
-                    metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
-                    for req in &batch {
-                        metrics.completed += 1;
-                        metrics.latency.record(completion - req.arrival_cycle);
-                        metrics.queue_wait.record(now - req.arrival_cycle);
-                        if req.deadline_cycle.is_some_and(|dl| completion > dl) {
-                            metrics.sla_misses += 1;
-                        }
-                    }
+                    metrics.steals += 1;
+                    metrics.stolen_requests += batch.len() as u64;
+                    steal_count[t] += 1;
+                    serve_batch_on(
+                        &mut devices[t],
+                        device_class[t],
+                        n_classes,
+                        models,
+                        quants,
+                        cost_cache,
+                        observed,
+                        &mut metrics,
+                        &batch,
+                        now,
+                    )?;
                 }
             }
             // 3. Advance to the next event: the next arrival, the
-            // earliest completion on a device that still has queued
-            // work, or the earliest batch-hold deadline. All are
+            // earliest completion that matters (a device with queued
+            // work — or, when stealing, any busy device while *any*
+            // queue holds work, since the freed device becomes a
+            // thief), or the earliest batch-hold deadline. All are
             // strictly after `now`, so time always moves.
             let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
+            let queued_anywhere = dispatcher.total_queued() > 0;
             for d in 0..devices.len() {
-                if dispatcher.queued(d) > 0 && devices[d].free_at > now {
+                if devices[d].free_at > now
+                    && (dispatcher.queued(d) > 0 || (cfg.steal && queued_anywhere))
+                {
                     let t = devices[d].free_at;
                     next = Some(next.map_or(t, |n| n.min(t)));
                 }
@@ -373,7 +602,12 @@ impl FleetSim {
         }
         metrics.per_device = devices
             .iter()
-            .map(|d| DeviceMetrics { served: d.served, busy_cycles: d.busy_cycles })
+            .zip(&steal_count)
+            .map(|(d, &steals)| DeviceMetrics {
+                served: d.served,
+                busy_cycles: d.busy_cycles,
+                steals,
+            })
             .collect();
         for d in devices.iter() {
             metrics.stats.merge(&d.stats);
@@ -392,6 +626,10 @@ mod tests {
         vec![ModelClass::tiny()]
     }
 
+    fn paper_roster(n: usize) -> Vec<DeviceClass> {
+        vec![DeviceClass::paper(); n]
+    }
+
     fn tiny_input(seed: u64) -> MatF32 {
         let cfg = ModelClass::tiny().cfg;
         let mut rng = XorShiftRng::new(seed);
@@ -400,6 +638,15 @@ mod tests {
             *v = rng.normal() * 0.5;
         }
         x
+    }
+
+    #[test]
+    fn to_ref_cycles_is_exact_and_identity_at_equal_clocks() {
+        assert_eq!(to_ref_cycles(10, 200, 100), 5);
+        assert_eq!(to_ref_cycles(11, 200, 100), 6, "ceiling, never early");
+        assert_eq!(to_ref_cycles(7, 100, 100), 7);
+        assert_eq!(to_ref_cycles(7, 100, 300), 21);
+        assert_eq!(to_ref_cycles(0, 123, 456), 0);
     }
 
     #[test]
@@ -422,6 +669,21 @@ mod tests {
     }
 
     #[test]
+    fn fast_clock_halves_reference_charge() {
+        // Same geometry, twice the clock: the identical kernel occupies
+        // half the reference cycles (ceiling-exact).
+        let classes = tiny_classes();
+        let model = EncoderModel::new(classes[0].cfg, 42);
+        let quant = EncoderQuant::calibrate_seeded(&model, 1);
+        let x = tiny_input(1);
+        let mut base = DeviceEngine::with_clock(ArchConfig::default(), 100, 100);
+        let mut fast = DeviceEngine::with_clock(ArchConfig::default(), 200, 100);
+        let (_, c_base, _) = base.serve_encoder_batch(0, &model, &quant, &[&x], 0).unwrap();
+        let (_, c_fast, _) = fast.serve_encoder_batch(0, &model, &quant, &[&x], 0).unwrap();
+        assert_eq!(c_fast, c_base.div_ceil(2), "{c_fast} vs {c_base}");
+    }
+
+    #[test]
     fn fleet_completes_all_and_fills_cache() {
         let classes = tiny_classes();
         let mut gen = WorkloadGen::new(
@@ -432,7 +694,7 @@ mod tests {
         );
         let reqs = gen.generate(6);
         let mut fleet = FleetSim::new(
-            FleetConfig { devices: 2, ..Default::default() },
+            FleetConfig { roster: paper_roster(2), ..Default::default() },
             &classes,
             42,
         );
@@ -445,7 +707,10 @@ mod tests {
         assert!(m.latency.p99() >= m.latency.p50());
         assert!(m.makespan_cycles > 0);
         assert!(m.mean_utilization() > 0.0 && m.mean_utilization() <= 1.0);
-        assert!(fleet.cost_cache.contains_key(&0), "first completion must seed the cost cache");
+        assert!(
+            fleet.cost_cache.contains_key(&(0, 0)),
+            "first completion must seed the (model, class) cost cache"
+        );
         assert!(m.stats.kernels > 0, "merged device stats must carry kernel counts");
     }
 
@@ -461,7 +726,7 @@ mod tests {
             );
             let reqs = gen.generate(8);
             let mut fleet = FleetSim::new(
-                FleetConfig { devices, ..Default::default() },
+                FleetConfig { roster: paper_roster(devices), ..Default::default() },
                 &classes,
                 42,
             );
@@ -489,7 +754,7 @@ mod tests {
         // cause, since ties break to the lowest index).
         let classes = tiny_classes();
         let fleet_cfg = FleetConfig {
-            devices: 4,
+            roster: paper_roster(4),
             policy: Placement::ShortestExpectedJob,
             ..Default::default()
         };
@@ -501,7 +766,7 @@ mod tests {
             "padded ideal cycles can never undercut raw MACs/peak"
         );
         assert_eq!(
-            fleet.expected_cost(0),
+            fleet.expected_cost(0, 0),
             analytic,
             "cache must be pre-seeded before any completion"
         );
@@ -528,8 +793,29 @@ mod tests {
         for d in 0..4 {
             assert_eq!(m.per_device[d].served, 2, "first wave misplaced: {:?}", m.per_device);
         }
-        let observed = fleet.expected_cost(0);
+        let observed = fleet.expected_cost(0, 0);
         assert!(observed > analytic, "observed charge must replace the optimistic pre-seed");
+    }
+
+    #[test]
+    fn mixed_roster_dedupes_classes_and_seeds_per_class() {
+        let mut roster = paper_roster(3);
+        roster.push(DeviceClass::parse("8x4@200").unwrap());
+        let classes = tiny_classes();
+        let fleet = FleetSim::new(
+            FleetConfig { roster, ..Default::default() },
+            &classes,
+            42,
+        );
+        assert_eq!(fleet.device_classes().len(), 2, "3+1 roster has two classes");
+        assert_eq!(fleet.class_of(0), 0);
+        assert_eq!(fleet.class_of(3), 1);
+        let slow = fleet.expected_cost(0, 0);
+        let fast = fleet.expected_cost(0, 3);
+        assert!(
+            fast < slow,
+            "the same model must pre-seed cheaper on the fast class: {fast} vs {slow}"
+        );
     }
 
     #[test]
@@ -546,7 +832,7 @@ mod tests {
             );
             let reqs = gen.generate(8);
             let mut fleet = FleetSim::new(
-                FleetConfig { devices: 1, batch, ..Default::default() },
+                FleetConfig { roster: paper_roster(1), batch, ..Default::default() },
                 &classes,
                 42,
             );
@@ -599,13 +885,17 @@ mod tests {
         };
         let run = |batch: BatchPolicy| {
             let mut fleet = FleetSim::new(
-                FleetConfig { devices: 1, batch, ..Default::default() },
+                FleetConfig { roster: paper_roster(1), batch, ..Default::default() },
                 &classes,
                 42,
             );
             fleet.run(mk_reqs()).unwrap()
         };
-        let held = run(BatchPolicy { max_batch: 2, max_wait_cycles: 50_000 });
+        let held = run(BatchPolicy {
+            max_batch: 2,
+            max_wait_cycles: 50_000,
+            latency_aware: false,
+        });
         assert_eq!(held.batches(), 1, "wait budget must let the batch fill");
         assert_eq!(held.completed, 2);
         let eager = run(BatchPolicy::greedy(2));
@@ -641,9 +931,10 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         let run = |reqs: Vec<FleetRequest>| {
-            let policy = BatchPolicy { max_batch: 2, max_wait_cycles: 100_000 };
+            let policy =
+                BatchPolicy { max_batch: 2, max_wait_cycles: 100_000, latency_aware: false };
             let mut fleet = FleetSim::new(
-                FleetConfig { devices: 1, batch: policy, ..Default::default() },
+                FleetConfig { roster: paper_roster(1), batch: policy, ..Default::default() },
                 &classes,
                 42,
             );
@@ -677,7 +968,7 @@ mod tests {
             );
             let reqs = gen.generate(6);
             let mut fleet = FleetSim::new(
-                FleetConfig { devices: 1, discipline, ..Default::default() },
+                FleetConfig { roster: paper_roster(1), discipline, ..Default::default() },
                 &classes,
                 42,
             );

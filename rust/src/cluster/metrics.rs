@@ -78,8 +78,12 @@ impl LatencyHistogram {
 pub struct DeviceMetrics {
     /// Requests this device completed.
     pub served: u64,
-    /// Cycles this device spent executing (charged service time).
+    /// Cycles this device spent executing (charged service time, on the
+    /// fleet's reference clock).
     pub busy_cycles: u64,
+    /// Steal operations this device executed as the *thief* (batches it
+    /// pulled from a backlogged neighbour's queue).
+    pub steals: u64,
 }
 
 /// Aggregated metrics for one fleet run.
@@ -103,6 +107,12 @@ pub struct FleetMetrics {
     /// External-memory words avoided by streaming shared weights once
     /// per stacked kernel instead of once per request.
     pub weight_reuse_words: u64,
+    /// Steal operations across the fleet: an idle device pulling a
+    /// coalescible batch from the deepest backlogged neighbour queue.
+    pub steals: u64,
+    /// Requests that changed device via stealing (a stolen batch of
+    /// size B counts B here and 1 in `steals`).
+    pub stolen_requests: u64,
     /// Per-device service counters, indexed by device id.
     pub per_device: Vec<DeviceMetrics>,
     /// Merged simulator event counters across every device.
@@ -199,8 +209,8 @@ mod tests {
             completed: 10,
             makespan_cycles: 1_000_000,
             per_device: vec![
-                DeviceMetrics { served: 6, busy_cycles: 900_000 },
-                DeviceMetrics { served: 4, busy_cycles: 300_000 },
+                DeviceMetrics { served: 6, busy_cycles: 900_000, steals: 0 },
+                DeviceMetrics { served: 4, busy_cycles: 300_000, steals: 0 },
             ],
             ..Default::default()
         };

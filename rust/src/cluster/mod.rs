@@ -2,32 +2,50 @@
 //!
 //! The paper positions the 4×4 array as a scalable pathway for edge
 //! transformer inference; a real deployment runs *fleets* of such
-//! accelerators behind a dispatcher. This subsystem is a deterministic
-//! discrete-event simulator of exactly that:
+//! accelerators behind a dispatcher — and real fleets mix silicon
+//! generations and array sizes (big.LITTLE style). This subsystem is a
+//! deterministic discrete-event simulator of exactly that:
 //!
+//! - **Device classes** — a fleet is built from a roster of
+//!   [`crate::config::DeviceClass`]es (`4x4@100`, `8x4@200`, …): array
+//!   geometry, integer-MHz clock, and row-scaled memory provisioning.
+//!   The fleet timeline runs on one reference clock; device cycles
+//!   convert exactly ([`fleet::to_ref_cycles`]), so mixed-clock runs
+//!   stay reproducible. PE columns cap at 4 (the FIG5 entry-link
+//!   saturation); rows and clock are the scaling axes.
 //! - [`workload`] — reproducible request streams: Poisson / bursty
 //!   on-off / diurnal-ramp arrival processes over a model-class mix,
 //!   all drawn from one [`crate::util::rng::XorShiftRng`] seed.
 //! - [`dispatch`] — the [`Dispatcher`]: pluggable placement policies
-//!   (round-robin, least-loaded, shortest-expected-job via a per-model
-//!   cycle-cost cache pre-seeded from the analytic cycle model), queue
-//!   disciplines (FIFO, priority tiers, earliest-deadline-first with
-//!   drop-on-SLA-miss), and [`BatchPolicy`] same-model coalescing at
-//!   pop time.
+//!   (round-robin, least-loaded, shortest-expected-job via a
+//!   per-`(model, device-class)` cycle-cost cache pre-seeded from the
+//!   analytic cycle model of each class's geometry, and model-affinity
+//!   sticky routing), queue disciplines (FIFO, priority tiers,
+//!   earliest-deadline-first with drop-on-SLA-miss), and
+//!   [`BatchPolicy`] same-model coalescing at pop time — with an
+//!   optional latency-aware hold budget derived from the head's
+//!   deadline slack.
 //! - [`fleet`] — [`DeviceEngine`] (one simulator + serving clock; the
 //!   engine the single-device [`crate::coordinator`] adapts) and
 //!   [`FleetSim`], the N-device event loop. With batching on, a freed
 //!   device serves its coalesced batch as one stacked encoder job
 //!   (true batch GEMM: weights streamed once per layer), bit-identical
-//!   per request to unbatched serving.
+//!   per request to unbatched serving. **Work-stealing** (on by
+//!   default): an idle device pops a coalescible batch from the
+//!   deepest queue whose owner is busy — deterministic thief/victim
+//!   order, steals respect the batch policy and EDF expiry, and steal
+//!   counts land in the metrics.
 //! - [`metrics`] — [`FleetMetrics`] with exact p50/p95/p99 latency
 //!   percentiles ([`LatencyHistogram`], shared with the coordinator's
-//!   `ServeMetrics`), per-device utilization, SLA-miss / drop counts,
-//!   batch occupancy, weight-reuse words, and fleet energy (idle
-//!   devices still leak).
-//! - [`parallel`] — tile-level model parallelism: one large GEMM's
-//!   i-/j-tile grid split across ≥2 devices with bit-identical merged
-//!   output, reusing `gemm::plan`/`mapper` unchanged.
+//!   `ServeMetrics`), per-device utilization and steal counts,
+//!   SLA-miss / drop counts, batch occupancy, weight-reuse words, and
+//!   fleet energy (idle devices still leak).
+//! - [`parallel`] — tile-level model parallelism: one large GEMM split
+//!   over a 2D (i×j) shard grid, shards sized proportionally to each
+//!   device's class throughput so heterogeneous shards finish
+//!   together, with the replicated-operand broadcast traffic accounted
+//!   per replica ([`ShardedGemmRun::broadcast_ext_words`]) and a merge
+//!   that stays bit-identical to the single-device run.
 //!
 //! Everything is accounted in simulated cycles, so fleet experiments
 //! are reproducible from a printed seed and frequency-scalable, like
@@ -39,8 +57,12 @@ pub mod metrics;
 pub mod parallel;
 pub mod workload;
 
+pub use crate::config::DeviceClass;
 pub use dispatch::{BatchOutlook, BatchPolicy, Discipline, Dispatcher, Placement};
-pub use fleet::{analytic_encoder_cycles, DeviceEngine, FleetConfig, FleetSim};
+pub use fleet::{
+    analytic_encoder_cycles, analytic_encoder_ref_cycles, to_ref_cycles, DeviceEngine,
+    FleetConfig, FleetSim,
+};
 pub use metrics::{DeviceMetrics, FleetMetrics, LatencyHistogram};
-pub use parallel::{run_gemm_sharded, ShardedGemmRun, SplitAxis};
+pub use parallel::{run_gemm_sharded, ShardShape, ShardedGemmRun};
 pub use workload::{ArrivalProcess, FleetRequest, ModelClass, WorkloadGen};

@@ -1,14 +1,37 @@
-//! Tile-level model parallelism: one GEMM split across several devices.
+//! Tile-level model parallelism: one GEMM split across several devices
+//! on a **2D (i×j) shard grid**, heterogeneity-aware.
 //!
-//! A blocked GEMM's output tiles are independent, so the tile grid the
-//! planner already produces ([`GemmPlan::n_it`] × [`GemmPlan::n_jt`])
-//! is a ready-made sharding map: give each device a contiguous band of
-//! i-tiles (rows of A / C) or j-tiles (columns of B / C) and run the
-//! *unchanged* per-device pipeline — `plan` → `pack` → `mapper` →
-//! simulate — on the sub-problem. Each output element is still
-//! `requant(Σ a·b, shift)` over the full K reduction on one device, so
-//! the merged result is **bit-identical** to the single-device run (the
-//! acceptance check in the integration tests).
+//! A blocked GEMM's output blocks are independent, so `C = A·B` can be
+//! carved into row bands of A × column bands of B and each block run
+//! through the *unchanged* per-device pipeline — `plan` → `pack` →
+//! `mapper` → simulate — on the sub-problem. Each output element is
+//! still `requant(Σ a·b, shift)` over the full K reduction on one
+//! device, so the merged result is **bit-identical** to the
+//! single-device run (the acceptance check in the integration tests).
+//!
+//! ## Grid shape and heterogeneous sizing
+//!
+//! `D` devices form `ceil(sqrt(D))` row bands with the devices dealt
+//! heaviest-first across the rows, so each grid row has comparable
+//! aggregate throughput. Band sizes are proportional to **class
+//! throughput** ([`crate::config::DeviceClass::throughput_weight`]:
+//! peak MACs/cycle × clock): row bands to each grid row's aggregate
+//! weight, column bands within a row to each device's weight — a
+//! `8x4@200` shard gets ~4× the output area of a `4x4@100` shard, so
+//! heterogeneous shards finish together instead of waiting on the
+//! slowest. Identical devices degrade to the even split, and two
+//! devices degrade to the classic row split.
+//!
+//! ## Broadcast traffic, accounted per replica
+//!
+//! Sharding is not free: every shard in a grid row re-reads that row's
+//! A band, and every grid row re-reads all of B. The replicated
+//! ext-memory words are accounted **per replica** (not once) in
+//! [`ShardedGemmRun::broadcast_a_words`] / `broadcast_b_words` — the
+//! scale-out bandwidth cost the ROADMAP's "model the broadcast
+//! traffic" item called for. A pure row split (`D×1`) replicates only
+//! B; a pure column split (`1×D`) replicates only A; the 2D grid
+//! balances the two, which is exactly why it wins past ~4 devices.
 //!
 //! This is the paper's "scalable pathway" argument made concrete: scale
 //! *out* with more arrays rather than *up* with a wider fabric (FIG5
@@ -19,54 +42,114 @@ use crate::sim::{CgraSim, SimOutcome};
 use crate::util::mat::MatI8;
 use anyhow::{ensure, Result};
 
-/// Which tile axis a sharded run split on.
+/// One shard of a 2D-sharded GEMM: the output block one device computed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SplitAxis {
-    /// i-tile bands: each device gets a row band of A and all of B.
-    Rows,
-    /// j-tile bands: each device gets a column band of B and all of A.
-    Cols,
-    /// Problem had a single tile block (or one device): no split.
-    None,
+pub struct ShardShape {
+    /// Index into the `sims` slice of the device that ran the shard.
+    pub device: usize,
+    /// Device clock in integer MHz (for wall-time makespan).
+    pub freq_mhz: u64,
+    /// First output row and row count of the block.
+    pub i0: usize,
+    pub mi: usize,
+    /// First output column and column count of the block.
+    pub j0: usize,
+    pub nj: usize,
 }
 
 /// Result of a multi-device GEMM.
 pub struct ShardedGemmRun {
     /// Merged requantized output, bit-identical to a single-device run.
     pub c: MatI8,
-    /// Per-shard simulator outcomes (index-aligned with the devices
-    /// actually used; may be fewer than offered).
+    /// Per-shard simulator outcomes (index-aligned with `shards`).
     pub outcomes: Vec<SimOutcome>,
-    pub axis: SplitAxis,
+    /// The output block each device computed.
+    pub shards: Vec<ShardShape>,
+    /// Grid actually used: (row bands, widest row's column shards).
+    pub grid: (usize, usize),
+    /// A-operand ext words fetched *beyond* the single copy a
+    /// one-device run reads (each extra shard in a grid row re-reads
+    /// the row's A band).
+    pub broadcast_a_words: u64,
+    /// B-operand ext words fetched beyond the single copy (each extra
+    /// grid row re-reads all of B).
+    pub broadcast_b_words: u64,
 }
 
 impl ShardedGemmRun {
-    /// Makespan of the parallel execution: the slowest shard, counting
-    /// its configuration time (each device configures independently).
+    /// Makespan of the parallel execution in cycles: the slowest shard,
+    /// counting its configuration time (each device configures
+    /// independently). Directly comparable only on a uniform-clock
+    /// fleet — use [`Self::parallel_ns`] when clocks differ.
     pub fn parallel_cycles(&self) -> u64 {
         self.outcomes.iter().map(|o| o.cycles + o.config_cycles).max().unwrap_or(0)
+    }
+
+    /// Makespan in nanoseconds: the slowest shard at its own clock —
+    /// the finish-together figure of merit for heterogeneous fleets.
+    pub fn parallel_ns(&self) -> u64 {
+        self.outcomes
+            .iter()
+            .zip(&self.shards)
+            .map(|(o, s)| (o.cycles + o.config_cycles) * 1_000 / s.freq_mhz.max(1))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Total device-cycles spent (the energy-relevant sum).
     pub fn total_cycles(&self) -> u64 {
         self.outcomes.iter().map(|o| o.cycles + o.config_cycles).sum()
     }
+
+    /// Ext-memory words crossed *because of* replication: operand words
+    /// fetched beyond the single copy a one-device run would read.
+    pub fn broadcast_ext_words(&self) -> u64 {
+        self.broadcast_a_words + self.broadcast_b_words
+    }
 }
 
-/// Split `tiles` tiles of size `tile` (covering `total` rows/cols) into
-/// at most `devices` contiguous bands, as evenly as possible.
-fn split_tiles(tiles: usize, tile: usize, total: usize, devices: usize) -> Vec<(usize, usize)> {
-    let shards = devices.min(tiles).max(1);
-    let per = tiles / shards;
-    let rem = tiles % shards;
-    let mut out = Vec::with_capacity(shards);
-    let mut t0 = 0usize;
-    for s in 0..shards {
-        let nt = per + usize::from(s < rem);
-        let lo = t0 * tile;
-        let hi = ((t0 + nt) * tile).min(total);
-        out.push((lo, hi - lo));
-        t0 += nt;
+/// Split `total` units over `weights` proportionally (largest-remainder
+/// apportionment, exact sum). While `total >= weights.len()`, every bin
+/// gets at least one unit — a zero-width shard would idle its device.
+/// Deterministic: remainder ties and donor picks break by index.
+fn proportional_split(total: usize, weights: &[u64]) -> Vec<usize> {
+    let n = weights.len();
+    debug_assert!(n > 0);
+    let wsum: u128 = weights.iter().map(|&w| u128::from(w)).sum::<u128>().max(1);
+    let mut out = vec![0usize; n];
+    let mut rems: Vec<(u128, usize)> = Vec::with_capacity(n);
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = total as u128 * u128::from(w);
+        out[i] = (exact / wsum) as usize;
+        assigned += out[i];
+        rems.push((exact % wsum, i));
+    }
+    // Hand the leftover units to the largest remainders, lowest index
+    // first on ties. The floor sum leaves fewer than `n` units over.
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut left = total - assigned;
+    for &(_, i) in &rems {
+        if left == 0 {
+            break;
+        }
+        out[i] += 1;
+        left -= 1;
+    }
+    if total >= n {
+        // Minimum-one fixup: move units from the fullest bins (ties to
+        // the lowest index) into empty ones.
+        loop {
+            let Some(zi) = out.iter().position(|&v| v == 0) else { break };
+            let donor = (0..n)
+                .max_by_key(|&i| (out[i], std::cmp::Reverse(i)))
+                .expect("non-empty weights");
+            if out[donor] <= 1 {
+                break;
+            }
+            out[donor] -= 1;
+            out[zi] += 1;
+        }
     }
     out
 }
@@ -85,9 +168,19 @@ fn col_band(m: &MatI8, lo: usize, len: usize) -> MatI8 {
     out
 }
 
-/// Run `C = A·B` (requantized with `shift`) across the given devices,
-/// splitting the tile grid of the single-device plan. With one device —
-/// or a single-tile problem — this degrades to a plain [`run_gemm`].
+/// Throughput weight of one device: peak MACs/cycle × integer clock —
+/// the same figure [`crate::config::DeviceClass::throughput_weight`]
+/// reports for its class.
+fn device_weight(sim: &CgraSim) -> u64 {
+    sim.cfg.peak_macs_per_cycle() * sim.cfg.freq_mhz_u64()
+}
+
+/// Run `C = A·B` (requantized with `shift`) across the given devices on
+/// a throughput-weighted 2D shard grid. With one device this degrades
+/// to a plain [`run_gemm`]; identical devices get an even split. Each
+/// shard re-plans its sub-problem against its *own* device config, so
+/// mixed-geometry fleets work out of the box and the merge is
+/// bit-identical to a single-device run.
 pub fn run_gemm_sharded(
     sims: &mut [CgraSim],
     a: &MatI8,
@@ -97,54 +190,97 @@ pub fn run_gemm_sharded(
     ensure!(!sims.is_empty(), "need at least one device");
     ensure!(a.cols == b.rows, "inner dims must agree");
     let (m, k, n) = (a.rows, a.cols, b.cols);
+    ensure!(m > 0 && k > 0 && n > 0, "GEMM dims must be positive");
     let output = OutputMode::Quant { shift };
-    // The reference plan's tile grid decides the shard axis; each shard
-    // then re-plans its own sub-problem through the unchanged planner.
-    let ref_plan = GemmPlan::new(&sims[0].cfg, m, k, n, output)?;
-    let mt = 4 * ref_plan.rows;
-    let nt = 4 * ref_plan.pe_cols;
+    let d_total = sims.len();
+
+    // Grid shape: ceil(sqrt(D)) row bands (2 devices → the classic row
+    // split, 4 → 2×2), capped by the row count; devices dealt to rows
+    // heaviest-first so rows have comparable aggregate throughput.
+    let gi = ((d_total as f64).sqrt().ceil() as usize).clamp(1, d_total.min(m));
+    let mut order: Vec<usize> = (0..d_total).collect();
+    order.sort_by_key(|&d| (std::cmp::Reverse(device_weight(&sims[d])), d));
+    let mut rows_devs: Vec<Vec<usize>> = vec![Vec::new(); gi];
+    for (pos, &d) in order.iter().enumerate() {
+        rows_devs[pos % gi].push(d);
+    }
+    let row_weights: Vec<u64> = rows_devs
+        .iter()
+        .map(|ds| ds.iter().map(|&d| device_weight(&sims[d])).sum())
+        .collect();
+    let row_bands = proportional_split(m, &row_weights);
+
+    // Build the shard list: row bands ∝ row aggregate weight, column
+    // bands within a row ∝ device weight. Zero-width bands drop their
+    // device (more devices offered than the problem can use).
+    let mut shards: Vec<ShardShape> = Vec::new();
+    let mut grid_cols_max = 0usize;
+    let mut grid_rows = 0usize;
+    let mut i0 = 0usize;
+    for (r, devs) in rows_devs.iter().enumerate() {
+        let mi = row_bands[r];
+        if mi == 0 {
+            continue;
+        }
+        let dw: Vec<u64> = devs.iter().map(|&d| device_weight(&sims[d])).collect();
+        let col_bands = proportional_split(n, &dw);
+        let mut j0 = 0usize;
+        let mut cols_here = 0usize;
+        for (q, &d) in devs.iter().enumerate() {
+            let nj = col_bands[q];
+            if nj == 0 {
+                continue;
+            }
+            let freq_mhz = sims[d].cfg.freq_mhz_u64();
+            shards.push(ShardShape { device: d, freq_mhz, i0, mi, j0, nj });
+            j0 += nj;
+            cols_here += 1;
+        }
+        grid_rows += 1;
+        grid_cols_max = grid_cols_max.max(cols_here);
+        i0 += mi;
+    }
+    debug_assert!(!shards.is_empty(), "a positive-size GEMM always yields a shard");
+
+    // Broadcast accounting: ext words (4 packed int8 lanes per word)
+    // each shard fetches for its operands, beyond the one logical copy
+    // a single-device run reads. A band re-read by every shard of its
+    // grid row; B re-read by every grid row.
+    let words = |elems: usize| (elems as u64).div_ceil(4);
+    let a_words_total: u64 = shards.iter().map(|s| words(s.mi * k)).sum();
+    let b_words_total: u64 = shards.iter().map(|s| words(k * s.nj)).sum();
+    let broadcast_a_words = a_words_total.saturating_sub(words(m * k));
+    let broadcast_b_words = b_words_total.saturating_sub(words(k * n));
 
     let mut c = MatI8::zeros(m, n);
-    let mut outcomes = Vec::new();
-    let axis = if sims.len() >= 2 && ref_plan.n_it >= 2 {
-        for (d, (lo, len)) in split_tiles(ref_plan.n_it, mt, m, sims.len()).into_iter().enumerate()
-        {
-            let sub_a = row_band(a, lo, len);
-            let plan = GemmPlan::new(&sims[d].cfg, len, k, n, output)?;
-            let run = run_gemm(&mut sims[d], &sub_a, b, &plan)?;
-            let part = run.c_i8.expect("quant mode");
-            c.data[lo * n..(lo + len) * n].copy_from_slice(&part.data);
-            outcomes.push(run.outcome);
-        }
-        SplitAxis::Rows
-    } else if sims.len() >= 2 && ref_plan.n_jt >= 2 {
-        for (d, (lo, len)) in split_tiles(ref_plan.n_jt, nt, n, sims.len()).into_iter().enumerate()
-        {
-            let sub_b = col_band(b, lo, len);
-            let plan = GemmPlan::new(&sims[d].cfg, m, k, len, output)?;
-            let run = run_gemm(&mut sims[d], a, &sub_b, &plan)?;
-            let part = run.c_i8.expect("quant mode");
-            for r in 0..m {
-                for j in 0..len {
-                    *c.at_mut(r, lo + j) = part.at(r, j);
-                }
+    let mut outcomes = Vec::with_capacity(shards.len());
+    for s in &shards {
+        let sub_a = row_band(a, s.i0, s.mi);
+        let sub_b = col_band(b, s.j0, s.nj);
+        let plan = GemmPlan::new(&sims[s.device].cfg, s.mi, k, s.nj, output)?;
+        let run = run_gemm(&mut sims[s.device], &sub_a, &sub_b, &plan)?;
+        let part = run.c_i8.expect("quant mode");
+        for r in 0..s.mi {
+            for j in 0..s.nj {
+                *c.at_mut(s.i0 + r, s.j0 + j) = part.at(r, j);
             }
-            outcomes.push(run.outcome);
         }
-        SplitAxis::Cols
-    } else {
-        let run = run_gemm(&mut sims[0], a, b, &ref_plan)?;
-        c = run.c_i8.expect("quant mode");
         outcomes.push(run.outcome);
-        SplitAxis::None
-    };
-    Ok(ShardedGemmRun { c, outcomes, axis })
+    }
+    Ok(ShardedGemmRun {
+        c,
+        outcomes,
+        shards,
+        grid: (grid_rows, grid_cols_max),
+        broadcast_a_words,
+        broadcast_b_words,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ArchConfig;
+    use crate::config::{ArchConfig, DeviceClass};
     use crate::gemm::oracle_quant;
     use crate::util::rng::XorShiftRng;
 
@@ -159,53 +295,105 @@ mod tests {
     }
 
     #[test]
-    fn split_tiles_covers_exactly() {
-        assert_eq!(split_tiles(4, 16, 64, 2), vec![(0, 32), (32, 32)]);
-        assert_eq!(split_tiles(3, 16, 48, 2), vec![(0, 32), (32, 16)]);
-        // Ragged final tile: 2 tiles of 16 covering 20 rows.
-        assert_eq!(split_tiles(2, 16, 20, 2), vec![(0, 16), (16, 4)]);
-        // More devices than tiles: only `tiles` shards.
-        assert_eq!(split_tiles(2, 16, 32, 8), vec![(0, 16), (16, 16)]);
+    fn proportional_split_is_exact_and_floor_protected() {
+        assert_eq!(proportional_split(64, &[1, 1]), vec![32, 32]);
+        assert_eq!(proportional_split(20, &[1, 3]), vec![5, 15]);
+        // Largest remainder: 10 over 3:3:3 weights → 4,3,3.
+        assert_eq!(proportional_split(10, &[3, 3, 3]), vec![4, 3, 3]);
+        // A tiny weight still gets one unit while there is enough.
+        assert_eq!(proportional_split(4, &[1000, 1, 1, 1]), vec![1, 1, 1, 1]);
+        // Fewer units than bins: some bins legitimately get zero.
+        let s = proportional_split(2, &[1, 1, 1, 1]);
+        assert_eq!(s.iter().sum::<usize>(), 2);
+        // Exact sum always.
+        assert_eq!(proportional_split(97, &[7, 3, 5]).iter().sum::<usize>(), 97);
     }
 
     #[test]
-    fn column_split_matches_oracle() {
-        // m = 16: a single i-tile forces the j-tile split path.
+    fn two_devices_row_split_matches_oracle() {
         let mut rng = XorShiftRng::new(0xC01);
-        let (m, k, n) = (16, 24, 64);
-        let a = random_mat(&mut rng, m, k);
-        let b = random_mat(&mut rng, k, n);
-        let mut sims = fleet(2);
-        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
-        assert_eq!(run.axis, SplitAxis::Cols);
-        assert_eq!(run.outcomes.len(), 2);
-        assert_eq!(run.c, oracle_quant(&a, &b, 6));
-    }
-
-    #[test]
-    fn single_device_degrades_to_plain_run() {
-        let mut rng = XorShiftRng::new(0xC02);
-        let (m, k, n) = (32, 16, 32);
-        let a = random_mat(&mut rng, m, k);
-        let b = random_mat(&mut rng, k, n);
-        let mut sims = fleet(1);
-        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
-        assert_eq!(run.axis, SplitAxis::None);
-        assert_eq!(run.outcomes.len(), 1);
-        assert_eq!(run.c, oracle_quant(&a, &b, 6));
-    }
-
-    #[test]
-    fn ragged_row_split_matches_oracle() {
-        // 3 i-tiles over 44 rows across 2 devices: uneven bands, last
-        // one ragged.
-        let mut rng = XorShiftRng::new(0xC03);
         let (m, k, n) = (44, 16, 16);
         let a = random_mat(&mut rng, m, k);
         let b = random_mat(&mut rng, k, n);
         let mut sims = fleet(2);
         let run = run_gemm_sharded(&mut sims, &a, &b, 5).unwrap();
-        assert_eq!(run.axis, SplitAxis::Rows);
+        assert_eq!(run.grid, (2, 1), "two equal devices form the classic row split");
+        assert_eq!(run.shards.len(), 2);
+        assert_eq!(run.shards[0].mi, 22);
+        assert_eq!(run.shards[1].mi, 22);
         assert_eq!(run.c, oracle_quant(&a, &b, 5));
+        // Row split: B is the replicated operand, A is not.
+        assert_eq!(run.broadcast_a_words, 0);
+        assert_eq!(run.broadcast_b_words, ((k * n) as u64).div_ceil(4));
+    }
+
+    #[test]
+    fn four_devices_form_a_2d_grid() {
+        let mut rng = XorShiftRng::new(0xC02);
+        let (m, k, n) = (64, 24, 64);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = fleet(4);
+        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
+        assert_eq!(run.grid, (2, 2), "4 devices → 2×2 grid");
+        assert_eq!(run.shards.len(), 4);
+        assert_eq!(run.c, oracle_quant(&a, &b, 6));
+        // 2×2: each operand is replicated once over.
+        assert!(run.broadcast_a_words > 0);
+        assert!(run.broadcast_b_words > 0);
+        assert_eq!(run.broadcast_a_words, ((m * k) as u64).div_ceil(4));
+    }
+
+    #[test]
+    fn single_device_degrades_to_plain_run() {
+        let mut rng = XorShiftRng::new(0xC03);
+        let (m, k, n) = (32, 16, 32);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = fleet(1);
+        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
+        assert_eq!(run.grid, (1, 1));
+        assert_eq!(run.shards.len(), 1);
+        assert_eq!(run.broadcast_ext_words(), 0, "one device replicates nothing");
+        assert_eq!(run.c, oracle_quant(&a, &b, 6));
+    }
+
+    #[test]
+    fn heterogeneous_shards_sized_by_class_throughput() {
+        // One paper device + one 8x4@200: the big device carries ~4× the
+        // weight, so its output block must be decisively larger, and the
+        // merge still matches the oracle bit-for-bit.
+        let mut rng = XorShiftRng::new(0xC04);
+        let (m, k, n) = (60, 16, 32);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = vec![
+            CgraSim::new(ArchConfig::default()),
+            CgraSim::new(DeviceClass::parse("8x4@200").unwrap().arch),
+        ];
+        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
+        assert_eq!(run.c, oracle_quant(&a, &b, 6));
+        let area = |s: &ShardShape| s.mi * s.nj;
+        let small = run.shards.iter().find(|s| s.device == 0).expect("paper shard");
+        let big = run.shards.iter().find(|s| s.device == 1).expect("big shard");
+        assert!(
+            area(big) >= 3 * area(small),
+            "throughput-proportional sizing: {big:?} vs {small:?}"
+        );
+        assert_eq!(big.freq_mhz, 200);
+    }
+
+    #[test]
+    fn more_devices_than_rows_still_merge_exactly() {
+        // m = 2 caps the grid at 2 row bands; 5 devices spread over the
+        // columns instead, some possibly dropped.
+        let mut rng = XorShiftRng::new(0xC05);
+        let (m, k, n) = (2, 16, 40);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = fleet(5);
+        let run = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
+        assert!(run.grid.0 <= 2);
+        assert_eq!(run.c, oracle_quant(&a, &b, 6));
     }
 }

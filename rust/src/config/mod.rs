@@ -116,6 +116,19 @@ impl ArchConfig {
         Ok(())
     }
 
+    /// Peak packed MACs per cycle of this geometry (4 lanes per PE) —
+    /// the throughput weight device classes and shard sizing share.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        (4 * self.topo.rows * self.topo.pe_cols) as u64
+    }
+
+    /// The clock as integer MHz (rounded, at least 1) — the one
+    /// conversion the fleet timeline, device classes and shard weights
+    /// all share, so mixed-clock determinism has a single rounding rule.
+    pub fn freq_mhz_u64(&self) -> u64 {
+        (self.freq_mhz.round().max(1.0)) as u64
+    }
+
     /// One-line summary for logs and bench headers.
     pub fn summary(&self) -> String {
         format!(
@@ -131,6 +144,130 @@ impl ArchConfig {
             self.mem.l1_words * 4 / 1024,
             self.freq_mhz
         )
+    }
+}
+
+/// A named **device class**: one hardware design point of the scalable
+/// pathway — array geometry, clock, and the memory provisioning that
+/// scales with it. Fleets are built from class rosters (big.LITTLE
+/// style), the dispatcher costs work per `(model, class)`, and 2D GEMM
+/// sharding sizes shards by class throughput, so the class is the unit
+/// of heterogeneity everywhere above the simulator.
+///
+/// The canonical spelling is `RxC@MHZ` (e.g. `4x4@100`, the paper's
+/// design point, or `8x4@200`, a tall fast array). PE columns are
+/// capped at 4 by the per-row entry-link bandwidth (the FIG5 finding);
+/// rows and clock scale freely, with L1 and context memory provisioned
+/// proportionally to the row count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceClass {
+    /// Canonical name, e.g. `"4x4@100"`.
+    pub name: String,
+    /// Full architecture of one device of this class (`freq_mhz` kept
+    /// in sync with [`Self::freq_mhz`]).
+    pub arch: ArchConfig,
+    /// Device clock in *integer* MHz — integral so cross-class cycle
+    /// conversion on the fleet's reference timeline is exact (and fleet
+    /// runs stay seed-deterministic).
+    pub freq_mhz: u64,
+}
+
+impl DeviceClass {
+    /// The paper's design point: 4×4 PEs at the 100 MHz edge clock.
+    pub fn paper() -> Self {
+        Self::parse("4x4@100").expect("the paper class always parses")
+    }
+
+    /// Wrap an existing [`ArchConfig`] as a class (the `--devices N`
+    /// homogeneous-roster sugar). The clock is rounded to integer MHz.
+    pub fn from_arch(arch: ArchConfig) -> Self {
+        let freq_mhz = arch.freq_mhz_u64();
+        let name = format!("{}x{}@{}", arch.topo.rows, arch.topo.pe_cols, freq_mhz);
+        Self { name, arch, freq_mhz }
+    }
+
+    /// Parse a class spec `RxC[@MHZ]` (`@MHZ` defaults to the paper's
+    /// 100). Rows scale the memory provisioning: L1 and context memory
+    /// grow with `ceil(rows / 4)`, matching the FIG5 scaling rule that
+    /// each row brings its own MOB pair and per-row program.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        let (geom, freq_mhz) = match spec.split_once('@') {
+            Some((g, f)) => (
+                g,
+                f.parse::<u64>().map_err(|e| {
+                    anyhow::anyhow!("device class '{spec}': bad clock '{f}': {e}")
+                })?,
+            ),
+            None => (spec, 100),
+        };
+        let Some((r, c)) = geom.split_once('x') else {
+            bail!("device class '{spec}': expected RxC[@MHZ], e.g. 4x4@100");
+        };
+        let rows = parse_num::<usize>("rows", r.trim())?;
+        let pe_cols = parse_num::<usize>("pe_cols", c.trim())?;
+        if rows == 0 || pe_cols == 0 {
+            bail!("device class '{spec}': geometry must be positive");
+        }
+        if pe_cols > 4 {
+            bail!(
+                "device class '{spec}': more than 4 PE columns is unsupported — the \
+                 per-row B entry links saturate at one word per cycle (the FIG5 \
+                 finding); scale rows instead, e.g. {rows}x4"
+            );
+        }
+        if freq_mhz == 0 {
+            bail!("device class '{spec}': clock must be positive");
+        }
+        let mut arch = ArchConfig::default();
+        arch.topo.rows = rows;
+        arch.topo.pe_cols = pe_cols;
+        let scale = rows.div_ceil(4).max(1);
+        arch.mem.l1_words *= scale;
+        arch.ctx_bytes *= scale;
+        arch.freq_mhz = freq_mhz as f64;
+        arch.validate()?;
+        Ok(Self { name: format!("{rows}x{pe_cols}@{freq_mhz}"), arch, freq_mhz })
+    }
+
+    /// Parse a fleet roster spec `CLASS[:COUNT],…` — e.g.
+    /// `4x4@100:3,8x4@200:1` is three paper devices plus one tall fast
+    /// device. Counts default to 1; the result has one entry per device.
+    pub fn parse_roster(spec: &str) -> Result<Vec<DeviceClass>> {
+        let mut out = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (cls, count) = match part.rsplit_once(':') {
+                Some((c, n)) => (
+                    c,
+                    n.trim().parse::<usize>().map_err(|e| {
+                        anyhow::anyhow!("fleet spec '{part}': bad count '{n}': {e}")
+                    })?,
+                ),
+                None => (part, 1),
+            };
+            if count == 0 {
+                bail!("fleet spec '{part}': count must be at least 1");
+            }
+            let class = Self::parse(cls)?;
+            for _ in 0..count {
+                out.push(class.clone());
+            }
+        }
+        if out.is_empty() {
+            bail!("empty fleet spec '{spec}'");
+        }
+        Ok(out)
+    }
+
+    /// Peak MAC throughput at the device clock (MACs/cycle × MHz): the
+    /// proportional weight 2D sharding and capacity reasoning use. A
+    /// class with twice the PEs at twice the clock weighs 4×.
+    pub fn throughput_weight(&self) -> u64 {
+        self.arch.peak_macs_per_cycle() * self.freq_mhz
     }
 }
 
@@ -221,5 +358,51 @@ mod tests {
         let s = ArchConfig::default().summary();
         assert!(s.contains("4x4 PEs"));
         assert!(s.contains("torus"));
+    }
+
+    #[test]
+    fn device_class_paper_matches_default_arch() {
+        let c = DeviceClass::paper();
+        assert_eq!(c.name, "4x4@100");
+        assert_eq!(c.freq_mhz, 100);
+        assert_eq!(c.arch, ArchConfig::default());
+        assert_eq!(c.throughput_weight(), 64 * 100);
+    }
+
+    #[test]
+    fn device_class_parse_scales_memory_with_rows() {
+        let big = DeviceClass::parse("8x4@200").unwrap();
+        assert_eq!(big.arch.topo.rows, 8);
+        assert_eq!(big.arch.topo.pe_cols, 4);
+        assert_eq!(big.freq_mhz, 200);
+        assert_eq!(big.arch.freq_mhz, 200.0);
+        let base = ArchConfig::default();
+        assert_eq!(big.arch.mem.l1_words, 2 * base.mem.l1_words);
+        assert_eq!(big.arch.ctx_bytes, 2 * base.ctx_bytes);
+        // 2× PEs at 2× the clock: 4× the throughput weight.
+        assert_eq!(big.throughput_weight(), 4 * DeviceClass::paper().throughput_weight());
+        // The clock defaults to the paper's 100 MHz.
+        assert_eq!(DeviceClass::parse("2x4").unwrap().freq_mhz, 100);
+    }
+
+    #[test]
+    fn device_class_rejects_wide_arrays_and_garbage() {
+        let err = DeviceClass::parse("8x8@200").unwrap_err().to_string();
+        assert!(err.contains("PE columns"), "must explain the FIG5 cap: {err}");
+        assert!(DeviceClass::parse("0x4@100").is_err());
+        assert!(DeviceClass::parse("4x4@0").is_err());
+        assert!(DeviceClass::parse("4@100").is_err());
+        assert!(DeviceClass::parse("4x4@fast").is_err());
+    }
+
+    #[test]
+    fn roster_spec_expands_counts() {
+        let roster = DeviceClass::parse_roster("4x4@100:3,8x4@200").unwrap();
+        assert_eq!(roster.len(), 4);
+        assert!(roster[..3].iter().all(|c| c.name == "4x4@100"));
+        assert_eq!(roster[3].name, "8x4@200");
+        assert!(DeviceClass::parse_roster("").is_err());
+        assert!(DeviceClass::parse_roster("4x4@100:0").is_err());
+        assert!(DeviceClass::parse_roster("4x4@100:x").is_err());
     }
 }

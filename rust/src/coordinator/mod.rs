@@ -11,7 +11,11 @@
 //! single-device engine ([`crate::cluster::DeviceEngine`]): the
 //! coordinator owns the channel plumbing, the engine owns every timing
 //! rule, so one-device serving and [`crate::cluster::FleetSim`] serving
-//! can never drift apart.
+//! can never drift apart. A standalone engine serves on its own device
+//! clock (`ref_mhz == freq_mhz`, the identity conversion), so
+//! coordinator cycle numbers read directly in device cycles; only
+//! fleets with mixed device classes rebase onto a shared reference
+//! clock.
 //!
 //! ## Batching semantics
 //!

@@ -159,7 +159,8 @@ impl GemmPlan {
         if pe_cols > 4 {
             bail!(
                 "stream mapping supports up to 4 PE columns: the per-row entry \
-                 links saturate (wider arrays need more MOB columns — the FIG5 finding)"
+                 links saturate (wider arrays need more MOB columns — the FIG5 \
+                 finding); scale rows instead, e.g. the {rows}x4 device class"
             );
         }
         let mt = 4 * rows;

@@ -8,11 +8,18 @@
 //!                                — run a tiny encoder on the array
 //!   serve [--requests n] [--rate rps] [--batch b]
 //!                                — closed-loop serving demo (coordinator)
-//!   cluster [--devices d] [--requests n] [--rate rps] [--policy p]
-//!           [--queue q] [--arrival a] [--seed s] [--batch b]
+//!   cluster [--fleet SPEC | --devices d] [--requests n] [--rate rps]
+//!           [--policy p] [--queue q] [--arrival a] [--seed s]
+//!           [--batch b] [--no-steal]
 //!                                — fleet-serving simulation (cluster);
+//!                                  --fleet takes a class roster like
+//!                                  `4x4@100:3,8x4@200:1` (mixed array
+//!                                  geometries and clocks; --devices N
+//!                                  is sugar for N homogeneous devices),
 //!                                  --batch > 1 stacks same-model
-//!                                  requests into true batch GEMM jobs
+//!                                  requests into true batch GEMM jobs,
+//!                                  work-stealing is on unless
+//!                                  --no-steal
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
@@ -21,7 +28,7 @@ use cgra_edge::cluster::{
     ArrivalProcess, BatchPolicy, Discipline, FleetConfig, FleetSim, ModelClass, Placement,
     WorkloadGen,
 };
-use cgra_edge::config::ArchConfig;
+use cgra_edge::config::{ArchConfig, DeviceClass};
 use cgra_edge::coordinator::{Coordinator, Request};
 use cgra_edge::energy::EnergyModel;
 use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, MapVariant, OutputMode};
@@ -180,6 +187,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if devices == 0 {
         bail!("--devices must be at least 1");
     }
+    // --fleet takes a class roster (`4x4@100:3,8x4@200:1`); --devices N
+    // stays as sugar for a homogeneous roster of the --cfg architecture.
+    let roster: Vec<DeviceClass> = match args.flag("fleet") {
+        Some(spec) => DeviceClass::parse_roster(spec)?,
+        None => vec![DeviceClass::from_arch(arch.clone()); devices],
+    };
+    let steal = !args.switch("no-steal");
     let n: usize = args.flag_parse("requests", 64usize)?;
     let rate: f64 = args.flag_parse("rate", 400.0f64)?;
     let seed: u64 = args.flag_parse("seed", 1u64)?;
@@ -187,7 +201,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "rr" => Placement::RoundRobin,
         "least" => Placement::LeastLoaded,
         "sjf" => Placement::ShortestExpectedJob,
-        other => bail!("unknown policy '{other}' (rr|least|sjf)"),
+        "affinity" => Placement::ModelAffinity,
+        other => bail!("unknown policy '{other}' (rr|least|sjf|affinity)"),
     };
     let discipline = match args.flag("queue").unwrap_or("fifo") {
         "fifo" => Discipline::Fifo,
@@ -215,25 +230,45 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         bail!("--batch must be at least 1");
     }
     let classes = ModelClass::edge_mix();
-    let mut gen = WorkloadGen::new(arrival, classes.clone(), arch.freq_mhz, seed);
+    let ref_mhz = arch.freq_mhz_u64();
+    let mut gen = WorkloadGen::new(arrival, classes.clone(), ref_mhz as f64, seed);
     let requests = gen.generate(n);
+    let n_devices = roster.len();
+    // Group the roster by class name for the one-line fleet summary.
+    let mut roster_counts: Vec<(String, usize)> = Vec::new();
+    for c in &roster {
+        match roster_counts.iter_mut().find(|(name, _)| *name == c.name) {
+            Some((_, k)) => *k += 1,
+            None => roster_counts.push((c.name.clone(), 1)),
+        }
+    }
+    let roster_str = roster_counts
+        .iter()
+        .map(|(name, k)| format!("{k}x{name}"))
+        .collect::<Vec<_>>()
+        .join(" + ");
     let mut fleet = FleetSim::new(
         FleetConfig {
-            devices,
+            roster,
             policy,
             discipline,
             batch: BatchPolicy::greedy(max_batch),
-            arch: arch.clone(),
+            steal,
+            ref_mhz,
         },
         &classes,
         42,
     );
     let m = fleet.run(requests)?;
     let em = EnergyModel::default();
-    let e = m.fleet_energy(&em, arch.freq_mhz);
-    let ms = |cy: u64| cy as f64 / (arch.freq_mhz * 1e3);
-    println!("fleet    : {} devices × ({})", devices, arch.summary());
-    println!("policy   : {policy:?} / {discipline:?}, arrival {arrival:?}");
+    let freq_ref = ref_mhz as f64;
+    let e = m.fleet_energy(&em, freq_ref);
+    let ms = |cy: u64| cy as f64 / (freq_ref * 1e3);
+    println!("fleet    : {roster_str} ({n_devices} devices, timeline @ {ref_mhz} MHz)");
+    println!(
+        "policy   : {policy:?} / {discipline:?}, arrival {arrival:?}, stealing {}",
+        if steal { "on" } else { "off" }
+    );
     println!(
         "served   : {} completed, {} dropped, {} SLA misses",
         m.completed, m.dropped, m.sla_misses
@@ -247,12 +282,18 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     );
     println!(
         "thruput  : {:.1} req/s over {:.2} ms makespan",
-        m.throughput_rps(arch.freq_mhz),
+        m.throughput_rps(freq_ref),
         ms(m.makespan_cycles)
     );
     let utils: Vec<String> =
-        (0..devices).map(|d| format!("{:.2}", m.utilization(d))).collect();
+        (0..n_devices).map(|d| format!("{:.2}", m.utilization(d))).collect();
     println!("util     : mean {:.3} [{}]", m.mean_utilization(), utils.join(" "));
+    if steal {
+        println!(
+            "stealing : {} steals moved {} requests",
+            m.steals, m.stolen_requests
+        );
+    }
     if max_batch > 1 {
         println!(
             "batching : {} jobs, mean occupancy {:.2}, {} ext words saved by weight reuse",

@@ -111,6 +111,7 @@ fn prop_fleet_with_batch_policy_is_seed_deterministic() {
             let policy = BatchPolicy {
                 max_batch: rng.range(2, 5),
                 max_wait_cycles: [0u64, 20_000][rng.range(0, 2)],
+                latency_aware: rng.range(0, 2) == 1,
             };
             let devices = rng.range(1, 4);
             let classes = vec![ModelClass::tiny()];
@@ -123,7 +124,7 @@ fn prop_fleet_with_batch_policy_is_seed_deterministic() {
                 );
                 let requests = wg.generate(8);
                 let mut fleet = FleetSim::new(
-                    FleetConfig { devices, batch: policy, ..Default::default() },
+                    FleetConfig { batch: policy, ..FleetConfig::paper_fleet(devices) },
                     &classes,
                     42,
                 );

@@ -161,7 +161,7 @@ fn cluster_fleet_deterministic() {
         );
         let requests = wg.generate(8);
         let mut fleet = FleetSim::new(
-            FleetConfig { devices: 3, policy, discipline, ..Default::default() },
+            FleetConfig { policy, discipline, ..FleetConfig::paper_fleet(3) },
             &classes,
             42,
         );
@@ -184,7 +184,7 @@ fn cluster_fleet_deterministic() {
 /// the host oracle), while finishing sooner than one device.
 #[test]
 fn sharded_gemm_bit_identical_to_single_device() {
-    use cgra_edge::cluster::{run_gemm_sharded, SplitAxis};
+    use cgra_edge::cluster::run_gemm_sharded;
     let mut rng = XorShiftRng::new(0x51AD);
     let (m, k, n) = (64, 32, 64);
     let mut a = MatI8::zeros(m, k);
@@ -200,7 +200,7 @@ fn sharded_gemm_bit_identical_to_single_device() {
 
     let mut sims: Vec<CgraSim> = (0..2).map(|_| CgraSim::new(ArchConfig::default())).collect();
     let sharded = run_gemm_sharded(&mut sims, &a, &b, 6).unwrap();
-    assert_eq!(sharded.axis, SplitAxis::Rows);
+    assert_eq!(sharded.grid, (2, 1), "two equal devices split the i axis");
     assert_eq!(sharded.outcomes.len(), 2, "both devices must take a shard");
     assert_eq!(sharded.c, want, "sharded output must be bit-identical to single-device");
     assert!(
