@@ -219,17 +219,19 @@ impl Dispatcher {
     }
 
     /// Index of the next request in `q` per `discipline`, optionally
-    /// restricted to one model class (batch coalescing). `None` when no
-    /// candidate exists.
+    /// restricted to one batch-key group (batch coalescing; `key_of`
+    /// maps a model id to its coalescing key — shape-identical aliases
+    /// share one). `None` when no candidate exists.
     fn select(
         q: &VecDeque<FleetRequest>,
         discipline: Discipline,
-        model: Option<usize>,
+        group: Option<u64>,
+        key_of: impl Fn(usize) -> u64,
     ) -> Option<usize> {
         let key = |r: &FleetRequest| r.deadline_cycle.unwrap_or(u64::MAX);
         let mut best: Option<usize> = None;
         for (i, r) in q.iter().enumerate() {
-            if model.is_some_and(|m| r.model != m) {
+            if group.is_some_and(|g| key_of(r.model) != g) {
                 continue;
             }
             best = Some(match best {
@@ -253,17 +255,19 @@ impl Dispatcher {
         best
     }
 
-    /// Pop the next request per the discipline (restricted to `model`
-    /// when coalescing), appending EDF deadline misses to `dropped`.
+    /// Pop the next request per the discipline (restricted to one
+    /// batch-key group when coalescing), appending EDF deadline misses
+    /// to `dropped`.
     fn pop_filtered(
         &mut self,
         d: usize,
         now: u64,
-        model: Option<usize>,
+        group: Option<u64>,
+        key_of: impl Fn(usize) -> u64,
         dropped: &mut Vec<FleetRequest>,
     ) -> Option<FleetRequest> {
         loop {
-            let idx = Self::select(&self.queues[d], self.discipline, model)?;
+            let idx = Self::select(&self.queues[d], self.discipline, group, &key_of)?;
             let req = self.queues[d].remove(idx).expect("index in range");
             if self.discipline == Discipline::Edf {
                 if let Some(dl) = req.deadline_cycle {
@@ -282,28 +286,33 @@ impl Dispatcher {
     /// to serve, if any.
     pub fn pop(&mut self, d: usize, now: u64) -> (Vec<FleetRequest>, Option<FleetRequest>) {
         let mut dropped = Vec::new();
-        let job = self.pop_filtered(d, now, None, &mut dropped);
+        let job = self.pop_filtered(d, now, None, |m| m as u64, &mut dropped);
         (dropped, job)
     }
 
     /// Pop the discipline head plus up to `max_batch - 1` further queued
-    /// requests of the same model class (in discipline order): the batch
-    /// one device job will serve as a single stacked encoder run.
+    /// requests sharing its **batch key** (in discipline order): the
+    /// batch one device job will serve as a single stacked encoder run.
+    /// `key_of` maps model ids to coalescing keys (the fleet passes
+    /// [`super::fleet::model_batch_key`] values, so shape-identical
+    /// aliases of one deployed model coalesce across ids; the identity
+    /// map `|m| m as u64` restores strict per-model batching).
     pub fn pop_batch(
         &mut self,
         d: usize,
         now: u64,
         max_batch: usize,
+        key_of: impl Fn(usize) -> u64 + Copy,
     ) -> (Vec<FleetRequest>, Vec<FleetRequest>) {
         let mut dropped = Vec::new();
         let mut batch = Vec::new();
-        let Some(head) = self.pop_filtered(d, now, None, &mut dropped) else {
+        let Some(head) = self.pop_filtered(d, now, None, key_of, &mut dropped) else {
             return (dropped, batch);
         };
-        let model = head.model;
+        let group = key_of(head.model);
         batch.push(head);
         while batch.len() < max_batch.max(1) {
-            match self.pop_filtered(d, now, Some(model), &mut dropped) {
+            match self.pop_filtered(d, now, Some(group), key_of, &mut dropped) {
                 Some(r) => batch.push(r),
                 None => break,
             }
@@ -314,11 +323,14 @@ impl Dispatcher {
     /// Preview the batch a pop would form on device `d` (the fleet's
     /// hold-for-fill decision). `None` when the queue is empty. EDF
     /// expiry is ignored here — an expired head resolves at pop time.
-    pub fn peek_batch(&self, d: usize) -> Option<BatchOutlook> {
+    /// The reported `count` spans every queued request sharing the
+    /// head's batch key; `model` is the head's own id.
+    pub fn peek_batch(&self, d: usize, key_of: impl Fn(usize) -> u64) -> Option<BatchOutlook> {
         let q = &self.queues[d];
-        let idx = Self::select(q, self.discipline, None)?;
+        let idx = Self::select(q, self.discipline, None, &key_of)?;
         let model = q[idx].model;
-        let count = q.iter().filter(|r| r.model == model).count();
+        let group = key_of(model);
+        let count = q.iter().filter(|r| key_of(r.model) == group).count();
         Some(BatchOutlook {
             count,
             model,
@@ -429,14 +441,35 @@ mod tests {
         for (id, model) in [(0u64, 0usize), (1, 1), (2, 0), (3, 0), (4, 1)] {
             d.dispatch(req(id, model, 0, None), 0, &[0], |_, _| 1);
         }
-        let (dropped, batch) = d.pop_batch(0, 0, 4);
+        let (dropped, batch) = d.pop_batch(0, 0, 4, |m| m as u64);
         assert!(dropped.is_empty());
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 2, 3], "head's model coalesced in arrival order");
-        let (_, batch2) = d.pop_batch(0, 0, 4);
+        let (_, batch2) = d.pop_batch(0, 0, 4, |m| m as u64);
         let ids2: Vec<u64> = batch2.iter().map(|r| r.id).collect();
         assert_eq!(ids2, vec![1, 4], "other model forms the next batch");
-        assert!(d.pop_batch(0, 0, 4).1.is_empty());
+        assert!(d.pop_batch(0, 0, 4, |m| m as u64).1.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_coalesces_across_aliased_model_ids() {
+        // Models 0 and 2 share a batch key (shape-identical aliases of
+        // one deployed model); model 1 is distinct. Coalescing must
+        // group by key, not id — and the identity key must not.
+        let key = |m: usize| if m == 2 { 0u64 } else { m as u64 };
+        let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
+        for (id, model) in [(0u64, 0usize), (1, 1), (2, 2), (3, 0)] {
+            d.dispatch(req(id, model, 0, None), 0, &[0], |_, _| 1);
+        }
+        let peek = d.peek_batch(0, key).unwrap();
+        assert_eq!(peek.count, 3, "peek must count the whole key group");
+        assert_eq!(peek.model, 0, "the head keeps its own id");
+        let (_, batch) = d.pop_batch(0, 0, 4, key);
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 3], "aliased ids coalesce in arrival order");
+        let (_, rest) = d.pop_batch(0, 0, 4, key);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].model, 1);
     }
 
     #[test]
@@ -445,11 +478,11 @@ mod tests {
         for id in 0..5 {
             d.dispatch(req(id, 0, 0, None), 0, &[0], |_, _| 1);
         }
-        let (_, batch) = d.pop_batch(0, 0, 2);
+        let (_, batch) = d.pop_batch(0, 0, 2, |m| m as u64);
         assert_eq!(batch.len(), 2);
         assert_eq!(d.queued(0), 3);
         // max_batch 0 is clamped to 1 (no batching), never an empty pop.
-        let (_, batch) = d.pop_batch(0, 0, 0);
+        let (_, batch) = d.pop_batch(0, 0, 0, |m| m as u64);
         assert_eq!(batch.len(), 1);
     }
 
@@ -459,7 +492,7 @@ mod tests {
         d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_, _| 1);
         d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_, _| 1); // expired at now=100
         d.dispatch(req(2, 0, 0, Some(400)), 0, &[0], |_, _| 1);
-        let (dropped, batch) = d.pop_batch(0, 100, 3);
+        let (dropped, batch) = d.pop_batch(0, 100, 3, |m| m as u64);
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].id, 1);
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
@@ -469,14 +502,14 @@ mod tests {
     #[test]
     fn peek_batch_reports_head_model_count_and_arrival() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
-        assert_eq!(d.peek_batch(0), None);
+        assert_eq!(d.peek_batch(0, |m| m as u64), None);
         let mut r0 = req(0, 0, 0, Some(900));
         r0.arrival_cycle = 7;
         d.dispatch(r0, 7, &[0], |_, _| 1);
         d.dispatch(req(1, 1, 0, None), 8, &[0], |_, _| 1);
         d.dispatch(req(2, 0, 0, None), 9, &[0], |_, _| 1);
         assert_eq!(
-            d.peek_batch(0),
+            d.peek_batch(0, |m| m as u64),
             Some(BatchOutlook { count: 2, model: 0, head_arrival: 7, head_deadline: Some(900) }),
             "two model-0 requests behind the head"
         );

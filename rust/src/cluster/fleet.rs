@@ -35,11 +35,17 @@
 //! busy past the current cycle — the classic complement to sticky or
 //! mis-estimated placement. Steals take a whole coalescible batch via
 //! the dispatcher's normal pop path, so they respect the
-//! [`BatchPolicy`] grouping and EDF expiry rules; thief order (lowest
-//! idle index) and victim order (deepest queue, ties to the lowest
-//! index) are fixed, keeping stolen schedules seed-deterministic.
-//! Steal counts land in [`FleetMetrics`] and per-device
-//! [`DeviceMetrics`].
+//! [`BatchPolicy`] grouping and EDF expiry rules. Two tuning rules
+//! (both deterministic): the **fastest** idle class steals first
+//! (throughput weight descending, ties to the lowest index) so stolen
+//! work lands on the silicon that clears it soonest, and a queue
+//! shallower than `FleetConfig::steal_min_depth` is **protected** when
+//! its head shares the owner's resident model — the owner would serve
+//! that last request with zero reconfiguration (context reuse), so
+//! stealing it would cost a full configuration charge elsewhere.
+//! Victim order stays deepest-queue-first, ties to the lowest index,
+//! keeping stolen schedules seed-deterministic. Steal counts land in
+//! [`FleetMetrics`] and per-device [`DeviceMetrics`].
 //!
 //! ## Context-reuse accounting
 //!
@@ -57,7 +63,10 @@
 //! ## True batch GEMM
 //!
 //! With a [`BatchPolicy`] (`max_batch > 1`), a freed device coalesces
-//! same-model queued requests at pop time and executes them as **one**
+//! queued requests sharing a **batch key** ([`model_batch_key`]: shape
+//! + calibration + quantized-weight signature, so shape-identical
+//! aliases of one deployed model stack across catalog ids) at pop time
+//! and executes them as **one**
 //! stacked encoder job ([`crate::xformer::run_encoder_batch`]): every
 //! projection/FFN GEMM runs as a single `(B·seq) × d_model` kernel with
 //! the weights streamed once, while attention stays per-sequence. All
@@ -151,15 +160,21 @@ impl DeviceEngine {
     /// timeline, merge event counters, advance the serving clock.
     /// Returns the charged service cycles (reference clock). Keeping
     /// this in one place guarantees single-request and batched serving
-    /// can never drift apart on timing or energy.
-    fn charge_run(
+    /// can never drift apart on timing or energy. `pub(crate)` so the
+    /// decode subsystem's prefill/tick jobs share the exact same rules.
+    pub(crate) fn charge_run(
         &mut self,
         model_key: usize,
         start: u64,
         report: &CgraEncoderReport,
         requests: u64,
     ) -> u64 {
-        let reuse = self.served > 0 && start == self.free_at && self.last_model == Some(model_key);
+        // "Has this engine run before" is exactly `last_model.is_some()`
+        // (this method is its only setter), so the gate must not also
+        // require `served > 0`: decode ticks legitimately run many
+        // back-to-back jobs before any *request* completes, and they
+        // deserve the same discount an encoder run would get.
+        let reuse = start == self.free_at && self.last_model == Some(model_key);
         let charged_dev = report.cycles + if reuse { 0 } else { report.config_cycles };
         let charged = self.ref_cycles(charged_dev);
         // Keep event accounting consistent with the timing model: a
@@ -238,6 +253,78 @@ pub fn analytic_encoder_ref_cycles(
     to_ref_cycles(analytic_encoder_cycles(&class.arch, cfg), class.freq_mhz, ref_mhz)
 }
 
+/// FNV-1a accumulator for [`model_batch_key`].
+struct Fnv(u64);
+
+impl Fnv {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(Self::PRIME);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn f32s(&mut self, vs: &[f32]) {
+        for &v in vs {
+            for b in v.to_bits().to_le_bytes() {
+                self.byte(b);
+            }
+        }
+    }
+
+    fn i8s(&mut self, vs: &[i8]) {
+        for &v in vs {
+            self.byte(v as u8);
+        }
+    }
+}
+
+/// A 64-bit identity signature of everything the statically-calibrated
+/// batched serving path reads: the model shape, every per-site
+/// quantization parameter (scales and requant shifts), the
+/// pre-quantized weight matrices, and the float LayerNorm parameters.
+///
+/// This is the **batch key**: two catalog entries with equal keys are
+/// byte-equal as far as [`crate::xformer::run_encoder_batch`] is
+/// concerned, so their requests execute bit-identically whichever id
+/// heads the batch — the dispatcher therefore coalesces on the key
+/// rather than the model id. Shape-identical *aliases* (the same
+/// deployed weights registered under several catalog entries with
+/// different SLAs, priorities or traffic shares) stack together;
+/// models whose weights or calibration differ in a single bit get
+/// different keys with overwhelming probability, and the bit-identity
+/// property test covers the equal-key direction exactly.
+pub fn model_batch_key(model: &EncoderModel, quant: &EncoderQuant) -> u64 {
+    let cfg = &model.cfg;
+    let mut h = Fnv::new();
+    for dim in [cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.n_layers, cfg.seq] {
+        h.u64(dim as u64);
+    }
+    for (layer, lq) in model.params.layers.iter().zip(&quant.layers) {
+        for site in [lq.q, lq.k, lq.v, lq.scores, lq.attn_v, lq.o, lq.ff1, lq.ff2] {
+            h.f32s(&[site.x_scale, site.w_scale]);
+            h.byte(site.shift);
+        }
+        for w in [&lq.wq_q, &lq.wk_q, &lq.wv_q, &lq.wo_q, &lq.w1_q, &lq.w2_q] {
+            h.i8s(&w.data);
+        }
+        h.f32s(&layer.ln1_gamma);
+        h.f32s(&layer.ln1_beta);
+        h.f32s(&layer.ln2_gamma);
+        h.f32s(&layer.ln2_beta);
+    }
+    h.0
+}
+
 /// Fleet-level configuration.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -251,6 +338,12 @@ pub struct FleetConfig {
     /// Idle devices pull coalescible batches from the deepest
     /// backlogged queue instead of waiting for new arrivals.
     pub steal: bool,
+    /// Context-reuse protection for stealing: a queue shallower than
+    /// this is only a victim when its head's batch key differs from
+    /// the model resident on the owner — a thief must not grab the
+    /// last queued request a nearly-free owner would serve with zero
+    /// reconfiguration. Depth ≥ the threshold is always stealable.
+    pub steal_min_depth: usize,
     /// Reference clock of the fleet timeline in integer MHz: arrival
     /// stamps and every metric are cycles of this clock.
     pub ref_mhz: u64,
@@ -264,6 +357,7 @@ impl Default for FleetConfig {
             discipline: Discipline::Fifo,
             batch: BatchPolicy::default(),
             steal: true,
+            steal_min_depth: 2,
             ref_mhz: 100,
         }
     }
@@ -297,6 +391,12 @@ pub struct FleetSim {
     /// `models`); shared by every device so batching — and placement on
     /// any class — is output-neutral.
     quants: Vec<EncoderQuant>,
+    /// Per-model batch keys ([`model_batch_key`]): the coalescing
+    /// identity. Shape-identical aliases share a key and stack.
+    batch_keys: Vec<u64>,
+    /// Lowest model index sharing each model's batch key — the
+    /// execution/cost-cache identity for aliased entries.
+    canonical: Vec<usize>,
     /// Expected service cycles (reference clock) per `(model class,
     /// device class)` — the shortest-expected-job placement estimate.
     /// Pre-seeded from the analytic cycle model of *each class's
@@ -330,7 +430,9 @@ fn est_cost(
 /// Serve one already-popped batch on `engine` at `now`: execute,
 /// update the `(model, class)` cost cache on first observation, and
 /// record completion metrics. Shared by the normal serve path and the
-/// steal path so the two can never drift on accounting.
+/// steal path so the two can never drift on accounting. The batch may
+/// mix model ids as long as they share a batch key; execution and
+/// accounting use the canonical (lowest aliased) id.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch_on(
     engine: &mut DeviceEngine,
@@ -338,6 +440,7 @@ fn serve_batch_on(
     n_classes: usize,
     models: &[EncoderModel],
     quants: &[EncoderQuant],
+    canonical: &[usize],
     cost_cache: &mut BTreeMap<(usize, usize), u64>,
     observed: &mut [bool],
     metrics: &mut FleetMetrics,
@@ -345,7 +448,11 @@ fn serve_batch_on(
     now: u64,
 ) -> Result<()> {
     let Some(first) = batch.first() else { return Ok(()) };
-    let model = first.model;
+    let model = canonical[first.model];
+    debug_assert!(
+        batch.iter().all(|r| canonical[r.model] == model),
+        "a coalesced batch must share one batch key"
+    );
     let inputs: Vec<&MatF32> = batch.iter().map(|r| &r.input).collect();
     let (_outputs, charged, report) =
         engine.serve_encoder_batch(model, &models[model], &quants[model], &inputs, now)?;
@@ -379,33 +486,42 @@ impl FleetSim {
     /// `(model, device class)` pair, so the first wave of requests is
     /// placed class-aware before anything completes.
     pub fn new(cfg: FleetConfig, classes: &[ModelClass], model_seed: u64) -> Self {
+        let seeds: Vec<u64> = (0..classes.len()).map(|i| model_seed + i as u64).collect();
+        Self::new_with_model_seeds(cfg, classes, &seeds)
+    }
+
+    /// [`Self::new`] with an explicit weight seed per catalog entry.
+    /// Entries sharing a seed (and shape) are **aliases** — identical
+    /// weights and calibration, therefore an identical batch key — so
+    /// their requests coalesce across model ids (distinct SLA or
+    /// traffic-share rows over one deployed model).
+    pub fn new_with_model_seeds(
+        cfg: FleetConfig,
+        classes: &[ModelClass],
+        model_seeds: &[u64],
+    ) -> Self {
         assert!(!cfg.roster.is_empty(), "fleet needs at least one device");
         assert!(!classes.is_empty(), "fleet needs at least one model class");
+        assert_eq!(model_seeds.len(), classes.len(), "one weight seed per model class");
         assert!(cfg.ref_mhz > 0, "reference clock must be positive");
-        let mut device_classes: Vec<DeviceClass> = Vec::new();
-        let mut device_class = Vec::with_capacity(cfg.roster.len());
-        for c in &cfg.roster {
-            let id = match device_classes.iter().position(|x| x == c) {
-                Some(i) => i,
-                None => {
-                    device_classes.push(c.clone());
-                    device_classes.len() - 1
-                }
-            };
-            device_class.push(id);
-        }
+        let (device_classes, device_class) = DeviceClass::dedup_roster(&cfg.roster);
         let devices: Vec<DeviceEngine> =
             cfg.roster.iter().map(|c| DeviceEngine::for_class(c, cfg.ref_mhz)).collect();
         let models: Vec<EncoderModel> = classes
             .iter()
-            .enumerate()
-            .map(|(i, c)| EncoderModel::new(c.cfg, model_seed + i as u64))
+            .zip(model_seeds)
+            .map(|(c, &s)| EncoderModel::new(c.cfg, s))
             .collect();
-        let quants = models
+        let quants: Vec<EncoderQuant> = models
             .iter()
-            .enumerate()
-            .map(|(i, m)| {
-                EncoderQuant::calibrate_seeded(m, model_seed.wrapping_add(0xCA11B + i as u64))
+            .zip(model_seeds)
+            .map(|(m, &s)| EncoderQuant::calibrate_seeded(m, s.wrapping_add(0xCA11B)))
+            .collect();
+        let batch_keys: Vec<u64> =
+            models.iter().zip(&quants).map(|(m, q)| model_batch_key(m, q)).collect();
+        let canonical: Vec<usize> = (0..models.len())
+            .map(|i| {
+                batch_keys.iter().position(|&k| k == batch_keys[i]).expect("own key present")
             })
             .collect();
         let mut cost_cache = BTreeMap::new();
@@ -424,10 +540,18 @@ impl FleetSim {
             dispatcher,
             models,
             quants,
+            batch_keys,
+            canonical,
             cost_cache,
             observed,
             ran: false,
         }
+    }
+
+    /// The batch key of a model class ([`model_batch_key`]): equal keys
+    /// coalesce across model ids.
+    pub fn batch_key(&self, model: usize) -> u64 {
+        self.batch_keys[model]
     }
 
     /// The served model catalog (index-aligned with request `model`).
@@ -447,9 +571,10 @@ impl FleetSim {
 
     /// The dispatcher's current expected service cycles (reference
     /// clock) for a model class on device `d` (the analytic pre-seed
-    /// until that model first completes on `d`'s class).
+    /// until that model first completes on `d`'s class; aliases share
+    /// their canonical entry's observations).
     pub fn expected_cost(&self, model: usize, d: usize) -> u64 {
-        est_cost(&self.cost_cache, &self.models, model, self.device_class[d])
+        est_cost(&self.cost_cache, &self.models, self.canonical[model], self.device_class[d])
     }
 
     /// Run the fleet over a request stream to completion and return the
@@ -468,6 +593,8 @@ impl FleetSim {
             dispatcher,
             models,
             quants,
+            batch_keys,
+            canonical,
             cost_cache,
             observed,
             ran: _,
@@ -479,16 +606,18 @@ impl FleetSim {
         let mut metrics = FleetMetrics::default();
         let mut steal_count = vec![0u64; devices.len()];
         let mut now: u64 = 0;
+        let key_of = |m: usize| batch_keys[m];
         loop {
             // 1. Admit every request that has arrived by `now`. The
             // placement decision sees the device states at admission
             // time, including earlier same-cycle placements, and costs
-            // each candidate device by its own class.
+            // each candidate device by its own class (aliased model
+            // ids share the canonical entry's cost).
             while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
                 let r = arrivals.next().expect("peeked");
                 let free: Vec<u64> = devices.iter().map(|d| d.free_at).collect();
                 dispatcher.dispatch(r, now, &free, |m, d| {
-                    est_cost(cost_cache, models, m, device_class[d])
+                    est_cost(cost_cache, models, canonical[m], device_class[d])
                 });
             }
             // 2. Serve: every idle device takes work per its queue
@@ -499,13 +628,14 @@ impl FleetSim {
             let mut hold_until: Vec<Option<u64>> = vec![None; devices.len()];
             for d in 0..devices.len() {
                 while devices[d].free_at <= now {
-                    let Some(outlook) = dispatcher.peek_batch(d) else { break };
+                    let Some(outlook) = dispatcher.peek_batch(d, key_of) else { break };
                     if policy.cap() > 1
                         && outlook.count < policy.cap()
                         && arrivals.peek().is_some()
                     {
-                        let est = est_cost(cost_cache, models, outlook.model, device_class[d])
-                            .saturating_mul(outlook.count as u64);
+                        let est =
+                            est_cost(cost_cache, models, canonical[outlook.model], device_class[d])
+                                .saturating_mul(outlook.count as u64);
                         let hold =
                             policy.hold_until(outlook.head_arrival, outlook.head_deadline, est);
                         if now < hold {
@@ -515,7 +645,7 @@ impl FleetSim {
                             break;
                         }
                     }
-                    let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap());
+                    let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap(), key_of);
                     metrics.dropped += dropped.len() as u64;
                     if batch.is_empty() {
                         continue;
@@ -526,6 +656,7 @@ impl FleetSim {
                         n_classes,
                         models,
                         quants,
+                        canonical,
                         cost_cache,
                         observed,
                         &mut metrics,
@@ -536,22 +667,39 @@ impl FleetSim {
             }
             // 2b. Steal: each device now idle with an empty queue (a
             // holding device has a queue and is skipped) pulls one
-            // coalescible batch from the deepest queue whose owner is
+            // coalescible batch from a backlogged queue whose owner is
             // busy past `now` — work that owner cannot start now, so a
-            // steal strictly helps. Thief order is lowest index; victim
-            // is the deepest queue, ties to the lowest index. Each
-            // iteration makes the thief busy or shrinks a queue, so the
+            // steal strictly helps. Tuning (the ROADMAP items): the
+            // *fastest* idle class steals first (throughput weight
+            // descending, ties to the lowest index), and a queue
+            // shallower than `steal_min_depth` is protected when its
+            // head shares the owner's resident model — the owner would
+            // serve that last request with zero reconfiguration, so
+            // grabbing it would trade a context reuse for a full
+            // configuration charge elsewhere. Victim order stays
+            // deepest-queue-first, ties to the lowest index. Each
+            // iteration makes a thief busy or shrinks a queue, so the
             // loop terminates.
             if cfg.steal {
                 loop {
                     let thief = (0..devices.len())
-                        .find(|&d| devices[d].free_at <= now && dispatcher.queued(d) == 0);
+                        .filter(|&d| devices[d].free_at <= now && dispatcher.queued(d) == 0)
+                        .min_by_key(|&d| {
+                            let weight = device_classes[device_class[d]].throughput_weight();
+                            (std::cmp::Reverse(weight), d)
+                        });
                     let Some(t) = thief else { break };
                     let victim = (0..devices.len())
                         .filter(|&d| devices[d].free_at > now && dispatcher.queued(d) > 0)
+                        .filter(|&d| {
+                            dispatcher.queued(d) >= cfg.steal_min_depth.max(1)
+                                || dispatcher.peek_batch(d, key_of).is_some_and(|o| {
+                                    devices[d].last_model != Some(canonical[o.model])
+                                })
+                        })
                         .max_by_key(|&d| (dispatcher.queued(d), std::cmp::Reverse(d)));
                     let Some(v) = victim else { break };
-                    let (dropped, batch) = dispatcher.pop_batch(v, now, policy.cap());
+                    let (dropped, batch) = dispatcher.pop_batch(v, now, policy.cap(), key_of);
                     metrics.dropped += dropped.len() as u64;
                     if batch.is_empty() {
                         continue; // every candidate expired (EDF): queue shrank, retry
@@ -565,6 +713,7 @@ impl FleetSim {
                         n_classes,
                         models,
                         quants,
+                        canonical,
                         cost_cache,
                         observed,
                         &mut metrics,
@@ -603,10 +752,17 @@ impl FleetSim {
         metrics.per_device = devices
             .iter()
             .zip(&steal_count)
-            .map(|(d, &steals)| DeviceMetrics {
-                served: d.served,
-                busy_cycles: d.busy_cycles,
-                steals,
+            .enumerate()
+            .map(|(i, (d, &steals))| {
+                let class = &device_classes[device_class[i]];
+                DeviceMetrics {
+                    served: d.served,
+                    busy_cycles: d.busy_cycles,
+                    steals,
+                    stats: d.stats.clone(),
+                    leakage_scale: class.leakage_scale(),
+                    dynamic_scale: class.dynamic_scale(),
+                }
             })
             .collect();
         for d in devices.iter() {

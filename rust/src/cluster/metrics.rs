@@ -74,7 +74,7 @@ impl LatencyHistogram {
 }
 
 /// Per-device accounting inside a fleet run.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DeviceMetrics {
     /// Requests this device completed.
     pub served: u64,
@@ -84,10 +84,34 @@ pub struct DeviceMetrics {
     /// Steal operations this device executed as the *thief* (batches it
     /// pulled from a backlogged neighbour's queue).
     pub steals: u64,
+    /// This device's own simulator event counters (the fleet-level
+    /// `stats` is their merge) — kept per device so energy can apply
+    /// per-class voltage scaling to the dynamic part.
+    pub stats: Stats,
+    /// Leakage-power multiplier of the device's class
+    /// ([`crate::config::DeviceClass::leakage_scale`]; 1.0 = the
+    /// paper's 4×4@100 design point).
+    pub leakage_scale: f64,
+    /// Dynamic-energy (V²) multiplier of the device's class
+    /// ([`crate::config::DeviceClass::dynamic_scale`]).
+    pub dynamic_scale: f64,
+}
+
+impl Default for DeviceMetrics {
+    fn default() -> Self {
+        Self {
+            served: 0,
+            busy_cycles: 0,
+            steals: 0,
+            stats: Stats::default(),
+            leakage_scale: 1.0,
+            dynamic_scale: 1.0,
+        }
+    }
 }
 
 /// Aggregated metrics for one fleet run.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetMetrics {
     /// Requests served to completion.
     pub completed: u64,
@@ -156,16 +180,38 @@ impl FleetMetrics {
             / self.per_device.len() as f64
     }
 
-    /// Fleet energy: dynamic energy from the merged event counters, plus
-    /// leakage for *every* device over the *whole* makespan — an idle
-    /// device still leaks, which is exactly the scale-out cost the
-    /// ultra-low-power story cares about.
+    /// Fleet energy, **per device class**: each device's dynamic energy
+    /// is evaluated from its own event counters with its class's V²
+    /// scaling, and each device leaks at its class's area×V rate over
+    /// the *whole* makespan — an idle device still leaks, which is
+    /// exactly the scale-out cost the ultra-low-power story cares
+    /// about. On a homogeneous paper fleet every scale is 1.0 and the
+    /// result is identical to the old flat-leakage accounting; on a
+    /// big.LITTLE fleet the fast class's µJ premium finally shows up.
     pub fn fleet_energy(&self, em: &EnergyModel, freq_mhz: f64) -> EnergyBreakdown {
-        let mut e = em.evaluate(&self.stats, freq_mhz);
-        let seconds = self.makespan_cycles as f64 / (freq_mhz * 1e6);
-        e.leakage_pj = em.params.leakage_uw * seconds * self.per_device.len() as f64 * 1e6;
-        e
+        per_device_energy(&self.per_device, self.makespan_cycles, em, freq_mhz)
     }
+}
+
+/// Shared fleet-energy evaluation over per-device metrics (used by both
+/// the encoder fleet's [`FleetMetrics`] and the decode fleet's
+/// metrics): Σ over devices of class-scaled dynamic energy plus
+/// class-scaled leakage × makespan.
+pub fn per_device_energy(
+    per_device: &[DeviceMetrics],
+    makespan_cycles: u64,
+    em: &EnergyModel,
+    freq_mhz: f64,
+) -> EnergyBreakdown {
+    let seconds = makespan_cycles as f64 / (freq_mhz * 1e6);
+    let mut total = EnergyBreakdown::default();
+    for d in per_device {
+        let scaled = EnergyModel::new(em.params.scaled(d.dynamic_scale, 1.0));
+        let mut e = scaled.evaluate(&d.stats, freq_mhz);
+        e.leakage_pj = em.params.leakage_uw * d.leakage_scale * seconds * 1e6;
+        total.accumulate(&e);
+    }
+    total
 }
 
 #[cfg(test)]
@@ -209,8 +255,8 @@ mod tests {
             completed: 10,
             makespan_cycles: 1_000_000,
             per_device: vec![
-                DeviceMetrics { served: 6, busy_cycles: 900_000, steals: 0 },
-                DeviceMetrics { served: 4, busy_cycles: 300_000, steals: 0 },
+                DeviceMetrics { served: 6, busy_cycles: 900_000, ..Default::default() },
+                DeviceMetrics { served: 4, busy_cycles: 300_000, ..Default::default() },
             ],
             ..Default::default()
         };
@@ -230,6 +276,34 @@ mod tests {
         }
         assert_eq!(m.batches(), 4);
         assert!((m.mean_batch_occupancy() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_energy_applies_per_class_scales() {
+        // One paper device + one 8x4@200-style device: leakage must be
+        // (1.0 + 2.8)× the single-device figure, and the fast device's
+        // dynamic energy must carry the V² factor.
+        let em = EnergyModel::default();
+        let stats = Stats { pe_macp: 1_000, ..Default::default() };
+        let m = FleetMetrics {
+            makespan_cycles: 1_000_000,
+            per_device: vec![
+                DeviceMetrics { stats: stats.clone(), ..Default::default() },
+                DeviceMetrics {
+                    stats: stats.clone(),
+                    leakage_scale: 2.8,
+                    dynamic_scale: 1.96,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        let e = m.fleet_energy(&em, 100.0);
+        let seconds = 1_000_000.0 / (100.0 * 1e6);
+        let per_dev_leak = em.params.leakage_uw * seconds * 1e6;
+        assert!((e.leakage_pj - per_dev_leak * (1.0 + 2.8)).abs() < 1e-6);
+        let base_compute = 1_000.0 * em.params.pe_macp_pj;
+        assert!((e.compute_pj - base_compute * (1.0 + 1.96)).abs() < 1e-6);
     }
 
     #[test]

@@ -60,9 +60,9 @@ pub mod workload;
 pub use crate::config::DeviceClass;
 pub use dispatch::{BatchOutlook, BatchPolicy, Discipline, Dispatcher, Placement};
 pub use fleet::{
-    analytic_encoder_cycles, analytic_encoder_ref_cycles, to_ref_cycles, DeviceEngine,
-    FleetConfig, FleetSim,
+    analytic_encoder_cycles, analytic_encoder_ref_cycles, model_batch_key, to_ref_cycles,
+    DeviceEngine, FleetConfig, FleetSim,
 };
-pub use metrics::{DeviceMetrics, FleetMetrics, LatencyHistogram};
+pub use metrics::{per_device_energy, DeviceMetrics, FleetMetrics, LatencyHistogram};
 pub use parallel::{run_gemm_sharded, ShardShape, ShardedGemmRun};
-pub use workload::{ArrivalProcess, FleetRequest, ModelClass, WorkloadGen};
+pub use workload::{ArrivalProcess, FleetRequest, GenProfile, GenRequest, ModelClass, WorkloadGen};

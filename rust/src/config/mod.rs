@@ -269,6 +269,58 @@ impl DeviceClass {
     pub fn throughput_weight(&self) -> u64 {
         self.arch.peak_macs_per_cycle() * self.freq_mhz
     }
+
+    /// Deduplicate a roster into a class table plus a per-device index
+    /// into it — the one definition of class identity (full structural
+    /// equality) every fleet simulator shares, so per-class cost caches
+    /// and KV budgets can never disagree on what "the same class" means.
+    pub fn dedup_roster(roster: &[DeviceClass]) -> (Vec<DeviceClass>, Vec<usize>) {
+        let mut classes: Vec<DeviceClass> = Vec::new();
+        let mut index = Vec::with_capacity(roster.len());
+        for c in roster {
+            let id = match classes.iter().position(|x| x == c) {
+                Some(i) => i,
+                None => {
+                    classes.push(c.clone());
+                    classes.len() - 1
+                }
+            };
+            index.push(id);
+        }
+        (classes, index)
+    }
+
+    /// Normalized supply voltage implied by the class clock: a linear
+    /// DVFS model around the paper's 100 MHz / nominal-V design point
+    /// (`V = 0.6 + 0.4·f/100`, floored at the 0.7 near-threshold
+    /// limit). The paper class is exactly 1.0, a 200 MHz class runs at
+    /// 1.4× nominal — the voltage cost of big silicon the energy model
+    /// charges per device class.
+    pub fn voltage_scale(&self) -> f64 {
+        (0.6 + 0.4 * self.freq_mhz as f64 / 100.0).max(0.7)
+    }
+
+    /// Active-area scale versus the paper's 4×4 array (PE count ratio).
+    pub fn area_scale(&self) -> f64 {
+        (self.arch.topo.rows * self.arch.topo.pe_cols) as f64 / 16.0
+    }
+
+    /// Leakage-power multiplier for this class: leakage grows with
+    /// active area and (sub-threshold, roughly linearly) with supply
+    /// voltage — `area × V`. The paper class is 1.0, so homogeneous
+    /// paper fleets charge exactly the flat per-device figure they
+    /// always did.
+    pub fn leakage_scale(&self) -> f64 {
+        self.area_scale() * self.voltage_scale()
+    }
+
+    /// Dynamic-energy multiplier for this class: switching energy goes
+    /// with `V²` (CV²f — the per-event counts already carry the f and
+    /// the area). The paper class is 1.0.
+    pub fn dynamic_scale(&self) -> f64 {
+        let v = self.voltage_scale();
+        v * v
+    }
 }
 
 /// Parse `key = value` lines; `#` starts a comment; blank lines ignored.
@@ -393,6 +445,23 @@ mod tests {
         assert!(DeviceClass::parse("4x4@0").is_err());
         assert!(DeviceClass::parse("4@100").is_err());
         assert!(DeviceClass::parse("4x4@fast").is_err());
+    }
+
+    #[test]
+    fn energy_scales_are_anchored_at_the_paper_class() {
+        let paper = DeviceClass::paper();
+        assert_eq!(paper.voltage_scale(), 1.0);
+        assert_eq!(paper.area_scale(), 1.0);
+        assert_eq!(paper.leakage_scale(), 1.0);
+        assert_eq!(paper.dynamic_scale(), 1.0);
+        let big = DeviceClass::parse("8x4@200").unwrap();
+        assert!((big.voltage_scale() - 1.4).abs() < 1e-12);
+        assert!((big.area_scale() - 2.0).abs() < 1e-12);
+        assert!((big.leakage_scale() - 2.8).abs() < 1e-12);
+        assert!((big.dynamic_scale() - 1.96).abs() < 1e-12);
+        // The near-threshold floor kicks in for very slow classes.
+        let slow = DeviceClass::parse("4x4@10").unwrap();
+        assert!((slow.voltage_scale() - 0.7).abs() < 1e-12);
     }
 
     #[test]

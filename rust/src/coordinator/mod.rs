@@ -44,11 +44,12 @@
 //! The build environment vendors no tokio; the runtime is `std::thread`
 //! + `mpsc`, which an edge deployment would arguably prefer anyway.
 
-use crate::cluster::{DeviceEngine, LatencyHistogram};
-use crate::config::ArchConfig;
+use crate::cluster::{DeviceEngine, GenRequest, LatencyHistogram};
+use crate::config::{ArchConfig, DeviceClass};
+use crate::decode::{DecodeMetrics, DecodeSchedule, DeviceDecoder, GenCompletion, KvConfig};
 use crate::sim::Stats;
 use crate::util::mat::MatF32;
-use crate::xformer::{EncoderModel, EncoderQuant};
+use crate::xformer::{DecoderModel, EncoderModel, EncoderQuant, XformerConfig};
 use anyhow::Result;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -233,6 +234,131 @@ impl Coordinator {
     }
 }
 
+/// The generation-serving coordinator: one worker thread owning a
+/// [`DeviceDecoder`] (engine + paged KV + continuous-batching
+/// lifecycle), fed [`GenRequest`]s over a channel and answering with
+/// [`GenCompletion`]s as sequences finish.
+///
+/// Timing follows simulated arrival stamps, with the same live-channel
+/// caveat as the encoder coordinator's batching: the worker can only
+/// interleave requests it has already drained, so *which tick* an
+/// arrival joins — and therefore timing attribution — can vary with
+/// channel races; **outputs never do** (the decode paths are
+/// bit-identical whichever batch a row rides in). For strictly
+/// reproducible generation timing studies use
+/// [`crate::decode::DecodeFleetSim`], whose scheduling is a pure
+/// function of the workload.
+pub struct DecodeCoordinator {
+    tx: Option<mpsc::Sender<GenRequest>>,
+    rx_out: mpsc::Receiver<GenCompletion>,
+    worker: Option<JoinHandle<Result<DecodeMetrics>>>,
+}
+
+impl DecodeCoordinator {
+    /// Spawn a worker serving generation on one device of `class`,
+    /// with a fresh decoder model (deterministic from `model_seed`)
+    /// and at most `max_running` concurrently-decoding sequences.
+    pub fn spawn(
+        class: DeviceClass,
+        model_cfg: XformerConfig,
+        model_seed: u64,
+        max_running: usize,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<GenRequest>();
+        let (tx_out, rx_out) = mpsc::channel::<GenCompletion>();
+        let worker = std::thread::spawn(move || -> Result<DecodeMetrics> {
+            let model = DecoderModel::new(model_cfg, model_seed);
+            let quant = EncoderQuant::calibrate_causal_seeded(&model, COORD_CALIB_SEED);
+            let models = vec![model];
+            let quants = vec![quant];
+            let kv_cfg = KvConfig::for_class(&class);
+            let ref_mhz = class.freq_mhz;
+            let mut dec = DeviceDecoder::new(
+                &class,
+                ref_mhz,
+                kv_cfg,
+                max_running,
+                DecodeSchedule::PrefillFirst,
+            );
+            let mut metrics = DecodeMetrics::default();
+            let mut completions: Vec<GenCompletion> = Vec::new();
+            let mut future: Vec<GenRequest> = Vec::new();
+            let mut now = 0u64;
+            loop {
+                if !dec.has_work() && future.is_empty() {
+                    match rx.recv() {
+                        Ok(r) => future.push(r),
+                        Err(_) => break, // all clients gone, nothing pending
+                    }
+                }
+                while let Ok(r) = rx.try_recv() {
+                    future.push(r);
+                }
+                future.sort_by_key(|r| (r.arrival_cycle, r.id));
+                // Serve everything currently known on the simulated
+                // timeline (late-drained stamps clamp to `now`).
+                loop {
+                    while future.first().is_some_and(|r| r.arrival_cycle <= now) {
+                        let r = future.remove(0);
+                        let id = r.id;
+                        if let Err(e) = dec.submit(r, &models[0].cfg) {
+                            metrics.rejected += 1;
+                            metrics.rejections.push((id, e.to_string()));
+                        }
+                    }
+                    while dec.free_at() <= now && dec.has_work() {
+                        if !dec.step(now, &models, &quants, &mut metrics, &mut completions)? {
+                            break;
+                        }
+                    }
+                    for c in completions.drain(..) {
+                        let _ = tx_out.send(c);
+                    }
+                    let mut next = future.first().map(|r| r.arrival_cycle);
+                    if dec.has_work() && dec.free_at() > now {
+                        let t = dec.free_at();
+                        next = Some(next.map_or(t, |n| n.min(t)));
+                    }
+                    match next {
+                        Some(t) => now = now.max(t),
+                        None => break,
+                    }
+                }
+            }
+            metrics.makespan_cycles = metrics.makespan_cycles.max(now);
+            Ok(metrics)
+        });
+        Self { tx: Some(tx), rx_out, worker: Some(worker) }
+    }
+
+    /// Submit a generation request (non-blocking).
+    pub fn submit(&self, req: GenRequest) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("decode coordinator already shut down")
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("worker terminated"))
+    }
+
+    /// Receive the next finished sequence (blocking).
+    pub fn recv(&self) -> Result<GenCompletion> {
+        self.rx_out.recv().map_err(|_| anyhow::anyhow!("worker terminated"))
+    }
+
+    /// Close the queue, serve everything still pending, and return the
+    /// final metrics plus any completions not yet received.
+    pub fn shutdown(mut self) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
+        drop(self.tx.take());
+        let worker = self.worker.take().expect("already joined");
+        let metrics = worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        let mut done = Vec::new();
+        while let Ok(c) = self.rx_out.try_recv() {
+            done.push(c);
+        }
+        Ok((metrics, done))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,6 +498,79 @@ mod tests {
             let got = outputs[id as usize].as_ref().expect("response received");
             assert_eq!(got.data, want[0].data, "request {id} diverged from its solo run");
         }
+    }
+
+    fn gen_prompt(rows: usize, seed: u64) -> MatF32 {
+        let mut rng = XorShiftRng::new(1000 + seed);
+        let mut x = MatF32::zeros(rows, 16);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        x
+    }
+
+    #[test]
+    fn decode_coordinator_serves_generation_and_is_output_neutral() {
+        let cfg = XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 };
+        let class = DeviceClass::paper();
+        let req = |id: u64| GenRequest {
+            id,
+            model: 0,
+            prompt: gen_prompt(2 + id as usize, id),
+            max_new_tokens: 3,
+            arrival_cycle: 0,
+        };
+        let coord = DecodeCoordinator::spawn(class.clone(), cfg, 42, 4);
+        for id in 0..3 {
+            coord.submit(req(id)).unwrap();
+        }
+        let (metrics, mut done) = coord.shutdown().unwrap();
+        assert_eq!(metrics.completed, 3, "shutdown must drain pending generations");
+        assert_eq!(metrics.tokens, 9);
+        assert_eq!(metrics.rejected, 0);
+        assert!(metrics.prefill_jobs > 0 && metrics.decode_ticks > 0);
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(c.tokens.rows, 3);
+            assert!(c.ttft_cycles > 0);
+            assert!(c.tokens.data.iter().all(|v| v.is_finite()));
+        }
+        // Output neutrality: whatever ticks the worker formed, each
+        // sequence must be bit-identical to serving it alone.
+        for c in &done {
+            let solo = DecodeCoordinator::spawn(class.clone(), cfg, 42, 1);
+            solo.submit(req(c.id)).unwrap();
+            let first = solo.recv().unwrap();
+            let (sm, _) = solo.shutdown().unwrap();
+            assert_eq!(sm.completed, 1);
+            assert_eq!(
+                first.tokens.data, c.tokens.data,
+                "sequence {} perturbed by continuous batching",
+                c.id
+            );
+        }
+    }
+
+    #[test]
+    fn decode_coordinator_rejects_oversized_requests_with_reasons() {
+        let cfg = XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 };
+        let coord = DecodeCoordinator::spawn(DeviceClass::paper(), cfg, 42, 2);
+        // Worst case 6 + 4 − 1 = 9 > the 8-token context.
+        coord
+            .submit(GenRequest {
+                id: 7,
+                model: 0,
+                prompt: gen_prompt(6, 7),
+                max_new_tokens: 4,
+                arrival_cycle: 0,
+            })
+            .unwrap();
+        let (metrics, done) = coord.shutdown().unwrap();
+        assert_eq!(metrics.completed, 0);
+        assert_eq!(metrics.rejected, 1);
+        assert_eq!(metrics.rejections[0].0, 7);
+        assert!(done.is_empty());
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! Quantized prefill and decode-step execution on the CGRA.
+//!
+//! Two kernels-level entry points implement the generation dataflow:
+//!
+//! - [`run_prefill_batch`] — the **prompt phase**: a causal forward
+//!   over each sequence's full prompt, with every projection/FFN GEMM
+//!   stacked across the batch exactly like the encoder's batched path
+//!   (weights streamed once), causal masking in the per-sequence
+//!   attention, and the dequantized K/V activations of every layer
+//!   written into the sequence's pages of the [`PagedKvCache`].
+//! - [`run_decode_tick`] — one **generation step** for a batch of
+//!   running sequences: each contributes a single activation row, the
+//!   projections and FFN run as one stacked GEMV per site (`B × d`
+//!   rows — the continuous-batching kernel shape), and attention runs
+//!   each new Q row against that sequence's cached K/V (gathered from
+//!   its pages, with the read traffic counted exactly).
+//!
+//! ## Exactness contract
+//!
+//! Both paths use the *static causal calibration*
+//! ([`EncoderQuant::calibrate_causal`]): every scale and requant shift
+//! is a per-(model, layer, site) constant, every per-row operation is
+//! row-independent, and causal attention over the cache sees exactly
+//! the rows a full forward's masked softmax would weight non-zero. As
+//! a consequence token-by-token decode is **bit-identical** to the
+//! one-shot causal forward of the same rows — regardless of the
+//! prefill/decode split point, of which batch a row rode in, and of
+//! which device class executed it. `rust/tests/decode_props.rs` pins
+//! this down over random shapes, seeds and split points.
+
+use super::kv::{AdmitError, PagedKvCache};
+use crate::sim::CgraSim;
+use crate::util::mat::MatF32;
+use crate::xformer::decoder::{causal_mask, DecoderModel};
+use crate::xformer::run::cgra_matmul_f32_calibrated;
+use crate::xformer::{quantize_with, CgraEncoderReport, EncoderQuant};
+use anyhow::{ensure, Result};
+
+/// Copy row `r` of `m` as a standalone `1 × cols` matrix (the decode
+/// step's input/output currency).
+pub fn mat_row(m: &MatF32, r: usize) -> MatF32 {
+    MatF32::from_slice(1, m.cols, m.row(r))
+}
+
+/// Causal prefill over a batch of prompts (one stacked job).
+///
+/// `seqs` pairs each prompt (`p × d_model`, `1 ≤ p ≤ cfg.seq`) with its
+/// KV-cache sequence id; the sequence must already be admitted with
+/// exactly `p` committed tokens ([`PagedKvCache::admit`]). Returns each
+/// sequence's full hidden-state matrix (`p × d_model`; the last row is
+/// the first generated token) plus the kernel accounting report.
+pub fn run_prefill_batch(
+    sim: &mut CgraSim,
+    model: &DecoderModel,
+    quant: &EncoderQuant,
+    kv: &mut PagedKvCache,
+    seqs: &[(u64, &MatF32)],
+) -> Result<(Vec<MatF32>, CgraEncoderReport)> {
+    ensure!(!seqs.is_empty(), "prefill batch needs at least one sequence");
+    let cfg = &model.cfg;
+    ensure!(
+        quant.layers.len() == model.params.layers.len(),
+        "calibration does not match the model's layer count"
+    );
+    for (id, x) in seqs {
+        ensure!(x.cols == cfg.d_model, "prompt width must be d_model");
+        ensure!(
+            x.rows >= 1 && x.rows <= cfg.seq,
+            "prompt rows must be in 1..={} (the context limit)",
+            cfg.seq
+        );
+        ensure!(
+            kv.len(*id) == x.rows,
+            "sequence {id} must be admitted with exactly the prompt's tokens"
+        );
+    }
+    let b = seqs.len();
+    let dh = cfg.d_head();
+    let att_scale = 1.0 / (dh as f32).sqrt();
+    let total_rows: u64 = seqs.iter().map(|(_, x)| x.rows as u64).sum();
+    let mut report = CgraEncoderReport::default();
+    let mut hs: Vec<MatF32> = seqs.iter().map(|(_, x)| (*x).clone()).collect();
+    for (li, (layer, lq)) in model.params.layers.iter().zip(&quant.layers).enumerate() {
+        let ln1: Vec<MatF32> = hs
+            .iter()
+            .map(|h| h.layernorm_rows(&layer.ln1_gamma, &layer.ln1_beta, 1e-5))
+            .collect();
+        report.host_elems += total_rows * cfg.d_model as u64 * 6;
+        let refs: Vec<&MatF32> = ln1.iter().collect();
+        let q = cgra_matmul_f32_calibrated(sim, &refs, &lq.wq_q, &lq.q, &mut report)?;
+        let k = cgra_matmul_f32_calibrated(sim, &refs, &lq.wk_q, &lq.k, &mut report)?;
+        let v = cgra_matmul_f32_calibrated(sim, &refs, &lq.wv_q, &lq.v, &mut report)?;
+        // Page fills: the exact dequantized K/V activations land in the
+        // sequence's pages, token-aligned.
+        for (r, (id, _)) in seqs.iter().enumerate() {
+            kv.write_prompt_layer(*id, li, &k[r], &v[r]);
+        }
+        let mut ctxs: Vec<MatF32> =
+            hs.iter().map(|h| MatF32::zeros(h.rows, cfg.d_model)).collect();
+        for r in 0..b {
+            let s_r = hs[r].rows;
+            for hd in 0..cfg.n_heads {
+                let lo = hd * dh;
+                let (qh, kh, vh) = (
+                    q[r].col_slice(lo, dh),
+                    k[r].col_slice(lo, dh),
+                    v[r].col_slice(lo, dh),
+                );
+                let kht_q = quantize_with(&kh.transpose(), lq.scores.w_scale);
+                let mut scores =
+                    cgra_matmul_f32_calibrated(sim, &[&qh], &kht_q, &lq.scores, &mut report)?
+                        .pop()
+                        .expect("one block");
+                for val in &mut scores.data {
+                    *val *= att_scale;
+                }
+                causal_mask(&mut scores, 0);
+                let probs = scores.softmax_rows();
+                report.host_elems += (s_r * s_r) as u64 * 5;
+                let vh_q = quantize_with(&vh, lq.attn_v.w_scale);
+                let out =
+                    cgra_matmul_f32_calibrated(sim, &[&probs], &vh_q, &lq.attn_v, &mut report)?
+                        .pop()
+                        .expect("one block");
+                ctxs[r].set_col_slice(lo, &out);
+            }
+        }
+        let refs: Vec<&MatF32> = ctxs.iter().collect();
+        let attn = cgra_matmul_f32_calibrated(sim, &refs, &lq.wo_q, &lq.o, &mut report)?;
+        let x1: Vec<MatF32> = hs.iter().zip(&attn).map(|(h, a)| h.add(a)).collect();
+        report.host_elems += total_rows * cfg.d_model as u64;
+        let ln2: Vec<MatF32> = x1
+            .iter()
+            .map(|x| x.layernorm_rows(&layer.ln2_gamma, &layer.ln2_beta, 1e-5))
+            .collect();
+        report.host_elems += total_rows * cfg.d_model as u64 * 6;
+        let refs: Vec<&MatF32> = ln2.iter().collect();
+        let ff1: Vec<MatF32> =
+            cgra_matmul_f32_calibrated(sim, &refs, &lq.w1_q, &lq.ff1, &mut report)?
+                .into_iter()
+                .map(|m| m.gelu())
+                .collect();
+        report.host_elems += total_rows * cfg.d_ff as u64 * 8;
+        let refs: Vec<&MatF32> = ff1.iter().collect();
+        let ff2 = cgra_matmul_f32_calibrated(sim, &refs, &lq.w2_q, &lq.ff2, &mut report)?;
+        hs = x1.iter().zip(&ff2).map(|(x, f)| x.add(f)).collect();
+        report.host_elems += total_rows * cfg.d_model as u64;
+    }
+    Ok((hs, report))
+}
+
+/// One continuous-batching decode step for a batch of running
+/// sequences of the same model.
+///
+/// Each entry pairs a resident sequence id with its next input row
+/// (`1 × d_model` — the previous step's output, or the last prompt
+/// hidden row right after prefill). Commits one token slot per
+/// sequence (the caller must have ensured page capacity, preempting if
+/// needed), runs every projection/FFN site as one stacked `B × d`
+/// GEMV, and attends each sequence's new row against its own cached
+/// K/V. Returns the per-sequence output rows in input order.
+pub fn run_decode_tick(
+    sim: &mut CgraSim,
+    model: &DecoderModel,
+    quant: &EncoderQuant,
+    kv: &mut PagedKvCache,
+    seqs: &[(u64, &MatF32)],
+) -> Result<(Vec<MatF32>, CgraEncoderReport)> {
+    ensure!(!seqs.is_empty(), "decode tick needs at least one sequence");
+    let cfg = &model.cfg;
+    ensure!(
+        quant.layers.len() == model.params.layers.len(),
+        "calibration does not match the model's layer count"
+    );
+    for (i, (id, x)) in seqs.iter().enumerate() {
+        ensure!(
+            x.rows == 1 && x.cols == cfg.d_model,
+            "decode input must be a single 1×d_model row"
+        );
+        ensure!(kv.len(*id) >= 1, "sequence {id} is not resident in the KV cache");
+        ensure!(
+            kv.len(*id) < cfg.seq,
+            "sequence {id} is already at the context limit ({})",
+            cfg.seq
+        );
+        ensure!(
+            seqs[..i].iter().all(|(other, _)| other != id),
+            "sequence {id} appears twice in one tick"
+        );
+    }
+    // All-or-nothing slot commit: page capacity is checked for the
+    // whole batch *before* any slot is taken, so a capacity miss
+    // leaves every sequence's cache untouched — the scheduler can
+    // preempt and retry without a half-committed (and never-written)
+    // token slot corrupting later attention reads.
+    let need = seqs.iter().filter(|(id, _)| kv.needs_page(*id)).count();
+    let free = kv.free_pages();
+    if need > free {
+        return Err(AdmitError::NoCapacity { needed_pages: need, free_pages: free }.into());
+    }
+    let b = seqs.len();
+    let mut tokens = Vec::with_capacity(b);
+    for (id, _) in seqs {
+        tokens.push(kv.begin_token(*id)?);
+    }
+    let dh = cfg.d_head();
+    let att_scale = 1.0 / (dh as f32).sqrt();
+    let mut report = CgraEncoderReport::default();
+    let mut hs: Vec<MatF32> = seqs.iter().map(|(_, x)| (*x).clone()).collect();
+    for (li, (layer, lq)) in model.params.layers.iter().zip(&quant.layers).enumerate() {
+        let ln1: Vec<MatF32> = hs
+            .iter()
+            .map(|h| h.layernorm_rows(&layer.ln1_gamma, &layer.ln1_beta, 1e-5))
+            .collect();
+        report.host_elems += (b * cfg.d_model) as u64 * 6;
+        let refs: Vec<&MatF32> = ln1.iter().collect();
+        // The continuous-batching shape: one stacked B×d GEMV per
+        // projection site across every running sequence.
+        let q = cgra_matmul_f32_calibrated(sim, &refs, &lq.wq_q, &lq.q, &mut report)?;
+        let k = cgra_matmul_f32_calibrated(sim, &refs, &lq.wk_q, &lq.k, &mut report)?;
+        let v = cgra_matmul_f32_calibrated(sim, &refs, &lq.wv_q, &lq.v, &mut report)?;
+        let mut ctxs: Vec<MatF32> = (0..b).map(|_| MatF32::zeros(1, cfg.d_model)).collect();
+        for (r, (id, _)) in seqs.iter().enumerate() {
+            kv.write_token_layer(*id, tokens[r], li, k[r].row(0), v[r].row(0));
+            let (k_full, v_full) = kv.read_layer(*id, li);
+            for hd in 0..cfg.n_heads {
+                let lo = hd * dh;
+                let q_row = q[r].col_slice(lo, dh);
+                let kht_q =
+                    quantize_with(&k_full.col_slice(lo, dh).transpose(), lq.scores.w_scale);
+                let mut scores =
+                    cgra_matmul_f32_calibrated(sim, &[&q_row], &kht_q, &lq.scores, &mut report)?
+                        .pop()
+                        .expect("one block");
+                for val in &mut scores.data {
+                    *val *= att_scale;
+                }
+                // No mask needed: the cache holds exactly the visible
+                // positions 0..=t for this row.
+                let probs = scores.softmax_rows();
+                report.host_elems += scores_len(&probs) * 5;
+                let vh_q = quantize_with(&v_full.col_slice(lo, dh), lq.attn_v.w_scale);
+                let out =
+                    cgra_matmul_f32_calibrated(sim, &[&probs], &vh_q, &lq.attn_v, &mut report)?
+                        .pop()
+                        .expect("one block");
+                ctxs[r].set_col_slice(lo, &out);
+            }
+        }
+        let refs: Vec<&MatF32> = ctxs.iter().collect();
+        let attn = cgra_matmul_f32_calibrated(sim, &refs, &lq.wo_q, &lq.o, &mut report)?;
+        let x1: Vec<MatF32> = hs.iter().zip(&attn).map(|(h, a)| h.add(a)).collect();
+        let ln2: Vec<MatF32> = x1
+            .iter()
+            .map(|x| x.layernorm_rows(&layer.ln2_gamma, &layer.ln2_beta, 1e-5))
+            .collect();
+        report.host_elems += (b * cfg.d_model) as u64 * 7;
+        let refs: Vec<&MatF32> = ln2.iter().collect();
+        let ff1: Vec<MatF32> =
+            cgra_matmul_f32_calibrated(sim, &refs, &lq.w1_q, &lq.ff1, &mut report)?
+                .into_iter()
+                .map(|m| m.gelu())
+                .collect();
+        report.host_elems += (b * cfg.d_ff) as u64 * 8;
+        let refs: Vec<&MatF32> = ff1.iter().collect();
+        let ff2 = cgra_matmul_f32_calibrated(sim, &refs, &lq.w2_q, &lq.ff2, &mut report)?;
+        hs = x1.iter().zip(&ff2).map(|(x, f)| x.add(f)).collect();
+        report.host_elems += (b * cfg.d_model) as u64;
+    }
+    Ok((hs, report))
+}
+
+fn scores_len(probs: &MatF32) -> u64 {
+    (probs.rows * probs.cols) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::decode::kv::KvConfig;
+    use crate::util::rng::XorShiftRng;
+    use crate::xformer::XformerConfig;
+
+    fn cfg() -> XformerConfig {
+        XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 }
+    }
+
+    fn input(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        let mut rng = XorShiftRng::new(seed);
+        let mut x = MatF32::zeros(rows, cols);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        x
+    }
+
+    fn pool() -> PagedKvCache {
+        PagedKvCache::new(KvConfig::new(256, 8))
+    }
+
+    #[test]
+    fn split_decode_is_bit_identical_to_one_shot_prefill() {
+        let c = cfg();
+        let model = DecoderModel::new(c, 42);
+        let quant = EncoderQuant::calibrate_causal_seeded(&model, 5);
+        let x = input(8, c.d_model, 9);
+
+        // One-shot: the whole sequence as a single prefill.
+        let mut sim = CgraSim::new(ArchConfig::default());
+        let mut kv = pool();
+        kv.admit(1, c.d_model, c.n_layers, 8, 8).unwrap();
+        let (full, _) = run_prefill_batch(&mut sim, &model, &quant, &mut kv, &[(1, &x)]).unwrap();
+
+        // Split: prefill 5 rows, then 3 teacher-forced decode steps.
+        let mut sim2 = CgraSim::new(ArchConfig::default());
+        let mut kv2 = pool();
+        let p = 5usize;
+        let mut prefix = MatF32::zeros(p, c.d_model);
+        prefix.data.copy_from_slice(&x.data[..p * c.d_model]);
+        kv2.admit(1, c.d_model, c.n_layers, p, 8).unwrap();
+        let (pre, _) =
+            run_prefill_batch(&mut sim2, &model, &quant, &mut kv2, &[(1, &prefix)]).unwrap();
+        for r in 0..p {
+            assert_eq!(pre[0].row(r), full[0].row(r), "prefill row {r} diverged");
+        }
+        for t in p..8 {
+            let row = mat_row(&x, t);
+            let (out, _) =
+                run_decode_tick(&mut sim2, &model, &quant, &mut kv2, &[(1, &row)]).unwrap();
+            assert_eq!(out[0].row(0), full[0].row(t), "decode step at {t} diverged");
+        }
+        assert_eq!(kv2.len(1), 8);
+        assert!(kv2.metrics.read_words > 0, "decode must read the cache");
+    }
+
+    #[test]
+    fn stacked_tick_matches_solo_ticks_bitwise() {
+        // Two sequences share a tick: each output must equal the same
+        // sequence stepped alone — the join/leave neutrality at the
+        // kernel level.
+        let c = cfg();
+        let model = DecoderModel::new(c, 7);
+        let quant = EncoderQuant::calibrate_causal_seeded(&model, 3);
+        let xa = input(3, c.d_model, 11);
+        let xb = input(5, c.d_model, 13);
+
+        let run_pair = |together: bool| -> (MatF32, MatF32) {
+            let mut sim = CgraSim::new(ArchConfig::default());
+            let mut kv = pool();
+            kv.admit(1, c.d_model, c.n_layers, 3, 4).unwrap();
+            kv.admit(2, c.d_model, c.n_layers, 5, 6).unwrap();
+            let (pre, _) = run_prefill_batch(
+                &mut sim,
+                &model,
+                &quant,
+                &mut kv,
+                &[(1, &xa), (2, &xb)],
+            )
+            .unwrap();
+            let ra = mat_row(&pre[0], 2);
+            let rb = mat_row(&pre[1], 4);
+            if together {
+                let (out, rep) =
+                    run_decode_tick(&mut sim, &model, &quant, &mut kv, &[(1, &ra), (2, &rb)])
+                        .unwrap();
+                assert!(rep.stacked_kernels > 0, "shared ticks must stack the GEMVs");
+                (out[0].clone(), out[1].clone())
+            } else {
+                let (oa, _) =
+                    run_decode_tick(&mut sim, &model, &quant, &mut kv, &[(1, &ra)]).unwrap();
+                let (ob, _) =
+                    run_decode_tick(&mut sim, &model, &quant, &mut kv, &[(2, &rb)]).unwrap();
+                (oa[0].clone(), ob[0].clone())
+            }
+        };
+        let (a1, b1) = run_pair(true);
+        let (a2, b2) = run_pair(false);
+        assert_eq!(a1.data, a2.data, "sequence 1 perturbed by sharing a tick");
+        assert_eq!(b1.data, b2.data, "sequence 2 perturbed by sharing a tick");
+    }
+
+    #[test]
+    fn tick_capacity_miss_is_all_or_nothing() {
+        // Two resident sequences, pool sized so only one can grow: the
+        // tick must fail *without* committing either sequence's slot,
+        // and succeed cleanly once pages are freed.
+        let c = cfg();
+        let model = DecoderModel::new(c, 3);
+        let quant = EncoderQuant::calibrate_causal_seeded(&model, 3);
+        let mut sim = CgraSim::new(ArchConfig::default());
+        // 64-word pages hold 2 tokens of this shape; 2 pages total.
+        let mut kv = PagedKvCache::new(KvConfig::new(64, 2));
+        let xa = input(2, c.d_model, 21);
+        let xb = input(2, c.d_model, 22);
+        kv.admit(1, c.d_model, c.n_layers, 2, 4).unwrap();
+        kv.admit(2, c.d_model, c.n_layers, 2, 4).unwrap();
+        run_prefill_batch(&mut sim, &model, &quant, &mut kv, &[(1, &xa), (2, &xb)]).unwrap();
+        let ra = mat_row(&xa, 1);
+        let rb = mat_row(&xb, 1);
+        // Both full (2 tokens = 1 page each), zero free pages: growing
+        // either needs a page, so the shared tick must refuse whole.
+        let err = run_decode_tick(&mut sim, &model, &quant, &mut kv, &[(1, &ra), (2, &rb)])
+            .unwrap_err();
+        assert!(err.to_string().contains("no capacity"), "typed reason: {err}");
+        assert_eq!(kv.len(1), 2, "failed tick must not commit sequence 1's slot");
+        assert_eq!(kv.len(2), 2, "failed tick must not commit sequence 2's slot");
+        // Freeing one sequence unblocks the other exactly.
+        kv.release(2);
+        let (out, _) =
+            run_decode_tick(&mut sim, &model, &quant, &mut kv, &[(1, &ra)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(kv.len(1), 3);
+    }
+
+    #[test]
+    fn tick_rejects_context_overflow_and_foreign_rows() {
+        let c = cfg();
+        let model = DecoderModel::new(c, 1);
+        let quant = EncoderQuant::calibrate_causal_seeded(&model, 1);
+        let mut sim = CgraSim::new(ArchConfig::default());
+        let mut kv = pool();
+        let x = input(8, c.d_model, 2);
+        kv.admit(1, c.d_model, c.n_layers, 8, 8).unwrap();
+        run_prefill_batch(&mut sim, &model, &quant, &mut kv, &[(1, &x)]).unwrap();
+        let row = mat_row(&x, 7);
+        // At the context limit: one more step must be refused.
+        assert!(run_decode_tick(&mut sim, &model, &quant, &mut kv, &[(1, &row)]).is_err());
+        // A multi-row "step" is malformed.
+        assert!(run_decode_tick(&mut sim, &model, &quant, &mut kv, &[(1, &x)]).is_err());
+    }
+}

@@ -1,0 +1,1176 @@
+//! Continuous batching: the stateful generation lifecycle on a device
+//! fleet.
+//!
+//! Encoder serving is one-shot — a request is placed, runs once,
+//! leaves. Generation is a **multi-step, stateful, preemptible**
+//! lifecycle: a request prefills its prompt (emitting the first
+//! token), then takes one decode step per further token, holding KV
+//! pages the whole time. [`DeviceDecoder`] owns that lifecycle for one
+//! device; [`DecodeFleetSim`] places generation requests across N
+//! devices and advances the same deterministic discrete-event timeline
+//! the encoder fleet uses.
+//!
+//! ## Iteration-level scheduling
+//!
+//! A device wakes whenever it is free and has work, and runs exactly
+//! one **job** per wake:
+//!
+//! - a *prefill job* — every admissible waiting sequence of one model
+//!   (preempted resumes first) prefills as one stacked causal forward;
+//! - otherwise a *decode tick* — every running sequence advances one
+//!   token, the projections/FFN stacked into one `B × d` GEMV per
+//!   layer per site.
+//!
+//! Sequences therefore **join and leave the running batch at step
+//!   boundaries**: an arrival never waits for the current batch to
+//! finish its whole generation, only for the current tick — the
+//! iteration-level batching lever (Orca, vLLM) that dominates decode
+//! throughput. [`DecodeSchedule`] picks the interleaving: prefills
+//! first (default — maximizes batch occupancy and TTFT fairness) or
+//! decode first (drains the running batch before admitting — lower
+//! inter-token jitter, serial admission).
+//!
+//! ## Memory pressure
+//!
+//! Admission and growth run against the device's [`PagedKvCache`]
+//! budget. A sequence whose worst case can never fit is **rejected
+//! with its reason**. When a decode tick needs pages the pool cannot
+//! supply, the scheduler preempts the **most recently admitted**
+//! running sequence (LIFO, the vLLM rule: the oldest sequence always
+//! progresses, so the system cannot livelock), releasing its pages;
+//! the victim re-queues and later *resumes* by re-prefilling its
+//! prompt plus the tokens it already emitted — recomputation changes
+//! timing, never outputs. Every decision depends only on simulated
+//! stamps, so decode fleets are seed-deterministic end to end.
+
+use super::engine::{mat_row, run_decode_tick, run_prefill_batch};
+use super::kv::{AdmitError, KvConfig, KvMetrics, PagedKvCache};
+use crate::cluster::{
+    analytic_encoder_ref_cycles, per_device_energy, to_ref_cycles, DeviceEngine, DeviceMetrics,
+    GenRequest, LatencyHistogram, ModelClass,
+};
+use crate::config::{ArchConfig, DeviceClass};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::gemm::{GemmPlan, OutputMode};
+use crate::sim::Stats;
+use crate::util::mat::MatF32;
+use crate::xformer::{CgraEncoderReport, DecoderModel, EncoderQuant, XformerConfig};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Prefill/decode interleaving policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeSchedule {
+    /// Admit every admissible waiting sequence before each tick
+    /// (default): highest batch occupancy, earliest TTFT for arrivals.
+    PrefillFirst,
+    /// Drain the running batch to empty before admitting anything new:
+    /// no prefill ever interrupts decoding (lowest inter-token
+    /// jitter), at the price of serial admission.
+    DecodeFirst,
+}
+
+/// Decode-fleet configuration.
+#[derive(Debug, Clone)]
+pub struct DecodeFleetConfig {
+    /// One device per entry (mixed rosters give big.LITTLE fleets).
+    pub roster: Vec<DeviceClass>,
+    /// Reference clock of the fleet timeline in integer MHz.
+    pub ref_mhz: u64,
+    /// Most sequences one device runs concurrently (the continuous
+    /// batch cap; 1 = sequential per-request decode, the baseline arm
+    /// of the FIG8 bench).
+    pub max_running: usize,
+    /// KV page size in words (pool provisioning per class is half of
+    /// L1 — see [`KvConfig::for_class`]).
+    pub page_words: usize,
+    /// Override the per-device page count (tests force tiny pools to
+    /// exercise preemption); `None` derives it from the device class.
+    pub kv_pages: Option<usize>,
+    pub schedule: DecodeSchedule,
+}
+
+impl Default for DecodeFleetConfig {
+    fn default() -> Self {
+        Self {
+            roster: vec![DeviceClass::paper(); 4],
+            ref_mhz: 100,
+            max_running: 8,
+            page_words: KvConfig::DEFAULT_PAGE_WORDS,
+            kv_pages: None,
+            schedule: DecodeSchedule::PrefillFirst,
+        }
+    }
+}
+
+impl DecodeFleetConfig {
+    /// Homogeneous sugar: `n` devices of one class, reference clock =
+    /// the class clock.
+    pub fn uniform(n: usize, class: DeviceClass) -> Self {
+        let ref_mhz = class.freq_mhz;
+        Self { roster: vec![class; n], ref_mhz, ..Default::default() }
+    }
+}
+
+/// One finished generation request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenCompletion {
+    pub id: u64,
+    /// The emitted token rows (`max_new_tokens × d_model`) — row `t` is
+    /// the `t`-th generated token's activation.
+    pub tokens: MatF32,
+    /// Arrival → first token (prefill completion).
+    pub ttft_cycles: u64,
+    /// Completion stamp of the last token.
+    pub finish_cycle: u64,
+    /// Times this sequence was preempted (and later resumed).
+    pub preemptions: u64,
+}
+
+/// Aggregated metrics for one decode-fleet run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DecodeMetrics {
+    /// Generation requests served to completion.
+    pub completed: u64,
+    /// Requests rejected at admission (KV can never fit / context
+    /// overflow), with reasons in [`Self::rejections`].
+    pub rejected: u64,
+    /// `(request id, reason)` for every rejection.
+    pub rejections: Vec<(u64, String)>,
+    /// Tokens emitted across all sequences.
+    pub tokens: u64,
+    /// Time-to-first-token (arrival → prefill completion).
+    pub ttft: LatencyHistogram,
+    /// Inter-token latency (gap between consecutive token emissions of
+    /// one sequence, including any preemption/resume gap).
+    pub itl: LatencyHistogram,
+    /// End-to-end latency (arrival → last token).
+    pub e2e: LatencyHistogram,
+    /// KV-pool occupancy in permille, sampled after every job.
+    pub kv_occupancy_permille: LatencyHistogram,
+    /// Sequences preempted to free KV pages.
+    pub preemptions: u64,
+    /// Prefill jobs executed (stacked prompt forwards).
+    pub prefill_jobs: u64,
+    /// Sequences per prefill job.
+    pub prefill_batch: LatencyHistogram,
+    /// Decode ticks executed.
+    pub decode_ticks: u64,
+    /// Running sequences per decode tick (the continuous-batch
+    /// occupancy; `mean()` is the average).
+    pub decode_batch: LatencyHistogram,
+    /// Exact KV page-fill words across the fleet.
+    pub kv_fill_words: u64,
+    /// Exact KV gather (read) words across the fleet.
+    pub kv_read_words: u64,
+    /// Latest completion stamp.
+    pub makespan_cycles: u64,
+    /// Per-device counters (served = completed sequences).
+    pub per_device: Vec<DeviceMetrics>,
+    /// Merged simulator event counters.
+    pub stats: Stats,
+}
+
+impl DecodeMetrics {
+    /// Fleet decode throughput in tokens per second at `freq_mhz`.
+    pub fn tokens_per_sec(&self, freq_mhz: f64) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / (self.makespan_cycles as f64 / (freq_mhz * 1e6))
+    }
+
+    /// Mean running-batch occupancy over decode ticks.
+    pub fn mean_decode_occupancy(&self) -> f64 {
+        self.decode_batch.mean()
+    }
+
+    /// Fleet energy with per-class leakage/voltage scaling (same
+    /// accounting as the encoder fleet's `FleetMetrics::fleet_energy`).
+    pub fn fleet_energy(&self, em: &EnergyModel, freq_mhz: f64) -> EnergyBreakdown {
+        per_device_energy(&self.per_device, self.makespan_cycles, em, freq_mhz)
+    }
+}
+
+/// Optimistic analytic cycle cost of **one decode step** (one token, one
+/// sequence) on a geometry: the GEMV ideals of every per-layer site at
+/// the model's midpoint context length. The decode-placement analog of
+/// [`crate::cluster::analytic_encoder_cycles`].
+pub fn analytic_decode_token_cycles(arch: &ArchConfig, cfg: &XformerConfig) -> u64 {
+    let peak = arch.peak_macs_per_cycle();
+    let ideal = |m: usize, k: usize, n: usize| -> u64 {
+        GemmPlan::new(arch, m, k, n, OutputMode::Quant { shift: 0 })
+            .map(|p| p.ideal_cycles())
+            .unwrap_or_else(|_| ((m * k * n) as u64).div_ceil(peak).max(1))
+    };
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let dh = cfg.d_head();
+    let t = (cfg.seq / 2).max(1);
+    let per_layer = 4 * ideal(1, d, d)
+        + cfg.n_heads as u64 * (ideal(1, dh, t) + ideal(1, t, dh))
+        + ideal(1, d, f)
+        + ideal(1, f, d);
+    (per_layer * cfg.n_layers as u64).max(1)
+}
+
+/// [`analytic_decode_token_cycles`] for a device class on the fleet's
+/// reference timeline.
+pub fn analytic_decode_token_ref_cycles(
+    class: &DeviceClass,
+    cfg: &XformerConfig,
+    ref_mhz: u64,
+) -> u64 {
+    to_ref_cycles(analytic_decode_token_cycles(&class.arch, cfg), class.freq_mhz, ref_mhz)
+        .max(1)
+}
+
+/// A sequence not currently running: a fresh arrival (`emitted` empty)
+/// or a preempted one awaiting resume (`emitted` holds the tokens
+/// already delivered; the resume prefill recomputes prompt + emitted
+/// and re-emits nothing).
+#[derive(Debug, Clone)]
+struct PendingSeq {
+    id: u64,
+    model: usize,
+    arrival: u64,
+    prompt: MatF32,
+    emitted: Vec<MatF32>,
+    max_new: usize,
+    ttft: Option<u64>,
+    last_emit: u64,
+    preemptions: u64,
+}
+
+impl PendingSeq {
+    fn fresh(req: GenRequest) -> Self {
+        Self {
+            id: req.id,
+            model: req.model,
+            arrival: req.arrival_cycle,
+            prompt: req.prompt,
+            emitted: Vec::new(),
+            max_new: req.max_new_tokens,
+            ttft: None,
+            last_emit: 0,
+            preemptions: 0,
+        }
+    }
+
+    /// Tokens the (re-)prefill must commit: prompt rows plus every
+    /// already-emitted token (the feedback inputs).
+    fn resident_tokens(&self) -> usize {
+        self.prompt.rows + self.emitted.len()
+    }
+
+    /// The longest this sequence can ever grow.
+    fn worst_tokens(&self) -> usize {
+        self.prompt.rows + self.max_new - 1
+    }
+
+    /// The (re-)prefill input: prompt rows followed by the emitted
+    /// rows (each emitted token is the next step's input).
+    fn prefill_input(&self) -> MatF32 {
+        let d = self.prompt.cols;
+        let rows = self.resident_tokens();
+        let mut x = MatF32::zeros(rows, d);
+        x.data[..self.prompt.data.len()].copy_from_slice(&self.prompt.data);
+        for (i, row) in self.emitted.iter().enumerate() {
+            let at = (self.prompt.rows + i) * d;
+            x.data[at..at + d].copy_from_slice(&row.data);
+        }
+        x
+    }
+}
+
+/// A sequence in the running batch.
+#[derive(Debug, Clone)]
+struct RunSeq {
+    id: u64,
+    model: usize,
+    /// Monotonic admission stamp — the LIFO preemption order.
+    admit_order: u64,
+    arrival: u64,
+    prompt: MatF32,
+    emitted: Vec<MatF32>,
+    next_input: MatF32,
+    remaining: usize,
+    max_new: usize,
+    ttft: u64,
+    last_emit: u64,
+    preemptions: u64,
+}
+
+/// Stack emitted `1 × d` rows into one `n × d` matrix.
+fn stack_rows(rows: &[MatF32]) -> MatF32 {
+    let cols = rows.first().map_or(0, |r| r.cols);
+    let mut out = MatF32::zeros(rows.len(), cols);
+    for (i, r) in rows.iter().enumerate() {
+        out.data[i * cols..(i + 1) * cols].copy_from_slice(&r.data);
+    }
+    out
+}
+
+fn merge_report(total: &mut CgraEncoderReport, part: &CgraEncoderReport) {
+    total.cycles += part.cycles;
+    total.config_cycles += part.config_cycles;
+    total.kernels += part.kernels;
+    total.stacked_kernels += part.stacked_kernels;
+    total.weight_reuse_words += part.weight_reuse_words;
+    total.host_elems += part.host_elems;
+    total.max_gemm_err = total.max_gemm_err.max(part.max_gemm_err);
+}
+
+/// Synthetic context key for a decode tick spanning several models: no
+/// single model's context is resident afterwards, so back-to-back reuse
+/// is only claimed for single-model jobs.
+const MIXED_TICK_KEY: usize = usize::MAX;
+
+/// One device's generation server: engine + paged KV + the waiting /
+/// preempted / running sets, advanced one job per [`Self::step`].
+pub struct DeviceDecoder {
+    engine: DeviceEngine,
+    kv: PagedKvCache,
+    max_running: usize,
+    schedule: DecodeSchedule,
+    waiting: VecDeque<PendingSeq>,
+    preempted: VecDeque<PendingSeq>,
+    running: Vec<RunSeq>,
+    admit_counter: u64,
+}
+
+impl DeviceDecoder {
+    pub fn new(
+        class: &DeviceClass,
+        ref_mhz: u64,
+        kv_cfg: KvConfig,
+        max_running: usize,
+        schedule: DecodeSchedule,
+    ) -> Self {
+        Self {
+            engine: DeviceEngine::for_class(class, ref_mhz),
+            kv: PagedKvCache::new(kv_cfg),
+            max_running: max_running.max(1),
+            schedule,
+            waiting: VecDeque::new(),
+            preempted: VecDeque::new(),
+            running: Vec::new(),
+            admit_counter: 0,
+        }
+    }
+
+    /// Earliest reference cycle at which the device is free.
+    pub fn free_at(&self) -> u64 {
+        self.engine.free_at
+    }
+
+    /// Anything left to do (running, waiting or awaiting resume)?
+    pub fn has_work(&self) -> bool {
+        !self.running.is_empty() || !self.waiting.is_empty() || !self.preempted.is_empty()
+    }
+
+    /// Sequences currently in the running batch.
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Sequences waiting (fresh + preempted).
+    pub fn queued_len(&self) -> usize {
+        self.waiting.len() + self.preempted.len()
+    }
+
+    pub fn engine(&self) -> &DeviceEngine {
+        &self.engine
+    }
+
+    pub fn kv_metrics(&self) -> &KvMetrics {
+        &self.kv.metrics
+    }
+
+    /// Resident-token capacity of this device's whole KV pool for a
+    /// model shape (0 when one token is wider than a page) — what a
+    /// capacity-aware placer checks before routing a request here.
+    pub fn kv_capacity_tokens(&self, cfg: &XformerConfig) -> usize {
+        self.kv.capacity_tokens(cfg.d_model, cfg.n_layers)
+    }
+
+    /// Accept a generation request, or reject it with the reason when
+    /// its worst case can never be served (KV pool or context limit).
+    pub fn submit(&mut self, req: GenRequest, cfg: &XformerConfig) -> Result<(), AdmitError> {
+        assert!(req.max_new_tokens >= 1, "a generation request emits at least one token");
+        assert!(
+            req.prompt.rows >= 1 && req.prompt.cols == cfg.d_model,
+            "prompt must be (≥1) × d_model"
+        );
+        let worst = req.prompt.rows + req.max_new_tokens - 1;
+        if worst > cfg.seq {
+            return Err(AdmitError::TooLarge { worst_tokens: worst, capacity_tokens: cfg.seq });
+        }
+        let capacity = self.kv.capacity_tokens(cfg.d_model, cfg.n_layers);
+        if capacity == 0 {
+            return Err(AdmitError::TokenTooWide {
+                words_per_token: 2 * cfg.d_model * cfg.n_layers,
+                page_words: self.kv.config().page_words,
+            });
+        }
+        if worst > capacity {
+            return Err(AdmitError::TooLarge {
+                worst_tokens: worst,
+                capacity_tokens: capacity,
+            });
+        }
+        self.waiting.push_back(PendingSeq::fresh(req));
+        Ok(())
+    }
+
+    /// Expected backlog on this device in reference cycles, costed per
+    /// class (`token_cost`/`prefill_cost` are `[model][class]` tables;
+    /// the decode-placement analog of the encoder fleet's SJF sum).
+    pub fn expected_backlog(
+        &self,
+        class: usize,
+        prefill_cost: &[Vec<u64>],
+        token_cost: &[Vec<u64>],
+    ) -> u64 {
+        let pending: u64 = self
+            .waiting
+            .iter()
+            .chain(self.preempted.iter())
+            .map(|p| {
+                // The (re-)prefill job itself emits one token, so only
+                // max_new − emitted − 1 decode steps remain — the same
+                // arithmetic `place` uses for an arriving request.
+                prefill_cost[p.model][class].saturating_mul(p.resident_tokens() as u64)
+                    + token_cost[p.model][class]
+                        .saturating_mul(p.max_new.saturating_sub(p.emitted.len() + 1) as u64)
+            })
+            .sum();
+        let running: u64 = self
+            .running
+            .iter()
+            .map(|s| token_cost[s.model][class].saturating_mul(s.remaining as u64))
+            .sum();
+        pending.saturating_add(running)
+    }
+
+    /// Run one job at `now` (device must be free). Returns whether any
+    /// state advanced — `false` only when there is nothing admissible
+    /// and nothing running.
+    pub fn step(
+        &mut self,
+        now: u64,
+        models: &[DecoderModel],
+        quants: &[EncoderQuant],
+        metrics: &mut DecodeMetrics,
+        completions: &mut Vec<GenCompletion>,
+    ) -> Result<bool> {
+        debug_assert!(self.engine.free_at <= now, "step on a busy device");
+        let admit_allowed = match self.schedule {
+            DecodeSchedule::PrefillFirst => true,
+            DecodeSchedule::DecodeFirst => self.running.is_empty(),
+        };
+        if admit_allowed {
+            let admitted = self.admit_wave(models, metrics);
+            if !admitted.is_empty() {
+                self.run_prefill_job(now, admitted, models, quants, metrics, completions)?;
+                return Ok(true);
+            }
+        }
+        if self.running.is_empty() {
+            return Ok(false);
+        }
+        let preempted_any = self.make_room(metrics);
+        if self.running.is_empty() {
+            return Ok(preempted_any);
+        }
+        self.run_tick_job(now, models, quants, metrics, completions)?;
+        Ok(true)
+    }
+
+    /// Admit every admissible sequence of one model group: preempted
+    /// resumes first (they are the oldest work), then fresh arrivals,
+    /// FIFO within each, stopping at the batch cap, at the first
+    /// capacity miss (head-of-line order is part of the determinism
+    /// contract), or at a model change (one prefill job = one model).
+    fn admit_wave(
+        &mut self,
+        models: &[DecoderModel],
+        metrics: &mut DecodeMetrics,
+    ) -> Vec<PendingSeq> {
+        let mut admitted: Vec<PendingSeq> = Vec::new();
+        loop {
+            if self.running.len() + admitted.len() >= self.max_running {
+                break;
+            }
+            let from_preempted = !self.preempted.is_empty();
+            let Some((c_id, c_model, c_tokens, c_worst)) = ({
+                let head = if from_preempted {
+                    self.preempted.front()
+                } else {
+                    self.waiting.front()
+                };
+                head.map(|c| (c.id, c.model, c.resident_tokens(), c.worst_tokens()))
+            }) else {
+                break;
+            };
+            if admitted.first().is_some_and(|a| a.model != c_model) {
+                break;
+            }
+            let cfg = &models[c_model].cfg;
+            match self.kv.admit(c_id, cfg.d_model, cfg.n_layers, c_tokens, c_worst) {
+                Ok(()) => {
+                    let seq = if from_preempted {
+                        self.preempted.pop_front()
+                    } else {
+                        self.waiting.pop_front()
+                    }
+                    .expect("peeked above");
+                    admitted.push(seq);
+                }
+                Err(AdmitError::NoCapacity { .. }) => break,
+                Err(e) => {
+                    // Submit-time validation makes this unreachable;
+                    // shed the request loudly rather than corrupting.
+                    let seq = if from_preempted {
+                        self.preempted.pop_front()
+                    } else {
+                        self.waiting.pop_front()
+                    }
+                    .expect("peeked above");
+                    metrics.rejected += 1;
+                    metrics.rejections.push((seq.id, e.to_string()));
+                }
+            }
+        }
+        admitted
+    }
+
+    /// Preempt (LIFO: highest admission stamp first) until every
+    /// running sequence that needs a fresh page this tick can get one.
+    fn make_room(&mut self, metrics: &mut DecodeMetrics) -> bool {
+        let mut any = false;
+        loop {
+            let need =
+                self.running.iter().filter(|s| self.kv.needs_page(s.id)).count();
+            if need <= self.kv.free_pages() {
+                break;
+            }
+            let victim = self
+                .running
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, s)| s.admit_order)
+                .map(|(i, _)| i)
+                .expect("running is non-empty");
+            let s = self.running.remove(victim);
+            self.kv.release(s.id);
+            metrics.preemptions += 1;
+            any = true;
+            self.preempted.push_back(PendingSeq {
+                id: s.id,
+                model: s.model,
+                arrival: s.arrival,
+                prompt: s.prompt,
+                emitted: s.emitted,
+                max_new: s.max_new,
+                ttft: Some(s.ttft),
+                last_emit: s.last_emit,
+                preemptions: s.preemptions + 1,
+            });
+            if self.running.is_empty() {
+                break;
+            }
+        }
+        any
+    }
+
+    fn run_prefill_job(
+        &mut self,
+        now: u64,
+        admitted: Vec<PendingSeq>,
+        models: &[DecoderModel],
+        quants: &[EncoderQuant],
+        metrics: &mut DecodeMetrics,
+        completions: &mut Vec<GenCompletion>,
+    ) -> Result<()> {
+        let model_idx = admitted[0].model;
+        let inputs: Vec<MatF32> = admitted.iter().map(|p| p.prefill_input()).collect();
+        let pairs: Vec<(u64, &MatF32)> =
+            admitted.iter().zip(&inputs).map(|(p, x)| (p.id, x)).collect();
+        self.engine.sim.reset_stats();
+        let (outs, report) = run_prefill_batch(
+            &mut self.engine.sim,
+            &models[model_idx],
+            &quants[model_idx],
+            &mut self.kv,
+            &pairs,
+        )?;
+        drop(pairs);
+        // Every prefill emits exactly one token: a fresh sequence's
+        // first (the last prompt row's output), and — for a resume —
+        // the *next* token, which the recompute produces as a free
+        // byproduct (the last input row is the pending feedback row,
+        // so the last output row is precisely what the next tick would
+        // have computed).
+        let finishing =
+            admitted.iter().filter(|p| p.emitted.len() + 1 == p.max_new).count() as u64;
+        let charged = self.engine.charge_run(model_idx, now, &report, finishing);
+        let completion = now + charged;
+        for (p, out) in admitted.into_iter().zip(outs) {
+            let fresh = p.emitted.is_empty();
+            let mut emitted = p.emitted;
+            let ttft = match p.ttft {
+                Some(t) => t,
+                None => completion - p.arrival,
+            };
+            if fresh {
+                metrics.ttft.record(completion - p.arrival);
+            } else {
+                // The resume-emitted token's gap spans the whole
+                // preemption: honest client-visible inter-token time.
+                metrics.itl.record(completion - p.last_emit);
+            }
+            metrics.tokens += 1;
+            emitted.push(mat_row(&out, out.rows - 1));
+            let last_emit = completion;
+            let remaining = p.max_new - emitted.len();
+            if remaining == 0 {
+                self.kv.release(p.id);
+                metrics.completed += 1;
+                metrics.e2e.record(completion - p.arrival);
+                completions.push(GenCompletion {
+                    id: p.id,
+                    tokens: stack_rows(&emitted),
+                    ttft_cycles: ttft,
+                    finish_cycle: completion,
+                    preemptions: p.preemptions,
+                });
+            } else {
+                let next_input = emitted.last().expect("prefill emitted a token").clone();
+                self.running.push(RunSeq {
+                    id: p.id,
+                    model: p.model,
+                    admit_order: self.admit_counter,
+                    arrival: p.arrival,
+                    prompt: p.prompt,
+                    emitted,
+                    next_input,
+                    remaining,
+                    max_new: p.max_new,
+                    ttft,
+                    last_emit,
+                    preemptions: p.preemptions,
+                });
+                self.admit_counter += 1;
+            }
+        }
+        metrics.prefill_jobs += 1;
+        metrics.prefill_batch.record(inputs.len() as u64);
+        metrics.kv_occupancy_permille.record(self.kv.occupancy_permille());
+        metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
+        Ok(())
+    }
+
+    fn run_tick_job(
+        &mut self,
+        now: u64,
+        models: &[DecoderModel],
+        quants: &[EncoderQuant],
+        metrics: &mut DecodeMetrics,
+        completions: &mut Vec<GenCompletion>,
+    ) -> Result<()> {
+        // Group the running batch by model (stable in admission order):
+        // one stacked GEMV set per group, all groups one device job.
+        let mut order: Vec<usize> = (0..self.running.len()).collect();
+        order.sort_by_key(|&i| (self.running[i].model, self.running[i].admit_order));
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for &i in &order {
+            let m = self.running[i].model;
+            match groups.last_mut() {
+                Some((gm, idxs)) if *gm == m => idxs.push(i),
+                _ => groups.push((m, vec![i])),
+            }
+        }
+        self.engine.sim.reset_stats();
+        let mut report = CgraEncoderReport::default();
+        let mut outs: Vec<(usize, MatF32)> = Vec::with_capacity(order.len());
+        for (m, idxs) in &groups {
+            let pairs: Vec<(u64, &MatF32)> = idxs
+                .iter()
+                .map(|&i| (self.running[i].id, &self.running[i].next_input))
+                .collect();
+            let (rows, part) = run_decode_tick(
+                &mut self.engine.sim,
+                &models[*m],
+                &quants[*m],
+                &mut self.kv,
+                &pairs,
+            )?;
+            merge_report(&mut report, &part);
+            for (&i, row) in idxs.iter().zip(rows) {
+                outs.push((i, row));
+            }
+        }
+        let finishing =
+            outs.iter().filter(|(i, _)| self.running[*i].remaining == 1).count() as u64;
+        let key = if groups.len() == 1 {
+            groups[0].0
+        } else {
+            // A mixed tick reconfigures between its groups internally,
+            // so neither a discount coming in nor one going out is
+            // sound: clear the resident-context marker *before*
+            // charging (two consecutive mixed ticks would otherwise
+            // match on the sentinel and wrongly waive every group's
+            // configuration cycles).
+            self.engine.last_model = None;
+            MIXED_TICK_KEY
+        };
+        let charged = self.engine.charge_run(key, now, &report, finishing);
+        let completion = now + charged;
+        for (i, row) in outs {
+            let s = &mut self.running[i];
+            metrics.tokens += 1;
+            metrics.itl.record(completion - s.last_emit);
+            s.last_emit = completion;
+            s.emitted.push(row.clone());
+            s.next_input = row;
+            s.remaining -= 1;
+        }
+        let finished: Vec<usize> = self
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.remaining == 0)
+            .map(|(i, _)| i)
+            .collect();
+        for &i in finished.iter().rev() {
+            let s = self.running.remove(i);
+            self.kv.release(s.id);
+            metrics.completed += 1;
+            metrics.e2e.record(completion - s.arrival);
+            completions.push(GenCompletion {
+                id: s.id,
+                tokens: stack_rows(&s.emitted),
+                ttft_cycles: s.ttft,
+                finish_cycle: completion,
+                preemptions: s.preemptions,
+            });
+        }
+        metrics.decode_ticks += 1;
+        metrics.decode_batch.record(order.len() as u64);
+        metrics.kv_occupancy_permille.record(self.kv.occupancy_permille());
+        metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
+        Ok(())
+    }
+}
+
+/// N generation-serving devices behind a class-aware placer: the
+/// decode-fleet discrete-event simulator.
+pub struct DecodeFleetSim {
+    pub cfg: DecodeFleetConfig,
+    devices: Vec<DeviceDecoder>,
+    device_classes: Vec<DeviceClass>,
+    device_class: Vec<usize>,
+    models: Vec<DecoderModel>,
+    quants: Vec<EncoderQuant>,
+    /// Analytic per-prompt-token prefill cost, `[model][class]`.
+    prefill_cost: Vec<Vec<u64>>,
+    /// Analytic per-token decode cost, `[model][class]`.
+    token_cost: Vec<Vec<u64>>,
+    ran: bool,
+}
+
+impl DecodeFleetSim {
+    /// Build a decode fleet over a model catalog (weights seeded
+    /// deterministically per class; static causal calibration per
+    /// model).
+    pub fn new(cfg: DecodeFleetConfig, classes: &[ModelClass], model_seed: u64) -> Self {
+        assert!(!cfg.roster.is_empty(), "decode fleet needs at least one device");
+        assert!(!classes.is_empty(), "decode fleet needs at least one model class");
+        assert!(cfg.ref_mhz > 0, "reference clock must be positive");
+        let (device_classes, device_class) = DeviceClass::dedup_roster(&cfg.roster);
+        let devices: Vec<DeviceDecoder> = cfg
+            .roster
+            .iter()
+            .map(|c| {
+                let kv_cfg = match cfg.kv_pages {
+                    Some(pages) => KvConfig::new(cfg.page_words, pages),
+                    None => KvConfig::with_page_words(c, cfg.page_words),
+                };
+                DeviceDecoder::new(c, cfg.ref_mhz, kv_cfg, cfg.max_running, cfg.schedule)
+            })
+            .collect();
+        let models: Vec<DecoderModel> = classes
+            .iter()
+            .enumerate()
+            .map(|(i, c)| DecoderModel::new(c.cfg, model_seed + i as u64))
+            .collect();
+        let quants: Vec<EncoderQuant> = models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                EncoderQuant::calibrate_causal_seeded(
+                    m,
+                    (model_seed + i as u64).wrapping_add(0xDEC0DE),
+                )
+            })
+            .collect();
+        let prefill_cost: Vec<Vec<u64>> = classes
+            .iter()
+            .map(|mc| {
+                device_classes
+                    .iter()
+                    .map(|dc| {
+                        (analytic_encoder_ref_cycles(dc, &mc.cfg, cfg.ref_mhz)
+                            / mc.cfg.seq.max(1) as u64)
+                            .max(1)
+                    })
+                    .collect()
+            })
+            .collect();
+        let token_cost: Vec<Vec<u64>> = classes
+            .iter()
+            .map(|mc| {
+                device_classes
+                    .iter()
+                    .map(|dc| analytic_decode_token_ref_cycles(dc, &mc.cfg, cfg.ref_mhz))
+                    .collect()
+            })
+            .collect();
+        Self {
+            cfg,
+            devices,
+            device_classes,
+            device_class,
+            models,
+            quants,
+            prefill_cost,
+            token_cost,
+            ran: false,
+        }
+    }
+
+    /// The served model catalog (index-aligned with request `model`).
+    pub fn models(&self) -> &[DecoderModel] {
+        &self.models
+    }
+
+    /// Place on the device with the least expected backlog in
+    /// class-aware cycles (including this request's own cost on each
+    /// candidate's class), ties to the lowest index. Devices whose KV
+    /// pool could never hold the request's worst case are not
+    /// candidates — on a big.LITTLE fleet a long generation routes to
+    /// the big class instead of being rejected at a little device; a
+    /// request no device can ever hold is rejected with the reason.
+    fn place(&mut self, req: GenRequest, now: u64, metrics: &mut DecodeMetrics) {
+        let cfg = self.models[req.model].cfg;
+        let worst = req.prompt.rows + req.max_new_tokens.saturating_sub(1);
+        let candidate = (0..self.devices.len())
+            .filter(|&d| {
+                let cap = self.devices[d].kv_capacity_tokens(&cfg);
+                worst <= cap
+            })
+            .min_by_key(|&d| {
+                let c = self.device_class[d];
+                let own = self.prefill_cost[req.model][c]
+                    .saturating_mul(req.prompt.rows as u64)
+                    .saturating_add(
+                        self.token_cost[req.model][c]
+                            .saturating_mul(req.max_new_tokens.saturating_sub(1) as u64),
+                    );
+                let backlog =
+                    self.devices[d].expected_backlog(c, &self.prefill_cost, &self.token_cost);
+                self.devices[d].free_at().max(now).saturating_add(backlog).saturating_add(own)
+            });
+        let Some(d) = candidate else {
+            let best_cap = (0..self.devices.len())
+                .map(|d| self.devices[d].kv_capacity_tokens(&cfg))
+                .max()
+                .unwrap_or(0);
+            metrics.rejected += 1;
+            metrics.rejections.push((
+                req.id,
+                AdmitError::TooLarge { worst_tokens: worst, capacity_tokens: best_cap }
+                    .to_string(),
+            ));
+            return;
+        };
+        let id = req.id;
+        if let Err(e) = self.devices[d].submit(req, &cfg) {
+            metrics.rejected += 1;
+            metrics.rejections.push((id, e.to_string()));
+        }
+    }
+
+    /// Run the fleet over a generation request stream to completion.
+    /// Returns the aggregated metrics and every completion (outputs
+    /// included — the join/leave bit-identity tests compare them to
+    /// solo runs). Single-shot, like the encoder fleet.
+    pub fn run(
+        &mut self,
+        mut requests: Vec<GenRequest>,
+    ) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
+        assert!(!self.ran, "DecodeFleetSim::run is single-shot; build a fresh fleet per run");
+        self.ran = true;
+        requests.sort_by_key(|r| (r.arrival_cycle, r.id));
+        let mut arrivals = requests.into_iter().peekable();
+        let mut metrics = DecodeMetrics::default();
+        let mut completions: Vec<GenCompletion> = Vec::new();
+        let mut now: u64 = 0;
+        loop {
+            while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
+                let r = arrivals.next().expect("peeked");
+                self.place(r, now, &mut metrics);
+            }
+            for d in 0..self.devices.len() {
+                while self.devices[d].free_at() <= now && self.devices[d].has_work() {
+                    let progressed = self.devices[d].step(
+                        now,
+                        &self.models,
+                        &self.quants,
+                        &mut metrics,
+                        &mut completions,
+                    )?;
+                    if !progressed {
+                        break;
+                    }
+                }
+            }
+            let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
+            for d in &self.devices {
+                if d.has_work() && d.free_at() > now {
+                    let t = d.free_at();
+                    next = Some(next.map_or(t, |n| n.min(t)));
+                }
+            }
+            match next {
+                Some(t) => {
+                    debug_assert!(t > now, "event horizon must advance");
+                    now = t;
+                }
+                None => break,
+            }
+        }
+        assert!(
+            self.devices.iter().all(|d| !d.has_work()),
+            "decode fleet ended with unserved work — scheduling invariant broken"
+        );
+        metrics.per_device = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let e = d.engine();
+                let class = &self.device_classes[self.device_class[i]];
+                DeviceMetrics {
+                    served: e.served,
+                    busy_cycles: e.busy_cycles,
+                    steals: 0,
+                    stats: e.stats.clone(),
+                    leakage_scale: class.leakage_scale(),
+                    dynamic_scale: class.dynamic_scale(),
+                }
+            })
+            .collect();
+        for d in &self.devices {
+            metrics.stats.merge(&d.engine().stats);
+            metrics.kv_fill_words += d.kv_metrics().fill_words;
+            metrics.kv_read_words += d.kv_metrics().read_words;
+        }
+        Ok((metrics, completions))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShiftRng;
+
+    fn tiny_classes() -> Vec<ModelClass> {
+        vec![ModelClass {
+            name: "gen-tiny",
+            cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+            weight: 1.0,
+            sla_ms: 0.0,
+            priority: 0,
+        }]
+    }
+
+    fn gen_req(id: u64, prompt_rows: usize, max_new: usize, arrival: u64) -> GenRequest {
+        let mut rng = XorShiftRng::new(100 + id);
+        let mut prompt = MatF32::zeros(prompt_rows, 16);
+        for v in &mut prompt.data {
+            *v = rng.normal() * 0.5;
+        }
+        GenRequest { id, model: 0, prompt, max_new_tokens: max_new, arrival_cycle: arrival }
+    }
+
+    fn single_device_cfg() -> DecodeFleetConfig {
+        DecodeFleetConfig {
+            roster: vec![DeviceClass::paper()],
+            ref_mhz: 100,
+            max_running: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serves_generation_stream_with_phase_metrics() {
+        let classes = tiny_classes();
+        let reqs = vec![gen_req(0, 3, 4, 0), gen_req(1, 2, 3, 1_000)];
+        let mut fleet = DecodeFleetSim::new(single_device_cfg(), &classes, 42);
+        let (m, done) = fleet.run(reqs).unwrap();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.tokens, 7, "4 + 3 tokens emitted");
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            let want = if c.id == 0 { 4 } else { 3 };
+            assert_eq!(c.tokens.rows, want);
+            assert!(c.tokens.data.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(m.ttft.count(), 2);
+        assert!(m.ttft.p50() > 0);
+        assert_eq!(m.itl.count() as u64, m.tokens - 2, "every non-first token has an ITL");
+        assert!(m.decode_ticks > 0 && m.prefill_jobs > 0);
+        assert!(m.kv_fill_words > 0 && m.kv_read_words > 0);
+        assert!(m.makespan_cycles > 0);
+        assert!(m.tokens_per_sec(100.0) > 0.0);
+        assert_eq!(m.per_device.len(), 1);
+        assert_eq!(m.per_device[0].served, 2);
+    }
+
+    #[test]
+    fn decode_fleet_is_seed_deterministic() {
+        let classes = tiny_classes();
+        let mk = || {
+            let reqs =
+                vec![gen_req(0, 3, 3, 0), gen_req(1, 4, 4, 500), gen_req(2, 2, 5, 500)];
+            let mut fleet = DecodeFleetSim::new(single_device_cfg(), &classes, 42);
+            fleet.run(reqs).unwrap()
+        };
+        let (m1, c1) = mk();
+        let (m2, c2) = mk();
+        assert_eq!(m1, m2, "decode metrics must be a pure function of the inputs");
+        assert_eq!(c1, c2, "completions (outputs included) must be reproducible");
+    }
+
+    #[test]
+    fn kv_pressure_preempts_and_still_completes_everything() {
+        // 3 pages of 256 words; 32 words/token → 8 tokens/page. Three
+        // sequences of worst case 7 tokens each need 1 page apiece at
+        // first, but growth across the page boundary cannot happen —
+        // so shrink pages instead: 64 words = 2 tokens per page, 3
+        // sequences × up to 7 tokens ≫ 6 resident tokens → pressure.
+        let classes = tiny_classes();
+        let cfg = DecodeFleetConfig {
+            roster: vec![DeviceClass::paper()],
+            ref_mhz: 100,
+            max_running: 4,
+            page_words: 64,
+            kv_pages: Some(3),
+            ..Default::default()
+        };
+        let reqs = vec![gen_req(0, 2, 5, 0), gen_req(1, 2, 5, 0), gen_req(2, 2, 5, 0)];
+        let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+        let (m, done) = fleet.run(reqs).unwrap();
+        assert_eq!(m.completed, 3, "pressure must delay, never lose, sequences");
+        assert!(m.preemptions > 0, "the tiny pool must force preemption");
+        assert!(done.iter().any(|c| c.preemptions > 0));
+        assert_eq!(m.tokens, 15);
+        for c in &done {
+            assert_eq!(c.tokens.rows, 5);
+        }
+    }
+
+    #[test]
+    fn impossible_requests_are_rejected_with_reasons() {
+        let classes = tiny_classes();
+        // Context limit is 8: prompt 6 + 4 new = worst 9 > 8.
+        let reqs = vec![gen_req(0, 6, 4, 0), gen_req(1, 2, 2, 0)];
+        let mut fleet = DecodeFleetSim::new(single_device_cfg(), &classes, 42);
+        let (m, done) = fleet.run(reqs).unwrap();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.rejections.len(), 1);
+        assert_eq!(m.rejections[0].0, 0);
+        assert!(
+            m.rejections[0].1.contains("never fit"),
+            "reason must be printable: {}",
+            m.rejections[0].1
+        );
+        assert_eq!(m.completed, 1);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+    }
+
+    #[test]
+    fn placement_routes_kv_heavy_requests_to_the_big_class() {
+        // wpt = 2·64·1 = 128 words/token; 192-word pages hold 1 token,
+        // so the little class's pool (4096/192 = 21 pages) can never
+        // hold a 22-token worst case while the big class (42 pages)
+        // can. Capacity-aware placement must route there instead of
+        // rejecting at the little device.
+        let classes = vec![ModelClass {
+            name: "kv-heavy",
+            cfg: XformerConfig { n_layers: 1, seq: 32, d_model: 64, n_heads: 2, d_ff: 32 },
+            weight: 1.0,
+            sla_ms: 0.0,
+            priority: 0,
+        }];
+        let roster = DeviceClass::parse_roster("4x4@100:1,8x4@200:1").unwrap();
+        let cfg = DecodeFleetConfig {
+            roster,
+            ref_mhz: 100,
+            max_running: 2,
+            page_words: 192,
+            ..Default::default()
+        };
+        let mut rng = XorShiftRng::new(7);
+        let mut prompt = MatF32::zeros(10, 64);
+        for v in &mut prompt.data {
+            *v = rng.normal() * 0.5;
+        }
+        let reqs =
+            vec![GenRequest { id: 0, model: 0, prompt, max_new_tokens: 13, arrival_cycle: 0 }];
+        let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+        let (m, done) = fleet.run(reqs).unwrap();
+        assert_eq!(m.rejected, 0, "the big class must absorb it: {:?}", m.rejections);
+        assert_eq!(m.completed, 1);
+        assert_eq!(done[0].tokens.rows, 13);
+        assert_eq!(m.per_device[0].served, 0, "21 pages can never hold 22 tokens");
+        assert_eq!(m.per_device[1].served, 1);
+    }
+
+    #[test]
+    fn continuous_batching_outruns_sequential_decode() {
+        // Four simultaneous generation requests on one device: the
+        // continuous batch (max_running 4) coalesces their decode
+        // steps into stacked GEMVs and must finish the work sooner
+        // than strictly sequential per-request decode (max_running 1).
+        let classes = tiny_classes();
+        let mk = |max_running: usize| {
+            let reqs: Vec<GenRequest> =
+                (0..4).map(|i| gen_req(i, 3, 4, 0)).collect();
+            let cfg = DecodeFleetConfig {
+                roster: vec![DeviceClass::paper()],
+                ref_mhz: 100,
+                max_running,
+                ..Default::default()
+            };
+            let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+            fleet.run(reqs).unwrap().0
+        };
+        let seq = mk(1);
+        let cont = mk(4);
+        assert_eq!(seq.completed, 4);
+        assert_eq!(cont.completed, 4);
+        assert!((seq.mean_decode_occupancy() - 1.0).abs() < 1e-9);
+        assert!(cont.mean_decode_occupancy() > 1.0);
+        assert!(
+            cont.makespan_cycles < seq.makespan_cycles,
+            "continuous batching must clear the burst sooner: {} vs {}",
+            cont.makespan_cycles,
+            seq.makespan_cycles
+        );
+        assert!(cont.tokens_per_sec(100.0) > seq.tokens_per_sec(100.0));
+    }
+}

@@ -1,0 +1,519 @@
+//! Paged KV cache: fixed-size pages of on-chip K/V residency with
+//! per-sequence page tables and exact word accounting.
+//!
+//! Decode steps are GEMV-shaped and memory-bound: the dominant traffic
+//! is reading every cached K/V row once per step per layer. What bounds
+//! *concurrency* on an edge device is therefore KV **residency** — how
+//! many sequences' caches fit on chip at once. This module models that
+//! the way modern serving stacks do (vLLM's PagedAttention): the KV
+//! arena is a pool of fixed-size pages (`page_words` 32-bit words
+//! each), a sequence owns a page *table* (an ordered list of page
+//! frames), and tokens map to (page, slot) by simple division — no
+//! per-sequence contiguity, no fragmentation beyond the final partial
+//! page.
+//!
+//! ## Budget
+//!
+//! The pool is provisioned from the device class's scratchpad: **half
+//! of L1** is reserved for KV pages ([`KvConfig::for_class`]), so an
+//! `8x4` class — whose L1 scales with its row count — holds twice the
+//! resident tokens of the paper's `4x4`. One token of one sequence
+//! costs `2 · d_model · n_layers` words (K and V rows across every
+//! layer), giving `tokens_per_page = page_words / words_per_token`
+//! per-sequence page geometry; models of different shapes coexist in
+//! one pool because pages are raw words.
+//!
+//! ## Contract
+//!
+//! Admission and growth are **checked, never silent**: a sequence that
+//! could never fit is rejected with a typed reason
+//! ([`AdmitError::TooLarge`]), one that merely cannot fit *now* reports
+//! [`AdmitError::NoCapacity`] (the scheduler's cue to wait or preempt),
+//! and every write is bounds-checked against the owning table — a bug
+//! cannot corrupt another sequence's pages. Fills and reads are counted
+//! exactly ([`KvMetrics`]: `2·d_model` words per token-layer fill,
+//! `2·d_model·len` words per per-layer gather), which is what the
+//! decode metrics and the FIG8 bench report as KV traffic.
+
+use crate::config::DeviceClass;
+use crate::util::mat::MatF32;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Pool geometry: page size in 32-bit words and the page count of the
+/// device's KV budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Words per page (fixed for the pool; raw words, so models of
+    /// different shapes share one pool).
+    pub page_words: usize,
+    /// Pages in the pool (the device budget).
+    pub total_pages: usize,
+}
+
+impl KvConfig {
+    /// Default page size: 1 KiWord = 16 resident tokens of the tiny
+    /// edge class (d_model 32, 1 layer) per page.
+    pub const DEFAULT_PAGE_WORDS: usize = 1024;
+
+    pub fn new(page_words: usize, total_pages: usize) -> Self {
+        assert!(page_words > 0 && total_pages > 0, "KV pool must be non-empty");
+        Self { page_words, total_pages }
+    }
+
+    /// The budget formula: **half of the class's L1 words** are
+    /// reserved for KV pages, split into [`Self::DEFAULT_PAGE_WORDS`]
+    /// pages. Row-scaled classes therefore hold proportionally more
+    /// resident sequences — the memory lever that makes big.LITTLE
+    /// decode placement interesting.
+    pub fn for_class(class: &DeviceClass) -> Self {
+        Self::with_page_words(class, Self::DEFAULT_PAGE_WORDS)
+    }
+
+    /// [`Self::for_class`] with an explicit page size.
+    pub fn with_page_words(class: &DeviceClass, page_words: usize) -> Self {
+        let budget = class.arch.mem.l1_words / 2;
+        let page_words = page_words.max(1);
+        Self { page_words, total_pages: (budget / page_words).max(1) }
+    }
+
+    /// Total pool capacity in words.
+    pub fn budget_words(&self) -> usize {
+        self.page_words * self.total_pages
+    }
+}
+
+/// Why a sequence could not be admitted or grown. Every variant carries
+/// the numbers behind the decision — reject-with-reason, never a bare
+/// boolean.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The sequence's worst-case length can never fit the pool, even
+    /// empty. Reject the request.
+    TooLarge { worst_tokens: usize, capacity_tokens: usize },
+    /// Not enough free pages right now. Wait for a release, or preempt.
+    NoCapacity { needed_pages: usize, free_pages: usize },
+    /// One token of this model is wider than a page.
+    TokenTooWide { words_per_token: usize, page_words: usize },
+    /// The sequence id is already resident.
+    AlreadyAdmitted { seq: u64 },
+    /// The sequence id is not resident (stale handle).
+    Unknown { seq: u64 },
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::TooLarge { worst_tokens, capacity_tokens } => write!(
+                f,
+                "sequence can never fit: worst case {worst_tokens} tokens vs pool \
+                 capacity {capacity_tokens}"
+            ),
+            Self::NoCapacity { needed_pages, free_pages } => {
+                write!(f, "no capacity: needs {needed_pages} pages, {free_pages} free")
+            }
+            Self::TokenTooWide { words_per_token, page_words } => write!(
+                f,
+                "one token ({words_per_token} words) exceeds the page size ({page_words})"
+            ),
+            Self::AlreadyAdmitted { seq } => write!(f, "sequence {seq} already admitted"),
+            Self::Unknown { seq } => write!(f, "sequence {seq} not resident"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Exact traffic and lifecycle counters for one pool.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KvMetrics {
+    /// Words written into pages (K/V fills): `2·d_model` per
+    /// token-layer write.
+    pub fill_words: u64,
+    /// Words gathered out of pages for attention: `2·d_model·len` per
+    /// per-layer read.
+    pub read_words: u64,
+    /// Sequences admitted (including re-admissions after preemption).
+    pub admitted: u64,
+    /// Sequences released (completion or preemption).
+    pub released: u64,
+    /// Pages returned to the free list by releases.
+    pub freed_pages: u64,
+}
+
+/// One resident sequence: shape, page table, committed length.
+#[derive(Debug, Clone)]
+struct SeqKv {
+    d_model: usize,
+    n_layers: usize,
+    tokens_per_page: usize,
+    /// Ordered page frames; token `t` lives in `pages[t / tokens_per_page]`.
+    pages: Vec<usize>,
+    /// Tokens committed (slots reserved; rows may still be being
+    /// written by the in-flight job).
+    len: usize,
+}
+
+impl SeqKv {
+    fn words_per_token(&self) -> usize {
+        2 * self.d_model * self.n_layers
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.tokens_per_page)
+    }
+}
+
+/// The paged pool: frames, free list, per-sequence tables.
+pub struct PagedKvCache {
+    cfg: KvConfig,
+    /// Page frames (each `page_words` f32 slots; the cache stores the
+    /// exact dequantized K/V activations, so decode numerics are
+    /// bit-identical to prefill).
+    frames: Vec<Vec<f32>>,
+    /// Free frame ids, kept sorted descending so `pop()` hands out the
+    /// lowest id first — allocation order is deterministic.
+    free: Vec<usize>,
+    seqs: BTreeMap<u64, SeqKv>,
+    pub metrics: KvMetrics,
+}
+
+impl PagedKvCache {
+    pub fn new(cfg: KvConfig) -> Self {
+        Self {
+            frames: vec![vec![0.0; cfg.page_words]; cfg.total_pages],
+            free: (0..cfg.total_pages).rev().collect(),
+            seqs: BTreeMap::new(),
+            cfg,
+            metrics: KvMetrics::default(),
+        }
+    }
+
+    pub fn config(&self) -> KvConfig {
+        self.cfg
+    }
+
+    /// Resident-token capacity of the whole pool for a model shape.
+    pub fn capacity_tokens(&self, d_model: usize, n_layers: usize) -> usize {
+        let wpt = 2 * d_model * n_layers;
+        if wpt == 0 || wpt > self.cfg.page_words {
+            return 0;
+        }
+        (self.cfg.page_words / wpt) * self.cfg.total_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.cfg.total_pages - self.free.len()
+    }
+
+    /// Pool occupancy in permille (0..=1000) — recorded per decode tick
+    /// into the KV-occupancy histogram.
+    pub fn occupancy_permille(&self) -> u64 {
+        (self.used_pages() as u64 * 1000) / self.cfg.total_pages as u64
+    }
+
+    /// Committed token count of a resident sequence (0 if absent).
+    pub fn len(&self, seq: u64) -> usize {
+        self.seqs.get(&seq).map_or(0, |s| s.len)
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Whether growing `seq` by one token would need a fresh page.
+    pub fn needs_page(&self, seq: u64) -> bool {
+        self.seqs
+            .get(&seq)
+            .is_some_and(|s| s.pages_for(s.len + 1) > s.pages.len())
+    }
+
+    /// Admit a sequence: reserve pages for its `prompt_tokens` and
+    /// commit those slots. `worst_tokens` is the longest the sequence
+    /// can ever grow (prompt + new tokens − 1); a worst case beyond the
+    /// *empty-pool* capacity is rejected outright ([`AdmitError::
+    /// TooLarge`]) — everything admitted is guaranteed completable once
+    /// its peers drain, which is what makes LIFO preemption safe.
+    pub fn admit(
+        &mut self,
+        seq: u64,
+        d_model: usize,
+        n_layers: usize,
+        prompt_tokens: usize,
+        worst_tokens: usize,
+    ) -> Result<(), AdmitError> {
+        assert!(prompt_tokens > 0, "a sequence starts with at least one token");
+        let wpt = 2 * d_model * n_layers;
+        if wpt > self.cfg.page_words {
+            return Err(AdmitError::TokenTooWide {
+                words_per_token: wpt,
+                page_words: self.cfg.page_words,
+            });
+        }
+        if self.seqs.contains_key(&seq) {
+            return Err(AdmitError::AlreadyAdmitted { seq });
+        }
+        let tokens_per_page = self.cfg.page_words / wpt;
+        let capacity = tokens_per_page * self.cfg.total_pages;
+        if worst_tokens.max(prompt_tokens) > capacity {
+            return Err(AdmitError::TooLarge {
+                worst_tokens: worst_tokens.max(prompt_tokens),
+                capacity_tokens: capacity,
+            });
+        }
+        let needed = prompt_tokens.div_ceil(tokens_per_page);
+        if needed > self.free.len() {
+            return Err(AdmitError::NoCapacity {
+                needed_pages: needed,
+                free_pages: self.free.len(),
+            });
+        }
+        let pages: Vec<usize> =
+            (0..needed).map(|_| self.free.pop().expect("checked above")).collect();
+        self.seqs.insert(
+            seq,
+            SeqKv { d_model, n_layers, tokens_per_page, pages, len: prompt_tokens },
+        );
+        self.metrics.admitted += 1;
+        Ok(())
+    }
+
+    /// Whether [`Self::admit`] would currently succeed for this shape.
+    pub fn can_admit(&self, d_model: usize, n_layers: usize, prompt_tokens: usize) -> bool {
+        let wpt = 2 * d_model * n_layers;
+        if wpt == 0 || wpt > self.cfg.page_words || prompt_tokens == 0 {
+            return false;
+        }
+        let tpp = self.cfg.page_words / wpt;
+        prompt_tokens.div_ceil(tpp) <= self.free.len()
+    }
+
+    /// Commit one more token slot for `seq`, allocating a page when the
+    /// current tail page is full. Returns the token index to write.
+    /// [`AdmitError::NoCapacity`] means the scheduler must free pages
+    /// (preempt) before this sequence can take its next step.
+    pub fn begin_token(&mut self, seq: u64) -> Result<usize, AdmitError> {
+        let free_now = self.free.len();
+        let s = self.seqs.get_mut(&seq).ok_or(AdmitError::Unknown { seq })?;
+        if s.pages_for(s.len + 1) > s.pages.len() {
+            if free_now == 0 {
+                return Err(AdmitError::NoCapacity { needed_pages: 1, free_pages: 0 });
+            }
+            let frame = self.free.pop().expect("checked above");
+            s.pages.push(frame);
+        }
+        let token = s.len;
+        s.len += 1;
+        Ok(token)
+    }
+
+    /// Write one layer's K and V rows for a committed token. Panics on
+    /// out-of-table writes — a scheduling bug must never silently
+    /// corrupt a neighbour's pages.
+    pub fn write_token_layer(
+        &mut self,
+        seq: u64,
+        token: usize,
+        layer: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let s = self.seqs.get(&seq).expect("sequence must be resident");
+        assert!(token < s.len, "token {token} beyond committed length {}", s.len);
+        assert!(layer < s.n_layers, "layer {layer} out of range");
+        assert_eq!(k.len(), s.d_model, "K row width mismatch");
+        assert_eq!(v.len(), s.d_model, "V row width mismatch");
+        let frame = s.pages[token / s.tokens_per_page];
+        let base = (token % s.tokens_per_page) * s.words_per_token() + layer * 2 * s.d_model;
+        let d = s.d_model;
+        let buf = &mut self.frames[frame];
+        buf[base..base + d].copy_from_slice(k);
+        buf[base + d..base + 2 * d].copy_from_slice(v);
+        self.metrics.fill_words += 2 * d as u64;
+    }
+
+    /// Write a whole prompt's K/V for one layer (token rows `0..k.rows`).
+    pub fn write_prompt_layer(&mut self, seq: u64, layer: usize, k: &MatF32, v: &MatF32) {
+        assert_eq!(k.rows, v.rows, "K/V row count mismatch");
+        for t in 0..k.rows {
+            self.write_token_layer(seq, t, layer, k.row(t), v.row(t));
+        }
+    }
+
+    /// Gather one layer's cached K and V (`len × d_model` each) for
+    /// attention, counting the read traffic exactly.
+    pub fn read_layer(&mut self, seq: u64, layer: usize) -> (MatF32, MatF32) {
+        let s = self.seqs.get(&seq).expect("sequence must be resident");
+        let d = s.d_model;
+        let mut k = MatF32::zeros(s.len, d);
+        let mut v = MatF32::zeros(s.len, d);
+        for t in 0..s.len {
+            let frame = s.pages[t / s.tokens_per_page];
+            let base = (t % s.tokens_per_page) * s.words_per_token() + layer * 2 * d;
+            let buf = &self.frames[frame];
+            k.data[t * d..(t + 1) * d].copy_from_slice(&buf[base..base + d]);
+            v.data[t * d..(t + 1) * d].copy_from_slice(&buf[base + d..base + 2 * d]);
+        }
+        self.metrics.read_words += (2 * d * s.len) as u64;
+        (k, v)
+    }
+
+    /// Release a sequence (completion or preemption), returning its
+    /// pages to the free list. Returns the page count freed.
+    pub fn release(&mut self, seq: u64) -> usize {
+        let Some(s) = self.seqs.remove(&seq) else { return 0 };
+        let n = s.pages.len();
+        self.free.extend(s.pages);
+        // Keep the free list sorted descending so the next allocation
+        // is still the lowest id (deterministic reuse).
+        self.free.sort_unstable_by(|a, b| b.cmp(a));
+        self.metrics.released += 1;
+        self.metrics.freed_pages += n as u64;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_pool() -> PagedKvCache {
+        // 4 pages × 256 words; d_model 16, 1 layer → 32 words/token →
+        // 8 tokens per page, 32-token pool capacity.
+        PagedKvCache::new(KvConfig::new(256, 4))
+    }
+
+    fn row(d: usize, fill: f32) -> Vec<f32> {
+        vec![fill; d]
+    }
+
+    #[test]
+    fn admit_write_read_roundtrip() {
+        let mut kv = tiny_pool();
+        kv.admit(7, 16, 1, 3, 10).unwrap();
+        assert_eq!(kv.len(7), 3);
+        assert_eq!(kv.used_pages(), 1);
+        for t in 0..3 {
+            kv.write_token_layer(7, t, 0, &row(16, t as f32), &row(16, -(t as f32)));
+        }
+        let (k, v) = kv.read_layer(7, 0);
+        assert_eq!((k.rows, k.cols), (3, 16));
+        assert_eq!(k.at(2, 5), 2.0);
+        assert_eq!(v.at(1, 0), -1.0);
+        assert_eq!(kv.metrics.fill_words, 3 * 32);
+        assert_eq!(kv.metrics.read_words, 3 * 32);
+    }
+
+    #[test]
+    fn growth_allocates_pages_on_boundaries() {
+        let mut kv = tiny_pool();
+        kv.admit(1, 16, 1, 8, 20).unwrap(); // exactly one full page
+        assert_eq!(kv.used_pages(), 1);
+        assert!(kv.needs_page(1));
+        let t = kv.begin_token(1).unwrap();
+        assert_eq!(t, 8);
+        assert_eq!(kv.used_pages(), 2, "crossing the boundary takes a page");
+        for _ in 9..16 {
+            kv.begin_token(1).unwrap();
+        }
+        assert_eq!(kv.used_pages(), 2, "within-page growth allocates nothing");
+    }
+
+    #[test]
+    fn rejects_carry_reasons() {
+        let mut kv = tiny_pool();
+        // Worst case beyond the whole pool (capacity 32 tokens).
+        match kv.admit(1, 16, 1, 4, 33) {
+            Err(AdmitError::TooLarge { worst_tokens: 33, capacity_tokens: 32 }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // A token wider than a page.
+        match kv.admit(1, 256, 1, 1, 1) {
+            Err(AdmitError::TokenTooWide { .. }) => {}
+            other => panic!("expected TokenTooWide, got {other:?}"),
+        }
+        // Pool full right now: NoCapacity, not TooLarge.
+        kv.admit(1, 16, 1, 24, 24).unwrap(); // 3 pages
+        match kv.admit(2, 16, 1, 9, 9) {
+            Err(AdmitError::NoCapacity { needed_pages: 2, free_pages: 1 }) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        assert!(!kv.can_admit(16, 1, 9));
+        assert!(kv.can_admit(16, 1, 8));
+        // Double admission is a typed error too.
+        match kv.admit(1, 16, 1, 1, 1) {
+            Err(AdmitError::AlreadyAdmitted { seq: 1 }) => {}
+            other => panic!("expected AlreadyAdmitted, got {other:?}"),
+        }
+        let msg = AdmitError::NoCapacity { needed_pages: 2, free_pages: 1 }.to_string();
+        assert!(msg.contains("2 pages"), "reasons must be printable: {msg}");
+    }
+
+    #[test]
+    fn begin_token_reports_exhaustion() {
+        let mut kv = tiny_pool();
+        kv.admit(1, 16, 1, 24, 32).unwrap(); // 3 of 4 pages
+        kv.admit(2, 16, 1, 8, 16).unwrap(); // the last page
+        // Sequence 2 wants a new page: none free.
+        assert!(kv.needs_page(2));
+        match kv.begin_token(2) {
+            Err(AdmitError::NoCapacity { needed_pages: 1, free_pages: 0 }) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        // Releasing sequence 1 unblocks it.
+        assert_eq!(kv.release(1), 3);
+        assert_eq!(kv.begin_token(2).unwrap(), 8);
+        assert_eq!(kv.metrics.released, 1);
+        assert_eq!(kv.metrics.freed_pages, 3);
+    }
+
+    #[test]
+    fn release_reuses_lowest_frames_deterministically() {
+        let mut kv = tiny_pool();
+        kv.admit(1, 16, 1, 8, 8).unwrap(); // frame 0
+        kv.admit(2, 16, 1, 8, 8).unwrap(); // frame 1
+        kv.release(1);
+        kv.admit(3, 16, 1, 8, 8).unwrap(); // must take frame 0 again
+        kv.write_token_layer(3, 0, 0, &row(16, 9.0), &row(16, 9.0));
+        let (k2, _) = kv.read_layer(2, 0);
+        assert!(
+            k2.data.iter().all(|&x| x == 0.0),
+            "a reused frame must never alias a live sequence"
+        );
+        let (k3, _) = kv.read_layer(3, 0);
+        assert_eq!(k3.at(0, 0), 9.0);
+    }
+
+    #[test]
+    fn pool_budget_scales_with_device_class() {
+        let little = KvConfig::for_class(&DeviceClass::paper());
+        let big = KvConfig::for_class(&DeviceClass::parse("8x4@200").unwrap());
+        assert_eq!(little.page_words, KvConfig::DEFAULT_PAGE_WORDS);
+        assert_eq!(
+            big.total_pages,
+            2 * little.total_pages,
+            "row-scaled L1 doubles the KV budget"
+        );
+        // Paper class: 32 KiB L1 = 8192 words; half = 4096 words = 4 pages.
+        assert_eq!(little.total_pages, 4);
+    }
+
+    #[test]
+    fn multi_layer_layout_keeps_layers_separate() {
+        let mut kv = PagedKvCache::new(KvConfig::new(512, 2));
+        kv.admit(5, 16, 2, 2, 4).unwrap(); // 64 words/token, 8 tokens/page
+        kv.write_token_layer(5, 0, 0, &row(16, 1.0), &row(16, 2.0));
+        kv.write_token_layer(5, 0, 1, &row(16, 3.0), &row(16, 4.0));
+        let (k0, v0) = kv.read_layer(5, 0);
+        let (k1, v1) = kv.read_layer(5, 1);
+        assert_eq!(k0.at(0, 0), 1.0);
+        assert_eq!(v0.at(0, 0), 2.0);
+        assert_eq!(k1.at(0, 0), 3.0);
+        assert_eq!(v1.at(0, 0), 4.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! Autoregressive decoding: generation serving with a paged KV cache
+//! and continuous batching.
+//!
+//! Everything the stack served before this subsystem was encoder-style
+//! one-shot inference — one request, one stacked forward, done. Real
+//! edge traffic (assistants, translation, speech) is *generation*:
+//! per-step GEMVs against a growing K/V history, where cache residency
+//! and iteration-level batching — not one big GEMM — dominate latency
+//! and memory traffic (the levers the Full Stack Transformer-inference
+//! survey and EdgeTran identify as binding on edge platforms). Three
+//! layers implement it:
+//!
+//! - [`kv`] — the **paged KV cache**: fixed-size pages from a
+//!   per-device budget derived from the class's L1 provisioning (half
+//!   of L1; row-scaled classes hold proportionally more), per-sequence
+//!   page tables, exact fill/read word accounting, and typed
+//!   reject-with-reason admission — never silent corruption.
+//! - [`engine`] — the quantized **prefill** (stacked causal forward
+//!   over the prompt, K/V written to pages) and **decode tick** (one
+//!   stacked `B × d` GEMV per site across every running sequence, each
+//!   new row attending to its own cached K/V). Under the static causal
+//!   calibration both are bit-identical, token for token, to a
+//!   one-shot causal forward — the paged cache changes timing and
+//!   traffic, never results.
+//! - [`fleet`] — **continuous batching**: [`fleet::DeviceDecoder`]
+//!   (per-device waiting/running/preempted lifecycle, LIFO preemption
+//!   under KV pressure, prefill/decode interleaving policy) and
+//!   [`fleet::DecodeFleetSim`] (class-aware placement over N devices,
+//!   deterministic event loop, per-phase metrics: TTFT, inter-token
+//!   latency, KV occupancy, preemption and reject counters).
+//!
+//! The CLI serves this path as `cluster --workload decode`; the FIG8
+//! bench charts tokens/sec and TTFT against concurrent sequences on
+//! homogeneous and big.LITTLE fleets.
+
+pub mod engine;
+pub mod fleet;
+pub mod kv;
+
+pub use engine::{mat_row, run_decode_tick, run_prefill_batch};
+pub use fleet::{
+    analytic_decode_token_cycles, analytic_decode_token_ref_cycles, DecodeFleetConfig,
+    DecodeFleetSim, DecodeMetrics, DecodeSchedule, DeviceDecoder, GenCompletion,
+};
+pub use kv::{AdmitError, KvConfig, KvMetrics, PagedKvCache};

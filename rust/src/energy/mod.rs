@@ -44,6 +44,19 @@ impl EnergyBreakdown {
     pub fn total_uj(&self) -> f64 {
         self.total_pj() / 1e6
     }
+
+    /// Field-wise accumulation — summing per-device breakdowns into a
+    /// fleet total (each device may carry its own class scaling).
+    pub fn accumulate(&mut self, other: &EnergyBreakdown) {
+        self.compute_pj += other.compute_pj;
+        self.regfile_pj += other.regfile_pj;
+        self.interconnect_pj += other.interconnect_pj;
+        self.l1_pj += other.l1_pj;
+        self.ext_mem_pj += other.ext_mem_pj;
+        self.mob_pj += other.mob_pj;
+        self.config_pj += other.config_pj;
+        self.leakage_pj += other.leakage_pj;
+    }
 }
 
 /// Energy model: evaluates a [`Stats`] vector.

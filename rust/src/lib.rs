@@ -23,6 +23,10 @@
 //!   dispatcher with pluggable placement policies and queue disciplines,
 //!   tile-sharded multi-device GEMM, and fleet metrics with p50/p95/p99
 //!   latency percentiles, per-device utilization and fleet energy.
+//! - [`decode`] — autoregressive generation serving: causal
+//!   prefill/decode-step execution, a paged KV cache with exact word
+//!   accounting, and continuous batching across the fleet with
+//!   per-phase metrics (TTFT, inter-token latency, KV occupancy).
 //! - [`baseline`] — scalar general-purpose-processor cost/energy model.
 //! - [`runtime`] — PJRT wrapper used to validate numerics against the
 //!   AOT-compiled JAX model (build-time Python, never on the request
@@ -37,6 +41,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod decode;
 pub mod energy;
 pub mod gemm;
 pub mod interconnect;

@@ -6,11 +6,16 @@
 //!                                — run + verify one GEMM, print metrics
 //!   encoder [--layers n] [--seq s] [--dmodel d] [--heads h] [--dff f]
 //!                                — run a tiny encoder on the array
-//!   serve [--requests n] [--rate rps] [--batch b]
-//!                                — closed-loop serving demo (coordinator)
+//!   serve [--requests n] [--rate rps] [--batch b] [--decode]
+//!                                — closed-loop serving demo
+//!                                  (coordinator); --decode serves
+//!                                  generation requests through the
+//!                                  single-device decode coordinator
 //!   cluster [--fleet SPEC | --devices d] [--requests n] [--rate rps]
 //!           [--policy p] [--queue q] [--arrival a] [--seed s]
-//!           [--batch b] [--no-steal]
+//!           [--batch b] [--no-steal] [--workload encoder|decode]
+//!           [--max-running r] [--page-words w]
+//!           [--schedule prefill-first|decode-first]
 //!                                — fleet-serving simulation (cluster);
 //!                                  --fleet takes a class roster like
 //!                                  `4x4@100:3,8x4@200:1` (mixed array
@@ -19,7 +24,15 @@
 //!                                  --batch > 1 stacks same-model
 //!                                  requests into true batch GEMM jobs,
 //!                                  work-stealing is on unless
-//!                                  --no-steal
+//!                                  --no-steal. --workload decode runs
+//!                                  autoregressive generation instead:
+//!                                  prefill + paged-KV decode with
+//!                                  continuous batching (--max-running
+//!                                  sequences per device, --page-words
+//!                                  KV pages, --schedule interleaving),
+//!                                  reporting TTFT / inter-token
+//!                                  latency / tokens-per-second / KV
+//!                                  occupancy and preemptions
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
@@ -29,7 +42,8 @@ use cgra_edge::cluster::{
     WorkloadGen,
 };
 use cgra_edge::config::{ArchConfig, DeviceClass};
-use cgra_edge::coordinator::{Coordinator, Request};
+use cgra_edge::coordinator::{Coordinator, DecodeCoordinator, Request};
+use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeSchedule, KvConfig};
 use cgra_edge::energy::EnergyModel;
 use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, MapVariant, OutputMode};
 use cgra_edge::sim::CgraSim;
@@ -42,6 +56,49 @@ fn load_cfg(args: &Args) -> Result<ArchConfig> {
         Some(path) => ArchConfig::from_file(path),
         None => Ok(ArchConfig::default()),
     }
+}
+
+/// Roster from `--fleet SPEC` or `--devices N` of the `--cfg` arch.
+fn parse_roster(args: &Args, arch: &ArchConfig) -> Result<Vec<DeviceClass>> {
+    let devices: usize = args.flag_parse("devices", 4usize)?;
+    if devices == 0 {
+        bail!("--devices must be at least 1");
+    }
+    match args.flag("fleet") {
+        Some(spec) => DeviceClass::parse_roster(spec),
+        None => Ok(vec![DeviceClass::from_arch(arch.clone()); devices]),
+    }
+}
+
+/// One-line `3x4x4@100 + 1x8x4@200`-style roster summary.
+fn roster_summary(roster: &[DeviceClass]) -> String {
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for c in roster {
+        match counts.iter_mut().find(|(name, _)| *name == c.name) {
+            Some((_, k)) => *k += 1,
+            None => counts.push((c.name.clone(), 1)),
+        }
+    }
+    counts.iter().map(|(name, k)| format!("{k}x{name}")).collect::<Vec<_>>().join(" + ")
+}
+
+/// `--arrival poisson|bursty|diurnal` at `--rate`.
+fn parse_arrival(args: &Args, rate: f64) -> Result<ArrivalProcess> {
+    Ok(match args.flag("arrival").unwrap_or("poisson") {
+        "poisson" => ArrivalProcess::Poisson { rate_rps: rate },
+        "bursty" => ArrivalProcess::BurstyOnOff {
+            rate_on_rps: rate * 4.0,
+            rate_off_rps: rate * 0.1,
+            mean_on_s: 0.05,
+            mean_off_s: 0.05,
+        },
+        "diurnal" => ArrivalProcess::DiurnalRamp {
+            base_rps: rate * 0.2,
+            peak_rps: rate * 2.0,
+            period_s: 1.0,
+        },
+        other => bail!("unknown arrival process '{other}' (poisson|bursty|diurnal)"),
+    })
 }
 
 fn cmd_gemm(args: &Args) -> Result<()> {
@@ -142,6 +199,9 @@ fn cmd_encoder(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.switch("decode") {
+        return cmd_serve_decode(args);
+    }
     let cfg = load_cfg(args)?;
     let n: u64 = args.flag_parse("requests", 16u64)?;
     let rate: f64 = args.flag_parse("rate", 50.0f64)?; // requests/sec
@@ -181,18 +241,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_cluster(args: &Args) -> Result<()> {
-    let arch = load_cfg(args)?;
-    let devices: usize = args.flag_parse("devices", 4usize)?;
-    if devices == 0 {
-        bail!("--devices must be at least 1");
+/// `serve --decode`: single-device generation serving through the
+/// decode coordinator (the cluster decode path's one-device sibling).
+fn cmd_serve_decode(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let n: usize = args.flag_parse("requests", 8usize)?;
+    let rate: f64 = args.flag_parse("rate", 50.0f64)?;
+    let max_running: usize = args.flag_parse("max-running", 4usize)?;
+    let xcfg = XformerConfig { n_layers: 1, seq: 16, d_model: 32, n_heads: 2, d_ff: 64 };
+    let class = DeviceClass::from_arch(cfg.clone());
+    let coord = DecodeCoordinator::spawn(class, xcfg, 42, max_running);
+    // One generation-workload source for both serving entry points:
+    // the same generator the `cluster --workload decode` path uses.
+    let classes = vec![ModelClass {
+        name: "serve-decode",
+        cfg: xcfg,
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }];
+    let mut gen = WorkloadGen::new(
+        ArrivalProcess::Poisson { rate_rps: rate },
+        classes,
+        cfg.freq_mhz,
+        99,
+    );
+    for req in gen.generate_gen(n) {
+        coord.submit(req)?;
     }
+    let (m, mut done) = coord.shutdown()?;
+    done.sort_by_key(|c| c.id);
+    for c in &done {
+        println!(
+            "req {:>3}: {:>2} tokens, ttft {:>8} cy, done @ {:>10}{}",
+            c.id,
+            c.tokens.rows,
+            c.ttft_cycles,
+            c.finish_cycle,
+            if c.preemptions > 0 { " (preempted+resumed)" } else { "" }
+        );
+    }
+    println!(
+        "served {} generations ({} tokens, {} rejected): ttft p50 {:.2} ms, \
+         itl p50 {:.2} ms, {:.1} tok/s",
+        m.completed,
+        m.tokens,
+        m.rejected,
+        m.ttft.p50() as f64 / (cfg.freq_mhz * 1e3),
+        m.itl.p50() as f64 / (cfg.freq_mhz * 1e3),
+        m.tokens_per_sec(cfg.freq_mhz)
+    );
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    match args.flag("workload").unwrap_or("encoder") {
+        "encoder" => {}
+        "decode" => return cmd_cluster_decode(args),
+        other => bail!("unknown workload '{other}' (encoder|decode)"),
+    }
+    let arch = load_cfg(args)?;
     // --fleet takes a class roster (`4x4@100:3,8x4@200:1`); --devices N
     // stays as sugar for a homogeneous roster of the --cfg architecture.
-    let roster: Vec<DeviceClass> = match args.flag("fleet") {
-        Some(spec) => DeviceClass::parse_roster(spec)?,
-        None => vec![DeviceClass::from_arch(arch.clone()); devices],
-    };
+    let roster = parse_roster(args, &arch)?;
     let steal = !args.switch("no-steal");
     let n: usize = args.flag_parse("requests", 64usize)?;
     let rate: f64 = args.flag_parse("rate", 400.0f64)?;
@@ -210,21 +321,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "edf" => Discipline::Edf,
         other => bail!("unknown queue discipline '{other}' (fifo|prio|edf)"),
     };
-    let arrival = match args.flag("arrival").unwrap_or("poisson") {
-        "poisson" => ArrivalProcess::Poisson { rate_rps: rate },
-        "bursty" => ArrivalProcess::BurstyOnOff {
-            rate_on_rps: rate * 4.0,
-            rate_off_rps: rate * 0.1,
-            mean_on_s: 0.05,
-            mean_off_s: 0.05,
-        },
-        "diurnal" => ArrivalProcess::DiurnalRamp {
-            base_rps: rate * 0.2,
-            peak_rps: rate * 2.0,
-            period_s: 1.0,
-        },
-        other => bail!("unknown arrival process '{other}' (poisson|bursty|diurnal)"),
-    };
+    let arrival = parse_arrival(args, rate)?;
     let max_batch: usize = args.flag_parse("batch", 1usize)?;
     if max_batch == 0 {
         bail!("--batch must be at least 1");
@@ -234,19 +331,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let mut gen = WorkloadGen::new(arrival, classes.clone(), ref_mhz as f64, seed);
     let requests = gen.generate(n);
     let n_devices = roster.len();
-    // Group the roster by class name for the one-line fleet summary.
-    let mut roster_counts: Vec<(String, usize)> = Vec::new();
-    for c in &roster {
-        match roster_counts.iter_mut().find(|(name, _)| *name == c.name) {
-            Some((_, k)) => *k += 1,
-            None => roster_counts.push((c.name.clone(), 1)),
-        }
-    }
-    let roster_str = roster_counts
-        .iter()
-        .map(|(name, k)| format!("{k}x{name}"))
-        .collect::<Vec<_>>()
-        .join(" + ");
+    let roster_str = roster_summary(&roster);
     let mut fleet = FleetSim::new(
         FleetConfig {
             roster,
@@ -255,6 +340,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             batch: BatchPolicy::greedy(max_batch),
             steal,
             ref_mhz,
+            ..Default::default()
         },
         &classes,
         42,
@@ -306,6 +392,100 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "energy   : {:.2} µJ fleet total, {:.3} µJ/request",
         e.total_uj(),
         if m.completed > 0 { e.total_uj() / m.completed as f64 } else { 0.0 }
+    );
+    Ok(())
+}
+
+/// `cluster --workload decode`: generation serving on the fleet —
+/// prefill + paged-KV decode with continuous batching.
+fn cmd_cluster_decode(args: &Args) -> Result<()> {
+    let arch = load_cfg(args)?;
+    let roster = parse_roster(args, &arch)?;
+    let n: usize = args.flag_parse("requests", 32usize)?;
+    let rate: f64 = args.flag_parse("rate", 200.0f64)?;
+    let seed: u64 = args.flag_parse("seed", 1u64)?;
+    let max_running: usize = args.flag_parse("max-running", 8usize)?;
+    if max_running == 0 {
+        bail!("--max-running must be at least 1");
+    }
+    let page_words: usize = args.flag_parse("page-words", KvConfig::DEFAULT_PAGE_WORDS)?;
+    let schedule = match args.flag("schedule").unwrap_or("prefill-first") {
+        "prefill-first" => DecodeSchedule::PrefillFirst,
+        "decode-first" => DecodeSchedule::DecodeFirst,
+        other => bail!("unknown schedule '{other}' (prefill-first|decode-first)"),
+    };
+    let arrival = parse_arrival(args, rate)?;
+    let classes = ModelClass::edge_mix();
+    let ref_mhz = arch.freq_mhz_u64();
+    let mut gen = WorkloadGen::new(arrival, classes.clone(), ref_mhz as f64, seed);
+    let requests = gen.generate_gen(n);
+    let n_devices = roster.len();
+    let roster_str = roster_summary(&roster);
+    let mut fleet = DecodeFleetSim::new(
+        DecodeFleetConfig {
+            roster,
+            ref_mhz,
+            max_running,
+            page_words,
+            kv_pages: None,
+            schedule,
+        },
+        &classes,
+        42,
+    );
+    let (m, _completions) = fleet.run(requests)?;
+    let em = EnergyModel::default();
+    let freq_ref = ref_mhz as f64;
+    let e = m.fleet_energy(&em, freq_ref);
+    let ms = |cy: u64| cy as f64 / (freq_ref * 1e3);
+    println!("fleet    : {roster_str} ({n_devices} devices, timeline @ {ref_mhz} MHz)");
+    println!(
+        "workload : decode, {n} generation requests, arrival {arrival:?}, \
+         {schedule:?}, max {max_running} running/device"
+    );
+    println!(
+        "served   : {} completed, {} rejected, {} tokens",
+        m.completed, m.rejected, m.tokens
+    );
+    for (id, reason) in m.rejections.iter().take(3) {
+        println!("  reject : request {id}: {reason}");
+    }
+    println!(
+        "ttft     : p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
+        ms(m.ttft.p50()),
+        ms(m.ttft.p95()),
+        ms(m.ttft.p99())
+    );
+    println!(
+        "itl      : p50 {:.3} ms  p99 {:.3} ms (inter-token)",
+        ms(m.itl.p50()),
+        ms(m.itl.p99())
+    );
+    println!(
+        "thruput  : {:.1} tok/s over {:.2} ms makespan (e2e p99 {:.3} ms)",
+        m.tokens_per_sec(freq_ref),
+        ms(m.makespan_cycles),
+        ms(m.e2e.p99())
+    );
+    println!(
+        "batching : {} prefill jobs, {} decode ticks, mean occupancy {:.2}",
+        m.prefill_jobs,
+        m.decode_ticks,
+        m.mean_decode_occupancy()
+    );
+    println!(
+        "kv       : occupancy p50 {:.1}% max {:.1}%, {} fill words, {} read words, \
+         {} preemptions",
+        m.kv_occupancy_permille.p50() as f64 / 10.0,
+        m.kv_occupancy_permille.max() as f64 / 10.0,
+        m.kv_fill_words,
+        m.kv_read_words,
+        m.preemptions
+    );
+    println!(
+        "energy   : {:.2} µJ fleet total, {:.3} µJ/token",
+        e.total_uj(),
+        if m.tokens > 0 { e.total_uj() / m.tokens as f64 } else { 0.0 }
     );
     Ok(())
 }

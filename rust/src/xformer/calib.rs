@@ -18,6 +18,7 @@
 //! outside the calibrated range saturate symmetrically at ±127, exactly
 //! like the hardware's clamping quantizer.
 
+use super::decoder::{causal_mask, DecoderModel};
 use super::model::EncoderModel;
 use crate::util::mat::{MatF32, MatI8, MatI32};
 use crate::util::quant::requant_shift;
@@ -145,12 +146,31 @@ impl EncoderQuant {
     /// result forward (so downstream sites see serve-time statistics,
     /// not the float reference).
     pub fn calibrate(model: &EncoderModel, x_cal: &MatF32) -> Self {
-        let cfg = &model.cfg;
-        let (s, dh) = (cfg.seq, cfg.d_head());
+        Self::calibrate_impl(&model.cfg, &model.params.layers, x_cal, false)
+    }
+
+    /// Causal-attention calibration for a [`DecoderModel`]: identical
+    /// to [`Self::calibrate`] except the score matrices are causally
+    /// masked before softmax, so every site sees the statistics the
+    /// prefill/decode serving paths will produce. The representative
+    /// input is a full-context (`cfg.seq`) sequence; shorter serve-time
+    /// prefixes reuse the same fixed scales (that fixedness is what
+    /// makes cached decode bit-identical to one-shot prefill).
+    pub fn calibrate_causal(model: &DecoderModel, x_cal: &MatF32) -> Self {
+        Self::calibrate_impl(&model.cfg, &model.params.layers, x_cal, true)
+    }
+
+    fn calibrate_impl(
+        cfg: &crate::xformer::XformerConfig,
+        model_layers: &[super::model::LayerParams],
+        x_cal: &MatF32,
+        causal: bool,
+    ) -> Self {
+        let (s, dh) = (x_cal.rows, cfg.d_head());
         let att_scale = 1.0 / (dh as f32).sqrt();
         let mut h = x_cal.clone();
-        let mut layers = Vec::with_capacity(model.params.layers.len());
-        for layer in &model.params.layers {
+        let mut layers = Vec::with_capacity(model_layers.len());
+        for layer in model_layers {
             let ln1 = h.layernorm_rows(&layer.ln1_gamma, &layer.ln1_beta, 1e-5);
             let (q_spec, q) = site1(&ln1, &layer.wq);
             let (k_spec, k) = site1(&ln1, &layer.wk);
@@ -173,6 +193,9 @@ impl EncoderQuant {
                 .map(|mut sc| {
                     for val in &mut sc.data {
                         *val *= att_scale;
+                    }
+                    if causal {
+                        causal_mask(&mut sc, 0);
                     }
                     sc.softmax_rows()
                 })
@@ -223,6 +246,18 @@ impl EncoderQuant {
         }
         Self::calibrate(model, &x)
     }
+
+    /// [`Self::calibrate_causal`] with a deterministic synthetic
+    /// full-context input drawn from `seed` (the decoder-side analog of
+    /// [`Self::calibrate_seeded`]).
+    pub fn calibrate_causal_seeded(model: &DecoderModel, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let mut x = MatF32::zeros(model.cfg.seq, model.cfg.d_model);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        Self::calibrate_causal(model, &x)
+    }
 }
 
 #[cfg(test)]
@@ -261,6 +296,35 @@ mod tests {
             assert_eq!(la.ff2.shift, lb.ff2.shift);
             assert_eq!(la.scores.w_scale, lb.scores.w_scale);
         }
+    }
+
+    #[test]
+    fn causal_calibration_is_deterministic_and_differs_from_bidirectional() {
+        use crate::xformer::decoder::DecoderModel;
+        let cfg = XformerConfig { n_layers: 2, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 };
+        let dec = DecoderModel::new(cfg, 7);
+        let a = EncoderQuant::calibrate_causal_seeded(&dec, 11);
+        let b = EncoderQuant::calibrate_causal_seeded(&dec, 11);
+        assert_eq!(a.layers.len(), 2);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.q.x_scale, lb.q.x_scale);
+            assert_eq!(la.attn_v.x_scale, lb.attn_v.x_scale);
+            assert_eq!(la.ff2.shift, lb.ff2.shift);
+        }
+        // Masking reshapes the attention-probability statistics, so at
+        // least the attention-context site must calibrate differently
+        // from the bidirectional pass over the same weights and input.
+        let enc = EncoderModel::new(cfg, 7);
+        let bidi = EncoderQuant::calibrate_seeded(&enc, 11);
+        assert!(
+            a.layers
+                .iter()
+                .zip(&bidi.layers)
+                .any(|(ca, cb)| ca.attn_v.x_scale != cb.attn_v.x_scale
+                    || ca.o.x_scale != cb.o.x_scale
+                    || ca.ff1.x_scale != cb.ff1.x_scale),
+            "causal calibration must not be identical to bidirectional"
+        );
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Decoder-only transformer (autoregressive generation): the float
+//! reference for the decode subsystem.
+//!
+//! A decoder layer is the encoder layer of [`super::model`] with
+//! **causal** self-attention: position `i` attends to positions
+//! `0..=i` only. The parameter layout is identical ([`EncoderParams`]),
+//! so the same weight blobs, initialization and calibration machinery
+//! serve both; what changes is the attention mask — and, downstream,
+//! the serving shape: prefill runs the whole prompt as one causal
+//! forward (a stacked GEMM job), while each decode step runs a single
+//! new row against the cached K/V of everything before it
+//! ([`crate::decode`]).
+//!
+//! Unlike the encoder reference, the causal forward accepts **any**
+//! row count up to the configured context length: a prefix of a
+//! sequence is itself a valid input, and — because every per-row
+//! operation (LayerNorm, residual, GELU, the calibrated GEMM
+//! row-blocks) is row-independent and causal attention never looks
+//! ahead — the outputs for rows `0..p` of a length-`n` forward are
+//! bit-identical to a length-`p` forward over the same prefix. That
+//! prefix property is what makes KV-cached decode exact rather than
+//! approximate (`rust/tests/decode_props.rs` pins it down on the
+//! quantized path).
+
+use super::model::{EncoderParams, LayerParams, XformerConfig};
+use crate::util::mat::MatF32;
+use anyhow::{ensure, Result};
+
+/// Mask the strict upper triangle of a square-ish score matrix to
+/// `-inf`: row `i` (query position `base + i`) may only see key columns
+/// `0..=base + i`. `base` offsets the query rows inside the key axis
+/// (0 for a full forward; the prompt length for a decode suffix).
+pub fn causal_mask(scores: &mut MatF32, base: usize) {
+    for r in 0..scores.rows {
+        let visible = base + r + 1;
+        for c in visible..scores.cols {
+            *scores.at_mut(r, c) = f32::NEG_INFINITY;
+        }
+    }
+}
+
+/// The float decoder (reference path for generation workloads).
+#[derive(Debug, Clone)]
+pub struct DecoderModel {
+    pub cfg: XformerConfig,
+    pub params: EncoderParams,
+}
+
+impl DecoderModel {
+    /// Deterministic init from a seed — the same Xavier-ish scheme (and
+    /// therefore the same weights for the same seed) as the encoder.
+    pub fn new(cfg: XformerConfig, seed: u64) -> Self {
+        Self { cfg, params: EncoderParams::init(&cfg, seed) }
+    }
+
+    /// Causal multi-head self-attention over `x` (`s × d_model`, any
+    /// `s ≥ 1`).
+    pub fn attention_causal_f32(&self, layer: &LayerParams, x: &MatF32) -> MatF32 {
+        let cfg = &self.cfg;
+        let (s, dh) = (x.rows, cfg.d_head());
+        let q = x.matmul(&layer.wq);
+        let k = x.matmul(&layer.wk);
+        let v = x.matmul(&layer.wv);
+        let mut ctx = MatF32::zeros(s, cfg.d_model);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for h in 0..cfg.n_heads {
+            let lo = h * dh;
+            let (qh, kh, vh) = (q.col_slice(lo, dh), k.col_slice(lo, dh), v.col_slice(lo, dh));
+            let mut scores = qh.matmul(&kh.transpose());
+            for val in &mut scores.data {
+                *val *= scale;
+            }
+            causal_mask(&mut scores, 0);
+            let probs = scores.softmax_rows();
+            let out = probs.matmul(&vh);
+            ctx.set_col_slice(lo, &out);
+        }
+        ctx.matmul(&layer.wo)
+    }
+
+    /// One decoder layer (pre-LN residual structure, causal attention).
+    pub fn layer_causal_f32(&self, layer: &LayerParams, x: &MatF32) -> MatF32 {
+        let ln1 = x.layernorm_rows(&layer.ln1_gamma, &layer.ln1_beta, 1e-5);
+        let attn = self.attention_causal_f32(layer, &ln1);
+        let x1 = x.add(&attn);
+        let ln2 = x1.layernorm_rows(&layer.ln2_gamma, &layer.ln2_beta, 1e-5);
+        let ff = ln2.matmul(&layer.w1).gelu().matmul(&layer.w2);
+        x1.add(&ff)
+    }
+
+    /// Full causal forward pass in float over any `s × d_model` input
+    /// with `1 ≤ s ≤ cfg.seq` (`cfg.seq` is the context limit, not a
+    /// fixed shape as in the encoder).
+    pub fn forward_causal_f32(&self, x: &MatF32) -> Result<MatF32> {
+        ensure!(x.cols == self.cfg.d_model, "input width must be d_model");
+        ensure!(
+            x.rows >= 1 && x.rows <= self.cfg.seq,
+            "input rows must be in 1..={} (the context limit)",
+            self.cfg.seq
+        );
+        let mut h = x.clone();
+        for layer in &self.params.layers {
+            h = self.layer_causal_f32(layer, &h);
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShiftRng;
+    use crate::xformer::model::EncoderModel;
+
+    fn cfg() -> XformerConfig {
+        XformerConfig { n_layers: 2, seq: 12, d_model: 16, n_heads: 2, d_ff: 32 }
+    }
+
+    fn input(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        let mut rng = XorShiftRng::new(seed);
+        let mut x = MatF32::zeros(rows, cols);
+        for v in &mut x.data {
+            *v = rng.normal() * 0.5;
+        }
+        x
+    }
+
+    #[test]
+    fn causal_mask_blocks_future_columns() {
+        let mut s = MatF32::zeros(2, 4);
+        causal_mask(&mut s, 0);
+        assert_eq!(s.at(0, 0), 0.0);
+        assert_eq!(s.at(0, 1), f32::NEG_INFINITY);
+        assert_eq!(s.at(1, 1), 0.0);
+        assert_eq!(s.at(1, 2), f32::NEG_INFINITY);
+        // A decode row at base 3 sees all four cached columns.
+        let mut d = MatF32::zeros(1, 4);
+        causal_mask(&mut d, 3);
+        assert!(d.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prefix_rows_are_bit_identical() {
+        // The causal forward over a prefix equals the same rows of the
+        // full forward — the property KV caching relies on.
+        let m = DecoderModel::new(cfg(), 7);
+        let x = input(10, 16, 3);
+        let full = m.forward_causal_f32(&x).unwrap();
+        for p in 1..=10usize {
+            let mut prefix = MatF32::zeros(p, 16);
+            prefix.data.copy_from_slice(&x.data[..p * 16]);
+            let got = m.forward_causal_f32(&prefix).unwrap();
+            for r in 0..p {
+                assert_eq!(got.row(r), full.row(r), "prefix {p} row {r} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn masking_changes_results_vs_bidirectional() {
+        // Same weights as an encoder (same seed/init): all rows except
+        // the last must differ, since they can no longer see the future
+        // (the last row sees everything either way, but its inputs in
+        // deeper layers differ too for n_layers > 1).
+        let c = cfg();
+        let dec = DecoderModel::new(c, 7);
+        let enc = EncoderModel::new(XformerConfig { seq: 8, ..c }, 7);
+        let x = input(8, 16, 5);
+        let causal = dec.forward_causal_f32(&x).unwrap();
+        let bidi = enc.forward_f32(&x).unwrap();
+        assert!(causal.max_abs_diff(&bidi) > 1e-4);
+    }
+
+    #[test]
+    fn rejects_out_of_range_shapes() {
+        let m = DecoderModel::new(cfg(), 1);
+        assert!(m.forward_causal_f32(&MatF32::zeros(13, 16)).is_err(), "beyond context");
+        assert!(m.forward_causal_f32(&MatF32::zeros(4, 8)).is_err(), "wrong width");
+    }
+
+    #[test]
+    fn same_seed_shares_weights_with_encoder() {
+        let c = cfg();
+        let dec = DecoderModel::new(c, 42);
+        let enc = EncoderModel::new(c, 42);
+        assert_eq!(dec.params.layers[0].wq.data, enc.params.layers[0].wq.data);
+        assert_eq!(dec.params.layers[1].w2.data, enc.params.layers[1].w2.data);
+    }
+}

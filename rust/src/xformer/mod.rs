@@ -16,12 +16,19 @@
 //! per-model calibration in [`calib`] so same-model requests can stack
 //! into one `(B·seq) × d_model` GEMM per projection/FFN site with
 //! bit-identical per-request outputs (attention stays per-sequence).
+//!
+//! Generation workloads add a third shape: [`decoder::DecoderModel`] is
+//! the causal (decoder-only) float reference, calibrated statically via
+//! [`calib::EncoderQuant::calibrate_causal`]; the quantized prefill and
+//! KV-cached decode-step paths live in [`crate::decode`].
 
 pub mod calib;
+pub mod decoder;
 pub mod model;
 pub mod run;
 
 pub use calib::{quantize_with, EncoderQuant, GemmQuant, LayerQuant};
+pub use decoder::{causal_mask, DecoderModel};
 pub use model::{EncoderModel, EncoderParams, XformerConfig};
 pub use run::{
     cgra_matmul_f32_calibrated, run_encoder_batch, run_encoder_on_cgra, CgraEncoderReport,

@@ -1,0 +1,252 @@
+//! Decode-subsystem invariants (ISSUE 4): paged-KV decode is
+//! **bit-identical** to one-shot causal prefill over random shapes,
+//! seeds and split points; continuous-batch join/leave — and even
+//! preemption under KV pressure — never perturbs any sequence's
+//! outputs; and decode-fleet runs are pure functions of their inputs.
+
+use cgra_edge::cluster::{ArrivalProcess, GenRequest, ModelClass, WorkloadGen};
+use cgra_edge::config::{ArchConfig, DeviceClass};
+use cgra_edge::decode::{
+    mat_row, run_decode_tick, run_prefill_batch, DecodeFleetConfig, DecodeFleetSim, KvConfig,
+    PagedKvCache,
+};
+use cgra_edge::sim::CgraSim;
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::prop::{prop_check, CaseResult, PropConfig};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::{DecoderModel, EncoderQuant, XformerConfig};
+
+fn rand_input(rng: &mut XorShiftRng, rows: usize, cols: usize) -> MatF32 {
+    let mut x = MatF32::zeros(rows, cols);
+    for v in &mut x.data {
+        *v = rng.normal() * 0.5;
+    }
+    x
+}
+
+/// Acceptance property: for random configs and seeds, token-by-token
+/// paged-KV decode equals the one-shot causal forward of the same rows,
+/// bit for bit, at every split point.
+#[test]
+fn prop_paged_decode_bit_identical_to_one_shot_prefill() {
+    prop_check(
+        "N-step paged decode == one-shot prefill at length N",
+        PropConfig { cases: 3, base_seed: 0xDEC0_0001 },
+        |rng| {
+            let d_model = [16usize, 32][rng.range(0, 2)];
+            let cfg = XformerConfig {
+                n_layers: rng.range(1, 3),
+                seq: rng.range(6, 10),
+                d_model,
+                n_heads: 2,
+                d_ff: [16usize, 32][rng.range(0, 2)],
+            };
+            let model = DecoderModel::new(cfg, rng.next_u64());
+            let quant = EncoderQuant::calibrate_causal_seeded(&model, rng.next_u64());
+            let n = cfg.seq;
+            let x = rand_input(rng, n, cfg.d_model);
+            let split = rng.range(1, n); // prefill length in 1..n
+
+            let pool = || PagedKvCache::new(KvConfig::new(2048, 8));
+            // One-shot: the whole sequence as a single causal prefill.
+            let mut sim = CgraSim::new(ArchConfig::default());
+            let mut kv = pool();
+            kv.admit(1, cfg.d_model, cfg.n_layers, n, n).unwrap();
+            let (full, _) =
+                run_prefill_batch(&mut sim, &model, &quant, &mut kv, &[(1, &x)]).unwrap();
+
+            // Split: prefill `split` rows, decode the rest token by
+            // token (teacher-forced with the same rows).
+            let mut sim2 = CgraSim::new(ArchConfig::default());
+            let mut kv2 = pool();
+            let mut prefix = MatF32::zeros(split, cfg.d_model);
+            prefix.data.copy_from_slice(&x.data[..split * cfg.d_model]);
+            kv2.admit(1, cfg.d_model, cfg.n_layers, split, n).unwrap();
+            let (pre, _) =
+                run_prefill_batch(&mut sim2, &model, &quant, &mut kv2, &[(1, &prefix)]).unwrap();
+            for r in 0..split {
+                if pre[0].row(r) != full[0].row(r) {
+                    return CaseResult::Fail(format!(
+                        "{cfg:?} split {split}: prefill row {r} diverged"
+                    ));
+                }
+            }
+            for t in split..n {
+                let row = mat_row(&x, t);
+                let (out, _) =
+                    run_decode_tick(&mut sim2, &model, &quant, &mut kv2, &[(1, &row)]).unwrap();
+                if out[0].row(0) != full[0].row(t) {
+                    return CaseResult::Fail(format!(
+                        "{cfg:?} split {split}: decode step {t} diverged"
+                    ));
+                }
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+fn gen_classes() -> Vec<ModelClass> {
+    vec![ModelClass {
+        name: "gen-tiny",
+        cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }]
+}
+
+fn gen_request(id: u64, prompt_rows: usize, max_new: usize, arrival: u64, seed: u64) -> GenRequest {
+    let mut rng = XorShiftRng::new(0x5EED_0000 + seed);
+    GenRequest {
+        id,
+        model: 0,
+        prompt: rand_input(&mut rng, prompt_rows, 16),
+        max_new_tokens: max_new,
+        arrival_cycle: arrival,
+    }
+}
+
+fn solo_tokens(req: &GenRequest, classes: &[ModelClass], model_seed: u64) -> MatF32 {
+    let mut alone = req.clone();
+    alone.arrival_cycle = 0;
+    let mut fleet = DecodeFleetSim::new(
+        DecodeFleetConfig {
+            roster: vec![DeviceClass::paper()],
+            ref_mhz: 100,
+            max_running: 1,
+            ..Default::default()
+        },
+        classes,
+        model_seed,
+    );
+    let (_, done) = fleet.run(vec![alone]).unwrap();
+    assert_eq!(done.len(), 1, "solo run must complete");
+    done.into_iter().next().unwrap().tokens
+}
+
+/// Acceptance property: sequences joining and leaving the running
+/// batch at arbitrary step boundaries never perturb any other
+/// sequence's outputs — every completion is bit-identical to serving
+/// that request alone.
+#[test]
+fn prop_continuous_batch_join_leave_is_output_neutral() {
+    prop_check(
+        "continuous-batch completions == solo completions",
+        PropConfig { cases: 2, base_seed: 0xDEC0_0002 },
+        |rng| {
+            let classes = gen_classes();
+            let n = rng.range(3, 5);
+            let requests: Vec<GenRequest> = (0..n)
+                .map(|i| {
+                    let prompt = rng.range(1, 4);
+                    let max_new = rng.range(1, 8 - prompt + 1);
+                    // Staggered arrivals so joins happen mid-generation.
+                    let arrival = (i as u64) * rng.below(40_000);
+                    gen_request(i as u64, prompt, max_new, arrival, rng.next_u64())
+                })
+                .collect();
+            let model_seed = 42;
+            let mut fleet = DecodeFleetSim::new(
+                DecodeFleetConfig {
+                    roster: vec![DeviceClass::paper()],
+                    ref_mhz: 100,
+                    max_running: 4,
+                    ..Default::default()
+                },
+                &classes,
+                model_seed,
+            );
+            let (m, done) = fleet.run(requests.clone()).unwrap();
+            if m.completed != n as u64 {
+                return CaseResult::Fail(format!("{} of {n} completed", m.completed));
+            }
+            for c in &done {
+                let req = &requests[c.id as usize];
+                if c.tokens.rows != req.max_new_tokens {
+                    return CaseResult::Fail(format!(
+                        "request {} emitted {} of {} tokens",
+                        c.id, c.tokens.rows, req.max_new_tokens
+                    ));
+                }
+                let solo = solo_tokens(req, &classes, model_seed);
+                if c.tokens.data != solo.data {
+                    return CaseResult::Fail(format!(
+                        "request {} perturbed by batch-mates (join/leave)",
+                        c.id
+                    ));
+                }
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// Preemption under KV pressure delays sequences but never changes
+/// their outputs — evict/resume is recompute-exact.
+#[test]
+fn preemption_under_kv_pressure_is_output_exact() {
+    let classes = gen_classes();
+    let requests: Vec<GenRequest> =
+        (0..3).map(|i| gen_request(i, 2, 5, 0, 77 + i)).collect();
+    // 64-word pages hold 2 tokens of this shape; 3 pages total force
+    // eviction while three 6-token-worst sequences are resident.
+    let mut tight = DecodeFleetSim::new(
+        DecodeFleetConfig {
+            roster: vec![DeviceClass::paper()],
+            ref_mhz: 100,
+            max_running: 4,
+            page_words: 64,
+            kv_pages: Some(3),
+            ..Default::default()
+        },
+        &classes,
+        42,
+    );
+    let (m, done) = tight.run(requests.clone()).unwrap();
+    assert_eq!(m.completed, 3);
+    assert!(m.preemptions > 0, "the tiny pool must force preemption");
+    for c in &done {
+        let solo = solo_tokens(&requests[c.id as usize], &classes, 42);
+        assert_eq!(
+            c.tokens.data, solo.data,
+            "request {} corrupted by eviction/resume",
+            c.id
+        );
+    }
+}
+
+/// A seeded generation workload on a big.LITTLE fleet reproduces its
+/// metrics and completions exactly — the decode determinism contract,
+/// workload generator included.
+#[test]
+fn decode_fleet_runs_are_seed_deterministic_on_mixed_fleets() {
+    let classes = gen_classes();
+    let mk = || {
+        let mut wg = WorkloadGen::new(
+            ArrivalProcess::Poisson { rate_rps: 3000.0 },
+            classes.clone(),
+            100.0,
+            17,
+        );
+        let requests = wg.generate_gen(10);
+        let roster = DeviceClass::parse_roster("4x4@100:1,8x4@200:1").unwrap();
+        let mut fleet = DecodeFleetSim::new(
+            DecodeFleetConfig { roster, ref_mhz: 100, max_running: 4, ..Default::default() },
+            &classes,
+            42,
+        );
+        fleet.run(requests).unwrap()
+    };
+    let (m1, c1) = mk();
+    let (m2, c2) = mk();
+    assert_eq!(m1, m2, "decode metrics must be a pure function of the seed");
+    assert_eq!(c1, c2, "completions must be reproducible bit for bit");
+    assert_eq!(m1.completed, 10);
+    assert!(m1.tokens > 0);
+    assert_eq!(
+        m1.per_device.len(),
+        2,
+        "both classes of the mixed fleet must be reported"
+    );
+}

@@ -1,8 +1,10 @@
-//! Heterogeneous-fleet integration suite (ISSUE 3): device classes end
-//! to end — per-`(model, class)` cost seeding and class-aware SJF
-//! placement, work-stealing determinism and starvation rescue,
-//! latency-aware hold-for-fill, and 2D-sharded GEMM bit-identity over
-//! random class mixes.
+//! Heterogeneous-fleet integration suite (ISSUE 3, extended by ISSUE
+//! 4's satellites): device classes end to end — per-`(model, class)`
+//! cost seeding and class-aware SJF placement, work-stealing
+//! determinism and starvation rescue, steal tuning (context-reuse
+//! protection + fastest-class-first), cross-model batching of aliased
+//! catalog entries, latency-aware hold-for-fill, and 2D-sharded GEMM
+//! bit-identity over random class mixes.
 
 use cgra_edge::cluster::{
     analytic_encoder_cycles, run_gemm_sharded, ArrivalProcess, BatchPolicy, FleetConfig,
@@ -211,6 +213,124 @@ fn latency_aware_hold_derives_budget_from_slack() {
     let tight = run(BatchPolicy::sla_driven(2), Some(1_000));
     assert_eq!(tight.batches(), 2, "no slack → no hold");
     assert_eq!(tight.completed, 2);
+}
+
+/// Steal tuning (ROADMAP): a depth-1 queue whose head matches the
+/// owner's resident model is protected — the owner serves it with zero
+/// reconfiguration — while dropping the threshold to 1 restores the
+/// old grab-everything behavior.
+#[test]
+fn steal_protects_the_owners_last_context_reuse() {
+    let classes = vec![ModelClass::tiny()];
+    let cfg = classes[0].cfg;
+    let run = |steal_min_depth: usize| {
+        let mut rng = XorShiftRng::new(5);
+        let requests: Vec<FleetRequest> =
+            (0..2).map(|id| request(id, &cfg, 0, &mut rng)).collect();
+        let mut fleet = FleetSim::new(
+            FleetConfig {
+                roster: vec![DeviceClass::paper(); 2],
+                policy: Placement::ModelAffinity,
+                steal_min_depth,
+                ..Default::default()
+            },
+            &classes,
+            42,
+        );
+        fleet.run(requests).unwrap()
+    };
+    // Default threshold 2: the single queued same-model follower stays
+    // with its owner and rides the context-reuse discount.
+    let protected = run(2);
+    assert_eq!(protected.steals, 0, "last same-model request must not be stolen");
+    assert_eq!(protected.per_device[0].served, 2);
+    assert_eq!(protected.per_device[1].served, 0);
+    // Threshold 1: protection off, the idle device grabs it.
+    let greedy = run(1);
+    assert_eq!(greedy.steals, 1, "depth threshold 1 restores eager stealing");
+    assert_eq!(greedy.per_device[1].served, 1);
+}
+
+/// Steal tuning (ROADMAP): when several classes sit idle, the fastest
+/// steals first — and the protected last request still lands on its
+/// owner.
+#[test]
+fn fastest_idle_class_steals_first() {
+    let classes = vec![ModelClass::tiny()];
+    let cfg = classes[0].cfg;
+    let mut rng = XorShiftRng::new(9);
+    // Affinity pins every request to device 0 (first contact); devices
+    // 1 (little) and 2 (big) idle. After device 0 takes the head, the
+    // queue holds two: exactly one stealable batch (the depth-1 tail
+    // is protected), and it must go to the 8x4@200.
+    let requests: Vec<FleetRequest> =
+        (0..3).map(|id| request(id, &cfg, 0, &mut rng)).collect();
+    let roster = DeviceClass::parse_roster("4x4@100:2,8x4@200:1").unwrap();
+    let mut fleet = FleetSim::new(
+        FleetConfig {
+            roster,
+            policy: Placement::ModelAffinity,
+            ..Default::default()
+        },
+        &classes,
+        42,
+    );
+    let m = fleet.run(requests).unwrap();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.steals, 1, "one stealable batch: {:?}", m.per_device);
+    assert_eq!(m.per_device[2].steals, 1, "the fast class must steal first");
+    assert_eq!(m.per_device[1].steals, 0);
+    assert_eq!(m.per_device[0].served, 2, "owner keeps head + protected tail");
+}
+
+/// Cross-model batching (ROADMAP): catalog entries that alias the same
+/// deployed weights (equal shape + seed ⇒ equal batch key) coalesce
+/// into one stacked job across model ids; distinct weights never do.
+#[test]
+fn aliased_model_ids_share_a_batch_key_and_coalesce() {
+    let tiny = ModelClass::tiny();
+    let classes = vec![tiny, tiny];
+    let cfg = tiny.cfg;
+    let mk_requests = || {
+        let mut rng = XorShiftRng::new(13);
+        (0..6u64)
+            .map(|id| {
+                let mut r = request(id, &cfg, 0, &mut rng);
+                r.model = (id % 2) as usize; // strictly alternating ids
+                r
+            })
+            .collect::<Vec<_>>()
+    };
+    let run = |seeds: [u64; 2]| {
+        let mut fleet = FleetSim::new_with_model_seeds(
+            FleetConfig {
+                roster: vec![DeviceClass::paper(); 1],
+                batch: BatchPolicy::greedy(6),
+                ..Default::default()
+            },
+            &classes,
+            &seeds,
+        );
+        let keys_equal = fleet.batch_key(0) == fleet.batch_key(1);
+        (keys_equal, fleet.run(mk_requests()).unwrap())
+    };
+    // Aliases: same weights under two catalog ids — one key, and the
+    // whole simultaneous burst coalesces into a single stacked job.
+    let (aliased_keys_equal, aliased) = run([42, 42]);
+    assert!(aliased_keys_equal, "equal shape+seed must yield equal batch keys");
+    assert_eq!(aliased.completed, 6);
+    assert_eq!(
+        aliased.batches(),
+        1,
+        "alternating aliased ids must coalesce into one stacked job"
+    );
+    assert!(aliased.mean_batch_occupancy() > 5.9);
+    // Distinct weights: different keys, and the alternating stream
+    // splits into per-model jobs exactly as before.
+    let (distinct_keys_equal, distinct) = run([42, 43]);
+    assert!(!distinct_keys_equal, "distinct weights must yield distinct keys");
+    assert_eq!(distinct.completed, 6);
+    assert_eq!(distinct.batches(), 2, "one stacked job per real model");
 }
 
 /// 2D-sharded GEMM: random shapes and random device-class mixes must
