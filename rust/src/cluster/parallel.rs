@@ -245,12 +245,16 @@ pub fn run_gemm_sharded(
     // Broadcast accounting: ext words (4 packed int8 lanes per word)
     // each shard fetches for its operands, beyond the one logical copy
     // a single-device run reads. A band re-read by every shard of its
-    // grid row; B re-read by every grid row.
-    let words = |elems: usize| (elems as u64).div_ceil(4);
-    let a_words_total: u64 = shards.iter().map(|s| words(s.mi * k)).sum();
-    let b_words_total: u64 = shards.iter().map(|s| words(k * s.nj)).sum();
-    let broadcast_a_words = a_words_total.saturating_sub(words(m * k));
-    let broadcast_b_words = b_words_total.saturating_sub(words(k * n));
+    // grid row; B re-read by every grid row. The whole-operand copy is
+    // subtracted in *elements* first and the ÷4 word packing applied
+    // once to the surplus — packing per shard before subtracting would
+    // report a few phantom words whenever an odd band size leaves a
+    // partially filled word (the ROADMAP rounding item).
+    let words = |elems: u64| elems.div_ceil(4);
+    let a_elems_total: u64 = shards.iter().map(|s| (s.mi * k) as u64).sum();
+    let b_elems_total: u64 = shards.iter().map(|s| (k * s.nj) as u64).sum();
+    let broadcast_a_words = words(a_elems_total.saturating_sub((m * k) as u64));
+    let broadcast_b_words = words(b_elems_total.saturating_sub((k * n) as u64));
 
     let mut c = MatI8::zeros(m, n);
     let mut outcomes = Vec::with_capacity(shards.len());
@@ -341,6 +345,46 @@ mod tests {
         // 2×2: each operand is replicated once over.
         assert!(run.broadcast_a_words > 0);
         assert!(run.broadcast_b_words > 0);
+        assert_eq!(run.broadcast_a_words, ((m * k) as u64).div_ceil(4));
+    }
+
+    #[test]
+    fn broadcast_words_are_exact_across_odd_band_sizes() {
+        // Sweep odd matrix sizes whose row split leaves partially
+        // filled packed words. A pure 2-device row split replicates
+        // only B: A must report exactly zero broadcast words (the old
+        // per-shard packing reported phantom words here), and B must
+        // report exactly one extra whole-operand copy.
+        let mut rng = XorShiftRng::new(0xC06);
+        for (m, k, n) in [(45usize, 7usize, 9usize), (33, 5, 11), (21, 13, 3), (9, 3, 5)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let mut sims = fleet(2);
+            let run = run_gemm_sharded(&mut sims, &a, &b, 5).unwrap();
+            assert_eq!(run.grid, (2, 1), "two equal devices row-split");
+            assert_eq!(run.c, oracle_quant(&a, &b, 5));
+            assert_eq!(
+                run.broadcast_a_words, 0,
+                "{m}x{k}x{n}: a partitioned operand has zero broadcast surplus"
+            );
+            assert_eq!(
+                run.broadcast_b_words,
+                ((k * n) as u64).div_ceil(4),
+                "{m}x{k}x{n}: one extra whole-B copy, packed once"
+            );
+        }
+        // A 1×2 column split (m = 1 caps the grid at one row band) is
+        // the mirror image: B partitioned exactly — zero surplus even
+        // though 23/22 column bands of 7 rows pack unevenly — and A
+        // replicated once over.
+        let (m, k, n) = (1usize, 7usize, 45usize);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut sims = fleet(2);
+        let run = run_gemm_sharded(&mut sims, &a, &b, 5).unwrap();
+        assert_eq!(run.grid, (1, 2));
+        assert_eq!(run.c, oracle_quant(&a, &b, 5));
+        assert_eq!(run.broadcast_b_words, 0, "a partitioned B has zero broadcast surplus");
         assert_eq!(run.broadcast_a_words, ((m * k) as u64).div_ceil(4));
     }
 

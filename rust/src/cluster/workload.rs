@@ -111,6 +111,22 @@ impl GenProfile {
             new_max: (cfg.seq - prompt_max + 1).max(1),
         }
     }
+
+    /// A summarization-style profile: prompts between half and
+    /// three-quarters of the context with short answers — the
+    /// long-prompt traffic that stalls decode ITL under one-shot
+    /// prefill and that chunked prefill exists for (the FIG8 chunked
+    /// arm draws its stream from this).
+    pub fn long_prompt_for_cfg(cfg: &XformerConfig) -> Self {
+        let prompt_max = (cfg.seq * 3 / 4).max(1);
+        let prompt_min = (cfg.seq / 2).clamp(1, prompt_max);
+        Self {
+            prompt_min,
+            prompt_max,
+            new_min: 1,
+            new_max: (cfg.seq - prompt_max + 1).max(1),
+        }
+    }
 }
 
 /// Arrival-time process, in requests per second of wall time.
@@ -409,6 +425,34 @@ mod tests {
         // Degenerate 1-token context still yields a valid profile.
         let tiny = GenProfile::for_cfg(&XformerConfig { seq: 1, ..cfg });
         assert_eq!((tiny.prompt_min, tiny.prompt_max, tiny.new_max), (1, 1, 1));
+    }
+
+    #[test]
+    fn long_prompt_profile_is_context_safe() {
+        let cfg = XformerConfig { n_layers: 1, seq: 32, d_model: 32, n_heads: 2, d_ff: 64 };
+        let p = GenProfile::long_prompt_for_cfg(&cfg);
+        assert_eq!((p.prompt_min, p.prompt_max), (16, 24));
+        assert_eq!((p.new_min, p.new_max), (1, 9));
+        assert!(p.prompt_max + p.new_max - 1 <= cfg.seq);
+        // Drawn streams respect the context limit end to end.
+        let mut wg = WorkloadGen::new(
+            ArrivalProcess::Poisson { rate_rps: 500.0 },
+            vec![ModelClass {
+                name: "long",
+                cfg,
+                weight: 1.0,
+                sla_ms: 0.0,
+                priority: 0,
+            }],
+            100.0,
+            5,
+        );
+        for r in wg.generate_gen_with(32, &[p]) {
+            assert!(r.prompt.rows >= 16 && r.prompt.rows <= 24);
+            assert!(r.prompt.rows + r.max_new_tokens - 1 <= cfg.seq);
+        }
+        let degenerate = GenProfile::long_prompt_for_cfg(&XformerConfig { seq: 1, ..cfg });
+        assert_eq!((degenerate.prompt_min, degenerate.prompt_max, degenerate.new_max), (1, 1, 1));
     }
 
     #[test]

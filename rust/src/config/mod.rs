@@ -270,6 +270,17 @@ impl DeviceClass {
         self.arch.peak_macs_per_cycle() * self.freq_mhz
     }
 
+    /// Words per device cycle this class can move over its torus entry
+    /// links: one link per grid row, one 32-bit word per cycle each —
+    /// the same per-row saturation bandwidth behind the FIG5
+    /// pe_cols ≤ 4 cap. This is the serialization rate the KV-migration
+    /// transfer cost model charges at each endpoint (source export and
+    /// destination import, each at its own clock), so a tall class both
+    /// computes *and* moves cache images faster.
+    pub fn entry_link_words_per_cycle(&self) -> u64 {
+        self.arch.topo.rows as u64
+    }
+
     /// Deduplicate a roster into a class table plus a per-device index
     /// into it — the one definition of class identity (full structural
     /// equality) every fleet simulator shares, so per-class cost caches
@@ -462,6 +473,16 @@ mod tests {
         // The near-threshold floor kicks in for very slow classes.
         let slow = DeviceClass::parse("4x4@10").unwrap();
         assert!((slow.voltage_scale() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entry_link_bandwidth_scales_with_rows() {
+        // One word per row per cycle: the paper class moves 4
+        // words/cycle, a tall 8-row class 8 — the asymmetry the
+        // migration transfer model charges per endpoint.
+        assert_eq!(DeviceClass::paper().entry_link_words_per_cycle(), 4);
+        assert_eq!(DeviceClass::parse("8x4@200").unwrap().entry_link_words_per_cycle(), 8);
+        assert_eq!(DeviceClass::parse("2x4").unwrap().entry_link_words_per_cycle(), 2);
     }
 
     #[test]

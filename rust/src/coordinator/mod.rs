@@ -256,13 +256,17 @@ pub struct DecodeCoordinator {
 
 impl DecodeCoordinator {
     /// Spawn a worker serving generation on one device of `class`,
-    /// with a fresh decoder model (deterministic from `model_seed`)
-    /// and at most `max_running` concurrently-decoding sequences.
+    /// with a fresh decoder model (deterministic from `model_seed`),
+    /// at most `max_running` concurrently-decoding sequences, and the
+    /// given prefill/decode interleaving (`DecodeSchedule::Chunked`
+    /// bounds how long a big prompt can stall running sequences —
+    /// outputs are bit-identical under every schedule).
     pub fn spawn(
         class: DeviceClass,
         model_cfg: XformerConfig,
         model_seed: u64,
         max_running: usize,
+        schedule: DecodeSchedule,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<GenRequest>();
         let (tx_out, rx_out) = mpsc::channel::<GenCompletion>();
@@ -273,13 +277,7 @@ impl DecodeCoordinator {
             let quants = vec![quant];
             let kv_cfg = KvConfig::for_class(&class);
             let ref_mhz = class.freq_mhz;
-            let mut dec = DeviceDecoder::new(
-                &class,
-                ref_mhz,
-                kv_cfg,
-                max_running,
-                DecodeSchedule::PrefillFirst,
-            );
+            let mut dec = DeviceDecoder::new(&class, ref_mhz, kv_cfg, max_running, schedule);
             let mut metrics = DecodeMetrics::default();
             let mut completions: Vec<GenCompletion> = Vec::new();
             let mut future: Vec<GenRequest> = Vec::new();
@@ -520,7 +518,8 @@ mod tests {
             max_new_tokens: 3,
             arrival_cycle: 0,
         };
-        let coord = DecodeCoordinator::spawn(class.clone(), cfg, 42, 4);
+        let coord =
+            DecodeCoordinator::spawn(class.clone(), cfg, 42, 4, DecodeSchedule::PrefillFirst);
         for id in 0..3 {
             coord.submit(req(id)).unwrap();
         }
@@ -539,7 +538,8 @@ mod tests {
         // Output neutrality: whatever ticks the worker formed, each
         // sequence must be bit-identical to serving it alone.
         for c in &done {
-            let solo = DecodeCoordinator::spawn(class.clone(), cfg, 42, 1);
+            let solo =
+                DecodeCoordinator::spawn(class.clone(), cfg, 42, 1, DecodeSchedule::PrefillFirst);
             solo.submit(req(c.id)).unwrap();
             let first = solo.recv().unwrap();
             let (sm, _) = solo.shutdown().unwrap();
@@ -553,9 +553,48 @@ mod tests {
     }
 
     #[test]
+    fn decode_coordinator_chunked_schedule_is_output_neutral() {
+        // The same request set under Chunked{2} must emit bit-identical
+        // tokens to the PrefillFirst worker — chunking changes timing
+        // attribution, never results.
+        let cfg = XformerConfig { n_layers: 1, seq: 16, d_model: 16, n_heads: 2, d_ff: 32 };
+        let class = DeviceClass::paper();
+        let req = |id: u64| GenRequest {
+            id,
+            model: 0,
+            prompt: gen_prompt(5 + id as usize, 40 + id),
+            max_new_tokens: 3,
+            arrival_cycle: 0,
+        };
+        let run = |schedule: DecodeSchedule| {
+            let coord = DecodeCoordinator::spawn(class.clone(), cfg, 42, 4, schedule);
+            for id in 0..3 {
+                coord.submit(req(id)).unwrap();
+            }
+            let (m, mut done) = coord.shutdown().unwrap();
+            assert_eq!(m.completed, 3);
+            done.sort_by_key(|c| c.id);
+            (m, done)
+        };
+        let (mc, dc) = run(DecodeSchedule::Chunked { chunk_tokens: 2 });
+        let (_, dp) = run(DecodeSchedule::PrefillFirst);
+        assert!(mc.prefill_chunks > 0, "5..7-row prompts at budget 2 must chunk");
+        for (a, b) in dc.iter().zip(&dp) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens.data, b.tokens.data, "request {} perturbed by chunking", a.id);
+        }
+    }
+
+    #[test]
     fn decode_coordinator_rejects_oversized_requests_with_reasons() {
         let cfg = XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 };
-        let coord = DecodeCoordinator::spawn(DeviceClass::paper(), cfg, 42, 2);
+        let coord = DecodeCoordinator::spawn(
+            DeviceClass::paper(),
+            cfg,
+            42,
+            2,
+            DecodeSchedule::PrefillFirst,
+        );
         // Worst case 6 + 4 − 1 = 9 > the 8-token context.
         coord
             .submit(GenRequest {

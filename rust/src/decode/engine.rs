@@ -42,13 +42,23 @@ pub fn mat_row(m: &MatF32, r: usize) -> MatF32 {
     MatF32::from_slice(1, m.cols, m.row(r))
 }
 
-/// Causal prefill over a batch of prompts (one stacked job).
+/// Causal prefill over a batch of prompts (one stacked job), resumable
+/// from an arbitrary token offset — the chunked-prefill kernel.
 ///
-/// `seqs` pairs each prompt (`p × d_model`, `1 ≤ p ≤ cfg.seq`) with its
-/// KV-cache sequence id; the sequence must already be admitted with
-/// exactly `p` committed tokens ([`PagedKvCache::admit`]). Returns each
-/// sequence's full hidden-state matrix (`p × d_model`; the last row is
-/// the first generated token) plus the kernel accounting report.
+/// `seqs` pairs each chunk of prompt rows (`p × d_model`, `1 ≤ p`) with
+/// its KV-cache sequence id. The sequence must be committed to exactly
+/// `offset + p` tokens, where `offset = kv.len(id) − p` is the number
+/// of rows earlier chunks already filled ([`PagedKvCache::admit`] for
+/// the first chunk, [`PagedKvCache::commit_tokens`] for growth); a
+/// whole-prompt prefill is simply the `offset = 0` case. A resumed
+/// chunk's attention gathers the cached K/V of its prefix from the
+/// pages (the same read path — and the same exact dequantized values —
+/// a decode tick uses) and masks causally at the chunk's base offset,
+/// so **any chunk schedule produces bit-identical hidden states to the
+/// one-shot causal forward** of the same rows. Returns each sequence's
+/// chunk hidden-state matrix (`p × d_model`; for the *final* chunk the
+/// last row is the first generated token) plus the kernel accounting
+/// report.
 pub fn run_prefill_batch(
     sim: &mut CgraSim,
     model: &DecoderModel,
@@ -65,15 +75,17 @@ pub fn run_prefill_batch(
     for (id, x) in seqs {
         ensure!(x.cols == cfg.d_model, "prompt width must be d_model");
         ensure!(
-            x.rows >= 1 && x.rows <= cfg.seq,
-            "prompt rows must be in 1..={} (the context limit)",
+            x.rows >= 1 && kv.len(*id) <= cfg.seq,
+            "chunk rows must be ≥ 1 and committed tokens within the context limit {}",
             cfg.seq
         );
         ensure!(
-            kv.len(*id) == x.rows,
-            "sequence {id} must be admitted with exactly the prompt's tokens"
+            kv.len(*id) >= x.rows,
+            "sequence {id} must be committed to its chunk offset plus the chunk's rows"
         );
     }
+    // Token offset of each chunk's first row (0 = whole-prompt prefill).
+    let offs: Vec<usize> = seqs.iter().map(|(id, x)| kv.len(*id) - x.rows).collect();
     let b = seqs.len();
     let dh = cfg.d_head();
     let att_scale = 1.0 / (dh as f32).sqrt();
@@ -91,20 +103,31 @@ pub fn run_prefill_batch(
         let k = cgra_matmul_f32_calibrated(sim, &refs, &lq.wk_q, &lq.k, &mut report)?;
         let v = cgra_matmul_f32_calibrated(sim, &refs, &lq.wv_q, &lq.v, &mut report)?;
         // Page fills: the exact dequantized K/V activations land in the
-        // sequence's pages, token-aligned.
+        // sequence's pages at the chunk's token offset.
         for (r, (id, _)) in seqs.iter().enumerate() {
-            kv.write_prompt_layer(*id, li, &k[r], &v[r]);
+            kv.write_rows_layer(*id, offs[r], li, &k[r], &v[r]);
         }
         let mut ctxs: Vec<MatF32> =
             hs.iter().map(|h| MatF32::zeros(h.rows, cfg.d_model)).collect();
         for r in 0..b {
             let s_r = hs[r].rows;
+            let off = offs[r];
+            // A resumed chunk attends to its cached prefix as well: the
+            // gather (the decode tick's read path, traffic counted) is
+            // the exact dequantized rows the one-shot forward computes.
+            let gathered;
+            let (k_att, v_att): (&MatF32, &MatF32) = if off == 0 {
+                (&k[r], &v[r])
+            } else {
+                gathered = kv.read_layer(seqs[r].0, li);
+                (&gathered.0, &gathered.1)
+            };
             for hd in 0..cfg.n_heads {
                 let lo = hd * dh;
                 let (qh, kh, vh) = (
                     q[r].col_slice(lo, dh),
-                    k[r].col_slice(lo, dh),
-                    v[r].col_slice(lo, dh),
+                    k_att.col_slice(lo, dh),
+                    v_att.col_slice(lo, dh),
                 );
                 let kht_q = quantize_with(&kh.transpose(), lq.scores.w_scale);
                 let mut scores =
@@ -114,9 +137,9 @@ pub fn run_prefill_batch(
                 for val in &mut scores.data {
                     *val *= att_scale;
                 }
-                causal_mask(&mut scores, 0);
+                causal_mask(&mut scores, off);
                 let probs = scores.softmax_rows();
-                report.host_elems += (s_r * s_r) as u64 * 5;
+                report.host_elems += (s_r * (off + s_r)) as u64 * 5;
                 let vh_q = quantize_with(&vh, lq.attn_v.w_scale);
                 let out =
                     cgra_matmul_f32_calibrated(sim, &[&probs], &vh_q, &lq.attn_v, &mut report)?
@@ -332,6 +355,45 @@ mod tests {
         }
         assert_eq!(kv2.len(1), 8);
         assert!(kv2.metrics.read_words > 0, "decode must read the cache");
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot_bitwise() {
+        // An uneven chunk schedule (3 + 1 + 4 rows) must reproduce the
+        // one-shot causal prefill's hidden states exactly, chunk by
+        // chunk — the kernel-level contract the fleet's Chunked
+        // schedule and the migration_props suite build on.
+        let c = cfg();
+        let model = DecoderModel::new(c, 17);
+        let quant = EncoderQuant::calibrate_causal_seeded(&model, 2);
+        let x = input(8, c.d_model, 31);
+        let mut sim = CgraSim::new(ArchConfig::default());
+        let mut kv = pool();
+        kv.admit(1, c.d_model, c.n_layers, 8, 8).unwrap();
+        let (full, _) = run_prefill_batch(&mut sim, &model, &quant, &mut kv, &[(1, &x)]).unwrap();
+
+        let mut sim2 = CgraSim::new(ArchConfig::default());
+        let mut kv2 = pool();
+        kv2.admit(1, c.d_model, c.n_layers, 3, 8).unwrap();
+        let mut done = 0usize;
+        for rows in [3usize, 1, 4] {
+            if done > 0 {
+                assert_eq!(kv2.commit_tokens(1, rows).unwrap(), done);
+            }
+            let chunk = MatF32::from_slice(
+                rows,
+                c.d_model,
+                &x.data[done * c.d_model..(done + rows) * c.d_model],
+            );
+            let (out, _) =
+                run_prefill_batch(&mut sim2, &model, &quant, &mut kv2, &[(1, &chunk)]).unwrap();
+            for r in 0..rows {
+                assert_eq!(out[0].row(r), full[0].row(done + r), "row {} diverged", done + r);
+            }
+            done += rows;
+        }
+        assert_eq!(kv2.len(1), 8);
+        assert!(kv2.metrics.read_words > 0, "resumed chunks must gather their prefix");
     }
 
     #[test]

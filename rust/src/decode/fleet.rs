@@ -44,7 +44,7 @@
 //! stamps, so decode fleets are seed-deterministic end to end.
 
 use super::engine::{mat_row, run_decode_tick, run_prefill_batch};
-use super::kv::{AdmitError, KvConfig, KvMetrics, PagedKvCache};
+use super::kv::{AdmitError, KvConfig, KvMetrics, KvSeqImage, PagedKvCache};
 use crate::cluster::{
     analytic_encoder_ref_cycles, per_device_energy, to_ref_cycles, DeviceEngine, DeviceMetrics,
     GenRequest, LatencyHistogram, ModelClass,
@@ -56,7 +56,7 @@ use crate::sim::Stats;
 use crate::util::mat::MatF32;
 use crate::xformer::{CgraEncoderReport, DecoderModel, EncoderQuant, XformerConfig};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 /// Prefill/decode interleaving policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +68,17 @@ pub enum DecodeSchedule {
     /// no prefill ever interrupts decoding (lowest inter-token
     /// jitter), at the price of serial admission.
     DecodeFirst,
+    /// **Chunked prefill**: prompts prefill in fixed budgets of
+    /// `chunk_tokens` rows per job, strictly alternating with decode
+    /// ticks whenever both kinds of work exist. A long prompt can no
+    /// longer monopolize the device for its whole prefill — the
+    /// running batch's inter-token latency is bounded by one chunk
+    /// plus one tick instead of by the longest arriving prompt (the
+    /// Sarathi-style stall-free lever; the FIG8 bench asserts the p99
+    /// ITL win over [`Self::PrefillFirst`]). Chunk outputs are
+    /// bit-identical to one-shot prefill for any budget
+    /// ([`super::engine::run_prefill_batch`]'s resume contract).
+    Chunked { chunk_tokens: usize },
 }
 
 /// Decode-fleet configuration.
@@ -88,6 +99,13 @@ pub struct DecodeFleetConfig {
     /// exercise preemption); `None` derives it from the device class.
     pub kv_pages: Option<usize>,
     pub schedule: DecodeSchedule,
+    /// Live-sequence migration: an idle, empty device may pull a
+    /// waiting **or running** sequence from a loaded peer when the
+    /// class-aware finish estimate (transfer cost included) beats
+    /// staying put. A running sequence moves with its KV pages —
+    /// serialized over the torus entry links and charged to *both*
+    /// devices' timelines — and resumes decoding without recompute.
+    pub migrate: bool,
 }
 
 impl Default for DecodeFleetConfig {
@@ -99,6 +117,7 @@ impl Default for DecodeFleetConfig {
             page_words: KvConfig::DEFAULT_PAGE_WORDS,
             kv_pages: None,
             schedule: DecodeSchedule::PrefillFirst,
+            migrate: false,
         }
     }
 }
@@ -125,6 +144,8 @@ pub struct GenCompletion {
     pub finish_cycle: u64,
     /// Times this sequence was preempted (and later resumed).
     pub preemptions: u64,
+    /// Times this sequence was migrated to another device.
+    pub migrations: u64,
 }
 
 /// Aggregated metrics for one decode-fleet run.
@@ -150,8 +171,17 @@ pub struct DecodeMetrics {
     pub kv_occupancy_permille: LatencyHistogram,
     /// Sequences preempted to free KV pages.
     pub preemptions: u64,
-    /// Prefill jobs executed (stacked prompt forwards).
+    /// Sequences migrated across devices (waiting or running).
+    pub migrations: u64,
+    /// Words moved over the entry links by migrations (KV images for
+    /// running sequences, activation rows for waiting ones).
+    pub migrated_words: u64,
+    /// Prefill jobs executed (stacked prompt forwards; chunk jobs
+    /// count individually — each occupies the device once).
     pub prefill_jobs: u64,
+    /// Prefill jobs that were *partial* chunks of a longer prompt
+    /// (the chunked-prefill interleaving at work).
+    pub prefill_chunks: u64,
     /// Sequences per prefill job.
     pub prefill_batch: LatencyHistogram,
     /// Decode ticks executed.
@@ -239,6 +269,7 @@ struct PendingSeq {
     ttft: Option<u64>,
     last_emit: u64,
     preemptions: u64,
+    migrations: u64,
 }
 
 impl PendingSeq {
@@ -253,6 +284,7 @@ impl PendingSeq {
             ttft: None,
             last_emit: 0,
             preemptions: 0,
+            migrations: 0,
         }
     }
 
@@ -298,6 +330,18 @@ struct RunSeq {
     ttft: u64,
     last_emit: u64,
     preemptions: u64,
+    migrations: u64,
+}
+
+/// A prompt mid-chunked-prefill: admitted in the KV cache with `done`
+/// of its `input` rows committed and filled by earlier chunks.
+#[derive(Debug, Clone)]
+struct ChunkState {
+    seq: PendingSeq,
+    /// The full (re-)prefill input (prompt + emitted feedback rows).
+    input: MatF32,
+    /// Rows already prefilled.
+    done: usize,
 }
 
 /// Stack emitted `1 × d` rows into one `n × d` matrix.
@@ -335,6 +379,17 @@ pub struct DeviceDecoder {
     waiting: VecDeque<PendingSeq>,
     preempted: VecDeque<PendingSeq>,
     running: Vec<RunSeq>,
+    /// The prompt currently mid-chunked-prefill (at most one; only the
+    /// `Chunked` schedule populates it).
+    chunking: Option<ChunkState>,
+    /// Alternation marker for `Chunked`: true when the last job was a
+    /// prefill chunk, so the next wake (with decode work present)
+    /// takes a decode tick.
+    last_was_prefill: bool,
+    /// `(model, per-token ref cycles)` measured from the most recent
+    /// single-model decode tick — the fleet harvests it into its
+    /// per-class token-rate cache.
+    last_tick_obs: Option<(usize, u64)>,
     admit_counter: u64,
 }
 
@@ -354,6 +409,9 @@ impl DeviceDecoder {
             waiting: VecDeque::new(),
             preempted: VecDeque::new(),
             running: Vec::new(),
+            chunking: None,
+            last_was_prefill: false,
+            last_tick_obs: None,
             admit_counter: 0,
         }
     }
@@ -363,9 +421,13 @@ impl DeviceDecoder {
         self.engine.free_at
     }
 
-    /// Anything left to do (running, waiting or awaiting resume)?
+    /// Anything left to do (running, mid-chunk, waiting or awaiting
+    /// resume)?
     pub fn has_work(&self) -> bool {
-        !self.running.is_empty() || !self.waiting.is_empty() || !self.preempted.is_empty()
+        !self.running.is_empty()
+            || self.chunking.is_some()
+            || !self.waiting.is_empty()
+            || !self.preempted.is_empty()
     }
 
     /// Sequences currently in the running batch.
@@ -373,9 +435,16 @@ impl DeviceDecoder {
         self.running.len()
     }
 
-    /// Sequences waiting (fresh + preempted).
+    /// Sequences waiting (fresh + preempted + mid-chunk).
     pub fn queued_len(&self) -> usize {
-        self.waiting.len() + self.preempted.len()
+        self.waiting.len() + self.preempted.len() + usize::from(self.chunking.is_some())
+    }
+
+    /// Take the per-token cost observed by the most recent
+    /// single-model decode tick, if any (`(model, ref cycles per
+    /// token)`) — the fleet's measured-rate harvest point.
+    pub fn take_tick_observation(&mut self) -> Option<(usize, u64)> {
+        self.last_tick_obs.take()
     }
 
     pub fn engine(&self) -> &DeviceEngine {
@@ -449,7 +518,18 @@ impl DeviceDecoder {
             .iter()
             .map(|s| token_cost[s.model][class].saturating_mul(s.remaining as u64))
             .sum();
-        pending.saturating_add(running)
+        let chunking: u64 = self
+            .chunking
+            .as_ref()
+            .map(|c| {
+                prefill_cost[c.seq.model][class]
+                    .saturating_mul((c.input.rows - c.done) as u64)
+                    .saturating_add(token_cost[c.seq.model][class].saturating_mul(
+                        c.seq.max_new.saturating_sub(c.seq.emitted.len() + 1) as u64,
+                    ))
+            })
+            .unwrap_or(0);
+        pending.saturating_add(running).saturating_add(chunking)
     }
 
     /// Run one job at `now` (device must be free). Returns whether any
@@ -467,6 +547,9 @@ impl DeviceDecoder {
         let admit_allowed = match self.schedule {
             DecodeSchedule::PrefillFirst => true,
             DecodeSchedule::DecodeFirst => self.running.is_empty(),
+            DecodeSchedule::Chunked { chunk_tokens } => {
+                return self.step_chunked(now, chunk_tokens, models, quants, metrics, completions)
+            }
         };
         if admit_allowed {
             let admitted = self.admit_wave(models, metrics);
@@ -486,50 +569,50 @@ impl DeviceDecoder {
         Ok(true)
     }
 
-    /// Admit every admissible sequence of one model group: preempted
-    /// resumes first (they are the oldest work), then fresh arrivals,
-    /// FIFO within each, stopping at the batch cap, at the first
-    /// capacity miss (head-of-line order is part of the determinism
-    /// contract), or at a model change (one prefill job = one model).
-    fn admit_wave(
+    /// Pop the next queue head (preempted resumes first — they are the
+    /// oldest work; FIFO within each queue) after admitting it to the
+    /// KV cache with `commit_of(head)` committed tokens. Returns `None`
+    /// on an empty queue, on a capacity miss (head-of-line blocking is
+    /// part of the determinism contract), or when the head's model
+    /// fails `model_filter`; a head that fails admission for any other
+    /// reason is shed loudly with its printable reason (submit-time
+    /// validation makes that unreachable) and the next head is tried.
+    /// Shared by the stacked admit wave and the chunked scheduler so
+    /// their admission/rejection semantics can never drift.
+    fn pop_admitted_head(
         &mut self,
+        commit_of: impl Fn(&PendingSeq) -> usize,
+        model_filter: Option<usize>,
         models: &[DecoderModel],
         metrics: &mut DecodeMetrics,
-    ) -> Vec<PendingSeq> {
-        let mut admitted: Vec<PendingSeq> = Vec::new();
+    ) -> Option<PendingSeq> {
         loop {
-            if self.running.len() + admitted.len() >= self.max_running {
-                break;
-            }
             let from_preempted = !self.preempted.is_empty();
-            let Some((c_id, c_model, c_tokens, c_worst)) = ({
+            let (c_id, c_model, c_tokens, c_worst) = {
                 let head = if from_preempted {
                     self.preempted.front()
                 } else {
                     self.waiting.front()
-                };
-                head.map(|c| (c.id, c.model, c.resident_tokens(), c.worst_tokens()))
-            }) else {
-                break;
+                }?;
+                (head.id, head.model, commit_of(head), head.worst_tokens())
             };
-            if admitted.first().is_some_and(|a| a.model != c_model) {
-                break;
+            if model_filter.is_some_and(|m| m != c_model) {
+                return None;
             }
             let cfg = &models[c_model].cfg;
             match self.kv.admit(c_id, cfg.d_model, cfg.n_layers, c_tokens, c_worst) {
                 Ok(()) => {
-                    let seq = if from_preempted {
-                        self.preempted.pop_front()
-                    } else {
-                        self.waiting.pop_front()
-                    }
-                    .expect("peeked above");
-                    admitted.push(seq);
+                    return Some(
+                        if from_preempted {
+                            self.preempted.pop_front()
+                        } else {
+                            self.waiting.pop_front()
+                        }
+                        .expect("peeked above"),
+                    )
                 }
-                Err(AdmitError::NoCapacity { .. }) => break,
+                Err(AdmitError::NoCapacity { .. }) => return None,
                 Err(e) => {
-                    // Submit-time validation makes this unreachable;
-                    // shed the request loudly rather than corrupting.
                     let seq = if from_preempted {
                         self.preempted.pop_front()
                     } else {
@@ -540,6 +623,27 @@ impl DeviceDecoder {
                     metrics.rejections.push((seq.id, e.to_string()));
                 }
             }
+        }
+    }
+
+    /// Admit every admissible sequence of one model group: preempted
+    /// resumes first, FIFO within each queue, stopping at the batch
+    /// cap, at the first capacity miss, or at a model change (one
+    /// prefill job = one model).
+    fn admit_wave(
+        &mut self,
+        models: &[DecoderModel],
+        metrics: &mut DecodeMetrics,
+    ) -> Vec<PendingSeq> {
+        let mut admitted: Vec<PendingSeq> = Vec::new();
+        while self.running.len() + admitted.len() < self.max_running {
+            let filter = admitted.first().map(|a| a.model);
+            let Some(seq) =
+                self.pop_admitted_head(|p| p.resident_tokens(), filter, models, metrics)
+            else {
+                break;
+            };
+            admitted.push(seq);
         }
         admitted
     }
@@ -575,6 +679,7 @@ impl DeviceDecoder {
                 ttft: Some(s.ttft),
                 last_emit: s.last_emit,
                 preemptions: s.preemptions + 1,
+                migrations: s.migrations,
             });
             if self.running.is_empty() {
                 break;
@@ -616,58 +721,265 @@ impl DeviceDecoder {
         let charged = self.engine.charge_run(model_idx, now, &report, finishing);
         let completion = now + charged;
         for (p, out) in admitted.into_iter().zip(outs) {
-            let fresh = p.emitted.is_empty();
-            let mut emitted = p.emitted;
-            let ttft = match p.ttft {
-                Some(t) => t,
-                None => completion - p.arrival,
-            };
-            if fresh {
-                metrics.ttft.record(completion - p.arrival);
-            } else {
-                // The resume-emitted token's gap spans the whole
-                // preemption: honest client-visible inter-token time.
-                metrics.itl.record(completion - p.last_emit);
-            }
-            metrics.tokens += 1;
-            emitted.push(mat_row(&out, out.rows - 1));
-            let last_emit = completion;
-            let remaining = p.max_new - emitted.len();
-            if remaining == 0 {
-                self.kv.release(p.id);
-                metrics.completed += 1;
-                metrics.e2e.record(completion - p.arrival);
-                completions.push(GenCompletion {
-                    id: p.id,
-                    tokens: stack_rows(&emitted),
-                    ttft_cycles: ttft,
-                    finish_cycle: completion,
-                    preemptions: p.preemptions,
-                });
-            } else {
-                let next_input = emitted.last().expect("prefill emitted a token").clone();
-                self.running.push(RunSeq {
-                    id: p.id,
-                    model: p.model,
-                    admit_order: self.admit_counter,
-                    arrival: p.arrival,
-                    prompt: p.prompt,
-                    emitted,
-                    next_input,
-                    remaining,
-                    max_new: p.max_new,
-                    ttft,
-                    last_emit,
-                    preemptions: p.preemptions,
-                });
-                self.admit_counter += 1;
-            }
+            self.finish_prefilled_seq(p, &out, completion, metrics, completions);
         }
         metrics.prefill_jobs += 1;
         metrics.prefill_batch.record(inputs.len() as u64);
         metrics.kv_occupancy_permille.record(self.kv.occupancy_permille());
         metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
         Ok(())
+    }
+
+    /// Book the single token a completed (re-)prefill emits — a fresh
+    /// sequence's first (TTFT), a resume's next (ITL spanning the whole
+    /// preemption) — and move the sequence into the running batch, or
+    /// complete it. Shared by the stacked prefill job and the *final*
+    /// chunk of a chunked prefill so the two paths can never drift.
+    fn finish_prefilled_seq(
+        &mut self,
+        p: PendingSeq,
+        out: &MatF32,
+        completion: u64,
+        metrics: &mut DecodeMetrics,
+        completions: &mut Vec<GenCompletion>,
+    ) {
+        let fresh = p.emitted.is_empty();
+        let mut emitted = p.emitted;
+        let ttft = match p.ttft {
+            Some(t) => t,
+            None => completion - p.arrival,
+        };
+        if fresh {
+            metrics.ttft.record(completion - p.arrival);
+        } else {
+            // The resume-emitted token's gap spans the whole
+            // preemption: honest client-visible inter-token time.
+            metrics.itl.record(completion - p.last_emit);
+        }
+        metrics.tokens += 1;
+        emitted.push(mat_row(out, out.rows - 1));
+        let last_emit = completion;
+        let remaining = p.max_new - emitted.len();
+        if remaining == 0 {
+            self.kv.release(p.id);
+            metrics.completed += 1;
+            metrics.e2e.record(completion - p.arrival);
+            completions.push(GenCompletion {
+                id: p.id,
+                tokens: stack_rows(&emitted),
+                ttft_cycles: ttft,
+                finish_cycle: completion,
+                preemptions: p.preemptions,
+                migrations: p.migrations,
+            });
+        } else {
+            let next_input = emitted.last().expect("prefill emitted a token").clone();
+            self.running.push(RunSeq {
+                id: p.id,
+                model: p.model,
+                admit_order: self.admit_counter,
+                arrival: p.arrival,
+                prompt: p.prompt,
+                emitted,
+                next_input,
+                remaining,
+                max_new: p.max_new,
+                ttft,
+                last_emit,
+                preemptions: p.preemptions,
+                migrations: p.migrations,
+            });
+            self.admit_counter += 1;
+        }
+    }
+
+    /// One job under the `Chunked` schedule: a fixed-budget prefill
+    /// chunk or a decode tick, strictly alternating whenever both
+    /// kinds of work exist — a long prompt costs the running batch at
+    /// most one chunk of ITL per tick instead of its whole prefill.
+    fn step_chunked(
+        &mut self,
+        now: u64,
+        chunk_tokens: usize,
+        models: &[DecoderModel],
+        quants: &[EncoderQuant],
+        metrics: &mut DecodeMetrics,
+        completions: &mut Vec<GenCompletion>,
+    ) -> Result<bool> {
+        let budget = chunk_tokens.max(1);
+        let want_prefill =
+            self.chunking.is_some() || !self.waiting.is_empty() || !self.preempted.is_empty();
+        let want_decode = !self.running.is_empty();
+        let prefill_turn = want_prefill && !(want_decode && self.last_was_prefill);
+        let chunk_ran = prefill_turn
+            && self.run_chunk_job(now, budget, models, quants, metrics, completions)?;
+        if chunk_ran {
+            self.last_was_prefill = true;
+            return Ok(true);
+        }
+        if want_decode {
+            let preempted_any = self.make_room(metrics);
+            if self.running.is_empty() {
+                return Ok(preempted_any);
+            }
+            self.run_tick_job(now, models, quants, metrics, completions)?;
+            self.last_was_prefill = false;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Run (or start) one fixed-budget prefill chunk. Returns whether a
+    /// chunk actually ran — `false` when nothing is waiting or the KV
+    /// pool cannot host the next chunk yet (ticks and completions must
+    /// free pages first; the admission capacity check at submit time
+    /// guarantees eventual progress).
+    fn run_chunk_job(
+        &mut self,
+        now: u64,
+        budget: usize,
+        models: &[DecoderModel],
+        quants: &[EncoderQuant],
+        metrics: &mut DecodeMetrics,
+        completions: &mut Vec<GenCompletion>,
+    ) -> Result<bool> {
+        if self.chunking.is_none() {
+            // The chunking prompt will join the running batch when its
+            // final chunk lands, so it counts against the batch cap.
+            if self.running.len() >= self.max_running {
+                return Ok(false);
+            }
+            let Some(seq) = self.pop_admitted_head(
+                |p| p.resident_tokens().min(budget),
+                None,
+                models,
+                metrics,
+            ) else {
+                return Ok(false);
+            };
+            let input = seq.prefill_input();
+            self.chunking = Some(ChunkState { seq, input, done: 0 });
+        } else {
+            let st = self.chunking.as_ref().expect("checked");
+            let rows = (st.input.rows - st.done).min(budget);
+            match self.kv.commit_tokens(st.seq.id, rows) {
+                Ok(_) => {}
+                Err(AdmitError::NoCapacity { .. }) => return Ok(false),
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let st = self.chunking.take().expect("set above");
+        let model_idx = st.seq.model;
+        // Committed minus already-prefilled = this chunk's rows.
+        let rows = self.kv.len(st.seq.id) - st.done;
+        let d = st.input.cols;
+        let chunk =
+            MatF32::from_slice(rows, d, &st.input.data[st.done * d..(st.done + rows) * d]);
+        self.engine.sim.reset_stats();
+        let (outs, report) = run_prefill_batch(
+            &mut self.engine.sim,
+            &models[model_idx],
+            &quants[model_idx],
+            &mut self.kv,
+            &[(st.seq.id, &chunk)],
+        )?;
+        let done_after = st.done + rows;
+        let is_final = done_after == st.input.rows;
+        let finishing = u64::from(is_final && st.seq.emitted.len() + 1 == st.seq.max_new);
+        let charged = self.engine.charge_run(model_idx, now, &report, finishing);
+        let completion = now + charged;
+        metrics.prefill_jobs += 1;
+        if !is_final {
+            metrics.prefill_chunks += 1;
+        }
+        metrics.prefill_batch.record(1);
+        metrics.kv_occupancy_permille.record(self.kv.occupancy_permille());
+        metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
+        if is_final {
+            let out = outs.into_iter().next().expect("one sequence");
+            self.finish_prefilled_seq(st.seq, &out, completion, metrics, completions);
+        } else {
+            self.chunking = Some(ChunkState { done: done_after, ..st });
+        }
+        Ok(true)
+    }
+
+    /// Youngest migratable pending sequence, viewed (`(id, model,
+    /// prefill rows, remaining decode tokens, worst tokens)`) — the
+    /// migration planner's probe. Waiting tail first, then preempted;
+    /// the mid-chunk prompt never migrates (its pages are mid-fill).
+    fn peek_pending_tail(&self) -> Option<(u64, usize, usize, usize, usize)> {
+        let p = self.waiting.back().or_else(|| self.preempted.back())?;
+        Some((
+            p.id,
+            p.model,
+            p.resident_tokens(),
+            p.max_new.saturating_sub(p.emitted.len() + 1),
+            p.worst_tokens(),
+        ))
+    }
+
+    /// Remove the sequence [`Self::peek_pending_tail`] reported.
+    fn take_pending_tail(&mut self) -> Option<PendingSeq> {
+        self.waiting.pop_back().or_else(|| self.preempted.pop_back())
+    }
+
+    /// Re-queue a migrated-in pending sequence (fresh arrivals wait,
+    /// preempted ones resume first — the admission order the owner
+    /// would have used).
+    fn push_pending(&mut self, p: PendingSeq) {
+        if p.emitted.is_empty() {
+            self.waiting.push_back(p);
+        } else {
+            self.preempted.push_back(p);
+        }
+    }
+
+    /// `(id, model, remaining tokens, resident KV tokens, worst
+    /// tokens)` of the running sequence LIFO migration would move.
+    fn peek_newest_running(&self) -> Option<(u64, usize, usize, usize, usize)> {
+        self.running.iter().max_by_key(|s| s.admit_order).map(|s| {
+            (s.id, s.model, s.remaining, self.kv.len(s.id), s.prompt.rows + s.max_new - 1)
+        })
+    }
+
+    /// Export the most recently admitted running sequence together
+    /// with its serialized KV image, releasing its pages here. The
+    /// image is taken *before* the release, so a failed hand-off could
+    /// always be re-admitted — the fleet checks the destination first.
+    fn export_newest_running(&mut self) -> Option<(RunSeq, KvSeqImage)> {
+        let idx = self
+            .running
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.admit_order)
+            .map(|(i, _)| i)?;
+        let s = self.running.remove(idx);
+        let image = self.kv.export_seq(s.id).expect("running sequence is resident");
+        self.kv.release(s.id);
+        Some((s, image))
+    }
+
+    /// Import a migrated running sequence: pages re-admitted from the
+    /// image (bit-exact), decode continues here with **no recompute**.
+    fn import_running(&mut self, mut s: RunSeq, image: &KvSeqImage, worst: usize) {
+        self.kv
+            .import_seq(s.id, image, worst)
+            .expect("the migration planner checked capacity before moving");
+        s.admit_order = self.admit_counter;
+        self.admit_counter += 1;
+        self.running.push(s);
+    }
+
+    /// Occupy this device's timeline with a migration transfer
+    /// (serialization at the source, deserialization at the target),
+    /// starting no earlier than `earliest`. Returns the transfer's
+    /// completion stamp.
+    fn charge_transfer(&mut self, earliest: u64, ref_cycles: u64) -> u64 {
+        let start = self.engine.free_at.max(earliest);
+        self.engine.free_at = start + ref_cycles;
+        self.engine.busy_cycles += ref_cycles;
+        self.engine.free_at
     }
 
     fn run_tick_job(
@@ -726,6 +1038,15 @@ impl DeviceDecoder {
         };
         let charged = self.engine.charge_run(key, now, &report, finishing);
         let completion = now + charged;
+        // Measured decode rate: a single-model tick of B sequences cost
+        // `charged` reference cycles — `charged / B` per token is what
+        // the fleet's per-(model, class) cache replaces its analytic
+        // seed with on first observation.
+        self.last_tick_obs = if groups.len() == 1 {
+            Some((groups[0].0, (charged / order.len() as u64).max(1)))
+        } else {
+            None
+        };
         for (i, row) in outs {
             let s = &mut self.running[i];
             metrics.tokens += 1;
@@ -753,6 +1074,7 @@ impl DeviceDecoder {
                 ttft_cycles: s.ttft,
                 finish_cycle: completion,
                 preemptions: s.preemptions,
+                migrations: s.migrations,
             });
         }
         metrics.decode_ticks += 1;
@@ -774,8 +1096,14 @@ pub struct DecodeFleetSim {
     quants: Vec<EncoderQuant>,
     /// Analytic per-prompt-token prefill cost, `[model][class]`.
     prefill_cost: Vec<Vec<u64>>,
-    /// Analytic per-token decode cost, `[model][class]`.
+    /// Per-token decode cost, `[model][class]`: the analytic GEMV
+    /// ideal at the midpoint context until the first *measured* tick
+    /// of that model on that class replaces it (the encoder fleet's
+    /// observed-cost rule, applied to decode placement).
     token_cost: Vec<Vec<u64>>,
+    /// Which `token_cost` slots (`model · n_classes + class`) hold a
+    /// measured rate.
+    token_observed: Vec<bool>,
     ran: bool,
 }
 
@@ -836,6 +1164,7 @@ impl DecodeFleetSim {
                     .collect()
             })
             .collect();
+        let token_observed = vec![false; classes.len() * device_classes.len()];
         Self {
             cfg,
             devices,
@@ -845,6 +1174,7 @@ impl DecodeFleetSim {
             quants,
             prefill_cost,
             token_cost,
+            token_observed,
             ran: false,
         }
     }
@@ -852,6 +1182,32 @@ impl DecodeFleetSim {
     /// The served model catalog (index-aligned with request `model`).
     pub fn models(&self) -> &[DecoderModel] {
         &self.models
+    }
+
+    /// Expected per-token decode cost of `model` on device-class index
+    /// `class`, reference cycles: the measured tokens-per-cycle rate
+    /// once one tick of that model has completed on that class, the
+    /// analytic midpoint-GEMV seed before.
+    pub fn expected_token_cost(&self, model: usize, class: usize) -> u64 {
+        self.token_cost[model][class]
+    }
+
+    /// Whether `(model, class)` has had its analytic seed replaced by
+    /// a measured rate.
+    pub fn token_cost_observed(&self, model: usize, class: usize) -> bool {
+        self.token_observed[model * self.device_classes.len() + class]
+    }
+
+    /// Record a measured per-token decode cost: the **first**
+    /// observation replaces the analytic seed (later ticks are
+    /// ignored, so placement estimates stay stable and deterministic —
+    /// the same rule as the encoder fleet's SJF cost cache).
+    fn observe_token_cost(&mut self, model: usize, class: usize, per_token: u64) {
+        let slot = model * self.device_classes.len() + class;
+        if !self.token_observed[slot] {
+            self.token_cost[model][class] = per_token.max(1);
+            self.token_observed[slot] = true;
+        }
     }
 
     /// Place on the device with the least expected backlog in
@@ -901,6 +1257,167 @@ impl DecodeFleetSim {
         }
     }
 
+    /// Transfer time for `words` over one endpoint's torus entry links
+    /// at its class clock, on the reference timeline. Serialization at
+    /// the source and deserialization at the destination are charged
+    /// separately, each at that endpoint's own link rate and clock.
+    fn transfer_ref_cycles(&self, class: usize, words: u64) -> u64 {
+        let c = &self.device_classes[class];
+        let dev = words.div_ceil(c.entry_link_words_per_cycle().max(1)).max(1);
+        to_ref_cycles(dev, c.freq_mhz, self.cfg.ref_mhz).max(1)
+    }
+
+    /// One migration pass at `now`: idle, empty devices pull the
+    /// youngest waiting — or, failing that, the most recently admitted
+    /// running — sequence from a loaded peer whenever the class-aware
+    /// finish estimate (remaining prefill + decode cycles at the
+    /// candidate classes, transfer cost priced in) **strictly** beats
+    /// staying put. Deterministic: candidates are scanned in a fixed
+    /// order and the largest improvement wins (ties to the lowest
+    /// destination, then source, pending before running); each
+    /// sequence moves at most once per pass, so a pass terminates.
+    fn rebalance(&mut self, now: u64, metrics: &mut DecodeMetrics) {
+        if self.devices.len() < 2 {
+            return;
+        }
+        let mut moved: BTreeSet<u64> = BTreeSet::new();
+        loop {
+            // The stay-estimate depends only on the source (and the
+            // backlog walk is O(queue length)), so compute it once per
+            // device per pass iteration rather than once per pair.
+            let stay: Vec<u64> = (0..self.devices.len())
+                .map(|src| {
+                    self.devices[src].free_at().max(now).saturating_add(
+                        self.devices[src].expected_backlog(
+                            self.device_class[src],
+                            &self.prefill_cost,
+                            &self.token_cost,
+                        ),
+                    )
+                })
+                .collect();
+            // (gain, dst, src, running-kind)
+            let mut best: Option<(u64, usize, usize, bool)> = None;
+            for dst in 0..self.devices.len() {
+                if self.devices[dst].free_at() > now || self.devices[dst].has_work() {
+                    continue;
+                }
+                let c_dst = self.device_class[dst];
+                for src in 0..self.devices.len() {
+                    if src == dst {
+                        continue;
+                    }
+                    let stay_finish = stay[src];
+                    // The hand-off is causal: serialization starts
+                    // only after the source's in-flight job drains
+                    // (its state — emission stamps included — is not
+                    // consistent before that), and the destination
+                    // deserializes only after serialization completes.
+                    let c_src = self.device_class[src];
+                    let src_ready = self.devices[src].free_at().max(now);
+                    // Pending candidate: only activation rows move.
+                    if let Some((id, model, rows, rem, worst)) =
+                        self.devices[src].peek_pending_tail()
+                    {
+                        let cfgm = &self.models[model].cfg;
+                        if !moved.contains(&id)
+                            && worst <= self.devices[dst].kv_capacity_tokens(cfgm)
+                        {
+                            let words = (rows * cfgm.d_model) as u64;
+                            let own = self.prefill_cost[model][c_dst]
+                                .saturating_mul(rows as u64)
+                                .saturating_add(
+                                    self.token_cost[model][c_dst].saturating_mul(rem as u64),
+                                );
+                            let move_finish = src_ready
+                                .saturating_add(self.transfer_ref_cycles(c_src, words))
+                                .saturating_add(self.transfer_ref_cycles(c_dst, words))
+                                .saturating_add(own);
+                            let gain = stay_finish.saturating_sub(move_finish);
+                            if gain > best.map_or(0, |b| b.0) {
+                                best = Some((gain, dst, src, false));
+                            }
+                        }
+                    }
+                    // Running candidate: the KV image moves with it —
+                    // decode resumes on the destination, no recompute.
+                    if let Some((id, model, rem, kv_len, worst)) =
+                        self.devices[src].peek_newest_running()
+                    {
+                        let cfgm = &self.models[model].cfg;
+                        if !moved.contains(&id)
+                            && self.devices[dst].running_len() < self.cfg.max_running
+                            && self.devices[dst].kv.can_host(
+                                id,
+                                cfgm.d_model,
+                                cfgm.n_layers,
+                                kv_len,
+                                worst,
+                            )
+                        {
+                            let words = (kv_len * 2 * cfgm.d_model * cfgm.n_layers) as u64;
+                            let own =
+                                self.token_cost[model][c_dst].saturating_mul(rem as u64);
+                            let move_finish = src_ready
+                                .saturating_add(self.transfer_ref_cycles(c_src, words))
+                                .saturating_add(self.transfer_ref_cycles(c_dst, words))
+                                .saturating_add(own);
+                            let gain = stay_finish.saturating_sub(move_finish);
+                            if gain > best.map_or(0, |b| b.0) {
+                                best = Some((gain, dst, src, true));
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((_, dst, src, running)) = best else { break };
+            let id = self.execute_migration(dst, src, running, now, metrics);
+            moved.insert(id);
+        }
+    }
+
+    /// Move one sequence `src → dst`: the source serializes after its
+    /// in-flight job drains, the destination deserializes after the
+    /// serialization lands (so a migrated *running* sequence can never
+    /// take a tick on the destination before the state it carries —
+    /// emission stamps included — exists), then re-admit. Returns the
+    /// migrated sequence's id.
+    fn execute_migration(
+        &mut self,
+        dst: usize,
+        src: usize,
+        running: bool,
+        now: u64,
+        metrics: &mut DecodeMetrics,
+    ) -> u64 {
+        let (c_src, c_dst) = (self.device_class[src], self.device_class[dst]);
+        let (id, words) = if running {
+            let (mut s, image) =
+                self.devices[src].export_newest_running().expect("planner saw a candidate");
+            let words = image.word_count();
+            let worst = s.prompt.rows + s.max_new - 1;
+            s.migrations += 1;
+            let id = s.id;
+            self.devices[dst].import_running(s, &image, worst);
+            (id, words)
+        } else {
+            let mut p =
+                self.devices[src].take_pending_tail().expect("planner saw a candidate");
+            let words = (p.resident_tokens() * self.models[p.model].cfg.d_model) as u64;
+            p.migrations += 1;
+            let id = p.id;
+            self.devices[dst].push_pending(p);
+            (id, words)
+        };
+        let xfer_src = self.transfer_ref_cycles(c_src, words);
+        let xfer_dst = self.transfer_ref_cycles(c_dst, words);
+        let handoff = self.devices[src].charge_transfer(now, xfer_src);
+        self.devices[dst].charge_transfer(handoff, xfer_dst);
+        metrics.migrations += 1;
+        metrics.migrated_words += words;
+        id
+    }
+
     /// Run the fleet over a generation request stream to completion.
     /// Returns the aggregated metrics and every completion (outputs
     /// included — the join/leave bit-identity tests compare them to
@@ -930,10 +1447,19 @@ impl DecodeFleetSim {
                         &mut metrics,
                         &mut completions,
                     )?;
+                    if let Some((model, per_token)) = self.devices[d].take_tick_observation() {
+                        let class = self.device_class[d];
+                        self.observe_token_cost(model, class, per_token);
+                    }
                     if !progressed {
                         break;
                     }
                 }
+            }
+            if self.cfg.migrate {
+                // Migrated-in work starts after its transfer lands
+                // (free_at > now), so no re-stepping at this instant.
+                self.rebalance(now, &mut metrics);
             }
             let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
             for d in &self.devices {
@@ -1138,6 +1664,173 @@ mod tests {
         assert_eq!(done[0].tokens.rows, 13);
         assert_eq!(m.per_device[0].served, 0, "21 pages can never hold 22 tokens");
         assert_eq!(m.per_device[1].served, 1);
+    }
+
+    fn long_classes() -> Vec<ModelClass> {
+        vec![ModelClass {
+            name: "gen-long",
+            cfg: XformerConfig { n_layers: 1, seq: 32, d_model: 16, n_heads: 2, d_ff: 32 },
+            weight: 1.0,
+            sla_ms: 0.0,
+            priority: 0,
+        }]
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_itl_and_stays_output_exact() {
+        // Three short sequences decode while a 24-row prompt arrives
+        // mid-flight. Under PrefillFirst the long prefill runs as one
+        // job and the running batch's worst inter-token gap spans it;
+        // under Chunked{8} it runs as budgeted chunks between ticks.
+        let classes = long_classes();
+        let mk = |schedule: DecodeSchedule| {
+            let mut reqs: Vec<GenRequest> =
+                (0..3).map(|i| gen_req(i, 2, 10, 0)).collect();
+            reqs.push(gen_req(3, 24, 2, 1));
+            let cfg = DecodeFleetConfig {
+                roster: vec![DeviceClass::paper()],
+                ref_mhz: 100,
+                max_running: 4,
+                schedule,
+                ..Default::default()
+            };
+            let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+            fleet.run(reqs).unwrap()
+        };
+        let (mp, mut cp) = mk(DecodeSchedule::PrefillFirst);
+        let (mc, mut cc) = mk(DecodeSchedule::Chunked { chunk_tokens: 8 });
+        assert_eq!(mp.completed, 4);
+        assert_eq!(mc.completed, 4);
+        assert_eq!(mc.prefill_chunks, 2, "a 24-row prompt at budget 8 has 2 partial chunks");
+        assert!(
+            mc.itl.max() < mp.itl.max(),
+            "chunking must shrink the worst inter-token gap: {} vs {}",
+            mc.itl.max(),
+            mp.itl.max()
+        );
+        // Chunk schedules change timing only — outputs are bit-exact.
+        cp.sort_by_key(|c| c.id);
+        cc.sort_by_key(|c| c.id);
+        for (a, b) in cp.iter().zip(&cc) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens.data, b.tokens.data, "sequence {} perturbed by chunking", a.id);
+        }
+    }
+
+    #[test]
+    fn migration_rescues_a_crowded_device_and_stays_output_exact() {
+        // Four sequences are force-submitted to device 0 of a two-device
+        // fleet, bypassing the placer — the scenario migration exists
+        // for: estimates drifted and one device ended up crowded while
+        // its twin idles. With migration on, rebalance must move work
+        // to the idle device (the stay-estimate carries the whole
+        // crowd's backlog, the move-estimate one sequence plus a
+        // transfer) — a *running* sequence travels with its KV image
+        // and resumes without recompute — and every completion stays
+        // bit-identical to the no-migration run.
+        let classes = tiny_classes();
+        let cfg_model = classes[0].cfg;
+        let mk = |migrate: bool| {
+            let cfg = DecodeFleetConfig {
+                roster: vec![DeviceClass::paper(); 2],
+                ref_mhz: 100,
+                max_running: 4,
+                migrate,
+                ..Default::default()
+            };
+            let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+            for i in 0..4 {
+                fleet.devices[0].submit(gen_req(i, 3, 6, 0), &cfg_model).unwrap();
+            }
+            fleet.run(Vec::new()).unwrap()
+        };
+        let (m0, mut c0) = mk(false);
+        let (m1, mut c1) = mk(true);
+        assert_eq!(m0.completed, 4);
+        assert_eq!(m0.migrations, 0);
+        assert_eq!(m0.migrated_words, 0);
+        assert_eq!(m1.completed, 4);
+        assert!(m1.migrations > 0, "the idle twin must pull work off the crowded device");
+        assert!(m1.migrated_words > 0);
+        assert!(c1.iter().any(|c| c.migrations > 0));
+        assert!(
+            m1.per_device.iter().all(|d| d.served > 0),
+            "migration must spread completions across both devices: {:?}",
+            m1.per_device.iter().map(|d| d.served).collect::<Vec<_>>()
+        );
+        c0.sort_by_key(|c| c.id);
+        c1.sort_by_key(|c| c.id);
+        for (a, b) in c0.iter().zip(&c1) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens.data, b.tokens.data,
+                "sequence {} perturbed by migration",
+                a.id
+            );
+        }
+    }
+
+    #[test]
+    fn first_decode_tick_replaces_the_analytic_token_seed() {
+        let classes = tiny_classes();
+        let mut fleet = DecodeFleetSim::new(single_device_cfg(), &classes, 42);
+        let analytic = fleet.expected_token_cost(0, 0);
+        assert!(!fleet.token_cost_observed(0, 0));
+        let (m, _) = fleet.run(vec![gen_req(0, 3, 4, 0)]).unwrap();
+        assert_eq!(m.completed, 1);
+        assert!(fleet.token_cost_observed(0, 0), "one tick must flip the slot to measured");
+        assert!(
+            fleet.expected_token_cost(0, 0) > analytic,
+            "the measured charge (fills, drains, attention) must exceed the GEMV ideal: \
+             {} vs {analytic}",
+            fleet.expected_token_cost(0, 0)
+        );
+    }
+
+    #[test]
+    fn measured_token_rates_drive_placement_over_analytic_seeds() {
+        let classes = tiny_classes();
+        let roster = DeviceClass::parse_roster("4x4@100:1,8x4@200:1").unwrap();
+        let mk = || {
+            DecodeFleetSim::new(
+                DecodeFleetConfig {
+                    roster: roster.clone(),
+                    ref_mhz: 100,
+                    max_running: 4,
+                    ..Default::default()
+                },
+                &classes,
+                42,
+            )
+        };
+        let fleet = mk();
+        let (c_little, c_big) = (fleet.device_class[0], fleet.device_class[1]);
+        assert!(
+            fleet.expected_token_cost(0, c_little) >= fleet.expected_token_cost(0, c_big),
+            "analytic seeds rank the big class at or below the little class per token"
+        );
+        // A slow-analytic class that *measures* fast must win a
+        // token-dominated placement after one observation…
+        let mut fleet = mk();
+        fleet.observe_token_cost(0, c_little, 1);
+        fleet.observe_token_cost(0, c_big, 1_000_000);
+        let mut metrics = DecodeMetrics::default();
+        fleet.place(gen_req(0, 1, 8, 0), 0, &mut metrics);
+        assert_eq!(fleet.devices[0].queued_len(), 1, "measured-fast little class must win");
+        assert_eq!(fleet.devices[1].queued_len(), 0);
+        // …and symmetrically for the big class.
+        let mut fleet = mk();
+        fleet.observe_token_cost(0, c_little, 1_000_000);
+        fleet.observe_token_cost(0, c_big, 1);
+        let mut metrics = DecodeMetrics::default();
+        fleet.place(gen_req(1, 1, 8, 0), 0, &mut metrics);
+        assert_eq!(fleet.devices[1].queued_len(), 1, "measured-fast big class must win");
+        // Only the *first* observation replaces the seed.
+        let mut fleet = mk();
+        fleet.observe_token_cost(0, c_little, 7);
+        fleet.observe_token_cost(0, c_little, 9);
+        assert_eq!(fleet.expected_token_cost(0, c_little), 7);
+        assert!(fleet.token_cost_observed(0, c_little));
     }
 
     #[test]

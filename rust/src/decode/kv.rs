@@ -99,6 +99,10 @@ pub enum AdmitError {
     AlreadyAdmitted { seq: u64 },
     /// The sequence id is not resident (stale handle).
     Unknown { seq: u64 },
+    /// A serialized KV image's word count does not match its header —
+    /// the import is refused before any allocation, so the destination
+    /// pool (and the source it was exported from) stay intact.
+    CorruptImage { expected_words: usize, got_words: usize },
 }
 
 impl fmt::Display for AdmitError {
@@ -118,6 +122,11 @@ impl fmt::Display for AdmitError {
             ),
             Self::AlreadyAdmitted { seq } => write!(f, "sequence {seq} already admitted"),
             Self::Unknown { seq } => write!(f, "sequence {seq} not resident"),
+            Self::CorruptImage { expected_words, got_words } => write!(
+                f,
+                "corrupt KV image: header promises {expected_words} words, payload has \
+                 {got_words}"
+            ),
         }
     }
 }
@@ -133,12 +142,47 @@ pub struct KvMetrics {
     /// Words gathered out of pages for attention: `2·d_model·len` per
     /// per-layer read.
     pub read_words: u64,
-    /// Sequences admitted (including re-admissions after preemption).
+    /// Sequences admitted (including re-admissions after preemption
+    /// and migration imports).
     pub admitted: u64,
     /// Sequences released (completion or preemption).
     pub released: u64,
     /// Pages returned to the free list by releases.
     pub freed_pages: u64,
+    /// Words serialized out of this pool by [`PagedKvCache::export_seq`]
+    /// (migration traffic — counted separately from `read_words`, which
+    /// stays the attention-gather figure; an export must never look
+    /// like phantom attention reads).
+    pub export_words: u64,
+    /// Words deserialized into this pool by
+    /// [`PagedKvCache::import_seq`] (counted separately from
+    /// `fill_words` for the same reason). Conservation invariant: a
+    /// migration's `export_words` on the source equals its
+    /// `import_words` on the destination exactly.
+    pub import_words: u64,
+}
+
+/// A serialized resident sequence: everything another device's pool
+/// needs to re-admit it with its cache intact. The payload is the
+/// exact dequantized K/V activations (token-major, page padding
+/// dropped), so a migrated sequence decodes **bit-identically** on the
+/// destination — whatever its class or page geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvSeqImage {
+    pub d_model: usize,
+    pub n_layers: usize,
+    /// Committed tokens at export time.
+    pub len: usize,
+    /// `len · 2 · d_model · n_layers` words: each token's K then V row
+    /// for layer 0, then layer 1, … — the in-page token layout.
+    pub words: Vec<f32>,
+}
+
+impl KvSeqImage {
+    /// Words this image moves over a transfer link.
+    pub fn word_count(&self) -> u64 {
+        self.words.len() as u64
+    }
 }
 
 /// One resident sequence: shape, page table, committed length.
@@ -312,6 +356,32 @@ impl PagedKvCache {
         Ok(token)
     }
 
+    /// Commit `n` more token slots for `seq` in one **all-or-nothing**
+    /// step (the chunked-prefill grow path): either every page the
+    /// growth needs is allocated and the committed length advances by
+    /// `n`, or the cache is left untouched and the exact shortfall is
+    /// reported. Returns the first newly committed token index.
+    pub fn commit_tokens(&mut self, seq: u64, n: usize) -> Result<usize, AdmitError> {
+        assert!(n > 0, "committing zero tokens is a scheduling bug");
+        let needed = {
+            let s = self.seqs.get(&seq).ok_or(AdmitError::Unknown { seq })?;
+            s.pages_for(s.len + n).saturating_sub(s.pages.len())
+        };
+        if needed > self.free.len() {
+            return Err(AdmitError::NoCapacity {
+                needed_pages: needed,
+                free_pages: self.free.len(),
+            });
+        }
+        let frames: Vec<usize> =
+            (0..needed).map(|_| self.free.pop().expect("checked above")).collect();
+        let s = self.seqs.get_mut(&seq).expect("checked above");
+        s.pages.extend(frames);
+        let first = s.len;
+        s.len += n;
+        Ok(first)
+    }
+
     /// Write one layer's K and V rows for a committed token. Panics on
     /// out-of-table writes — a scheduling bug must never silently
     /// corrupt a neighbour's pages.
@@ -339,9 +409,23 @@ impl PagedKvCache {
 
     /// Write a whole prompt's K/V for one layer (token rows `0..k.rows`).
     pub fn write_prompt_layer(&mut self, seq: u64, layer: usize, k: &MatF32, v: &MatF32) {
+        self.write_rows_layer(seq, 0, layer, k, v);
+    }
+
+    /// Write a contiguous run of token rows for one layer starting at
+    /// token `first` (the chunked-prefill fill path: chunk `c` writes
+    /// its rows at the offset earlier chunks committed).
+    pub fn write_rows_layer(
+        &mut self,
+        seq: u64,
+        first: usize,
+        layer: usize,
+        k: &MatF32,
+        v: &MatF32,
+    ) {
         assert_eq!(k.rows, v.rows, "K/V row count mismatch");
         for t in 0..k.rows {
-            self.write_token_layer(seq, t, layer, k.row(t), v.row(t));
+            self.write_token_layer(seq, first + t, layer, k.row(t), v.row(t));
         }
     }
 
@@ -375,6 +459,125 @@ impl PagedKvCache {
         self.metrics.released += 1;
         self.metrics.freed_pages += n as u64;
         n
+    }
+
+    /// Serialize a resident sequence's cache into a [`KvSeqImage`]
+    /// (migration export). **Non-destructive**: the sequence stays
+    /// resident and readable — the migration protocol only calls
+    /// [`Self::release`] after the destination's import has succeeded,
+    /// so a mid-import failure leaves the source intact. The words
+    /// moved are counted in [`KvMetrics::export_words`], never in the
+    /// attention-read figure.
+    pub fn export_seq(&mut self, seq: u64) -> Result<KvSeqImage, AdmitError> {
+        let s = self.seqs.get(&seq).ok_or(AdmitError::Unknown { seq })?;
+        let wpt = s.words_per_token();
+        let mut words = Vec::with_capacity(s.len * wpt);
+        for t in 0..s.len {
+            let frame = s.pages[t / s.tokens_per_page];
+            let base = (t % s.tokens_per_page) * wpt;
+            words.extend_from_slice(&self.frames[frame][base..base + wpt]);
+        }
+        self.metrics.export_words += words.len() as u64;
+        Ok(KvSeqImage { d_model: s.d_model, n_layers: s.n_layers, len: s.len, words })
+    }
+
+    /// Re-admit an exported sequence into this pool (migration
+    /// import): allocate pages for `image.len` tokens, copy the K/V
+    /// words in, and commit the length — **all-or-nothing**. Every
+    /// check (malformed image, token wider than a page, worst case
+    /// beyond the pool, duplicate id, not enough free pages) happens
+    /// before any allocation, so a failed import changes nothing here
+    /// and nothing at the source. `worst_tokens` is the same growth
+    /// bound [`Self::admit`] takes. Words land in
+    /// [`KvMetrics::import_words`], never in the prefill-fill figure.
+    pub fn import_seq(
+        &mut self,
+        seq: u64,
+        image: &KvSeqImage,
+        worst_tokens: usize,
+    ) -> Result<(), AdmitError> {
+        let wpt = 2 * image.d_model * image.n_layers;
+        if image.words.len() != image.len * wpt {
+            return Err(AdmitError::CorruptImage {
+                expected_words: image.len * wpt,
+                got_words: image.words.len(),
+            });
+        }
+        self.admit(seq, image.d_model, image.n_layers, image.len, worst_tokens)?;
+        let s = self.seqs.get(&seq).expect("just admitted");
+        let (tpp, pages) = (s.tokens_per_page, s.pages.clone());
+        for t in 0..image.len {
+            let frame = pages[t / tpp];
+            let base = (t % tpp) * wpt;
+            self.frames[frame][base..base + wpt]
+                .copy_from_slice(&image.words[t * wpt..(t + 1) * wpt]);
+        }
+        self.metrics.import_words += image.words.len() as u64;
+        Ok(())
+    }
+
+    /// Whether a sequence of this shape, with `len` resident tokens
+    /// and growth bound `worst_tokens`, could be admitted under id
+    /// `seq` right now — the same checks [`Self::admit`] performs
+    /// (token width, worst-case fit, duplicate id, free pages). This
+    /// is the **one** feasibility predicate: the migration planner
+    /// consults it before an image even exists, and
+    /// [`Self::can_import`] delegates to it, so planner and import can
+    /// never drift on admission semantics.
+    pub fn can_host(
+        &self,
+        seq: u64,
+        d_model: usize,
+        n_layers: usize,
+        len: usize,
+        worst_tokens: usize,
+    ) -> bool {
+        let wpt = 2 * d_model * n_layers;
+        if len == 0 || wpt == 0 || wpt > self.cfg.page_words || self.seqs.contains_key(&seq) {
+            return false;
+        }
+        let tpp = self.cfg.page_words / wpt;
+        worst_tokens.max(len) <= tpp * self.cfg.total_pages
+            && len.div_ceil(tpp) <= self.free.len()
+    }
+
+    /// Whether [`Self::import_seq`] would succeed right now for this
+    /// image under `worst_tokens` — payload/header agreement plus
+    /// every [`Self::can_host`] check, so a caller may import
+    /// unconditionally after a `true`.
+    pub fn can_import(&self, seq: u64, image: &KvSeqImage, worst_tokens: usize) -> bool {
+        image.words.len() == image.len * 2 * image.d_model * image.n_layers
+            && self.can_host(seq, image.d_model, image.n_layers, image.len, worst_tokens)
+    }
+
+    /// Structural-invariant check (test/debug aid; panics with the
+    /// violated invariant): every frame is owned exactly once — by the
+    /// free list or by one sequence's table — page tables are exactly
+    /// dense (precisely the pages the committed length needs), and the
+    /// free list holds no duplicates or out-of-range frames.
+    pub fn check_invariants(&self) {
+        let mut owners = vec![0u32; self.cfg.total_pages];
+        for &f in &self.free {
+            assert!(f < self.cfg.total_pages, "free-list frame {f} out of range");
+            owners[f] += 1;
+        }
+        for (id, s) in &self.seqs {
+            assert!(s.len > 0, "sequence {id} resident with zero committed tokens");
+            assert_eq!(
+                s.pages.len(),
+                s.pages_for(s.len),
+                "sequence {id}: page table not dense ({} pages for {} tokens)",
+                s.pages.len(),
+                s.len
+            );
+            for &f in &s.pages {
+                assert!(f < self.cfg.total_pages, "sequence {id} frame {f} out of range");
+                owners[f] += 1;
+            }
+        }
+        for (f, &n) in owners.iter().enumerate() {
+            assert_eq!(n, 1, "frame {f} owned {n} times (must be exactly once)");
+        }
     }
 }
 
@@ -501,6 +704,92 @@ mod tests {
         );
         // Paper class: 32 KiB L1 = 8192 words; half = 4096 words = 4 pages.
         assert_eq!(little.total_pages, 4);
+    }
+
+    #[test]
+    fn commit_tokens_is_all_or_nothing() {
+        let mut kv = tiny_pool(); // 8 tokens/page, 4 pages
+        kv.admit(1, 16, 1, 6, 30).unwrap(); // 1 page, 2 slack slots
+        // Growing by 10 needs ceil(16/8) = 2 pages: fits (3 free).
+        assert_eq!(kv.commit_tokens(1, 10).unwrap(), 6);
+        assert_eq!(kv.len(1), 16);
+        assert_eq!(kv.used_pages(), 2);
+        kv.check_invariants();
+        // Growing by 17 → 33 tokens needs 5 pages total, 3 more than
+        // held; only 2 free: refused exactly, nothing committed.
+        match kv.commit_tokens(1, 17) {
+            Err(AdmitError::NoCapacity { needed_pages: 3, free_pages: 2 }) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        assert_eq!(kv.len(1), 16, "failed grow must not commit");
+        assert_eq!(kv.used_pages(), 2, "failed grow must not allocate");
+        kv.check_invariants();
+        assert!(matches!(kv.commit_tokens(9, 1), Err(AdmitError::Unknown { seq: 9 })));
+    }
+
+    #[test]
+    fn export_import_roundtrip_conserves_words_bitwise() {
+        let mut src = tiny_pool();
+        src.admit(3, 16, 1, 5, 12).unwrap();
+        for t in 0..5 {
+            src.write_token_layer(3, t, 0, &row(16, t as f32), &row(16, 10.0 + t as f32));
+        }
+        let fills_before = src.metrics.fill_words;
+        let reads_before = src.metrics.read_words;
+        let image = src.export_seq(3).unwrap();
+        assert_eq!(image.len, 5);
+        assert_eq!(image.word_count(), 5 * 32);
+        assert_eq!(src.metrics.export_words, 5 * 32);
+        assert_eq!(src.metrics.fill_words, fills_before, "export must not fake fills");
+        assert_eq!(src.metrics.read_words, reads_before, "export must not fake reads");
+        assert_eq!(src.len(3), 5, "export is non-destructive");
+        // Import into a pool of a *different* page geometry.
+        let mut dst = PagedKvCache::new(KvConfig::new(128, 8)); // 4 tokens/page
+        dst.import_seq(3, &image, 12).unwrap();
+        assert_eq!(dst.len(3), 5);
+        assert_eq!(dst.metrics.import_words, 5 * 32);
+        assert_eq!(dst.metrics.fill_words, 0, "import must not fake fills");
+        dst.check_invariants();
+        let (ks, vs) = src.read_layer(3, 0);
+        let (kd, vd) = dst.read_layer(3, 0);
+        assert_eq!(ks.data, kd.data, "K rows must survive migration bit for bit");
+        assert_eq!(vs.data, vd.data, "V rows must survive migration bit for bit");
+    }
+
+    #[test]
+    fn failed_import_changes_neither_side() {
+        let mut src = tiny_pool();
+        src.admit(1, 16, 1, 4, 8).unwrap();
+        for t in 0..4 {
+            src.write_token_layer(1, t, 0, &row(16, 1.0), &row(16, 2.0));
+        }
+        let image = src.export_seq(1).unwrap();
+        // Destination too full: 1 page of 1 free needed vs a pool
+        // packed by another sequence.
+        let mut dst = PagedKvCache::new(KvConfig::new(256, 2));
+        dst.admit(9, 16, 1, 16, 16).unwrap(); // both pages
+        match dst.import_seq(1, &image, 8) {
+            Err(AdmitError::NoCapacity { .. }) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        assert_eq!(dst.len(1), 0, "failed import must not leave a stub");
+        assert_eq!(dst.metrics.import_words, 0);
+        dst.check_invariants();
+        assert_eq!(src.len(1), 4, "source stays intact on import failure");
+        // A corrupt image is refused before any allocation.
+        let mut bad = image.clone();
+        bad.words.pop();
+        let mut fresh = tiny_pool();
+        match fresh.import_seq(1, &bad, 8) {
+            Err(AdmitError::CorruptImage { expected_words, got_words }) => {
+                assert_eq!(expected_words, 4 * 32);
+                assert_eq!(got_words, 4 * 32 - 1);
+            }
+            other => panic!("expected CorruptImage, got {other:?}"),
+        }
+        assert!(fresh.is_empty());
+        let msg = AdmitError::CorruptImage { expected_words: 2, got_words: 1 }.to_string();
+        assert!(msg.contains("corrupt KV image"), "reason must be printable: {msg}");
     }
 
     #[test]

@@ -24,14 +24,26 @@
 //!   traffic, never results.
 //! - [`fleet`] — **continuous batching**: [`fleet::DeviceDecoder`]
 //!   (per-device waiting/running/preempted lifecycle, LIFO preemption
-//!   under KV pressure, prefill/decode interleaving policy) and
+//!   under KV pressure, prefill/decode interleaving policy — including
+//!   **chunked prefill**, which runs long prompts as fixed budgets of
+//!   rows alternated with decode ticks so one big arrival cannot
+//!   stall the running batch's inter-token latency) and
 //!   [`fleet::DecodeFleetSim`] (class-aware placement over N devices,
 //!   deterministic event loop, per-phase metrics: TTFT, inter-token
-//!   latency, KV occupancy, preemption and reject counters).
+//!   latency, KV occupancy, preemption/migration/reject counters).
+//!   With migration enabled, an idle device pulls a waiting or
+//!   *running* sequence from a loaded peer — the KV pages travel as a
+//!   serialized image ([`kv::KvSeqImage`]) over the torus entry links,
+//!   charged to both endpoints' timelines, and decode resumes on the
+//!   destination with no recompute.
 //!
-//! The CLI serves this path as `cluster --workload decode`; the FIG8
-//! bench charts tokens/sec and TTFT against concurrent sequences on
-//! homogeneous and big.LITTLE fleets.
+//! Every path — chunk schedules, migrations, preemption/resume, batch
+//! composition, device class — is **bit-identical** to one-shot causal
+//! prefill; `rust/tests/decode_props.rs` and
+//! `rust/tests/migration_props.rs` pin the contract. The CLI serves
+//! this path as `cluster --workload decode` (`--chunk-tokens`,
+//! `--migrate`); the FIG8 bench charts tokens/sec and TTFT against
+//! concurrent sequences and asserts the chunked-prefill p99 ITL win.
 
 pub mod engine;
 pub mod fleet;
@@ -42,4 +54,4 @@ pub use fleet::{
     analytic_decode_token_cycles, analytic_decode_token_ref_cycles, DecodeFleetConfig,
     DecodeFleetSim, DecodeMetrics, DecodeSchedule, DeviceDecoder, GenCompletion,
 };
-pub use kv::{AdmitError, KvConfig, KvMetrics, PagedKvCache};
+pub use kv::{AdmitError, KvConfig, KvMetrics, KvSeqImage, PagedKvCache};

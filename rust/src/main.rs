@@ -7,15 +7,19 @@
 //!   encoder [--layers n] [--seq s] [--dmodel d] [--heads h] [--dff f]
 //!                                — run a tiny encoder on the array
 //!   serve [--requests n] [--rate rps] [--batch b] [--decode]
+//!         [--chunk-tokens t]
 //!                                — closed-loop serving demo
 //!                                  (coordinator); --decode serves
 //!                                  generation requests through the
 //!                                  single-device decode coordinator
+//!                                  (--chunk-tokens N for chunked
+//!                                  prefill)
 //!   cluster [--fleet SPEC | --devices d] [--requests n] [--rate rps]
 //!           [--policy p] [--queue q] [--arrival a] [--seed s]
 //!           [--batch b] [--no-steal] [--workload encoder|decode]
 //!           [--max-running r] [--page-words w]
-//!           [--schedule prefill-first|decode-first]
+//!           [--schedule prefill-first|decode-first|chunked]
+//!           [--chunk-tokens t] [--migrate]
 //!                                — fleet-serving simulation (cluster);
 //!                                  --fleet takes a class roster like
 //!                                  `4x4@100:3,8x4@200:1` (mixed array
@@ -29,10 +33,16 @@
 //!                                  prefill + paged-KV decode with
 //!                                  continuous batching (--max-running
 //!                                  sequences per device, --page-words
-//!                                  KV pages, --schedule interleaving),
+//!                                  KV pages, --schedule interleaving;
+//!                                  --chunk-tokens N selects chunked
+//!                                  prefill with an N-row budget, and
+//!                                  --migrate lets idle devices pull
+//!                                  waiting/running sequences — KV
+//!                                  pages move over the entry links),
 //!                                  reporting TTFT / inter-token
 //!                                  latency / tokens-per-second / KV
-//!                                  occupancy and preemptions
+//!                                  occupancy, preemptions and
+//!                                  migrations
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
@@ -248,9 +258,15 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
     let n: usize = args.flag_parse("requests", 8usize)?;
     let rate: f64 = args.flag_parse("rate", 50.0f64)?;
     let max_running: usize = args.flag_parse("max-running", 4usize)?;
+    let chunk_tokens: usize = args.flag_parse("chunk-tokens", 0usize)?;
+    let schedule = if chunk_tokens > 0 {
+        DecodeSchedule::Chunked { chunk_tokens }
+    } else {
+        DecodeSchedule::PrefillFirst
+    };
     let xcfg = XformerConfig { n_layers: 1, seq: 16, d_model: 32, n_heads: 2, d_ff: 64 };
     let class = DeviceClass::from_arch(cfg.clone());
-    let coord = DecodeCoordinator::spawn(class, xcfg, 42, max_running);
+    let coord = DecodeCoordinator::spawn(class, xcfg, 42, max_running, schedule);
     // One generation-workload source for both serving entry points:
     // the same generator the `cluster --workload decode` path uses.
     let classes = vec![ModelClass {
@@ -409,11 +425,25 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         bail!("--max-running must be at least 1");
     }
     let page_words: usize = args.flag_parse("page-words", KvConfig::DEFAULT_PAGE_WORDS)?;
-    let schedule = match args.flag("schedule").unwrap_or("prefill-first") {
+    let chunk_tokens: usize = args.flag_parse("chunk-tokens", 0usize)?;
+    // `--chunk-tokens N` implies the chunked schedule; `--schedule
+    // chunked` without a budget uses a 32-row default. An explicitly
+    // non-chunked schedule plus a chunk budget is contradictory —
+    // reject it rather than silently dropping the budget.
+    let default_schedule = if chunk_tokens > 0 { "chunked" } else { "prefill-first" };
+    let sched_flag = args.flag("schedule").unwrap_or(default_schedule);
+    let schedule = match sched_flag {
+        "prefill-first" | "decode-first" if chunk_tokens > 0 => bail!(
+            "--chunk-tokens only applies with --schedule chunked (got --schedule {sched_flag})"
+        ),
         "prefill-first" => DecodeSchedule::PrefillFirst,
         "decode-first" => DecodeSchedule::DecodeFirst,
-        other => bail!("unknown schedule '{other}' (prefill-first|decode-first)"),
+        "chunked" => DecodeSchedule::Chunked {
+            chunk_tokens: if chunk_tokens > 0 { chunk_tokens } else { 32 },
+        },
+        other => bail!("unknown schedule '{other}' (prefill-first|decode-first|chunked)"),
     };
+    let migrate = args.switch("migrate");
     let arrival = parse_arrival(args, rate)?;
     let classes = ModelClass::edge_mix();
     let ref_mhz = arch.freq_mhz_u64();
@@ -429,6 +459,7 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
             page_words,
             kv_pages: None,
             schedule,
+            migrate,
         },
         &classes,
         42,
@@ -468,11 +499,18 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         ms(m.e2e.p99())
     );
     println!(
-        "batching : {} prefill jobs, {} decode ticks, mean occupancy {:.2}",
+        "batching : {} prefill jobs ({} partial chunks), {} decode ticks, mean occupancy {:.2}",
         m.prefill_jobs,
+        m.prefill_chunks,
         m.decode_ticks,
         m.mean_decode_occupancy()
     );
+    if migrate {
+        println!(
+            "migrate  : {} sequences moved, {} words over the entry links",
+            m.migrations, m.migrated_words
+        );
+    }
     println!(
         "kv       : occupancy p50 {:.1}% max {:.1}%, {} fill words, {} read words, \
          {} preemptions",

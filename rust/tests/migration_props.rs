@@ -1,0 +1,519 @@
+//! Chunked-prefill + live-migration conformance (ISSUE 5): decode that
+//! has been **chunked, migrated across device classes and pool
+//! geometries, and resumed** is bit-identical to one-shot causal
+//! prefill for any chunk schedule and migration point; KV word
+//! accounting is conserved across export/import (no phantom fills or
+//! reads); and the paged pool's structural invariants survive
+//! randomized alloc/free/export/import churn with exact typed errors
+//! at every boundary.
+
+use cgra_edge::cluster::{GenRequest, ModelClass};
+use cgra_edge::config::{ArchConfig, DeviceClass};
+use cgra_edge::decode::{
+    mat_row, run_decode_tick, run_prefill_batch, AdmitError, DecodeFleetConfig, DecodeFleetSim,
+    DecodeSchedule, KvConfig, PagedKvCache,
+};
+use cgra_edge::sim::CgraSim;
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::prop::{prop_check, CaseResult, PropConfig};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::{DecoderModel, EncoderQuant, XformerConfig};
+
+fn rand_input(rng: &mut XorShiftRng, rows: usize, cols: usize) -> MatF32 {
+    let mut x = MatF32::zeros(rows, cols);
+    for v in &mut x.data {
+        *v = rng.normal() * 0.5;
+    }
+    x
+}
+
+/// Acceptance property (the tentpole invariant): prefill split into a
+/// **random chunk schedule**, decode advanced tick by tick, and the
+/// whole sequence **migrated once at a random point** — mid-prefill,
+/// right after prefill, or between two decode ticks — onto a different
+/// device class with a different page geometry, reproduces the one-shot
+/// causal prefill bit for bit. Word accounting is conserved: the
+/// exported and imported word counts agree exactly, and the combined
+/// fill traffic of both pools is exactly one fill per token-layer —
+/// migration fakes neither fills nor reads.
+#[test]
+fn prop_chunked_migrated_decode_bit_identical_to_one_shot() {
+    prop_check(
+        "chunked + migrated decode == one-shot causal prefill",
+        PropConfig { cases: 3, base_seed: 0x1416_0001 },
+        |rng| {
+            let d_model = [16usize, 32][rng.range(0, 2)];
+            let cfg = XformerConfig {
+                n_layers: rng.range(1, 3),
+                seq: rng.range(6, 10),
+                d_model,
+                n_heads: 2,
+                d_ff: [16usize, 32][rng.range(0, 2)],
+            };
+            let model = DecoderModel::new(cfg, rng.next_u64());
+            let quant = EncoderQuant::calibrate_causal_seeded(&model, rng.next_u64());
+            let n = cfg.seq;
+            let x = rand_input(rng, n, cfg.d_model);
+
+            // Reference: the whole sequence as one causal prefill.
+            let mut ref_sim = CgraSim::new(ArchConfig::default());
+            let mut ref_kv = PagedKvCache::new(KvConfig::new(2048, 8));
+            ref_kv.admit(1, cfg.d_model, cfg.n_layers, n, n).unwrap();
+            let (full, _) =
+                run_prefill_batch(&mut ref_sim, &model, &quant, &mut ref_kv, &[(1, &x)])
+                    .unwrap();
+
+            // A random device-class pair with random pool geometries.
+            let names = ["4x4@100", "8x4@200", "2x4@50", "4x4@300"];
+            let c_a = DeviceClass::parse(names[rng.range(0, 4)]).unwrap();
+            let c_b = DeviceClass::parse(names[rng.range(0, 4)]).unwrap();
+            let mut sims =
+                [CgraSim::new(c_a.arch.clone()), CgraSim::new(c_b.arch.clone())];
+            let mut kvs = [
+                PagedKvCache::new(KvConfig::new([256usize, 512, 2048][rng.range(0, 3)], 64)),
+                PagedKvCache::new(KvConfig::new([256usize, 512, 2048][rng.range(0, 3)], 64)),
+            ];
+            let mut cur = 0usize;
+
+            // Random chunk schedule over a random prefill length.
+            let split = rng.range(1, n);
+            let mut chunks: Vec<usize> = Vec::new();
+            let mut left = split;
+            while left > 0 {
+                let c = rng.range(1, left + 1);
+                chunks.push(c);
+                left -= c;
+            }
+            // Random migration point: after chunk `mig_chunk`
+            // (1..=len covers mid-prefill and the prefill/decode
+            // boundary), or before decode tick `mig_tick`.
+            let mid_prefill = rng.range(0, 2) == 0;
+            let mig_chunk =
+                if mid_prefill { rng.range(1, chunks.len() + 1) } else { usize::MAX };
+            let mig_tick = if mid_prefill { usize::MAX } else { rng.range(0, n - split) };
+
+            let migrate = |kvs: &mut [PagedKvCache; 2], cur: &mut usize| -> Option<String> {
+                let (src, dst) = (*cur, 1 - *cur);
+                let len = kvs[src].len(7);
+                let image = kvs[src].export_seq(7).unwrap();
+                let expect = (len * 2 * cfg.d_model * cfg.n_layers) as u64;
+                if image.word_count() != expect {
+                    return Some(format!(
+                        "export of {len} tokens carried {} words, expected {expect}",
+                        image.word_count()
+                    ));
+                }
+                kvs[dst].import_seq(7, &image, n).unwrap();
+                kvs[src].release(7);
+                kvs[src].check_invariants();
+                kvs[dst].check_invariants();
+                if kvs[src].metrics.export_words != kvs[dst].metrics.import_words {
+                    return Some(format!(
+                        "word conservation broken: {} exported vs {} imported",
+                        kvs[src].metrics.export_words, kvs[dst].metrics.import_words
+                    ));
+                }
+                *cur = dst;
+                None
+            };
+
+            // Chunked prefill, migrating at the drawn point.
+            let mut done = 0usize;
+            for (ci, &rows) in chunks.iter().enumerate() {
+                if done == 0 {
+                    kvs[cur].admit(7, cfg.d_model, cfg.n_layers, rows, n).unwrap();
+                } else {
+                    kvs[cur].commit_tokens(7, rows).unwrap();
+                }
+                let chunk = MatF32::from_slice(
+                    rows,
+                    cfg.d_model,
+                    &x.data[done * cfg.d_model..(done + rows) * cfg.d_model],
+                );
+                let (out, _) = run_prefill_batch(
+                    &mut sims[cur],
+                    &model,
+                    &quant,
+                    &mut kvs[cur],
+                    &[(7, &chunk)],
+                )
+                .unwrap();
+                for r in 0..rows {
+                    if out[0].row(r) != full[0].row(done + r) {
+                        return CaseResult::Fail(format!(
+                            "{cfg:?} chunks {chunks:?}: prefill row {} diverged",
+                            done + r
+                        ));
+                    }
+                }
+                done += rows;
+                if ci + 1 == mig_chunk {
+                    if let Some(msg) = migrate(&mut kvs, &mut cur) {
+                        return CaseResult::Fail(msg);
+                    }
+                }
+            }
+
+            // Teacher-forced decode, migrating before the drawn tick.
+            for t in split..n {
+                if !mid_prefill && t - split == mig_tick {
+                    if let Some(msg) = migrate(&mut kvs, &mut cur) {
+                        return CaseResult::Fail(msg);
+                    }
+                }
+                let row = mat_row(&x, t);
+                let (out, _) = run_decode_tick(
+                    &mut sims[cur],
+                    &model,
+                    &quant,
+                    &mut kvs[cur],
+                    &[(7, &row)],
+                )
+                .unwrap();
+                if out[0].row(0) != full[0].row(t) {
+                    return CaseResult::Fail(format!(
+                        "{cfg:?} chunks {chunks:?} mig@({mig_chunk},{mig_tick}): decode \
+                         step {t} diverged after migration"
+                    ));
+                }
+            }
+
+            // No phantom traffic: across both pools, every token-layer
+            // was filled exactly once (2·d_model words), regardless of
+            // where the migration landed.
+            let fills = kvs[0].metrics.fill_words + kvs[1].metrics.fill_words;
+            let expect_fills = (n * cfg.n_layers * 2 * cfg.d_model) as u64;
+            if fills != expect_fills {
+                return CaseResult::Fail(format!(
+                    "phantom fills: {fills} words across both pools, expected {expect_fills}"
+                ));
+            }
+            let exported = kvs[0].metrics.export_words + kvs[1].metrics.export_words;
+            let imported = kvs[0].metrics.import_words + kvs[1].metrics.import_words;
+            if exported != imported {
+                return CaseResult::Fail(format!(
+                    "migration words not conserved: {exported} exported vs {imported} imported"
+                ));
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// Pool-hardening property: randomized admit / grow / release / export
+/// / import churn across two pools of different geometries keeps every
+/// structural invariant (no double-owned frame, dense page tables,
+/// exact free-list accounting — `check_invariants` panics otherwise),
+/// returns **exact** `AdmitError` reasons at every boundary, and a
+/// failed import leaves both source and destination untouched.
+#[test]
+fn prop_kv_pool_invariants_under_random_churn() {
+    prop_check(
+        "paged pool structural invariants under churn",
+        PropConfig { cases: 6, base_seed: 0x1416_0002 },
+        |rng| {
+            let (d_model, layers) = (16usize, 1usize); // 32 words/token
+            let mut a =
+                PagedKvCache::new(KvConfig::new([64usize, 128][rng.range(0, 2)], rng.range(2, 6)));
+            let mut b =
+                PagedKvCache::new(KvConfig::new([64usize, 256][rng.range(0, 2)], rng.range(2, 6)));
+            let fill = |id: u64, t: usize| vec![(id * 1000 + t as u64) as f32; d_model];
+            let mut next_id = 0u64;
+            let mut live: Vec<u64> = Vec::new(); // resident in `a`
+            for _ in 0..60 {
+                match rng.range(0, 5) {
+                    // Admit a fresh sequence into `a`.
+                    0 => {
+                        let t = rng.range(1, 7);
+                        let worst = t + rng.range(0, 6);
+                        let id = next_id;
+                        let tpp = a.config().page_words / (2 * d_model * layers);
+                        let cap = a.capacity_tokens(d_model, layers);
+                        match a.admit(id, d_model, layers, t, worst) {
+                            Ok(()) => {
+                                next_id += 1;
+                                for tok in 0..t {
+                                    a.write_token_layer(id, tok, 0, &fill(id, tok), &fill(id, tok));
+                                }
+                                live.push(id);
+                            }
+                            Err(AdmitError::TooLarge { worst_tokens, capacity_tokens }) => {
+                                if worst_tokens != worst.max(t) || capacity_tokens != cap {
+                                    return CaseResult::Fail(format!(
+                                        "TooLarge carried ({worst_tokens},{capacity_tokens}), \
+                                         expected ({},{cap})",
+                                        worst.max(t)
+                                    ));
+                                }
+                            }
+                            Err(AdmitError::NoCapacity { needed_pages, free_pages }) => {
+                                let need = t.div_ceil(tpp);
+                                if needed_pages != need || free_pages != a.free_pages() {
+                                    return CaseResult::Fail(format!(
+                                        "NoCapacity carried ({needed_pages},{free_pages}), \
+                                         expected ({need},{})",
+                                        a.free_pages()
+                                    ));
+                                }
+                            }
+                            Err(e) => {
+                                return CaseResult::Fail(format!("unexpected admit error: {e}"))
+                            }
+                        }
+                    }
+                    // Grow a live sequence (single slot or a chunk).
+                    1 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live[rng.range(0, live.len())];
+                        let len = a.len(id);
+                        let grow = rng.range(1, 4);
+                        match a.commit_tokens(id, grow) {
+                            Ok(first) => {
+                                if first != len {
+                                    return CaseResult::Fail(format!(
+                                        "grow returned first token {first}, expected {len}"
+                                    ));
+                                }
+                                for tok in len..len + grow {
+                                    a.write_token_layer(id, tok, 0, &fill(id, tok), &fill(id, tok));
+                                }
+                            }
+                            Err(AdmitError::NoCapacity { needed_pages, free_pages }) => {
+                                if needed_pages <= free_pages {
+                                    return CaseResult::Fail(format!(
+                                        "refused a grow that fits: need {needed_pages}, \
+                                         {free_pages} free"
+                                    ));
+                                }
+                                if a.len(id) != len {
+                                    return CaseResult::Fail(
+                                        "failed grow committed tokens".into(),
+                                    );
+                                }
+                            }
+                            Err(e) => {
+                                return CaseResult::Fail(format!("unexpected grow error: {e}"))
+                            }
+                        }
+                    }
+                    // Release a live sequence.
+                    2 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live.swap_remove(rng.range(0, live.len()));
+                        let held = a.len(id).div_ceil(
+                            a.config().page_words / (2 * d_model * layers),
+                        );
+                        if a.release(id) != held {
+                            return CaseResult::Fail("release freed the wrong page count".into());
+                        }
+                        if a.release(id) != 0 {
+                            return CaseResult::Fail("double release freed pages".into());
+                        }
+                    }
+                    // Export a → import b; a failed import must leave
+                    // both sides exactly as they were.
+                    3 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live[rng.range(0, live.len())];
+                        let len = a.len(id);
+                        let image = a.export_seq(id).unwrap();
+                        if image.word_count() != (len * 2 * d_model * layers) as u64 {
+                            return CaseResult::Fail("export word count wrong".into());
+                        }
+                        let b_used = b.used_pages();
+                        let predicted = b.can_import(id, &image, len + 4);
+                        match b.import_seq(id, &image, len + 4) {
+                            Ok(()) => {
+                                if !predicted {
+                                    return CaseResult::Fail(
+                                        "can_import predicted failure for a good import".into(),
+                                    );
+                                }
+                                let (k_src, _) = a.read_layer(id, 0);
+                                let (k_dst, _) = b.read_layer(id, 0);
+                                if k_src.data != k_dst.data {
+                                    return CaseResult::Fail(
+                                        "imported K rows differ from source".into(),
+                                    );
+                                }
+                                // Completed migration: source releases.
+                                a.release(id);
+                                b.release(id); // keep b reusable for churn
+                                live.retain(|&x| x != id);
+                            }
+                            Err(AdmitError::NoCapacity { .. })
+                            | Err(AdmitError::TooLarge { .. }) => {
+                                if predicted {
+                                    return CaseResult::Fail(
+                                        "can_import predicted success for a refused import"
+                                            .into(),
+                                    );
+                                }
+                                if a.len(id) != len {
+                                    return CaseResult::Fail(
+                                        "failed import disturbed the source".into(),
+                                    );
+                                }
+                                if b.used_pages() != b_used {
+                                    return CaseResult::Fail(
+                                        "failed import leaked pages at the destination".into(),
+                                    );
+                                }
+                            }
+                            Err(e) => {
+                                return CaseResult::Fail(format!("unexpected import error: {e}"))
+                            }
+                        }
+                    }
+                    // Read back a live sequence and verify its values
+                    // (no cross-sequence corruption under churn).
+                    _ => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let id = live[rng.range(0, live.len())];
+                        let (k, v) = a.read_layer(id, 0);
+                        for t in 0..a.len(id) {
+                            let want = (id * 1000 + t as u64) as f32;
+                            if k.at(t, 0) != want || v.at(t, d_model - 1) != want {
+                                return CaseResult::Fail(format!(
+                                    "sequence {id} token {t} corrupted: {} / {}",
+                                    k.at(t, 0),
+                                    v.at(t, d_model - 1)
+                                ));
+                            }
+                        }
+                    }
+                }
+                a.check_invariants();
+                b.check_invariants();
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+fn gen_classes() -> Vec<ModelClass> {
+    vec![ModelClass {
+        name: "gen-tiny",
+        cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }]
+}
+
+fn gen_request(id: u64, prompt_rows: usize, max_new: usize, arrival: u64, seed: u64) -> GenRequest {
+    let mut rng = XorShiftRng::new(0x5EED_4000 + seed);
+    GenRequest {
+        id,
+        model: 0,
+        prompt: rand_input(&mut rng, prompt_rows, 16),
+        max_new_tokens: max_new,
+        arrival_cycle: arrival,
+    }
+}
+
+fn solo_tokens(req: &GenRequest, classes: &[ModelClass], model_seed: u64) -> MatF32 {
+    let mut alone = req.clone();
+    alone.arrival_cycle = 0;
+    let mut fleet = DecodeFleetSim::new(
+        DecodeFleetConfig {
+            roster: vec![DeviceClass::paper()],
+            ref_mhz: 100,
+            max_running: 1,
+            ..Default::default()
+        },
+        classes,
+        model_seed,
+    );
+    let (_, done) = fleet.run(vec![alone]).unwrap();
+    assert_eq!(done.len(), 1, "solo run must complete");
+    done.into_iter().next().unwrap().tokens
+}
+
+/// Fleet-level conformance: random chunk budgets, random class pairs,
+/// migration enabled, staggered arrivals — every completion is
+/// bit-identical to serving that request alone on a paper device with
+/// one-shot prefill, and the whole run (migrations included) is a pure
+/// function of its inputs.
+#[test]
+fn prop_fleet_chunked_migrating_decode_is_output_neutral() {
+    prop_check(
+        "chunked + migrating fleet completions == solo completions",
+        PropConfig { cases: 2, base_seed: 0x1416_0003 },
+        |rng| {
+            let classes = gen_classes();
+            let rosters = ["4x4@100:2", "4x4@100:1,8x4@200:1", "2x4@50:1,4x4@100:1"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 3)]).unwrap();
+            let schedule = if rng.range(0, 3) == 0 {
+                DecodeSchedule::PrefillFirst
+            } else {
+                DecodeSchedule::Chunked { chunk_tokens: rng.range(1, 5) }
+            };
+            let n = rng.range(3, 6);
+            let requests: Vec<GenRequest> = (0..n)
+                .map(|i| {
+                    let prompt = rng.range(1, 5);
+                    let max_new = rng.range(1, 8 - prompt + 1);
+                    let arrival = (i as u64) * rng.below(40_000);
+                    gen_request(i as u64, prompt, max_new, arrival, rng.next_u64())
+                })
+                .collect();
+            let model_seed = 42;
+            let mk = |reqs: Vec<GenRequest>| {
+                let mut fleet = DecodeFleetSim::new(
+                    DecodeFleetConfig {
+                        roster: roster.clone(),
+                        ref_mhz: 100,
+                        max_running: 4,
+                        schedule,
+                        migrate: true,
+                        ..Default::default()
+                    },
+                    &classes,
+                    model_seed,
+                );
+                fleet.run(reqs).unwrap()
+            };
+            let (m, done) = mk(requests.clone());
+            if m.completed != n as u64 {
+                return CaseResult::Fail(format!(
+                    "{} of {n} completed under {schedule:?} on {roster:?}",
+                    m.completed
+                ));
+            }
+            for c in &done {
+                let req = &requests[c.id as usize];
+                if c.tokens.rows != req.max_new_tokens {
+                    return CaseResult::Fail(format!(
+                        "request {} emitted {} of {} tokens",
+                        c.id, c.tokens.rows, req.max_new_tokens
+                    ));
+                }
+                let solo = solo_tokens(req, &classes, model_seed);
+                if c.tokens.data != solo.data {
+                    return CaseResult::Fail(format!(
+                        "request {} perturbed by chunking/migration (schedule {schedule:?})",
+                        c.id
+                    ));
+                }
+            }
+            // Determinism, migrations included: replaying the same
+            // workload reproduces metrics and completions exactly.
+            let (m2, done2) = mk(requests.clone());
+            if m != m2 || done != done2 {
+                return CaseResult::Fail(
+                    "migrating fleet run is not a pure function of its inputs".into(),
+                );
+            }
+            CaseResult::Ok
+        },
+    );
+}
