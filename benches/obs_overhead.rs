@@ -1,0 +1,103 @@
+//! BENCH_obs — observability overhead self-benchmark.
+//!
+//! Serves one deterministic generation workload on a heterogeneous
+//! decode fleet twice: observation off, then fully armed (event trace
+//! + windowed series + per-kernel log). Observation is one-way by
+//! construction — `rust/tests/obs_props.rs` pins bit-identity — so the
+//! only thing left to measure is wall-clock cost. The acceptance bar
+//! from ISSUE 6 is **< 10% overhead with everything recording**; the
+//! bench asserts it and writes the measurement to `BENCH_obs.json` so
+//! CI archives the number next to the tables.
+
+use cgra_edge::bench_util::{f2, f3, time_median, Table};
+use cgra_edge::cluster::{ArrivalProcess, DeviceClass, ModelClass, WorkloadGen};
+use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeMetrics, DecodeSchedule};
+use cgra_edge::obs::ObsConfig;
+
+const REQUESTS: usize = 40;
+const WINDOW: u64 = 50_000;
+
+fn run_once(obs: Option<&ObsConfig>) -> (DecodeMetrics, usize, usize) {
+    let classes = vec![ModelClass::tiny()];
+    let mut gen = WorkloadGen::new(
+        ArrivalProcess::Poisson { rate_rps: 2_000.0 },
+        classes.clone(),
+        100.0,
+        0x0B5E_BE4C,
+    );
+    let requests = gen.generate_gen(REQUESTS);
+    let mut fleet = DecodeFleetSim::new(
+        DecodeFleetConfig {
+            roster: DeviceClass::parse_roster("4x4@100:2,8x4@200:1").unwrap(),
+            ref_mhz: 100,
+            max_running: 4,
+            schedule: DecodeSchedule::Chunked { chunk_tokens: 4 },
+            migrate: true,
+            ..Default::default()
+        },
+        &classes,
+        42,
+    );
+    if let Some(cfg) = obs {
+        fleet.enable_obs(cfg);
+    }
+    let (m, _) = fleet.run(requests).expect("bench workload serves");
+    let events = fleet.obs().event_count();
+    let trace_bytes = fleet.obs().trace_json().map_or(0, |j| j.len());
+    (m, events, trace_bytes)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "BENCH_obs: decode serving with observation off vs fully armed \
+         (trace + {WINDOW}-cycle series + kernel log), {REQUESTS} requests\n"
+    );
+
+    let full = ObsConfig { trace: true, window_cycles: Some(WINDOW), kernels: true };
+    let (m_off, _, _) = run_once(None);
+    let (m_on, events, trace_bytes) = run_once(Some(&full));
+    assert_eq!(m_off, m_on, "observation must not perturb the simulation");
+
+    let (t_off, _) = time_median(1, 5, || {
+        run_once(None);
+    });
+    let (t_on, _) = time_median(1, 5, || {
+        run_once(Some(&full));
+    });
+    let overhead = t_on / t_off - 1.0;
+    let rate_off = m_off.makespan_cycles as f64 / t_off / 1e6;
+    let rate_on = m_on.makespan_cycles as f64 / t_on / 1e6;
+
+    let mut table = Table::new(&["arm", "median s", "Mcycles/s", "events", "trace KiB"]);
+    table.row(&["obs off".into(), f3(t_off), f2(rate_off), "-".into(), "-".into()]);
+    table.row(&[
+        "obs full".into(),
+        f3(t_on),
+        f2(rate_on),
+        events.to_string(),
+        f2(trace_bytes as f64 / 1024.0),
+    ]);
+    table.print();
+    println!("\noverhead: {:.1}% (acceptance: < 10%)", overhead * 100.0);
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs_overhead\",\n  \"requests\": {REQUESTS},\n  \
+         \"tokens\": {},\n  \"migrations\": {},\n  \"events\": {events},\n  \
+         \"trace_bytes\": {trace_bytes},\n  \"median_s_off\": {t_off:.6},\n  \
+         \"median_s_on\": {t_on:.6},\n  \"mcycles_per_s_off\": {rate_off:.2},\n  \
+         \"mcycles_per_s_on\": {rate_on:.2},\n  \"overhead_frac\": {overhead:.4}\n}}\n",
+        m_on.tokens,
+        m_on.migrations,
+    );
+    std::fs::write("BENCH_obs.json", &json)?;
+    println!("wrote BENCH_obs.json");
+
+    assert!(events > 0, "armed observer recorded nothing");
+    assert!(trace_bytes > 0, "armed tracer rendered nothing");
+    assert!(
+        overhead < 0.10,
+        "observability overhead {:.1}% exceeds the 10% budget",
+        overhead * 100.0
+    );
+    Ok(())
+}

@@ -82,6 +82,7 @@ use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::workload::{FleetRequest, ModelClass};
 use crate::config::{ArchConfig, DeviceClass};
 use crate::gemm::{GemmPlan, OutputMode};
+use crate::obs::{EventKind, ObsConfig, Observer, NO_SEQ};
 use crate::sim::{CgraSim, Stats};
 use crate::util::mat::MatF32;
 use crate::xformer::{
@@ -409,6 +410,9 @@ pub struct FleetSim {
     /// `run` is single-shot: device clocks and counters are not reset
     /// between runs, so a second call would silently misaccount.
     ran: bool,
+    /// Observability sink (disabled by default). Append-only and never
+    /// read by the event loop, so enabling it cannot change a run.
+    obs: Observer,
 }
 
 /// Expected service cycles for a model on a device class: the observed
@@ -446,6 +450,8 @@ fn serve_batch_on(
     metrics: &mut FleetMetrics,
     batch: &[FleetRequest],
     now: u64,
+    dev: usize,
+    obs: &mut Observer,
 ) -> Result<()> {
     let Some(first) = batch.first() else { return Ok(()) };
     let model = canonical[first.model];
@@ -473,6 +479,17 @@ fn serve_batch_on(
         metrics.queue_wait.record(now - req.arrival_cycle);
         if req.deadline_cycle.is_some_and(|dl| completion > dl) {
             metrics.sla_misses += 1;
+        }
+    }
+    if obs.enabled() {
+        let batch_n = batch.len();
+        obs.record(now, dev, NO_SEQ, EventKind::Serve { model, batch: batch_n, dur: charged });
+        for req in batch {
+            let latency = completion - req.arrival_cycle;
+            obs.record(completion, dev, req.id, EventKind::Complete { latency });
+        }
+        if obs.kernels_on() {
+            obs.kernel(format!("d{dev}_m{model}_b{batch_n}"), "encoder", engine.sim.stats.clone());
         }
     }
     Ok(())
@@ -545,7 +562,29 @@ impl FleetSim {
             cost_cache,
             observed,
             ran: false,
+            obs: Observer::disabled(),
         }
+    }
+
+    /// Enable observability layers for the upcoming [`Self::run`].
+    /// Purely observational — the event loop never reads the observer,
+    /// so an observed run is bit-identical to an unobserved one. One
+    /// trace track per device, named `dev<i> <class>`.
+    pub fn enable_obs(&mut self, obs_cfg: &ObsConfig) {
+        let names: Vec<String> = self
+            .cfg
+            .roster
+            .iter()
+            .enumerate()
+            .map(|(d, c)| format!("dev{d} {}", c.name))
+            .collect();
+        self.obs = Observer::new(obs_cfg, names);
+    }
+
+    /// The embedded observer: render `trace_json` / `series_csv` /
+    /// `kernel_csv` from it after [`Self::run`].
+    pub fn obs(&self) -> &Observer {
+        &self.obs
     }
 
     /// The batch key of a model class ([`model_batch_key`]): equal keys
@@ -598,6 +637,7 @@ impl FleetSim {
             cost_cache,
             observed,
             ran: _,
+            obs,
         } = self;
         let n_classes = device_classes.len();
         let policy = cfg.batch;
@@ -615,10 +655,16 @@ impl FleetSim {
             // ids share the canonical entry's cost).
             while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
                 let r = arrivals.next().expect("peeked");
+                let (rid, rmodel) = (r.id, r.model);
                 let free: Vec<u64> = devices.iter().map(|d| d.free_at).collect();
-                dispatcher.dispatch(r, now, &free, |m, d| {
+                let placed = dispatcher.dispatch(r, now, &free, |m, d| {
                     est_cost(cost_cache, models, canonical[m], device_class[d])
                 });
+                if obs.enabled() {
+                    obs.record(now, placed, rid, EventKind::Arrival { model: rmodel });
+                    let depth = dispatcher.queued(placed);
+                    obs.record(now, placed, NO_SEQ, EventKind::QueueDepth { depth });
+                }
             }
             // 2. Serve: every idle device takes work per its queue
             // discipline until it is busy past `now`, its queue dries,
@@ -647,6 +693,13 @@ impl FleetSim {
                     }
                     let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap(), key_of);
                     metrics.dropped += dropped.len() as u64;
+                    if obs.enabled() {
+                        for r in &dropped {
+                            obs.record(now, d, r.id, EventKind::Drop);
+                        }
+                        let depth = dispatcher.queued(d);
+                        obs.record(now, d, NO_SEQ, EventKind::QueueDepth { depth });
+                    }
                     if batch.is_empty() {
                         continue;
                     }
@@ -662,6 +715,8 @@ impl FleetSim {
                         &mut metrics,
                         &batch,
                         now,
+                        d,
+                        obs,
                     )?;
                 }
             }
@@ -701,12 +756,23 @@ impl FleetSim {
                     let Some(v) = victim else { break };
                     let (dropped, batch) = dispatcher.pop_batch(v, now, policy.cap(), key_of);
                     metrics.dropped += dropped.len() as u64;
+                    if obs.enabled() {
+                        for r in &dropped {
+                            obs.record(now, v, r.id, EventKind::Drop);
+                        }
+                    }
                     if batch.is_empty() {
                         continue; // every candidate expired (EDF): queue shrank, retry
                     }
                     metrics.steals += 1;
                     metrics.stolen_requests += batch.len() as u64;
                     steal_count[t] += 1;
+                    if obs.enabled() {
+                        let requests = batch.len();
+                        obs.record(now, t, NO_SEQ, EventKind::Steal { victim: v, requests });
+                        let depth = dispatcher.queued(v);
+                        obs.record(now, v, NO_SEQ, EventKind::QueueDepth { depth });
+                    }
                     serve_batch_on(
                         &mut devices[t],
                         device_class[t],
@@ -719,6 +785,8 @@ impl FleetSim {
                         &mut metrics,
                         &batch,
                         now,
+                        t,
+                        obs,
                     )?;
                 }
             }
@@ -768,6 +836,7 @@ impl FleetSim {
         for d in devices.iter() {
             metrics.stats.merge(&d.stats);
         }
+        obs.finish(metrics.makespan_cycles);
         Ok(metrics)
     }
 }

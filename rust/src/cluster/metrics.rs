@@ -1,15 +1,18 @@
 //! Fleet-level serving metrics: latency percentiles, per-device
 //! utilization, SLA accounting, fleet energy.
 //!
-//! [`LatencyHistogram`] is the *shared* latency container — the
-//! single-device [`crate::coordinator::ServeMetrics`] and the fleet's
-//! [`FleetMetrics`] both record into it, so the p50/p95/p99 definition
-//! (nearest-rank over exact samples) is identical at both scales. At
-//! serving-simulation sizes (10³–10⁵ requests) storing exact samples is
-//! cheaper than maintaining bucketed sketches and keeps percentiles
-//! exact, which matters for determinism tests.
+//! Latency lives in two containers with the same nearest-rank
+//! percentile definition: the exact-sample [`LatencyHistogram`]
+//! (kept for the single-device [`crate::coordinator::ServeMetrics`]
+//! and as the conformance oracle in tests) and the O(buckets)
+//! mergeable [`LogHistogram`](crate::obs::LogHistogram) that
+//! [`FleetMetrics`] and the decode fleet's metrics now record into —
+//! bounded relative error, constant memory regardless of request
+//! count, exact merge across devices (the ROADMAP "incremental
+//! percentile sketches instead of full latency vecs" item).
 
 use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::obs::LogHistogram;
 use crate::sim::Stats;
 
 /// Exact-sample latency recorder with nearest-rank percentiles.
@@ -122,12 +125,12 @@ pub struct FleetMetrics {
     /// Latest completion time across all devices (simulated makespan).
     pub makespan_cycles: u64,
     /// End-to-end latency (queue + service) of completed requests.
-    pub latency: LatencyHistogram,
+    pub latency: LogHistogram,
     /// Queue-wait component of latency (diagnostic for placement).
-    pub queue_wait: LatencyHistogram,
+    pub queue_wait: LogHistogram,
     /// Requests per executed batch, one sample per device job
     /// (`mean()` is the average occupancy, `count()` the job count).
-    pub batch_occupancy: LatencyHistogram,
+    pub batch_occupancy: LogHistogram,
     /// External-memory words avoided by streaming shared weights once
     /// per stacked kernel instead of once per request.
     pub weight_reuse_words: u64,

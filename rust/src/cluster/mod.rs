@@ -35,11 +35,13 @@
 //!   deepest queue whose owner is busy — deterministic thief/victim
 //!   order, steals respect the batch policy and EDF expiry, and steal
 //!   counts land in the metrics.
-//! - [`metrics`] — [`FleetMetrics`] with exact p50/p95/p99 latency
-//!   percentiles ([`LatencyHistogram`], shared with the coordinator's
-//!   `ServeMetrics`), per-device utilization and steal counts,
-//!   SLA-miss / drop counts, batch occupancy, weight-reuse words, and
-//!   fleet energy (idle devices still leak).
+//! - [`metrics`] — [`FleetMetrics`] with p50/p95/p99 latency
+//!   percentiles over mergeable log-bucket histograms
+//!   ([`crate::obs::LogHistogram`]; the exact-sample
+//!   [`LatencyHistogram`] remains the coordinator's `ServeMetrics`
+//!   container and the conformance oracle), per-device utilization and
+//!   steal counts, SLA-miss / drop counts, batch occupancy,
+//!   weight-reuse words, and fleet energy (idle devices still leak).
 //! - [`parallel`] — tile-level model parallelism: one large GEMM split
 //!   over a 2D (i×j) shard grid, shards sized proportionally to each
 //!   device's class throughput so heterogeneous shards finish
@@ -63,6 +65,7 @@ pub use fleet::{
     analytic_encoder_cycles, analytic_encoder_ref_cycles, model_batch_key, to_ref_cycles,
     DeviceEngine, FleetConfig, FleetSim,
 };
+pub use crate::obs::LogHistogram;
 pub use metrics::{per_device_energy, DeviceMetrics, FleetMetrics, LatencyHistogram};
 pub use parallel::{run_gemm_sharded, ShardShape, ShardedGemmRun};
 pub use workload::{ArrivalProcess, FleetRequest, GenProfile, GenRequest, ModelClass, WorkloadGen};

@@ -47,6 +47,7 @@
 use crate::cluster::{DeviceEngine, GenRequest, LatencyHistogram};
 use crate::config::{ArchConfig, DeviceClass};
 use crate::decode::{DecodeMetrics, DecodeSchedule, DeviceDecoder, GenCompletion, KvConfig};
+use crate::obs::{EventKind, ObsConfig, Observer};
 use crate::sim::Stats;
 use crate::util::mat::MatF32;
 use crate::xformer::{DecoderModel, EncoderModel, EncoderQuant, XformerConfig};
@@ -141,21 +142,37 @@ impl ServeMetrics {
 pub struct Coordinator {
     tx: Option<mpsc::Sender<Request>>,
     rx_out: mpsc::Receiver<Response>,
-    worker: Option<JoinHandle<Result<ServeMetrics>>>,
+    worker: Option<JoinHandle<Result<(ServeMetrics, Observer)>>>,
 }
 
 impl Coordinator {
     /// Spawn a worker owning a fresh simulator and model.
     pub fn spawn(cfg: ArchConfig, model: EncoderModel, batch: usize) -> Self {
+        Self::spawn_observed(cfg, model, batch, ObsConfig::default())
+    }
+
+    /// [`Self::spawn`] with observation armed: the worker records
+    /// arrival/serve/complete events and phase-tagged kernel rows.
+    /// Observation is strictly one-way (nothing in the serving loop
+    /// reads it back), but note the module-level caveat: with
+    /// `batch > 1` group boundaries — and therefore event timing —
+    /// can vary with channel-drain races; outputs never do.
+    pub fn spawn_observed(
+        cfg: ArchConfig,
+        model: EncoderModel,
+        batch: usize,
+        obs_cfg: ObsConfig,
+    ) -> Self {
         let (tx, rx) = mpsc::channel::<Request>();
         let (tx_out, rx_out) = mpsc::channel::<Response>();
-        let worker = std::thread::spawn(move || -> Result<ServeMetrics> {
+        let worker = std::thread::spawn(move || -> Result<(ServeMetrics, Observer)> {
             // The single-device engine owns the serving clock and every
             // timing rule; this loop only moves requests between
             // channels and the engine.
             let mut engine = DeviceEngine::new(cfg);
             let quant = EncoderQuant::calibrate_seeded(&model, COORD_CALIB_SEED);
             let mut metrics = ServeMetrics::default();
+            let mut obs = Observer::new(&obs_cfg, vec!["dev0".to_string()]);
             let mut pending: Vec<Request> = Vec::new();
             loop {
                 if pending.is_empty() {
@@ -191,9 +208,31 @@ impl Coordinator {
                     let (outputs, service, _report) =
                         engine.serve_encoder_batch(0, &model, &quant, &inputs, start)?;
                     let completion = start + service;
+                    if obs.enabled() {
+                        let batch_n = inputs.len();
+                        obs.record(
+                            start,
+                            0,
+                            crate::obs::NO_SEQ,
+                            EventKind::Serve { model: 0, batch: batch_n, dur: service },
+                        );
+                        if obs.kernels_on() {
+                            obs.kernel(
+                                format!("m0_b{batch_n}"),
+                                "encoder",
+                                engine.sim.stats.clone(),
+                            );
+                        }
+                    }
                     for (req, output) in group.into_iter().zip(outputs) {
                         let queue_cycles = start - req.arrival_cycle;
                         metrics.record(queue_cycles, service, completion);
+                        if obs.enabled() {
+                            let arr = req.arrival_cycle;
+                            let latency = completion - arr;
+                            obs.record(arr, 0, req.id, EventKind::Arrival { model: 0 });
+                            obs.record(completion, 0, req.id, EventKind::Complete { latency });
+                        }
                         let _ = tx_out.send(Response {
                             id: req.id,
                             output,
@@ -205,7 +244,8 @@ impl Coordinator {
                 }
             }
             metrics.stats = engine.stats.clone();
-            Ok(metrics)
+            obs.finish(metrics.makespan_cycles);
+            Ok((metrics, obs))
         });
         Self { tx: Some(tx), rx_out, worker: Some(worker) }
     }
@@ -227,7 +267,14 @@ impl Coordinator {
     /// Close the queue and join the worker, returning final metrics.
     /// Requests already submitted but not yet served are still drained
     /// and served before the worker exits (graceful shutdown).
-    pub fn shutdown(mut self) -> Result<ServeMetrics> {
+    pub fn shutdown(self) -> Result<ServeMetrics> {
+        Ok(self.shutdown_observed()?.0)
+    }
+
+    /// [`Self::shutdown`] that also hands back the worker's
+    /// [`Observer`] (disabled — and empty — unless spawned with
+    /// [`Self::spawn_observed`]).
+    pub fn shutdown_observed(mut self) -> Result<(ServeMetrics, Observer)> {
         drop(self.tx.take());
         let worker = self.worker.take().expect("already joined");
         worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))?
@@ -251,7 +298,7 @@ impl Coordinator {
 pub struct DecodeCoordinator {
     tx: Option<mpsc::Sender<GenRequest>>,
     rx_out: mpsc::Receiver<GenCompletion>,
-    worker: Option<JoinHandle<Result<DecodeMetrics>>>,
+    worker: Option<JoinHandle<Result<(DecodeMetrics, Observer)>>>,
 }
 
 impl DecodeCoordinator {
@@ -268,15 +315,32 @@ impl DecodeCoordinator {
         max_running: usize,
         schedule: DecodeSchedule,
     ) -> Self {
+        let obs_cfg = ObsConfig::default();
+        Self::spawn_observed(class, model_cfg, model_seed, max_running, schedule, obs_cfg)
+    }
+
+    /// [`Self::spawn`] with observation armed: every admission, chunk,
+    /// tick, preemption and completion the device lifecycle takes
+    /// lands in the worker's [`Observer`] (retrieve it with
+    /// [`Self::shutdown_observed`]). One-way, same as the fleet.
+    pub fn spawn_observed(
+        class: DeviceClass,
+        model_cfg: XformerConfig,
+        model_seed: u64,
+        max_running: usize,
+        schedule: DecodeSchedule,
+        obs_cfg: ObsConfig,
+    ) -> Self {
         let (tx, rx) = mpsc::channel::<GenRequest>();
         let (tx_out, rx_out) = mpsc::channel::<GenCompletion>();
-        let worker = std::thread::spawn(move || -> Result<DecodeMetrics> {
+        let worker = std::thread::spawn(move || -> Result<(DecodeMetrics, Observer)> {
             let model = DecoderModel::new(model_cfg, model_seed);
             let quant = EncoderQuant::calibrate_causal_seeded(&model, COORD_CALIB_SEED);
             let models = vec![model];
             let quants = vec![quant];
             let kv_cfg = KvConfig::for_class(&class);
             let ref_mhz = class.freq_mhz;
+            let mut obs = Observer::new(&obs_cfg, vec![format!("dev0 {}", class.name)]);
             let mut dec = DeviceDecoder::new(&class, ref_mhz, kv_cfg, max_running, schedule);
             let mut metrics = DecodeMetrics::default();
             let mut completions: Vec<GenCompletion> = Vec::new();
@@ -301,11 +365,27 @@ impl DecodeCoordinator {
                         let id = r.id;
                         if let Err(e) = dec.submit(r, &models[0].cfg) {
                             metrics.rejected += 1;
-                            metrics.rejections.push((id, e.to_string()));
+                            let reason = e.to_string();
+                            if obs.enabled() {
+                                let kind = EventKind::Reject { reason: reason.clone() };
+                                obs.record(now, 0, id, kind);
+                            }
+                            metrics.rejections.push((id, reason));
+                        } else if obs.enabled() {
+                            obs.record(now, 0, id, EventKind::Arrival { model: 0 });
                         }
                     }
                     while dec.free_at() <= now && dec.has_work() {
-                        if !dec.step(now, &models, &quants, &mut metrics, &mut completions)? {
+                        let stepped = dec.step(
+                            now,
+                            &models,
+                            &quants,
+                            &mut metrics,
+                            &mut completions,
+                            &mut obs,
+                            0,
+                        )?;
+                        if !stepped {
                             break;
                         }
                     }
@@ -324,7 +404,8 @@ impl DecodeCoordinator {
                 }
             }
             metrics.makespan_cycles = metrics.makespan_cycles.max(now);
-            Ok(metrics)
+            obs.finish(metrics.makespan_cycles);
+            Ok((metrics, obs))
         });
         Self { tx: Some(tx), rx_out, worker: Some(worker) }
     }
@@ -345,15 +426,23 @@ impl DecodeCoordinator {
 
     /// Close the queue, serve everything still pending, and return the
     /// final metrics plus any completions not yet received.
-    pub fn shutdown(mut self) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
+    pub fn shutdown(self) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
+        let (metrics, done, _) = self.shutdown_observed()?;
+        Ok((metrics, done))
+    }
+
+    /// [`Self::shutdown`] that also hands back the worker's
+    /// [`Observer`] (disabled — and empty — unless spawned with
+    /// [`Self::spawn_observed`]).
+    pub fn shutdown_observed(mut self) -> Result<(DecodeMetrics, Vec<GenCompletion>, Observer)> {
         drop(self.tx.take());
         let worker = self.worker.take().expect("already joined");
-        let metrics = worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        let (metrics, obs) = worker.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
         let mut done = Vec::new();
         while let Ok(c) = self.rx_out.try_recv() {
             done.push(c);
         }
-        Ok((metrics, done))
+        Ok((metrics, done, obs))
     }
 }
 

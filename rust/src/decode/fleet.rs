@@ -47,9 +47,10 @@ use super::engine::{mat_row, run_decode_tick, run_prefill_batch};
 use super::kv::{AdmitError, KvConfig, KvMetrics, KvSeqImage, PagedKvCache};
 use crate::cluster::{
     analytic_encoder_ref_cycles, per_device_energy, to_ref_cycles, DeviceEngine, DeviceMetrics,
-    GenRequest, LatencyHistogram, ModelClass,
+    GenRequest, LogHistogram, ModelClass,
 };
 use crate::config::{ArchConfig, DeviceClass};
+use crate::obs::{EventKind, ObsConfig, Observer, NO_SEQ};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::gemm::{GemmPlan, OutputMode};
 use crate::sim::Stats;
@@ -106,6 +107,12 @@ pub struct DecodeFleetConfig {
     /// serialized over the torus entry links and charged to *both*
     /// devices' timelines — and resumes decoding without recompute.
     pub migrate: bool,
+    /// Route every placement to this device index (capacity checks
+    /// still apply). A debugging / experiment knob: crowding one
+    /// device of a multi-device fleet makes migration (with
+    /// [`Self::migrate`]) deterministic and observable — the CI trace
+    /// smoke and `obs_props.rs` use it to force migration flow events.
+    pub pin_device: Option<usize>,
 }
 
 impl Default for DecodeFleetConfig {
@@ -118,6 +125,7 @@ impl Default for DecodeFleetConfig {
             kv_pages: None,
             schedule: DecodeSchedule::PrefillFirst,
             migrate: false,
+            pin_device: None,
         }
     }
 }
@@ -161,14 +169,14 @@ pub struct DecodeMetrics {
     /// Tokens emitted across all sequences.
     pub tokens: u64,
     /// Time-to-first-token (arrival → prefill completion).
-    pub ttft: LatencyHistogram,
+    pub ttft: LogHistogram,
     /// Inter-token latency (gap between consecutive token emissions of
     /// one sequence, including any preemption/resume gap).
-    pub itl: LatencyHistogram,
+    pub itl: LogHistogram,
     /// End-to-end latency (arrival → last token).
-    pub e2e: LatencyHistogram,
+    pub e2e: LogHistogram,
     /// KV-pool occupancy in permille, sampled after every job.
-    pub kv_occupancy_permille: LatencyHistogram,
+    pub kv_occupancy_permille: LogHistogram,
     /// Sequences preempted to free KV pages.
     pub preemptions: u64,
     /// Sequences migrated across devices (waiting or running).
@@ -183,12 +191,12 @@ pub struct DecodeMetrics {
     /// (the chunked-prefill interleaving at work).
     pub prefill_chunks: u64,
     /// Sequences per prefill job.
-    pub prefill_batch: LatencyHistogram,
+    pub prefill_batch: LogHistogram,
     /// Decode ticks executed.
     pub decode_ticks: u64,
     /// Running sequences per decode tick (the continuous-batch
     /// occupancy; `mean()` is the average).
-    pub decode_batch: LatencyHistogram,
+    pub decode_batch: LogHistogram,
     /// Exact KV page-fill words across the fleet.
     pub kv_fill_words: u64,
     /// Exact KV gather (read) words across the fleet.
@@ -534,7 +542,9 @@ impl DeviceDecoder {
 
     /// Run one job at `now` (device must be free). Returns whether any
     /// state advanced — `false` only when there is nothing admissible
-    /// and nothing running.
+    /// and nothing running. `obs` (with `dev`, this device's fleet
+    /// index) is append-only: it never influences the job taken.
+    #[allow(clippy::too_many_arguments)]
     pub fn step(
         &mut self,
         now: u64,
@@ -542,30 +552,43 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
+        obs: &mut Observer,
+        dev: usize,
     ) -> Result<bool> {
         debug_assert!(self.engine.free_at <= now, "step on a busy device");
         let admit_allowed = match self.schedule {
             DecodeSchedule::PrefillFirst => true,
             DecodeSchedule::DecodeFirst => self.running.is_empty(),
             DecodeSchedule::Chunked { chunk_tokens } => {
-                return self.step_chunked(now, chunk_tokens, models, quants, metrics, completions)
+                return self.step_chunked(
+                    now,
+                    chunk_tokens,
+                    models,
+                    quants,
+                    metrics,
+                    completions,
+                    obs,
+                    dev,
+                )
             }
         };
         if admit_allowed {
-            let admitted = self.admit_wave(models, metrics);
+            let admitted = self.admit_wave(now, models, metrics, obs, dev);
             if !admitted.is_empty() {
-                self.run_prefill_job(now, admitted, models, quants, metrics, completions)?;
+                self.run_prefill_job(
+                    now, admitted, models, quants, metrics, completions, obs, dev,
+                )?;
                 return Ok(true);
             }
         }
         if self.running.is_empty() {
             return Ok(false);
         }
-        let preempted_any = self.make_room(metrics);
+        let preempted_any = self.make_room(now, metrics, obs, dev);
         if self.running.is_empty() {
             return Ok(preempted_any);
         }
-        self.run_tick_job(now, models, quants, metrics, completions)?;
+        self.run_tick_job(now, models, quants, metrics, completions, obs, dev)?;
         Ok(true)
     }
 
@@ -579,12 +602,16 @@ impl DeviceDecoder {
     /// validation makes that unreachable) and the next head is tried.
     /// Shared by the stacked admit wave and the chunked scheduler so
     /// their admission/rejection semantics can never drift.
+    #[allow(clippy::too_many_arguments)]
     fn pop_admitted_head(
         &mut self,
+        now: u64,
         commit_of: impl Fn(&PendingSeq) -> usize,
         model_filter: Option<usize>,
         models: &[DecoderModel],
         metrics: &mut DecodeMetrics,
+        obs: &mut Observer,
+        dev: usize,
     ) -> Option<PendingSeq> {
         loop {
             let from_preempted = !self.preempted.is_empty();
@@ -602,6 +629,12 @@ impl DeviceDecoder {
             let cfg = &models[c_model].cfg;
             match self.kv.admit(c_id, cfg.d_model, cfg.n_layers, c_tokens, c_worst) {
                 Ok(()) => {
+                    if obs.enabled() {
+                        obs.record(now, dev, c_id, EventKind::KvAdmit { tokens: c_tokens });
+                        if from_preempted {
+                            obs.record(now, dev, c_id, EventKind::Resume);
+                        }
+                    }
                     return Some(
                         if from_preempted {
                             self.preempted.pop_front()
@@ -609,7 +642,7 @@ impl DeviceDecoder {
                             self.waiting.pop_front()
                         }
                         .expect("peeked above"),
-                    )
+                    );
                 }
                 Err(AdmitError::NoCapacity { .. }) => return None,
                 Err(e) => {
@@ -620,6 +653,9 @@ impl DeviceDecoder {
                     }
                     .expect("peeked above");
                     metrics.rejected += 1;
+                    if obs.enabled() {
+                        obs.record(now, dev, seq.id, EventKind::Reject { reason: e.to_string() });
+                    }
                     metrics.rejections.push((seq.id, e.to_string()));
                 }
             }
@@ -632,15 +668,24 @@ impl DeviceDecoder {
     /// prefill job = one model).
     fn admit_wave(
         &mut self,
+        now: u64,
         models: &[DecoderModel],
         metrics: &mut DecodeMetrics,
+        obs: &mut Observer,
+        dev: usize,
     ) -> Vec<PendingSeq> {
         let mut admitted: Vec<PendingSeq> = Vec::new();
         while self.running.len() + admitted.len() < self.max_running {
             let filter = admitted.first().map(|a| a.model);
-            let Some(seq) =
-                self.pop_admitted_head(|p| p.resident_tokens(), filter, models, metrics)
-            else {
+            let Some(seq) = self.pop_admitted_head(
+                now,
+                |p| p.resident_tokens(),
+                filter,
+                models,
+                metrics,
+                obs,
+                dev,
+            ) else {
                 break;
             };
             admitted.push(seq);
@@ -650,7 +695,13 @@ impl DeviceDecoder {
 
     /// Preempt (LIFO: highest admission stamp first) until every
     /// running sequence that needs a fresh page this tick can get one.
-    fn make_room(&mut self, metrics: &mut DecodeMetrics) -> bool {
+    fn make_room(
+        &mut self,
+        now: u64,
+        metrics: &mut DecodeMetrics,
+        obs: &mut Observer,
+        dev: usize,
+    ) -> bool {
         let mut any = false;
         loop {
             let need =
@@ -668,6 +719,7 @@ impl DeviceDecoder {
             let s = self.running.remove(victim);
             self.kv.release(s.id);
             metrics.preemptions += 1;
+            obs.record(now, dev, s.id, EventKind::Preempt);
             any = true;
             self.preempted.push_back(PendingSeq {
                 id: s.id,
@@ -688,6 +740,7 @@ impl DeviceDecoder {
         any
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_prefill_job(
         &mut self,
         now: u64,
@@ -696,6 +749,8 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
+        obs: &mut Observer,
+        dev: usize,
     ) -> Result<()> {
         let model_idx = admitted[0].model;
         let inputs: Vec<MatF32> = admitted.iter().map(|p| p.prefill_input()).collect();
@@ -720,12 +775,38 @@ impl DeviceDecoder {
             admitted.iter().filter(|p| p.emitted.len() + 1 == p.max_new).count() as u64;
         let charged = self.engine.charge_run(model_idx, now, &report, finishing);
         let completion = now + charged;
+        if obs.enabled() {
+            let batch = admitted.len();
+            let rows: usize = inputs.iter().map(|x| x.rows).sum();
+            obs.record(
+                now,
+                dev,
+                NO_SEQ,
+                EventKind::Prefill {
+                    model: model_idx,
+                    batch,
+                    rows,
+                    chunk: false,
+                    tokens: batch,
+                    dur: charged,
+                },
+            );
+            if obs.kernels_on() {
+                obs.kernel(
+                    format!("d{dev}_m{model_idx}_b{batch}"),
+                    "prefill",
+                    self.engine.sim.stats.clone(),
+                );
+            }
+        }
         for (p, out) in admitted.into_iter().zip(outs) {
-            self.finish_prefilled_seq(p, &out, completion, metrics, completions);
+            self.finish_prefilled_seq(p, &out, completion, metrics, completions, obs, dev);
         }
         metrics.prefill_jobs += 1;
         metrics.prefill_batch.record(inputs.len() as u64);
-        metrics.kv_occupancy_permille.record(self.kv.occupancy_permille());
+        let permille = self.kv.occupancy_permille();
+        metrics.kv_occupancy_permille.record(permille);
+        obs.record(completion, dev, NO_SEQ, EventKind::KvOccupancy { permille });
         metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
         Ok(())
     }
@@ -735,6 +816,7 @@ impl DeviceDecoder {
     /// preemption) — and move the sequence into the running batch, or
     /// complete it. Shared by the stacked prefill job and the *final*
     /// chunk of a chunked prefill so the two paths can never drift.
+    #[allow(clippy::too_many_arguments)]
     fn finish_prefilled_seq(
         &mut self,
         p: PendingSeq,
@@ -742,6 +824,8 @@ impl DeviceDecoder {
         completion: u64,
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
+        obs: &mut Observer,
+        dev: usize,
     ) {
         let fresh = p.emitted.is_empty();
         let mut emitted = p.emitted;
@@ -764,6 +848,8 @@ impl DeviceDecoder {
             self.kv.release(p.id);
             metrics.completed += 1;
             metrics.e2e.record(completion - p.arrival);
+            let latency = completion - p.arrival;
+            obs.record(completion, dev, p.id, EventKind::Complete { latency });
             completions.push(GenCompletion {
                 id: p.id,
                 tokens: stack_rows(&emitted),
@@ -797,6 +883,7 @@ impl DeviceDecoder {
     /// chunk or a decode tick, strictly alternating whenever both
     /// kinds of work exist — a long prompt costs the running batch at
     /// most one chunk of ITL per tick instead of its whole prefill.
+    #[allow(clippy::too_many_arguments)]
     fn step_chunked(
         &mut self,
         now: u64,
@@ -805,6 +892,8 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
+        obs: &mut Observer,
+        dev: usize,
     ) -> Result<bool> {
         let budget = chunk_tokens.max(1);
         let want_prefill =
@@ -812,17 +901,17 @@ impl DeviceDecoder {
         let want_decode = !self.running.is_empty();
         let prefill_turn = want_prefill && !(want_decode && self.last_was_prefill);
         let chunk_ran = prefill_turn
-            && self.run_chunk_job(now, budget, models, quants, metrics, completions)?;
+            && self.run_chunk_job(now, budget, models, quants, metrics, completions, obs, dev)?;
         if chunk_ran {
             self.last_was_prefill = true;
             return Ok(true);
         }
         if want_decode {
-            let preempted_any = self.make_room(metrics);
+            let preempted_any = self.make_room(now, metrics, obs, dev);
             if self.running.is_empty() {
                 return Ok(preempted_any);
             }
-            self.run_tick_job(now, models, quants, metrics, completions)?;
+            self.run_tick_job(now, models, quants, metrics, completions, obs, dev)?;
             self.last_was_prefill = false;
             return Ok(true);
         }
@@ -834,6 +923,7 @@ impl DeviceDecoder {
     /// pool cannot host the next chunk yet (ticks and completions must
     /// free pages first; the admission capacity check at submit time
     /// guarantees eventual progress).
+    #[allow(clippy::too_many_arguments)]
     fn run_chunk_job(
         &mut self,
         now: u64,
@@ -842,6 +932,8 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
+        obs: &mut Observer,
+        dev: usize,
     ) -> Result<bool> {
         if self.chunking.is_none() {
             // The chunking prompt will join the running batch when its
@@ -850,10 +942,13 @@ impl DeviceDecoder {
                 return Ok(false);
             }
             let Some(seq) = self.pop_admitted_head(
+                now,
                 |p| p.resident_tokens().min(budget),
                 None,
                 models,
                 metrics,
+                obs,
+                dev,
             ) else {
                 return Ok(false);
             };
@@ -893,11 +988,35 @@ impl DeviceDecoder {
             metrics.prefill_chunks += 1;
         }
         metrics.prefill_batch.record(1);
-        metrics.kv_occupancy_permille.record(self.kv.occupancy_permille());
+        let permille = self.kv.occupancy_permille();
+        metrics.kv_occupancy_permille.record(permille);
         metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
+        if obs.enabled() {
+            obs.record(
+                now,
+                dev,
+                st.seq.id,
+                EventKind::Prefill {
+                    model: model_idx,
+                    batch: 1,
+                    rows,
+                    chunk: !is_final,
+                    tokens: usize::from(is_final),
+                    dur: charged,
+                },
+            );
+            obs.record(completion, dev, NO_SEQ, EventKind::KvOccupancy { permille });
+            if obs.kernels_on() {
+                obs.kernel(
+                    format!("d{dev}_m{model_idx}_chunk"),
+                    "chunk",
+                    self.engine.sim.stats.clone(),
+                );
+            }
+        }
         if is_final {
             let out = outs.into_iter().next().expect("one sequence");
-            self.finish_prefilled_seq(st.seq, &out, completion, metrics, completions);
+            self.finish_prefilled_seq(st.seq, &out, completion, metrics, completions, obs, dev);
         } else {
             self.chunking = Some(ChunkState { done: done_after, ..st });
         }
@@ -982,6 +1101,7 @@ impl DeviceDecoder {
         self.engine.free_at
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_tick_job(
         &mut self,
         now: u64,
@@ -989,6 +1109,8 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
+        obs: &mut Observer,
+        dev: usize,
     ) -> Result<()> {
         // Group the running batch by model (stable in admission order):
         // one stacked GEMV set per group, all groups one device job.
@@ -1068,6 +1190,10 @@ impl DeviceDecoder {
             self.kv.release(s.id);
             metrics.completed += 1;
             metrics.e2e.record(completion - s.arrival);
+            if obs.enabled() {
+                let latency = completion - s.arrival;
+                obs.record(completion, dev, s.id, EventKind::Complete { latency });
+            }
             completions.push(GenCompletion {
                 id: s.id,
                 tokens: stack_rows(&s.emitted),
@@ -1079,8 +1205,21 @@ impl DeviceDecoder {
         }
         metrics.decode_ticks += 1;
         metrics.decode_batch.record(order.len() as u64);
-        metrics.kv_occupancy_permille.record(self.kv.occupancy_permille());
+        let permille = self.kv.occupancy_permille();
+        metrics.kv_occupancy_permille.record(permille);
         metrics.makespan_cycles = metrics.makespan_cycles.max(completion);
+        if obs.enabled() {
+            let batch = order.len();
+            obs.record(now, dev, NO_SEQ, EventKind::DecodeTick { batch, dur: charged });
+            obs.record(completion, dev, NO_SEQ, EventKind::KvOccupancy { permille });
+            if obs.kernels_on() {
+                obs.kernel(
+                    format!("d{dev}_tick_b{batch}"),
+                    "decode",
+                    self.engine.sim.stats.clone(),
+                );
+            }
+        }
         Ok(())
     }
 }
@@ -1105,6 +1244,10 @@ pub struct DecodeFleetSim {
     /// measured rate.
     token_observed: Vec<bool>,
     ran: bool,
+    /// Passive event/series/kernel recorder. Disabled by default; the
+    /// simulator never reads it back, so enabling it cannot change a
+    /// single scheduling decision (asserted by `obs_props`).
+    obs: Observer,
 }
 
 impl DecodeFleetSim {
@@ -1176,7 +1319,27 @@ impl DecodeFleetSim {
             token_cost,
             token_observed,
             ran: false,
+            obs: Observer::disabled(),
         }
+    }
+
+    /// Arm the observer before [`Self::run`]. Observation is strictly
+    /// one-way: the recorded events, series and kernel rows never feed
+    /// back into placement, admission or scheduling.
+    pub fn enable_obs(&mut self, obs_cfg: &ObsConfig) {
+        let names: Vec<String> = self
+            .cfg
+            .roster
+            .iter()
+            .enumerate()
+            .map(|(d, c)| format!("dev{d} {}", c.name))
+            .collect();
+        self.obs = Observer::new(obs_cfg, names);
+    }
+
+    /// The observer (trace/series/kernel accessors live there).
+    pub fn obs(&self) -> &Observer {
+        &self.obs
     }
 
     /// The served model catalog (index-aligned with request `model`).
@@ -1220,40 +1383,58 @@ impl DecodeFleetSim {
     fn place(&mut self, req: GenRequest, now: u64, metrics: &mut DecodeMetrics) {
         let cfg = self.models[req.model].cfg;
         let worst = req.prompt.rows + req.max_new_tokens.saturating_sub(1);
-        let candidate = (0..self.devices.len())
-            .filter(|&d| {
-                let cap = self.devices[d].kv_capacity_tokens(&cfg);
-                worst <= cap
-            })
-            .min_by_key(|&d| {
-                let c = self.device_class[d];
-                let own = self.prefill_cost[req.model][c]
-                    .saturating_mul(req.prompt.rows as u64)
-                    .saturating_add(
-                        self.token_cost[req.model][c]
-                            .saturating_mul(req.max_new_tokens.saturating_sub(1) as u64),
-                    );
-                let backlog =
-                    self.devices[d].expected_backlog(c, &self.prefill_cost, &self.token_cost);
-                self.devices[d].free_at().max(now).saturating_add(backlog).saturating_add(own)
-            });
+        // A pinned device bypasses the least-backlog scan (but never
+        // the capacity filter): every request lands on one device, the
+        // deterministic way to provoke crowding — and migrations — in
+        // smoke runs and tests.
+        let candidate = match self.cfg.pin_device {
+            Some(p) if p < self.devices.len() => {
+                let cap = self.devices[p].kv_capacity_tokens(&cfg);
+                (worst <= cap).then_some(p)
+            }
+            _ => (0..self.devices.len())
+                .filter(|&d| {
+                    let cap = self.devices[d].kv_capacity_tokens(&cfg);
+                    worst <= cap
+                })
+                .min_by_key(|&d| {
+                    let c = self.device_class[d];
+                    let own = self.prefill_cost[req.model][c]
+                        .saturating_mul(req.prompt.rows as u64)
+                        .saturating_add(
+                            self.token_cost[req.model][c]
+                                .saturating_mul(req.max_new_tokens.saturating_sub(1) as u64),
+                        );
+                    let backlog =
+                        self.devices[d].expected_backlog(c, &self.prefill_cost, &self.token_cost);
+                    self.devices[d].free_at().max(now).saturating_add(backlog).saturating_add(own)
+                }),
+        };
         let Some(d) = candidate else {
             let best_cap = (0..self.devices.len())
                 .map(|d| self.devices[d].kv_capacity_tokens(&cfg))
                 .max()
                 .unwrap_or(0);
             metrics.rejected += 1;
-            metrics.rejections.push((
-                req.id,
-                AdmitError::TooLarge { worst_tokens: worst, capacity_tokens: best_cap }
-                    .to_string(),
-            ));
+            let reason = AdmitError::TooLarge { worst_tokens: worst, capacity_tokens: best_cap }
+                .to_string();
+            if self.obs.enabled() {
+                self.obs.record(now, 0, req.id, EventKind::Reject { reason: reason.clone() });
+            }
+            metrics.rejections.push((req.id, reason));
             return;
         };
         let id = req.id;
+        let model = req.model;
         if let Err(e) = self.devices[d].submit(req, &cfg) {
             metrics.rejected += 1;
-            metrics.rejections.push((id, e.to_string()));
+            let reason = e.to_string();
+            if self.obs.enabled() {
+                self.obs.record(now, d, id, EventKind::Reject { reason: reason.clone() });
+            }
+            metrics.rejections.push((id, reason));
+        } else if self.obs.enabled() {
+            self.obs.record(now, d, id, EventKind::Arrival { model });
         }
     }
 
@@ -1411,10 +1592,28 @@ impl DecodeFleetSim {
         };
         let xfer_src = self.transfer_ref_cycles(c_src, words);
         let xfer_dst = self.transfer_ref_cycles(c_dst, words);
+        // Span starts mirror `charge_transfer`'s `free_at.max(earliest)`
+        // rule, read *before* each charge mutates the clocks.
+        let src_start = self.devices[src].free_at().max(now);
         let handoff = self.devices[src].charge_transfer(now, xfer_src);
+        let dst_start = self.devices[dst].free_at().max(handoff);
         self.devices[dst].charge_transfer(handoff, xfer_dst);
         metrics.migrations += 1;
         metrics.migrated_words += words;
+        if self.obs.enabled() {
+            self.obs.record(
+                src_start,
+                src,
+                id,
+                EventKind::MigrateOut { dst, words, dur: xfer_src },
+            );
+            self.obs.record(
+                dst_start,
+                dst,
+                id,
+                EventKind::MigrateIn { src, words, dur: xfer_dst },
+            );
+        }
         id
     }
 
@@ -1446,6 +1645,8 @@ impl DecodeFleetSim {
                         &self.quants,
                         &mut metrics,
                         &mut completions,
+                        &mut self.obs,
+                        d,
                     )?;
                     if let Some((model, per_token)) = self.devices[d].take_tick_observation() {
                         let class = self.device_class[d];
@@ -1502,6 +1703,7 @@ impl DecodeFleetSim {
             metrics.kv_fill_words += d.kv_metrics().fill_words;
             metrics.kv_read_words += d.kv_metrics().read_words;
         }
+        self.obs.finish(metrics.makespan_cycles);
         Ok((metrics, completions))
     }
 }

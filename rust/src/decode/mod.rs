@@ -44,6 +44,12 @@
 //! this path as `cluster --workload decode` (`--chunk-tokens`,
 //! `--migrate`); the FIG8 bench charts tokens/sec and TTFT against
 //! concurrent sequences and asserts the chunked-prefill p99 ITL win.
+//!
+//! The fleet carries [`crate::obs`] hooks (arm with
+//! [`fleet::DecodeFleetSim::enable_obs`]): every admission, chunk,
+//! tick, preemption, migration and completion lands in the event trace
+//! and windowed series. Observation is strictly one-way — tracing on
+//! vs off is bit-identical, pinned by `rust/tests/obs_props.rs`.
 
 pub mod engine;
 pub mod fleet;

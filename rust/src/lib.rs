@@ -27,6 +27,12 @@
 //!   prefill/decode-step execution, a paged KV cache with exact word
 //!   accounting, and continuous batching across the fleet with
 //!   per-phase metrics (TTFT, inter-token latency, KV occupancy).
+//! - [`obs`] — fleet observability: deterministic structured event
+//!   tracing rendered as Chrome/Perfetto JSON (one track per device,
+//!   flow arrows across migrations), windowed time-series metrics,
+//!   and the mergeable log-bucket latency histograms behind the fleet
+//!   percentile reports. Observation never feeds back into simulation:
+//!   tracing on vs off is bit-identical.
 //! - [`baseline`] — scalar general-purpose-processor cost/energy model.
 //! - [`runtime`] — PJRT wrapper used to validate numerics against the
 //!   AOT-compiled JAX model (build-time Python, never on the request
@@ -46,6 +52,7 @@ pub mod energy;
 pub mod gemm;
 pub mod interconnect;
 pub mod isa;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod trace;

@@ -7,7 +7,8 @@
 //!   encoder [--layers n] [--seq s] [--dmodel d] [--heads h] [--dff f]
 //!                                — run a tiny encoder on the array
 //!   serve [--requests n] [--rate rps] [--batch b] [--decode]
-//!         [--chunk-tokens t]
+//!         [--chunk-tokens t] [--trace-out f] [--metrics-window w]
+//!         [--metrics-out f] [--kernel-trace f]
 //!                                — closed-loop serving demo
 //!                                  (coordinator); --decode serves
 //!                                  generation requests through the
@@ -19,7 +20,9 @@
 //!           [--batch b] [--no-steal] [--workload encoder|decode]
 //!           [--max-running r] [--page-words w]
 //!           [--schedule prefill-first|decode-first|chunked]
-//!           [--chunk-tokens t] [--migrate]
+//!           [--chunk-tokens t] [--migrate] [--pin-device d]
+//!           [--trace-out f] [--metrics-window w] [--metrics-out f]
+//!           [--kernel-trace f]
 //!                                — fleet-serving simulation (cluster);
 //!                                  --fleet takes a class roster like
 //!                                  `4x4@100:3,8x4@200:1` (mixed array
@@ -42,7 +45,18 @@
 //!                                  reporting TTFT / inter-token
 //!                                  latency / tokens-per-second / KV
 //!                                  occupancy, preemptions and
-//!                                  migrations
+//!                                  migrations. Observability (both
+//!                                  workloads and serve): --trace-out
+//!                                  writes a Chrome/Perfetto trace
+//!                                  JSON, --metrics-window W folds the
+//!                                  run into W-cycle windows (CSV to
+//!                                  --metrics-out or stdout),
+//!                                  --kernel-trace writes phase-tagged
+//!                                  per-kernel stats; tracing on vs
+//!                                  off is bit-identical, and
+//!                                  --pin-device D forces placement
+//!                                  onto one device (deterministic
+//!                                  migration demos)
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
@@ -56,6 +70,7 @@ use cgra_edge::coordinator::{Coordinator, DecodeCoordinator, Request};
 use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeSchedule, KvConfig};
 use cgra_edge::energy::EnergyModel;
 use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, MapVariant, OutputMode};
+use cgra_edge::obs::{ObsConfig, Observer};
 use cgra_edge::sim::CgraSim;
 use cgra_edge::util::mat::{MatF32, MatI8};
 use cgra_edge::util::rng::XorShiftRng;
@@ -90,6 +105,45 @@ fn roster_summary(roster: &[DeviceClass]) -> String {
         }
     }
     counts.iter().map(|(name, k)| format!("{k}x{name}")).collect::<Vec<_>>().join(" + ")
+}
+
+/// Observer configuration from the observability flags: `--trace-out
+/// FILE` arms event tracing, `--metrics-window N` arms the windowed
+/// series (N ref cycles per window), `--kernel-trace FILE` arms the
+/// per-kernel CSV. All off by default — and a run with them on is
+/// bit-identical to the same run with them off.
+fn parse_obs_cfg(args: &Args) -> Result<ObsConfig> {
+    let window: u64 = args.flag_parse("metrics-window", 0u64)?;
+    Ok(ObsConfig {
+        trace: args.flag("trace-out").is_some(),
+        window_cycles: (window > 0).then_some(window),
+        kernels: args.flag("kernel-trace").is_some(),
+    })
+}
+
+/// Write whatever the observer recorded: trace JSON to `--trace-out`,
+/// series CSV to `--metrics-out` (stdout without it), kernel CSV to
+/// `--kernel-trace`.
+fn write_obs_outputs(obs: &Observer, args: &Args) -> Result<()> {
+    if let (Some(path), Some(json)) = (args.flag("trace-out"), obs.trace_json()) {
+        std::fs::write(path, json)?;
+        let n = obs.event_count();
+        println!("trace    : {n} events -> {path} (chrome://tracing / Perfetto)");
+    }
+    if let Some(csv) = obs.series_csv() {
+        match args.flag("metrics-out") {
+            Some(path) => {
+                std::fs::write(path, csv)?;
+                println!("metrics  : windowed series -> {path}");
+            }
+            None => print!("{csv}"),
+        }
+    }
+    if let (Some(path), Some(csv)) = (args.flag("kernel-trace"), obs.kernel_csv()) {
+        std::fs::write(path, csv)?;
+        println!("kernels  : per-kernel rows -> {path}");
+    }
+    Ok(())
 }
 
 /// `--arrival poisson|bursty|diurnal` at `--rate`.
@@ -218,7 +272,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch: usize = args.flag_parse("batch", 4usize)?;
     let xcfg = XformerConfig { n_layers: 1, seq: 16, d_model: 32, n_heads: 2, d_ff: 64 };
     let model = EncoderModel::new(xcfg, 42);
-    let coord = Coordinator::spawn(cfg.clone(), model, batch);
+    let obs_cfg = parse_obs_cfg(args)?;
+    let coord = Coordinator::spawn_observed(cfg.clone(), model, batch, obs_cfg);
     let mut rng = XorShiftRng::new(99);
     let mut t = 0.0f64;
     for id in 0..n {
@@ -237,7 +292,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             r.id, r.queue_cycles, r.service_cycles, r.completion_cycle
         );
     }
-    let m = coord.shutdown()?;
+    let (m, obs) = coord.shutdown_observed()?;
     println!(
         "served {} requests: latency p50 {} / p99 {} cycles ({:.2} / {:.2} ms), \
          throughput {:.1} req/s",
@@ -248,6 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.p99_latency_cycles() as f64 / (cfg.freq_mhz * 1e3),
         m.throughput_rps(cfg.freq_mhz)
     );
+    write_obs_outputs(&obs, args)?;
     Ok(())
 }
 
@@ -266,7 +322,8 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
     };
     let xcfg = XformerConfig { n_layers: 1, seq: 16, d_model: 32, n_heads: 2, d_ff: 64 };
     let class = DeviceClass::from_arch(cfg.clone());
-    let coord = DecodeCoordinator::spawn(class, xcfg, 42, max_running, schedule);
+    let obs_cfg = parse_obs_cfg(args)?;
+    let coord = DecodeCoordinator::spawn_observed(class, xcfg, 42, max_running, schedule, obs_cfg);
     // One generation-workload source for both serving entry points:
     // the same generator the `cluster --workload decode` path uses.
     let classes = vec![ModelClass {
@@ -285,7 +342,7 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
     for req in gen.generate_gen(n) {
         coord.submit(req)?;
     }
-    let (m, mut done) = coord.shutdown()?;
+    let (m, mut done, obs) = coord.shutdown_observed()?;
     done.sort_by_key(|c| c.id);
     for c in &done {
         println!(
@@ -307,6 +364,7 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
         m.itl.p50() as f64 / (cfg.freq_mhz * 1e3),
         m.tokens_per_sec(cfg.freq_mhz)
     );
+    write_obs_outputs(&obs, args)?;
     Ok(())
 }
 
@@ -361,6 +419,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         &classes,
         42,
     );
+    fleet.enable_obs(&parse_obs_cfg(args)?);
     let m = fleet.run(requests)?;
     let em = EnergyModel::default();
     let freq_ref = ref_mhz as f64;
@@ -409,6 +468,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         e.total_uj(),
         if m.completed > 0 { e.total_uj() / m.completed as f64 } else { 0.0 }
     );
+    write_obs_outputs(fleet.obs(), args)?;
     Ok(())
 }
 
@@ -444,6 +504,13 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         other => bail!("unknown schedule '{other}' (prefill-first|decode-first|chunked)"),
     };
     let migrate = args.switch("migrate");
+    // `--pin-device D` forces every admissible request onto device D —
+    // the deterministic way to crowd one device and watch `--migrate`
+    // rescue it in the trace (the CI smoke run does exactly this).
+    let pin_device = match args.flag("pin-device") {
+        Some(s) => Some(s.parse::<usize>()?),
+        None => None,
+    };
     let arrival = parse_arrival(args, rate)?;
     let classes = ModelClass::edge_mix();
     let ref_mhz = arch.freq_mhz_u64();
@@ -460,10 +527,12 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
             kv_pages: None,
             schedule,
             migrate,
+            pin_device,
         },
         &classes,
         42,
     );
+    fleet.enable_obs(&parse_obs_cfg(args)?);
     let (m, _completions) = fleet.run(requests)?;
     let em = EnergyModel::default();
     let freq_ref = ref_mhz as f64;
@@ -525,6 +594,7 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         e.total_uj(),
         if m.tokens > 0 { e.total_uj() / m.tokens as f64 } else { 0.0 }
     );
+    write_obs_outputs(fleet.obs(), args)?;
     Ok(())
 }
 

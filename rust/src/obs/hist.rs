@@ -1,0 +1,317 @@
+//! Mergeable log-bucket latency histograms.
+//!
+//! `LogHistogram` replaces the full `Vec<u64>` sample stores that
+//! `FleetMetrics` / `DecodeMetrics` used to carry: memory is O(buckets)
+//! instead of O(samples), merging two histograms is exact (bucket counts
+//! add element-wise), and percentile queries carry a bounded relative
+//! error of [`LogHistogram::MAX_RELATIVE_ERROR`].
+//!
+//! Bucketing is HdrHistogram-style base-2 with [`SUB_BITS`] sub-bucket
+//! bits per octave: values below `2^SUB_BITS` land in exact unit-width
+//! buckets, larger values share `2^SUB_BITS` buckets per power of two,
+//! so a bucket spanning `[lo, lo + w)` always has `w <= lo / 2^SUB_BITS`
+//! and the midpoint representative is within `lo / 2^(SUB_BITS+1)` of
+//! every member. Count, sum (hence mean), min, and max are tracked
+//! exactly, so single-sample histograms and p0/p100 stay exact and the
+//! derived `PartialEq` still witnesses run determinism: identical
+//! sample multisets always produce identical histograms.
+//!
+//! With `--features exact-hist` (or under `cfg(test)`) each histogram
+//! additionally shadows the exact sorted sample vector, exposed via
+//! [`LogHistogram::exact_percentile`] for conformance comparisons. The
+//! shadow is never consulted by `percentile()`, so enabling the feature
+//! cannot change any reported metric.
+
+/// Sub-bucket resolution bits: `2^SUB_BITS` buckets per octave.
+const SUB_BITS: u32 = 8;
+/// Number of exact unit buckets (values `< SUB` index directly).
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Log-bucket histogram over `u64` samples with exact merge and
+/// bounded-relative-error percentiles. Drop-in for the old Vec-backed
+/// `LatencyHistogram` API (`record` / `count` / `mean` / `max` /
+/// `percentile` / `p50` / `p95` / `p99`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LogHistogram {
+    /// Bucket counts, grown lazily; the last element is always nonzero
+    /// (so equal sample sets give equal vectors regardless of record
+    /// vs merge history).
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+    /// Exact sorted shadow for conformance tests only; never read by
+    /// `percentile()` so feature builds stay bit-identical.
+    #[cfg(any(test, feature = "exact-hist"))]
+    exact: Vec<u64>,
+}
+
+impl LogHistogram {
+    /// Worst-case relative error of `percentile()` vs the exact
+    /// nearest-rank answer: half a bucket width over the bucket floor,
+    /// `1 / 2^(SUB_BITS+1)`.
+    pub const MAX_RELATIVE_ERROR: f64 = 1.0 / (1u64 << (SUB_BITS + 1)) as f64;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn index(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let m = 63 - v.leading_zeros(); // top bit position, >= SUB_BITS
+        let mantissa = (v >> (m - SUB_BITS)) as usize; // in [SUB, 2*SUB)
+        (((m - SUB_BITS + 1) as usize) << SUB_BITS) + (mantissa - SUB as usize)
+    }
+
+    /// Midpoint of the bucket's value range (exact for unit buckets).
+    fn representative(i: usize) -> u64 {
+        if i < SUB as usize {
+            return i as u64;
+        }
+        let octave = (i >> SUB_BITS) as u32 + SUB_BITS - 1; // top bit position
+        let offset = (i as u64) & (SUB - 1);
+        let width = 1u64 << (octave - SUB_BITS);
+        ((SUB + offset) << (octave - SUB_BITS)) + width / 2
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        let i = Self::index(v);
+        if i >= self.counts.len() {
+            self.counts.resize(i + 1, 0);
+        }
+        self.counts[i] += 1;
+        if self.total == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.total += 1;
+        self.sum += u128::from(v);
+        #[cfg(any(test, feature = "exact-hist"))]
+        {
+            let at = self.exact.partition_point(|&x| x <= v);
+            self.exact.insert(at, v);
+        }
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact arithmetic mean (sum is tracked exactly in u128).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Exact smallest sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank percentile (same semantics as the exact
+    /// `LatencyHistogram`), answered from bucket counts: the result is
+    /// the representative of the bucket holding the rank-th sample,
+    /// clamped to the exact observed `[min, max]`, so the relative
+    /// error vs the exact answer is at most [`Self::MAX_RELATIVE_ERROR`].
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Exact merge: bucket counts add element-wise, scalars combine
+    /// losslessly. Associative and commutative — merging per-device
+    /// histograms in any order gives the identical fleet histogram.
+    pub fn merge(&mut self, other: &Self) {
+        if other.total == 0 {
+            return;
+        }
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, &b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        if self.total == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        #[cfg(any(test, feature = "exact-hist"))]
+        {
+            for &v in &other.exact {
+                let at = self.exact.partition_point(|&x| x <= v);
+                self.exact.insert(at, v);
+            }
+        }
+    }
+
+    /// Exact nearest-rank percentile from the shadow sample vector.
+    /// Test/conformance only; `percentile()` never consults this, so
+    /// the feature cannot perturb reported metrics.
+    #[cfg(any(test, feature = "exact-hist"))]
+    pub fn exact_percentile(&self, p: f64) -> u64 {
+        if self.exact.is_empty() {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.exact.len() as f64).ceil() as usize;
+        let rank = rank.clamp(1, self.exact.len());
+        self.exact[rank - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 5, 100, 255] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 255);
+        assert_eq!(h.p50(), 5);
+        assert_eq!(h.percentile(100.0), 255);
+        assert_eq!(h.mean(), 361.0 / 5.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn large_values_stay_within_relative_error() {
+        let mut h = LogHistogram::new();
+        // Deterministic LCG spanning several octaves.
+        let mut x = 0x2545_f491_4f6c_dd1du64;
+        for _ in 0..2000 {
+            x = x.wrapping_mul(2_862_933_555_777_941_757).wrapping_add(3_037_000_493);
+            h.record(x >> 34); // values up to 2^30
+        }
+        for q in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let approx = h.percentile(q);
+            let exact = h.exact_percentile(q);
+            let bound = exact as f64 * LogHistogram::MAX_RELATIVE_ERROR;
+            assert!(
+                (approx.abs_diff(exact)) as f64 <= bound,
+                "p{q}: approx {approx} vs exact {exact} (bound {bound})"
+            );
+        }
+    }
+
+    #[test]
+    fn single_sample_percentiles_are_exact() {
+        let mut h = LogHistogram::new();
+        h.record(123_456_789);
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(q), 123_456_789);
+        }
+    }
+
+    #[test]
+    fn merge_is_exact_and_associative() {
+        let mk = |vals: &[u64]| {
+            let mut h = LogHistogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = mk(&[1, 500, 70_000]);
+        let b = mk(&[2, 2, 9_999_999]);
+        let c = mk(&[300]);
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        let direct = mk(&[1, 500, 70_000, 2, 2, 9_999_999, 300]);
+        assert_eq!(ab_c, a_bc);
+        assert_eq!(ab_c.counts, direct.counts);
+        assert_eq!(ab_c.total, direct.total);
+        assert_eq!(ab_c.sum, direct.sum);
+        assert_eq!(ab_c.min, direct.min);
+        assert_eq!(ab_c.max, direct.max);
+    }
+
+    #[test]
+    fn index_and_representative_are_consistent() {
+        for &v in &[0u64, 1, 255, 256, 257, 511, 512, 1 << 20, (1 << 40) + 12345, u64::MAX >> 1] {
+            let i = LogHistogram::index(v);
+            let r = LogHistogram::representative(i);
+            // The representative must land in the same bucket.
+            assert_eq!(LogHistogram::index(r), i, "v={v} i={i} r={r}");
+            if v >= SUB {
+                let err = r.abs_diff(v) as f64 / v as f64;
+                assert!(err <= LogHistogram::MAX_RELATIVE_ERROR, "v={v} r={r} err={err}");
+            } else {
+                assert_eq!(r, v);
+            }
+        }
+    }
+}

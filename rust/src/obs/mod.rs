@@ -1,0 +1,187 @@
+//! Fleet observability: deterministic structured tracing, windowed
+//! time-series metrics, and mergeable log-bucket latency histograms.
+//!
+//! Three layers, all purely observational:
+//!
+//! - [`trace`] — every fleet event (arrival, batch-form, prefill
+//!   chunk, decode tick, preempt/resume, steal, KV admit/reject,
+//!   migration export/import, completion) as `(ref_cycle, device,
+//!   seq, kind)`, rendered to Chrome/Perfetto trace-event JSON with
+//!   one track per device and flow arrows following a sequence across
+//!   migrations.
+//! - [`series`] — the same event stream folded into fixed ref-cycle
+//!   windows: tokens/sec, queue depth, KV occupancy, busy fraction,
+//!   steal/preempt/migration rates per window, rendered as CSV.
+//! - [`hist`] — [`LogHistogram`], the O(buckets) mergeable replacement
+//!   for the Vec-backed latency percentile stores.
+//!
+//! The non-negotiable invariant: observation never feeds back into
+//! simulation. [`Observer`] is append-only and nothing in the
+//! scheduling path reads it, so a run with tracing enabled produces
+//! bit-identical tokens and metrics to the same seed with tracing
+//! off, and the rendered trace bytes are a pure function of the seed
+//! (`rust/tests/obs_props.rs` pins all three properties).
+
+pub mod hist;
+pub mod series;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use series::MetricsSeries;
+pub use trace::{render_chrome_json, EventKind, ObsEvent, NO_SEQ};
+
+use crate::sim::Stats;
+use crate::trace::TraceLog;
+
+/// Which observation layers to enable. Default: everything off — the
+/// fleet simulators embed a disabled `Observer` with near-zero
+/// overhead (one branch per hook).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Record structured events and render Chrome/Perfetto JSON.
+    pub trace: bool,
+    /// Fold events into windows of this many ref cycles.
+    pub window_cycles: Option<u64>,
+    /// Record per-kernel stats rows (phase-tagged `TraceLog` CSV).
+    pub kernels: bool,
+}
+
+impl ObsConfig {
+    /// Everything on (trace + series at `window` cycles + kernel CSV).
+    pub fn full(window: u64) -> Self {
+        Self { trace: true, window_cycles: Some(window), kernels: true }
+    }
+
+    pub fn any_enabled(&self) -> bool {
+        self.trace || self.window_cycles.is_some() || self.kernels
+    }
+}
+
+/// Append-only sink for fleet events. Embedded (disabled) in
+/// `FleetSim` / `DecodeFleetSim`; enable with their `enable_obs`
+/// before `run()`.
+#[derive(Debug, Clone, Default)]
+pub struct Observer {
+    events: Option<Vec<ObsEvent>>,
+    series: Option<MetricsSeries>,
+    kernels: Option<TraceLog>,
+    device_names: Vec<String>,
+}
+
+impl Observer {
+    /// Build an observer for `device_names.len()` devices.
+    pub fn new(cfg: &ObsConfig, device_names: Vec<String>) -> Self {
+        let n = device_names.len();
+        Self {
+            events: if cfg.trace { Some(Vec::new()) } else { None },
+            series: cfg.window_cycles.map(|w| MetricsSeries::new(w, n)),
+            kernels: if cfg.kernels { Some(TraceLog::new()) } else { None },
+            device_names,
+        }
+    }
+
+    /// Disabled observer (what the simulators embed by default).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Is any layer recording?
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.events.is_some() || self.series.is_some() || self.kernels.is_some()
+    }
+
+    /// Is the per-kernel CSV layer recording? (Callers gate label
+    /// formatting on this.)
+    #[inline]
+    pub fn kernels_on(&self) -> bool {
+        self.kernels.is_some()
+    }
+
+    /// Record one structured event.
+    #[inline]
+    pub fn record(&mut self, cycle: u64, device: usize, seq: u64, kind: EventKind) {
+        if let Some(series) = self.series.as_mut() {
+            series.feed(cycle, device, &kind);
+        }
+        if let Some(events) = self.events.as_mut() {
+            events.push(ObsEvent { cycle, device, seq, kind });
+        }
+    }
+
+    /// Record a per-kernel stats row under a lifecycle phase
+    /// (`"encoder"`, `"prefill"`, `"chunk"`, `"decode"`).
+    #[inline]
+    pub fn kernel(&mut self, label: impl Into<String>, phase: &str, stats: Stats) {
+        if let Some(log) = self.kernels.as_mut() {
+            log.record_phase(label, phase, stats);
+        }
+    }
+
+    /// Close the run: extend the series timeline to the makespan.
+    pub fn finish(&mut self, makespan: u64) {
+        if let Some(series) = self.series.as_mut() {
+            series.finish(makespan);
+        }
+    }
+
+    /// Number of structured events recorded so far.
+    pub fn event_count(&self) -> usize {
+        self.events.as_ref().map_or(0, Vec::len)
+    }
+
+    /// Recorded events (empty slice when tracing is off).
+    pub fn events(&self) -> &[ObsEvent] {
+        self.events.as_deref().unwrap_or(&[])
+    }
+
+    /// Render the Chrome/Perfetto trace JSON (None when tracing off).
+    pub fn trace_json(&self) -> Option<String> {
+        self.events.as_ref().map(|ev| render_chrome_json(ev, &self.device_names))
+    }
+
+    /// Render the windowed-metrics CSV (None when the series is off).
+    pub fn series_csv(&self) -> Option<String> {
+        self.series.as_ref().map(MetricsSeries::to_csv)
+    }
+
+    /// Render the phase-tagged per-kernel CSV (None when off).
+    pub fn kernel_csv(&self) -> Option<String> {
+        self.kernels.as_ref().map(TraceLog::to_csv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_observer_records_nothing() {
+        let mut obs = Observer::disabled();
+        assert!(!obs.enabled());
+        obs.record(10, 0, 1, EventKind::Arrival { model: 0 });
+        obs.kernel("k", "encoder", Stats::default());
+        assert_eq!(obs.event_count(), 0);
+        assert!(obs.trace_json().is_none());
+        assert!(obs.series_csv().is_none());
+        assert!(obs.kernel_csv().is_none());
+    }
+
+    #[test]
+    fn full_observer_renders_all_layers() {
+        let mut obs = Observer::new(&ObsConfig::full(100), vec!["d0".into()]);
+        assert!(obs.enabled());
+        assert!(obs.kernels_on());
+        obs.record(10, 0, 1, EventKind::Arrival { model: 0 });
+        obs.record(20, 0, 1, EventKind::DecodeTick { batch: 1, dur: 30 });
+        obs.kernel("tick", "decode", Stats { cycles: 30, ..Default::default() });
+        obs.finish(250);
+        assert_eq!(obs.event_count(), 2);
+        let json = obs.trace_json().unwrap();
+        assert!(json.contains("decode_tick"));
+        let csv = obs.series_csv().unwrap();
+        assert_eq!(csv.lines().count(), 1 + 3); // header + windows 0..=2
+        let kcsv = obs.kernel_csv().unwrap();
+        assert!(kcsv.lines().nth(1).unwrap().starts_with("tick,decode,30,"));
+    }
+}

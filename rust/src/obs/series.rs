@@ -1,0 +1,216 @@
+//! Windowed time-series metrics: fold the event stream into fixed
+//! ref-cycle windows so a run becomes plottable curves instead of one
+//! end-of-run aggregate.
+//!
+//! Each window row counts arrivals / completions / tokens / steals /
+//! preemptions / migrations / drops / rejects, accumulates device busy
+//! cycles (work spans are split exactly across window boundaries), and
+//! samples the fleet-wide queue depth and mean KV occupancy from the
+//! latest per-device gauge values. Rendering carries gauges forward
+//! through empty windows, so the CSV always has one row per window
+//! from cycle 0 to the makespan.
+
+use super::trace::EventKind;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Default, Clone, PartialEq)]
+struct WindowRow {
+    arrivals: u64,
+    completions: u64,
+    tokens: u64,
+    steals: u64,
+    preemptions: u64,
+    migrations: u64,
+    drops: u64,
+    rejects: u64,
+    busy_cycles: u64,
+    /// Fleet-wide queued requests at the last sample in this window.
+    queue_depth: Option<u64>,
+    /// Mean per-device KV occupancy permille at the last sample.
+    kv_permille: Option<u64>,
+}
+
+/// Fixed-cadence windowed metrics accumulator. Fed from
+/// [`super::Observer::record`]; purely observational.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSeries {
+    window_cycles: u64,
+    n_devices: usize,
+    rows: BTreeMap<u64, WindowRow>,
+    /// Latest queue-depth gauge per device.
+    cur_queue: Vec<u64>,
+    /// Latest KV-occupancy gauge per device.
+    cur_kv: Vec<u64>,
+    makespan: u64,
+}
+
+impl MetricsSeries {
+    pub fn new(window_cycles: u64, n_devices: usize) -> Self {
+        Self {
+            window_cycles: window_cycles.max(1),
+            n_devices: n_devices.max(1),
+            rows: BTreeMap::new(),
+            cur_queue: vec![0; n_devices.max(1)],
+            cur_kv: vec![0; n_devices.max(1)],
+            makespan: 0,
+        }
+    }
+
+    /// Window size in ref cycles.
+    pub fn window_cycles(&self) -> u64 {
+        self.window_cycles
+    }
+
+    fn row(&mut self, cycle: u64) -> &mut WindowRow {
+        let w = cycle / self.window_cycles;
+        self.rows.entry(w).or_default()
+    }
+
+    /// Split a work span `[start, start + dur)` across window
+    /// boundaries, crediting each window its exact busy-cycle share.
+    fn add_busy(&mut self, start: u64, dur: u64) {
+        let end = start.saturating_add(dur);
+        let mut t = start;
+        while t < end {
+            let w = t / self.window_cycles;
+            let window_end = (w + 1).saturating_mul(self.window_cycles);
+            let take = end.min(window_end) - t;
+            self.rows.entry(w).or_default().busy_cycles += take;
+            t += take;
+        }
+    }
+
+    /// Fold one event into its window.
+    pub fn feed(&mut self, cycle: u64, device: usize, kind: &EventKind) {
+        self.makespan = self.makespan.max(cycle);
+        match kind {
+            EventKind::Arrival { .. } => self.row(cycle).arrivals += 1,
+            EventKind::Reject { .. } => self.row(cycle).rejects += 1,
+            EventKind::Drop => self.row(cycle).drops += 1,
+            EventKind::Steal { .. } => self.row(cycle).steals += 1,
+            EventKind::Preempt => self.row(cycle).preemptions += 1,
+            EventKind::Complete { .. } => self.row(cycle).completions += 1,
+            EventKind::Serve { dur, .. } => self.add_busy(cycle, *dur),
+            EventKind::Prefill { tokens, dur, .. } => {
+                self.row(cycle).tokens += *tokens as u64;
+                self.add_busy(cycle, *dur);
+            }
+            EventKind::DecodeTick { batch, dur } => {
+                self.row(cycle).tokens += *batch as u64;
+                self.add_busy(cycle, *dur);
+            }
+            EventKind::MigrateOut { dur, .. } => {
+                self.row(cycle).migrations += 1;
+                self.add_busy(cycle, *dur);
+            }
+            EventKind::MigrateIn { dur, .. } => self.add_busy(cycle, *dur),
+            EventKind::QueueDepth { depth } => {
+                if device < self.cur_queue.len() {
+                    self.cur_queue[device] = *depth as u64;
+                }
+                let total: u64 = self.cur_queue.iter().sum();
+                self.row(cycle).queue_depth = Some(total);
+            }
+            EventKind::KvOccupancy { permille } => {
+                if device < self.cur_kv.len() {
+                    self.cur_kv[device] = *permille;
+                }
+                let mean = self.cur_kv.iter().sum::<u64>() / self.cur_kv.len() as u64;
+                self.row(cycle).kv_permille = Some(mean);
+            }
+            EventKind::Resume | EventKind::KvAdmit { .. } => {}
+        }
+    }
+
+    /// Extend the timeline to the run makespan so trailing idle
+    /// windows render.
+    pub fn finish(&mut self, makespan: u64) {
+        self.makespan = self.makespan.max(makespan);
+    }
+
+    /// Render one CSV row per window, gauges carried forward through
+    /// windows with no samples.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "window,start_cycle,arrivals,completions,tokens,steals,preemptions,\
+             migrations,drops,rejects,busy_permille,queue_depth,kv_occupancy_permille\n",
+        );
+        let last = self.makespan / self.window_cycles;
+        let span = self.window_cycles * self.n_devices as u64;
+        let empty = WindowRow::default();
+        let mut queue = 0u64;
+        let mut kv = 0u64;
+        for w in 0..=last {
+            let row = self.rows.get(&w).unwrap_or(&empty);
+            queue = row.queue_depth.unwrap_or(queue);
+            kv = row.kv_permille.unwrap_or(kv);
+            let busy_permille = row.busy_cycles.saturating_mul(1000) / span;
+            let _ = writeln!(
+                out,
+                "{w},{},{},{},{},{},{},{},{},{},{busy_permille},{queue},{kv}",
+                w * self.window_cycles,
+                row.arrivals,
+                row.completions,
+                row.tokens,
+                row.steals,
+                row.preemptions,
+                row.migrations,
+                row.drops,
+                row.rejects,
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_split_exactly_across_windows() {
+        let mut s = MetricsSeries::new(100, 2);
+        // 250-cycle span starting at 50: 50 in w0, 100 in w1, 100 in w2.
+        s.feed(50, 0, &EventKind::Serve { model: 0, batch: 1, dur: 250 });
+        s.finish(300);
+        let csv = s.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 4); // windows 0..=3
+        // busy_permille over window*devices = 100*2 = 200 cycles.
+        assert!(rows[0].ends_with(",250,0,0"), "w0: {}", rows[0]);
+        assert!(rows[1].ends_with(",500,0,0"), "w1: {}", rows[1]);
+        assert!(rows[2].ends_with(",500,0,0"), "w2: {}", rows[2]);
+        assert!(rows[3].ends_with(",0,0,0"), "w3: {}", rows[3]);
+    }
+
+    #[test]
+    fn gauges_carry_forward_through_empty_windows() {
+        let mut s = MetricsSeries::new(10, 1);
+        s.feed(5, 0, &EventKind::QueueDepth { depth: 3 });
+        s.feed(5, 0, &EventKind::KvOccupancy { permille: 700 });
+        s.finish(35);
+        let csv = s.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.ends_with(",3,700"), "row: {r}");
+        }
+    }
+
+    #[test]
+    fn counters_land_in_their_window() {
+        let mut s = MetricsSeries::new(100, 1);
+        s.feed(10, 0, &EventKind::Arrival { model: 0 });
+        s.feed(110, 0, &EventKind::DecodeTick { batch: 4, dur: 5 });
+        s.feed(120, 0, &EventKind::Complete { latency: 110 });
+        s.feed(250, 0, &EventKind::Preempt);
+        s.finish(250);
+        let csv = s.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].starts_with("0,0,1,0,0,"), "w0: {}", rows[0]);
+        assert!(rows[1].starts_with("1,100,0,1,4,"), "w1: {}", rows[1]);
+        assert!(rows[2].starts_with("2,200,0,0,0,0,1,"), "w2: {}", rows[2]);
+    }
+}

@@ -1,0 +1,341 @@
+//! Structured fleet events and the Chrome/Perfetto trace renderer.
+//!
+//! Every fleet-visible scheduling decision is recorded as one
+//! [`ObsEvent`] — `(ref_cycle, device, seq, kind)` — in deterministic
+//! simulation order. The renderer turns the event stream into Chrome
+//! trace-event JSON (the format `chrome://tracing` and
+//! <https://ui.perfetto.dev> both open): one track (`tid`) per device,
+//! duration events for work spans, instants for scheduling decisions,
+//! counters for queue depth / KV occupancy, and flow arrows (`ph:"s"` /
+//! `ph:"f"`) that follow a sequence from its source device to its
+//! destination across a live KV migration.
+//!
+//! The JSON is built by hand (integer-only, fixed field order, no
+//! serde, no maps) so a fixed seed renders to byte-identical output —
+//! the property `obs_props.rs` and the CI smoke run pin.
+
+/// Sentinel sequence id for device-scoped events (queue depth, steal,
+/// batch-level spans) that do not belong to one sequence.
+pub const NO_SEQ: u64 = u64::MAX;
+
+/// What happened. Payload fields are the numbers a profile reader
+/// actually wants next to the event; everything is in ref cycles.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Request entered a device queue (encoder dispatch or decode
+    /// placement).
+    Arrival { model: usize },
+    /// Decode placement refused the sequence (deterministic reason
+    /// string from the KV admission check).
+    Reject { reason: String },
+    /// Encoder batch served: `dur` is the charged span on the device
+    /// timeline (context reuse already applied).
+    Serve { model: usize, batch: usize, dur: u64 },
+    /// One request finished; `latency` is arrival-to-completion in ref
+    /// cycles.
+    Complete { latency: u64 },
+    /// Request dropped by a bounded queue on overflow.
+    Drop,
+    /// Thief device `device` pulled `requests` queued requests from
+    /// `victim`.
+    Steal { victim: usize, requests: usize },
+    /// Prefill work span: a whole-prompt job (`chunk: false`) or one
+    /// Sarathi chunk (`chunk: true`); `rows` is the row count fed to
+    /// the kernel, `tokens` the tokens emitted by this job.
+    Prefill { model: usize, batch: usize, rows: usize, chunk: bool, tokens: usize, dur: u64 },
+    /// One continuous-batching decode tick over `batch` running
+    /// sequences (one token each).
+    DecodeTick { batch: usize, dur: u64 },
+    /// Sequence preempted (KV pages shed) to make room.
+    Preempt,
+    /// Previously preempted sequence re-admitted.
+    Resume,
+    /// KV admission succeeded with a budget of `tokens` tokens.
+    KvAdmit { tokens: usize },
+    /// Migration source span: serializing + exporting `words` KV words
+    /// towards `dst`. Opens a flow arrow keyed by the sequence id.
+    MigrateOut { dst: usize, words: u64, dur: u64 },
+    /// Migration destination span: importing `words` KV words from
+    /// `src`. Closes the flow arrow.
+    MigrateIn { src: usize, words: u64, dur: u64 },
+    /// Queue-depth counter sample for the device.
+    QueueDepth { depth: usize },
+    /// KV occupancy counter sample (permille of capacity).
+    KvOccupancy { permille: u64 },
+}
+
+/// One structured fleet event on the reference-clock timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsEvent {
+    /// Ref-cycle timestamp (span start for duration events).
+    pub cycle: u64,
+    /// Device index (track).
+    pub device: usize,
+    /// Sequence / request id, or [`NO_SEQ`].
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_common(out: &mut String, name: &str, cat: &str, ph: char, cycle: u64, device: usize) {
+    out.push_str("{\"name\":\"");
+    out.push_str(name);
+    out.push_str("\",\"cat\":\"");
+    out.push_str(cat);
+    out.push_str("\",\"ph\":\"");
+    out.push(ph);
+    out.push_str("\",\"ts\":");
+    out.push_str(&cycle.to_string());
+    out.push_str(",\"pid\":0,\"tid\":");
+    out.push_str(&device.to_string());
+}
+
+/// Render the event stream as Chrome trace-event JSON. `device_names`
+/// label the per-device tracks (index = `tid`). Timestamps are ref
+/// cycles rendered as the format's microsecond field: 1 "µs" in the
+/// viewer = 1 ref cycle.
+pub fn render_chrome_json(events: &[ObsEvent], device_names: &[String]) -> String {
+    let mut out = String::with_capacity(256 + events.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    out.push_str(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\
+         \"args\":{\"name\":\"cgra-edge fleet\"}}",
+    );
+    for (d, name) in device_names.iter().enumerate() {
+        out.push_str(",\n{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":");
+        out.push_str(&d.to_string());
+        out.push_str(",\"args\":{\"name\":\"");
+        escape_json(name, &mut out);
+        out.push_str("\"}}");
+    }
+    for e in events {
+        out.push_str(",\n");
+        let seq = e.seq;
+        match &e.kind {
+            EventKind::Arrival { model } => {
+                push_common(&mut out, "arrival", "queue", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str(",\"model\":");
+                out.push_str(&model.to_string());
+                out.push_str("}}");
+            }
+            EventKind::Reject { reason } => {
+                push_common(&mut out, "reject", "queue", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str(",\"reason\":\"");
+                escape_json(reason, &mut out);
+                out.push_str("\"}}");
+            }
+            EventKind::Serve { model, batch, dur } => {
+                push_common(&mut out, "serve", "encoder", 'X', e.cycle, e.device);
+                out.push_str(",\"dur\":");
+                out.push_str(&dur.to_string());
+                out.push_str(",\"args\":{\"model\":");
+                out.push_str(&model.to_string());
+                out.push_str(",\"batch\":");
+                out.push_str(&batch.to_string());
+                out.push_str("}}");
+            }
+            EventKind::Complete { latency } => {
+                push_common(&mut out, "complete", "lifecycle", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str(",\"latency\":");
+                out.push_str(&latency.to_string());
+                out.push_str("}}");
+            }
+            EventKind::Drop => {
+                push_common(&mut out, "drop", "queue", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str("}}");
+            }
+            EventKind::Steal { victim, requests } => {
+                push_common(&mut out, "steal", "queue", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"victim\":");
+                out.push_str(&victim.to_string());
+                out.push_str(",\"requests\":");
+                out.push_str(&requests.to_string());
+                out.push_str("}}");
+            }
+            EventKind::Prefill { model, batch, rows, chunk, tokens, dur } => {
+                let name = if *chunk { "prefill_chunk" } else { "prefill" };
+                push_common(&mut out, name, "decode", 'X', e.cycle, e.device);
+                out.push_str(",\"dur\":");
+                out.push_str(&dur.to_string());
+                out.push_str(",\"args\":{\"model\":");
+                out.push_str(&model.to_string());
+                out.push_str(",\"batch\":");
+                out.push_str(&batch.to_string());
+                out.push_str(",\"rows\":");
+                out.push_str(&rows.to_string());
+                out.push_str(",\"tokens\":");
+                out.push_str(&tokens.to_string());
+                out.push_str("}}");
+            }
+            EventKind::DecodeTick { batch, dur } => {
+                push_common(&mut out, "decode_tick", "decode", 'X', e.cycle, e.device);
+                out.push_str(",\"dur\":");
+                out.push_str(&dur.to_string());
+                out.push_str(",\"args\":{\"batch\":");
+                out.push_str(&batch.to_string());
+                out.push_str("}}");
+            }
+            EventKind::Preempt => {
+                push_common(&mut out, "preempt", "kv", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str("}}");
+            }
+            EventKind::Resume => {
+                push_common(&mut out, "resume", "kv", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str("}}");
+            }
+            EventKind::KvAdmit { tokens } => {
+                push_common(&mut out, "kv_admit", "kv", 'i', e.cycle, e.device);
+                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str(",\"tokens\":");
+                out.push_str(&tokens.to_string());
+                out.push_str("}}");
+            }
+            EventKind::MigrateOut { dst, words, dur } => {
+                push_common(&mut out, "migrate_out", "migrate", 'X', e.cycle, e.device);
+                out.push_str(",\"dur\":");
+                out.push_str(&dur.to_string());
+                out.push_str(",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str(",\"dst\":");
+                out.push_str(&dst.to_string());
+                out.push_str(",\"words\":");
+                out.push_str(&words.to_string());
+                out.push_str("}},\n");
+                // Flow arrow: opens at the source span, keyed by seq id.
+                push_common(&mut out, "migrate", "migrate", 's', e.cycle, e.device);
+                out.push_str(",\"id\":");
+                out.push_str(&seq.to_string());
+                out.push('}');
+            }
+            EventKind::MigrateIn { src, words, dur } => {
+                push_common(&mut out, "migrate_in", "migrate", 'X', e.cycle, e.device);
+                out.push_str(",\"dur\":");
+                out.push_str(&dur.to_string());
+                out.push_str(",\"args\":{\"seq\":");
+                out.push_str(&seq.to_string());
+                out.push_str(",\"src\":");
+                out.push_str(&src.to_string());
+                out.push_str(",\"words\":");
+                out.push_str(&words.to_string());
+                out.push_str("}},\n");
+                // Close the flow arrow on the destination span.
+                push_common(&mut out, "migrate", "migrate", 'f', e.cycle, e.device);
+                out.push_str(",\"bp\":\"e\",\"id\":");
+                out.push_str(&seq.to_string());
+                out.push('}');
+            }
+            EventKind::QueueDepth { depth } => {
+                out.push_str("{\"name\":\"queue_depth[");
+                out.push_str(&e.device.to_string());
+                out.push_str("]\",\"ph\":\"C\",\"ts\":");
+                out.push_str(&e.cycle.to_string());
+                out.push_str(",\"pid\":0,\"args\":{\"depth\":");
+                out.push_str(&depth.to_string());
+                out.push_str("}}");
+            }
+            EventKind::KvOccupancy { permille } => {
+                out.push_str("{\"name\":\"kv_permille[");
+                out.push_str(&e.device.to_string());
+                out.push_str("]\",\"ph\":\"C\",\"ts\":");
+                out.push_str(&e.cycle.to_string());
+                out.push_str(",\"pid\":0,\"args\":{\"permille\":");
+                out.push_str(&permille.to_string());
+                out.push_str("}}");
+            }
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renderer_is_deterministic_and_emits_flows() {
+        let events = vec![
+            ObsEvent { cycle: 0, device: 0, seq: 7, kind: EventKind::Arrival { model: 1 } },
+            ObsEvent {
+                cycle: 5,
+                device: 0,
+                seq: 7,
+                kind: EventKind::MigrateOut { dst: 1, words: 64, dur: 8 },
+            },
+            ObsEvent {
+                cycle: 13,
+                device: 1,
+                seq: 7,
+                kind: EventKind::MigrateIn { src: 0, words: 64, dur: 4 },
+            },
+            ObsEvent { cycle: 20, device: 1, seq: 7, kind: EventKind::Complete { latency: 20 } },
+        ];
+        let names = vec!["dev0".to_string(), "dev1".to_string()];
+        let a = render_chrome_json(&events, &names);
+        let b = render_chrome_json(&events, &names);
+        assert_eq!(a, b);
+        assert!(a.contains("\"ph\":\"s\""), "missing flow start");
+        assert!(a.contains("\"ph\":\"f\""), "missing flow finish");
+        assert!(a.contains("\"thread_name\""));
+        // Every line set must be valid JSON as a whole: cheap structural
+        // check — balanced braces/brackets outside strings.
+        let mut depth = 0i64;
+        let mut in_str = false;
+        let mut esc = false;
+        for c in a.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match c {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced JSON");
+        assert!(!in_str);
+    }
+
+    #[test]
+    fn reason_strings_are_escaped() {
+        let events = vec![ObsEvent {
+            cycle: 1,
+            device: 0,
+            seq: 3,
+            kind: EventKind::Reject { reason: "needs \"quotes\"\n".to_string() },
+        }];
+        let json = render_chrome_json(&events, &["d".to_string()]);
+        assert!(json.contains("needs \\\"quotes\\\"\\n"));
+    }
+}

@@ -1,5 +1,12 @@
 //! Run traces: CSV emission of per-kernel statistics for offline
 //! inspection (the "waveform lite" of this simulator).
+//!
+//! Each row is tagged with a generation-lifecycle `phase` so one CSV
+//! covers the whole serving pipeline: `encoder` (batch encoder
+//! kernels), `prefill` (whole-prompt decode prefill), `chunk`
+//! (Sarathi-style chunked prefill jobs), `decode` (continuous-batching
+//! decode ticks). The legacy [`TraceLog::record`] keeps tagging rows
+//! as `encoder`.
 
 use crate::sim::Stats;
 use std::fmt::Write as _;
@@ -7,7 +14,7 @@ use std::fmt::Write as _;
 /// Accumulates one row per kernel / phase and renders CSV.
 #[derive(Debug, Default, Clone)]
 pub struct TraceLog {
-    rows: Vec<(String, Stats)>,
+    rows: Vec<(String, String, Stats)>,
 }
 
 impl TraceLog {
@@ -15,9 +22,21 @@ impl TraceLog {
         Self::default()
     }
 
-    /// Record a labelled stats snapshot (typically a per-kernel delta).
+    /// Record a labelled stats snapshot (typically a per-kernel delta)
+    /// under the default `encoder` phase.
     pub fn record(&mut self, label: impl Into<String>, stats: Stats) {
-        self.rows.push((label.into(), stats));
+        self.record_phase(label, "encoder", stats);
+    }
+
+    /// Record a labelled stats snapshot under an explicit lifecycle
+    /// phase (`encoder` / `prefill` / `chunk` / `decode`).
+    pub fn record_phase(
+        &mut self,
+        label: impl Into<String>,
+        phase: impl Into<String>,
+        stats: Stats,
+    ) {
+        self.rows.push((label.into(), phase.into(), stats));
     }
 
     /// Number of recorded rows.
@@ -33,14 +52,14 @@ impl TraceLog {
     /// Render as CSV (header + one row per record).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "label,cycles,config_cycles,macp,pe_stall_operand,pe_stall_output,\
+            "label,phase,cycles,config_cycles,macp,pe_stall_operand,pe_stall_output,\
              mob_load_words,mob_store_words,torus_hops,noc_router_traversals,\
              l1_reads,l1_writes,ext_reads,ext_writes,dma_words\n",
         );
-        for (label, s) in &self.rows {
+        for (label, phase, s) in &self.rows {
             let _ = writeln!(
                 out,
-                "{label},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{label},{phase},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.cycles,
                 s.config_cycles,
                 s.pe_macp,
@@ -72,8 +91,19 @@ mod tests {
         log.record("k1", Stats { cycles: 20, ..Default::default() });
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
-        assert!(csv.lines().nth(1).unwrap().starts_with("k0,10,"));
+        assert!(csv.lines().next().unwrap().starts_with("label,phase,cycles,"));
+        assert!(csv.lines().nth(1).unwrap().starts_with("k0,encoder,10,"));
         assert_eq!(log.len(), 2);
         assert!(!log.is_empty());
+    }
+
+    #[test]
+    fn explicit_phases_tag_rows() {
+        let mut log = TraceLog::new();
+        log.record_phase("tick", "decode", Stats { cycles: 7, ..Default::default() });
+        log.record_phase("chunk0", "chunk", Stats { cycles: 9, ..Default::default() });
+        let csv = log.to_csv();
+        assert!(csv.lines().nth(1).unwrap().starts_with("tick,decode,7,"));
+        assert!(csv.lines().nth(2).unwrap().starts_with("chunk0,chunk,9,"));
     }
 }

@@ -1,0 +1,411 @@
+//! Observability conformance (ISSUE 6): observation is strictly
+//! one-way. A fleet run with tracing, windowed series and kernel
+//! logging all armed must produce **bit-identical** metrics and
+//! completions to the same run with observation off; the rendered
+//! trace bytes must be a pure function of the seed; the log-bucket
+//! histogram must agree with the exact-sample oracle to its documented
+//! relative-error bound; and histogram merge must be associative and
+//! exact. The forced-migration smoke pins the flow-arrow contract the
+//! CI trace run relies on.
+
+use cgra_edge::cluster::{
+    ArrivalProcess, BatchPolicy, Discipline, FleetConfig, FleetSim, GenRequest, LatencyHistogram,
+    ModelClass, Placement, WorkloadGen,
+};
+use cgra_edge::config::DeviceClass;
+use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeSchedule};
+use cgra_edge::obs::{LogHistogram, ObsConfig};
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::prop::{prop_check, CaseResult, PropConfig};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::XformerConfig;
+
+fn gen_classes() -> Vec<ModelClass> {
+    vec![ModelClass {
+        name: "gen-tiny",
+        cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }]
+}
+
+fn gen_request(id: u64, prompt_rows: usize, max_new: usize, arrival: u64, seed: u64) -> GenRequest {
+    let mut rng = XorShiftRng::new(0x0B5E_6000 + seed);
+    let mut prompt = MatF32::zeros(prompt_rows, 16);
+    for v in &mut prompt.data {
+        *v = rng.normal() * 0.5;
+    }
+    GenRequest { id, model: 0, prompt, max_new_tokens: max_new, arrival_cycle: arrival }
+}
+
+/// Tentpole invariant, decode side: the same workload on the same
+/// fleet, observed vs unobserved, is **bit-identical** — metrics,
+/// completions, token data, migrations, everything. And two observed
+/// runs render byte-identical trace JSON and series CSV.
+#[test]
+fn prop_decode_tracing_on_off_is_bit_identical() {
+    prop_check(
+        "decode fleet: obs on == obs off, trace bytes deterministic",
+        PropConfig { cases: 3, base_seed: 0x0B5E_0001 },
+        |rng| {
+            let classes = gen_classes();
+            let rosters = ["4x4@100:2", "4x4@100:1,8x4@200:1"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 2)]).unwrap();
+            let schedule = if rng.range(0, 2) == 0 {
+                DecodeSchedule::PrefillFirst
+            } else {
+                DecodeSchedule::Chunked { chunk_tokens: rng.range(1, 4) }
+            };
+            let migrate = rng.range(0, 2) == 0;
+            let n = rng.range(3, 6);
+            let requests: Vec<GenRequest> = (0..n)
+                .map(|i| {
+                    let prompt = rng.range(1, 5);
+                    let max_new = rng.range(1, 8 - prompt + 1);
+                    let arrival = (i as u64) * rng.below(30_000);
+                    gen_request(i as u64, prompt, max_new, arrival, rng.next_u64())
+                })
+                .collect();
+            let window = 10_000 + rng.below(90_000);
+            let mk = |obs: Option<ObsConfig>| {
+                let mut fleet = DecodeFleetSim::new(
+                    DecodeFleetConfig {
+                        roster: roster.clone(),
+                        ref_mhz: 100,
+                        max_running: 2,
+                        schedule,
+                        migrate,
+                        ..Default::default()
+                    },
+                    &classes,
+                    42,
+                );
+                if let Some(cfg) = &obs {
+                    fleet.enable_obs(cfg);
+                }
+                let (m, done) = fleet.run(requests.clone()).unwrap();
+                let trace = fleet.obs().trace_json();
+                let series = fleet.obs().series_csv();
+                (m, done, trace, series)
+            };
+            let (m_off, d_off, t_off, s_off) = mk(None);
+            let (m_on, d_on, t_on, s_on) = mk(Some(ObsConfig::full(window)));
+            if t_off.is_some() || s_off.is_some() {
+                return CaseResult::Fail("disabled observer rendered output".into());
+            }
+            if m_off != m_on {
+                return CaseResult::Fail(format!(
+                    "metrics perturbed by observation on {roster:?} {schedule:?}"
+                ));
+            }
+            if d_off != d_on {
+                return CaseResult::Fail(
+                    "completions (token data included) perturbed by observation".into(),
+                );
+            }
+            let trace = t_on.expect("tracing was armed");
+            if trace.is_empty() || !trace.contains("\"traceEvents\"") {
+                return CaseResult::Fail("armed tracer rendered no trace".into());
+            }
+            // Byte determinism: an identical third run renders the
+            // identical trace and series.
+            let (_, _, t2, s2) = mk(Some(ObsConfig::full(window)));
+            if t2.as_deref() != Some(trace.as_str()) {
+                return CaseResult::Fail("trace bytes differ between identical runs".into());
+            }
+            if s2 != s_on {
+                return CaseResult::Fail("series CSV differs between identical runs".into());
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// Tentpole invariant, encoder side: FleetSim with batching, stealing
+/// and random policies is bit-identical observed vs unobserved, and
+/// the observed run's trace is deterministic.
+#[test]
+fn prop_encoder_fleet_tracing_on_off_is_bit_identical() {
+    prop_check(
+        "encoder fleet: obs on == obs off",
+        PropConfig { cases: 3, base_seed: 0x0B5E_0002 },
+        |rng| {
+            let classes = ModelClass::edge_mix();
+            let rosters = ["4x4@100:3", "4x4@100:2,8x4@200:1"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 2)]).unwrap();
+            let policy = [
+                Placement::RoundRobin,
+                Placement::LeastLoaded,
+                Placement::ShortestExpectedJob,
+            ][rng.range(0, 3)];
+            let batch = rng.range(1, 4);
+            let steal = rng.range(0, 2) == 0;
+            let seed = rng.next_u64();
+            let mut gen = WorkloadGen::new(
+                ArrivalProcess::Poisson { rate_rps: 300.0 },
+                classes.clone(),
+                100.0,
+                seed,
+            );
+            let requests = gen.generate(rng.range(8, 20));
+            let window = 10_000 + rng.below(90_000);
+            let mk = |obs: Option<ObsConfig>| {
+                let mut fleet = FleetSim::new(
+                    FleetConfig {
+                        roster: roster.clone(),
+                        policy,
+                        discipline: Discipline::Fifo,
+                        batch: BatchPolicy::greedy(batch),
+                        steal,
+                        ref_mhz: 100,
+                        ..Default::default()
+                    },
+                    &classes,
+                    42,
+                );
+                if let Some(cfg) = &obs {
+                    fleet.enable_obs(cfg);
+                }
+                let m = fleet.run(requests.clone()).unwrap();
+                (m, fleet.obs().trace_json())
+            };
+            let (m_off, t_off) = mk(None);
+            let (m_on, t_on) = mk(Some(ObsConfig::full(window)));
+            if t_off.is_some() {
+                return CaseResult::Fail("disabled observer rendered a trace".into());
+            }
+            if m_off != m_on {
+                return CaseResult::Fail(format!(
+                    "fleet metrics perturbed by observation ({policy:?}, batch {batch})"
+                ));
+            }
+            let (_, t2) = mk(Some(ObsConfig::full(window)));
+            if t_on != t2 {
+                return CaseResult::Fail("encoder trace bytes not deterministic".into());
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// The CI smoke's contract: pinning every placement to device 0 of a
+/// two-device fleet with migration on forces the idle twin to pull
+/// work, and the trace must carry the migration as spans plus a
+/// matched flow arrow (`ph:"s"` at the source, `ph:"f"` at the
+/// destination) keyed by the sequence id — while staying bit-identical
+/// to the unobserved run.
+#[test]
+fn forced_migration_emits_flow_events_and_stays_bit_identical() {
+    let classes = gen_classes();
+    let mk = |obs: bool| {
+        let mut fleet = DecodeFleetSim::new(
+            DecodeFleetConfig {
+                roster: vec![DeviceClass::paper(); 2],
+                ref_mhz: 100,
+                max_running: 4,
+                schedule: DecodeSchedule::Chunked { chunk_tokens: 2 },
+                migrate: true,
+                pin_device: Some(0),
+                ..Default::default()
+            },
+            &classes,
+            42,
+        );
+        if obs {
+            fleet.enable_obs(&ObsConfig::full(10_000));
+        }
+        let requests: Vec<GenRequest> = (0..4).map(|i| gen_request(i, 3, 6, 0, i)).collect();
+        let (m, done) = fleet.run(requests).unwrap();
+        (m, done, fleet.obs().trace_json())
+    };
+    let (m_off, d_off, _) = mk(false);
+    let (m_on, d_on, trace) = mk(true);
+    assert_eq!(m_off, m_on, "observation perturbed the pinned migrating run");
+    assert_eq!(d_off, d_on);
+    assert_eq!(m_on.completed, 4);
+    assert!(m_on.migrations > 0, "pinning to device 0 must force migration to the idle twin");
+    let json = trace.expect("tracing was armed");
+    assert!(json.contains("\"migrate_out\""), "missing migration source span");
+    assert!(json.contains("\"migrate_in\""), "missing migration destination span");
+    assert!(json.contains("\"ph\":\"s\""), "missing flow-arrow start");
+    assert!(json.contains("\"bp\":\"e\",\"id\":"), "missing flow-arrow finish");
+    // One flow start and one finish per migration, keyed by seq id.
+    let starts = json.matches("\"ph\":\"s\"").count();
+    let finishes = json.matches("\"ph\":\"f\"").count();
+    assert_eq!(starts as u64, m_on.migrations);
+    assert_eq!(finishes as u64, m_on.migrations);
+}
+
+/// Percentile error bound: against the exact-sample oracle
+/// ([`LatencyHistogram`]), every log-bucket percentile is within the
+/// documented relative error (1/512 with 8 sub-bucket bits), across
+/// magnitudes from sub-256 exact territory to 2^40.
+#[test]
+fn prop_log_histogram_percentiles_within_error_bound() {
+    prop_check(
+        "LogHistogram percentile vs exact oracle",
+        PropConfig { cases: 8, base_seed: 0x0B5E_0003 },
+        |rng| {
+            let mut h = LogHistogram::new();
+            let mut exact = LatencyHistogram::default();
+            let n = rng.range(1, 400);
+            for _ in 0..n {
+                let bits = rng.range(1, 41) as u32;
+                let v = 1 + rng.below(1u64 << bits);
+                h.record(v);
+                exact.record(v);
+            }
+            for q in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                let got = h.percentile(q) as f64;
+                let want = exact.percentile(q) as f64;
+                let tol = want * LogHistogram::MAX_RELATIVE_ERROR + 1.0;
+                if (got - want).abs() > tol {
+                    return CaseResult::Fail(format!(
+                        "p{q}: {got} vs exact {want} (n={n}, tol {tol:.2})"
+                    ));
+                }
+            }
+            if h.count() != exact.count() || h.max() != exact.max() {
+                return CaseResult::Fail("count/max must be exact, not approximate".into());
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// Merge is exact and associative: however a sample stream is split
+/// across histograms, merging reproduces the single-histogram state
+/// bit for bit — the property that makes per-device histograms safe
+/// to aggregate into fleet totals.
+#[test]
+fn prop_log_histogram_merge_is_associative_and_exact() {
+    prop_check(
+        "LogHistogram merge associativity",
+        PropConfig { cases: 8, base_seed: 0x0B5E_0004 },
+        |rng| {
+            let n = rng.range(3, 300);
+            let samples: Vec<u64> =
+                (0..n).map(|_| 1 + rng.below(1u64 << rng.range(1, 36) as u32)).collect();
+            let mut bulk = LogHistogram::new();
+            let mut parts = [LogHistogram::new(), LogHistogram::new(), LogHistogram::new()];
+            for (i, &v) in samples.iter().enumerate() {
+                bulk.record(v);
+                parts[i % 3].record(v);
+            }
+            // (a ⊕ b) ⊕ c
+            let mut left = parts[0].clone();
+            left.merge(&parts[1]);
+            left.merge(&parts[2]);
+            // a ⊕ (b ⊕ c)
+            let mut bc = parts[1].clone();
+            bc.merge(&parts[2]);
+            let mut right = parts[0].clone();
+            right.merge(&bc);
+            if left != right {
+                return CaseResult::Fail("merge is not associative".into());
+            }
+            if left != bulk {
+                return CaseResult::Fail("merged parts differ from the bulk histogram".into());
+            }
+            if left.count() != n || left.max() != samples.iter().copied().max().unwrap() {
+                return CaseResult::Fail("merge lost samples".into());
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// Windowed series: deterministic bytes, stable schema, one row per
+/// window from cycle 0 through the makespan.
+#[test]
+fn series_csv_schema_and_row_count() {
+    let classes = gen_classes();
+    let window = 25_000u64;
+    let mut fleet = DecodeFleetSim::new(
+        DecodeFleetConfig {
+            roster: vec![DeviceClass::paper(); 2],
+            ref_mhz: 100,
+            max_running: 2,
+            ..Default::default()
+        },
+        &classes,
+        42,
+    );
+    fleet.enable_obs(&ObsConfig { trace: false, window_cycles: Some(window), kernels: false });
+    let requests: Vec<GenRequest> = (0..4).map(|i| gen_request(i, 2, 3, i * 10_000, i)).collect();
+    let (m, _) = fleet.run(requests).unwrap();
+    let csv = fleet.obs().series_csv().expect("series was armed");
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "window,start_cycle,arrivals,completions,tokens,steals,preemptions,\
+         migrations,drops,rejects,busy_permille,queue_depth,kv_occupancy_permille",
+    );
+    let rows: Vec<&str> = lines.collect();
+    assert_eq!(rows.len() as u64, m.makespan_cycles / window + 1);
+    let arrivals: u64 =
+        rows.iter().map(|r| r.split(',').nth(2).unwrap().parse::<u64>().unwrap()).sum();
+    let completions: u64 =
+        rows.iter().map(|r| r.split(',').nth(3).unwrap().parse::<u64>().unwrap()).sum();
+    let tokens: u64 =
+        rows.iter().map(|r| r.split(',').nth(4).unwrap().parse::<u64>().unwrap()).sum();
+    assert_eq!(arrivals, 4, "every placement lands in exactly one window");
+    assert_eq!(completions, m.completed);
+    assert_eq!(tokens, m.tokens, "windowed token counts must sum to the run total");
+}
+
+/// Kernel CSV rides along: decode runs tag rows with their lifecycle
+/// phase, and the CSV is deterministic.
+#[test]
+fn kernel_csv_carries_decode_phases() {
+    let classes = gen_classes();
+    let mk = || {
+        let mut fleet = DecodeFleetSim::new(
+            DecodeFleetConfig {
+                roster: vec![DeviceClass::paper()],
+                ref_mhz: 100,
+                max_running: 2,
+                schedule: DecodeSchedule::Chunked { chunk_tokens: 2 },
+                ..Default::default()
+            },
+            &classes,
+            42,
+        );
+        fleet.enable_obs(&ObsConfig { trace: false, window_cycles: None, kernels: true });
+        let requests: Vec<GenRequest> = (0..2).map(|i| gen_request(i, 4, 3, 0, i)).collect();
+        fleet.run(requests).unwrap();
+        fleet.obs().kernel_csv().expect("kernel log was armed")
+    };
+    let csv = mk();
+    assert!(csv.starts_with("label,phase,cycles,"));
+    assert!(csv.contains(",chunk,"), "chunked prefill must tag rows with phase=chunk");
+    assert!(csv.contains(",decode,"), "decode ticks must tag rows with phase=decode");
+    assert_eq!(csv, mk(), "kernel CSV must be deterministic");
+}
+
+/// With the `exact-hist` feature the histogram carries an exact shadow
+/// whose percentiles must agree with the independent exact oracle —
+/// and `percentile()` itself must still answer from buckets (within
+/// the bound), proving the shadow never leaks into the fast path.
+#[cfg(feature = "exact-hist")]
+#[test]
+fn exact_mode_shadow_agrees_with_oracle() {
+    let mut rng = XorShiftRng::new(0x0B5E_0005);
+    let mut h = LogHistogram::new();
+    let mut oracle = LatencyHistogram::default();
+    for _ in 0..500 {
+        let v = 1 + rng.below(1 << 30);
+        h.record(v);
+        oracle.record(v);
+    }
+    for q in [10.0, 50.0, 95.0, 99.0] {
+        assert_eq!(h.exact_percentile(q), oracle.percentile(q), "shadow diverged at p{q}");
+        let approx = h.percentile(q) as f64;
+        let want = oracle.percentile(q) as f64;
+        assert!(
+            (approx - want).abs() <= want * LogHistogram::MAX_RELATIVE_ERROR + 1.0,
+            "fast path out of bound at p{q}: {approx} vs {want}"
+        );
+    }
+}
