@@ -1,0 +1,274 @@
+//! BENCH_simspeed — fleet-simulator speed self-benchmark (ISSUE 7).
+//!
+//! Measures sim-events/sec of the calendar-driven event loops against
+//! their retained pre-refactor reference loops (`run_reference`, the
+//! conformance oracle `rust/tests/calendar_props.rs` pins bit-exact)
+//! at 4-, 64- and 256-device rosters, encoder and decode workloads,
+//! all in timing-only mode so the measurement is the *loop*, not the
+//! kernels. Requests carry no payload and arrivals are calibrated to
+//! ~90% fleet utilization from the analytic cycle model, the regime
+//! where wake-up finding dominates. The acceptance bar from ISSUE 7 is
+//! **≥ 2× events/sec at the 64-device encoder point**; the bench
+//! asserts it and writes every point to `BENCH_simspeed.json`.
+
+use cgra_edge::bench_util::{f1, f2, f3, time_median, Table};
+use cgra_edge::cluster::{
+    analytic_encoder_ref_cycles, BatchPolicy, Discipline, FleetConfig, FleetRequest, FleetSim,
+    GenRequest, ModelClass, Placement,
+};
+use cgra_edge::config::DeviceClass;
+use cgra_edge::decode::{
+    analytic_decode_token_ref_cycles, DecodeFleetConfig, DecodeFleetSim, DecodeSchedule,
+};
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::XformerConfig;
+
+const REF_MHZ: u64 = 100;
+const ENC_REQUESTS: usize = 100_000;
+const DEC_REQUESTS: usize = 20_000;
+const DEVICE_POINTS: [usize; 3] = [4, 64, 256];
+const ASSERTED_DEVICES: usize = 64;
+const SPEEDUP_FLOOR: f64 = 2.0;
+
+/// Payload-free encoder requests (timing-only mode never reads the
+/// input), exponential inter-arrivals with `mean_gap` ref cycles.
+fn encoder_requests(n: usize, mean_gap: f64, seed: u64) -> Vec<FleetRequest> {
+    let mut rng = XorShiftRng::new(seed);
+    let mut at = 0u64;
+    (0..n)
+        .map(|i| {
+            at += rng.exp(1.0 / mean_gap) as u64;
+            FleetRequest {
+                id: i as u64,
+                model: 0,
+                input: MatF32::zeros(1, 1),
+                arrival_cycle: at,
+                priority: 0,
+                deadline_cycle: None,
+            }
+        })
+        .collect()
+}
+
+/// Tiny-prompt generation requests (zeros are fine: timing-only decode
+/// synthesizes outputs), exponential inter-arrivals.
+fn decode_requests(n: usize, d_model: usize, mean_gap: f64, seed: u64) -> Vec<GenRequest> {
+    let mut rng = XorShiftRng::new(seed);
+    let mut at = 0u64;
+    (0..n)
+        .map(|i| {
+            at += rng.exp(1.0 / mean_gap) as u64;
+            GenRequest {
+                id: i as u64,
+                model: 0,
+                prompt: MatF32::zeros(2, d_model),
+                max_new_tokens: 4,
+                arrival_cycle: at,
+            }
+        })
+        .collect()
+}
+
+struct Point {
+    workload: &'static str,
+    devices: usize,
+    requests: usize,
+    events: u64,
+    t_ref: f64,
+    t_cal: f64,
+}
+
+impl Point {
+    fn speedup(&self) -> f64 {
+        self.t_ref / self.t_cal
+    }
+
+    fn events_per_s(&self, t: f64) -> f64 {
+        self.events as f64 / t
+    }
+}
+
+/// One encoder point: both arms on identical inputs, equality-checked,
+/// then timed. Events = arrivals + executed jobs + steals + drops.
+fn encoder_point(devices: usize, reps: usize) -> Point {
+    let classes = vec![ModelClass::tiny()];
+    let roster = vec![DeviceClass::paper(); devices];
+    let per_req = analytic_encoder_ref_cycles(&roster[0], &classes[0].cfg, REF_MHZ) as f64;
+    // ~90% utilization: the fleet clears one request per per_req/D
+    // cycles; arrivals land a touch slower so queues stay shallow and
+    // every arrival is its own wake-up (the loop-bound regime).
+    let mean_gap = per_req / (0.9 * devices as f64);
+    let requests = encoder_requests(ENC_REQUESTS, mean_gap, 0x51_5EED ^ devices as u64);
+    let cfg = FleetConfig {
+        roster,
+        policy: Placement::RoundRobin,
+        discipline: Discipline::Fifo,
+        batch: BatchPolicy {
+            max_batch: 8,
+            max_wait_cycles: (per_req / 2.0) as u64,
+            latency_aware: false,
+        },
+        steal: false,
+        ref_mhz: REF_MHZ,
+        timing_only: true,
+        ..Default::default()
+    };
+    let run_cal = || {
+        let mut fleet = FleetSim::new(cfg.clone(), &classes, 42);
+        fleet.run(requests.clone()).expect("bench workload serves")
+    };
+    let run_ref = || {
+        let mut fleet = FleetSim::new(cfg.clone(), &classes, 42);
+        fleet.run_reference(requests.clone()).expect("bench workload serves")
+    };
+    let m_cal = run_cal();
+    let m_ref = run_ref();
+    assert_eq!(m_cal, m_ref, "calendar loop diverged from the reference at {devices} devices");
+    let events = ENC_REQUESTS as u64
+        + m_cal.batch_occupancy.count() as u64
+        + m_cal.steals
+        + m_cal.dropped;
+    let warmup = usize::from(reps > 1);
+    let (t_cal, _) = time_median(warmup, reps, || {
+        run_cal();
+    });
+    let (t_ref, _) = time_median(warmup, reps, || {
+        run_ref();
+    });
+    Point { workload: "encoder", devices, requests: ENC_REQUESTS, events, t_ref, t_cal }
+}
+
+/// One decode point: chunked prefill, both arms equality-checked,
+/// then timed. Migration stays off here — its planner is an O(D²)
+/// pass per iteration in *both* arms, which would swamp the loop
+/// measurement (the conformance suite still pins migrate-on runs).
+/// Events = arrivals + prefill jobs + decode ticks + migrations.
+fn decode_point(devices: usize, reps: usize) -> Point {
+    let classes = vec![ModelClass {
+        name: "gen-bench",
+        cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }];
+    let roster = vec![DeviceClass::paper(); devices];
+    let prefill_row =
+        analytic_encoder_ref_cycles(&roster[0], &classes[0].cfg, REF_MHZ) / 8;
+    let token = analytic_decode_token_ref_cycles(&roster[0], &classes[0].cfg, REF_MHZ);
+    let per_req = (prefill_row * 2 + token * 3) as f64;
+    let mean_gap = per_req / (0.9 * devices as f64);
+    let requests = decode_requests(DEC_REQUESTS, 16, mean_gap, 0xDE_C0DE ^ devices as u64);
+    let cfg = DecodeFleetConfig {
+        roster,
+        ref_mhz: REF_MHZ,
+        max_running: 4,
+        schedule: DecodeSchedule::Chunked { chunk_tokens: 4 },
+        migrate: false,
+        timing_only: true,
+        ..Default::default()
+    };
+    let run_cal = || {
+        let mut fleet = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+        fleet.run(requests.clone()).expect("bench workload serves")
+    };
+    let run_ref = || {
+        let mut fleet = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+        fleet.run_reference(requests.clone()).expect("bench workload serves")
+    };
+    let (m_cal, d_cal) = run_cal();
+    let (m_ref, d_ref) = run_ref();
+    assert_eq!(m_cal, m_ref, "decode calendar diverged from the reference at {devices} devices");
+    assert_eq!(d_cal, d_ref);
+    let events =
+        DEC_REQUESTS as u64 + m_cal.prefill_jobs + m_cal.decode_ticks + m_cal.migrations;
+    let warmup = usize::from(reps > 1);
+    let (t_cal, _) = time_median(warmup, reps, || {
+        run_cal();
+    });
+    let (t_ref, _) = time_median(warmup, reps, || {
+        run_ref();
+    });
+    Point { workload: "decode", devices, requests: DEC_REQUESTS, events, t_ref, t_cal }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "BENCH_simspeed: calendar event loop vs reference O(D) scan, timing-only, \
+         {ENC_REQUESTS} encoder + {DEC_REQUESTS} decode requests per point\n"
+    );
+
+    let mut points: Vec<Point> = Vec::new();
+    for &devices in &DEVICE_POINTS {
+        let reps = if devices >= 256 { 1 } else { 3 };
+        points.push(encoder_point(devices, reps));
+        points.push(decode_point(devices, reps));
+    }
+
+    let mut table = Table::new(&[
+        "workload",
+        "devices",
+        "events",
+        "ref s",
+        "cal s",
+        "ref Mev/s",
+        "cal Mev/s",
+        "speedup",
+    ]);
+    for p in &points {
+        table.row(&[
+            p.workload.into(),
+            p.devices.to_string(),
+            p.events.to_string(),
+            f3(p.t_ref),
+            f3(p.t_cal),
+            f2(p.events_per_s(p.t_ref) / 1e6),
+            f2(p.events_per_s(p.t_cal) / 1e6),
+            f1(p.speedup()),
+        ]);
+    }
+    table.print();
+
+    let mut json = String::from("{\n  \"bench\": \"sim_speed\",\n  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"devices\": {}, \"requests\": {}, \
+             \"events\": {}, \"median_s_ref\": {:.6}, \"median_s_cal\": {:.6}, \
+             \"events_per_s_ref\": {:.0}, \"events_per_s_cal\": {:.0}, \
+             \"speedup\": {:.3}}}{}\n",
+            p.workload,
+            p.devices,
+            p.requests,
+            p.events,
+            p.t_ref,
+            p.t_cal,
+            p.events_per_s(p.t_ref),
+            p.events_per_s(p.t_cal),
+            p.speedup(),
+            if i + 1 == points.len() { "" } else { "," },
+        ));
+    }
+    let asserted = points
+        .iter()
+        .find(|p| p.workload == "encoder" && p.devices == ASSERTED_DEVICES)
+        .expect("asserted point measured");
+    json.push_str(&format!(
+        "  ],\n  \"asserted\": {{\"workload\": \"encoder\", \"devices\": {ASSERTED_DEVICES}, \
+         \"floor\": {SPEEDUP_FLOOR}, \"speedup\": {:.3}}}\n}}\n",
+        asserted.speedup(),
+    ));
+    std::fs::write("BENCH_simspeed.json", &json)?;
+    println!("\nwrote BENCH_simspeed.json");
+
+    assert!(
+        asserted.speedup() >= SPEEDUP_FLOOR,
+        "calendar loop speedup {:.2}x at {ASSERTED_DEVICES} devices is under the \
+         {SPEEDUP_FLOOR}x floor",
+        asserted.speedup()
+    );
+    println!(
+        "asserted: encoder @ {ASSERTED_DEVICES} devices {:.2}x >= {SPEEDUP_FLOOR}x",
+        asserted.speedup()
+    );
+    Ok(())
+}

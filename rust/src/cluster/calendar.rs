@@ -1,0 +1,139 @@
+//! Indexed wake-up calendar for the fleet event loops.
+//!
+//! Both fleet simulators ([`super::fleet::FleetSim`] and
+//! [`crate::decode::DecodeFleetSim`]) used to find the next event by
+//! re-scanning every device on every loop iteration — O(D) per event,
+//! superlinear wall-time growth with roster size. [`WakeCalendar`] is
+//! the replacement: a binary min-heap of `(reference cycle, device)`
+//! wake-ups with **lazy invalidation**.
+//!
+//! ## Lazy invalidation
+//!
+//! The loops never delete entries. A device's wake-up is pushed at
+//! every busy transition (`free_at` moves forward) and whenever a
+//! condition that gates its next service appears (work queued behind a
+//! busy device). When the loop asks for the earliest event it passes a
+//! validity predicate; stale entries — superseded `free_at` stamps, or
+//! devices whose queue has since drained — are popped and discarded on
+//! the way to the first valid one. This is sound because:
+//!
+//! - `free_at` is monotone non-decreasing, so a stale stamp is always
+//!   *earlier* than the device's true wake-up and a fresh entry has
+//!   already been pushed at the transition that superseded it;
+//! - every condition that can make a discarded device relevant again
+//!   (new work queued, a new busy transition) performs its own push at
+//!   the state change.
+//!
+//! Each entry is pushed once and popped once, so the amortized cost per
+//! event is O(log D) instead of O(D).
+//!
+//! ## Determinism
+//!
+//! The calendar only ever answers "what is the minimum wake-up
+//! *time*". Which devices act at that time — and in what order — is
+//! decided by the loops themselves, which always process same-cycle
+//! work in ascending device index (see the `ready` sets in both
+//! `run` loops). Heap internals therefore never leak into scheduling
+//! decisions, which is what keeps the calendar loops bit-identical to
+//! the reference scan loops (`run_reference`), the conformance oracle
+//! pinned by `tests/calendar_props.rs`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A binary min-heap of `(wake-up cycle, device)` entries with lazy
+/// invalidation (see the module docs for the soundness argument).
+#[derive(Debug, Default)]
+pub struct WakeCalendar {
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl WakeCalendar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule a wake-up for `device` at cycle `at`. Duplicates are
+    /// fine — stale ones are discarded at query time.
+    pub fn push(&mut self, at: u64, device: usize) {
+        self.heap.push(Reverse((at, device)));
+    }
+
+    /// The earliest entry satisfying `valid`, discarding stale entries
+    /// on the way. The returned entry stays in the heap (it is still
+    /// the next wake-up); `None` when no valid entry remains.
+    pub fn earliest_valid(
+        &mut self,
+        mut valid: impl FnMut(u64, usize) -> bool,
+    ) -> Option<(u64, usize)> {
+        while let Some(&Reverse((at, d))) = self.heap.peek() {
+            if valid(at, d) {
+                return Some((at, d));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Pop every entry with a stamp ≤ `t`, feeding each to `f` (valid
+    /// and stale alike — the caller re-checks device state, which is
+    /// cheaper than a predicate here and keeps the hot loop branchless).
+    pub fn pop_until(&mut self, t: u64, mut f: impl FnMut(u64, usize)) {
+        while let Some(&Reverse((at, d))) = self.heap.peek() {
+            if at > t {
+                break;
+            }
+            self.heap.pop();
+            f(at, d);
+        }
+    }
+
+    /// Entries currently in the heap (valid + stale).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_valid_skips_stale_entries() {
+        let mut cal = WakeCalendar::new();
+        cal.push(10, 0);
+        cal.push(5, 1); // stale: device 1's true wake-up is 20
+        cal.push(20, 1);
+        let fresh = |at: u64, d: usize| if d == 1 { at == 20 } else { true };
+        assert_eq!(cal.earliest_valid(fresh), Some((10, 0)));
+        // The stale (5, 1) entry was discarded, the rest stayed.
+        assert_eq!(cal.len(), 2);
+        assert_eq!(cal.earliest_valid(|_, _| true), Some((10, 0)));
+    }
+
+    #[test]
+    fn pop_until_drains_in_stamp_order() {
+        let mut cal = WakeCalendar::new();
+        for (at, d) in [(30u64, 2usize), (10, 0), (20, 1), (10, 3)] {
+            cal.push(at, d);
+        }
+        let mut seen = Vec::new();
+        cal.pop_until(20, |at, d| seen.push((at, d)));
+        assert_eq!(seen, vec![(10, 0), (10, 3), (20, 1)]);
+        assert_eq!(cal.len(), 1);
+        cal.pop_until(100, |at, d| seen.push((at, d)));
+        assert_eq!(seen.last(), Some(&(30, 2)));
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn empty_calendar_answers_none() {
+        let mut cal = WakeCalendar::new();
+        assert_eq!(cal.earliest_valid(|_, _| true), None);
+        cal.pop_until(u64::MAX, |_, _| panic!("nothing to pop"));
+    }
+}

@@ -144,6 +144,13 @@ pub struct Dispatcher {
     rr_next: usize,
     /// Model class → device sticky route (ModelAffinity placement).
     affinity: BTreeMap<usize, usize>,
+    /// Incrementally maintained total of all queue depths, so
+    /// [`Self::total_queued`] is O(1) in the event-loop hot path
+    /// instead of re-summing every queue per iteration.
+    total: usize,
+    /// Reusable drain buffer for the FIFO batch pop (swap/drain instead
+    /// of per-element `VecDeque::remove`); always empty between calls.
+    scratch: VecDeque<FleetRequest>,
 }
 
 impl Dispatcher {
@@ -155,6 +162,8 @@ impl Dispatcher {
             queues: (0..devices).map(|_| VecDeque::new()).collect(),
             rr_next: 0,
             affinity: BTreeMap::new(),
+            total: 0,
+            scratch: VecDeque::new(),
         }
     }
 
@@ -163,35 +172,37 @@ impl Dispatcher {
         self.queues[d].len()
     }
 
-    /// Total queued requests across the fleet.
+    /// Total queued requests across the fleet (O(1): maintained on
+    /// every push and pop).
     pub fn total_queued(&self) -> usize {
-        self.queues.iter().map(VecDeque::len).sum()
+        self.total
     }
 
     /// The least-loaded device (queued + in service), ties to the
     /// lowest index — also the affinity policy's first-contact choice.
-    fn least_loaded(&self, now: u64, free_at: &[u64]) -> usize {
+    fn least_loaded(&self, now: u64, free_at: impl Fn(usize) -> u64) -> usize {
         (0..self.queues.len())
-            .min_by_key(|&d| self.queues[d].len() + usize::from(free_at[d] > now))
+            .min_by_key(|&d| self.queues[d].len() + usize::from(free_at(d) > now))
             .expect("non-empty fleet")
     }
 
     /// Place `req` on a device queue and return the chosen device.
     ///
-    /// `free_at[d]` is device `d`'s earliest idle cycle; `est(model,
-    /// device)` returns the expected service cycles of one request of
-    /// that model class *on that device* (the per-`(model, class)`
-    /// cycle-cost cache lookup — on a heterogeneous fleet the same
-    /// model costs different cycles per class).
+    /// `free_at(d)` is device `d`'s earliest idle cycle (an accessor
+    /// rather than a slice, so the caller never materializes a
+    /// per-arrival snapshot); `est(model, device)` returns the expected
+    /// service cycles of one request of that model class *on that
+    /// device* (the per-`(model, class)` cycle-cost cache lookup — on a
+    /// heterogeneous fleet the same model costs different cycles per
+    /// class).
     pub fn dispatch(
         &mut self,
         req: FleetRequest,
         now: u64,
-        free_at: &[u64],
+        free_at: impl Fn(usize) -> u64,
         est: impl Fn(usize, usize) -> u64,
     ) -> usize {
         let n = self.queues.len();
-        debug_assert_eq!(free_at.len(), n);
         let dev = match self.policy {
             Placement::RoundRobin => {
                 let d = self.rr_next % n;
@@ -202,7 +213,7 @@ impl Dispatcher {
             Placement::ShortestExpectedJob => (0..n)
                 .min_by_key(|&d| {
                     let backlog: u64 = self.queues[d].iter().map(|r| est(r.model, d)).sum();
-                    free_at[d].max(now) + backlog + est(req.model, d)
+                    free_at(d).max(now) + backlog + est(req.model, d)
                 })
                 .expect("non-empty fleet"),
             Placement::ModelAffinity => match self.affinity.get(&req.model) {
@@ -215,6 +226,7 @@ impl Dispatcher {
             },
         };
         self.queues[dev].push_back(req);
+        self.total += 1;
         dev
     }
 
@@ -268,7 +280,14 @@ impl Dispatcher {
     ) -> Option<FleetRequest> {
         loop {
             let idx = Self::select(&self.queues[d], self.discipline, group, &key_of)?;
-            let req = self.queues[d].remove(idx).expect("index in range");
+            // The discipline head is the queue front for FIFO (and
+            // whenever arrival order wins): pop instead of shifting.
+            let req = if idx == 0 {
+                self.queues[d].pop_front().expect("selected head")
+            } else {
+                self.queues[d].remove(idx).expect("index in range")
+            };
+            self.total -= 1;
             if self.discipline == Discipline::Edf {
                 if let Some(dl) = req.deadline_cycle {
                     if dl < now {
@@ -306,6 +325,31 @@ impl Dispatcher {
     ) -> (Vec<FleetRequest>, Vec<FleetRequest>) {
         let mut dropped = Vec::new();
         let mut batch = Vec::new();
+        if self.discipline == Discipline::Fifo {
+            // FIFO fast path: the head is the queue front and there is
+            // no expiry, so one swap/drain pass partitions the queue
+            // into (batch, keepers) — O(n) total instead of an O(n)
+            // `VecDeque::remove` per coalesced follower. Keepers return
+            // in their original relative order, exactly as the
+            // remove-by-index path left them.
+            let cap = max_batch.max(1);
+            let mut pending = std::mem::take(&mut self.scratch);
+            std::mem::swap(&mut self.queues[d], &mut pending);
+            let mut group: Option<u64> = None;
+            for r in pending.drain(..) {
+                match group {
+                    None => {
+                        group = Some(key_of(r.model));
+                        batch.push(r);
+                    }
+                    Some(g) if batch.len() < cap && key_of(r.model) == g => batch.push(r),
+                    Some(_) => self.queues[d].push_back(r),
+                }
+            }
+            self.scratch = pending;
+            self.total -= batch.len();
+            return (dropped, batch);
+        }
         let Some(head) = self.pop_filtered(d, now, None, key_of, &mut dropped) else {
             return (dropped, batch);
         };
@@ -375,7 +419,7 @@ mod tests {
     fn round_robin_rotates() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 3);
         let picks: Vec<usize> =
-            (0..6).map(|i| d.dispatch(req(i, 0, 0, None), 0, &[0, 0, 0], |_, _| 1)).collect();
+            (0..6).map(|i| d.dispatch(req(i, 0, 0, None), 0, |_| 0, |_, _| 1)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -383,10 +427,11 @@ mod tests {
     fn least_loaded_avoids_busy_device() {
         let mut d = Dispatcher::new(Placement::LeastLoaded, Discipline::Fifo, 2);
         // Device 0 busy (free at 100 > now 0), device 1 idle.
-        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, &[100, 0], |_, _| 1), 1);
+        let busy0 = |dev: usize| if dev == 0 { 100 } else { 0 };
+        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, busy0, |_, _| 1), 1);
         // Now both have equal pending count (0: busy, 1: one queued) —
         // the tie prefers the lower index.
-        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[100, 0], |_, _| 1), 0);
+        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, busy0, |_, _| 1), 0);
     }
 
     #[test]
@@ -396,19 +441,19 @@ mod tests {
         // on device 0; the next request must go to device 1 even though
         // both queues have length 1 after it.
         let cost = |m: usize, _d: usize| if m == 0 { 10u64 } else { 100u64 };
-        assert_eq!(d.dispatch(req(0, 1, 0, None), 0, &[0, 0], cost), 0);
-        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[0, 0], cost), 1);
+        assert_eq!(d.dispatch(req(0, 1, 0, None), 0, |_| 0, cost), 0);
+        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, |_| 0, cost), 1);
         // Device 0 backlog 100 vs device 1 backlog 10: cheap requests
         // keep landing on device 1 until the totals cross.
-        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, &[0, 0], cost), 1);
+        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, |_| 0, cost), 1);
     }
 
     #[test]
     fn priority_tiers_preempt_fifo_order() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Priority, 1);
-        d.dispatch(req(0, 0, 2, None), 0, &[0], |_, _| 1);
-        d.dispatch(req(1, 0, 0, None), 0, &[0], |_, _| 1);
-        d.dispatch(req(2, 0, 0, None), 0, &[0], |_, _| 1);
+        d.dispatch(req(0, 0, 2, None), 0, |_| 0, |_, _| 1);
+        d.dispatch(req(1, 0, 0, None), 0, |_| 0, |_, _| 1);
+        d.dispatch(req(2, 0, 0, None), 0, |_| 0, |_, _| 1);
         let (_, first) = d.pop(0, 0);
         let (_, second) = d.pop(0, 0);
         let (_, third) = d.pop(0, 0);
@@ -420,9 +465,9 @@ mod tests {
     #[test]
     fn edf_orders_by_deadline_and_drops_expired() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Edf, 1);
-        d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_, _| 1);
-        d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_, _| 1); // already expired at now=100
-        d.dispatch(req(2, 0, 0, Some(200)), 0, &[0], |_, _| 1);
+        d.dispatch(req(0, 0, 0, Some(500)), 0, |_| 0, |_, _| 1);
+        d.dispatch(req(1, 0, 0, Some(50)), 0, |_| 0, |_, _| 1); // already expired at now=100
+        d.dispatch(req(2, 0, 0, Some(200)), 0, |_| 0, |_, _| 1);
         let (dropped, job) = d.pop(0, 100);
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].id, 1, "expired request dropped, not served");
@@ -439,7 +484,7 @@ mod tests {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
         // Interleaved models: 0, 1, 0, 0, 1.
         for (id, model) in [(0u64, 0usize), (1, 1), (2, 0), (3, 0), (4, 1)] {
-            d.dispatch(req(id, model, 0, None), 0, &[0], |_, _| 1);
+            d.dispatch(req(id, model, 0, None), 0, |_| 0, |_, _| 1);
         }
         let (dropped, batch) = d.pop_batch(0, 0, 4, |m| m as u64);
         assert!(dropped.is_empty());
@@ -459,7 +504,7 @@ mod tests {
         let key = |m: usize| if m == 2 { 0u64 } else { m as u64 };
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
         for (id, model) in [(0u64, 0usize), (1, 1), (2, 2), (3, 0)] {
-            d.dispatch(req(id, model, 0, None), 0, &[0], |_, _| 1);
+            d.dispatch(req(id, model, 0, None), 0, |_| 0, |_, _| 1);
         }
         let peek = d.peek_batch(0, key).unwrap();
         assert_eq!(peek.count, 3, "peek must count the whole key group");
@@ -476,7 +521,7 @@ mod tests {
     fn pop_batch_respects_max_batch() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
         for id in 0..5 {
-            d.dispatch(req(id, 0, 0, None), 0, &[0], |_, _| 1);
+            d.dispatch(req(id, 0, 0, None), 0, |_| 0, |_, _| 1);
         }
         let (_, batch) = d.pop_batch(0, 0, 2, |m| m as u64);
         assert_eq!(batch.len(), 2);
@@ -489,9 +534,9 @@ mod tests {
     #[test]
     fn pop_batch_edf_drops_expired_followers() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Edf, 1);
-        d.dispatch(req(0, 0, 0, Some(500)), 0, &[0], |_, _| 1);
-        d.dispatch(req(1, 0, 0, Some(50)), 0, &[0], |_, _| 1); // expired at now=100
-        d.dispatch(req(2, 0, 0, Some(400)), 0, &[0], |_, _| 1);
+        d.dispatch(req(0, 0, 0, Some(500)), 0, |_| 0, |_, _| 1);
+        d.dispatch(req(1, 0, 0, Some(50)), 0, |_| 0, |_, _| 1); // expired at now=100
+        d.dispatch(req(2, 0, 0, Some(400)), 0, |_| 0, |_, _| 1);
         let (dropped, batch) = d.pop_batch(0, 100, 3, |m| m as u64);
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].id, 1);
@@ -505,9 +550,9 @@ mod tests {
         assert_eq!(d.peek_batch(0, |m| m as u64), None);
         let mut r0 = req(0, 0, 0, Some(900));
         r0.arrival_cycle = 7;
-        d.dispatch(r0, 7, &[0], |_, _| 1);
-        d.dispatch(req(1, 1, 0, None), 8, &[0], |_, _| 1);
-        d.dispatch(req(2, 0, 0, None), 9, &[0], |_, _| 1);
+        d.dispatch(r0, 7, |_| 0, |_, _| 1);
+        d.dispatch(req(1, 1, 0, None), 8, |_| 0, |_, _| 1);
+        d.dispatch(req(2, 0, 0, None), 9, |_| 0, |_, _| 1);
         assert_eq!(
             d.peek_batch(0, |m| m as u64),
             Some(BatchOutlook { count: 2, model: 0, head_arrival: 7, head_deadline: Some(900) }),
@@ -521,7 +566,7 @@ mod tests {
     fn fifo_preserves_order() {
         let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 1);
         for i in 0..4 {
-            d.dispatch(req(i, 0, 0, None), 0, &[0], |_, _| 1);
+            d.dispatch(req(i, 0, 0, None), 0, |_| 0, |_, _| 1);
         }
         for i in 0..4 {
             assert_eq!(d.pop(0, 0).1.unwrap().id, i);
@@ -536,12 +581,12 @@ mod tests {
         // there until the backlog crosses over.
         let mut d = Dispatcher::new(Placement::ShortestExpectedJob, Discipline::Fifo, 2);
         let cost = |_m: usize, dev: usize| if dev == 0 { 100u64 } else { 25u64 };
-        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, &[0, 0], cost), 1);
-        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[0, 0], cost), 1);
-        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, &[0, 0], cost), 1);
+        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, |_| 0, cost), 1);
+        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, |_| 0, cost), 1);
+        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, |_| 0, cost), 1);
         // Device 1 backlog 75 + 25 = 100 vs device 0's 0 + 100: the tie
         // finally falls back to the lower index.
-        assert_eq!(d.dispatch(req(3, 0, 0, None), 0, &[0, 0], cost), 0);
+        assert_eq!(d.dispatch(req(3, 0, 0, None), 0, |_| 0, cost), 0);
     }
 
     #[test]
@@ -549,12 +594,12 @@ mod tests {
         let mut d = Dispatcher::new(Placement::ModelAffinity, Discipline::Fifo, 3);
         // First contact of model 0 goes least-loaded (device 0); every
         // later model-0 request sticks there even as the queue grows.
-        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, &[0, 0, 0], |_, _| 1), 0);
-        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, &[0, 0, 0], |_, _| 1), 0);
-        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, &[0, 0, 0], |_, _| 1), 0);
+        assert_eq!(d.dispatch(req(0, 0, 0, None), 0, |_| 0, |_, _| 1), 0);
+        assert_eq!(d.dispatch(req(1, 0, 0, None), 0, |_| 0, |_, _| 1), 0);
+        assert_eq!(d.dispatch(req(2, 0, 0, None), 0, |_| 0, |_, _| 1), 0);
         // A different model class takes the next least-loaded device.
-        assert_eq!(d.dispatch(req(3, 1, 0, None), 0, &[0, 0, 0], |_, _| 1), 1);
-        assert_eq!(d.dispatch(req(4, 1, 0, None), 0, &[0, 0, 0], |_, _| 1), 1);
+        assert_eq!(d.dispatch(req(3, 1, 0, None), 0, |_| 0, |_, _| 1), 1);
+        assert_eq!(d.dispatch(req(4, 1, 0, None), 0, |_| 0, |_, _| 1), 1);
         assert_eq!(d.queued(0), 3);
         assert_eq!(d.queued(1), 2);
         assert_eq!(d.queued(2), 0);
@@ -566,6 +611,38 @@ mod tests {
         assert_eq!(p.hold_until(500, None, 200), 1_500, "fixed budget from head arrival");
         assert_eq!(p.hold_until(500, Some(1_200), 200), 1_000, "deadline slack caps the hold");
         assert_eq!(p.hold_until(500, Some(100), 200), 0, "expired slack saturates to zero");
+    }
+
+    #[test]
+    fn queued_counters_track_every_push_and_pop_path() {
+        // The O(1) total must agree with the per-queue depths across
+        // every mutation path: dispatch, single pop, batch pop (both
+        // the FIFO swap/drain and the select/remove path), EDF drops.
+        let consistent = |d: &Dispatcher| {
+            let sum: usize = (0..2).map(|q| d.queued(q)).sum();
+            assert_eq!(d.total_queued(), sum, "incremental total drifted from queue depths");
+        };
+        let mut d = Dispatcher::new(Placement::RoundRobin, Discipline::Fifo, 2);
+        for (id, model) in [(0u64, 0usize), (1, 1), (2, 0), (3, 0)] {
+            d.dispatch(req(id, model, 0, None), 0, |_| 0, |_, _| 1);
+            consistent(&d);
+        }
+        let (_, batch) = d.pop_batch(0, 0, 4, |m| m as u64);
+        assert_eq!(batch.len(), 2, "models 0 coalesce on device 0");
+        consistent(&d);
+        let (_, job) = d.pop(1, 0);
+        assert!(job.is_some());
+        consistent(&d);
+        // EDF drops decrement the total too (the dropped request left
+        // its queue even though it was never served).
+        let mut e = Dispatcher::new(Placement::RoundRobin, Discipline::Edf, 1);
+        e.dispatch(req(0, 0, 0, Some(10)), 0, |_| 0, |_, _| 1);
+        e.dispatch(req(1, 0, 0, Some(900)), 0, |_| 0, |_, _| 1);
+        let (dropped, job) = e.pop_batch(0, 100, 4, |m| m as u64);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(job.len(), 1);
+        assert_eq!(e.total_queued(), 0);
+        assert_eq!(e.queued(0), 0);
     }
 
     #[test]

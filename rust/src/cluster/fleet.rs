@@ -77,6 +77,7 @@
 //! class — serves it: heterogeneity changes timing and energy, never
 //! results.
 
+use super::calendar::WakeCalendar;
 use super::dispatch::{BatchPolicy, Discipline, Dispatcher, Placement};
 use super::metrics::{DeviceMetrics, FleetMetrics};
 use super::workload::{FleetRequest, ModelClass};
@@ -89,7 +90,7 @@ use crate::xformer::{
     run_encoder_batch, CgraEncoderReport, EncoderModel, EncoderQuant, XformerConfig,
 };
 use anyhow::Result;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// `dev` cycles at a `dev_mhz` device clock, expressed in cycles of a
 /// `ref_mhz` reference clock (ceiling — a job never finishes earlier
@@ -348,6 +349,14 @@ pub struct FleetConfig {
     /// Reference clock of the fleet timeline in integer MHz: arrival
     /// stamps and every metric are cycles of this clock.
     pub ref_mhz: u64,
+    /// Timing-only mode: charge every batch its analytic cycle cost
+    /// through the normal [`DeviceEngine::charge_run`] path instead of
+    /// executing the GEMMs. Scheduling, queueing, stealing and all
+    /// metrics accounting run unchanged (outputs are simply not
+    /// produced), which makes million-request sim-speed sweeps
+    /// feasible — `benches/sim_speed.rs` is the consumer. Off by
+    /// default: normal runs execute real kernels.
+    pub timing_only: bool,
 }
 
 impl Default for FleetConfig {
@@ -360,6 +369,7 @@ impl Default for FleetConfig {
             steal: true,
             steal_min_depth: 2,
             ref_mhz: 100,
+            timing_only: false,
         }
     }
 }
@@ -407,6 +417,10 @@ pub struct FleetSim {
     /// Which `(model, class)` slots (model · n_classes + class) have had
     /// their analytic pre-seed replaced by an observed charge.
     observed: Vec<bool>,
+    /// Timing-only synthetic cost table (`[model][device class]`,
+    /// *device* cycles), present iff `cfg.timing_only`: the per-request
+    /// charge `serve_batch_on` bills instead of executing kernels.
+    synth: Option<Vec<Vec<u64>>>,
     /// `run` is single-shot: device clocks and counters are not reset
     /// between runs, so a second call would silently misaccount.
     ran: bool,
@@ -437,6 +451,12 @@ fn est_cost(
 /// steal path so the two can never drift on accounting. The batch may
 /// mix model ids as long as they share a batch key; execution and
 /// accounting use the canonical (lowest aliased) id.
+///
+/// With `synth` (timing-only mode), the batch is billed its synthetic
+/// per-request device-cycle cost through the same
+/// [`DeviceEngine::charge_run`] path — context-reuse discount, clock
+/// conversion and serving-clock advance included — without running the
+/// GEMMs; every scheduling decision downstream is unchanged.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch_on(
     engine: &mut DeviceEngine,
@@ -447,6 +467,7 @@ fn serve_batch_on(
     canonical: &[usize],
     cost_cache: &mut BTreeMap<(usize, usize), u64>,
     observed: &mut [bool],
+    synth: Option<&[Vec<u64>]>,
     metrics: &mut FleetMetrics,
     batch: &[FleetRequest],
     now: u64,
@@ -459,9 +480,30 @@ fn serve_batch_on(
         batch.iter().all(|r| canonical[r.model] == model),
         "a coalesced batch must share one batch key"
     );
-    let inputs: Vec<&MatF32> = batch.iter().map(|r| &r.input).collect();
-    let (_outputs, charged, report) =
-        engine.serve_encoder_batch(model, &models[model], &quants[model], &inputs, now)?;
+    let (charged, report) = match synth {
+        Some(table) => {
+            // Synthetic charge: analytic execution cycles per request,
+            // a quarter of one request as the configuration cost (the
+            // context-reuse discount then applies exactly as for real
+            // runs). Stats stay zeroed — timing-only runs carry no
+            // event counters.
+            let per = table[model][class_id];
+            let report = CgraEncoderReport {
+                cycles: per.saturating_mul(batch.len() as u64),
+                config_cycles: per / 4 + 1,
+                ..Default::default()
+            };
+            engine.sim.reset_stats();
+            let charged = engine.charge_run(model, now, &report, batch.len() as u64);
+            (charged, report)
+        }
+        None => {
+            let inputs: Vec<&MatF32> = batch.iter().map(|r| &r.input).collect();
+            let (_outputs, charged, report) =
+                engine.serve_encoder_batch(model, &models[model], &quants[model], &inputs, now)?;
+            (charged, report)
+        }
+    };
     let slot = model * n_classes + class_id;
     if !observed[slot] {
         // First observed completion on this class replaces the
@@ -493,6 +535,202 @@ fn serve_batch_on(
         }
     }
     Ok(())
+}
+
+/// Phase-2 body for one freed device, shared verbatim by the calendar
+/// loop ([`FleetSim::run`]) and the reference scan loop
+/// ([`FleetSim::run_reference`]) so the two can never drift: the device
+/// takes work per its queue discipline until it is busy past `now`, its
+/// queue dries, or it holds for a fuller batch. Returns the hold
+/// deadline when the device parked on one.
+#[allow(clippy::too_many_arguments)]
+fn run_device_queue(
+    devices: &mut [DeviceEngine],
+    d: usize,
+    dispatcher: &mut Dispatcher,
+    policy: BatchPolicy,
+    more_arrivals: bool,
+    device_class: &[usize],
+    n_classes: usize,
+    models: &[EncoderModel],
+    quants: &[EncoderQuant],
+    batch_keys: &[u64],
+    canonical: &[usize],
+    cost_cache: &mut BTreeMap<(usize, usize), u64>,
+    observed: &mut [bool],
+    synth: Option<&[Vec<u64>]>,
+    metrics: &mut FleetMetrics,
+    now: u64,
+    obs: &mut Observer,
+) -> Result<Option<u64>> {
+    let key_of = |m: usize| batch_keys[m];
+    let mut parked: Option<u64> = None;
+    while devices[d].free_at <= now {
+        let Some(outlook) = dispatcher.peek_batch(d, key_of) else { break };
+        if policy.cap() > 1 && outlook.count < policy.cap() && more_arrivals {
+            let est = est_cost(cost_cache, models, canonical[outlook.model], device_class[d])
+                .saturating_mul(outlook.count as u64);
+            let hold = policy.hold_until(outlook.head_arrival, outlook.head_deadline, est);
+            if now < hold {
+                // A future event either way: the batch fills, or the
+                // hold expires.
+                parked = Some(hold);
+                break;
+            }
+        }
+        let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap(), key_of);
+        metrics.dropped += dropped.len() as u64;
+        if obs.enabled() {
+            for r in &dropped {
+                obs.record(now, d, r.id, EventKind::Drop);
+            }
+            let depth = dispatcher.queued(d);
+            obs.record(now, d, NO_SEQ, EventKind::QueueDepth { depth });
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        serve_batch_on(
+            &mut devices[d],
+            device_class[d],
+            n_classes,
+            models,
+            quants,
+            canonical,
+            cost_cache,
+            observed,
+            synth,
+            metrics,
+            &batch,
+            now,
+            d,
+            obs,
+        )?;
+    }
+    Ok(parked)
+}
+
+/// Phase-2b work-stealing pass, shared by both loops (see the module
+/// docs for the thief/victim rules). Each iteration makes a thief busy
+/// or shrinks a queue, so the loop terminates. When the calendar loop
+/// passes its [`WakeCalendar`], every thief busy-transition is pushed
+/// so the stolen batch's completion is indexed like any other.
+#[allow(clippy::too_many_arguments)]
+fn steal_pass(
+    devices: &mut [DeviceEngine],
+    dispatcher: &mut Dispatcher,
+    device_classes: &[DeviceClass],
+    device_class: &[usize],
+    n_classes: usize,
+    models: &[EncoderModel],
+    quants: &[EncoderQuant],
+    batch_keys: &[u64],
+    canonical: &[usize],
+    cost_cache: &mut BTreeMap<(usize, usize), u64>,
+    observed: &mut [bool],
+    synth: Option<&[Vec<u64>]>,
+    metrics: &mut FleetMetrics,
+    steal_count: &mut [u64],
+    steal_min_depth: usize,
+    batch_cap: usize,
+    now: u64,
+    obs: &mut Observer,
+    mut cal: Option<&mut WakeCalendar>,
+) -> Result<()> {
+    let key_of = |m: usize| batch_keys[m];
+    loop {
+        let thief = (0..devices.len())
+            .filter(|&d| devices[d].free_at <= now && dispatcher.queued(d) == 0)
+            .min_by_key(|&d| {
+                let weight = device_classes[device_class[d]].throughput_weight();
+                (std::cmp::Reverse(weight), d)
+            });
+        let Some(t) = thief else { break };
+        let victim = (0..devices.len())
+            .filter(|&d| devices[d].free_at > now && dispatcher.queued(d) > 0)
+            .filter(|&d| {
+                dispatcher.queued(d) >= steal_min_depth.max(1)
+                    || dispatcher
+                        .peek_batch(d, key_of)
+                        .is_some_and(|o| devices[d].last_model != Some(canonical[o.model]))
+            })
+            .max_by_key(|&d| (dispatcher.queued(d), std::cmp::Reverse(d)));
+        let Some(v) = victim else { break };
+        let (dropped, batch) = dispatcher.pop_batch(v, now, batch_cap, key_of);
+        metrics.dropped += dropped.len() as u64;
+        if obs.enabled() {
+            for r in &dropped {
+                obs.record(now, v, r.id, EventKind::Drop);
+            }
+        }
+        if batch.is_empty() {
+            continue; // every candidate expired (EDF): queue shrank, retry
+        }
+        metrics.steals += 1;
+        metrics.stolen_requests += batch.len() as u64;
+        steal_count[t] += 1;
+        if obs.enabled() {
+            let requests = batch.len();
+            obs.record(now, t, NO_SEQ, EventKind::Steal { victim: v, requests });
+            let depth = dispatcher.queued(v);
+            obs.record(now, v, NO_SEQ, EventKind::QueueDepth { depth });
+        }
+        serve_batch_on(
+            &mut devices[t],
+            device_class[t],
+            n_classes,
+            models,
+            quants,
+            canonical,
+            cost_cache,
+            observed,
+            synth,
+            metrics,
+            &batch,
+            now,
+            t,
+            obs,
+        )?;
+        if let Some(c) = cal.as_deref_mut() {
+            if devices[t].free_at > now {
+                c.push(devices[t].free_at, t);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Shared run tail: fold per-device counters into the metrics and close
+/// the observer.
+fn finalize_fleet(
+    devices: &[DeviceEngine],
+    device_classes: &[DeviceClass],
+    device_class: &[usize],
+    steal_count: &[u64],
+    mut metrics: FleetMetrics,
+    obs: &mut Observer,
+) -> FleetMetrics {
+    metrics.per_device = devices
+        .iter()
+        .zip(steal_count)
+        .enumerate()
+        .map(|(i, (d, &steals))| {
+            let class = &device_classes[device_class[i]];
+            DeviceMetrics {
+                served: d.served,
+                busy_cycles: d.busy_cycles,
+                steals,
+                stats: d.stats.clone(),
+                leakage_scale: class.leakage_scale(),
+                dynamic_scale: class.dynamic_scale(),
+            }
+        })
+        .collect();
+    for d in devices.iter() {
+        metrics.stats.merge(&d.stats);
+    }
+    obs.finish(metrics.makespan_cycles);
+    metrics
 }
 
 impl FleetSim {
@@ -549,6 +787,17 @@ impl FleetSim {
         }
         let dispatcher = Dispatcher::new(cfg.policy, cfg.discipline, cfg.roster.len());
         let observed = vec![false; classes.len() * device_classes.len()];
+        let synth = cfg.timing_only.then(|| {
+            models
+                .iter()
+                .map(|m| {
+                    device_classes
+                        .iter()
+                        .map(|dc| analytic_encoder_cycles(&dc.arch, &m.cfg))
+                        .collect()
+                })
+                .collect()
+        });
         Self {
             cfg,
             devices,
@@ -561,6 +810,7 @@ impl FleetSim {
             canonical,
             cost_cache,
             observed,
+            synth,
             ran: false,
             obs: Observer::disabled(),
         }
@@ -621,6 +871,19 @@ impl FleetSim {
     /// sorted by (arrival, id) first. Single-shot: build a fresh
     /// [`FleetSim`] per run (device clocks, counters and the cost cache
     /// all carry state).
+    ///
+    /// This is the **calendar loop**: the next event comes from a
+    /// [`WakeCalendar`] over device busy-transitions (plus the arrival
+    /// cursor and batch-hold deadlines) and only devices in the `ready`
+    /// set — free with queued work — are visited per iteration, so the
+    /// per-event cost is O(log D) instead of the reference loop's O(D)
+    /// full-roster scan. Scheduling semantics are bit-identical to
+    /// [`Self::run_reference`] (the conformance oracle): the calendar
+    /// only finds the minimum wake-up *time*, same-cycle work is still
+    /// processed in ascending device index, and a spurious wake-up (a
+    /// completion no queue is waiting on) is a recorded-nothing no-op.
+    /// `tests/calendar_props.rs` pins the equivalence per seed, metrics
+    /// and trace bytes both.
     pub fn run(&mut self, mut requests: Vec<FleetRequest>) -> Result<FleetMetrics> {
         assert!(!self.ran, "FleetSim::run is single-shot; build a fresh fleet per run");
         self.ran = true;
@@ -636,30 +899,198 @@ impl FleetSim {
             canonical,
             cost_cache,
             observed,
+            synth,
             ran: _,
             obs,
         } = self;
         let n_classes = device_classes.len();
         let policy = cfg.batch;
+        let synth = synth.as_deref();
         requests.sort_by_key(|r| (r.arrival_cycle, r.id));
         let mut arrivals = requests.into_iter().peekable();
         let mut metrics = FleetMetrics::default();
         let mut steal_count = vec![0u64; devices.len()];
         let mut now: u64 = 0;
-        let key_of = |m: usize| batch_keys[m];
+        let mut cal = WakeCalendar::new();
+        // Free devices with queued work (held devices included): the
+        // only devices phase 2 must visit. BTreeSet iteration is
+        // ascending, preserving the reference loop's device order.
+        let mut ready: BTreeSet<usize> = BTreeSet::new();
+        let mut ready_snapshot: Vec<usize> = Vec::new();
         loop {
             // 1. Admit every request that has arrived by `now`. The
-            // placement decision sees the device states at admission
-            // time, including earlier same-cycle placements, and costs
-            // each candidate device by its own class (aliased model
-            // ids share the canonical entry's cost).
+            // placement decision reads device state directly (no
+            // per-arrival snapshot), sees earlier same-cycle
+            // placements, and costs each candidate device by its own
+            // class (aliased model ids share the canonical entry's
+            // cost).
             while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
                 let r = arrivals.next().expect("peeked");
                 let (rid, rmodel) = (r.id, r.model);
-                let free: Vec<u64> = devices.iter().map(|d| d.free_at).collect();
-                let placed = dispatcher.dispatch(r, now, &free, |m, d| {
-                    est_cost(cost_cache, models, canonical[m], device_class[d])
-                });
+                let placed = dispatcher.dispatch(
+                    r,
+                    now,
+                    |d| devices[d].free_at,
+                    |m, d| est_cost(cost_cache, models, canonical[m], device_class[d]),
+                );
+                if devices[placed].free_at <= now {
+                    ready.insert(placed);
+                }
+                if obs.enabled() {
+                    obs.record(now, placed, rid, EventKind::Arrival { model: rmodel });
+                    let depth = dispatcher.queued(placed);
+                    obs.record(now, placed, NO_SEQ, EventKind::QueueDepth { depth });
+                }
+            }
+            // 2. Serve every ready device (ascending index, like the
+            // reference scan — devices not in `ready` are either busy
+            // or have nothing queued, for which the scan body is a
+            // no-op). A device that goes busy is re-indexed in the
+            // calendar; one that drained its queue leaves the set; a
+            // holding device stays and is re-evaluated next iteration.
+            let mut min_hold: Option<u64> = None;
+            ready_snapshot.clear();
+            ready_snapshot.extend(ready.iter().copied());
+            for &d in &ready_snapshot {
+                let parked = run_device_queue(
+                    devices,
+                    d,
+                    dispatcher,
+                    policy,
+                    arrivals.peek().is_some(),
+                    device_class,
+                    n_classes,
+                    models,
+                    quants,
+                    batch_keys,
+                    canonical,
+                    cost_cache,
+                    observed,
+                    synth,
+                    &mut metrics,
+                    now,
+                    obs,
+                )?;
+                if let Some(h) = parked {
+                    min_hold = Some(min_hold.map_or(h, |m| m.min(h)));
+                }
+                if devices[d].free_at > now {
+                    ready.remove(&d);
+                    cal.push(devices[d].free_at, d);
+                } else if dispatcher.queued(d) == 0 {
+                    ready.remove(&d);
+                }
+            }
+            // 2b. Steal (see `steal_pass` and the module docs). Gated
+            // on queued work existing at all — with every queue empty
+            // the pass cannot find a victim, so skipping it outright
+            // is behavior-identical and keeps the idle path cheap.
+            if cfg.steal && dispatcher.total_queued() > 0 {
+                steal_pass(
+                    devices,
+                    dispatcher,
+                    device_classes,
+                    device_class,
+                    n_classes,
+                    models,
+                    quants,
+                    batch_keys,
+                    canonical,
+                    cost_cache,
+                    observed,
+                    synth,
+                    &mut metrics,
+                    &mut steal_count,
+                    cfg.steal_min_depth,
+                    policy.cap(),
+                    now,
+                    obs,
+                    Some(&mut cal),
+                )?;
+            }
+            // 3. Advance to the next event: the next arrival, the
+            // earliest batch-hold deadline, or the earliest indexed
+            // completion while any work is queued. Completion entries
+            // are consulted lazily: stale stamps (superseded busy
+            // transitions) are discarded, and entries are simply not
+            // consulted while no queue holds work — they stay indexed
+            // for when work arrives. A wake-up at a completion no
+            // queue was waiting on records nothing and re-arms, so it
+            // cannot perturb metrics or the trace.
+            let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
+            if let Some(h) = min_hold {
+                next = Some(next.map_or(h, |n| n.min(h)));
+            }
+            if dispatcher.total_queued() > 0 {
+                if let Some((t, _)) =
+                    cal.earliest_valid(|at, dev| at > now && devices[dev].free_at == at)
+                {
+                    next = Some(next.map_or(t, |n| n.min(t)));
+                }
+            }
+            match next {
+                Some(t) => {
+                    debug_assert!(t > now, "event horizon must advance");
+                    now = t;
+                    cal.pop_until(now, |_, dev| {
+                        if devices[dev].free_at <= now && dispatcher.queued(dev) > 0 {
+                            ready.insert(dev);
+                        }
+                    });
+                }
+                None => break,
+            }
+        }
+        Ok(finalize_fleet(devices, device_classes, device_class, &steal_count, metrics, obs))
+    }
+
+    /// The pre-calendar event loop, kept verbatim as the **conformance
+    /// oracle**: every iteration scans the whole roster for serviceable
+    /// devices and for the next event — O(D) per event, obviously
+    /// correct. [`Self::run`] must stay bit-identical to this loop
+    /// (metrics *and* obs trace bytes per seed); any future backend
+    /// (e.g. a DAM-style threaded loop) is held to the same oracle.
+    /// Shares `run_device_queue` / `steal_pass` / `serve_batch_on` with
+    /// the calendar loop, so per-batch accounting cannot drift — only
+    /// the event-finding strategy differs.
+    pub fn run_reference(&mut self, mut requests: Vec<FleetRequest>) -> Result<FleetMetrics> {
+        assert!(!self.ran, "FleetSim::run is single-shot; build a fresh fleet per run");
+        self.ran = true;
+        let Self {
+            cfg,
+            devices,
+            device_classes,
+            device_class,
+            dispatcher,
+            models,
+            quants,
+            batch_keys,
+            canonical,
+            cost_cache,
+            observed,
+            synth,
+            ran: _,
+            obs,
+        } = self;
+        let n_classes = device_classes.len();
+        let policy = cfg.batch;
+        let synth = synth.as_deref();
+        requests.sort_by_key(|r| (r.arrival_cycle, r.id));
+        let mut arrivals = requests.into_iter().peekable();
+        let mut metrics = FleetMetrics::default();
+        let mut steal_count = vec![0u64; devices.len()];
+        let mut now: u64 = 0;
+        loop {
+            // 1. Admit every request that has arrived by `now`.
+            while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
+                let r = arrivals.next().expect("peeked");
+                let (rid, rmodel) = (r.id, r.model);
+                let placed = dispatcher.dispatch(
+                    r,
+                    now,
+                    |d| devices[d].free_at,
+                    |m, d| est_cost(cost_cache, models, canonical[m], device_class[d]),
+                );
                 if obs.enabled() {
                     obs.record(now, placed, rid, EventKind::Arrival { model: rmodel });
                     let depth = dispatcher.queued(placed);
@@ -667,128 +1098,52 @@ impl FleetSim {
                 }
             }
             // 2. Serve: every idle device takes work per its queue
-            // discipline until it is busy past `now`, its queue dries,
-            // or it holds for a fuller batch (see `BatchPolicy::
-            // hold_until` — fixed fill budget, or deadline slack when
-            // latency-aware).
+            // discipline (full-roster scan).
             let mut hold_until: Vec<Option<u64>> = vec![None; devices.len()];
             for d in 0..devices.len() {
-                while devices[d].free_at <= now {
-                    let Some(outlook) = dispatcher.peek_batch(d, key_of) else { break };
-                    if policy.cap() > 1
-                        && outlook.count < policy.cap()
-                        && arrivals.peek().is_some()
-                    {
-                        let est =
-                            est_cost(cost_cache, models, canonical[outlook.model], device_class[d])
-                                .saturating_mul(outlook.count as u64);
-                        let hold =
-                            policy.hold_until(outlook.head_arrival, outlook.head_deadline, est);
-                        if now < hold {
-                            // A future event either way: the batch
-                            // fills, or the hold expires.
-                            hold_until[d] = Some(hold);
-                            break;
-                        }
-                    }
-                    let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap(), key_of);
-                    metrics.dropped += dropped.len() as u64;
-                    if obs.enabled() {
-                        for r in &dropped {
-                            obs.record(now, d, r.id, EventKind::Drop);
-                        }
-                        let depth = dispatcher.queued(d);
-                        obs.record(now, d, NO_SEQ, EventKind::QueueDepth { depth });
-                    }
-                    if batch.is_empty() {
-                        continue;
-                    }
-                    serve_batch_on(
-                        &mut devices[d],
-                        device_class[d],
-                        n_classes,
-                        models,
-                        quants,
-                        canonical,
-                        cost_cache,
-                        observed,
-                        &mut metrics,
-                        &batch,
-                        now,
-                        d,
-                        obs,
-                    )?;
-                }
+                hold_until[d] = run_device_queue(
+                    devices,
+                    d,
+                    dispatcher,
+                    policy,
+                    arrivals.peek().is_some(),
+                    device_class,
+                    n_classes,
+                    models,
+                    quants,
+                    batch_keys,
+                    canonical,
+                    cost_cache,
+                    observed,
+                    synth,
+                    &mut metrics,
+                    now,
+                    obs,
+                )?;
             }
-            // 2b. Steal: each device now idle with an empty queue (a
-            // holding device has a queue and is skipped) pulls one
-            // coalescible batch from a backlogged queue whose owner is
-            // busy past `now` — work that owner cannot start now, so a
-            // steal strictly helps. Tuning (the ROADMAP items): the
-            // *fastest* idle class steals first (throughput weight
-            // descending, ties to the lowest index), and a queue
-            // shallower than `steal_min_depth` is protected when its
-            // head shares the owner's resident model — the owner would
-            // serve that last request with zero reconfiguration, so
-            // grabbing it would trade a context reuse for a full
-            // configuration charge elsewhere. Victim order stays
-            // deepest-queue-first, ties to the lowest index. Each
-            // iteration makes a thief busy or shrinks a queue, so the
-            // loop terminates.
+            // 2b. Steal.
             if cfg.steal {
-                loop {
-                    let thief = (0..devices.len())
-                        .filter(|&d| devices[d].free_at <= now && dispatcher.queued(d) == 0)
-                        .min_by_key(|&d| {
-                            let weight = device_classes[device_class[d]].throughput_weight();
-                            (std::cmp::Reverse(weight), d)
-                        });
-                    let Some(t) = thief else { break };
-                    let victim = (0..devices.len())
-                        .filter(|&d| devices[d].free_at > now && dispatcher.queued(d) > 0)
-                        .filter(|&d| {
-                            dispatcher.queued(d) >= cfg.steal_min_depth.max(1)
-                                || dispatcher.peek_batch(d, key_of).is_some_and(|o| {
-                                    devices[d].last_model != Some(canonical[o.model])
-                                })
-                        })
-                        .max_by_key(|&d| (dispatcher.queued(d), std::cmp::Reverse(d)));
-                    let Some(v) = victim else { break };
-                    let (dropped, batch) = dispatcher.pop_batch(v, now, policy.cap(), key_of);
-                    metrics.dropped += dropped.len() as u64;
-                    if obs.enabled() {
-                        for r in &dropped {
-                            obs.record(now, v, r.id, EventKind::Drop);
-                        }
-                    }
-                    if batch.is_empty() {
-                        continue; // every candidate expired (EDF): queue shrank, retry
-                    }
-                    metrics.steals += 1;
-                    metrics.stolen_requests += batch.len() as u64;
-                    steal_count[t] += 1;
-                    if obs.enabled() {
-                        let requests = batch.len();
-                        obs.record(now, t, NO_SEQ, EventKind::Steal { victim: v, requests });
-                        let depth = dispatcher.queued(v);
-                        obs.record(now, v, NO_SEQ, EventKind::QueueDepth { depth });
-                    }
-                    serve_batch_on(
-                        &mut devices[t],
-                        device_class[t],
-                        n_classes,
-                        models,
-                        quants,
-                        canonical,
-                        cost_cache,
-                        observed,
-                        &mut metrics,
-                        &batch,
-                        now,
-                        t,
-                        obs,
-                    )?;
-                }
+                steal_pass(
+                    devices,
+                    dispatcher,
+                    device_classes,
+                    device_class,
+                    n_classes,
+                    models,
+                    quants,
+                    batch_keys,
+                    canonical,
+                    cost_cache,
+                    observed,
+                    synth,
+                    &mut metrics,
+                    &mut steal_count,
+                    cfg.steal_min_depth,
+                    policy.cap(),
+                    now,
+                    obs,
+                    None,
+                )?;
             }
             // 3. Advance to the next event: the next arrival, the
             // earliest completion that matters (a device with queued
@@ -817,27 +1172,7 @@ impl FleetSim {
                 None => break,
             }
         }
-        metrics.per_device = devices
-            .iter()
-            .zip(&steal_count)
-            .enumerate()
-            .map(|(i, (d, &steals))| {
-                let class = &device_classes[device_class[i]];
-                DeviceMetrics {
-                    served: d.served,
-                    busy_cycles: d.busy_cycles,
-                    steals,
-                    stats: d.stats.clone(),
-                    leakage_scale: class.leakage_scale(),
-                    dynamic_scale: class.dynamic_scale(),
-                }
-            })
-            .collect();
-        for d in devices.iter() {
-            metrics.stats.merge(&d.stats);
-        }
-        obs.finish(metrics.makespan_cycles);
-        Ok(metrics)
+        Ok(finalize_fleet(devices, device_classes, device_class, &steal_count, metrics, obs))
     }
 }
 

@@ -53,6 +53,7 @@
 //! are reproducible from a printed seed and frequency-scalable, like
 //! the rest of the cycle model.
 
+pub mod calendar;
 pub mod dispatch;
 pub mod fleet;
 pub mod metrics;
@@ -60,6 +61,7 @@ pub mod parallel;
 pub mod workload;
 
 pub use crate::config::DeviceClass;
+pub use calendar::WakeCalendar;
 pub use dispatch::{BatchOutlook, BatchPolicy, Discipline, Dispatcher, Placement};
 pub use fleet::{
     analytic_encoder_cycles, analytic_encoder_ref_cycles, model_batch_key, to_ref_cycles,

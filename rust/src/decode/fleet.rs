@@ -46,8 +46,8 @@
 use super::engine::{mat_row, run_decode_tick, run_prefill_batch};
 use super::kv::{AdmitError, KvConfig, KvMetrics, KvSeqImage, PagedKvCache};
 use crate::cluster::{
-    analytic_encoder_ref_cycles, per_device_energy, to_ref_cycles, DeviceEngine, DeviceMetrics,
-    GenRequest, LogHistogram, ModelClass,
+    analytic_encoder_cycles, analytic_encoder_ref_cycles, per_device_energy, to_ref_cycles,
+    DeviceEngine, DeviceMetrics, GenRequest, LogHistogram, ModelClass, WakeCalendar,
 };
 use crate::config::{ArchConfig, DeviceClass};
 use crate::obs::{EventKind, ObsConfig, Observer, NO_SEQ};
@@ -113,6 +113,12 @@ pub struct DecodeFleetConfig {
     /// [`Self::migrate`]) deterministic and observable — the CI trace
     /// smoke and `obs_props.rs` use it to force migration flow events.
     pub pin_device: Option<usize>,
+    /// Charge every prefill/decode job its analytic cycle cost through
+    /// the normal `charge_run` path instead of executing the GEMMs.
+    /// Scheduling, KV paging, preemption and migration decisions are
+    /// unchanged (token rows come out as zeros); the `sim_speed` bench
+    /// uses it to drive ≥100k-request rosters through the event loop.
+    pub timing_only: bool,
 }
 
 impl Default for DecodeFleetConfig {
@@ -126,6 +132,7 @@ impl Default for DecodeFleetConfig {
             schedule: DecodeSchedule::PrefillFirst,
             migrate: false,
             pin_device: None,
+            timing_only: false,
         }
     }
 }
@@ -377,6 +384,17 @@ fn merge_report(total: &mut CgraEncoderReport, part: &CgraEncoderReport) {
 /// is only claimed for single-model jobs.
 const MIXED_TICK_KEY: usize = usize::MAX;
 
+/// Per-model analytic device-cycle costs for a timing-only device
+/// ([`DecodeFleetConfig::timing_only`]): jobs synthesize their
+/// [`CgraEncoderReport`] from these instead of executing GEMMs.
+#[derive(Debug, Clone)]
+struct SynthCost {
+    /// Device cycles to prefill one prompt row, per model.
+    prefill_row: Vec<u64>,
+    /// Device cycles per decode token (one sequence), per model.
+    token: Vec<u64>,
+}
+
 /// One device's generation server: engine + paged KV + the waiting /
 /// preempted / running sets, advanced one job per [`Self::step`].
 pub struct DeviceDecoder {
@@ -398,6 +416,14 @@ pub struct DeviceDecoder {
     /// single-model decode tick — the fleet harvests it into its
     /// per-class token-rate cache.
     last_tick_obs: Option<(usize, u64)>,
+    /// `(model, per-prompt-row ref cycles)` measured from the most
+    /// recent prefill job or chunk — the prefill analog of
+    /// [`Self::last_tick_obs`], harvested into the fleet's
+    /// per-(model, class) prefill-rate cache.
+    last_prefill_obs: Option<(usize, u64)>,
+    /// Analytic cost table for timing-only runs; `None` executes jobs
+    /// for real.
+    synth: Option<SynthCost>,
     admit_counter: u64,
 }
 
@@ -420,6 +446,8 @@ impl DeviceDecoder {
             chunking: None,
             last_was_prefill: false,
             last_tick_obs: None,
+            last_prefill_obs: None,
+            synth: None,
             admit_counter: 0,
         }
     }
@@ -453,6 +481,35 @@ impl DeviceDecoder {
     /// token)`) — the fleet's measured-rate harvest point.
     pub fn take_tick_observation(&mut self) -> Option<(usize, u64)> {
         self.last_tick_obs.take()
+    }
+
+    /// Take the per-prompt-row cost observed by the most recent
+    /// prefill job or chunk, if any (`(model, ref cycles per row)`).
+    pub fn take_prefill_observation(&mut self) -> Option<(usize, u64)> {
+        self.last_prefill_obs.take()
+    }
+
+    /// Reference-cycle work this device performs until its **newest
+    /// running** sequence (the LIFO migration candidate) emits its
+    /// last token: the candidate's own remaining ticks plus each
+    /// co-runner's share of those ticks — a co-runner contributes cost
+    /// only while it is still active, i.e. for `min(its remaining, the
+    /// candidate's remaining)` ticks. Waiting/preempted/mid-chunk
+    /// backlog is *not* counted: it is served after (or interleaved
+    /// with, never blocking) the candidate, so charging it to the
+    /// stay-estimate made the old migration planner pull sequences off
+    /// devices that would have finished them sooner locally.
+    pub fn newest_running_backlog(&self, class: usize, token_cost: &[Vec<u64>]) -> Option<u64> {
+        let cand = self.running.iter().max_by_key(|s| s.admit_order)?;
+        let mut work = token_cost[cand.model][class].saturating_mul(cand.remaining as u64);
+        for s in &self.running {
+            if s.id == cand.id {
+                continue;
+            }
+            let share = s.remaining.min(cand.remaining) as u64;
+            work = work.saturating_add(token_cost[s.model][class].saturating_mul(share));
+        }
+        Some(work)
     }
 
     pub fn engine(&self) -> &DeviceEngine {
@@ -754,17 +811,32 @@ impl DeviceDecoder {
     ) -> Result<()> {
         let model_idx = admitted[0].model;
         let inputs: Vec<MatF32> = admitted.iter().map(|p| p.prefill_input()).collect();
-        let pairs: Vec<(u64, &MatF32)> =
-            admitted.iter().zip(&inputs).map(|(p, x)| (p.id, x)).collect();
+        let total_rows: u64 = inputs.iter().map(|x| x.rows as u64).sum();
         self.engine.sim.reset_stats();
-        let (outs, report) = run_prefill_batch(
-            &mut self.engine.sim,
-            &models[model_idx],
-            &quants[model_idx],
-            &mut self.kv,
-            &pairs,
-        )?;
-        drop(pairs);
+        let (outs, report) = if self.synth.is_some() {
+            // Timing-only: the pages were committed at admission and a
+            // real prefill only *fills* them, so skipping it leaves KV
+            // paging (and thus preemption/migration) unchanged.
+            let per = self.synth.as_ref().expect("checked").prefill_row[model_idx];
+            let d = models[model_idx].cfg.d_model;
+            let outs: Vec<MatF32> = inputs.iter().map(|x| MatF32::zeros(x.rows, d)).collect();
+            let report = CgraEncoderReport {
+                cycles: per.saturating_mul(total_rows),
+                config_cycles: per / 4 + 1,
+                ..Default::default()
+            };
+            (outs, report)
+        } else {
+            let pairs: Vec<(u64, &MatF32)> =
+                admitted.iter().zip(&inputs).map(|(p, x)| (p.id, x)).collect();
+            run_prefill_batch(
+                &mut self.engine.sim,
+                &models[model_idx],
+                &quants[model_idx],
+                &mut self.kv,
+                &pairs,
+            )?
+        };
         // Every prefill emits exactly one token: a fresh sequence's
         // first (the last prompt row's output), and — for a resume —
         // the *next* token, which the recompute produces as a free
@@ -775,6 +847,11 @@ impl DeviceDecoder {
             admitted.iter().filter(|p| p.emitted.len() + 1 == p.max_new).count() as u64;
         let charged = self.engine.charge_run(model_idx, now, &report, finishing);
         let completion = now + charged;
+        // Measured prefill rate: this job prefilled `total_rows` prompt
+        // rows in `charged` reference cycles — the per-row rate the
+        // fleet's per-(model, class) prefill cache replaces its
+        // analytic seed with on first observation.
+        self.last_prefill_obs = Some((model_idx, (charged / total_rows.max(1)).max(1)));
         if obs.enabled() {
             let batch = admitted.len();
             let rows: usize = inputs.iter().map(|x| x.rows).sum();
@@ -971,18 +1048,29 @@ impl DeviceDecoder {
         let chunk =
             MatF32::from_slice(rows, d, &st.input.data[st.done * d..(st.done + rows) * d]);
         self.engine.sim.reset_stats();
-        let (outs, report) = run_prefill_batch(
-            &mut self.engine.sim,
-            &models[model_idx],
-            &quants[model_idx],
-            &mut self.kv,
-            &[(st.seq.id, &chunk)],
-        )?;
+        let (outs, report) = if self.synth.is_some() {
+            let per = self.synth.as_ref().expect("checked").prefill_row[model_idx];
+            let report = CgraEncoderReport {
+                cycles: per.saturating_mul(rows as u64),
+                config_cycles: per / 4 + 1,
+                ..Default::default()
+            };
+            (vec![MatF32::zeros(rows, d)], report)
+        } else {
+            run_prefill_batch(
+                &mut self.engine.sim,
+                &models[model_idx],
+                &quants[model_idx],
+                &mut self.kv,
+                &[(st.seq.id, &chunk)],
+            )?
+        };
         let done_after = st.done + rows;
         let is_final = done_after == st.input.rows;
         let finishing = u64::from(is_final && st.seq.emitted.len() + 1 == st.seq.max_new);
         let charged = self.engine.charge_run(model_idx, now, &report, finishing);
         let completion = now + charged;
+        self.last_prefill_obs = Some((model_idx, (charged / (rows as u64).max(1)).max(1)));
         metrics.prefill_jobs += 1;
         if !is_final {
             metrics.prefill_chunks += 1;
@@ -1127,21 +1215,42 @@ impl DeviceDecoder {
         self.engine.sim.reset_stats();
         let mut report = CgraEncoderReport::default();
         let mut outs: Vec<(usize, MatF32)> = Vec::with_capacity(order.len());
-        for (m, idxs) in &groups {
-            let pairs: Vec<(u64, &MatF32)> = idxs
-                .iter()
-                .map(|&i| (self.running[i].id, &self.running[i].next_input))
-                .collect();
-            let (rows, part) = run_decode_tick(
-                &mut self.engine.sim,
-                &models[*m],
-                &quants[*m],
-                &mut self.kv,
-                &pairs,
-            )?;
-            merge_report(&mut report, &part);
-            for (&i, row) in idxs.iter().zip(rows) {
-                outs.push((i, row));
+        if self.synth.is_some() {
+            // Timing-only tick: commit each sequence's token slot (the
+            // page-allocation side effect a real tick has — preemption
+            // pressure must be identical), skip the GEMVs.
+            for (m, idxs) in &groups {
+                let per = self.synth.as_ref().expect("checked").token[*m];
+                let d = models[*m].cfg.d_model;
+                for &i in idxs {
+                    let id = self.running[i].id;
+                    self.kv.begin_token(id)?;
+                    outs.push((i, MatF32::zeros(1, d)));
+                }
+                let part = CgraEncoderReport {
+                    cycles: per.saturating_mul(idxs.len() as u64),
+                    config_cycles: per / 4 + 1,
+                    ..Default::default()
+                };
+                merge_report(&mut report, &part);
+            }
+        } else {
+            for (m, idxs) in &groups {
+                let pairs: Vec<(u64, &MatF32)> = idxs
+                    .iter()
+                    .map(|&i| (self.running[i].id, &self.running[i].next_input))
+                    .collect();
+                let (rows, part) = run_decode_tick(
+                    &mut self.engine.sim,
+                    &models[*m],
+                    &quants[*m],
+                    &mut self.kv,
+                    &pairs,
+                )?;
+                merge_report(&mut report, &part);
+                for (&i, row) in idxs.iter().zip(rows) {
+                    outs.push((i, row));
+                }
             }
         }
         let finishing =
@@ -1233,8 +1342,16 @@ pub struct DecodeFleetSim {
     device_class: Vec<usize>,
     models: Vec<DecoderModel>,
     quants: Vec<EncoderQuant>,
-    /// Analytic per-prompt-token prefill cost, `[model][class]`.
+    /// Per-prompt-token prefill cost, `[model][class]`: the analytic
+    /// encoder seed until the first *measured* prefill of that model
+    /// on that class replaces it — the same observed-cost rule as
+    /// [`Self::token_cost`] (placement used to trust the analytic
+    /// prefill seed forever while decode rates were measured, skewing
+    /// prefill-heavy placements).
     prefill_cost: Vec<Vec<u64>>,
+    /// Which `prefill_cost` slots (`model · n_classes + class`) hold a
+    /// measured rate.
+    prefill_observed: Vec<bool>,
     /// Per-token decode cost, `[model][class]`: the analytic GEMV
     /// ideal at the midpoint context until the first *measured* tick
     /// of that model on that class replaces it (the encoder fleet's
@@ -1244,6 +1361,14 @@ pub struct DecodeFleetSim {
     /// measured rate.
     token_observed: Vec<bool>,
     ran: bool,
+    /// Indexed wake-up queue for [`Self::run`]'s event loop (lazy
+    /// invalidation — see [`WakeCalendar`]). [`Self::run_reference`]
+    /// never consults it; `place`/migration maintain it either way.
+    cal: WakeCalendar,
+    /// Free devices with work: the only devices the calendar loop's
+    /// service phase visits, in ascending index (BTreeSet order) to
+    /// match the reference scan.
+    ready: BTreeSet<usize>,
     /// Passive event/series/kernel recorder. Disabled by default; the
     /// simulator never reads it back, so enabling it cannot change a
     /// single scheduling decision (asserted by `obs_props`).
@@ -1267,7 +1392,25 @@ impl DecodeFleetSim {
                     Some(pages) => KvConfig::new(cfg.page_words, pages),
                     None => KvConfig::with_page_words(c, cfg.page_words),
                 };
-                DeviceDecoder::new(c, cfg.ref_mhz, kv_cfg, cfg.max_running, cfg.schedule)
+                let mut dev =
+                    DeviceDecoder::new(c, cfg.ref_mhz, kv_cfg, cfg.max_running, cfg.schedule);
+                if cfg.timing_only {
+                    dev.synth = Some(SynthCost {
+                        prefill_row: classes
+                            .iter()
+                            .map(|mc| {
+                                (analytic_encoder_cycles(&c.arch, &mc.cfg)
+                                    / mc.cfg.seq.max(1) as u64)
+                                    .max(1)
+                            })
+                            .collect(),
+                        token: classes
+                            .iter()
+                            .map(|mc| analytic_decode_token_cycles(&c.arch, &mc.cfg))
+                            .collect(),
+                    });
+                }
+                dev
             })
             .collect();
         let models: Vec<DecoderModel> = classes
@@ -1308,6 +1451,7 @@ impl DecodeFleetSim {
             })
             .collect();
         let token_observed = vec![false; classes.len() * device_classes.len()];
+        let prefill_observed = vec![false; classes.len() * device_classes.len()];
         Self {
             cfg,
             devices,
@@ -1316,9 +1460,12 @@ impl DecodeFleetSim {
             models,
             quants,
             prefill_cost,
+            prefill_observed,
             token_cost,
             token_observed,
             ran: false,
+            cal: WakeCalendar::new(),
+            ready: BTreeSet::new(),
             obs: Observer::disabled(),
         }
     }
@@ -1370,6 +1517,30 @@ impl DecodeFleetSim {
         if !self.token_observed[slot] {
             self.token_cost[model][class] = per_token.max(1);
             self.token_observed[slot] = true;
+        }
+    }
+
+    /// Expected per-prompt-row prefill cost of `model` on device-class
+    /// index `class`, reference cycles: measured once one prefill of
+    /// that model has completed on that class, the analytic encoder
+    /// seed before.
+    pub fn expected_prefill_cost(&self, model: usize, class: usize) -> u64 {
+        self.prefill_cost[model][class]
+    }
+
+    /// Whether `(model, class)` has had its analytic prefill seed
+    /// replaced by a measured rate.
+    pub fn prefill_cost_observed(&self, model: usize, class: usize) -> bool {
+        self.prefill_observed[model * self.device_classes.len() + class]
+    }
+
+    /// Record a measured per-prompt-row prefill cost — first
+    /// observation wins, like [`Self::observe_token_cost`].
+    fn observe_prefill_cost(&mut self, model: usize, class: usize, per_row: u64) {
+        let slot = model * self.device_classes.len() + class;
+        if !self.prefill_observed[slot] {
+            self.prefill_cost[model][class] = per_row.max(1);
+            self.prefill_observed[slot] = true;
         }
     }
 
@@ -1433,8 +1604,18 @@ impl DecodeFleetSim {
                 self.obs.record(now, d, id, EventKind::Reject { reason: reason.clone() });
             }
             metrics.rejections.push((id, reason));
-        } else if self.obs.enabled() {
-            self.obs.record(now, d, id, EventKind::Arrival { model });
+        } else {
+            // Work arrived: a free device becomes serviceable now; a
+            // busy one must be woken at its completion even if its
+            // calendar entry was discarded while it sat workless.
+            if self.devices[d].free_at() <= now {
+                self.ready.insert(d);
+            } else {
+                self.cal.push(self.devices[d].free_at(), d);
+            }
+            if self.obs.enabled() {
+                self.obs.record(now, d, id, EventKind::Arrival { model });
+            }
         }
     }
 
@@ -1463,9 +1644,12 @@ impl DecodeFleetSim {
         }
         let mut moved: BTreeSet<u64> = BTreeSet::new();
         loop {
-            // The stay-estimate depends only on the source (and the
-            // backlog walk is O(queue length)), so compute it once per
-            // device per pass iteration rather than once per pair.
+            // The *pending-candidate* stay-estimate (a queued sequence
+            // finishes after the whole backlog ahead of it) depends
+            // only on the source, so compute it once per device per
+            // pass iteration rather than once per pair. Running
+            // candidates use a per-sequence estimate instead — see
+            // below.
             let stay: Vec<u64> = (0..self.devices.len())
                 .map(|src| {
                     self.devices[src].free_at().max(now).saturating_add(
@@ -1522,6 +1706,15 @@ impl DecodeFleetSim {
                     }
                     // Running candidate: the KV image moves with it —
                     // decode resumes on the destination, no recompute.
+                    // Its stay-estimate is **per-sequence**: the
+                    // candidate's own remaining ticks plus the
+                    // co-runners' share of them
+                    // ([`DeviceDecoder::newest_running_backlog`]) —
+                    // not the whole-device backlog, which charged the
+                    // candidate for waiting prefills and for co-runner
+                    // tokens emitted after it would already be done,
+                    // and so migrated sequences their source would
+                    // have finished sooner.
                     if let Some((id, model, rem, kv_len, worst)) =
                         self.devices[src].peek_newest_running()
                     {
@@ -1536,6 +1729,11 @@ impl DecodeFleetSim {
                                 worst,
                             )
                         {
+                            let stay_finish = src_ready.saturating_add(
+                                self.devices[src]
+                                    .newest_running_backlog(c_src, &self.token_cost)
+                                    .expect("peeked a running sequence"),
+                            );
                             let words = (kv_len * 2 * cfgm.d_model * cfgm.n_layers) as u64;
                             let own =
                                 self.token_cost[model][c_dst].saturating_mul(rem as u64);
@@ -1600,6 +1798,16 @@ impl DecodeFleetSim {
         self.devices[dst].charge_transfer(handoff, xfer_dst);
         metrics.migrations += 1;
         metrics.migrated_words += words;
+        // Both endpoints' timelines now carry the transfer: re-index
+        // their wake-ups (the destination went from idle-empty to
+        // busy-with-work; the source's completion moved later).
+        for x in [src, dst] {
+            debug_assert!(self.devices[x].free_at() > now, "a transfer occupies the timeline");
+            self.ready.remove(&x);
+            if self.devices[x].has_work() {
+                self.cal.push(self.devices[x].free_at(), x);
+            }
+        }
         if self.obs.enabled() {
             self.obs.record(
                 src_start,
@@ -1617,11 +1825,160 @@ impl DecodeFleetSim {
         id
     }
 
-    /// Run the fleet over a generation request stream to completion.
-    /// Returns the aggregated metrics and every completion (outputs
-    /// included — the join/leave bit-identity tests compare them to
-    /// solo runs). Single-shot, like the encoder fleet.
+    /// Step `d` while it is free and has work, harvesting the
+    /// measured-rate observations after every job — the one service
+    /// body both event loops share, so job accounting and the
+    /// observed-cost rules can never drift between them.
+    fn drain_device(
+        &mut self,
+        d: usize,
+        now: u64,
+        metrics: &mut DecodeMetrics,
+        completions: &mut Vec<GenCompletion>,
+    ) -> Result<()> {
+        while self.devices[d].free_at() <= now && self.devices[d].has_work() {
+            let progressed = self.devices[d].step(
+                now,
+                &self.models,
+                &self.quants,
+                metrics,
+                completions,
+                &mut self.obs,
+                d,
+            )?;
+            if let Some((model, per_token)) = self.devices[d].take_tick_observation() {
+                let class = self.device_class[d];
+                self.observe_token_cost(model, class, per_token);
+            }
+            if let Some((model, per_row)) = self.devices[d].take_prefill_observation() {
+                let class = self.device_class[d];
+                self.observe_prefill_cost(model, class, per_row);
+            }
+            if !progressed {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Index work submitted before `run` (tests craft crowded devices
+    /// by calling `submit` directly): free devices with work become
+    /// ready, busy ones get a wake-up entry.
+    fn seed_wakeups(&mut self, now: u64) {
+        for d in 0..self.devices.len() {
+            if !self.devices[d].has_work() {
+                continue;
+            }
+            if self.devices[d].free_at() <= now {
+                self.ready.insert(d);
+            } else {
+                self.cal.push(self.devices[d].free_at(), d);
+            }
+        }
+    }
+
+    /// Run the fleet over a generation request stream to completion,
+    /// finding each next event through the indexed [`WakeCalendar`]
+    /// instead of an O(D) roster scan per iteration. Returns the
+    /// aggregated metrics and every completion (outputs included — the
+    /// join/leave bit-identity tests compare them to solo runs).
+    /// Single-shot, like the encoder fleet.
+    ///
+    /// Scheduling semantics are bit-identical to
+    /// [`Self::run_reference`] (the conformance oracle): the calendar
+    /// only finds the minimum wake-up *time*, and same-cycle devices
+    /// are still served in ascending index. `tests/calendar_props.rs`
+    /// pins the equivalence per seed — metrics, completions and trace
+    /// bytes.
     pub fn run(
+        &mut self,
+        mut requests: Vec<GenRequest>,
+    ) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
+        assert!(!self.ran, "DecodeFleetSim::run is single-shot; build a fresh fleet per run");
+        self.ran = true;
+        requests.sort_by_key(|r| (r.arrival_cycle, r.id));
+        let mut arrivals = requests.into_iter().peekable();
+        let mut metrics = DecodeMetrics::default();
+        let mut completions: Vec<GenCompletion> = Vec::new();
+        let mut now: u64 = 0;
+        let mut ready_snapshot: Vec<usize> = Vec::new();
+        self.seed_wakeups(now);
+        loop {
+            // 1. Admit every request that has arrived by `now`
+            // (`place` files the target device as ready or indexes its
+            // completion).
+            while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
+                let r = arrivals.next().expect("peeked");
+                self.place(r, now, &mut metrics);
+            }
+            // 2. Serve every free device with work, ascending index
+            // like the reference scan (devices not in `ready` are busy
+            // or workless — the scan body is a no-op for them). A
+            // device still free-with-work afterwards is admission-
+            // blocked; it stays ready and is re-tried at the next
+            // event, exactly as the full scan would.
+            ready_snapshot.clear();
+            ready_snapshot.extend(self.ready.iter().copied());
+            for &d in &ready_snapshot {
+                self.drain_device(d, now, &mut metrics, &mut completions)?;
+                if self.devices[d].free_at() > now {
+                    self.ready.remove(&d);
+                    if self.devices[d].has_work() {
+                        self.cal.push(self.devices[d].free_at(), d);
+                    }
+                } else if !self.devices[d].has_work() {
+                    self.ready.remove(&d);
+                }
+            }
+            if self.cfg.migrate {
+                // Migrated-in work starts after its transfer lands
+                // (free_at > now), so no re-stepping at this instant;
+                // `execute_migration` re-indexes both endpoints.
+                self.rebalance(now, &mut metrics);
+            }
+            // 3. Advance to the next event: the next arrival or the
+            // earliest completion of a busy device *with work* — the
+            // same horizon the reference scan computes, found in
+            // O(log D). Entries whose stamp or workload went stale are
+            // discarded on the way; any state change that makes such a
+            // device relevant again (`place`, migration, a busy
+            // transition) re-indexes it.
+            let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
+            let devices = &self.devices;
+            if let Some((t, _)) = self.cal.earliest_valid(|at, d| {
+                at > now && devices[d].free_at() == at && devices[d].has_work()
+            }) {
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+            match next {
+                Some(t) => {
+                    debug_assert!(t > now, "event horizon must advance");
+                    now = t;
+                    let devices = &self.devices;
+                    let ready = &mut self.ready;
+                    self.cal.pop_until(now, |_, d| {
+                        if devices[d].free_at() <= now && devices[d].has_work() {
+                            ready.insert(d);
+                        }
+                    });
+                }
+                None => break,
+            }
+        }
+        Ok((self.finalize(metrics), completions))
+    }
+
+    /// The pre-calendar event loop, kept verbatim as the **conformance
+    /// oracle**: every iteration scans the whole roster for
+    /// serviceable devices and for the next event — O(D) per event,
+    /// obviously correct. [`Self::run`] must stay bit-identical to
+    /// this loop (metrics, completions *and* obs trace bytes per
+    /// seed); any future backend (e.g. a DAM-style threaded loop) is
+    /// held to the same oracle. Shares [`Self::drain_device`] (and
+    /// through it every job path) with the calendar loop, so per-job
+    /// accounting cannot drift — only the event-finding strategy
+    /// differs.
+    pub fn run_reference(
         &mut self,
         mut requests: Vec<GenRequest>,
     ) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
@@ -1638,24 +1995,7 @@ impl DecodeFleetSim {
                 self.place(r, now, &mut metrics);
             }
             for d in 0..self.devices.len() {
-                while self.devices[d].free_at() <= now && self.devices[d].has_work() {
-                    let progressed = self.devices[d].step(
-                        now,
-                        &self.models,
-                        &self.quants,
-                        &mut metrics,
-                        &mut completions,
-                        &mut self.obs,
-                        d,
-                    )?;
-                    if let Some((model, per_token)) = self.devices[d].take_tick_observation() {
-                        let class = self.device_class[d];
-                        self.observe_token_cost(model, class, per_token);
-                    }
-                    if !progressed {
-                        break;
-                    }
-                }
+                self.drain_device(d, now, &mut metrics, &mut completions)?;
             }
             if self.cfg.migrate {
                 // Migrated-in work starts after its transfer lands
@@ -1677,6 +2017,12 @@ impl DecodeFleetSim {
                 None => break,
             }
         }
+        Ok((self.finalize(metrics), completions))
+    }
+
+    /// Per-device metrics, merged stats and the observer's final flush
+    /// — everything both event loops share after their last event.
+    fn finalize(&mut self, mut metrics: DecodeMetrics) -> DecodeMetrics {
         assert!(
             self.devices.iter().all(|d| !d.has_work()),
             "decode fleet ended with unserved work — scheduling invariant broken"
@@ -1704,7 +2050,7 @@ impl DecodeFleetSim {
             metrics.kv_read_words += d.kv_metrics().read_words;
         }
         self.obs.finish(metrics.makespan_cycles);
-        Ok((metrics, completions))
+        metrics
     }
 }
 
@@ -2033,6 +2379,112 @@ mod tests {
         fleet.observe_token_cost(0, c_little, 9);
         assert_eq!(fleet.expected_token_cost(0, c_little), 7);
         assert!(fleet.token_cost_observed(0, c_little));
+    }
+
+    #[test]
+    fn migration_planner_prices_the_candidate_not_the_whole_backlog() {
+        // Device 0 runs a long sequence A (12 ticks left) beside a
+        // short one B (2 ticks left); device 1 idles. LIFO migration
+        // would move B. Pricing B's stay time by the *whole* running
+        // backlog (A's 12 ticks included) claims a gain of 10 transfer
+        // units; B's honest per-sequence finish — its 2 ticks plus A's
+        // share of them — exactly matches the move cost, so the gain
+        // is zero and the strict-improvement bar must keep B home.
+        let classes = long_classes();
+        let cfg_model = classes[0].cfg;
+        let mk = |migrate: bool| {
+            let cfg = DecodeFleetConfig {
+                roster: vec![DeviceClass::paper(); 2],
+                ref_mhz: 100,
+                max_running: 4,
+                migrate,
+                ..Default::default()
+            };
+            let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+            // Pin the per-token rate to one B-sized transfer leg so the
+            // two estimators land on opposite sides of the strict-gain
+            // bar (first-observation-wins blocks the measured
+            // override). B's KV image at the t=0 rebalance is its 2
+            // prompt rows: kv_len · 2 (K and V) · d_model · n_layers.
+            let words = (2 * 2 * cfg_model.d_model * cfg_model.n_layers) as u64;
+            let x = fleet.transfer_ref_cycles(0, words);
+            fleet.observe_token_cost(0, 0, x);
+            fleet.devices[0].submit(gen_req(0, 2, 13, 0), &cfg_model).unwrap();
+            fleet.devices[0].submit(gen_req(1, 2, 3, 0), &cfg_model).unwrap();
+            fleet.run(Vec::new()).unwrap()
+        };
+        let (m0, c0) = mk(false);
+        let (m1, c1) = mk(true);
+        assert_eq!(m1.completed, 2);
+        assert_eq!(
+            m1.migrations, 0,
+            "zero per-sequence gain must not clear the strict-improvement bar"
+        );
+        assert_eq!(m0, m1, "a no-migration plan leaves the timeline untouched");
+        assert_eq!(c0, c1);
+    }
+
+    #[test]
+    fn first_prefill_replaces_the_analytic_prefill_seed() {
+        let classes = tiny_classes();
+        let mut fleet = DecodeFleetSim::new(single_device_cfg(), &classes, 42);
+        let analytic = fleet.expected_prefill_cost(0, 0);
+        assert!(!fleet.prefill_cost_observed(0, 0));
+        let (m, _) = fleet.run(vec![gen_req(0, 3, 4, 0)]).unwrap();
+        assert_eq!(m.completed, 1);
+        assert!(fleet.prefill_cost_observed(0, 0), "one prefill must flip the slot to measured");
+        assert!(
+            fleet.expected_prefill_cost(0, 0) > analytic,
+            "the measured per-row charge (fills, config, drains) must exceed the \
+             compute-only ideal: {} vs {analytic}",
+            fleet.expected_prefill_cost(0, 0)
+        );
+    }
+
+    #[test]
+    fn measured_prefill_rates_drive_placement_over_analytic_seeds() {
+        let classes = tiny_classes();
+        let roster = DeviceClass::parse_roster("4x4@100:1,8x4@200:1").unwrap();
+        let mk = || {
+            DecodeFleetSim::new(
+                DecodeFleetConfig {
+                    roster: roster.clone(),
+                    ref_mhz: 100,
+                    max_running: 4,
+                    ..Default::default()
+                },
+                &classes,
+                42,
+            )
+        };
+        let fleet = mk();
+        let (c_little, c_big) = (fleet.device_class[0], fleet.device_class[1]);
+        assert!(
+            fleet.expected_prefill_cost(0, c_little) >= fleet.expected_prefill_cost(0, c_big),
+            "analytic seeds rank the big class at or below the little class per row"
+        );
+        // A prefill-dominated request (7 prompt rows, 1 token) must
+        // follow the measured rate once one prefill has landed…
+        let mut fleet = mk();
+        fleet.observe_prefill_cost(0, c_little, 1);
+        fleet.observe_prefill_cost(0, c_big, 1_000_000);
+        let mut metrics = DecodeMetrics::default();
+        fleet.place(gen_req(0, 7, 1, 0), 0, &mut metrics);
+        assert_eq!(fleet.devices[0].queued_len(), 1, "measured-fast little class must win");
+        assert_eq!(fleet.devices[1].queued_len(), 0);
+        // …and symmetrically for the big class.
+        let mut fleet = mk();
+        fleet.observe_prefill_cost(0, c_little, 1_000_000);
+        fleet.observe_prefill_cost(0, c_big, 1);
+        let mut metrics = DecodeMetrics::default();
+        fleet.place(gen_req(1, 7, 1, 0), 0, &mut metrics);
+        assert_eq!(fleet.devices[1].queued_len(), 1, "measured-fast big class must win");
+        // Only the *first* observation replaces the seed.
+        let mut fleet = mk();
+        fleet.observe_prefill_cost(0, c_little, 7);
+        fleet.observe_prefill_cost(0, c_little, 9);
+        assert_eq!(fleet.expected_prefill_cost(0, c_little), 7);
+        assert!(fleet.prefill_cost_observed(0, c_little));
     }
 
     #[test]

@@ -528,6 +528,7 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
             schedule,
             migrate,
             pin_device,
+            timing_only: false,
         },
         &classes,
         42,

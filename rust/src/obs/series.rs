@@ -106,6 +106,11 @@ impl MetricsSeries {
             }
             EventKind::MigrateIn { dur, .. } => self.add_busy(cycle, *dur),
             EventKind::QueueDepth { depth } => {
+                debug_assert!(
+                    device < self.cur_queue.len(),
+                    "queue-depth gauge for device {device} of {} — dropped",
+                    self.cur_queue.len()
+                );
                 if device < self.cur_queue.len() {
                     self.cur_queue[device] = *depth as u64;
                 }
@@ -113,10 +118,18 @@ impl MetricsSeries {
                 self.row(cycle).queue_depth = Some(total);
             }
             EventKind::KvOccupancy { permille } => {
+                debug_assert!(
+                    device < self.cur_kv.len(),
+                    "KV-occupancy gauge for device {device} of {} — dropped",
+                    self.cur_kv.len()
+                );
                 if device < self.cur_kv.len() {
                     self.cur_kv[device] = *permille;
                 }
-                let mean = self.cur_kv.iter().sum::<u64>() / self.cur_kv.len() as u64;
+                // Round half-up: truncation biased the fleet mean low
+                // by up to one permille per device.
+                let n = self.cur_kv.len() as u64;
+                let mean = (self.cur_kv.iter().sum::<u64>() + n / 2) / n;
                 self.row(cycle).kv_permille = Some(mean);
             }
             EventKind::Resume | EventKind::KvAdmit { .. } => {}
@@ -196,6 +209,26 @@ mod tests {
         for r in &rows {
             assert!(r.ends_with(",3,700"), "row: {r}");
         }
+    }
+
+    #[test]
+    fn kv_mean_rounds_half_up_instead_of_truncating() {
+        let mut s = MetricsSeries::new(10, 2);
+        s.feed(5, 0, &EventKind::KvOccupancy { permille: 700 });
+        s.feed(6, 1, &EventKind::KvOccupancy { permille: 301 });
+        s.finish(9);
+        let csv = s.to_csv();
+        let row = csv.lines().nth(1).expect("one window");
+        // (700 + 301) / 2 = 500.5 → 501; integer truncation said 500.
+        assert!(row.ends_with(",501"), "row: {row}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "gauge for device")]
+    fn out_of_range_gauge_device_panics_in_debug() {
+        let mut s = MetricsSeries::new(10, 2);
+        s.feed(5, 2, &EventKind::QueueDepth { depth: 1 });
     }
 
     #[test]

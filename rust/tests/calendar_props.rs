@@ -1,0 +1,286 @@
+//! Event-calendar conformance (ISSUE 7): the indexed wake-up calendar
+//! is a *finding* optimization, never a *semantic* one. Both fleet
+//! simulators keep their pre-refactor loop as `run_reference` — the
+//! conformance oracle — and the calendar-driven `run` must stay
+//! **bit-identical** to it per seed: metrics, completions (token data
+//! included), rendered trace bytes and series CSV, across random
+//! rosters, policies, disciplines, batching, stealing, migration,
+//! chunked prefill, and timing-only mode. The 256-device stress shapes
+//! pin byte-determinism and conservation at a scale the unit tests
+//! never reach.
+
+use cgra_edge::cluster::{
+    ArrivalProcess, BatchPolicy, Discipline, FleetConfig, FleetSim, GenRequest, ModelClass,
+    Placement, WorkloadGen,
+};
+use cgra_edge::config::DeviceClass;
+use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeSchedule, GenCompletion};
+use cgra_edge::obs::ObsConfig;
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::prop::{prop_check, CaseResult, PropConfig};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::XformerConfig;
+
+fn gen_classes() -> Vec<ModelClass> {
+    vec![ModelClass {
+        name: "gen-tiny",
+        cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }]
+}
+
+fn gen_request(id: u64, prompt_rows: usize, max_new: usize, arrival: u64, seed: u64) -> GenRequest {
+    let mut rng = XorShiftRng::new(0xCA1E_6000 + seed);
+    let mut prompt = MatF32::zeros(prompt_rows, 16);
+    for v in &mut prompt.data {
+        *v = rng.normal() * 0.5;
+    }
+    GenRequest { id, model: 0, prompt, max_new_tokens: max_new, arrival_cycle: arrival }
+}
+
+/// Tentpole invariant, encoder side: the calendar loop is bit-identical
+/// to the reference O(D) scan — metrics and trace bytes — across
+/// random rosters, placement policies, disciplines, batch caps,
+/// stealing, and timing-only mode.
+#[test]
+fn prop_encoder_calendar_loop_matches_reference_scan() {
+    prop_check(
+        "encoder fleet: calendar run == reference scan",
+        PropConfig { cases: 5, base_seed: 0xCA1E_0001 },
+        |rng| {
+            let classes = ModelClass::edge_mix();
+            let rosters = ["4x4@100:3", "4x4@100:2,8x4@200:1", "8x4@200:4"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 3)]).unwrap();
+            let policy = [
+                Placement::RoundRobin,
+                Placement::LeastLoaded,
+                Placement::ShortestExpectedJob,
+            ][rng.range(0, 3)];
+            let discipline =
+                [Discipline::Fifo, Discipline::Priority, Discipline::Edf][rng.range(0, 3)];
+            let batch = rng.range(1, 4);
+            let steal = rng.range(0, 2) == 0;
+            let timing_only = rng.range(0, 2) == 0;
+            let seed = rng.next_u64();
+            let mut gen = WorkloadGen::new(
+                ArrivalProcess::Poisson { rate_rps: 400.0 },
+                classes.clone(),
+                100.0,
+                seed,
+            );
+            let requests = gen.generate(rng.range(8, 24));
+            let cfg = FleetConfig {
+                roster: roster.clone(),
+                policy,
+                discipline,
+                batch: BatchPolicy::greedy(batch),
+                steal,
+                ref_mhz: 100,
+                timing_only,
+                ..Default::default()
+            };
+            let mut calendar = FleetSim::new(cfg.clone(), &classes, 42);
+            calendar.enable_obs(&ObsConfig::full(25_000));
+            let m_cal = calendar.run(requests.clone()).unwrap();
+            let mut reference = FleetSim::new(cfg, &classes, 42);
+            reference.enable_obs(&ObsConfig::full(25_000));
+            let m_ref = reference.run_reference(requests).unwrap();
+            if m_cal != m_ref {
+                return CaseResult::Fail(format!(
+                    "metrics diverge from the reference loop \
+                     ({policy:?}, {discipline:?}, batch {batch}, steal {steal}, \
+                     timing_only {timing_only})"
+                ));
+            }
+            if calendar.obs().trace_json() != reference.obs().trace_json() {
+                return CaseResult::Fail("trace bytes diverge from the reference loop".into());
+            }
+            if calendar.obs().series_csv() != reference.obs().series_csv() {
+                return CaseResult::Fail("series CSV diverges from the reference loop".into());
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// Tentpole invariant, decode side: the calendar loop is bit-identical
+/// to the reference loop — metrics, completions with token data, and
+/// trace bytes — across rosters, schedules (chunked prefill included),
+/// migration, and timing-only mode.
+#[test]
+fn prop_decode_calendar_loop_matches_reference_scan() {
+    prop_check(
+        "decode fleet: calendar run == reference scan",
+        PropConfig { cases: 5, base_seed: 0xCA1E_0002 },
+        |rng| {
+            let classes = gen_classes();
+            let rosters = ["4x4@100:2", "4x4@100:1,8x4@200:1", "4x4@100:3"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 3)]).unwrap();
+            let schedule = match rng.range(0, 3) {
+                0 => DecodeSchedule::PrefillFirst,
+                1 => DecodeSchedule::DecodeFirst,
+                _ => DecodeSchedule::Chunked { chunk_tokens: rng.range(1, 4) },
+            };
+            let migrate = rng.range(0, 2) == 0;
+            let timing_only = rng.range(0, 2) == 0;
+            let n = rng.range(3, 8);
+            let requests: Vec<GenRequest> = (0..n)
+                .map(|i| {
+                    let prompt = rng.range(1, 5);
+                    let max_new = rng.range(1, 8 - prompt + 1);
+                    let arrival = (i as u64) * rng.below(30_000);
+                    gen_request(i as u64, prompt, max_new, arrival, rng.next_u64())
+                })
+                .collect();
+            let cfg = DecodeFleetConfig {
+                roster: roster.clone(),
+                ref_mhz: 100,
+                max_running: 2,
+                schedule,
+                migrate,
+                timing_only,
+                ..Default::default()
+            };
+            let mut calendar = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+            calendar.enable_obs(&ObsConfig::full(25_000));
+            let (m_cal, d_cal) = calendar.run(requests.clone()).unwrap();
+            let mut reference = DecodeFleetSim::new(cfg, &classes, 42);
+            reference.enable_obs(&ObsConfig::full(25_000));
+            let (m_ref, d_ref) = reference.run_reference(requests).unwrap();
+            if m_cal != m_ref {
+                return CaseResult::Fail(format!(
+                    "metrics diverge from the reference loop \
+                     ({schedule:?}, migrate {migrate}, timing_only {timing_only})"
+                ));
+            }
+            if d_cal != d_ref {
+                return CaseResult::Fail(
+                    "completions (token data included) diverge from the reference loop".into(),
+                );
+            }
+            if calendar.obs().trace_json() != reference.obs().trace_json() {
+                return CaseResult::Fail("trace bytes diverge from the reference loop".into());
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// Stress shape (ISSUE 7 satellite): 256 devices, bursty arrivals,
+/// stealing on, timing-only. The calendar run must match the reference
+/// loop, conserve every request, and render byte-identical traces
+/// across repeated runs.
+#[test]
+fn encoder_stress_256_devices_bursty_steal_is_byte_deterministic() {
+    let classes = ModelClass::edge_mix();
+    let roster = DeviceClass::parse_roster("4x4@100:128,8x4@200:128").unwrap();
+    let n = 600;
+    let mut gen = WorkloadGen::new(
+        ArrivalProcess::BurstyOnOff {
+            rate_on_rps: 20_000.0,
+            rate_off_rps: 100.0,
+            mean_on_s: 0.002,
+            mean_off_s: 0.001,
+        },
+        classes.clone(),
+        100.0,
+        0xCA1E_0003,
+    );
+    let requests = gen.generate(n);
+    let cfg = FleetConfig {
+        roster,
+        policy: Placement::ShortestExpectedJob,
+        discipline: Discipline::Fifo,
+        batch: BatchPolicy::greedy(4),
+        steal: true,
+        ref_mhz: 100,
+        timing_only: true,
+        ..Default::default()
+    };
+    let mk = || {
+        let mut fleet = FleetSim::new(cfg.clone(), &classes, 42);
+        fleet.enable_obs(&ObsConfig::full(50_000));
+        let m = fleet.run(requests.clone()).unwrap();
+        let trace = fleet.obs().trace_json().expect("tracing was armed");
+        (m, trace)
+    };
+    let (m1, t1) = mk();
+    let (m2, t2) = mk();
+    assert_eq!(m1, m2, "256-device stress metrics must be seed-deterministic");
+    assert_eq!(t1, t2, "256-device stress trace bytes must be deterministic");
+    assert_eq!(
+        m1.completed + m1.dropped,
+        n as u64,
+        "every request is served or dropped, none lost at scale"
+    );
+    assert_eq!(m1.per_device.len(), 256);
+    let mut reference = FleetSim::new(cfg.clone(), &classes, 42);
+    reference.enable_obs(&ObsConfig::full(50_000));
+    let m_ref = reference.run_reference(requests).unwrap();
+    assert_eq!(m1, m_ref, "stress run must match the reference loop");
+    assert_eq!(
+        Some(t1),
+        reference.obs().trace_json(),
+        "stress trace must match the reference loop byte-for-byte"
+    );
+}
+
+/// Decode twin of the stress shape: 256 devices, bursty arrivals,
+/// migration on, timing-only — token conservation and trace
+/// byte-determinism at scale, pinned to the reference loop.
+#[test]
+fn decode_stress_256_devices_bursty_migrate_conserves_tokens() {
+    let classes = gen_classes();
+    let roster = DeviceClass::parse_roster("4x4@100:128,8x4@200:128").unwrap();
+    let n: usize = 300;
+    let mut rng = XorShiftRng::new(0xCA1E_0004);
+    let mut at = 0u64;
+    let requests: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            // Bursty by hand: tight intra-burst gaps, long off phases.
+            at += if rng.range(0, 8) == 0 { 40_000 + rng.below(80_000) } else { rng.below(300) };
+            let prompt = rng.range(1, 5);
+            let max_new = rng.range(1, 8 - prompt + 1);
+            gen_request(i as u64, prompt, max_new, at, rng.next_u64())
+        })
+        .collect();
+    let cfg = DecodeFleetConfig {
+        roster,
+        ref_mhz: 100,
+        max_running: 4,
+        schedule: DecodeSchedule::Chunked { chunk_tokens: 4 },
+        migrate: true,
+        timing_only: true,
+        ..Default::default()
+    };
+    let mk = || {
+        let mut fleet = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+        fleet.enable_obs(&ObsConfig::full(50_000));
+        let (m, done) = fleet.run(requests.clone()).unwrap();
+        let trace = fleet.obs().trace_json().expect("tracing was armed");
+        (m, done, trace)
+    };
+    let (m1, d1, t1) = mk();
+    let (m2, d2, t2) = mk();
+    assert_eq!(m1, m2, "decode stress metrics must be seed-deterministic");
+    assert_eq!(d1, d2);
+    assert_eq!(t1, t2, "decode stress trace bytes must be deterministic");
+    assert_eq!(m1.completed + m1.rejected, n as u64, "every request completes or is rejected");
+    assert_eq!(
+        m1.tokens,
+        d1.iter().map(|c: &GenCompletion| c.tokens.rows as u64).sum::<u64>(),
+        "every emitted token belongs to exactly one completion"
+    );
+    let mut reference = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+    reference.enable_obs(&ObsConfig::full(50_000));
+    let (m_ref, d_ref) = reference.run_reference(requests).unwrap();
+    assert_eq!(m1, m_ref, "decode stress must match the reference loop");
+    assert_eq!(d1, d_ref);
+    assert_eq!(
+        Some(t1),
+        reference.obs().trace_json(),
+        "decode stress trace must match the reference loop byte-for-byte"
+    );
+}
