@@ -9,13 +9,14 @@
 //!
 //! ## Lazy invalidation
 //!
-//! The loops never delete entries. A device's wake-up is pushed at
-//! every busy transition (`free_at` moves forward) and whenever a
-//! condition that gates its next service appears (work queued behind a
-//! busy device). When the loop asks for the earliest event it passes a
-//! validity predicate; stale entries — superseded `free_at` stamps, or
-//! devices whose queue has since drained — are popped and discarded on
-//! the way to the first valid one. This is sound because:
+//! The loops never delete entries in place. A device's wake-up is
+//! pushed at every busy transition (`free_at` moves forward) and
+//! whenever a condition that gates its next service appears (work
+//! queued behind a busy device). When the loop asks for the earliest
+//! event it passes a validity predicate; stale entries — superseded
+//! `free_at` stamps, or devices whose queue has since drained — are
+//! popped and discarded on the way to the first valid one. This is
+//! sound because:
 //!
 //! - `free_at` is monotone non-decreasing, so a stale stamp is always
 //!   *earlier* than the device's true wake-up and a fresh entry has
@@ -26,6 +27,22 @@
 //!
 //! Each entry is pushed once and popped once, so the amortized cost per
 //! event is O(log D) instead of O(D).
+//!
+//! ## Stale-fraction compaction
+//!
+//! Migration- and steal-heavy runs re-push the same device many times
+//! between queries, so superseded entries can pile up faster than lazy
+//! discard drains them and the heap grows past O(D). The calendar
+//! therefore counts provably superseded entries — an entry is
+//! *superseded* when a later stamp has since been pushed for the same
+//! device, which (stamps being monotone per device) means its
+//! `free_at == at` validity can never hold again — and rebuilds the
+//! heap without them once they exceed half the entries (and the heap
+//! is big enough for the rebuild to matter). Compaction drops only
+//! entries the lazy discard was already guaranteed to throw away, so
+//! query results are unchanged — it bounds the heap at 2× the live
+//! entry count (plus the [`Self::COMPACT_MIN`] floor) without touching
+//! scheduling.
 //!
 //! ## Determinism
 //!
@@ -42,21 +59,82 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 /// A binary min-heap of `(wake-up cycle, device)` entries with lazy
-/// invalidation (see the module docs for the soundness argument).
+/// invalidation and stale-fraction compaction (see the module docs for
+/// the soundness argument).
 #[derive(Debug, Default)]
 pub struct WakeCalendar {
     heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Latest stamp pushed per device (0 = never pushed; the loops only
+    /// push future stamps, so 0 is never a real entry's stamp clash).
+    latest: Vec<u64>,
+    /// Entries in the heap carrying `latest[d]` for their device — the
+    /// only entries whose validity predicate can still accept them.
+    live_at_latest: Vec<u32>,
+    /// Entries provably superseded by a later push for their device.
+    stale: usize,
 }
 
 impl WakeCalendar {
+    /// Below this heap length compaction is never attempted: rebuilding
+    /// a tiny heap costs more than the stale entries it would drop.
+    pub const COMPACT_MIN: usize = 64;
+
     pub fn new() -> Self {
         Self::default()
     }
 
+    fn ensure_device(&mut self, device: usize) {
+        if device >= self.latest.len() {
+            self.latest.resize(device + 1, 0);
+            self.live_at_latest.resize(device + 1, 0);
+        }
+    }
+
     /// Schedule a wake-up for `device` at cycle `at`. Duplicates are
-    /// fine — stale ones are discarded at query time.
+    /// fine — stale ones are discarded at query time (or dropped in
+    /// bulk by compaction once they dominate the heap).
     pub fn push(&mut self, at: u64, device: usize) {
+        self.ensure_device(device);
+        match at.cmp(&self.latest[device]) {
+            std::cmp::Ordering::Greater => {
+                self.stale += self.live_at_latest[device] as usize;
+                self.latest[device] = at;
+                self.live_at_latest[device] = 1;
+            }
+            std::cmp::Ordering::Equal => self.live_at_latest[device] += 1,
+            // A push below the device's latest stamp arrives already
+            // superseded (the loops never do this, but the accounting
+            // must stay exact either way).
+            std::cmp::Ordering::Less => self.stale += 1,
+        }
         self.heap.push(Reverse((at, device)));
+        if self.stale * 2 > self.heap.len() && self.heap.len() >= Self::COMPACT_MIN {
+            self.compact();
+        }
+    }
+
+    /// Account one entry leaving the heap (any pop path).
+    fn note_removed(&mut self, at: u64, device: usize) {
+        if at == self.latest[device] && self.live_at_latest[device] > 0 {
+            self.live_at_latest[device] -= 1;
+        } else {
+            self.stale -= 1;
+        }
+    }
+
+    /// Rebuild the heap without superseded entries. Pure dead-weight
+    /// removal: every dropped entry fails `at == latest[device]`, which
+    /// the monotone-stamp argument shows can never become valid again,
+    /// so every query answers exactly as before.
+    fn compact(&mut self) {
+        let latest = &self.latest;
+        let entries = std::mem::take(&mut self.heap).into_vec();
+        self.heap = entries
+            .into_iter()
+            .filter(|&Reverse((at, d))| at == latest[d])
+            .collect::<Vec<_>>()
+            .into();
+        self.stale = 0;
     }
 
     /// The earliest entry satisfying `valid`, discarding stale entries
@@ -71,6 +149,7 @@ impl WakeCalendar {
                 return Some((at, d));
             }
             self.heap.pop();
+            self.note_removed(at, d);
         }
         None
     }
@@ -84,6 +163,7 @@ impl WakeCalendar {
                 break;
             }
             self.heap.pop();
+            self.note_removed(at, d);
             f(at, d);
         }
     }
@@ -135,5 +215,84 @@ mod tests {
         let mut cal = WakeCalendar::new();
         assert_eq!(cal.earliest_valid(|_, _| true), None);
         cal.pop_until(u64::MAX, |_, _| panic!("nothing to pop"));
+    }
+
+    /// ISSUE 8 satellite: a migration/steal-heavy push pattern — the
+    /// same few devices re-pushed with ever-later stamps — must not
+    /// grow the heap without bound. With one live entry per device the
+    /// heap stays under `max(2 × live + 1, COMPACT_MIN + 1)` at every
+    /// step, instead of the 40 000 entries the uncompacted heap held.
+    #[test]
+    fn compaction_bounds_heap_length_under_repeated_supersession() {
+        let devices = 4usize;
+        let mut cal = WakeCalendar::new();
+        let bound = (2 * devices + 1).max(WakeCalendar::COMPACT_MIN + 1);
+        for round in 1..=10_000u64 {
+            for d in 0..devices {
+                cal.push(round * 10 + d as u64, d);
+                assert!(
+                    cal.len() <= bound,
+                    "heap grew to {} entries (bound {bound}) at round {round}",
+                    cal.len()
+                );
+            }
+        }
+        // Everything but the last round's stamps is superseded; the
+        // final state is within one compaction of the live count.
+        assert!(cal.len() <= bound);
+    }
+
+    /// Compaction is a pure dead-weight removal: the surviving pop
+    /// order (`pop_until` to the horizon) is exactly the live entries
+    /// in `(stamp, device)` order — identical to what the uncompacted
+    /// heap delivers once lazy discard has skipped the stale stamps.
+    #[test]
+    fn compaction_preserves_pop_order_of_live_entries() {
+        let devices = 8usize;
+        let mut cal = WakeCalendar::new();
+        let mut latest = vec![0u64; devices];
+        // Deterministic churn: device d is superseded many times, with
+        // interleaved stamp order across devices.
+        for round in 1..=2_000u64 {
+            let d = (round as usize * 5 + 3) % devices;
+            let at = round * 7 + d as u64;
+            latest[d] = at;
+            cal.push(at, d);
+        }
+        // The live set is each device's latest stamp; stale entries are
+        // filtered by the same free_at-style predicate the loops use.
+        let mut expect: Vec<(u64, usize)> =
+            (0..devices).map(|d| (latest[d], d)).collect();
+        expect.sort_unstable();
+        assert_eq!(
+            cal.earliest_valid(|at, d| at == latest[d]),
+            Some(expect[0]),
+            "earliest live entry must survive compaction"
+        );
+        let mut seen = Vec::new();
+        cal.pop_until(u64::MAX, |at, d| {
+            if at == latest[d] {
+                seen.push((at, d));
+            }
+        });
+        assert_eq!(seen, expect, "live pop order changed under compaction");
+        assert!(cal.is_empty());
+    }
+
+    /// A stamp pushed twice for one device is *live* twice (the loops
+    /// push `free_at` from several code paths): compaction must keep
+    /// the duplicates, and popping one must not mark the other stale.
+    #[test]
+    fn duplicate_latest_stamps_survive_compaction() {
+        let mut cal = WakeCalendar::new();
+        for _ in 0..WakeCalendar::COMPACT_MIN {
+            cal.push(100, 0); // same stamp: all live, nothing to drop
+        }
+        assert_eq!(cal.len(), WakeCalendar::COMPACT_MIN);
+        cal.push(200, 0); // supersedes all of them at once
+        assert!(cal.len() <= WakeCalendar::COMPACT_MIN + 1, "supersession must compact");
+        let mut seen = Vec::new();
+        cal.pop_until(u64::MAX, |at, d| seen.push((at, d)));
+        assert_eq!(seen.last(), Some(&(200, 0)));
     }
 }

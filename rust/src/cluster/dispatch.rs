@@ -24,6 +24,194 @@
 
 use super::workload::FleetRequest;
 use std::collections::{BTreeMap, VecDeque};
+use std::ops::Range;
+
+/// Reusable output buffers for batch pops. The run loops hold one per
+/// serve context and clear-and-refill it every pop instead of
+/// allocating fresh `Vec`s per tick (the steady-state allocation cut
+/// from ISSUE 8).
+#[derive(Debug, Default)]
+pub struct PopScratch {
+    /// EDF deadline misses removed on the way to the batch.
+    pub dropped: Vec<FleetRequest>,
+    /// The coalesced batch to serve.
+    pub batch: Vec<FleetRequest>,
+}
+
+/// Queue access for the generic serve path, addressed by **global**
+/// device index. Three implementors: the full [`Dispatcher`]
+/// (single-threaded loops and the lockstep coordinator),
+/// [`ShardQueuesMut`] (a borrowed slice of the dispatcher's queues
+/// owned by one lockstep epoch worker), and [`OffsetQueues`] (a
+/// shard-private dispatcher inside a decoupled worker). All three run
+/// the *same* pop internals, so batch formation is bit-identical no
+/// matter which executor drives it.
+pub trait QueueSource {
+    /// Requests queued on device `d` (excludes the one in service).
+    fn queued(&self, d: usize) -> usize;
+    /// Preview the batch a pop would form on device `d`.
+    fn peek_batch(&self, d: usize, key_of: impl Fn(usize) -> u64) -> Option<BatchOutlook>;
+    /// Pop the discipline head plus coalescible followers into
+    /// `out` (cleared first), recording EDF expiries in `out.dropped`.
+    fn pop_batch_into(
+        &mut self,
+        d: usize,
+        now: u64,
+        max_batch: usize,
+        key_of: impl Fn(usize) -> u64 + Copy,
+        out: &mut PopScratch,
+    );
+}
+
+/// Index of the next request in `q` per `discipline`, optionally
+/// restricted to one batch-key group (batch coalescing; `key_of` maps
+/// a model id to its coalescing key — shape-identical aliases share
+/// one). `None` when no candidate exists.
+fn select_in(
+    q: &VecDeque<FleetRequest>,
+    discipline: Discipline,
+    group: Option<u64>,
+    key_of: impl Fn(usize) -> u64,
+) -> Option<usize> {
+    let key = |r: &FleetRequest| r.deadline_cycle.unwrap_or(u64::MAX);
+    let mut best: Option<usize> = None;
+    for (i, r) in q.iter().enumerate() {
+        if group.is_some_and(|g| key_of(r.model) != g) {
+            continue;
+        }
+        best = Some(match best {
+            None => i,
+            Some(b) => {
+                let better = match discipline {
+                    // Queue order is arrival order, so the first
+                    // candidate wins.
+                    Discipline::Fifo => false,
+                    Discipline::Priority => r.priority < q[b].priority,
+                    Discipline::Edf => key(r) < key(&q[b]),
+                };
+                if better {
+                    i
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best
+}
+
+/// Pop the next request per the discipline (restricted to one
+/// batch-key group when coalescing), appending EDF deadline misses to
+/// `dropped`. Returns how many requests left the queue (served +
+/// dropped) so the caller can settle its depth accounting.
+fn pop_filtered_in(
+    q: &mut VecDeque<FleetRequest>,
+    discipline: Discipline,
+    now: u64,
+    group: Option<u64>,
+    key_of: impl Fn(usize) -> u64,
+    dropped: &mut Vec<FleetRequest>,
+) -> (usize, Option<FleetRequest>) {
+    let mut removed = 0usize;
+    loop {
+        let Some(idx) = select_in(q, discipline, group, &key_of) else {
+            return (removed, None);
+        };
+        // The discipline head is the queue front for FIFO (and
+        // whenever arrival order wins): pop instead of shifting.
+        let req = if idx == 0 {
+            q.pop_front().expect("selected head")
+        } else {
+            q.remove(idx).expect("index in range")
+        };
+        removed += 1;
+        if discipline == Discipline::Edf {
+            if let Some(dl) = req.deadline_cycle {
+                if dl < now {
+                    dropped.push(req);
+                    continue;
+                }
+            }
+        }
+        return (removed, Some(req));
+    }
+}
+
+/// The shared batch-pop body (see [`Dispatcher::pop_batch`] for
+/// semantics). Appends to `dropped`/`batch` and returns how many
+/// requests left `q`.
+fn pop_batch_in(
+    q: &mut VecDeque<FleetRequest>,
+    scratch: &mut VecDeque<FleetRequest>,
+    discipline: Discipline,
+    now: u64,
+    max_batch: usize,
+    key_of: impl Fn(usize) -> u64 + Copy,
+    dropped: &mut Vec<FleetRequest>,
+    batch: &mut Vec<FleetRequest>,
+) -> usize {
+    let b0 = batch.len();
+    let d0 = dropped.len();
+    if discipline == Discipline::Fifo {
+        // FIFO fast path: the head is the queue front and there is
+        // no expiry, so one swap/drain pass partitions the queue
+        // into (batch, keepers) — O(n) total instead of an O(n)
+        // `VecDeque::remove` per coalesced follower. Keepers return
+        // in their original relative order, exactly as the
+        // remove-by-index path left them.
+        let cap = max_batch.max(1);
+        let mut pending = std::mem::take(scratch);
+        std::mem::swap(q, &mut pending);
+        let mut group: Option<u64> = None;
+        for r in pending.drain(..) {
+            match group {
+                None => {
+                    group = Some(key_of(r.model));
+                    batch.push(r);
+                }
+                Some(g) if batch.len() - b0 < cap && key_of(r.model) == g => batch.push(r),
+                Some(_) => q.push_back(r),
+            }
+        }
+        *scratch = pending;
+        return batch.len() - b0;
+    }
+    let (mut removed, head) = pop_filtered_in(q, discipline, now, None, key_of, dropped);
+    let Some(head) = head else {
+        return removed;
+    };
+    let group = key_of(head.model);
+    batch.push(head);
+    while batch.len() - b0 < max_batch.max(1) {
+        let (r, follower) = pop_filtered_in(q, discipline, now, Some(group), key_of, dropped);
+        removed += r;
+        match follower {
+            Some(req) => batch.push(req),
+            None => break,
+        }
+    }
+    debug_assert_eq!(removed, (batch.len() - b0) + (dropped.len() - d0));
+    removed
+}
+
+/// Preview the batch a pop would form on `q` (see
+/// [`Dispatcher::peek_batch`]).
+fn peek_batch_in(
+    q: &VecDeque<FleetRequest>,
+    discipline: Discipline,
+    key_of: impl Fn(usize) -> u64,
+) -> Option<BatchOutlook> {
+    let idx = select_in(q, discipline, None, &key_of)?;
+    let model = q[idx].model;
+    let group = key_of(model);
+    let count = q.iter().filter(|r| key_of(r.model) == group).count();
+    Some(BatchOutlook {
+        count,
+        model,
+        head_arrival: q[idx].arrival_cycle,
+        head_deadline: q[idx].deadline_cycle,
+    })
+}
 
 /// Device-placement policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -151,6 +339,10 @@ pub struct Dispatcher {
     /// Reusable drain buffer for the FIFO batch pop (swap/drain instead
     /// of per-element `VecDeque::remove`); always empty between calls.
     scratch: VecDeque<FleetRequest>,
+    /// Per-shard drain buffers lent to [`ShardQueuesMut`] views during
+    /// a lockstep parallel epoch (one per worker, reused across
+    /// epochs); sized lazily on first `shard_views_mut`.
+    shard_scratch: Vec<VecDeque<FleetRequest>>,
 }
 
 impl Dispatcher {
@@ -164,6 +356,7 @@ impl Dispatcher {
             affinity: BTreeMap::new(),
             total: 0,
             scratch: VecDeque::new(),
+            shard_scratch: Vec::new(),
         }
     }
 
@@ -230,74 +423,14 @@ impl Dispatcher {
         dev
     }
 
-    /// Index of the next request in `q` per `discipline`, optionally
-    /// restricted to one batch-key group (batch coalescing; `key_of`
-    /// maps a model id to its coalescing key — shape-identical aliases
-    /// share one). `None` when no candidate exists.
-    fn select(
-        q: &VecDeque<FleetRequest>,
-        discipline: Discipline,
-        group: Option<u64>,
-        key_of: impl Fn(usize) -> u64,
-    ) -> Option<usize> {
-        let key = |r: &FleetRequest| r.deadline_cycle.unwrap_or(u64::MAX);
-        let mut best: Option<usize> = None;
-        for (i, r) in q.iter().enumerate() {
-            if group.is_some_and(|g| key_of(r.model) != g) {
-                continue;
-            }
-            best = Some(match best {
-                None => i,
-                Some(b) => {
-                    let better = match discipline {
-                        // Queue order is arrival order, so the first
-                        // candidate wins.
-                        Discipline::Fifo => false,
-                        Discipline::Priority => r.priority < q[b].priority,
-                        Discipline::Edf => key(r) < key(&q[b]),
-                    };
-                    if better {
-                        i
-                    } else {
-                        b
-                    }
-                }
-            });
-        }
-        best
-    }
-
-    /// Pop the next request per the discipline (restricted to one
-    /// batch-key group when coalescing), appending EDF deadline misses
-    /// to `dropped`.
-    fn pop_filtered(
-        &mut self,
-        d: usize,
-        now: u64,
-        group: Option<u64>,
-        key_of: impl Fn(usize) -> u64,
-        dropped: &mut Vec<FleetRequest>,
-    ) -> Option<FleetRequest> {
-        loop {
-            let idx = Self::select(&self.queues[d], self.discipline, group, &key_of)?;
-            // The discipline head is the queue front for FIFO (and
-            // whenever arrival order wins): pop instead of shifting.
-            let req = if idx == 0 {
-                self.queues[d].pop_front().expect("selected head")
-            } else {
-                self.queues[d].remove(idx).expect("index in range")
-            };
-            self.total -= 1;
-            if self.discipline == Discipline::Edf {
-                if let Some(dl) = req.deadline_cycle {
-                    if dl < now {
-                        dropped.push(req);
-                        continue;
-                    }
-                }
-            }
-            return Some(req);
-        }
+    /// Append `req` to device `d`'s queue directly, bypassing the
+    /// placement scan. The decoupled threaded backend pre-routes
+    /// round-robin arrivals (pure rotation — the routing is a function
+    /// of the arrival index alone) and replays the placement into each
+    /// shard's private dispatcher with this.
+    pub fn enqueue(&mut self, d: usize, req: FleetRequest) {
+        self.queues[d].push_back(req);
+        self.total += 1;
     }
 
     /// Pop device `d`'s next request per the discipline. Returns the
@@ -305,7 +438,15 @@ impl Dispatcher {
     /// to serve, if any.
     pub fn pop(&mut self, d: usize, now: u64) -> (Vec<FleetRequest>, Option<FleetRequest>) {
         let mut dropped = Vec::new();
-        let job = self.pop_filtered(d, now, None, |m| m as u64, &mut dropped);
+        let (removed, job) = pop_filtered_in(
+            &mut self.queues[d],
+            self.discipline,
+            now,
+            None,
+            |m| m as u64,
+            &mut dropped,
+        );
+        self.total -= removed;
         (dropped, job)
     }
 
@@ -323,45 +464,9 @@ impl Dispatcher {
         max_batch: usize,
         key_of: impl Fn(usize) -> u64 + Copy,
     ) -> (Vec<FleetRequest>, Vec<FleetRequest>) {
-        let mut dropped = Vec::new();
-        let mut batch = Vec::new();
-        if self.discipline == Discipline::Fifo {
-            // FIFO fast path: the head is the queue front and there is
-            // no expiry, so one swap/drain pass partitions the queue
-            // into (batch, keepers) — O(n) total instead of an O(n)
-            // `VecDeque::remove` per coalesced follower. Keepers return
-            // in their original relative order, exactly as the
-            // remove-by-index path left them.
-            let cap = max_batch.max(1);
-            let mut pending = std::mem::take(&mut self.scratch);
-            std::mem::swap(&mut self.queues[d], &mut pending);
-            let mut group: Option<u64> = None;
-            for r in pending.drain(..) {
-                match group {
-                    None => {
-                        group = Some(key_of(r.model));
-                        batch.push(r);
-                    }
-                    Some(g) if batch.len() < cap && key_of(r.model) == g => batch.push(r),
-                    Some(_) => self.queues[d].push_back(r),
-                }
-            }
-            self.scratch = pending;
-            self.total -= batch.len();
-            return (dropped, batch);
-        }
-        let Some(head) = self.pop_filtered(d, now, None, key_of, &mut dropped) else {
-            return (dropped, batch);
-        };
-        let group = key_of(head.model);
-        batch.push(head);
-        while batch.len() < max_batch.max(1) {
-            match self.pop_filtered(d, now, Some(group), key_of, &mut dropped) {
-                Some(r) => batch.push(r),
-                None => break,
-            }
-        }
-        (dropped, batch)
+        let mut out = PopScratch::default();
+        QueueSource::pop_batch_into(self, d, now, max_batch, key_of, &mut out);
+        (out.dropped, out.batch)
     }
 
     /// Preview the batch a pop would form on device `d` (the fleet's
@@ -370,17 +475,164 @@ impl Dispatcher {
     /// The reported `count` spans every queued request sharing the
     /// head's batch key; `model` is the head's own id.
     pub fn peek_batch(&self, d: usize, key_of: impl Fn(usize) -> u64) -> Option<BatchOutlook> {
-        let q = &self.queues[d];
-        let idx = Self::select(q, self.discipline, None, &key_of)?;
-        let model = q[idx].model;
-        let group = key_of(model);
-        let count = q.iter().filter(|r| key_of(r.model) == group).count();
-        Some(BatchOutlook {
-            count,
-            model,
-            head_arrival: q[idx].arrival_cycle,
-            head_deadline: q[idx].deadline_cycle,
-        })
+        peek_batch_in(&self.queues[d], self.discipline, key_of)
+    }
+
+    /// Borrow the queues as disjoint per-shard views for one lockstep
+    /// parallel epoch. `ranges` must partition `0..devices`
+    /// contiguously in ascending order (the shard layout from
+    /// `threads::shard_ranges`). Each view owns a reusable drain
+    /// buffer and counts its own pops; the caller settles the O(1)
+    /// depth total afterwards with [`Self::note_removed`].
+    pub fn shard_views_mut(&mut self, ranges: &[Range<usize>]) -> Vec<ShardQueuesMut<'_>> {
+        if self.shard_scratch.len() < ranges.len() {
+            self.shard_scratch.resize_with(ranges.len(), VecDeque::new);
+        }
+        let discipline = self.discipline;
+        let mut views = Vec::with_capacity(ranges.len());
+        let mut queues_rest: &mut [VecDeque<FleetRequest>] = &mut self.queues;
+        let mut scratch_rest: &mut [VecDeque<FleetRequest>] = &mut self.shard_scratch;
+        let mut off = 0usize;
+        for r in ranges {
+            debug_assert_eq!(r.start, off, "shard ranges must partition the roster");
+            let (qs, q_rest) = queues_rest.split_at_mut(r.end - off);
+            queues_rest = q_rest;
+            let (sc, sc_rest) = scratch_rest.split_at_mut(1);
+            scratch_rest = sc_rest;
+            views.push(ShardQueuesMut {
+                base: off,
+                discipline,
+                queues: qs,
+                scratch: &mut sc[0],
+                popped: 0,
+            });
+            off = r.end;
+        }
+        views
+    }
+
+    /// Settle the O(1) depth total after a parallel epoch: `removed`
+    /// requests left shard queues through [`ShardQueuesMut`] views
+    /// (which cannot reach the total themselves — that is the whole
+    /// point of handing each worker only its shard).
+    pub fn note_removed(&mut self, removed: usize) {
+        self.total -= removed;
+    }
+}
+
+impl QueueSource for Dispatcher {
+    fn queued(&self, d: usize) -> usize {
+        Dispatcher::queued(self, d)
+    }
+
+    fn peek_batch(&self, d: usize, key_of: impl Fn(usize) -> u64) -> Option<BatchOutlook> {
+        Dispatcher::peek_batch(self, d, key_of)
+    }
+
+    fn pop_batch_into(
+        &mut self,
+        d: usize,
+        now: u64,
+        max_batch: usize,
+        key_of: impl Fn(usize) -> u64 + Copy,
+        out: &mut PopScratch,
+    ) {
+        out.dropped.clear();
+        out.batch.clear();
+        let removed = pop_batch_in(
+            &mut self.queues[d],
+            &mut self.scratch,
+            self.discipline,
+            now,
+            max_batch,
+            key_of,
+            &mut out.dropped,
+            &mut out.batch,
+        );
+        self.total -= removed;
+    }
+}
+
+/// One shard's slice of the dispatcher's queues, lent to a lockstep
+/// epoch worker. Addressed by global device index; counts its own
+/// pops for the coordinator to settle at the barrier.
+#[derive(Debug)]
+pub struct ShardQueuesMut<'a> {
+    base: usize,
+    discipline: Discipline,
+    queues: &'a mut [VecDeque<FleetRequest>],
+    scratch: &'a mut VecDeque<FleetRequest>,
+    popped: usize,
+}
+
+impl ShardQueuesMut<'_> {
+    /// Requests removed through this view (for
+    /// [`Dispatcher::note_removed`]).
+    pub fn popped(&self) -> usize {
+        self.popped
+    }
+}
+
+impl QueueSource for ShardQueuesMut<'_> {
+    fn queued(&self, d: usize) -> usize {
+        self.queues[d - self.base].len()
+    }
+
+    fn peek_batch(&self, d: usize, key_of: impl Fn(usize) -> u64) -> Option<BatchOutlook> {
+        peek_batch_in(&self.queues[d - self.base], self.discipline, key_of)
+    }
+
+    fn pop_batch_into(
+        &mut self,
+        d: usize,
+        now: u64,
+        max_batch: usize,
+        key_of: impl Fn(usize) -> u64 + Copy,
+        out: &mut PopScratch,
+    ) {
+        out.dropped.clear();
+        out.batch.clear();
+        self.popped += pop_batch_in(
+            &mut self.queues[d - self.base],
+            self.scratch,
+            self.discipline,
+            now,
+            max_batch,
+            key_of,
+            &mut out.dropped,
+            &mut out.batch,
+        );
+    }
+}
+
+/// A shard-private dispatcher addressed by **global** device index —
+/// the decoupled threaded backend runs one `Dispatcher` per shard
+/// (local queues only) while the shared serve path speaks global
+/// indices.
+#[derive(Debug)]
+pub struct OffsetQueues<'a> {
+    pub base: usize,
+    pub inner: &'a mut Dispatcher,
+}
+
+impl QueueSource for OffsetQueues<'_> {
+    fn queued(&self, d: usize) -> usize {
+        self.inner.queued(d - self.base)
+    }
+
+    fn peek_batch(&self, d: usize, key_of: impl Fn(usize) -> u64) -> Option<BatchOutlook> {
+        self.inner.peek_batch(d - self.base, key_of)
+    }
+
+    fn pop_batch_into(
+        &mut self,
+        d: usize,
+        now: u64,
+        max_batch: usize,
+        key_of: impl Fn(usize) -> u64 + Copy,
+        out: &mut PopScratch,
+    ) {
+        QueueSource::pop_batch_into(self.inner, d - self.base, now, max_batch, key_of, out);
     }
 }
 

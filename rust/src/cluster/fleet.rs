@@ -78,12 +78,18 @@
 //! results.
 
 use super::calendar::WakeCalendar;
-use super::dispatch::{BatchPolicy, Discipline, Dispatcher, Placement};
+use super::dispatch::{
+    BatchPolicy, Discipline, Dispatcher, OffsetQueues, Placement, PopScratch, QueueSource,
+    ShardQueuesMut,
+};
 use super::metrics::{DeviceMetrics, FleetMetrics};
+use super::threads::{
+    merge_replay, replay_into, shard_ranges, ShardObs, TaggedObs, PHASE_ARRIVE, PHASE_SERVE,
+};
 use super::workload::{FleetRequest, ModelClass};
 use crate::config::{ArchConfig, DeviceClass};
 use crate::gemm::{GemmPlan, OutputMode};
-use crate::obs::{EventKind, ObsConfig, Observer, NO_SEQ};
+use crate::obs::{EventKind, ObsConfig, ObsSink, Observer, NO_SEQ};
 use crate::sim::{CgraSim, Stats};
 use crate::util::mat::MatF32;
 use crate::xformer::{
@@ -91,6 +97,7 @@ use crate::xformer::{
 };
 use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
 
 /// `dev` cycles at a `dev_mhz` device clock, expressed in cycles of a
 /// `ref_mhz` reference clock (ceiling — a job never finishes earlier
@@ -357,6 +364,15 @@ pub struct FleetConfig {
     /// feasible — `benches/sim_speed.rs` is the consumer. Off by
     /// default: normal runs execute real kernels.
     pub timing_only: bool,
+    /// Worker threads for [`FleetSim::run`] (default 1: the
+    /// single-threaded calendar loop). With `threads > 1` and at least
+    /// two devices, the roster is partitioned into up to `threads`
+    /// contiguous shards, each advanced by its own worker — metrics,
+    /// completions, trace bytes and series CSV stay **bit-identical**
+    /// to the single-threaded loops at every thread count (the
+    /// conformance property `tests/calendar_props.rs` pins). More
+    /// threads than devices clamps to one device per shard.
+    pub threads: usize,
 }
 
 impl Default for FleetConfig {
@@ -370,6 +386,7 @@ impl Default for FleetConfig {
             steal_min_depth: 2,
             ref_mhz: 100,
             timing_only: false,
+            threads: 1,
         }
     }
 }
@@ -445,6 +462,86 @@ fn est_cost(
         .unwrap_or_else(|| models[model].cfg.gemm_macs() / 64 + 1)
 }
 
+/// One deferred cost-cache observation from a threaded worker: "at
+/// reference cycle `now`, device `dev` charged `per_req` cycles per
+/// request for `(model, class)`". Workers cannot write the shared
+/// cache, so they log first-local observations and the coordinator
+/// applies them first-wins in the reference observation order —
+/// `(now, dev)` ascending, which is exactly the order the
+/// single-threaded loop visits serves in.
+#[derive(Debug)]
+struct CostObs {
+    now: u64,
+    dev: usize,
+    model: usize,
+    class: usize,
+    per_req: u64,
+}
+
+/// Where a serve path reads cost estimates and writes first-completion
+/// observations. `Direct` is the single-threaded loops and the lockstep
+/// coordinator: estimates come from the live cache, observations land
+/// immediately (first-wins via `observed`). `Frozen` is a threaded
+/// worker: the cache is a shared snapshot, and would-be observations
+/// are logged (first-local per slot) for the coordinator to merge. The
+/// executors only take a frozen sink where the estimate provably cannot
+/// influence scheduling (see `FleetSim::run_threaded`), so freezing
+/// never changes behavior — it only defers the cache bookkeeping.
+enum CostSink<'a> {
+    Direct {
+        cache: &'a mut BTreeMap<(usize, usize), u64>,
+        observed: &'a mut [bool],
+    },
+    Frozen {
+        cache: &'a BTreeMap<(usize, usize), u64>,
+        observed: &'a [bool],
+        /// Slots already logged by *this* worker (bounds the log at one
+        /// entry per slot per epoch/run).
+        seen: &'a mut [bool],
+        log: &'a mut Vec<CostObs>,
+    },
+}
+
+impl CostSink<'_> {
+    /// Expected service cycles for `(model, class)` — [`est_cost`] over
+    /// whichever cache this sink reads.
+    fn est(&self, models: &[EncoderModel], model: usize, class: usize) -> u64 {
+        match self {
+            CostSink::Direct { cache, .. } => est_cost(cache, models, model, class),
+            CostSink::Frozen { cache, .. } => est_cost(cache, models, model, class),
+        }
+    }
+
+    /// Record a completed batch's per-request charge for `(model,
+    /// class)`: applied first-wins directly, or logged for the
+    /// coordinator's first-wins merge.
+    fn observe(
+        &mut self,
+        n_classes: usize,
+        model: usize,
+        class: usize,
+        per_req: u64,
+        now: u64,
+        dev: usize,
+    ) {
+        let slot = model * n_classes + class;
+        match self {
+            CostSink::Direct { cache, observed } => {
+                if !observed[slot] {
+                    cache.insert((model, class), per_req);
+                    observed[slot] = true;
+                }
+            }
+            CostSink::Frozen { observed, seen, log, .. } => {
+                if !observed[slot] && !seen[slot] {
+                    seen[slot] = true;
+                    log.push(CostObs { now, dev, model, class, per_req });
+                }
+            }
+        }
+    }
+}
+
 /// Serve one already-popped batch on `engine` at `now`: execute,
 /// update the `(model, class)` cost cache on first observation, and
 /// record completion metrics. Shared by the normal serve path and the
@@ -458,21 +555,20 @@ fn est_cost(
 /// conversion and serving-clock advance included — without running the
 /// GEMMs; every scheduling decision downstream is unchanged.
 #[allow(clippy::too_many_arguments)]
-fn serve_batch_on(
+fn serve_batch_on<O: ObsSink>(
     engine: &mut DeviceEngine,
     class_id: usize,
     n_classes: usize,
     models: &[EncoderModel],
     quants: &[EncoderQuant],
     canonical: &[usize],
-    cost_cache: &mut BTreeMap<(usize, usize), u64>,
-    observed: &mut [bool],
+    cost: &mut CostSink<'_>,
     synth: Option<&[Vec<u64>]>,
     metrics: &mut FleetMetrics,
     batch: &[FleetRequest],
     now: u64,
     dev: usize,
-    obs: &mut Observer,
+    obs: &mut O,
 ) -> Result<()> {
     let Some(first) = batch.first() else { return Ok(()) };
     let model = canonical[first.model];
@@ -504,13 +600,9 @@ fn serve_batch_on(
             (charged, report)
         }
     };
-    let slot = model * n_classes + class_id;
-    if !observed[slot] {
-        // First observed completion on this class replaces the
-        // analytic pre-seed with a per-request charge.
-        cost_cache.insert((model, class_id), (charged / batch.len() as u64).max(1));
-        observed[slot] = true;
-    }
+    // First observed completion on this class replaces the analytic
+    // pre-seed with a per-request charge (first-wins via the sink).
+    cost.observe(n_classes, model, class_id, (charged / batch.len() as u64).max(1), now, dev);
     let completion = now + charged;
     metrics.batch_occupancy.record(batch.len() as u64);
     metrics.weight_reuse_words += report.weight_reuse_words;
@@ -538,37 +630,43 @@ fn serve_batch_on(
 }
 
 /// Phase-2 body for one freed device, shared verbatim by the calendar
-/// loop ([`FleetSim::run`]) and the reference scan loop
-/// ([`FleetSim::run_reference`]) so the two can never drift: the device
-/// takes work per its queue discipline until it is busy past `now`, its
-/// queue dries, or it holds for a fuller batch. Returns the hold
-/// deadline when the device parked on one.
+/// loop ([`FleetSim::run`]), the reference scan loop
+/// ([`FleetSim::run_reference`]) and both threaded executors so none
+/// can drift: the device takes work per its queue discipline until it
+/// is busy past `now`, its queue dries, or it holds for a fuller
+/// batch. Generic over the queue view (`Q`: the full dispatcher, a
+/// lockstep shard slice, or a decoupled shard-private dispatcher — `d`
+/// is always the *global* device index) and the observation sink.
+/// `scratch` is the reusable pop buffer (one per serve context, reused
+/// across every pop of a run). Returns the hold deadline when the
+/// device parked on one.
 #[allow(clippy::too_many_arguments)]
-fn run_device_queue(
-    devices: &mut [DeviceEngine],
+fn run_device_queue<Q: QueueSource, O: ObsSink>(
+    engine: &mut DeviceEngine,
     d: usize,
-    dispatcher: &mut Dispatcher,
+    queues: &mut Q,
+    scratch: &mut PopScratch,
     policy: BatchPolicy,
     more_arrivals: bool,
-    device_class: &[usize],
+    class_id: usize,
     n_classes: usize,
     models: &[EncoderModel],
     quants: &[EncoderQuant],
     batch_keys: &[u64],
     canonical: &[usize],
-    cost_cache: &mut BTreeMap<(usize, usize), u64>,
-    observed: &mut [bool],
+    cost: &mut CostSink<'_>,
     synth: Option<&[Vec<u64>]>,
     metrics: &mut FleetMetrics,
     now: u64,
-    obs: &mut Observer,
+    obs: &mut O,
 ) -> Result<Option<u64>> {
     let key_of = |m: usize| batch_keys[m];
     let mut parked: Option<u64> = None;
-    while devices[d].free_at <= now {
-        let Some(outlook) = dispatcher.peek_batch(d, key_of) else { break };
+    while engine.free_at <= now {
+        let Some(outlook) = queues.peek_batch(d, key_of) else { break };
         if policy.cap() > 1 && outlook.count < policy.cap() && more_arrivals {
-            let est = est_cost(cost_cache, models, canonical[outlook.model], device_class[d])
+            let est = cost
+                .est(models, canonical[outlook.model], class_id)
                 .saturating_mul(outlook.count as u64);
             let hold = policy.hold_until(outlook.head_arrival, outlook.head_deadline, est);
             if now < hold {
@@ -578,30 +676,29 @@ fn run_device_queue(
                 break;
             }
         }
-        let (dropped, batch) = dispatcher.pop_batch(d, now, policy.cap(), key_of);
-        metrics.dropped += dropped.len() as u64;
+        queues.pop_batch_into(d, now, policy.cap(), key_of, scratch);
+        metrics.dropped += scratch.dropped.len() as u64;
         if obs.enabled() {
-            for r in &dropped {
+            for r in &scratch.dropped {
                 obs.record(now, d, r.id, EventKind::Drop);
             }
-            let depth = dispatcher.queued(d);
+            let depth = queues.queued(d);
             obs.record(now, d, NO_SEQ, EventKind::QueueDepth { depth });
         }
-        if batch.is_empty() {
+        if scratch.batch.is_empty() {
             continue;
         }
         serve_batch_on(
-            &mut devices[d],
-            device_class[d],
+            engine,
+            class_id,
             n_classes,
             models,
             quants,
             canonical,
-            cost_cache,
-            observed,
+            cost,
             synth,
             metrics,
-            &batch,
+            &scratch.batch,
             now,
             d,
             obs,
@@ -619,6 +716,7 @@ fn run_device_queue(
 fn steal_pass(
     devices: &mut [DeviceEngine],
     dispatcher: &mut Dispatcher,
+    scratch: &mut PopScratch,
     device_classes: &[DeviceClass],
     device_class: &[usize],
     n_classes: usize,
@@ -626,8 +724,7 @@ fn steal_pass(
     quants: &[EncoderQuant],
     batch_keys: &[u64],
     canonical: &[usize],
-    cost_cache: &mut BTreeMap<(usize, usize), u64>,
-    observed: &mut [bool],
+    cost: &mut CostSink<'_>,
     synth: Option<&[Vec<u64>]>,
     metrics: &mut FleetMetrics,
     steal_count: &mut [u64],
@@ -656,21 +753,21 @@ fn steal_pass(
             })
             .max_by_key(|&d| (dispatcher.queued(d), std::cmp::Reverse(d)));
         let Some(v) = victim else { break };
-        let (dropped, batch) = dispatcher.pop_batch(v, now, batch_cap, key_of);
-        metrics.dropped += dropped.len() as u64;
+        dispatcher.pop_batch_into(v, now, batch_cap, key_of, scratch);
+        metrics.dropped += scratch.dropped.len() as u64;
         if obs.enabled() {
-            for r in &dropped {
+            for r in &scratch.dropped {
                 obs.record(now, v, r.id, EventKind::Drop);
             }
         }
-        if batch.is_empty() {
+        if scratch.batch.is_empty() {
             continue; // every candidate expired (EDF): queue shrank, retry
         }
         metrics.steals += 1;
-        metrics.stolen_requests += batch.len() as u64;
+        metrics.stolen_requests += scratch.batch.len() as u64;
         steal_count[t] += 1;
         if obs.enabled() {
-            let requests = batch.len();
+            let requests = scratch.batch.len();
             obs.record(now, t, NO_SEQ, EventKind::Steal { victim: v, requests });
             let depth = dispatcher.queued(v);
             obs.record(now, v, NO_SEQ, EventKind::QueueDepth { depth });
@@ -682,11 +779,10 @@ fn steal_pass(
             models,
             quants,
             canonical,
-            cost_cache,
-            observed,
+            cost,
             synth,
             metrics,
-            &batch,
+            &scratch.batch,
             now,
             t,
             obs,
@@ -885,6 +981,9 @@ impl FleetSim {
     /// `tests/calendar_props.rs` pins the equivalence per seed, metrics
     /// and trace bytes both.
     pub fn run(&mut self, mut requests: Vec<FleetRequest>) -> Result<FleetMetrics> {
+        if self.cfg.threads > 1 && self.cfg.roster.len() > 1 {
+            return self.run_threaded(requests);
+        }
         assert!(!self.ran, "FleetSim::run is single-shot; build a fresh fleet per run");
         self.ran = true;
         let Self {
@@ -912,6 +1011,7 @@ impl FleetSim {
         let mut steal_count = vec![0u64; devices.len()];
         let mut now: u64 = 0;
         let mut cal = WakeCalendar::new();
+        let mut scratch = PopScratch::default();
         // Free devices with queued work (held devices included): the
         // only devices phase 2 must visit. BTreeSet iteration is
         // ascending, preserving the reference loop's device order.
@@ -953,19 +1053,19 @@ impl FleetSim {
             ready_snapshot.extend(ready.iter().copied());
             for &d in &ready_snapshot {
                 let parked = run_device_queue(
-                    devices,
+                    &mut devices[d],
                     d,
                     dispatcher,
+                    &mut scratch,
                     policy,
                     arrivals.peek().is_some(),
-                    device_class,
+                    device_class[d],
                     n_classes,
                     models,
                     quants,
                     batch_keys,
                     canonical,
-                    cost_cache,
-                    observed,
+                    &mut CostSink::Direct { cache: &mut *cost_cache, observed: &mut observed[..] },
                     synth,
                     &mut metrics,
                     now,
@@ -989,6 +1089,7 @@ impl FleetSim {
                 steal_pass(
                     devices,
                     dispatcher,
+                    &mut scratch,
                     device_classes,
                     device_class,
                     n_classes,
@@ -996,8 +1097,7 @@ impl FleetSim {
                     quants,
                     batch_keys,
                     canonical,
-                    cost_cache,
-                    observed,
+                    &mut CostSink::Direct { cache: &mut *cost_cache, observed: &mut observed[..] },
                     synth,
                     &mut metrics,
                     &mut steal_count,
@@ -1080,6 +1180,10 @@ impl FleetSim {
         let mut metrics = FleetMetrics::default();
         let mut steal_count = vec![0u64; devices.len()];
         let mut now: u64 = 0;
+        let mut scratch = PopScratch::default();
+        // Hoisted out of the loop (steady-state allocation cut): every
+        // entry is overwritten in phase 2 before phase 3 reads it.
+        let mut hold_until: Vec<Option<u64>> = vec![None; devices.len()];
         loop {
             // 1. Admit every request that has arrived by `now`.
             while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
@@ -1099,22 +1203,21 @@ impl FleetSim {
             }
             // 2. Serve: every idle device takes work per its queue
             // discipline (full-roster scan).
-            let mut hold_until: Vec<Option<u64>> = vec![None; devices.len()];
             for d in 0..devices.len() {
                 hold_until[d] = run_device_queue(
-                    devices,
+                    &mut devices[d],
                     d,
                     dispatcher,
+                    &mut scratch,
                     policy,
                     arrivals.peek().is_some(),
-                    device_class,
+                    device_class[d],
                     n_classes,
                     models,
                     quants,
                     batch_keys,
                     canonical,
-                    cost_cache,
-                    observed,
+                    &mut CostSink::Direct { cache: &mut *cost_cache, observed: &mut observed[..] },
                     synth,
                     &mut metrics,
                     now,
@@ -1126,6 +1229,7 @@ impl FleetSim {
                 steal_pass(
                     devices,
                     dispatcher,
+                    &mut scratch,
                     device_classes,
                     device_class,
                     n_classes,
@@ -1133,8 +1237,7 @@ impl FleetSim {
                     quants,
                     batch_keys,
                     canonical,
-                    cost_cache,
-                    observed,
+                    &mut CostSink::Direct { cache: &mut *cost_cache, observed: &mut observed[..] },
                     synth,
                     &mut metrics,
                     &mut steal_count,
@@ -1173,6 +1276,646 @@ impl FleetSim {
             }
         }
         Ok(finalize_fleet(devices, device_classes, device_class, &steal_count, metrics, obs))
+    }
+
+    /// The threaded backend ([`FleetConfig::threads`] > 1): partition
+    /// the roster into contiguous shards ([`shard_ranges`]) and advance
+    /// them on worker threads while keeping metrics, completions, trace
+    /// bytes and series CSV **bit-identical** to the single-threaded
+    /// loops. Two executors, picked by what the configuration lets a
+    /// shard know on its own:
+    ///
+    /// - **Decoupled** (round-robin placement, no stealing, and holds
+    ///   that never read the cost cache): placement is a pure function
+    ///   of the global arrival index, so each shard can be pre-routed
+    ///   its requests and simulated start-to-finish on its own thread
+    ///   with no cross-shard events at all. Conservative horizon: a
+    ///   parked batch-hold wakes no later than the last global arrival
+    ///   cycle, the only foreign event that can change a hold decision
+    ///   (`more_arrivals` collapses fleet-wide there).
+    /// - **Lockstep** (everything else): the coordinator runs phases
+    ///   1/2b/3 exactly as [`Self::run`] and fans phase 2 (serving
+    ///   ready devices) out across per-shard epoch workers holding
+    ///   disjoint queue and device slices. Placement and stealing see
+    ///   the live fleet state at every epoch boundary, exactly as the
+    ///   reference interleaves them.
+    ///
+    /// Workers never write shared state: observations are buffered
+    /// per-shard and replayed in reference order (see
+    /// [`super::threads`]), and cost-cache updates are logged and
+    /// merged first-wins in reference observation order. Where a frozen
+    /// cost estimate *could* influence scheduling (batch holds with
+    /// deadline-carrying heads while analytic pre-seeds are still being
+    /// replaced), the lockstep executor serves that epoch inline
+    /// instead — bit-identity is never traded for parallelism.
+    fn run_threaded(&mut self, mut requests: Vec<FleetRequest>) -> Result<FleetMetrics> {
+        assert!(!self.ran, "FleetSim::run is single-shot; build a fresh fleet per run");
+        self.ran = true;
+        let Self {
+            cfg,
+            devices,
+            device_classes,
+            device_class,
+            dispatcher,
+            models,
+            quants,
+            batch_keys,
+            canonical,
+            cost_cache,
+            observed,
+            synth,
+            ran: _,
+            obs,
+        } = self;
+        let n_classes = device_classes.len();
+        let policy = cfg.batch;
+        let discipline = cfg.discipline;
+        let synth = synth.as_deref();
+        let device_class: &[usize] = device_class;
+        let models: &[EncoderModel] = models;
+        let quants: &[EncoderQuant] = quants;
+        let batch_keys: &[u64] = batch_keys;
+        let canonical: &[usize] = canonical;
+        requests.sort_by_key(|r| (r.arrival_cycle, r.id));
+        let has_deadlines = requests.iter().any(|r| r.deadline_cycle.is_some());
+        let ranges = shard_ranges(devices.len(), cfg.threads);
+        let mut shard_of = vec![0usize; devices.len()];
+        for (si, r) in ranges.iter().enumerate() {
+            for d in r.clone() {
+                shard_of[d] = si;
+            }
+        }
+        // Decoupled eligibility: round-robin ignores fleet state (the
+        // rotation is a function of the global arrival index alone), no
+        // stealing means no cross-shard work movement, and the batch
+        // hold must never read the cost cache — true when batching is
+        // off (the gate is skipped) or no request carries a deadline
+        // (`BatchPolicy::hold_until` only consults `est` for
+        // deadline-carrying heads).
+        let decoupled = cfg.policy == Placement::RoundRobin
+            && !cfg.steal
+            && (policy.cap() == 1 || !has_deadlines);
+        if decoupled {
+            // Whole-run shard threads. `t_last` is the last global
+            // arrival cycle (requests are sorted): a worker's
+            // `more_arrivals` (`now < t_last`) then matches the
+            // reference's `arrivals.peek().is_some()` at every epoch —
+            // the reference admits each arrival at exactly its arrival
+            // cycle (the next-event minimum always includes the next
+            // arrival), so "unadmitted arrivals exist" is exactly "now
+            // is before the last arrival".
+            let t_last = requests.last().map_or(0, |r| r.arrival_cycle);
+            let n_total = devices.len();
+            let mut per_shard: Vec<Vec<(u64, usize, FleetRequest)>> =
+                ranges.iter().map(|_| Vec::new()).collect();
+            for (i, r) in requests.into_iter().enumerate() {
+                // Round-robin rotation: global sorted arrival index i
+                // lands on device i % n (`Dispatcher::dispatch` starts
+                // at rr_next = 0 and increments once per admission).
+                let dev = i % n_total;
+                per_shard[shard_of[dev]].push((i as u64, dev, r));
+            }
+            let mut device_slices: Vec<&mut [DeviceEngine]> = Vec::with_capacity(ranges.len());
+            let mut rest: &mut [DeviceEngine] = devices;
+            let mut off = 0usize;
+            for r in &ranges {
+                let (head, tail) = rest.split_at_mut(r.end - off);
+                device_slices.push(head);
+                rest = tail;
+                off = r.end;
+            }
+            let shard_obs: Vec<ShardObs> =
+                ranges.iter().map(|_| ShardObs::mirroring(obs)).collect();
+            let cost_ro: &BTreeMap<(usize, usize), u64> = cost_cache;
+            let observed_ro: &[bool] = observed;
+            let outcomes: Vec<Result<ShardOutcome>> = std::thread::scope(|s| {
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .cloned()
+                    .zip(device_slices)
+                    .zip(per_shard)
+                    .zip(shard_obs)
+                    .map(|(((range, slice), arrivals), sobs)| {
+                        s.spawn(move || {
+                            run_shard_decoupled(
+                                range,
+                                slice,
+                                arrivals,
+                                sobs,
+                                t_last,
+                                policy,
+                                discipline,
+                                device_class,
+                                n_classes,
+                                models,
+                                quants,
+                                batch_keys,
+                                canonical,
+                                cost_ro,
+                                observed_ro,
+                                synth,
+                            )
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("fleet shard worker panicked"))
+                    .collect()
+            });
+            let mut metrics = FleetMetrics::default();
+            let mut cost_log: Vec<CostObs> = Vec::new();
+            let mut bufs: Vec<Vec<TaggedObs>> = Vec::with_capacity(outcomes.len());
+            for o in outcomes {
+                let o = o?;
+                metrics.merge_run(o.metrics);
+                bufs.push(o.obs_buf);
+                cost_log.extend(o.cost_log);
+            }
+            merge_replay(obs, bufs);
+            // First-wins in reference observation order: serves happen
+            // at ascending `now`, ties in ascending device order (each
+            // shard's log is already in its own serve order, and the
+            // stable sort keeps same-(now, dev) entries in that order).
+            cost_log.sort_by_key(|c| (c.now, c.dev));
+            for c in cost_log {
+                let slot = c.model * n_classes + c.class;
+                if !observed[slot] {
+                    cost_cache.insert((c.model, c.class), c.per_req);
+                    observed[slot] = true;
+                }
+            }
+            let steal_count = vec![0u64; devices.len()];
+            return Ok(finalize_fleet(
+                devices,
+                device_classes,
+                device_class,
+                &steal_count,
+                metrics,
+                obs,
+            ));
+        }
+        // Lockstep epochs: the coordinator owns the timeline; phase 2
+        // fans out across shard workers holding disjoint slices.
+        let mut arrivals = requests.into_iter().peekable();
+        let mut metrics = FleetMetrics::default();
+        let mut steal_count = vec![0u64; devices.len()];
+        let mut now: u64 = 0;
+        let mut cal = WakeCalendar::new();
+        let mut scratch = PopScratch::default();
+        let mut ready: BTreeSet<usize> = BTreeSet::new();
+        let mut ready_snapshot: Vec<usize> = Vec::new();
+        let mut workers: Vec<EpochWorker> =
+            ranges.iter().map(|_| EpochWorker::new(obs, observed.len())).collect();
+        loop {
+            // 1. Admit (coordinator-side, live cache — identical to
+            // `run`).
+            while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
+                let r = arrivals.next().expect("peeked");
+                let (rid, rmodel) = (r.id, r.model);
+                let placed = dispatcher.dispatch(
+                    r,
+                    now,
+                    |d| devices[d].free_at,
+                    |m, d| est_cost(cost_cache, models, canonical[m], device_class[d]),
+                );
+                if devices[placed].free_at <= now {
+                    ready.insert(placed);
+                }
+                if obs.enabled() {
+                    obs.record(now, placed, rid, EventKind::Arrival { model: rmodel });
+                    let depth = dispatcher.queued(placed);
+                    obs.record(now, placed, NO_SEQ, EventKind::QueueDepth { depth });
+                }
+            }
+            // 2. Serve ready devices. Spawn only when at least two
+            // shards have due work; a one-shard (or serialized) epoch
+            // runs inline. The branch choice cannot affect results —
+            // both branches execute the identical serve body in the
+            // identical device order — so it is free to depend on the
+            // epoch shape.
+            let more_arrivals = arrivals.peek().is_some();
+            let mut min_hold: Option<u64> = None;
+            ready_snapshot.clear();
+            ready_snapshot.extend(ready.iter().copied());
+            // A frozen cost estimate could steer a batch hold only when
+            // batching is on, a head can carry a deadline, and an
+            // analytic pre-seed could still be replaced mid-epoch by an
+            // earlier same-epoch serve. Serve those epochs inline with
+            // the live cache; once every slot is observed the cache is
+            // frozen-in-fact and the parallel path is exact.
+            let epoch_serial =
+                policy.cap() > 1 && has_deadlines && observed.iter().any(|o| !o);
+            for w in workers.iter_mut() {
+                w.due.clear();
+            }
+            let mut due_shards = 0usize;
+            for &d in &ready_snapshot {
+                let w = &mut workers[shard_of[d]];
+                if w.due.is_empty() {
+                    due_shards += 1;
+                }
+                w.due.push(d);
+            }
+            if due_shards >= 2 && !epoch_serial {
+                let views = dispatcher.shard_views_mut(&ranges);
+                let mut slices: Vec<&mut [DeviceEngine]> = Vec::with_capacity(ranges.len());
+                let mut rest: &mut [DeviceEngine] = devices;
+                let mut off = 0usize;
+                for r in &ranges {
+                    let (head, tail) = rest.split_at_mut(r.end - off);
+                    slices.push(head);
+                    rest = tail;
+                    off = r.end;
+                }
+                let cost_ro: &BTreeMap<(usize, usize), u64> = cost_cache;
+                let observed_ro: &[bool] = observed;
+                std::thread::scope(|s| {
+                    for (((range, view), slice), w) in
+                        ranges.iter().zip(views).zip(slices).zip(workers.iter_mut())
+                    {
+                        if w.due.is_empty() {
+                            continue;
+                        }
+                        let base = range.start;
+                        s.spawn(move || {
+                            w.run_epoch(
+                                base,
+                                view,
+                                slice,
+                                now,
+                                more_arrivals,
+                                policy,
+                                device_class,
+                                n_classes,
+                                models,
+                                quants,
+                                batch_keys,
+                                canonical,
+                                cost_ro,
+                                observed_ro,
+                                synth,
+                            );
+                        });
+                    }
+                });
+                // Barrier: settle every worker in shard order — shards
+                // are contiguous ascending device ranges, so this *is*
+                // the reference's ascending-device epoch order.
+                for w in workers.iter_mut() {
+                    if let Some(e) = w.err.take() {
+                        return Err(e);
+                    }
+                    dispatcher.note_removed(std::mem::take(&mut w.popped));
+                    if let Some(h) = w.min_hold.take() {
+                        min_hold = Some(min_hold.map_or(h, |m| m.min(h)));
+                    }
+                    metrics.merge_run(std::mem::take(&mut w.metrics));
+                    for c in w.cost_log.drain(..) {
+                        let slot = c.model * n_classes + c.class;
+                        if !observed[slot] {
+                            cost_cache.insert((c.model, c.class), c.per_req);
+                            observed[slot] = true;
+                        }
+                    }
+                    replay_into(obs, w.obs.buf.drain(..));
+                }
+            } else {
+                for &d in &ready_snapshot {
+                    let parked = run_device_queue(
+                        &mut devices[d],
+                        d,
+                        dispatcher,
+                        &mut scratch,
+                        policy,
+                        more_arrivals,
+                        device_class[d],
+                        n_classes,
+                        models,
+                        quants,
+                        batch_keys,
+                        canonical,
+                        &mut CostSink::Direct {
+                            cache: &mut *cost_cache,
+                            observed: &mut observed[..],
+                        },
+                        synth,
+                        &mut metrics,
+                        now,
+                        obs,
+                    )?;
+                    if let Some(h) = parked {
+                        min_hold = Some(min_hold.map_or(h, |m| m.min(h)));
+                    }
+                }
+            }
+            // Post-serve bookkeeping (identical effect to `run`'s
+            // interleaved form: serving never reads `ready`, and the
+            // calendar orders by stamp, not push order).
+            for &d in &ready_snapshot {
+                if devices[d].free_at > now {
+                    ready.remove(&d);
+                    cal.push(devices[d].free_at, d);
+                } else if dispatcher.queued(d) == 0 {
+                    ready.remove(&d);
+                }
+            }
+            // 2b. Steal (coordinator-side, serial — identical to `run`).
+            if cfg.steal && dispatcher.total_queued() > 0 {
+                steal_pass(
+                    devices,
+                    dispatcher,
+                    &mut scratch,
+                    device_classes,
+                    device_class,
+                    n_classes,
+                    models,
+                    quants,
+                    batch_keys,
+                    canonical,
+                    &mut CostSink::Direct { cache: &mut *cost_cache, observed: &mut observed[..] },
+                    synth,
+                    &mut metrics,
+                    &mut steal_count,
+                    cfg.steal_min_depth,
+                    policy.cap(),
+                    now,
+                    obs,
+                    Some(&mut cal),
+                )?;
+            }
+            // 3. Advance — identical to `run`.
+            let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
+            if let Some(h) = min_hold {
+                next = Some(next.map_or(h, |n| n.min(h)));
+            }
+            if dispatcher.total_queued() > 0 {
+                if let Some((t, _)) =
+                    cal.earliest_valid(|at, dev| at > now && devices[dev].free_at == at)
+                {
+                    next = Some(next.map_or(t, |n| n.min(t)));
+                }
+            }
+            match next {
+                Some(t) => {
+                    debug_assert!(t > now, "event horizon must advance");
+                    now = t;
+                    cal.pop_until(now, |_, dev| {
+                        if devices[dev].free_at <= now && dispatcher.queued(dev) > 0 {
+                            ready.insert(dev);
+                        }
+                    });
+                }
+                None => break,
+            }
+        }
+        Ok(finalize_fleet(devices, device_classes, device_class, &steal_count, metrics, obs))
+    }
+}
+
+/// What one decoupled shard thread hands back: its merged metrics, its
+/// tagged observation buffer, and its first-local cost observations.
+struct ShardOutcome {
+    metrics: FleetMetrics,
+    obs_buf: Vec<TaggedObs>,
+    cost_log: Vec<CostObs>,
+}
+
+/// One decoupled shard, simulated start-to-finish on its own thread: a
+/// shard-private dispatcher holds the pre-routed arrivals and the loop
+/// mirrors [`FleetSim::run`]'s calendar loop over the shard's devices
+/// alone. `d` stays the *global* device index throughout
+/// ([`OffsetQueues`] translates). See [`FleetSim::run_threaded`] for
+/// why this is exact: no foreign event can change a shard-local
+/// decision except the fleet-wide `more_arrivals` collapse at
+/// `t_last`, which parked holds wake for explicitly.
+#[allow(clippy::too_many_arguments)]
+fn run_shard_decoupled(
+    range: Range<usize>,
+    devices: &mut [DeviceEngine],
+    arrivals: Vec<(u64, usize, FleetRequest)>,
+    mut shard_obs: ShardObs,
+    t_last: u64,
+    policy: BatchPolicy,
+    discipline: Discipline,
+    device_class: &[usize],
+    n_classes: usize,
+    models: &[EncoderModel],
+    quants: &[EncoderQuant],
+    batch_keys: &[u64],
+    canonical: &[usize],
+    cost_cache: &BTreeMap<(usize, usize), u64>,
+    observed: &[bool],
+    synth: Option<&[Vec<u64>]>,
+) -> Result<ShardOutcome> {
+    let base = range.start;
+    let mut local = Dispatcher::new(Placement::RoundRobin, discipline, range.len());
+    let mut metrics = FleetMetrics::default();
+    let mut scratch = PopScratch::default();
+    let mut seen = vec![false; observed.len()];
+    let mut log: Vec<CostObs> = Vec::new();
+    let mut cal = WakeCalendar::new();
+    let mut ready: BTreeSet<usize> = BTreeSet::new();
+    let mut ready_snapshot: Vec<usize> = Vec::new();
+    let mut arrivals = arrivals.into_iter().peekable();
+    let mut now: u64 = 0;
+    loop {
+        // 1. Admit shard-local arrivals. Each lands at exactly its
+        // arrival cycle, as in the reference (whose event horizon
+        // always includes the next arrival), so the admission stamps
+        // and queue depths match event-for-event.
+        while arrivals.peek().is_some_and(|(_, _, r)| r.arrival_cycle <= now) {
+            let (gidx, dev, r) = arrivals.next().expect("peeked");
+            let (rid, rmodel) = (r.id, r.model);
+            local.enqueue(dev - base, r);
+            if devices[dev - base].free_at <= now {
+                ready.insert(dev);
+            }
+            if shard_obs.enabled() {
+                shard_obs.set_ctx(now, PHASE_ARRIVE, gidx);
+                shard_obs.record(now, dev, rid, EventKind::Arrival { model: rmodel });
+                let depth = local.queued(dev - base);
+                shard_obs.record(now, dev, NO_SEQ, EventKind::QueueDepth { depth });
+            }
+        }
+        // 2. Serve ready devices (ascending global index).
+        let more_arrivals = now < t_last;
+        let mut min_hold: Option<u64> = None;
+        ready_snapshot.clear();
+        ready_snapshot.extend(ready.iter().copied());
+        for &d in &ready_snapshot {
+            shard_obs.set_ctx(now, PHASE_SERVE, d as u64);
+            let mut sink = CostSink::Frozen {
+                cache: cost_cache,
+                observed,
+                seen: &mut seen,
+                log: &mut log,
+            };
+            let parked = {
+                let mut view = OffsetQueues { base, inner: &mut local };
+                run_device_queue(
+                    &mut devices[d - base],
+                    d,
+                    &mut view,
+                    &mut scratch,
+                    policy,
+                    more_arrivals,
+                    device_class[d],
+                    n_classes,
+                    models,
+                    quants,
+                    batch_keys,
+                    canonical,
+                    &mut sink,
+                    synth,
+                    &mut metrics,
+                    now,
+                    &mut shard_obs,
+                )?
+            };
+            if let Some(h) = parked {
+                // Conservative wake: the hold either resolves locally
+                // (a shard arrival fills the batch, or `h` expires) or
+                // fleet-wide at `t_last`, where `more_arrivals` turns
+                // false and every held device serves its partial
+                // batch. Parked implies `more_arrivals`, so the
+                // clamped wake stays strictly after `now`.
+                let h = h.min(t_last);
+                min_hold = Some(min_hold.map_or(h, |m| m.min(h)));
+            }
+            if devices[d - base].free_at > now {
+                ready.remove(&d);
+                cal.push(devices[d - base].free_at, d);
+            } else if local.queued(d - base) == 0 {
+                ready.remove(&d);
+            }
+        }
+        // 3. Advance to the next shard-local event.
+        let mut next: Option<u64> = arrivals.peek().map(|(_, _, r)| r.arrival_cycle);
+        if let Some(h) = min_hold {
+            next = Some(next.map_or(h, |n| n.min(h)));
+        }
+        if local.total_queued() > 0 {
+            if let Some((t, _)) =
+                cal.earliest_valid(|at, dev| at > now && devices[dev - base].free_at == at)
+            {
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+        }
+        match next {
+            Some(t) => {
+                debug_assert!(t > now, "event horizon must advance");
+                now = t;
+                cal.pop_until(now, |_, dev| {
+                    if devices[dev - base].free_at <= now && local.queued(dev - base) > 0 {
+                        ready.insert(dev);
+                    }
+                });
+            }
+            None => break,
+        }
+    }
+    Ok(ShardOutcome { metrics, obs_buf: shard_obs.buf, cost_log: log })
+}
+
+/// One lockstep shard worker, reused across epochs (its buffers are
+/// drained at each barrier, so steady-state epochs allocate nothing).
+/// The coordinator fills `due` with the shard's ready devices, hands
+/// the worker its queue view and device slice for the epoch, and
+/// settles `popped` / `min_hold` / `metrics` / `cost_log` / `obs` /
+/// `err` at the barrier in shard order.
+struct EpochWorker {
+    due: Vec<usize>,
+    obs: ShardObs,
+    scratch: PopScratch,
+    metrics: FleetMetrics,
+    seen: Vec<bool>,
+    cost_log: Vec<CostObs>,
+    min_hold: Option<u64>,
+    popped: usize,
+    err: Option<anyhow::Error>,
+}
+
+impl EpochWorker {
+    fn new(obs: &Observer, slots: usize) -> Self {
+        Self {
+            due: Vec::new(),
+            obs: ShardObs::mirroring(obs),
+            scratch: PopScratch::default(),
+            metrics: FleetMetrics::default(),
+            seen: vec![false; slots],
+            cost_log: Vec::new(),
+            min_hold: None,
+            popped: 0,
+            err: None,
+        }
+    }
+
+    /// Serve this shard's due devices for one epoch. Runs on a scoped
+    /// worker thread; everything written lands in `self`, everything
+    /// shared is read-only, and the queue/device slices are disjoint
+    /// per shard — no synchronization beyond the scope join.
+    #[allow(clippy::too_many_arguments)]
+    fn run_epoch(
+        &mut self,
+        base: usize,
+        mut view: ShardQueuesMut<'_>,
+        slice: &mut [DeviceEngine],
+        now: u64,
+        more_arrivals: bool,
+        policy: BatchPolicy,
+        device_class: &[usize],
+        n_classes: usize,
+        models: &[EncoderModel],
+        quants: &[EncoderQuant],
+        batch_keys: &[u64],
+        canonical: &[usize],
+        cost_cache: &BTreeMap<(usize, usize), u64>,
+        observed: &[bool],
+        synth: Option<&[Vec<u64>]>,
+    ) {
+        self.min_hold = None;
+        for s in self.seen.iter_mut() {
+            *s = false;
+        }
+        let mut sink = CostSink::Frozen {
+            cache: cost_cache,
+            observed,
+            seen: &mut self.seen,
+            log: &mut self.cost_log,
+        };
+        for &d in &self.due {
+            self.obs.set_ctx(now, PHASE_SERVE, d as u64);
+            match run_device_queue(
+                &mut slice[d - base],
+                d,
+                &mut view,
+                &mut self.scratch,
+                policy,
+                more_arrivals,
+                device_class[d],
+                n_classes,
+                models,
+                quants,
+                batch_keys,
+                canonical,
+                &mut sink,
+                synth,
+                &mut self.metrics,
+                now,
+                &mut self.obs,
+            ) {
+                Ok(Some(h)) => {
+                    self.min_hold = Some(self.min_hold.map_or(h, |m| m.min(h)));
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    self.err = Some(e);
+                    break;
+                }
+            }
+        }
+        self.popped = view.popped();
     }
 }
 

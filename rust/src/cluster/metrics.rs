@@ -147,6 +147,28 @@ pub struct FleetMetrics {
 }
 
 impl FleetMetrics {
+    /// Fold a shard worker's partial run metrics into this one (the
+    /// threaded fleet backends' merge — every field is commutative to
+    /// aggregate except the makespan maximum, and [`LogHistogram`]
+    /// merges are exact bucket-count sums, so shard-order merging
+    /// reproduces the single-threaded run's metrics bit-for-bit).
+    /// Per-device counters are not merged here: both backends rebuild
+    /// `per_device` from the device engines themselves at finalize.
+    pub fn merge_run(&mut self, other: FleetMetrics) {
+        debug_assert!(other.per_device.is_empty(), "shard metrics carry no per-device rows");
+        self.completed += other.completed;
+        self.dropped += other.dropped;
+        self.sla_misses += other.sla_misses;
+        self.makespan_cycles = self.makespan_cycles.max(other.makespan_cycles);
+        self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.batch_occupancy.merge(&other.batch_occupancy);
+        self.weight_reuse_words += other.weight_reuse_words;
+        self.steals += other.steals;
+        self.stolen_requests += other.stolen_requests;
+        self.stats.merge(&other.stats);
+    }
+
     /// Fleet throughput in requests per second at `freq_mhz`.
     pub fn throughput_rps(&self, freq_mhz: f64) -> f64 {
         if self.makespan_cycles == 0 {

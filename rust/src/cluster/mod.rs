@@ -58,11 +58,16 @@ pub mod dispatch;
 pub mod fleet;
 pub mod metrics;
 pub mod parallel;
+pub mod threads;
 pub mod workload;
 
 pub use crate::config::DeviceClass;
 pub use calendar::WakeCalendar;
-pub use dispatch::{BatchOutlook, BatchPolicy, Discipline, Dispatcher, Placement};
+pub use dispatch::{
+    BatchOutlook, BatchPolicy, Discipline, Dispatcher, OffsetQueues, Placement, PopScratch,
+    QueueSource, ShardQueuesMut,
+};
+pub use threads::{shard_ranges, ShardObs};
 pub use fleet::{
     analytic_encoder_cycles, analytic_encoder_ref_cycles, model_batch_key, to_ref_cycles,
     DeviceEngine, FleetConfig, FleetSim,

@@ -1,0 +1,218 @@
+//! Shared machinery for the deterministic threaded fleet backends
+//! (ISSUE 8): shard partitioning and per-shard observation buffers.
+//!
+//! Both threaded executors — the decoupled encoder backend (whole-run
+//! shard threads) and the lockstep epoch backend (per-epoch worker
+//! scopes) — follow the same discipline: workers never touch shared
+//! mutable state. Every observation a worker would have written to the
+//! fleet's [`Observer`] is buffered in a [`ShardObs`] tagged with its
+//! position in the *reference* event order, and the coordinator
+//! replays the buffers into the one true observer:
+//!
+//! - lockstep: drained at each epoch barrier in shard order — shards
+//!   are contiguous ascending device ranges, so shard order *is*
+//!   ascending device order, the order the reference loop visits ready
+//!   devices in;
+//! - decoupled: merged once at end-of-run by stable sort on the tag
+//!   `(cycle, phase, order, seq)`, where `order` is the global arrival
+//!   index for admission events and the device index for serve events
+//!   — exactly the (admit arrivals in `(arrival, id)` order, then
+//!   serve ready devices ascending) structure of every reference
+//!   epoch.
+//!
+//! Because the replayed stream reaches the observer in the same order
+//! the single-threaded loop would have produced it, the rendered trace
+//! JSON and windowed series CSV are byte-identical — the property
+//! `tests/calendar_props.rs` pins for `threads ∈ {2, 3, 8}`.
+
+use crate::obs::{EventKind, ObsEvent, ObsSink, Observer};
+use crate::sim::Stats;
+use std::ops::Range;
+
+/// Admission events (dispatcher placement) sort before serve events
+/// within an epoch, mirroring the reference loop's phase order.
+pub const PHASE_ARRIVE: u8 = 0;
+/// Device-serve events; `order` is the global device index.
+pub const PHASE_SERVE: u8 = 1;
+
+/// Partition `devices` into at most `threads` contiguous shards of
+/// near-equal size (the first `devices % shards` shards take one
+/// extra). Contiguity is load-bearing: concatenating shard results in
+/// shard order yields ascending device order, the reference visit
+/// order. More threads than devices degrades to one device per shard.
+pub fn shard_ranges(devices: usize, threads: usize) -> Vec<Range<usize>> {
+    let shards = threads.min(devices).max(1);
+    let base = devices / shards;
+    let extra = devices % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// One buffered observation with its reference-order tag.
+#[derive(Debug)]
+pub struct TaggedObs {
+    /// `(cycle, phase, order, seq)`: the event's position in the
+    /// reference emission order (see the module docs).
+    pub key: (u64, u8, u64, u32),
+    pub payload: ObsPayload,
+}
+
+#[derive(Debug)]
+pub enum ObsPayload {
+    Event(ObsEvent),
+    Kernel(String, &'static str, Stats),
+}
+
+/// A worker-side [`ObsSink`]: records nothing when the fleet observer
+/// is disabled (so the threaded hot path stays as cheap as the
+/// single-threaded one), buffers tagged events otherwise.
+#[derive(Debug)]
+pub struct ShardObs {
+    enabled: bool,
+    kernels: bool,
+    pub buf: Vec<TaggedObs>,
+    ctx: (u64, u8, u64),
+    seq: u32,
+}
+
+impl ShardObs {
+    /// A buffer mirroring the enablement of the fleet's observer.
+    pub fn mirroring(obs: &Observer) -> Self {
+        Self {
+            enabled: obs.enabled(),
+            kernels: obs.kernels_on(),
+            buf: Vec::new(),
+            ctx: (0, 0, 0),
+            seq: 0,
+        }
+    }
+
+    /// Set the reference-order context for subsequent records: the
+    /// epoch cycle, the phase, and the within-phase order (global
+    /// arrival index or device index). Resets the intra-context
+    /// sequence counter.
+    pub fn set_ctx(&mut self, now: u64, phase: u8, order: u64) {
+        self.ctx = (now, phase, order);
+        self.seq = 0;
+    }
+
+    fn tag(&mut self) -> (u64, u8, u64, u32) {
+        let key = (self.ctx.0, self.ctx.1, self.ctx.2, self.seq);
+        self.seq += 1;
+        key
+    }
+}
+
+impl ObsSink for ShardObs {
+    #[inline]
+    fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    fn kernels_on(&self) -> bool {
+        self.kernels
+    }
+
+    #[inline]
+    fn record(&mut self, cycle: u64, device: usize, seq: u64, kind: EventKind) {
+        if self.enabled {
+            let key = self.tag();
+            self.buf.push(TaggedObs {
+                key,
+                payload: ObsPayload::Event(ObsEvent { cycle, device, seq, kind }),
+            });
+        }
+    }
+
+    #[inline]
+    fn kernel(&mut self, label: String, phase: &'static str, stats: Stats) {
+        if self.kernels {
+            let key = self.tag();
+            self.buf.push(TaggedObs { key, payload: ObsPayload::Kernel(label, phase, stats) });
+        }
+    }
+}
+
+/// Replay buffered observations into the real observer in the order
+/// given (the caller has already established reference order — by
+/// shard concatenation for lockstep, by [`merge_replay`] for
+/// decoupled). Feeding `Observer::record` here is what rebuilds the
+/// windowed series identically: the series folds events in arrival
+/// order, so replaying in reference order reproduces its bytes.
+pub fn replay_into(obs: &mut Observer, buf: impl IntoIterator<Item = TaggedObs>) {
+    for t in buf {
+        match t.payload {
+            ObsPayload::Event(e) => obs.record(e.cycle, e.device, e.seq, e.kind),
+            ObsPayload::Kernel(label, phase, stats) => obs.kernel(label, phase, stats),
+        }
+    }
+}
+
+/// Merge whole-run shard buffers into reference order and replay
+/// (decoupled backend). The tag sort is total across shards: `order`
+/// (arrival index / device index) belongs to exactly one shard, so no
+/// two shards produce colliding keys.
+pub fn merge_replay(obs: &mut Observer, shards: impl IntoIterator<Item = Vec<TaggedObs>>) {
+    let mut all: Vec<TaggedObs> = shards.into_iter().flatten().collect();
+    all.sort_by_key(|t| t.key);
+    replay_into(obs, all);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_contiguously() {
+        for devices in [1usize, 2, 3, 7, 8, 64, 255] {
+            for threads in [1usize, 2, 3, 8, 300] {
+                let ranges = shard_ranges(devices, threads);
+                assert_eq!(ranges.len(), threads.min(devices));
+                assert_eq!(ranges[0].start, 0);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "shards must tile");
+                    // Near-equal: earlier shards are never smaller.
+                    assert!(w[0].len() >= w[1].len());
+                    assert!(w[0].len() - w[1].len() <= 1);
+                }
+                assert_eq!(ranges.last().unwrap().end, devices);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_obs_tags_in_context_order() {
+        let obs = Observer::new(
+            &crate::obs::ObsConfig::full(100),
+            vec!["d0".into(), "d1".into()],
+        );
+        let mut shard = ShardObs::mirroring(&obs);
+        shard.set_ctx(10, PHASE_SERVE, 1);
+        shard.record(10, 1, 7, EventKind::Arrival { model: 0 });
+        shard.record(10, 1, 7, EventKind::QueueDepth { depth: 2 });
+        shard.set_ctx(10, PHASE_ARRIVE, 0);
+        shard.record(10, 0, 3, EventKind::Arrival { model: 1 });
+        let mut keys: Vec<_> = shard.buf.iter().map(|t| t.key).collect();
+        keys.sort_unstable();
+        assert_eq!(
+            keys,
+            vec![(10, PHASE_ARRIVE, 0, 0), (10, PHASE_SERVE, 1, 0), (10, PHASE_SERVE, 1, 1)],
+            "arrival phase sorts first; intra-context order by seq"
+        );
+    }
+
+    #[test]
+    fn disabled_shard_obs_buffers_nothing() {
+        let mut shard = ShardObs::mirroring(&Observer::disabled());
+        shard.record(1, 0, 0, EventKind::Arrival { model: 0 });
+        shard.kernel("k".into(), "encoder", Stats::default());
+        assert!(shard.buf.is_empty());
+    }
+}

@@ -49,8 +49,9 @@ use crate::cluster::{
     analytic_encoder_cycles, analytic_encoder_ref_cycles, per_device_energy, to_ref_cycles,
     DeviceEngine, DeviceMetrics, GenRequest, LogHistogram, ModelClass, WakeCalendar,
 };
+use crate::cluster::threads::{replay_into, shard_ranges, ShardObs, PHASE_SERVE};
 use crate::config::{ArchConfig, DeviceClass};
-use crate::obs::{EventKind, ObsConfig, Observer, NO_SEQ};
+use crate::obs::{EventKind, ObsConfig, ObsSink, Observer, NO_SEQ};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::gemm::{GemmPlan, OutputMode};
 use crate::sim::Stats;
@@ -119,6 +120,15 @@ pub struct DecodeFleetConfig {
     /// unchanged (token rows come out as zeros); the `sim_speed` bench
     /// uses it to drive ≥100k-request rosters through the event loop.
     pub timing_only: bool,
+    /// Worker threads for [`DecodeFleetSim::run`] (default 1: the
+    /// single-threaded calendar loop). With `threads > 1` and at least
+    /// two devices, each epoch's service phase fans the ready devices
+    /// out across contiguous roster shards on scoped worker threads;
+    /// placement, migration and the event horizon stay on the
+    /// coordinator. Metrics, completions and trace bytes are
+    /// bit-identical to `threads == 1` for any value — more threads
+    /// than devices clamps to one device per shard.
+    pub threads: usize,
 }
 
 impl Default for DecodeFleetConfig {
@@ -133,6 +143,7 @@ impl Default for DecodeFleetConfig {
             migrate: false,
             pin_device: None,
             timing_only: false,
+            threads: 1,
         }
     }
 }
@@ -234,6 +245,36 @@ impl DecodeMetrics {
     /// accounting as the encoder fleet's `FleetMetrics::fleet_energy`).
     pub fn fleet_energy(&self, em: &EnergyModel, freq_mhz: f64) -> EnergyBreakdown {
         per_device_energy(&self.per_device, self.makespan_cycles, em, freq_mhz)
+    }
+
+    /// Fold a shard worker's run-aggregate counters into this one (the
+    /// threaded backend's epoch-barrier merge). Order-sensitive fields
+    /// — `rejections` — append in call order, so merging shards in
+    /// shard order (contiguous ascending device ranges) reproduces the
+    /// reference loop's device-ascending emission order exactly.
+    /// Per-device rows are built once in `finalize`, never by shards.
+    pub fn merge_run(&mut self, other: DecodeMetrics) {
+        debug_assert!(other.per_device.is_empty(), "shard metrics carry no per-device rows");
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.rejections.extend(other.rejections);
+        self.tokens += other.tokens;
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+        self.e2e.merge(&other.e2e);
+        self.kv_occupancy_permille.merge(&other.kv_occupancy_permille);
+        self.preemptions += other.preemptions;
+        self.migrations += other.migrations;
+        self.migrated_words += other.migrated_words;
+        self.prefill_jobs += other.prefill_jobs;
+        self.prefill_chunks += other.prefill_chunks;
+        self.prefill_batch.merge(&other.prefill_batch);
+        self.decode_ticks += other.decode_ticks;
+        self.decode_batch.merge(&other.decode_batch);
+        self.kv_fill_words += other.kv_fill_words;
+        self.kv_read_words += other.kv_read_words;
+        self.makespan_cycles = self.makespan_cycles.max(other.makespan_cycles);
+        self.stats.merge(&other.stats);
     }
 }
 
@@ -600,16 +641,19 @@ impl DeviceDecoder {
     /// Run one job at `now` (device must be free). Returns whether any
     /// state advanced — `false` only when there is nothing admissible
     /// and nothing running. `obs` (with `dev`, this device's fleet
-    /// index) is append-only: it never influences the job taken.
+    /// index) is append-only: it never influences the job taken. It is
+    /// any [`ObsSink`] — the fleet's [`Observer`] on the
+    /// single-threaded paths, a worker-local buffer
+    /// ([`crate::cluster::ShardObs`]) under the threaded backend.
     #[allow(clippy::too_many_arguments)]
-    pub fn step(
+    pub fn step<O: ObsSink>(
         &mut self,
         now: u64,
         models: &[DecoderModel],
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> Result<bool> {
         debug_assert!(self.engine.free_at <= now, "step on a busy device");
@@ -660,14 +704,14 @@ impl DeviceDecoder {
     /// Shared by the stacked admit wave and the chunked scheduler so
     /// their admission/rejection semantics can never drift.
     #[allow(clippy::too_many_arguments)]
-    fn pop_admitted_head(
+    fn pop_admitted_head<O: ObsSink>(
         &mut self,
         now: u64,
         commit_of: impl Fn(&PendingSeq) -> usize,
         model_filter: Option<usize>,
         models: &[DecoderModel],
         metrics: &mut DecodeMetrics,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> Option<PendingSeq> {
         loop {
@@ -723,12 +767,12 @@ impl DeviceDecoder {
     /// resumes first, FIFO within each queue, stopping at the batch
     /// cap, at the first capacity miss, or at a model change (one
     /// prefill job = one model).
-    fn admit_wave(
+    fn admit_wave<O: ObsSink>(
         &mut self,
         now: u64,
         models: &[DecoderModel],
         metrics: &mut DecodeMetrics,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> Vec<PendingSeq> {
         let mut admitted: Vec<PendingSeq> = Vec::new();
@@ -752,11 +796,11 @@ impl DeviceDecoder {
 
     /// Preempt (LIFO: highest admission stamp first) until every
     /// running sequence that needs a fresh page this tick can get one.
-    fn make_room(
+    fn make_room<O: ObsSink>(
         &mut self,
         now: u64,
         metrics: &mut DecodeMetrics,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> bool {
         let mut any = false;
@@ -798,7 +842,7 @@ impl DeviceDecoder {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn run_prefill_job(
+    fn run_prefill_job<O: ObsSink>(
         &mut self,
         now: u64,
         admitted: Vec<PendingSeq>,
@@ -806,7 +850,7 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> Result<()> {
         let model_idx = admitted[0].model;
@@ -894,14 +938,14 @@ impl DeviceDecoder {
     /// complete it. Shared by the stacked prefill job and the *final*
     /// chunk of a chunked prefill so the two paths can never drift.
     #[allow(clippy::too_many_arguments)]
-    fn finish_prefilled_seq(
+    fn finish_prefilled_seq<O: ObsSink>(
         &mut self,
         p: PendingSeq,
         out: &MatF32,
         completion: u64,
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) {
         let fresh = p.emitted.is_empty();
@@ -961,7 +1005,7 @@ impl DeviceDecoder {
     /// kinds of work exist — a long prompt costs the running batch at
     /// most one chunk of ITL per tick instead of its whole prefill.
     #[allow(clippy::too_many_arguments)]
-    fn step_chunked(
+    fn step_chunked<O: ObsSink>(
         &mut self,
         now: u64,
         chunk_tokens: usize,
@@ -969,7 +1013,7 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> Result<bool> {
         let budget = chunk_tokens.max(1);
@@ -1001,7 +1045,7 @@ impl DeviceDecoder {
     /// free pages first; the admission capacity check at submit time
     /// guarantees eventual progress).
     #[allow(clippy::too_many_arguments)]
-    fn run_chunk_job(
+    fn run_chunk_job<O: ObsSink>(
         &mut self,
         now: u64,
         budget: usize,
@@ -1009,7 +1053,7 @@ impl DeviceDecoder {
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> Result<bool> {
         if self.chunking.is_none() {
@@ -1190,14 +1234,14 @@ impl DeviceDecoder {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn run_tick_job(
+    fn run_tick_job<O: ObsSink>(
         &mut self,
         now: u64,
         models: &[DecoderModel],
         quants: &[EncoderQuant],
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
-        obs: &mut Observer,
+        obs: &mut O,
         dev: usize,
     ) -> Result<()> {
         // Group the running batch by model (stable in admission order):
@@ -1894,6 +1938,9 @@ impl DecodeFleetSim {
         &mut self,
         mut requests: Vec<GenRequest>,
     ) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
+        if self.cfg.threads > 1 && self.cfg.roster.len() > 1 {
+            return self.run_threaded(requests);
+        }
         assert!(!self.ran, "DecodeFleetSim::run is single-shot; build a fresh fleet per run");
         self.ran = true;
         requests.sort_by_key(|r| (r.arrival_cycle, r.id));
@@ -1943,6 +1990,165 @@ impl DecodeFleetSim {
             // discarded on the way; any state change that makes such a
             // device relevant again (`place`, migration, a busy
             // transition) re-indexes it.
+            let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
+            let devices = &self.devices;
+            if let Some((t, _)) = self.cal.earliest_valid(|at, d| {
+                at > now && devices[d].free_at() == at && devices[d].has_work()
+            }) {
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+            match next {
+                Some(t) => {
+                    debug_assert!(t > now, "event horizon must advance");
+                    now = t;
+                    let devices = &self.devices;
+                    let ready = &mut self.ready;
+                    self.cal.pop_until(now, |_, d| {
+                        if devices[d].free_at() <= now && devices[d].has_work() {
+                            ready.insert(d);
+                        }
+                    });
+                }
+                None => break,
+            }
+        }
+        Ok((self.finalize(metrics), completions))
+    }
+
+    /// The threaded backend ([`DecodeFleetConfig::threads`] > 1): the
+    /// same epoch structure as [`Self::run`], with the service phase
+    /// fanned out across contiguous roster shards on scoped worker
+    /// threads.
+    ///
+    /// Placement, migration and the event horizon are inherently
+    /// cross-device, so they stay on the coordinator. The per-epoch
+    /// drain of ready devices is embarrassingly parallel because
+    /// [`DeviceDecoder::step`] touches only device-local state — it
+    /// never reads the fleet's measured-rate tables (only `place` and
+    /// `rebalance` do, and both run outside the fan-out). Each worker
+    /// drains its shard's due devices in ascending index into
+    /// worker-local metrics / completions / observation buffers and
+    /// logs its per-job measured-rate harvests; the barrier settles
+    /// workers in shard order — shards are contiguous ascending device
+    /// ranges, so shard-order concatenation *is* the reference loop's
+    /// device-ascending epoch order — which makes metrics, completions,
+    /// rejection order, first-observation-wins rate updates and trace
+    /// bytes bit-identical to `threads == 1` for any thread count
+    /// (pinned by `tests/calendar_props.rs`).
+    fn run_threaded(
+        &mut self,
+        mut requests: Vec<GenRequest>,
+    ) -> Result<(DecodeMetrics, Vec<GenCompletion>)> {
+        assert!(!self.ran, "DecodeFleetSim::run is single-shot; build a fresh fleet per run");
+        self.ran = true;
+        requests.sort_by_key(|r| (r.arrival_cycle, r.id));
+        let ranges = shard_ranges(self.devices.len(), self.cfg.threads);
+        let mut shard_of = vec![0usize; self.devices.len()];
+        for (s, r) in ranges.iter().enumerate() {
+            for d in r.clone() {
+                shard_of[d] = s;
+            }
+        }
+        let mut workers: Vec<DecodeEpochWorker> =
+            ranges.iter().map(|_| DecodeEpochWorker::new(&self.obs)).collect();
+        let mut arrivals = requests.into_iter().peekable();
+        let mut metrics = DecodeMetrics::default();
+        let mut completions: Vec<GenCompletion> = Vec::new();
+        let mut now: u64 = 0;
+        let mut ready_snapshot: Vec<usize> = Vec::new();
+        self.seed_wakeups(now);
+        loop {
+            // 1. Admit — coordinator-side: placement reads every
+            // device's backlog and the measured-rate tables.
+            while arrivals.peek().is_some_and(|r| r.arrival_cycle <= now) {
+                let r = arrivals.next().expect("peeked");
+                self.place(r, now, &mut metrics);
+            }
+            // 2. Serve every free device with work. Fewer than two due
+            // shards run inline — spawning a lone worker only adds
+            // latency; both branches are bit-exact, so the choice needs
+            // no thread-count invariance.
+            ready_snapshot.clear();
+            ready_snapshot.extend(self.ready.iter().copied());
+            for w in &mut workers {
+                w.due.clear();
+            }
+            let mut due_shards = 0usize;
+            for &d in &ready_snapshot {
+                let w = &mut workers[shard_of[d]];
+                if w.due.is_empty() {
+                    due_shards += 1;
+                }
+                w.due.push(d);
+            }
+            if due_shards >= 2 {
+                let models: &[DecoderModel] = &self.models;
+                let quants: &[EncoderQuant] = &self.quants;
+                let mut slices: Vec<&mut [DeviceDecoder]> = Vec::with_capacity(ranges.len());
+                let mut rest: &mut [DeviceDecoder] = &mut self.devices;
+                let mut off = 0usize;
+                for r in &ranges {
+                    let (head, tail) = rest.split_at_mut(r.end - off);
+                    slices.push(head);
+                    rest = tail;
+                    off = r.end;
+                }
+                std::thread::scope(|s| {
+                    for ((range, slice), w) in
+                        ranges.iter().zip(slices).zip(workers.iter_mut())
+                    {
+                        if w.due.is_empty() {
+                            continue;
+                        }
+                        let base = range.start;
+                        s.spawn(move || w.run_epoch(base, slice, now, models, quants));
+                    }
+                });
+                // Barrier: settle every worker in shard order — shards
+                // are contiguous ascending device ranges, so this *is*
+                // the reference's ascending-device epoch order.
+                for w in workers.iter_mut() {
+                    if let Some(e) = w.err.take() {
+                        return Err(e);
+                    }
+                    metrics.merge_run(std::mem::take(&mut w.metrics));
+                    completions.append(&mut w.completions);
+                    for (d, model, is_prefill, per) in w.cost_log.drain(..) {
+                        let class = self.device_class[d];
+                        if is_prefill {
+                            self.observe_prefill_cost(model, class, per);
+                        } else {
+                            self.observe_token_cost(model, class, per);
+                        }
+                    }
+                    replay_into(&mut self.obs, w.obs.buf.drain(..));
+                }
+            } else {
+                for &d in &ready_snapshot {
+                    self.drain_device(d, now, &mut metrics, &mut completions)?;
+                }
+            }
+            // Post-serve re-index (identical effect to `run`'s
+            // interleaved form: draining one device never changes
+            // another's state, and the calendar orders by stamp, not
+            // push order).
+            for &d in &ready_snapshot {
+                if self.devices[d].free_at() > now {
+                    self.ready.remove(&d);
+                    if self.devices[d].has_work() {
+                        self.cal.push(self.devices[d].free_at(), d);
+                    }
+                } else if !self.devices[d].has_work() {
+                    self.ready.remove(&d);
+                }
+            }
+            if self.cfg.migrate {
+                // After the barrier, so this pass sees exactly the
+                // rate tables the reference pass would — identical to
+                // `run`'s placement of the rebalance after all drains.
+                self.rebalance(now, &mut metrics);
+            }
+            // 3. Advance — identical to `run`.
             let mut next: Option<u64> = arrivals.peek().map(|r| r.arrival_cycle);
             let devices = &self.devices;
             if let Some((t, _)) = self.cal.earliest_valid(|at, d| {
@@ -2051,6 +2257,89 @@ impl DecodeFleetSim {
         }
         self.obs.finish(metrics.makespan_cycles);
         metrics
+    }
+}
+
+/// Per-shard worker state for [`DecodeFleetSim::run_threaded`]'s
+/// lockstep epochs, reused across epochs so the steady state allocates
+/// nothing beyond what the jobs themselves allocate.
+struct DecodeEpochWorker {
+    /// Global indices of this shard's ready devices this epoch,
+    /// ascending (filled from the coordinator's `ready` snapshot).
+    due: Vec<usize>,
+    /// Worker-local observation buffer, replayed into the fleet
+    /// observer at the barrier.
+    obs: ShardObs,
+    /// Run-aggregate counters this shard produced this epoch.
+    metrics: DecodeMetrics,
+    /// Completions this shard produced this epoch (ascending device,
+    /// then per-device emission order — the reference order).
+    completions: Vec<GenCompletion>,
+    /// Measured-rate harvests in emission order: `(device, model,
+    /// is_prefill, ref cycles per token/row)`. Applied
+    /// first-observation-wins at the barrier, in shard order — the
+    /// order the reference drain applies them in.
+    cost_log: Vec<(usize, usize, bool, u64)>,
+    /// First job error, if any (aborts the run at the barrier).
+    err: Option<anyhow::Error>,
+}
+
+impl DecodeEpochWorker {
+    fn new(obs: &Observer) -> Self {
+        Self {
+            due: Vec::new(),
+            obs: ShardObs::mirroring(obs),
+            metrics: DecodeMetrics::default(),
+            completions: Vec::new(),
+            cost_log: Vec::new(),
+            err: None,
+        }
+    }
+
+    /// Drain every due device of this worker's shard at `now` —
+    /// [`DecodeFleetSim::drain_device`]'s body against worker-local
+    /// sinks, with the measured-rate harvest logged instead of applied
+    /// (the tables are coordinator state; the barrier applies the log
+    /// in reference order). `slice` holds the shard's devices, `base`
+    /// its first global index.
+    fn run_epoch(
+        &mut self,
+        base: usize,
+        slice: &mut [DeviceDecoder],
+        now: u64,
+        models: &[DecoderModel],
+        quants: &[EncoderQuant],
+    ) {
+        for &d in &self.due {
+            self.obs.set_ctx(now, PHASE_SERVE, d as u64);
+            let dev = &mut slice[d - base];
+            while dev.free_at() <= now && dev.has_work() {
+                let progressed = match dev.step(
+                    now,
+                    models,
+                    quants,
+                    &mut self.metrics,
+                    &mut self.completions,
+                    &mut self.obs,
+                    d,
+                ) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        self.err = Some(e);
+                        return;
+                    }
+                };
+                if let Some((model, per_token)) = dev.take_tick_observation() {
+                    self.cost_log.push((d, model, false, per_token));
+                }
+                if let Some((model, per_row)) = dev.take_prefill_observation() {
+                    self.cost_log.push((d, model, true, per_row));
+                }
+                if !progressed {
+                    break;
+                }
+            }
+        }
     }
 }
 

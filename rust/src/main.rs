@@ -7,8 +7,8 @@
 //!   encoder [--layers n] [--seq s] [--dmodel d] [--heads h] [--dff f]
 //!                                — run a tiny encoder on the array
 //!   serve [--requests n] [--rate rps] [--batch b] [--decode]
-//!         [--chunk-tokens t] [--trace-out f] [--metrics-window w]
-//!         [--metrics-out f] [--kernel-trace f]
+//!         [--chunk-tokens t] [--threads n] [--trace-out f]
+//!         [--metrics-window w] [--metrics-out f] [--kernel-trace f]
 //!                                — closed-loop serving demo
 //!                                  (coordinator); --decode serves
 //!                                  generation requests through the
@@ -21,8 +21,8 @@
 //!           [--max-running r] [--page-words w]
 //!           [--schedule prefill-first|decode-first|chunked]
 //!           [--chunk-tokens t] [--migrate] [--pin-device d]
-//!           [--trace-out f] [--metrics-window w] [--metrics-out f]
-//!           [--kernel-trace f]
+//!           [--threads n] [--trace-out f] [--metrics-window w]
+//!           [--metrics-out f] [--kernel-trace f]
 //!                                — fleet-serving simulation (cluster);
 //!                                  --fleet takes a class roster like
 //!                                  `4x4@100:3,8x4@200:1` (mixed array
@@ -56,7 +56,10 @@
 //!                                  off is bit-identical, and
 //!                                  --pin-device D forces placement
 //!                                  onto one device (deterministic
-//!                                  migration demos)
+//!                                  migration demos). --threads N runs
+//!                                  the fleet event loop on N worker
+//!                                  threads (both workloads) — output
+//!                                  is bit-identical to --threads 1
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
@@ -144,6 +147,16 @@ fn write_obs_outputs(obs: &Observer, args: &Args) -> Result<()> {
         println!("kernels  : per-kernel rows -> {path}");
     }
     Ok(())
+}
+
+/// `--threads N` (default 1): worker-thread count for the fleet event
+/// loops. Any value is bit-identity-safe; 0 is rejected.
+fn parse_threads(args: &Args) -> Result<usize> {
+    let threads: usize = args.flag_parse("threads", 1usize)?;
+    if threads == 0 {
+        bail!("--threads must be at least 1");
+    }
+    Ok(threads)
 }
 
 /// `--arrival poisson|bursty|diurnal` at `--rate`.
@@ -263,6 +276,15 @@ fn cmd_encoder(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // Accepted for CLI parity with `cluster`: serving drives a single
+    // device, so extra workers have nothing to shard over.
+    let threads = parse_threads(args)?;
+    if threads > 1 {
+        println!(
+            "threads  : {threads} requested — serve drives one device; \
+             the threaded backend is fleet-side (`cluster --threads`)"
+        );
+    }
     if args.switch("decode") {
         return cmd_serve_decode(args);
     }
@@ -400,6 +422,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if max_batch == 0 {
         bail!("--batch must be at least 1");
     }
+    let threads = parse_threads(args)?;
     let classes = ModelClass::edge_mix();
     let ref_mhz = arch.freq_mhz_u64();
     let mut gen = WorkloadGen::new(arrival, classes.clone(), ref_mhz as f64, seed);
@@ -414,6 +437,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             batch: BatchPolicy::greedy(max_batch),
             steal,
             ref_mhz,
+            threads,
             ..Default::default()
         },
         &classes,
@@ -425,7 +449,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let freq_ref = ref_mhz as f64;
     let e = m.fleet_energy(&em, freq_ref);
     let ms = |cy: u64| cy as f64 / (freq_ref * 1e3);
-    println!("fleet    : {roster_str} ({n_devices} devices, timeline @ {ref_mhz} MHz)");
+    println!(
+        "fleet    : {roster_str} ({n_devices} devices, timeline @ {ref_mhz} MHz, \
+         {threads} thread{})",
+        if threads == 1 { "" } else { "s" }
+    );
     println!(
         "policy   : {policy:?} / {discipline:?}, arrival {arrival:?}, stealing {}",
         if steal { "on" } else { "off" }
@@ -511,6 +539,7 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         Some(s) => Some(s.parse::<usize>()?),
         None => None,
     };
+    let threads = parse_threads(args)?;
     let arrival = parse_arrival(args, rate)?;
     let classes = ModelClass::edge_mix();
     let ref_mhz = arch.freq_mhz_u64();
@@ -529,6 +558,7 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
             migrate,
             pin_device,
             timing_only: false,
+            threads,
         },
         &classes,
         42,
@@ -539,7 +569,11 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
     let freq_ref = ref_mhz as f64;
     let e = m.fleet_energy(&em, freq_ref);
     let ms = |cy: u64| cy as f64 / (freq_ref * 1e3);
-    println!("fleet    : {roster_str} ({n_devices} devices, timeline @ {ref_mhz} MHz)");
+    println!(
+        "fleet    : {roster_str} ({n_devices} devices, timeline @ {ref_mhz} MHz, \
+         {threads} thread{})",
+        if threads == 1 { "" } else { "s" }
+    );
     println!(
         "workload : decode, {n} generation requests, arrival {arrival:?}, \
          {schedule:?}, max {max_running} running/device"

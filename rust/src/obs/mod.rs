@@ -57,6 +57,47 @@ impl ObsConfig {
     }
 }
 
+/// Destination for fleet observation hooks. The simulators' serve
+/// paths are generic over this so one body can feed either the real
+/// [`Observer`] (single-threaded loops) or a per-shard replay buffer
+/// (`cluster::threads::ShardObs`, threaded backend) — which is how the
+/// threaded loops keep trace bytes identical: workers buffer, the
+/// coordinator replays into the one true `Observer` in reference
+/// order.
+pub trait ObsSink {
+    /// Is any layer recording? (Callers gate event construction.)
+    fn enabled(&self) -> bool;
+    /// Is the per-kernel CSV layer recording? (Callers gate label
+    /// formatting.)
+    fn kernels_on(&self) -> bool;
+    /// Record one structured event.
+    fn record(&mut self, cycle: u64, device: usize, seq: u64, kind: EventKind);
+    /// Record a per-kernel stats row under a lifecycle phase.
+    fn kernel(&mut self, label: String, phase: &'static str, stats: Stats);
+}
+
+impl ObsSink for Observer {
+    #[inline]
+    fn enabled(&self) -> bool {
+        Observer::enabled(self)
+    }
+
+    #[inline]
+    fn kernels_on(&self) -> bool {
+        Observer::kernels_on(self)
+    }
+
+    #[inline]
+    fn record(&mut self, cycle: u64, device: usize, seq: u64, kind: EventKind) {
+        Observer::record(self, cycle, device, seq, kind);
+    }
+
+    #[inline]
+    fn kernel(&mut self, label: String, phase: &'static str, stats: Stats) {
+        Observer::kernel(self, label, phase, stats);
+    }
+}
+
 /// Append-only sink for fleet events. Embedded (disabled) in
 /// `FleetSim` / `DecodeFleetSim`; enable with their `enable_obs`
 /// before `run()`.

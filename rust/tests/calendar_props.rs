@@ -8,6 +8,12 @@
 //! chunked prefill, and timing-only mode. The 256-device stress shapes
 //! pin byte-determinism and conservation at a scale the unit tests
 //! never reach.
+//!
+//! ISSUE 8 extends the oracle to the sharded worker-thread backend:
+//! every randomized scenario re-runs with `threads ∈ {2, 3, 8}` and
+//! must stay bit-identical to `run_reference` — metrics, completions,
+//! trace bytes, series CSV. The 8-thread arm over the 2–4 device
+//! rosters pins the more-threads-than-devices clamp.
 
 use cgra_edge::cluster::{
     ArrivalProcess, BatchPolicy, Discipline, FleetConfig, FleetSim, GenRequest, ModelClass,
@@ -84,9 +90,9 @@ fn prop_encoder_calendar_loop_matches_reference_scan() {
             let mut calendar = FleetSim::new(cfg.clone(), &classes, 42);
             calendar.enable_obs(&ObsConfig::full(25_000));
             let m_cal = calendar.run(requests.clone()).unwrap();
-            let mut reference = FleetSim::new(cfg, &classes, 42);
+            let mut reference = FleetSim::new(cfg.clone(), &classes, 42);
             reference.enable_obs(&ObsConfig::full(25_000));
-            let m_ref = reference.run_reference(requests).unwrap();
+            let m_ref = reference.run_reference(requests.clone()).unwrap();
             if m_cal != m_ref {
                 return CaseResult::Fail(format!(
                     "metrics diverge from the reference loop \
@@ -99,6 +105,32 @@ fn prop_encoder_calendar_loop_matches_reference_scan() {
             }
             if calendar.obs().series_csv() != reference.obs().series_csv() {
                 return CaseResult::Fail("series CSV diverges from the reference loop".into());
+            }
+            // ISSUE 8: the same scenario through the sharded worker
+            // backend, at thread counts below, between, and above the
+            // 2-4 device roster sizes (8 exercises the clamp).
+            for threads in [2usize, 3, 8] {
+                let mut threaded =
+                    FleetSim::new(FleetConfig { threads, ..cfg.clone() }, &classes, 42);
+                threaded.enable_obs(&ObsConfig::full(25_000));
+                let m_thr = threaded.run(requests.clone()).unwrap();
+                if m_thr != m_ref {
+                    return CaseResult::Fail(format!(
+                        "threaded metrics diverge from the reference loop at \
+                         {threads} threads ({policy:?}, {discipline:?}, batch {batch}, \
+                         steal {steal}, timing_only {timing_only})"
+                    ));
+                }
+                if threaded.obs().trace_json() != reference.obs().trace_json() {
+                    return CaseResult::Fail(format!(
+                        "threaded trace bytes diverge at {threads} threads"
+                    ));
+                }
+                if threaded.obs().series_csv() != reference.obs().series_csv() {
+                    return CaseResult::Fail(format!(
+                        "threaded series CSV diverges at {threads} threads"
+                    ));
+                }
             }
             CaseResult::Ok
         },
@@ -146,9 +178,9 @@ fn prop_decode_calendar_loop_matches_reference_scan() {
             let mut calendar = DecodeFleetSim::new(cfg.clone(), &classes, 42);
             calendar.enable_obs(&ObsConfig::full(25_000));
             let (m_cal, d_cal) = calendar.run(requests.clone()).unwrap();
-            let mut reference = DecodeFleetSim::new(cfg, &classes, 42);
+            let mut reference = DecodeFleetSim::new(cfg.clone(), &classes, 42);
             reference.enable_obs(&ObsConfig::full(25_000));
-            let (m_ref, d_ref) = reference.run_reference(requests).unwrap();
+            let (m_ref, d_ref) = reference.run_reference(requests.clone()).unwrap();
             if m_cal != m_ref {
                 return CaseResult::Fail(format!(
                     "metrics diverge from the reference loop \
@@ -162,6 +194,36 @@ fn prop_decode_calendar_loop_matches_reference_scan() {
             }
             if calendar.obs().trace_json() != reference.obs().trace_json() {
                 return CaseResult::Fail("trace bytes diverge from the reference loop".into());
+            }
+            // ISSUE 8: lockstep worker backend at thread counts below,
+            // between, and above the 1-3 device roster sizes.
+            for threads in [2usize, 3, 8] {
+                let mut threaded =
+                    DecodeFleetSim::new(DecodeFleetConfig { threads, ..cfg.clone() }, &classes, 42);
+                threaded.enable_obs(&ObsConfig::full(25_000));
+                let (m_thr, d_thr) = threaded.run(requests.clone()).unwrap();
+                if m_thr != m_ref {
+                    return CaseResult::Fail(format!(
+                        "threaded metrics diverge from the reference loop at \
+                         {threads} threads ({schedule:?}, migrate {migrate}, \
+                         timing_only {timing_only})"
+                    ));
+                }
+                if d_thr != d_ref {
+                    return CaseResult::Fail(format!(
+                        "threaded completions diverge at {threads} threads"
+                    ));
+                }
+                if threaded.obs().trace_json() != reference.obs().trace_json() {
+                    return CaseResult::Fail(format!(
+                        "threaded trace bytes diverge at {threads} threads"
+                    ));
+                }
+                if threaded.obs().series_csv() != reference.obs().series_csv() {
+                    return CaseResult::Fail(format!(
+                        "threaded series CSV diverges at {threads} threads"
+                    ));
+                }
             }
             CaseResult::Ok
         },
@@ -218,12 +280,23 @@ fn encoder_stress_256_devices_bursty_steal_is_byte_deterministic() {
     assert_eq!(m1.per_device.len(), 256);
     let mut reference = FleetSim::new(cfg.clone(), &classes, 42);
     reference.enable_obs(&ObsConfig::full(50_000));
-    let m_ref = reference.run_reference(requests).unwrap();
+    let m_ref = reference.run_reference(requests.clone()).unwrap();
     assert_eq!(m1, m_ref, "stress run must match the reference loop");
     assert_eq!(
-        Some(t1),
+        Some(t1.clone()),
         reference.obs().trace_json(),
         "stress trace must match the reference loop byte-for-byte"
+    );
+    // ISSUE 8: the stress shape through the sharded worker backend —
+    // stealing and 256 devices at 8 threads, still bit-identical.
+    let mut threaded = FleetSim::new(FleetConfig { threads: 8, ..cfg }, &classes, 42);
+    threaded.enable_obs(&ObsConfig::full(50_000));
+    let m_thr = threaded.run(requests).unwrap();
+    assert_eq!(m1, m_thr, "8-thread stress run must match the single-thread run");
+    assert_eq!(
+        Some(t1),
+        threaded.obs().trace_json(),
+        "8-thread stress trace must stay byte-identical"
     );
 }
 
@@ -275,12 +348,25 @@ fn decode_stress_256_devices_bursty_migrate_conserves_tokens() {
     );
     let mut reference = DecodeFleetSim::new(cfg.clone(), &classes, 42);
     reference.enable_obs(&ObsConfig::full(50_000));
-    let (m_ref, d_ref) = reference.run_reference(requests).unwrap();
+    let (m_ref, d_ref) = reference.run_reference(requests.clone()).unwrap();
     assert_eq!(m1, m_ref, "decode stress must match the reference loop");
     assert_eq!(d1, d_ref);
     assert_eq!(
-        Some(t1),
+        Some(t1.clone()),
         reference.obs().trace_json(),
         "decode stress trace must match the reference loop byte-for-byte"
+    );
+    // ISSUE 8: migration planning stays coordinator-side, so the
+    // lockstep workers must not perturb it — 8 threads, 256 devices,
+    // migrate on, still bit-identical.
+    let mut threaded = DecodeFleetSim::new(DecodeFleetConfig { threads: 8, ..cfg }, &classes, 42);
+    threaded.enable_obs(&ObsConfig::full(50_000));
+    let (m_thr, d_thr) = threaded.run(requests).unwrap();
+    assert_eq!(m1, m_thr, "8-thread decode stress must match the single-thread run");
+    assert_eq!(d1, d_thr);
+    assert_eq!(
+        Some(t1),
+        threaded.obs().trace_json(),
+        "8-thread decode stress trace must stay byte-identical"
     );
 }
