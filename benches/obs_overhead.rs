@@ -2,22 +2,24 @@
 //!
 //! Serves one deterministic generation workload on a heterogeneous
 //! decode fleet twice: observation off, then fully armed (event trace
-//! + windowed series + per-kernel log). Observation is one-way by
-//! construction — `rust/tests/obs_props.rs` pins bit-identity — so the
-//! only thing left to measure is wall-clock cost. The acceptance bar
-//! from ISSUE 6 is **< 10% overhead with everything recording**; the
-//! bench asserts it and writes the measurement to `BENCH_obs.json` so
-//! CI archives the number next to the tables.
+//! + windowed series + per-kernel log + anatomy spans + audit report).
+//! Observation is one-way by construction — `rust/tests/obs_props.rs`
+//! and `rust/tests/anatomy_props.rs` pin bit-identity — so the only
+//! thing left to measure is wall-clock cost. The acceptance bar from
+//! ISSUE 6, re-asserted by ISSUE 9 with the anatomy/audit layers armed,
+//! is **< 10% overhead with everything recording**; the bench asserts
+//! it and writes the measurement to `BENCH_obs.json` so CI archives the
+//! number next to the tables.
 
 use cgra_edge::bench_util::{f2, f3, time_median, Table};
 use cgra_edge::cluster::{ArrivalProcess, DeviceClass, ModelClass, WorkloadGen};
 use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeMetrics, DecodeSchedule};
-use cgra_edge::obs::ObsConfig;
+use cgra_edge::obs::{AuditConfig, ObsConfig};
 
 const REQUESTS: usize = 40;
 const WINDOW: u64 = 50_000;
 
-fn run_once(obs: Option<&ObsConfig>) -> (DecodeMetrics, usize, usize) {
+fn run_once(obs: Option<&ObsConfig>) -> (DecodeMetrics, usize, usize, usize) {
     let classes = vec![ModelClass::tiny()];
     let mut gen = WorkloadGen::new(
         ArrivalProcess::Poisson { rate_rps: 2_000.0 },
@@ -43,19 +45,31 @@ fn run_once(obs: Option<&ObsConfig>) -> (DecodeMetrics, usize, usize) {
     }
     let (m, _) = fleet.run(requests).expect("bench workload serves");
     let events = fleet.obs().event_count();
+    // Rendering is part of the cost of observing: trace JSON (device
+    // tracks + anatomy spans) and the audit report both build inside
+    // the timed region.
     let trace_bytes = fleet.obs().trace_json().map_or(0, |j| j.len());
-    (m, events, trace_bytes)
+    let audit = AuditConfig::new(WINDOW, vec![None]);
+    let audit_bytes = fleet.obs().audit_json(&audit).map_or(0, |j| j.len());
+    (m, events, trace_bytes, audit_bytes)
 }
 
 fn main() -> anyhow::Result<()> {
     println!(
         "BENCH_obs: decode serving with observation off vs fully armed \
-         (trace + {WINDOW}-cycle series + kernel log), {REQUESTS} requests\n"
+         (trace + {WINDOW}-cycle series + kernel log + anatomy spans + audit), \
+         {REQUESTS} requests\n"
     );
 
-    let full = ObsConfig { trace: true, window_cycles: Some(WINDOW), kernels: true };
-    let (m_off, _, _) = run_once(None);
-    let (m_on, events, trace_bytes) = run_once(Some(&full));
+    let full = ObsConfig {
+        trace: true,
+        window_cycles: Some(WINDOW),
+        kernels: true,
+        spans: true,
+        audit: true,
+    };
+    let (m_off, _, _, _) = run_once(None);
+    let (m_on, events, trace_bytes, audit_bytes) = run_once(Some(&full));
     assert_eq!(m_off, m_on, "observation must not perturb the simulation");
 
     let (t_off, _) = time_median(1, 5, || {
@@ -68,14 +82,23 @@ fn main() -> anyhow::Result<()> {
     let rate_off = m_off.makespan_cycles as f64 / t_off / 1e6;
     let rate_on = m_on.makespan_cycles as f64 / t_on / 1e6;
 
-    let mut table = Table::new(&["arm", "median s", "Mcycles/s", "events", "trace KiB"]);
-    table.row(&["obs off".into(), f3(t_off), f2(rate_off), "-".into(), "-".into()]);
+    let mut table =
+        Table::new(&["arm", "median s", "Mcycles/s", "events", "trace KiB", "audit KiB"]);
+    table.row(&[
+        "obs off".into(),
+        f3(t_off),
+        f2(rate_off),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
     table.row(&[
         "obs full".into(),
         f3(t_on),
         f2(rate_on),
         events.to_string(),
         f2(trace_bytes as f64 / 1024.0),
+        f2(audit_bytes as f64 / 1024.0),
     ]);
     table.print();
     println!("\noverhead: {:.1}% (acceptance: < 10%)", overhead * 100.0);
@@ -83,7 +106,8 @@ fn main() -> anyhow::Result<()> {
     let json = format!(
         "{{\n  \"bench\": \"obs_overhead\",\n  \"requests\": {REQUESTS},\n  \
          \"tokens\": {},\n  \"migrations\": {},\n  \"events\": {events},\n  \
-         \"trace_bytes\": {trace_bytes},\n  \"median_s_off\": {t_off:.6},\n  \
+         \"trace_bytes\": {trace_bytes},\n  \"audit_bytes\": {audit_bytes},\n  \
+         \"median_s_off\": {t_off:.6},\n  \
          \"median_s_on\": {t_on:.6},\n  \"mcycles_per_s_off\": {rate_off:.2},\n  \
          \"mcycles_per_s_on\": {rate_on:.2},\n  \"overhead_frac\": {overhead:.4}\n}}\n",
         m_on.tokens,
@@ -94,6 +118,7 @@ fn main() -> anyhow::Result<()> {
 
     assert!(events > 0, "armed observer recorded nothing");
     assert!(trace_bytes > 0, "armed tracer rendered nothing");
+    assert!(audit_bytes > 0, "armed auditor rendered nothing");
     assert!(
         overhead < 0.10,
         "observability overhead {:.1}% exceeds the 10% budget",

@@ -10,6 +10,13 @@
 //! where wake-up finding dominates. The acceptance bar from ISSUE 7 is
 //! **≥ 2× events/sec at the 64-device encoder point**; the bench
 //! asserts it and writes every point to `BENCH_simspeed.json`.
+//!
+//! With `--features alloc-profile` the bench additionally reports peak
+//! live heap bytes and allocation-call counts per workload point
+//! (`alloc_peak_bytes` / `alloc_count` in the JSON), measured in a
+//! separate *un-timed* pass of the calendar arm so the throughput
+//! numbers stay comparable to unprofiled builds. Without the feature
+//! both fields are 0 and `"alloc_profile"` is `false`.
 
 use cgra_edge::bench_util::{f1, f2, f3, time_median, Table};
 use cgra_edge::cluster::{
@@ -78,6 +85,23 @@ fn decode_requests(n: usize, d_model: usize, mean_gap: f64, seed: u64) -> Vec<Ge
         .collect()
 }
 
+/// Run `f` once with the counting allocator bracketed around it and
+/// report (peak live bytes, allocation calls). Without the feature the
+/// workload is *not* re-run — the reading is just absent (0, 0).
+#[cfg(feature = "alloc-profile")]
+fn measure_allocs<T>(f: impl FnOnce() -> T) -> (u64, u64) {
+    cgra_edge::alloc_profile::reset();
+    let out = f();
+    let snap = cgra_edge::alloc_profile::snapshot();
+    drop(out);
+    (snap.peak_bytes, snap.allocs)
+}
+
+#[cfg(not(feature = "alloc-profile"))]
+fn measure_allocs<T>(_f: impl FnOnce() -> T) -> (u64, u64) {
+    (0, 0)
+}
+
 struct Point {
     workload: &'static str,
     devices: usize,
@@ -85,6 +109,11 @@ struct Point {
     events: u64,
     t_ref: f64,
     t_cal: f64,
+    /// Peak live heap bytes over one calendar-arm run (0 without the
+    /// `alloc-profile` feature).
+    alloc_peak_bytes: u64,
+    /// Heap allocation calls over the same run (0 without the feature).
+    alloc_count: u64,
 }
 
 impl Point {
@@ -151,7 +180,17 @@ fn encoder_point(devices: usize, reps: usize) -> Point {
     let (t_ref, _) = time_median(warmup, reps, || {
         run_ref();
     });
-    Point { workload: "encoder", devices, requests: ENC_REQUESTS, events, t_ref, t_cal }
+    let (alloc_peak_bytes, alloc_count) = measure_allocs(run_cal);
+    Point {
+        workload: "encoder",
+        devices,
+        requests: ENC_REQUESTS,
+        events,
+        t_ref,
+        t_cal,
+        alloc_peak_bytes,
+        alloc_count,
+    }
 }
 
 /// Shared decode workload + config: chunked prefill, migration off —
@@ -210,7 +249,17 @@ fn decode_point(devices: usize, reps: usize) -> Point {
     let (t_ref, _) = time_median(warmup, reps, || {
         run_ref();
     });
-    Point { workload: "decode", devices, requests: DEC_REQUESTS, events, t_ref, t_cal }
+    let (alloc_peak_bytes, alloc_count) = measure_allocs(run_cal);
+    Point {
+        workload: "decode",
+        devices,
+        requests: DEC_REQUESTS,
+        events,
+        t_ref,
+        t_cal,
+        alloc_peak_bytes,
+        alloc_count,
+    }
 }
 
 struct ThreadPoint {
@@ -306,6 +355,8 @@ fn main() -> anyhow::Result<()> {
         "ref Mev/s",
         "cal Mev/s",
         "speedup",
+        "peak MiB",
+        "allocs",
     ]);
     for p in &points {
         table.row(&[
@@ -317,9 +368,14 @@ fn main() -> anyhow::Result<()> {
             f2(p.events_per_s(p.t_ref) / 1e6),
             f2(p.events_per_s(p.t_cal) / 1e6),
             f1(p.speedup()),
+            f1(p.alloc_peak_bytes as f64 / (1024.0 * 1024.0)),
+            p.alloc_count.to_string(),
         ]);
     }
     table.print();
+    if !cfg!(feature = "alloc-profile") {
+        println!("(memory columns are 0: rebuild with --features alloc-profile to measure)");
+    }
 
     println!("\nthreads sweep (calendar loop, sharded workers, equality-checked vs 1 thread):\n");
     let mut tpoints: Vec<ThreadPoint> = Vec::new();
@@ -345,13 +401,16 @@ fn main() -> anyhow::Result<()> {
     }
     ttable.print();
 
-    let mut json = String::from("{\n  \"bench\": \"sim_speed\",\n  \"points\": [\n");
+    let mut json = format!(
+        "{{\n  \"bench\": \"sim_speed\",\n  \"alloc_profile\": {},\n  \"points\": [\n",
+        cfg!(feature = "alloc-profile"),
+    );
     for (i, p) in points.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"workload\": \"{}\", \"devices\": {}, \"requests\": {}, \
              \"events\": {}, \"median_s_ref\": {:.6}, \"median_s_cal\": {:.6}, \
              \"events_per_s_ref\": {:.0}, \"events_per_s_cal\": {:.0}, \
-             \"speedup\": {:.3}}}{}\n",
+             \"speedup\": {:.3}, \"alloc_peak_bytes\": {}, \"alloc_count\": {}}}{}\n",
             p.workload,
             p.devices,
             p.requests,
@@ -361,6 +420,8 @@ fn main() -> anyhow::Result<()> {
             p.events_per_s(p.t_ref),
             p.events_per_s(p.t_cal),
             p.speedup(),
+            p.alloc_peak_bytes,
+            p.alloc_count,
             if i + 1 == points.len() { "" } else { "," },
         ));
     }

@@ -1,0 +1,153 @@
+//! Counting global allocator for memory profiling (`alloc-profile`
+//! feature).
+//!
+//! Wraps [`std::alloc::System`] and keeps three atomic counters: total
+//! allocation calls, live bytes, and the high-water mark of live bytes.
+//! The counters use `Relaxed` ordering — they are statistics, not
+//! synchronization — so the overhead per allocation is two or three
+//! uncontended atomic RMWs. That is cheap enough to leave on for a
+//! whole benchmark run, but it is still *not* free: the `sim_speed`
+//! bench therefore measures allocations in a separate un-timed pass so
+//! the throughput numbers stay comparable to non-profiled builds.
+//!
+//! Usage (wired up in `lib.rs` when the feature is on):
+//!
+//! ```ignore
+//! alloc_profile::reset();
+//! run_workload();
+//! let snap = alloc_profile::snapshot();
+//! eprintln!("peak {} B over {} allocs", snap.peak_bytes, snap.allocs);
+//! ```
+//!
+//! `peak_bytes` is the peak of *live* bytes since the last `reset()`,
+//! counted from the live total at reset time (reset does not pretend
+//! previously-allocated memory is free — it re-bases the peak at the
+//! current live level, so a snapshot brackets exactly the workload
+//! between the two calls).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Allocation calls since process start (monotonic; `reset()` re-bases
+/// the *reported* count, not this counter).
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Currently-live heap bytes routed through this allocator.
+static LIVE: AtomicU64 = AtomicU64::new(0);
+/// High-water mark of `LIVE` since the last `reset()`.
+static PEAK: AtomicU64 = AtomicU64::new(0);
+/// `ALLOCS` value captured at the last `reset()`.
+static ALLOCS_BASE: AtomicU64 = AtomicU64::new(0);
+
+/// A point-in-time reading of the counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// Allocation calls since the last [`reset`].
+    pub allocs: u64,
+    /// Live heap bytes right now.
+    pub live_bytes: u64,
+    /// Peak live heap bytes since the last [`reset`].
+    pub peak_bytes: u64,
+}
+
+/// Re-base the counters: the peak restarts at the current live level
+/// and the allocation count restarts at zero.
+pub fn reset() {
+    ALLOCS_BASE.store(ALLOCS.load(Relaxed), Relaxed);
+    PEAK.store(LIVE.load(Relaxed), Relaxed);
+}
+
+/// Read the counters (cheap; three relaxed loads).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Relaxed).saturating_sub(ALLOCS_BASE.load(Relaxed)),
+        live_bytes: LIVE.load(Relaxed),
+        peak_bytes: PEAK.load(Relaxed),
+    }
+}
+
+#[inline]
+fn on_alloc(size: u64) {
+    ALLOCS.fetch_add(1, Relaxed);
+    let live = LIVE.fetch_add(size, Relaxed) + size;
+    PEAK.fetch_max(live, Relaxed);
+}
+
+#[inline]
+fn on_dealloc(size: u64) {
+    LIVE.fetch_sub(size, Relaxed);
+}
+
+/// The counting allocator. Install as `#[global_allocator]` (done in
+/// `lib.rs` behind the `alloc-profile` feature).
+pub struct CountingAlloc;
+
+// SAFETY: every method delegates directly to `System`; the counters are
+// pure bookkeeping and never affect the returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_alloc(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        on_dealloc(layout.size() as u64);
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            on_alloc(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            // Count a realloc as one call; live bytes move by the delta.
+            ALLOCS.fetch_add(1, Relaxed);
+            let old = layout.size() as u64;
+            let new = new_size as u64;
+            if new >= old {
+                let live = LIVE.fetch_add(new - old, Relaxed) + (new - old);
+                PEAK.fetch_max(live, Relaxed);
+            } else {
+                LIVE.fetch_sub(old - new, Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test, not several: the counters are process-global, so
+    // parallel tests calling reset() would race each other's
+    // assertions. Everything here tolerates background allocation from
+    // other test threads.
+    #[test]
+    fn counters_track_a_vec_roundtrip() {
+        reset();
+        let before = snapshot();
+        let v = vec![1u8; 1 << 16];
+        assert_eq!(v.len(), 1 << 16);
+        let during = snapshot();
+        assert!(during.allocs > before.allocs, "alloc call not counted");
+        // While the vec is alive, live bytes — and therefore the peak
+        // observed at its allocation — include its 64 KiB, no matter
+        // what other threads allocate or free around us.
+        assert!(
+            during.peak_bytes >= 1 << 16,
+            "peak missed the vec: before={before:?} during={during:?}"
+        );
+        drop(v);
+        let after = snapshot();
+        assert!(after.peak_bytes >= during.peak_bytes, "peak must be sticky");
+    }
+}

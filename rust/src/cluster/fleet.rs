@@ -128,6 +128,11 @@ pub struct DeviceEngine {
     pub served: u64,
     /// Model class of the most recent request (context-reuse tracking).
     pub last_model: Option<usize>,
+    /// Cycle at which the device started parking on a partial batch
+    /// (hold-for-fill), cleared when the held batch is popped. Pure
+    /// bookkeeping for metrics/observability — nothing in the
+    /// scheduling path reads it.
+    pub hold_since: Option<u64>,
     /// Simulator event counters accumulated over all served requests.
     pub stats: Stats,
 }
@@ -150,6 +155,7 @@ impl DeviceEngine {
             busy_cycles: 0,
             served: 0,
             last_model: None,
+            hold_since: None,
             stats: Stats::default(),
         }
     }
@@ -568,6 +574,7 @@ fn serve_batch_on<O: ObsSink>(
     batch: &[FleetRequest],
     now: u64,
     dev: usize,
+    hold_since: Option<u64>,
     obs: &mut O,
 ) -> Result<()> {
     let Some(first) = batch.first() else { return Ok(()) };
@@ -610,13 +617,27 @@ fn serve_batch_on<O: ObsSink>(
     for req in batch {
         metrics.completed += 1;
         metrics.latency.record(completion - req.arrival_cycle);
-        metrics.queue_wait.record(now - req.arrival_cycle);
+        // Split pre-serve wait into genuine queue wait and the
+        // batch-formation hold the device chose to take: lumping hold
+        // into queue wait blamed the dispatcher for the batch policy's
+        // deliberate parking. A request that arrived mid-hold is only
+        // charged the hold it actually sat through.
+        let total_wait = now - req.arrival_cycle;
+        let hold = hold_since.map_or(0, |h| now - h.max(req.arrival_cycle));
+        metrics.queue_wait.record(total_wait - hold);
+        metrics.hold_wait.record(hold);
         if req.deadline_cycle.is_some_and(|dl| completion > dl) {
             metrics.sla_misses += 1;
         }
     }
     if obs.enabled() {
         let batch_n = batch.len();
+        if let Some(h) = hold_since {
+            // Retroactive: the hold span is only known once the batch
+            // serves. Its cycle is the hold start; it ends exactly at
+            // this serve's start.
+            obs.record(h, dev, NO_SEQ, EventKind::Hold { dur: now - h });
+        }
         obs.record(now, dev, NO_SEQ, EventKind::Serve { model, batch: batch_n, dur: charged });
         for req in batch {
             let latency = completion - req.arrival_cycle;
@@ -672,10 +693,16 @@ fn run_device_queue<Q: QueueSource, O: ObsSink>(
             if now < hold {
                 // A future event either way: the batch fills, or the
                 // hold expires.
+                if engine.hold_since.is_none() {
+                    engine.hold_since = Some(now);
+                }
                 parked = Some(hold);
                 break;
             }
         }
+        // Whatever pops now ends any hold that was in progress; the
+        // first pop of the loop owns the whole span.
+        let held = engine.hold_since.take();
         queues.pop_batch_into(d, now, policy.cap(), key_of, scratch);
         metrics.dropped += scratch.dropped.len() as u64;
         if obs.enabled() {
@@ -701,6 +728,7 @@ fn run_device_queue<Q: QueueSource, O: ObsSink>(
             &scratch.batch,
             now,
             d,
+            held,
             obs,
         )?;
     }
@@ -785,6 +813,10 @@ fn steal_pass(
             &scratch.batch,
             now,
             t,
+            // A thief was idle, not holding: stolen batches carry no
+            // hold span (relocation itself is instantaneous, so the
+            // anatomy's `steal` component is structurally zero too).
+            None,
             obs,
         )?;
         if let Some(c) = cal.as_deref_mut() {
@@ -931,6 +963,12 @@ impl FleetSim {
     /// `kernel_csv` from it after [`Self::run`].
     pub fn obs(&self) -> &Observer {
         &self.obs
+    }
+
+    /// Mutable observer access — used by the CLI to arm streaming trace
+    /// output before [`Self::run`].
+    pub fn obs_mut(&mut self) -> &mut Observer {
+        &mut self.obs
     }
 
     /// The batch key of a model class ([`model_batch_key`]): equal keys

@@ -126,8 +126,13 @@ pub struct FleetMetrics {
     pub makespan_cycles: u64,
     /// End-to-end latency (queue + service) of completed requests.
     pub latency: LogHistogram,
-    /// Queue-wait component of latency (diagnostic for placement).
+    /// Queue-wait component of latency (diagnostic for placement),
+    /// excluding any batch-formation hold the device chose to take.
     pub queue_wait: LogHistogram,
+    /// Batch-formation hold component of latency: cycles a completed
+    /// request sat in a deliberately parked partial batch (one sample
+    /// per completion, zero when its batch never held).
+    pub hold_wait: LogHistogram,
     /// Requests per executed batch, one sample per device job
     /// (`mean()` is the average occupancy, `count()` the job count).
     pub batch_occupancy: LogHistogram,
@@ -162,6 +167,7 @@ impl FleetMetrics {
         self.makespan_cycles = self.makespan_cycles.max(other.makespan_cycles);
         self.latency.merge(&other.latency);
         self.queue_wait.merge(&other.queue_wait);
+        self.hold_wait.merge(&other.hold_wait);
         self.batch_occupancy.merge(&other.batch_occupancy);
         self.weight_reuse_words += other.weight_reuse_words;
         self.steals += other.steals;

@@ -41,6 +41,17 @@
 //! pays zero reconfiguration; after an idle gap the context memory is
 //! assumed power-collapsed and the full cost returns.
 //!
+//! ## Observability
+//!
+//! `spawn_observed` threads the same [`ObsConfig`] the fleet sims take,
+//! so coordinator runs get the full analysis stack for free: event
+//! traces, windowed series, and — with `spans`/`audit` armed — the
+//! per-request latency anatomy of [`crate::obs::anatomy`] and the blame
+//! report of [`crate::obs::audit`]. The observer stays write-only from
+//! the worker's perspective (recording never feeds back into timing),
+//! so an observed coordinator run serves bit-identical outputs to an
+//! unobserved one.
+//!
 //! The build environment vendors no tokio; the runtime is `std::thread`
 //! + `mpsc`, which an edge deployment would arguably prefer anyway.
 

@@ -1080,7 +1080,18 @@ impl DeviceDecoder {
             let rows = (st.input.rows - st.done).min(budget);
             match self.kv.commit_tokens(st.seq.id, rows) {
                 Ok(_) => {}
-                Err(AdmitError::NoCapacity { .. }) => return Ok(false),
+                Err(AdmitError::NoCapacity { .. }) => {
+                    // Mid-prompt chunk stalled on KV pressure: pages
+                    // must free before the next chunk can commit. One
+                    // instant per blocked attempt (re-emitted if the
+                    // device is revisited while still blocked) —
+                    // initial-admission blocking stays plain queue
+                    // wait and emits nothing here.
+                    if obs.enabled() {
+                        obs.record(now, dev, st.seq.id, EventKind::ChunkWait);
+                    }
+                    return Ok(false);
+                }
                 Err(e) => return Err(e.into()),
             }
         }
@@ -1531,6 +1542,12 @@ impl DecodeFleetSim {
     /// The observer (trace/series/kernel accessors live there).
     pub fn obs(&self) -> &Observer {
         &self.obs
+    }
+
+    /// Mutable observer access — used by the CLI to arm streaming trace
+    /// output before [`Self::run`].
+    pub fn obs_mut(&mut self) -> &mut Observer {
+        &mut self.obs
     }
 
     /// The served model catalog (index-aligned with request `model`).

@@ -30,9 +30,12 @@
 //! - [`obs`] — fleet observability: deterministic structured event
 //!   tracing rendered as Chrome/Perfetto JSON (one track per device,
 //!   flow arrows across migrations), windowed time-series metrics,
-//!   and the mergeable log-bucket latency histograms behind the fleet
-//!   percentile reports. Observation never feeds back into simulation:
-//!   tracing on vs off is bit-identical.
+//!   the mergeable log-bucket latency histograms behind the fleet
+//!   percentile reports, per-request latency anatomy (causal span
+//!   decomposition whose components sum bit-exactly to each request's
+//!   e2e latency), and SLA-miss audit reports with critical-path
+//!   blame. Observation never feeds back into simulation: tracing on
+//!   vs off is bit-identical.
 //! - [`baseline`] — scalar general-purpose-processor cost/energy model.
 //! - [`runtime`] — PJRT wrapper used to validate numerics against the
 //!   AOT-compiled JAX model (build-time Python, never on the request
@@ -40,6 +43,8 @@
 //!   the default build has no native dependencies).
 //! - [`cli`], [`config`], [`util`], [`bench_util`], [`trace`] — glue.
 
+#[cfg(feature = "alloc-profile")]
+pub mod alloc_profile;
 pub mod arch;
 pub mod baseline;
 pub mod bench_util;
@@ -61,3 +66,11 @@ pub mod xformer;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
+
+/// With `alloc-profile` on, every heap allocation in the process is
+/// routed through the counting wrapper so benches can report peak
+/// memory and allocation counts (see [`alloc_profile`]). Off by
+/// default: the default build's allocator is untouched `System`.
+#[cfg(feature = "alloc-profile")]
+#[global_allocator]
+static GLOBAL_ALLOC: alloc_profile::CountingAlloc = alloc_profile::CountingAlloc;

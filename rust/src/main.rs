@@ -17,12 +17,14 @@
 //!                                  prefill)
 //!   cluster [--fleet SPEC | --devices d] [--requests n] [--rate rps]
 //!           [--policy p] [--queue q] [--arrival a] [--seed s]
-//!           [--batch b] [--no-steal] [--workload encoder|decode]
+//!           [--batch b] [--batch-wait w] [--no-steal]
+//!           [--workload encoder|decode]
 //!           [--max-running r] [--page-words w]
 //!           [--schedule prefill-first|decode-first|chunked]
 //!           [--chunk-tokens t] [--migrate] [--pin-device d]
-//!           [--threads n] [--trace-out f] [--metrics-window w]
-//!           [--metrics-out f] [--kernel-trace f]
+//!           [--threads n] [--trace-out f] [--stream-trace]
+//!           [--metrics-window w] [--metrics-out f] [--kernel-trace f]
+//!           [--spans] [--audit-out f]
 //!                                — fleet-serving simulation (cluster);
 //!                                  --fleet takes a class roster like
 //!                                  `4x4@100:3,8x4@200:1` (mixed array
@@ -59,7 +61,24 @@
 //!                                  migration demos). --threads N runs
 //!                                  the fleet event loop on N worker
 //!                                  threads (both workloads) — output
-//!                                  is bit-identical to --threads 1
+//!                                  is bit-identical to --threads 1.
+//!                                  Latency anatomy: --spans appends
+//!                                  per-request causal span tracks to
+//!                                  the trace JSON, --audit-out writes
+//!                                  the fleet blame / SLA-miss report
+//!                                  (JSON, or per-window CSV when the
+//!                                  path ends in .csv), --stream-trace
+//!                                  spills the trace to --trace-out
+//!                                  while the run executes instead of
+//!                                  holding it in memory (cluster
+//!                                  only; bytes identical to the
+//!                                  in-memory render). --batch-wait W
+//!                                  lets a device hold a partial batch
+//!                                  up to W ref cycles for a fuller
+//!                                  one (encoder workload; the hold
+//!                                  shows up as its own trace span,
+//!                                  series column, and anatomy
+//!                                  component)
 
 use anyhow::{bail, Result};
 use cgra_edge::baseline::Gpp;
@@ -73,7 +92,7 @@ use cgra_edge::coordinator::{Coordinator, DecodeCoordinator, Request};
 use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeSchedule, KvConfig};
 use cgra_edge::energy::EnergyModel;
 use cgra_edge::gemm::{oracle_quant, run_gemm, GemmPlan, MapVariant, OutputMode};
-use cgra_edge::obs::{ObsConfig, Observer};
+use cgra_edge::obs::{AuditConfig, ObsConfig, Observer};
 use cgra_edge::sim::CgraSim;
 use cgra_edge::util::mat::{MatF32, MatI8};
 use cgra_edge::util::rng::XorShiftRng;
@@ -113,22 +132,55 @@ fn roster_summary(roster: &[DeviceClass]) -> String {
 /// Observer configuration from the observability flags: `--trace-out
 /// FILE` arms event tracing, `--metrics-window N` arms the windowed
 /// series (N ref cycles per window), `--kernel-trace FILE` arms the
-/// per-kernel CSV. All off by default — and a run with them on is
-/// bit-identical to the same run with them off.
+/// per-kernel CSV, `--spans` arms per-request anatomy span tracks in
+/// the trace JSON, `--audit-out FILE` arms the fleet blame report.
+/// All off by default — and a run with them on is bit-identical to
+/// the same run with them off.
 fn parse_obs_cfg(args: &Args) -> Result<ObsConfig> {
     let window: u64 = args.flag_parse("metrics-window", 0u64)?;
     Ok(ObsConfig {
         trace: args.flag("trace-out").is_some(),
         window_cycles: (window > 0).then_some(window),
         kernels: args.flag("kernel-trace").is_some(),
+        spans: args.switch("spans"),
+        audit: args.flag("audit-out").is_some(),
     })
 }
 
-/// Write whatever the observer recorded: trace JSON to `--trace-out`,
+/// Audit window in ref cycles: `--metrics-window` when set, so audit
+/// windows line up with the series rows, else 100k cycles (1 ms at
+/// the 100 MHz paper clock).
+fn audit_cfg(args: &Args, ref_mhz: u64, sla_ms_by_class: &[f64]) -> Result<AuditConfig> {
+    let window: u64 = args.flag_parse("metrics-window", 0u64)?;
+    let window = if window > 0 { window } else { 100_000 };
+    let sla = sla_ms_by_class
+        .iter()
+        .map(|&ms| (ms > 0.0).then(|| (ms * ref_mhz as f64 * 1e3) as u64))
+        .collect();
+    Ok(AuditConfig::new(window, sla))
+}
+
+/// Write whatever the observer recorded: trace JSON to `--trace-out`
+/// (already on disk when `--stream-trace` spilled it during the run),
 /// series CSV to `--metrics-out` (stdout without it), kernel CSV to
-/// `--kernel-trace`.
-fn write_obs_outputs(obs: &Observer, args: &Args) -> Result<()> {
-    if let (Some(path), Some(json)) = (args.flag("trace-out"), obs.trace_json()) {
+/// `--kernel-trace`, the blame report to `--audit-out` (JSON, or the
+/// per-window CSV table when the path ends in `.csv`). `ref_mhz` and
+/// `sla_ms_by_class` size the audit's per-class SLA budgets.
+fn write_obs_outputs(
+    obs: &Observer,
+    args: &Args,
+    ref_mhz: u64,
+    sla_ms_by_class: &[f64],
+) -> Result<()> {
+    if obs.is_streaming() {
+        if let Some(path) = args.flag("trace-out") {
+            if let Some(err) = obs.stream_error() {
+                bail!("streaming trace to {path} failed: {err}");
+            }
+            let n = obs.event_count();
+            println!("trace    : {n} events streamed -> {path} (chrome://tracing / Perfetto)");
+        }
+    } else if let (Some(path), Some(json)) = (args.flag("trace-out"), obs.trace_json()) {
         std::fs::write(path, json)?;
         let n = obs.event_count();
         println!("trace    : {n} events -> {path} (chrome://tracing / Perfetto)");
@@ -145,6 +197,29 @@ fn write_obs_outputs(obs: &Observer, args: &Args) -> Result<()> {
     if let (Some(path), Some(csv)) = (args.flag("kernel-trace"), obs.kernel_csv()) {
         std::fs::write(path, csv)?;
         println!("kernels  : per-kernel rows -> {path}");
+    }
+    if let Some(path) = args.flag("audit-out") {
+        let acfg = audit_cfg(args, ref_mhz, sla_ms_by_class)?;
+        let rendered =
+            if path.ends_with(".csv") { obs.audit_csv(&acfg) } else { obs.audit_json(&acfg) };
+        if let Some(text) = rendered {
+            std::fs::write(path, text)?;
+            println!("audit    : latency blame report -> {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Arm the streaming trace writer when `--stream-trace` rides along
+/// with `--trace-out` (cluster paths; the observer must be armed
+/// before the run starts).
+fn arm_stream_trace(obs: &mut Observer, args: &Args) -> Result<()> {
+    if args.switch("stream-trace") {
+        let Some(path) = args.flag("trace-out") else {
+            bail!("--stream-trace needs --trace-out FILE");
+        };
+        let file = std::fs::File::create(path)?;
+        obs.stream_trace_to(Box::new(std::io::BufWriter::new(file)));
     }
     Ok(())
 }
@@ -325,7 +400,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.p99_latency_cycles() as f64 / (cfg.freq_mhz * 1e3),
         m.throughput_rps(cfg.freq_mhz)
     );
-    write_obs_outputs(&obs, args)?;
+    write_obs_outputs(&obs, args, cfg.freq_mhz_u64(), &[0.0])?;
     Ok(())
 }
 
@@ -386,7 +461,7 @@ fn cmd_serve_decode(args: &Args) -> Result<()> {
         m.itl.p50() as f64 / (cfg.freq_mhz * 1e3),
         m.tokens_per_sec(cfg.freq_mhz)
     );
-    write_obs_outputs(&obs, args)?;
+    write_obs_outputs(&obs, args, cfg.freq_mhz_u64(), &[0.0])?;
     Ok(())
 }
 
@@ -422,6 +497,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if max_batch == 0 {
         bail!("--batch must be at least 1");
     }
+    // `--batch-wait W`: park a partial batch up to W ref cycles for a
+    // fuller one (0 = greedy, the default). The hold is visible as a
+    // `hold` trace span, the series' hold_permille column, and the
+    // anatomy's hold component.
+    let batch_wait: u64 = args.flag_parse("batch-wait", 0u64)?;
     let threads = parse_threads(args)?;
     let classes = ModelClass::edge_mix();
     let ref_mhz = arch.freq_mhz_u64();
@@ -434,7 +514,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             roster,
             policy,
             discipline,
-            batch: BatchPolicy::greedy(max_batch),
+            batch: BatchPolicy {
+                max_batch,
+                max_wait_cycles: batch_wait,
+                latency_aware: false,
+            },
             steal,
             ref_mhz,
             threads,
@@ -444,6 +528,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         42,
     );
     fleet.enable_obs(&parse_obs_cfg(args)?);
+    arm_stream_trace(fleet.obs_mut(), args)?;
     let m = fleet.run(requests)?;
     let em = EnergyModel::default();
     let freq_ref = ref_mhz as f64;
@@ -496,7 +581,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         e.total_uj(),
         if m.completed > 0 { e.total_uj() / m.completed as f64 } else { 0.0 }
     );
-    write_obs_outputs(fleet.obs(), args)?;
+    let sla_ms: Vec<f64> = classes.iter().map(|c| c.sla_ms).collect();
+    write_obs_outputs(fleet.obs(), args, ref_mhz, &sla_ms)?;
     Ok(())
 }
 
@@ -564,6 +650,7 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         42,
     );
     fleet.enable_obs(&parse_obs_cfg(args)?);
+    arm_stream_trace(fleet.obs_mut(), args)?;
     let (m, _completions) = fleet.run(requests)?;
     let em = EnergyModel::default();
     let freq_ref = ref_mhz as f64;
@@ -629,7 +716,8 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         e.total_uj(),
         if m.tokens > 0 { e.total_uj() / m.tokens as f64 } else { 0.0 }
     );
-    write_obs_outputs(fleet.obs(), args)?;
+    let sla_ms: Vec<f64> = classes.iter().map(|c| c.sla_ms).collect();
+    write_obs_outputs(fleet.obs(), args, ref_mhz, &sla_ms)?;
     Ok(())
 }
 

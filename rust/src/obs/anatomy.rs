@@ -1,0 +1,548 @@
+//! Per-request causal latency anatomy: split each completed request's
+//! end-to-end latency into named components, derived deterministically
+//! from the structured event stream alone.
+//!
+//! The load-bearing invariant is **exactness by construction**: for
+//! every completed request, [`decompose`] partitions the half-open
+//! cycle range `[arrival, completion)` into contiguous
+//! [`AnatomySegment`]s — no gaps, no overlaps — so the component
+//! totals sum bit-exactly to the recorded e2e latency
+//! (`completion − arrival`, with `arrival := completion − latency`
+//! taken from the `Complete` event itself). Event matching (which
+//! serve span, which tick, which chunk a request rode) only decides
+//! how cycles are *labeled*; a mismatch can mislabel a bucket but can
+//! never break the sum. `rust/tests/anatomy_props.rs` pins the sum
+//! over random rosters, schedules, chunking, preemption, and
+//! migration.
+//!
+//! Components (index = position in [`COMPONENT_NAMES`]):
+//!
+//! 0. `queue_wait` — arrival to first causal activity (admission gap).
+//! 1. `hold` — batch-formation hold: the device was parked on a
+//!    partial batch containing this request (encoder hold-for-fill).
+//! 2. `prefill_exec` — encoder serve span or decode prefill/chunk
+//!    execution.
+//! 3. `chunk_stall` — waiting between prefill chunks (budget or KV
+//!    pressure).
+//! 4. `decode_exec` — decode-tick execution while running.
+//! 5. `decode_stall` — running but waiting for the next tick (the
+//!    ISSUE's eight components plus this one: continuous batching
+//!    interleaves chunks between ticks, and lumping that wait into
+//!    chunk-stall would blame the wrong mechanism).
+//! 6. `preempt_stall` — preempted (pages shed) until re-prefilled.
+//! 7. `migration` — live KV transfer: source export start to
+//!    destination import end.
+//! 8. `steal` — work-stealing relocation. Always zero in the current
+//!    encoder (a stolen batch is served at the same cycle it is
+//!    stolen), kept as a named bucket so the report schema is stable
+//!    if relocation ever gains a cost.
+
+use super::trace::{EventKind, ObsEvent, NO_SEQ};
+use std::collections::BTreeMap;
+
+/// Number of anatomy components.
+pub const N_COMPONENTS: usize = 9;
+
+/// Component names, index-aligned with [`Components`].
+pub const COMPONENT_NAMES: [&str; N_COMPONENTS] = [
+    "queue_wait",
+    "hold",
+    "prefill_exec",
+    "chunk_stall",
+    "decode_exec",
+    "decode_stall",
+    "preempt_stall",
+    "migration",
+    "steal",
+];
+
+/// Component indices, by name.
+pub mod comp {
+    pub const QUEUE_WAIT: usize = 0;
+    pub const HOLD: usize = 1;
+    pub const PREFILL_EXEC: usize = 2;
+    pub const CHUNK_STALL: usize = 3;
+    pub const DECODE_EXEC: usize = 4;
+    pub const DECODE_STALL: usize = 5;
+    pub const PREEMPT_STALL: usize = 6;
+    pub const MIGRATION: usize = 7;
+    pub const STEAL: usize = 8;
+}
+
+/// Per-component cycle totals for one request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Components(pub [u64; N_COMPONENTS]);
+
+impl Components {
+    /// Total cycles across all components — bit-exactly the request's
+    /// e2e latency.
+    pub fn sum(&self) -> u64 {
+        self.0.iter().sum()
+    }
+}
+
+/// One labeled slice of a request's `[arrival, completion)` timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AnatomySegment {
+    pub start: u64,
+    /// Exclusive end cycle.
+    pub end: u64,
+    /// Index into [`COMPONENT_NAMES`].
+    pub component: usize,
+}
+
+/// The causal decomposition of one completed request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestAnatomy {
+    /// Request / sequence id.
+    pub id: u64,
+    /// Model class index.
+    pub model: usize,
+    /// Derived arrival cycle (`completion − latency`).
+    pub arrival: u64,
+    /// Completion cycle (the `Complete` event's timestamp).
+    pub completion: u64,
+    /// Recorded e2e latency from the `Complete` event.
+    pub latency: u64,
+    /// Device that completed the request.
+    pub device: usize,
+    /// Exact contiguous partition of `[arrival, completion)`.
+    pub segments: Vec<AnatomySegment>,
+    /// Per-component cycle totals (sums of `segments` by label).
+    pub comps: Components,
+}
+
+/// Sequence lifecycle phase, used only to pick gap labels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Queued,
+    Prefilling,
+    Decoding,
+    Preempted,
+}
+
+#[derive(Debug)]
+struct SeqState {
+    model: usize,
+    phase: Phase,
+    /// Raw labeled activity intervals `(start, end, component)`; may
+    /// be future-dated or overlapping — the assembly pass clamps.
+    intervals: Vec<(u64, u64, usize)>,
+    /// Gap-label breakpoints `(cycle, component)`: unassigned time at
+    /// or after `cycle` is labeled `component` until the next mark.
+    marks: Vec<(u64, usize)>,
+    /// Source-side start of an in-flight migration.
+    migrate_src: Option<u64>,
+}
+
+impl SeqState {
+    fn new() -> Self {
+        Self {
+            model: 0,
+            phase: Phase::Queued,
+            intervals: Vec::new(),
+            marks: Vec::new(),
+            migrate_src: None,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct DevState {
+    /// Last encoder serve span `(start, end, model)`.
+    last_serve: Option<(u64, u64, usize)>,
+    /// Batch-formation hold attached to `last_serve`.
+    serve_hold: Option<(u64, u64)>,
+    /// Hold span awaiting its serve (retroactive emission: the Hold
+    /// event immediately precedes its Serve in stream order).
+    pending_hold: Option<(u64, u64)>,
+    /// KV admissions `(cycle, seq)` not yet claimed by a stacked
+    /// prefill job on this device.
+    admits: Vec<(u64, u64)>,
+    /// Last stacked prefill span `(cycle, end)` (for admits recorded
+    /// after the job event at the same cycle).
+    last_batch_prefill: Option<(u64, u64)>,
+    /// Sequences currently in the running decode batch here.
+    decoding: Vec<u64>,
+}
+
+impl DevState {
+    fn drop_decoding(&mut self, seq: u64) {
+        self.decoding.retain(|&s| s != seq);
+    }
+}
+
+/// Fill `[from, to)` with gap segments, switching labels at `marks`
+/// breakpoints (sorted by cycle; default label `queue_wait`).
+fn fill_gap(segments: &mut Vec<AnatomySegment>, marks: &[(u64, usize)], from: u64, to: u64) {
+    let mut t = from;
+    while t < to {
+        let mut label = comp::QUEUE_WAIT;
+        let mut next = to;
+        for &(mc, ml) in marks {
+            if mc <= t {
+                label = ml;
+            } else {
+                next = next.min(mc);
+                break;
+            }
+        }
+        segments.push(AnatomySegment { start: t, end: next, component: label });
+        t = next;
+    }
+}
+
+/// Assemble one request's exact partition from its raw intervals and
+/// gap marks.
+fn assemble(
+    id: u64,
+    model: usize,
+    completion: u64,
+    latency: u64,
+    device: usize,
+    mut intervals: Vec<(u64, u64, usize)>,
+    mut marks: Vec<(u64, usize)>,
+) -> RequestAnatomy {
+    let arrival = completion.saturating_sub(latency);
+    intervals.sort_by_key(|&(s, e, _)| (s, e));
+    marks.sort_by_key(|&(c, _)| c);
+    let mut segments: Vec<AnatomySegment> = Vec::new();
+    let mut prev = arrival;
+    for &(s, e, c) in &intervals {
+        let start = s.max(prev).min(completion);
+        let end = e.min(completion).max(start);
+        if start > prev {
+            fill_gap(&mut segments, &marks, prev, start);
+        }
+        if end > start {
+            segments.push(AnatomySegment { start, end, component: c });
+        }
+        prev = prev.max(end);
+    }
+    if prev < completion {
+        fill_gap(&mut segments, &marks, prev, completion);
+    }
+    // Merge adjacent same-label segments so span tracks stay compact.
+    let mut merged: Vec<AnatomySegment> = Vec::with_capacity(segments.len());
+    for seg in segments {
+        match merged.last_mut() {
+            Some(last) if last.component == seg.component && last.end == seg.start => {
+                last.end = seg.end;
+            }
+            _ => merged.push(seg),
+        }
+    }
+    let mut comps = Components::default();
+    for seg in &merged {
+        comps.0[seg.component] += seg.end - seg.start;
+    }
+    debug_assert_eq!(
+        comps.sum(),
+        latency,
+        "anatomy components must sum to e2e latency for seq {id}"
+    );
+    RequestAnatomy { id, model, arrival, completion, latency, device, segments: merged, comps }
+}
+
+/// Decompose the event stream into per-request anatomies, sorted by
+/// `(completion, id)`. Purely a function of the stream: byte-for-byte
+/// identical events (the PR 6/8 thread-identity contract) give
+/// identical anatomies.
+pub fn decompose(events: &[ObsEvent]) -> Vec<RequestAnatomy> {
+    let mut seqs: BTreeMap<u64, SeqState> = BTreeMap::new();
+    let mut devs: BTreeMap<usize, DevState> = BTreeMap::new();
+    let mut out: Vec<RequestAnatomy> = Vec::new();
+
+    for e in events {
+        match &e.kind {
+            EventKind::Arrival { model } => {
+                seqs.entry(e.seq).or_insert_with(SeqState::new).model = *model;
+            }
+            EventKind::Hold { dur } => {
+                devs.entry(e.device).or_default().pending_hold = Some((e.cycle, e.cycle + dur));
+            }
+            EventKind::Serve { model, dur, .. } => {
+                let dev = devs.entry(e.device).or_default();
+                dev.serve_hold =
+                    dev.pending_hold.take().filter(|&(_, hold_end)| hold_end == e.cycle);
+                dev.last_serve = Some((e.cycle, e.cycle + dur, *model));
+            }
+            EventKind::KvAdmit { .. } => {
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                st.phase = Phase::Prefilling;
+                let dev = devs.entry(e.device).or_default();
+                match dev.last_batch_prefill {
+                    // Admission recorded after the stacked job event at
+                    // the same cycle: attach directly.
+                    Some((c, end)) if c == e.cycle => {
+                        st.intervals.push((c, end, comp::PREFILL_EXEC));
+                        st.marks.push((end, comp::DECODE_STALL));
+                        st.phase = Phase::Decoding;
+                        dev.decoding.push(e.seq);
+                    }
+                    _ => dev.admits.push((e.cycle, e.seq)),
+                }
+            }
+            EventKind::Resume => {
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                st.phase = Phase::Prefilling;
+                st.marks.push((e.cycle, comp::PREEMPT_STALL));
+            }
+            EventKind::Prefill { dur, chunk, .. } if e.seq != NO_SEQ => {
+                // Per-sequence chunk of a chunked prefill.
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                st.intervals.push((e.cycle, e.cycle + dur, comp::PREFILL_EXEC));
+                if *chunk {
+                    st.phase = Phase::Prefilling;
+                    st.marks.push((e.cycle + dur, comp::CHUNK_STALL));
+                } else {
+                    st.phase = Phase::Decoding;
+                    st.marks.push((e.cycle + dur, comp::DECODE_STALL));
+                    devs.entry(e.device).or_default().decoding.push(e.seq);
+                }
+            }
+            EventKind::Prefill { dur, .. } => {
+                // Stacked whole-prompt job: members are the admissions
+                // recorded at this cycle on this device.
+                let dev = devs.entry(e.device).or_default();
+                let end = e.cycle + dur;
+                dev.last_batch_prefill = Some((e.cycle, end));
+                let mut members = Vec::new();
+                dev.admits.retain(|&(c, s)| {
+                    if c == e.cycle {
+                        members.push(s);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                for s in members {
+                    dev.decoding.push(s);
+                    let st = seqs.entry(s).or_insert_with(SeqState::new);
+                    st.intervals.push((e.cycle, end, comp::PREFILL_EXEC));
+                    st.marks.push((end, comp::DECODE_STALL));
+                    st.phase = Phase::Decoding;
+                }
+            }
+            EventKind::DecodeTick { dur, .. } => {
+                let dev = devs.entry(e.device).or_default();
+                let end = e.cycle + dur;
+                for &s in &dev.decoding {
+                    if let Some(st) = seqs.get_mut(&s) {
+                        st.intervals.push((e.cycle, end, comp::DECODE_EXEC));
+                        st.marks.push((end, comp::DECODE_STALL));
+                    }
+                }
+            }
+            EventKind::Preempt => {
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                st.phase = Phase::Preempted;
+                st.marks.push((e.cycle, comp::PREEMPT_STALL));
+                devs.entry(e.device).or_default().drop_decoding(e.seq);
+            }
+            EventKind::MigrateOut { .. } => {
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                st.migrate_src = Some(e.cycle);
+                devs.entry(e.device).or_default().drop_decoding(e.seq);
+            }
+            EventKind::MigrateIn { dur, .. } => {
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                let start = st.migrate_src.take().unwrap_or(e.cycle);
+                let end = e.cycle + dur;
+                st.intervals.push((start, end, comp::MIGRATION));
+                let after = match st.phase {
+                    Phase::Decoding => comp::DECODE_STALL,
+                    Phase::Preempted => comp::PREEMPT_STALL,
+                    Phase::Prefilling => comp::CHUNK_STALL,
+                    Phase::Queued => comp::QUEUE_WAIT,
+                };
+                st.marks.push((end, after));
+                if st.phase == Phase::Decoding {
+                    devs.entry(e.device).or_default().decoding.push(e.seq);
+                }
+            }
+            EventKind::Complete { latency } => {
+                let mut st = seqs.remove(&e.seq).unwrap_or_else(SeqState::new);
+                let dev = devs.entry(e.device).or_default();
+                dev.drop_decoding(e.seq);
+                // Encoder path: the serve whose span ends exactly at
+                // this completion carried the request (Complete records
+                // immediately follow their Serve in stream order).
+                if let Some((s, end, model)) = dev.last_serve {
+                    if end == e.cycle {
+                        if let Some((hs, he)) = dev.serve_hold {
+                            st.intervals.push((hs, he, comp::HOLD));
+                        }
+                        st.intervals.push((s, end, comp::PREFILL_EXEC));
+                        st.model = model;
+                    }
+                }
+                out.push(assemble(
+                    e.seq,
+                    st.model,
+                    e.cycle,
+                    *latency,
+                    e.device,
+                    st.intervals,
+                    st.marks,
+                ));
+            }
+            EventKind::Reject { .. }
+            | EventKind::Drop
+            | EventKind::Steal { .. }
+            | EventKind::ChunkWait
+            | EventKind::QueueDepth { .. }
+            | EventKind::KvOccupancy { .. } => {}
+        }
+    }
+
+    out.sort_by_key(|r| (r.completion, r.id));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64, device: usize, seq: u64, kind: EventKind) -> ObsEvent {
+        ObsEvent { cycle, device, seq, kind }
+    }
+
+    #[test]
+    fn encoder_batch_with_hold_decomposes_exactly() {
+        // Request 1 arrives at 0, request 2 at 30; device holds the
+        // partial batch from 10 to 50, serves [50, 110), both complete
+        // at 110.
+        let events = vec![
+            ev(0, 0, 1, EventKind::Arrival { model: 2 }),
+            ev(30, 0, 2, EventKind::Arrival { model: 2 }),
+            ev(10, 0, NO_SEQ, EventKind::Hold { dur: 40 }),
+            ev(50, 0, NO_SEQ, EventKind::Serve { model: 2, batch: 2, dur: 60 }),
+            ev(110, 0, 1, EventKind::Complete { latency: 110 }),
+            ev(110, 0, 2, EventKind::Complete { latency: 80 }),
+        ];
+        let anat = decompose(&events);
+        assert_eq!(anat.len(), 2);
+        let r1 = &anat[0];
+        assert_eq!((r1.id, r1.model, r1.arrival, r1.latency), (1, 2, 0, 110));
+        assert_eq!(r1.comps.sum(), 110);
+        assert_eq!(r1.comps.0[comp::QUEUE_WAIT], 10);
+        assert_eq!(r1.comps.0[comp::HOLD], 40);
+        assert_eq!(r1.comps.0[comp::PREFILL_EXEC], 60);
+        let r2 = &anat[1];
+        assert_eq!(r2.comps.sum(), 80);
+        // Hold clamps to r2's own arrival at 30: 50 − 30 = 20.
+        assert_eq!(r2.comps.0[comp::QUEUE_WAIT], 0);
+        assert_eq!(r2.comps.0[comp::HOLD], 20);
+        assert_eq!(r2.comps.0[comp::PREFILL_EXEC], 60);
+    }
+
+    #[test]
+    fn decode_lifecycle_with_preemption_decomposes_exactly() {
+        // Admit at 10, stacked prefill [10, 40), ticks [40, 50) and
+        // [55, 65), preempt at 65, resume + re-prefill [90, 100),
+        // final tick [100, 110), complete at 110.
+        let events = vec![
+            ev(0, 1, 7, EventKind::Arrival { model: 0 }),
+            ev(10, 1, 7, EventKind::KvAdmit { tokens: 8 }),
+            ev(10, 1, NO_SEQ, EventKind::Prefill {
+                model: 0,
+                batch: 1,
+                rows: 8,
+                chunk: false,
+                tokens: 1,
+                dur: 30,
+            }),
+            ev(40, 1, NO_SEQ, EventKind::DecodeTick { batch: 1, dur: 10 }),
+            ev(55, 1, NO_SEQ, EventKind::DecodeTick { batch: 1, dur: 10 }),
+            ev(65, 1, 7, EventKind::Preempt),
+            ev(90, 1, 7, EventKind::KvAdmit { tokens: 8 }),
+            ev(90, 1, 7, EventKind::Resume),
+            ev(90, 1, NO_SEQ, EventKind::Prefill {
+                model: 0,
+                batch: 1,
+                rows: 8,
+                chunk: false,
+                tokens: 1,
+                dur: 10,
+            }),
+            ev(100, 1, NO_SEQ, EventKind::DecodeTick { batch: 1, dur: 10 }),
+            ev(110, 1, 7, EventKind::Complete { latency: 110 }),
+        ];
+        let anat = decompose(&events);
+        assert_eq!(anat.len(), 1);
+        let r = &anat[0];
+        assert_eq!(r.comps.sum(), 110);
+        assert_eq!(r.comps.0[comp::QUEUE_WAIT], 10);
+        assert_eq!(r.comps.0[comp::PREFILL_EXEC], 40); // 30 + 10
+        assert_eq!(r.comps.0[comp::DECODE_EXEC], 30); // 3 ticks
+        assert_eq!(r.comps.0[comp::DECODE_STALL], 5); // 50..55
+        assert_eq!(r.comps.0[comp::PREEMPT_STALL], 25); // 65..90
+    }
+
+    #[test]
+    fn chunked_prefill_with_migration_decomposes_exactly() {
+        // Chunks [5, 15) and [30, 40) with a chunk-stall between,
+        // migration [40, 60), final chunk [60, 70), tick [70, 80).
+        let events = vec![
+            ev(0, 0, 3, EventKind::Arrival { model: 1 }),
+            ev(5, 0, 3, EventKind::KvAdmit { tokens: 4 }),
+            ev(5, 0, 3, EventKind::Prefill {
+                model: 1,
+                batch: 1,
+                rows: 2,
+                chunk: true,
+                tokens: 0,
+                dur: 10,
+            }),
+            ev(20, 0, 3, EventKind::ChunkWait),
+            ev(30, 0, 3, EventKind::Prefill {
+                model: 1,
+                batch: 1,
+                rows: 2,
+                chunk: true,
+                tokens: 0,
+                dur: 10,
+            }),
+            ev(40, 0, 3, EventKind::MigrateOut { dst: 1, words: 128, dur: 12 }),
+            ev(52, 1, 3, EventKind::MigrateIn { src: 0, words: 128, dur: 8 }),
+            ev(60, 1, 3, EventKind::Prefill {
+                model: 1,
+                batch: 1,
+                rows: 1,
+                chunk: false,
+                tokens: 1,
+                dur: 10,
+            }),
+            ev(70, 1, NO_SEQ, EventKind::DecodeTick { batch: 1, dur: 10 }),
+            ev(80, 1, 3, EventKind::Complete { latency: 80 }),
+        ];
+        let anat = decompose(&events);
+        assert_eq!(anat.len(), 1);
+        let r = &anat[0];
+        assert_eq!(r.comps.sum(), 80);
+        assert_eq!(r.device, 1);
+        assert_eq!(r.comps.0[comp::QUEUE_WAIT], 5);
+        assert_eq!(r.comps.0[comp::PREFILL_EXEC], 30);
+        assert_eq!(r.comps.0[comp::CHUNK_STALL], 15); // 15..30
+        assert_eq!(r.comps.0[comp::MIGRATION], 20); // 40..60
+        assert_eq!(r.comps.0[comp::DECODE_EXEC], 10);
+        assert_eq!(r.comps.0[comp::DECODE_STALL], 0);
+    }
+
+    #[test]
+    fn segments_partition_the_latency_range_contiguously() {
+        let events = vec![
+            ev(0, 0, 1, EventKind::Arrival { model: 0 }),
+            ev(10, 0, NO_SEQ, EventKind::Serve { model: 0, batch: 1, dur: 20 }),
+            ev(30, 0, 1, EventKind::Complete { latency: 30 }),
+        ];
+        let anat = decompose(&events);
+        let r = &anat[0];
+        assert_eq!(r.segments.first().unwrap().start, r.arrival);
+        assert_eq!(r.segments.last().unwrap().end, r.completion);
+        for pair in r.segments.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start, "segments must be contiguous");
+        }
+    }
+}

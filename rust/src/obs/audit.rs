@@ -1,0 +1,434 @@
+//! Fleet-level blame report built on [`super::anatomy`]: which latency
+//! component owns the fleet's cycles, per model class and per device,
+//! per metrics window — and which windows missed SLA.
+//!
+//! Everything is integer arithmetic over the deterministic anatomy
+//! output, and the JSON/CSV renderers are hand-built with fixed field
+//! order, so report bytes are a pure function of the event stream:
+//! identical for a fixed seed across `--threads N`
+//! (`rust/tests/anatomy_props.rs` pins this).
+
+use super::anatomy::{comp, RequestAnatomy, COMPONENT_NAMES, N_COMPONENTS};
+use super::hist::LogHistogram;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Audit parameters. SLA budgets are per model class, in ref cycles
+/// (`None` = class has no SLA).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditConfig {
+    /// Window size in ref cycles (completions bucket by completion
+    /// cycle / window).
+    pub window_cycles: u64,
+    /// Per-class e2e budget in ref cycles; a completion whose latency
+    /// exceeds its class budget is an SLA miss.
+    pub sla_cycles_by_class: Vec<Option<u64>>,
+    /// How many worst-latency requests to list.
+    pub worst_k: usize,
+}
+
+impl AuditConfig {
+    pub fn new(window_cycles: u64, sla_cycles_by_class: Vec<Option<u64>>) -> Self {
+        Self { window_cycles: window_cycles.max(1), sla_cycles_by_class, worst_k: 10 }
+    }
+}
+
+/// Per-component histograms for one grouping key (class or device).
+#[derive(Debug, Clone, Default)]
+pub struct ComponentHists {
+    pub completions: u64,
+    pub hists: [LogHistogram; N_COMPONENTS],
+}
+
+impl ComponentHists {
+    fn record(&mut self, comps: &[u64; N_COMPONENTS]) {
+        self.completions += 1;
+        for (h, &v) in self.hists.iter_mut().zip(comps) {
+            h.record(v);
+        }
+    }
+}
+
+/// One audit window: completions bucketed by completion cycle.
+#[derive(Debug, Clone, Default)]
+pub struct WindowBlame {
+    pub completions: u64,
+    pub sla_misses: u64,
+    pub latency_sum: u64,
+    /// Cycle totals per component across this window's completions.
+    pub comp_totals: [u64; N_COMPONENTS],
+}
+
+impl WindowBlame {
+    /// Dominant component (ties broken toward the lower index, i.e.
+    /// the earlier lifecycle stage).
+    pub fn top_component(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.comp_totals.iter().enumerate() {
+            if v > self.comp_totals[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// One worst-offender row.
+#[derive(Debug, Clone)]
+pub struct WorstRequest {
+    pub id: u64,
+    pub model: usize,
+    pub device: usize,
+    pub completion: u64,
+    pub latency: u64,
+    pub sla_miss: bool,
+    pub top_component: usize,
+}
+
+/// The full fleet audit: critical-path blame + SLA-miss accounting.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    pub window_cycles: u64,
+    pub completions: u64,
+    pub sla_misses: u64,
+    pub latency_sum: u64,
+    /// Fleet-wide cycle totals per component.
+    pub comp_totals: [u64; N_COMPONENTS],
+    pub per_class: BTreeMap<usize, ComponentHists>,
+    pub per_device: BTreeMap<usize, ComponentHists>,
+    pub windows: BTreeMap<u64, WindowBlame>,
+    pub worst: Vec<WorstRequest>,
+    device_names: Vec<String>,
+}
+
+impl AuditReport {
+    /// Aggregate the per-request anatomies into the fleet report.
+    pub fn build(
+        anatomies: &[RequestAnatomy],
+        device_names: &[String],
+        cfg: &AuditConfig,
+    ) -> Self {
+        let window = cfg.window_cycles.max(1);
+        let mut report = Self {
+            window_cycles: window,
+            completions: 0,
+            sla_misses: 0,
+            latency_sum: 0,
+            comp_totals: [0; N_COMPONENTS],
+            per_class: BTreeMap::new(),
+            per_device: BTreeMap::new(),
+            windows: BTreeMap::new(),
+            worst: Vec::new(),
+            device_names: device_names.to_vec(),
+        };
+        for r in anatomies {
+            let miss = cfg
+                .sla_cycles_by_class
+                .get(r.model)
+                .copied()
+                .flatten()
+                .is_some_and(|budget| r.latency > budget);
+            report.completions += 1;
+            report.latency_sum += r.latency;
+            if miss {
+                report.sla_misses += 1;
+            }
+            for (t, &v) in report.comp_totals.iter_mut().zip(&r.comps.0) {
+                *t += v;
+            }
+            report.per_class.entry(r.model).or_default().record(&r.comps.0);
+            report.per_device.entry(r.device).or_default().record(&r.comps.0);
+            let w = report.windows.entry(r.completion / window).or_default();
+            w.completions += 1;
+            w.latency_sum += r.latency;
+            if miss {
+                w.sla_misses += 1;
+            }
+            for (t, &v) in w.comp_totals.iter_mut().zip(&r.comps.0) {
+                *t += v;
+            }
+        }
+        // Worst offenders: by latency descending, id ascending on ties
+        // — a total, deterministic order.
+        let mut order: Vec<usize> = (0..anatomies.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(anatomies[i].latency), anatomies[i].id));
+        for &i in order.iter().take(cfg.worst_k) {
+            let r = &anatomies[i];
+            let miss = cfg
+                .sla_cycles_by_class
+                .get(r.model)
+                .copied()
+                .flatten()
+                .is_some_and(|budget| r.latency > budget);
+            let mut top = 0;
+            for (c, &v) in r.comps.0.iter().enumerate() {
+                if v > r.comps.0[top] {
+                    top = c;
+                }
+            }
+            report.worst.push(WorstRequest {
+                id: r.id,
+                model: r.model,
+                device: r.device,
+                completion: r.completion,
+                latency: r.latency,
+                sla_miss: miss,
+                top_component: top,
+            });
+        }
+        report
+    }
+
+    /// Share of the fleet latency sum owned by component `c`, in
+    /// permille (0 when nothing completed).
+    pub fn share_permille(&self, c: usize) -> u64 {
+        if self.latency_sum == 0 {
+            0
+        } else {
+            // u64 cycle sums can exceed u64::MAX / 1000 on long runs;
+            // widen for the scaled division.
+            ((self.comp_totals[c] as u128 * 1000) / self.latency_sum as u128) as u64
+        }
+    }
+
+    fn push_hist_group(out: &mut String, g: &ComponentHists) {
+        out.push_str("\"completions\":");
+        let _ = write!(out, "{}", g.completions);
+        out.push_str(",\"components\":[");
+        for (c, h) in g.hists.iter().enumerate() {
+            if c > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"p50\":{},\"p99\":{},\"max\":{}}}",
+                COMPONENT_NAMES[c],
+                h.p50(),
+                h.p99(),
+                h.max()
+            );
+        }
+        out.push(']');
+    }
+
+    /// Deterministic hand-built JSON (fixed field order, integers
+    /// only).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\"schema\":\"cgra-audit-v1\"");
+        let _ = write!(
+            out,
+            ",\"window_cycles\":{},\"completions\":{},\"sla_misses\":{},\"latency_sum\":{}",
+            self.window_cycles, self.completions, self.sla_misses, self.latency_sum
+        );
+        out.push_str(",\"components\":[");
+        for c in 0..N_COMPONENTS {
+            if c > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"total_cycles\":{},\"share_permille\":{}}}",
+                COMPONENT_NAMES[c],
+                self.comp_totals[c],
+                self.share_permille(c)
+            );
+        }
+        out.push_str("],\"per_class\":[");
+        for (i, (class, g)) in self.per_class.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"class\":{class},");
+            Self::push_hist_group(&mut out, g);
+            out.push('}');
+        }
+        out.push_str("],\"per_device\":[");
+        for (i, (dev, g)) in self.per_device.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"device\":{dev},\"name\":\"");
+            if let Some(name) = self.device_names.get(*dev) {
+                // Device names are `devN RxC@MHZ [class]` strings built
+                // by enable_obs — no JSON-special characters — but
+                // escape defensively anyway.
+                for ch in name.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        c if (c as u32) >= 0x20 => out.push(c),
+                        _ => {}
+                    }
+                }
+            }
+            out.push_str("\",");
+            Self::push_hist_group(&mut out, g);
+            out.push('}');
+        }
+        out.push_str("],\"windows\":[");
+        for (i, (w, b)) in self.windows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"window\":{w},\"start_cycle\":{},\"completions\":{},\"sla_misses\":{},\
+                 \"flagged\":{},\"top_component\":\"{}\",\"latency_sum\":{},\"components\":[",
+                w * self.window_cycles,
+                b.completions,
+                b.sla_misses,
+                b.sla_misses > 0,
+                COMPONENT_NAMES[b.top_component()],
+                b.latency_sum
+            );
+            for (c, &v) in b.comp_totals.iter().enumerate() {
+                if c > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{v}");
+            }
+            out.push_str("]}");
+        }
+        out.push_str("],\"worst\":[");
+        for (i, r) in self.worst.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"seq\":{},\"model\":{},\"device\":{},\"completion\":{},\"latency\":{},\
+                 \"sla_miss\":{},\"top_component\":\"{}\"}}",
+                r.id,
+                r.model,
+                r.device,
+                r.completion,
+                r.latency,
+                r.sla_miss,
+                COMPONENT_NAMES[r.top_component]
+            );
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Per-window blame table as CSV (one row per window that saw a
+    /// completion).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("window,start_cycle,completions,sla_misses,flagged,top_component");
+        for name in COMPONENT_NAMES {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        for (w, b) in &self.windows {
+            let _ = write!(
+                out,
+                "{w},{},{},{},{},{}",
+                w * self.window_cycles,
+                b.completions,
+                b.sla_misses,
+                u64::from(b.sla_misses > 0),
+                COMPONENT_NAMES[b.top_component()]
+            );
+            for &v in &b.comp_totals {
+                let _ = write!(out, ",{v}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::anatomy::{AnatomySegment, Components};
+
+    fn req(
+        id: u64,
+        model: usize,
+        device: usize,
+        completion: u64,
+        latency: u64,
+        comps: [u64; N_COMPONENTS],
+    ) -> RequestAnatomy {
+        RequestAnatomy {
+            id,
+            model,
+            arrival: completion - latency,
+            completion,
+            latency,
+            device,
+            segments: vec![AnatomySegment {
+                start: completion - latency,
+                end: completion,
+                component: comp::QUEUE_WAIT,
+            }],
+            comps: Components(comps),
+        }
+    }
+
+    #[test]
+    fn report_aggregates_shares_and_flags_sla_windows() {
+        let mut c1 = [0u64; N_COMPONENTS];
+        c1[comp::QUEUE_WAIT] = 30;
+        c1[comp::PREFILL_EXEC] = 70;
+        let mut c2 = [0u64; N_COMPONENTS];
+        c2[comp::MIGRATION] = 150;
+        c2[comp::DECODE_EXEC] = 50;
+        let anat = vec![req(1, 0, 0, 90, 100, c1), req(2, 1, 1, 250, 200, c2)];
+        let cfg = AuditConfig::new(100, vec![Some(120), Some(120)]);
+        let names = vec!["dev0".to_string(), "dev1".to_string()];
+        let r = AuditReport::build(&anat, &names, &cfg);
+        assert_eq!(r.completions, 2);
+        assert_eq!(r.sla_misses, 1); // request 2 blew its 120-cycle budget
+        assert_eq!(r.latency_sum, 300);
+        assert_eq!(r.share_permille(comp::MIGRATION), 500);
+        assert_eq!(r.windows.len(), 2);
+        assert_eq!(r.windows[&0].sla_misses, 0);
+        assert_eq!(r.windows[&2].sla_misses, 1);
+        assert_eq!(r.windows[&2].top_component(), comp::MIGRATION);
+        // Worst list: request 2 (latency 200) first.
+        assert_eq!(r.worst[0].id, 2);
+        assert!(r.worst[0].sla_miss);
+        assert_eq!(r.worst[0].top_component, comp::MIGRATION);
+    }
+
+    #[test]
+    fn json_and_csv_are_deterministic_and_well_formed() {
+        let mut c = [0u64; N_COMPONENTS];
+        c[comp::DECODE_EXEC] = 40;
+        c[comp::DECODE_STALL] = 10;
+        let anat = vec![req(5, 0, 0, 50, 50, c)];
+        let cfg = AuditConfig::new(64, vec![None]);
+        let names = vec!["dev0".to_string()];
+        let r = AuditReport::build(&anat, &names, &cfg);
+        let a = r.to_json();
+        let b = AuditReport::build(&anat, &names, &cfg).to_json();
+        assert_eq!(a, b);
+        assert!(a.starts_with("{\"schema\":\"cgra-audit-v1\""));
+        assert!(a.contains("\"top_component\":\"decode_exec\""));
+        // Balanced braces outside strings.
+        let mut depth = 0i64;
+        let mut in_str = false;
+        let mut esc = false;
+        for ch in a.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match ch {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("window,start_cycle,completions,sla_misses,flagged,top_component,queue_wait,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

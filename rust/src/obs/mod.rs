@@ -1,37 +1,52 @@
 //! Fleet observability: deterministic structured tracing, windowed
-//! time-series metrics, and mergeable log-bucket latency histograms.
+//! time-series metrics, mergeable log-bucket latency histograms, and
+//! per-request latency anatomy with fleet-level audit reports.
 //!
-//! Three layers, all purely observational:
+//! Five layers, all purely observational:
 //!
-//! - [`trace`] — every fleet event (arrival, batch-form, prefill
+//! - [`trace`] — every fleet event (arrival, batch-form hold, prefill
 //!   chunk, decode tick, preempt/resume, steal, KV admit/reject,
 //!   migration export/import, completion) as `(ref_cycle, device,
 //!   seq, kind)`, rendered to Chrome/Perfetto trace-event JSON with
 //!   one track per device and flow arrows following a sequence across
 //!   migrations.
 //! - [`series`] — the same event stream folded into fixed ref-cycle
-//!   windows: tokens/sec, queue depth, KV occupancy, busy fraction,
-//!   steal/preempt/migration rates per window, rendered as CSV.
+//!   windows: tokens/sec, queue depth, KV occupancy, busy and hold
+//!   fractions, steal/preempt/migration rates per window, rendered as
+//!   CSV.
 //! - [`hist`] — [`LogHistogram`], the O(buckets) mergeable replacement
 //!   for the Vec-backed latency percentile stores.
+//! - [`anatomy`] — per-request causal span decomposition: each
+//!   completed request's e2e latency split into queue-wait / hold /
+//!   prefill / chunk-stall / decode / preempt-stall / migration
+//!   components that sum bit-exactly to the recorded latency.
+//! - [`audit`] — the fleet-level blame report built on [`anatomy`]:
+//!   component shares, per-class and per-device component histograms,
+//!   SLA-miss windows, worst offenders; deterministic JSON/CSV.
 //!
 //! The non-negotiable invariant: observation never feeds back into
 //! simulation. [`Observer`] is append-only and nothing in the
 //! scheduling path reads it, so a run with tracing enabled produces
 //! bit-identical tokens and metrics to the same seed with tracing
-//! off, and the rendered trace bytes are a pure function of the seed
-//! (`rust/tests/obs_props.rs` pins all three properties).
+//! off, and the rendered trace/audit bytes are a pure function of the
+//! seed (`rust/tests/obs_props.rs` and `rust/tests/anatomy_props.rs`
+//! pin these properties).
 
+pub mod anatomy;
+pub mod audit;
 pub mod hist;
 pub mod series;
 pub mod trace;
 
+pub use anatomy::{decompose, Components, RequestAnatomy, COMPONENT_NAMES, N_COMPONENTS};
+pub use audit::{AuditConfig, AuditReport};
 pub use hist::LogHistogram;
 pub use series::MetricsSeries;
 pub use trace::{render_chrome_json, EventKind, ObsEvent, NO_SEQ};
 
 use crate::sim::Stats;
 use crate::trace::TraceLog;
+use std::io;
 
 /// Which observation layers to enable. Default: everything off — the
 /// fleet simulators embed a disabled `Observer` with near-zero
@@ -44,16 +59,29 @@ pub struct ObsConfig {
     pub window_cycles: Option<u64>,
     /// Record per-kernel stats rows (phase-tagged `TraceLog` CSV).
     pub kernels: bool,
+    /// Append per-request anatomy span tracks to the trace JSON
+    /// (implies event retention even without `trace`).
+    pub spans: bool,
+    /// Retain events for the audit report (implies event retention).
+    pub audit: bool,
 }
 
 impl ObsConfig {
-    /// Everything on (trace + series at `window` cycles + kernel CSV).
+    /// The classic three layers on (trace + series at `window` cycles
+    /// + kernel CSV). Anatomy spans and audit stay off — arm them
+    /// explicitly via the `spans` / `audit` fields.
     pub fn full(window: u64) -> Self {
-        Self { trace: true, window_cycles: Some(window), kernels: true }
+        Self {
+            trace: true,
+            window_cycles: Some(window),
+            kernels: true,
+            spans: false,
+            audit: false,
+        }
     }
 
     pub fn any_enabled(&self) -> bool {
-        self.trace || self.window_cycles.is_some() || self.kernels
+        self.trace || self.window_cycles.is_some() || self.kernels || self.spans || self.audit
     }
 }
 
@@ -101,23 +129,85 @@ impl ObsSink for Observer {
 /// Append-only sink for fleet events. Embedded (disabled) in
 /// `FleetSim` / `DecodeFleetSim`; enable with their `enable_obs`
 /// before `run()`.
-#[derive(Debug, Clone, Default)]
+#[derive(Default)]
 pub struct Observer {
     events: Option<Vec<ObsEvent>>,
     series: Option<MetricsSeries>,
     kernels: Option<TraceLog>,
     device_names: Vec<String>,
+    trace_on: bool,
+    spans_on: bool,
+    audit_on: bool,
+    /// Structured events recorded (retained or streamed).
+    n_events: usize,
+    /// Spill-to-writer trace sink: header written on arm, one chunk
+    /// per event, spans + footer on [`Observer::finish`].
+    stream: Option<Box<dyn io::Write + Send>>,
+    /// True once [`Observer::stream_trace_to`] armed (outlives the
+    /// writer handle, which `finish` consumes).
+    streaming: bool,
+    /// First streaming I/O error, surfaced via
+    /// [`Observer::stream_error`].
+    stream_err: Option<String>,
+    /// Reusable per-event render buffer for the streaming path.
+    scratch: String,
+}
+
+impl Clone for Observer {
+    fn clone(&self) -> Self {
+        Self {
+            events: self.events.clone(),
+            series: self.series.clone(),
+            kernels: self.kernels.clone(),
+            device_names: self.device_names.clone(),
+            trace_on: self.trace_on,
+            spans_on: self.spans_on,
+            audit_on: self.audit_on,
+            n_events: self.n_events,
+            // Writer handles cannot be duplicated; a clone observes
+            // the same retained state but does not stream.
+            stream: None,
+            streaming: self.streaming,
+            stream_err: self.stream_err.clone(),
+            scratch: String::new(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Observer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Observer")
+            .field("events", &self.events.as_ref().map(Vec::len))
+            .field("series", &self.series.is_some())
+            .field("kernels", &self.kernels.is_some())
+            .field("trace_on", &self.trace_on)
+            .field("spans_on", &self.spans_on)
+            .field("audit_on", &self.audit_on)
+            .field("n_events", &self.n_events)
+            .field("streaming", &self.streaming)
+            .field("stream_err", &self.stream_err)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Observer {
     /// Build an observer for `device_names.len()` devices.
     pub fn new(cfg: &ObsConfig, device_names: Vec<String>) -> Self {
         let n = device_names.len();
+        let retain = cfg.trace || cfg.spans || cfg.audit;
         Self {
-            events: if cfg.trace { Some(Vec::new()) } else { None },
+            events: if retain { Some(Vec::new()) } else { None },
             series: cfg.window_cycles.map(|w| MetricsSeries::new(w, n)),
             kernels: if cfg.kernels { Some(TraceLog::new()) } else { None },
             device_names,
+            trace_on: cfg.trace,
+            spans_on: cfg.spans,
+            audit_on: cfg.audit,
+            n_events: 0,
+            stream: None,
+            streaming: false,
+            stream_err: None,
+            scratch: String::new(),
         }
     }
 
@@ -126,10 +216,49 @@ impl Observer {
         Self::default()
     }
 
+    /// Switch the trace layer to spill-to-writer mode: the JSON header
+    /// is written immediately, each event streams out as it is
+    /// recorded, and [`Observer::finish`] appends the anatomy spans
+    /// (if armed) plus the footer and flushes. Output bytes are
+    /// identical to the in-memory [`Observer::trace_json`] render by
+    /// construction (both compose the same header / per-event / footer
+    /// fragments). Events are no longer retained unless the spans or
+    /// audit layers still need them.
+    pub fn stream_trace_to(&mut self, mut writer: Box<dyn io::Write + Send>) {
+        let header = trace::render_trace_header(&self.device_names);
+        if let Err(e) = writer.write_all(header.as_bytes()) {
+            self.stream_err = Some(e.to_string());
+            self.streaming = true;
+            return;
+        }
+        self.stream = Some(writer);
+        self.streaming = true;
+        self.trace_on = true;
+        if !(self.spans_on || self.audit_on) {
+            self.events = None;
+        } else if self.events.is_none() {
+            self.events = Some(Vec::new());
+        }
+    }
+
+    /// True once streaming was armed (whether or not the writer is
+    /// still live); `trace_json` returns None in this mode.
+    pub fn is_streaming(&self) -> bool {
+        self.streaming
+    }
+
+    /// First I/O error hit by the streaming writer, if any.
+    pub fn stream_error(&self) -> Option<&str> {
+        self.stream_err.as_deref()
+    }
+
     /// Is any layer recording?
     #[inline]
     pub fn enabled(&self) -> bool {
-        self.events.is_some() || self.series.is_some() || self.kernels.is_some()
+        self.events.is_some()
+            || self.series.is_some()
+            || self.kernels.is_some()
+            || self.stream.is_some()
     }
 
     /// Is the per-kernel CSV layer recording? (Callers gate label
@@ -142,11 +271,33 @@ impl Observer {
     /// Record one structured event.
     #[inline]
     pub fn record(&mut self, cycle: u64, device: usize, seq: u64, kind: EventKind) {
+        if !self.enabled() {
+            return;
+        }
         if let Some(series) = self.series.as_mut() {
             series.feed(cycle, device, &kind);
         }
+        if self.stream.is_some() {
+            let ev = ObsEvent { cycle, device, seq, kind: kind.clone() };
+            self.scratch.clear();
+            trace::render_trace_event(&ev, &mut self.scratch);
+            let res = {
+                let w = self.stream.as_mut().expect("checked");
+                w.write_all(self.scratch.as_bytes())
+            };
+            if let Err(e) = res {
+                self.stream_err = Some(e.to_string());
+                self.stream = None;
+            }
+            self.n_events += 1;
+            if let Some(events) = self.events.as_mut() {
+                events.push(ObsEvent { cycle, device, seq, kind });
+            }
+            return;
+        }
         if let Some(events) = self.events.as_mut() {
             events.push(ObsEvent { cycle, device, seq, kind });
+            self.n_events += 1;
         }
     }
 
@@ -159,26 +310,93 @@ impl Observer {
         }
     }
 
-    /// Close the run: extend the series timeline to the makespan.
+    /// Close the run: extend the series timeline to the makespan and,
+    /// in streaming mode, append the span tracks + footer and flush.
     pub fn finish(&mut self, makespan: u64) {
         if let Some(series) = self.series.as_mut() {
             series.finish(makespan);
         }
+        if let Some(mut w) = self.stream.take() {
+            let mut tail = String::new();
+            if self.spans_on {
+                let anatomies = anatomy::decompose(self.events());
+                trace::render_anatomy_spans(&anatomies, &mut tail);
+            }
+            tail.push_str(trace::TRACE_FOOTER);
+            let res = w.write_all(tail.as_bytes()).and_then(|_| w.flush());
+            if let Err(e) = res {
+                if self.stream_err.is_none() {
+                    self.stream_err = Some(e.to_string());
+                }
+            }
+        }
     }
 
-    /// Number of structured events recorded so far.
+    /// Number of structured events recorded so far (retained or
+    /// streamed).
     pub fn event_count(&self) -> usize {
-        self.events.as_ref().map_or(0, Vec::len)
+        self.n_events
     }
 
-    /// Recorded events (empty slice when tracing is off).
+    /// Recorded events (empty slice when no layer retains them).
     pub fn events(&self) -> &[ObsEvent] {
         self.events.as_deref().unwrap_or(&[])
     }
 
-    /// Render the Chrome/Perfetto trace JSON (None when tracing off).
+    /// Render the Chrome/Perfetto trace JSON: the device-track events
+    /// (when `trace` is on) followed by the per-request anatomy span
+    /// tracks (when `spans` is on). None when both layers are off or
+    /// the trace was streamed out instead.
     pub fn trace_json(&self) -> Option<String> {
-        self.events.as_ref().map(|ev| render_chrome_json(ev, &self.device_names))
+        if self.streaming || !(self.trace_on || self.spans_on) {
+            return None;
+        }
+        let events = self.events.as_ref()?;
+        let mut out = trace::render_trace_header(&self.device_names);
+        out.reserve(events.len() * 96);
+        if self.trace_on {
+            for e in events {
+                trace::render_trace_event(e, &mut out);
+            }
+        }
+        if self.spans_on {
+            let anatomies = anatomy::decompose(events);
+            trace::render_anatomy_spans(&anatomies, &mut out);
+        }
+        out.push_str(trace::TRACE_FOOTER);
+        Some(out)
+    }
+
+    /// Per-request causal decomposition of the retained event stream
+    /// (None unless the spans or audit layer retained events).
+    pub fn anatomy(&self) -> Option<Vec<RequestAnatomy>> {
+        if !(self.spans_on || self.audit_on) {
+            return None;
+        }
+        self.events.as_ref().map(|ev| anatomy::decompose(ev))
+    }
+
+    /// Build the fleet audit report (None unless the audit layer is
+    /// armed).
+    pub fn audit_report(&self, cfg: &AuditConfig) -> Option<AuditReport> {
+        if !self.audit_on {
+            return None;
+        }
+        let events = self.events.as_ref()?;
+        let anatomies = anatomy::decompose(events);
+        Some(AuditReport::build(&anatomies, &self.device_names, cfg))
+    }
+
+    /// Render the audit report as deterministic JSON (None unless the
+    /// audit layer is armed).
+    pub fn audit_json(&self, cfg: &AuditConfig) -> Option<String> {
+        self.audit_report(cfg).map(|r| r.to_json())
+    }
+
+    /// Render the audit report's per-window blame table as CSV (None
+    /// unless the audit layer is armed).
+    pub fn audit_csv(&self, cfg: &AuditConfig) -> Option<String> {
+        self.audit_report(cfg).map(|r| r.to_csv())
     }
 
     /// Render the windowed-metrics CSV (None when the series is off).
@@ -195,6 +413,7 @@ impl Observer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn disabled_observer_records_nothing() {
@@ -206,6 +425,7 @@ mod tests {
         assert!(obs.trace_json().is_none());
         assert!(obs.series_csv().is_none());
         assert!(obs.kernel_csv().is_none());
+        assert!(obs.anatomy().is_none());
     }
 
     #[test]
@@ -224,5 +444,91 @@ mod tests {
         assert_eq!(csv.lines().count(), 1 + 3); // header + windows 0..=2
         let kcsv = obs.kernel_csv().unwrap();
         assert!(kcsv.lines().nth(1).unwrap().starts_with("tick,decode,30,"));
+    }
+
+    #[test]
+    fn full_config_leaves_spans_and_audit_off() {
+        let cfg = ObsConfig::full(64);
+        assert!(!cfg.spans && !cfg.audit);
+        let obs = Observer::new(&cfg, vec!["d0".into()]);
+        assert!(obs.anatomy().is_none());
+        assert!(obs.audit_json(&AuditConfig::new(64, vec![None])).is_none());
+    }
+
+    /// Shared Vec writer so the test can inspect streamed bytes after
+    /// the boxed handle is consumed.
+    #[derive(Clone)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl std::io::Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn streamed_trace_is_byte_identical_to_in_memory_render() {
+        let events = vec![
+            (0u64, 0usize, 1u64, EventKind::Arrival { model: 0 }),
+            (4, 0, NO_SEQ, EventKind::Serve { model: 0, batch: 1, dur: 6 }),
+            (10, 0, 1, EventKind::Complete { latency: 10 }),
+            (12, 0, NO_SEQ, EventKind::QueueDepth { depth: 0 }),
+        ];
+        let cfg = ObsConfig { trace: true, ..Default::default() };
+
+        let mut mem = Observer::new(&cfg, vec!["d0".into()]);
+        for (c, d, s, k) in &events {
+            mem.record(*c, *d, *s, k.clone());
+        }
+        mem.finish(12);
+        let expect = mem.trace_json().unwrap();
+
+        let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+        let mut streamed = Observer::new(&cfg, vec!["d0".into()]);
+        streamed.stream_trace_to(Box::new(buf.clone()));
+        // Trace-only streaming drops retention entirely.
+        assert!(streamed.events().is_empty());
+        for (c, d, s, k) in &events {
+            streamed.record(*c, *d, *s, k.clone());
+        }
+        streamed.finish(12);
+        assert!(streamed.stream_error().is_none());
+        assert!(streamed.trace_json().is_none(), "streamed trace must not re-render");
+        assert_eq!(streamed.event_count(), events.len());
+        let got = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn streamed_trace_with_spans_matches_in_memory_span_render() {
+        let events = vec![
+            (0u64, 0usize, 1u64, EventKind::Arrival { model: 0 }),
+            (4, 0, NO_SEQ, EventKind::Serve { model: 0, batch: 1, dur: 6 }),
+            (10, 0, 1, EventKind::Complete { latency: 10 }),
+        ];
+        let cfg = ObsConfig { trace: true, spans: true, ..Default::default() };
+
+        let mut mem = Observer::new(&cfg, vec!["d0".into()]);
+        for (c, d, s, k) in &events {
+            mem.record(*c, *d, *s, k.clone());
+        }
+        mem.finish(10);
+        let expect = mem.trace_json().unwrap();
+        assert!(expect.contains("\"cat\":\"anatomy\""));
+
+        let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+        let mut streamed = Observer::new(&cfg, vec!["d0".into()]);
+        streamed.stream_trace_to(Box::new(buf.clone()));
+        for (c, d, s, k) in &events {
+            streamed.record(*c, *d, *s, k.clone());
+        }
+        streamed.finish(10);
+        assert!(streamed.stream_error().is_none());
+        let got = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(got, expect);
     }
 }

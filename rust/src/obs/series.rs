@@ -24,6 +24,9 @@ struct WindowRow {
     migrations: u64,
     drops: u64,
     rejects: u64,
+    /// Batch-formation hold cycles (devices parked on a partial batch),
+    /// split exactly across window boundaries like busy cycles.
+    hold_cycles: u64,
     busy_cycles: u64,
     /// Fleet-wide queued requests at the last sample in this window.
     queue_depth: Option<u64>,
@@ -81,6 +84,20 @@ impl MetricsSeries {
         }
     }
 
+    /// Split a hold span `[start, start + dur)` across window
+    /// boundaries, mirroring [`Self::add_busy`].
+    fn add_hold(&mut self, start: u64, dur: u64) {
+        let end = start.saturating_add(dur);
+        let mut t = start;
+        while t < end {
+            let w = t / self.window_cycles;
+            let window_end = (w + 1).saturating_mul(self.window_cycles);
+            let take = end.min(window_end) - t;
+            self.rows.entry(w).or_default().hold_cycles += take;
+            t += take;
+        }
+    }
+
     /// Fold one event into its window.
     pub fn feed(&mut self, cycle: u64, device: usize, kind: &EventKind) {
         self.makespan = self.makespan.max(cycle);
@@ -132,7 +149,8 @@ impl MetricsSeries {
                 let mean = (self.cur_kv.iter().sum::<u64>() + n / 2) / n;
                 self.row(cycle).kv_permille = Some(mean);
             }
-            EventKind::Resume | EventKind::KvAdmit { .. } => {}
+            EventKind::Hold { dur } => self.add_hold(cycle, *dur),
+            EventKind::Resume | EventKind::KvAdmit { .. } | EventKind::ChunkWait => {}
         }
     }
 
@@ -147,7 +165,8 @@ impl MetricsSeries {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "window,start_cycle,arrivals,completions,tokens,steals,preemptions,\
-             migrations,drops,rejects,busy_permille,queue_depth,kv_occupancy_permille\n",
+             migrations,drops,rejects,hold_permille,busy_permille,queue_depth,\
+             kv_occupancy_permille\n",
         );
         let last = self.makespan / self.window_cycles;
         let span = self.window_cycles * self.n_devices as u64;
@@ -158,10 +177,11 @@ impl MetricsSeries {
             let row = self.rows.get(&w).unwrap_or(&empty);
             queue = row.queue_depth.unwrap_or(queue);
             kv = row.kv_permille.unwrap_or(kv);
+            let hold_permille = row.hold_cycles.saturating_mul(1000) / span;
             let busy_permille = row.busy_cycles.saturating_mul(1000) / span;
             let _ = writeln!(
                 out,
-                "{w},{},{},{},{},{},{},{},{},{},{busy_permille},{queue},{kv}",
+                "{w},{},{},{},{},{},{},{},{},{},{hold_permille},{busy_permille},{queue},{kv}",
                 w * self.window_cycles,
                 row.arrivals,
                 row.completions,
@@ -221,6 +241,23 @@ mod tests {
         let row = csv.lines().nth(1).expect("one window");
         // (700 + 301) / 2 = 500.5 → 501; integer truncation said 500.
         assert!(row.ends_with(",501"), "row: {row}");
+    }
+
+    #[test]
+    fn hold_spans_split_and_render_their_own_column() {
+        let mut s = MetricsSeries::new(100, 1);
+        // 150-cycle hold starting at 50: 50 in w0, 100 in w1. Retroactive
+        // emission (event timestamp = hold start) is exactly how the
+        // encoder records it at serve time.
+        s.feed(50, 0, &EventKind::Hold { dur: 150 });
+        s.finish(200);
+        let csv = s.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 3);
+        // hold_permille over 100 window cycles × 1 device.
+        assert!(rows[0].ends_with(",500,0,0,0"), "w0: {}", rows[0]);
+        assert!(rows[1].ends_with(",1000,0,0,0"), "w1: {}", rows[1]);
+        assert!(rows[2].ends_with(",0,0,0,0"), "w2: {}", rows[2]);
     }
 
     #[cfg(debug_assertions)]

@@ -12,7 +12,22 @@
 //!
 //! The JSON is built by hand (integer-only, fixed field order, no
 //! serde, no maps) so a fixed seed renders to byte-identical output —
-//! the property `obs_props.rs` and the CI smoke run pin.
+//! the property `obs_props.rs` and the CI smoke run pin. The render is
+//! split into a header / per-event / footer triple shared by the
+//! in-memory [`render_chrome_json`] and the [`Observer`]'s streaming
+//! spill-to-writer mode, so the two outputs are byte-identical by
+//! construction.
+//!
+//! [`Observer`]: super::Observer
+//!
+//! With `--spans`, [`render_anatomy_spans`] appends one nested async
+//! track per completed request (Chrome `ph:"b"`/`ph:"e"`, grouped by
+//! request id under `cat:"anatomy"`): the request's e2e latency as the
+//! parent span, its causal components ([`super::anatomy`]) as child
+//! spans, and a flow arrow linking the request row to the device track
+//! that completed it.
+
+use super::anatomy::{RequestAnatomy, COMPONENT_NAMES};
 
 /// Sentinel sequence id for device-scoped events (queue depth, steal,
 /// batch-level spans) that do not belong to one sequence.
@@ -62,6 +77,16 @@ pub enum EventKind {
     QueueDepth { depth: usize },
     /// KV occupancy counter sample (permille of capacity).
     KvOccupancy { permille: u64 },
+    /// Batch-formation hold span: the device parked on a partial batch
+    /// waiting for it to fill (PR 2's hold-for-fill). Emitted
+    /// retroactively when the held batch finally serves — `cycle` is
+    /// the hold *start* and `dur` its length, ending exactly at the
+    /// serve's start cycle.
+    Hold { dur: u64 },
+    /// Chunked prefill blocked: the mid-prompt chunk could not commit
+    /// its next KV rows on this visit (pages must free first). One
+    /// instant per blocked attempt, carrying the stalled sequence id.
+    ChunkWait,
 }
 
 /// One structured fleet event on the reference-clock timeline.
@@ -105,12 +130,11 @@ fn push_common(out: &mut String, name: &str, cat: &str, ph: char, cycle: u64, de
     out.push_str(&device.to_string());
 }
 
-/// Render the event stream as Chrome trace-event JSON. `device_names`
-/// label the per-device tracks (index = `tid`). Timestamps are ref
-/// cycles rendered as the format's microsecond field: 1 "µs" in the
-/// viewer = 1 ref cycle.
-pub fn render_chrome_json(events: &[ObsEvent], device_names: &[String]) -> String {
-    let mut out = String::with_capacity(256 + events.len() * 96);
+/// Opening bytes of the trace JSON: the display header, the process
+/// meta record, and one thread-name meta per device track. Shared by
+/// [`render_chrome_json`] and the streaming writer.
+pub(crate) fn render_trace_header(device_names: &[String]) -> String {
+    let mut out = String::with_capacity(256 + device_names.len() * 64);
     out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
     out.push_str(
         "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\
@@ -123,162 +147,268 @@ pub fn render_chrome_json(events: &[ObsEvent], device_names: &[String]) -> Strin
         escape_json(name, &mut out);
         out.push_str("\"}}");
     }
-    for e in events {
-        out.push_str(",\n");
-        let seq = e.seq;
-        match &e.kind {
-            EventKind::Arrival { model } => {
-                push_common(&mut out, "arrival", "queue", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str(",\"model\":");
-                out.push_str(&model.to_string());
-                out.push_str("}}");
-            }
-            EventKind::Reject { reason } => {
-                push_common(&mut out, "reject", "queue", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str(",\"reason\":\"");
-                escape_json(reason, &mut out);
-                out.push_str("\"}}");
-            }
-            EventKind::Serve { model, batch, dur } => {
-                push_common(&mut out, "serve", "encoder", 'X', e.cycle, e.device);
-                out.push_str(",\"dur\":");
-                out.push_str(&dur.to_string());
-                out.push_str(",\"args\":{\"model\":");
-                out.push_str(&model.to_string());
-                out.push_str(",\"batch\":");
-                out.push_str(&batch.to_string());
-                out.push_str("}}");
-            }
-            EventKind::Complete { latency } => {
-                push_common(&mut out, "complete", "lifecycle", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str(",\"latency\":");
-                out.push_str(&latency.to_string());
-                out.push_str("}}");
-            }
-            EventKind::Drop => {
-                push_common(&mut out, "drop", "queue", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str("}}");
-            }
-            EventKind::Steal { victim, requests } => {
-                push_common(&mut out, "steal", "queue", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"victim\":");
-                out.push_str(&victim.to_string());
-                out.push_str(",\"requests\":");
-                out.push_str(&requests.to_string());
-                out.push_str("}}");
-            }
-            EventKind::Prefill { model, batch, rows, chunk, tokens, dur } => {
-                let name = if *chunk { "prefill_chunk" } else { "prefill" };
-                push_common(&mut out, name, "decode", 'X', e.cycle, e.device);
-                out.push_str(",\"dur\":");
-                out.push_str(&dur.to_string());
-                out.push_str(",\"args\":{\"model\":");
-                out.push_str(&model.to_string());
-                out.push_str(",\"batch\":");
-                out.push_str(&batch.to_string());
-                out.push_str(",\"rows\":");
-                out.push_str(&rows.to_string());
-                out.push_str(",\"tokens\":");
-                out.push_str(&tokens.to_string());
-                out.push_str("}}");
-            }
-            EventKind::DecodeTick { batch, dur } => {
-                push_common(&mut out, "decode_tick", "decode", 'X', e.cycle, e.device);
-                out.push_str(",\"dur\":");
-                out.push_str(&dur.to_string());
-                out.push_str(",\"args\":{\"batch\":");
-                out.push_str(&batch.to_string());
-                out.push_str("}}");
-            }
-            EventKind::Preempt => {
-                push_common(&mut out, "preempt", "kv", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str("}}");
-            }
-            EventKind::Resume => {
-                push_common(&mut out, "resume", "kv", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str("}}");
-            }
-            EventKind::KvAdmit { tokens } => {
-                push_common(&mut out, "kv_admit", "kv", 'i', e.cycle, e.device);
-                out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str(",\"tokens\":");
-                out.push_str(&tokens.to_string());
-                out.push_str("}}");
-            }
-            EventKind::MigrateOut { dst, words, dur } => {
-                push_common(&mut out, "migrate_out", "migrate", 'X', e.cycle, e.device);
-                out.push_str(",\"dur\":");
-                out.push_str(&dur.to_string());
-                out.push_str(",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str(",\"dst\":");
-                out.push_str(&dst.to_string());
-                out.push_str(",\"words\":");
-                out.push_str(&words.to_string());
-                out.push_str("}},\n");
-                // Flow arrow: opens at the source span, keyed by seq id.
-                push_common(&mut out, "migrate", "migrate", 's', e.cycle, e.device);
-                out.push_str(",\"id\":");
-                out.push_str(&seq.to_string());
-                out.push('}');
-            }
-            EventKind::MigrateIn { src, words, dur } => {
-                push_common(&mut out, "migrate_in", "migrate", 'X', e.cycle, e.device);
-                out.push_str(",\"dur\":");
-                out.push_str(&dur.to_string());
-                out.push_str(",\"args\":{\"seq\":");
-                out.push_str(&seq.to_string());
-                out.push_str(",\"src\":");
-                out.push_str(&src.to_string());
-                out.push_str(",\"words\":");
-                out.push_str(&words.to_string());
-                out.push_str("}},\n");
-                // Close the flow arrow on the destination span.
-                push_common(&mut out, "migrate", "migrate", 'f', e.cycle, e.device);
-                out.push_str(",\"bp\":\"e\",\"id\":");
-                out.push_str(&seq.to_string());
-                out.push('}');
-            }
-            EventKind::QueueDepth { depth } => {
-                out.push_str("{\"name\":\"queue_depth[");
-                out.push_str(&e.device.to_string());
-                out.push_str("]\",\"ph\":\"C\",\"ts\":");
-                out.push_str(&e.cycle.to_string());
-                out.push_str(",\"pid\":0,\"args\":{\"depth\":");
-                out.push_str(&depth.to_string());
-                out.push_str("}}");
-            }
-            EventKind::KvOccupancy { permille } => {
-                out.push_str("{\"name\":\"kv_permille[");
-                out.push_str(&e.device.to_string());
-                out.push_str("]\",\"ph\":\"C\",\"ts\":");
-                out.push_str(&e.cycle.to_string());
-                out.push_str(",\"pid\":0,\"args\":{\"permille\":");
-                out.push_str(&permille.to_string());
-                out.push_str("}}");
-            }
+    out
+}
+
+/// Closing bytes of the trace JSON.
+pub(crate) const TRACE_FOOTER: &str = "\n]}\n";
+
+/// Render one event — including its leading `,\n` record separator —
+/// onto `out`. Shared by [`render_chrome_json`] and the streaming
+/// writer so the two paths cannot drift by a byte.
+pub(crate) fn render_trace_event(e: &ObsEvent, out: &mut String) {
+    out.push_str(",\n");
+    let seq = e.seq;
+    match &e.kind {
+        EventKind::Arrival { model } => {
+            push_common(out, "arrival", "queue", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"model\":");
+            out.push_str(&model.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Reject { reason } => {
+            push_common(out, "reject", "queue", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"reason\":\"");
+            escape_json(reason, out);
+            out.push_str("\"}}");
+        }
+        EventKind::Serve { model, batch, dur } => {
+            push_common(out, "serve", "encoder", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{\"model\":");
+            out.push_str(&model.to_string());
+            out.push_str(",\"batch\":");
+            out.push_str(&batch.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Complete { latency } => {
+            push_common(out, "complete", "lifecycle", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"latency\":");
+            out.push_str(&latency.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Drop => {
+            push_common(out, "drop", "queue", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Steal { victim, requests } => {
+            push_common(out, "steal", "queue", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"victim\":");
+            out.push_str(&victim.to_string());
+            out.push_str(",\"requests\":");
+            out.push_str(&requests.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Prefill { model, batch, rows, chunk, tokens, dur } => {
+            let name = if *chunk { "prefill_chunk" } else { "prefill" };
+            push_common(out, name, "decode", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{\"model\":");
+            out.push_str(&model.to_string());
+            out.push_str(",\"batch\":");
+            out.push_str(&batch.to_string());
+            out.push_str(",\"rows\":");
+            out.push_str(&rows.to_string());
+            out.push_str(",\"tokens\":");
+            out.push_str(&tokens.to_string());
+            out.push_str("}}");
+        }
+        EventKind::DecodeTick { batch, dur } => {
+            push_common(out, "decode_tick", "decode", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{\"batch\":");
+            out.push_str(&batch.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Preempt => {
+            push_common(out, "preempt", "kv", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Resume => {
+            push_common(out, "resume", "kv", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str("}}");
+        }
+        EventKind::KvAdmit { tokens } => {
+            push_common(out, "kv_admit", "kv", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"tokens\":");
+            out.push_str(&tokens.to_string());
+            out.push_str("}}");
+        }
+        EventKind::MigrateOut { dst, words, dur } => {
+            push_common(out, "migrate_out", "migrate", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"dst\":");
+            out.push_str(&dst.to_string());
+            out.push_str(",\"words\":");
+            out.push_str(&words.to_string());
+            out.push_str("}},\n");
+            // Flow arrow: opens at the source span, keyed by seq id.
+            push_common(out, "migrate", "migrate", 's', e.cycle, e.device);
+            out.push_str(",\"id\":");
+            out.push_str(&seq.to_string());
+            out.push('}');
+        }
+        EventKind::MigrateIn { src, words, dur } => {
+            push_common(out, "migrate_in", "migrate", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"src\":");
+            out.push_str(&src.to_string());
+            out.push_str(",\"words\":");
+            out.push_str(&words.to_string());
+            out.push_str("}},\n");
+            // Close the flow arrow on the destination span.
+            push_common(out, "migrate", "migrate", 'f', e.cycle, e.device);
+            out.push_str(",\"bp\":\"e\",\"id\":");
+            out.push_str(&seq.to_string());
+            out.push('}');
+        }
+        EventKind::QueueDepth { depth } => {
+            out.push_str("{\"name\":\"queue_depth[");
+            out.push_str(&e.device.to_string());
+            out.push_str("]\",\"ph\":\"C\",\"ts\":");
+            out.push_str(&e.cycle.to_string());
+            out.push_str(",\"pid\":0,\"args\":{\"depth\":");
+            out.push_str(&depth.to_string());
+            out.push_str("}}");
+        }
+        EventKind::KvOccupancy { permille } => {
+            out.push_str("{\"name\":\"kv_permille[");
+            out.push_str(&e.device.to_string());
+            out.push_str("]\",\"ph\":\"C\",\"ts\":");
+            out.push_str(&e.cycle.to_string());
+            out.push_str(",\"pid\":0,\"args\":{\"permille\":");
+            out.push_str(&permille.to_string());
+            out.push_str("}}");
+        }
+        EventKind::Hold { dur } => {
+            push_common(out, "hold", "queue", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{}}");
+        }
+        EventKind::ChunkWait => {
+            push_common(out, "chunk_wait", "kv", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str("}}");
         }
     }
-    out.push_str("\n]}\n");
+}
+
+/// Render the event stream as Chrome trace-event JSON. `device_names`
+/// label the per-device tracks (index = `tid`). Timestamps are ref
+/// cycles rendered as the format's microsecond field: 1 "µs" in the
+/// viewer = 1 ref cycle.
+pub fn render_chrome_json(events: &[ObsEvent], device_names: &[String]) -> String {
+    let mut out = render_trace_header(device_names);
+    out.reserve(events.len() * 96);
+    for e in events {
+        render_trace_event(e, &mut out);
+    }
+    out.push_str(TRACE_FOOTER);
     out
+}
+
+/// Async-event common prefix: like [`push_common`] plus the async
+/// grouping id (Chrome nests `b`/`e` pairs sharing `(cat, id)`).
+fn push_async(out: &mut String, name: &str, ph: char, cycle: u64, device: usize, id: u64) {
+    push_common(out, name, "anatomy", ph, cycle, device);
+    out.push_str(",\"id\":");
+    out.push_str(&id.to_string());
+}
+
+/// Append the per-request anatomy span tracks (each record with its
+/// leading `,\n` separator, so the caller can splice this between the
+/// device-track events and [`TRACE_FOOTER`]). One nested async row per
+/// completed request: the e2e parent span, one child span per causal
+/// segment, and an `anatomy` flow arrow tying the request row to the
+/// device track that completed it.
+pub fn render_anatomy_spans(anatomies: &[RequestAnatomy], out: &mut String) {
+    for r in anatomies {
+        out.push_str(",\n");
+        push_async(out, "request", 'b', r.arrival, r.device, r.id);
+        out.push_str(",\"args\":{\"seq\":");
+        out.push_str(&r.id.to_string());
+        out.push_str(",\"model\":");
+        out.push_str(&r.model.to_string());
+        out.push_str(",\"latency\":");
+        out.push_str(&r.latency.to_string());
+        out.push_str("}}");
+        for seg in &r.segments {
+            let name = COMPONENT_NAMES[seg.component];
+            out.push_str(",\n");
+            push_async(out, name, 'b', seg.start, r.device, r.id);
+            out.push('}');
+            out.push_str(",\n");
+            push_async(out, name, 'e', seg.end, r.device, r.id);
+            out.push('}');
+        }
+        out.push_str(",\n");
+        push_async(out, "request", 'e', r.completion, r.device, r.id);
+        out.push('}');
+        // Flow arrow: request anatomy row -> completing device track.
+        out.push_str(",\n");
+        push_common(out, "anatomy", "anatomy", 's', r.arrival, r.device);
+        out.push_str(",\"id\":");
+        out.push_str(&r.id.to_string());
+        out.push('}');
+        out.push_str(",\n");
+        push_common(out, "anatomy", "anatomy", 'f', r.completion, r.device);
+        out.push_str(",\"bp\":\"e\",\"id\":");
+        out.push_str(&r.id.to_string());
+        out.push('}');
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn assert_balanced(json: &str) {
+        // Every rendered set must be valid JSON as a whole: cheap
+        // structural check — balanced braces/brackets outside strings.
+        let mut depth = 0i64;
+        let mut in_str = false;
+        let mut esc = false;
+        for c in json.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match c {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced JSON");
+        assert!(!in_str);
+    }
 
     #[test]
     fn renderer_is_deterministic_and_emits_flows() {
@@ -305,26 +435,7 @@ mod tests {
         assert!(a.contains("\"ph\":\"s\""), "missing flow start");
         assert!(a.contains("\"ph\":\"f\""), "missing flow finish");
         assert!(a.contains("\"thread_name\""));
-        // Every line set must be valid JSON as a whole: cheap structural
-        // check — balanced braces/brackets outside strings.
-        let mut depth = 0i64;
-        let mut in_str = false;
-        let mut esc = false;
-        for c in a.chars() {
-            if esc {
-                esc = false;
-                continue;
-            }
-            match c {
-                '\\' if in_str => esc = true,
-                '"' => in_str = !in_str,
-                '{' | '[' if !in_str => depth += 1,
-                '}' | ']' if !in_str => depth -= 1,
-                _ => {}
-            }
-        }
-        assert_eq!(depth, 0, "unbalanced JSON");
-        assert!(!in_str);
+        assert_balanced(&a);
     }
 
     #[test]
@@ -337,5 +448,66 @@ mod tests {
         }];
         let json = render_chrome_json(&events, &["d".to_string()]);
         assert!(json.contains("needs \\\"quotes\\\"\\n"));
+    }
+
+    #[test]
+    fn hold_and_chunk_wait_render_on_device_tracks() {
+        let events = vec![
+            ObsEvent { cycle: 10, device: 2, seq: NO_SEQ, kind: EventKind::Hold { dur: 40 } },
+            ObsEvent { cycle: 55, device: 1, seq: 9, kind: EventKind::ChunkWait },
+        ];
+        let names = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let json = render_chrome_json(&events, &names);
+        assert!(json.contains("\"name\":\"hold\",\"cat\":\"queue\",\"ph\":\"X\",\"ts\":10"));
+        assert!(json.contains("\"dur\":40"));
+        assert!(json.contains("\"name\":\"chunk_wait\",\"cat\":\"kv\",\"ph\":\"i\",\"ts\":55"));
+        assert_balanced(&json);
+    }
+
+    #[test]
+    fn split_render_matches_monolithic_render() {
+        let events = vec![
+            ObsEvent { cycle: 0, device: 0, seq: 1, kind: EventKind::Arrival { model: 0 } },
+            ObsEvent {
+                cycle: 4,
+                device: 0,
+                seq: NO_SEQ,
+                kind: EventKind::Serve { model: 0, batch: 1, dur: 6 },
+            },
+            ObsEvent { cycle: 10, device: 0, seq: 1, kind: EventKind::Complete { latency: 10 } },
+        ];
+        let names = vec!["dev0 4x4@100".to_string()];
+        let mut split = render_trace_header(&names);
+        for e in &events {
+            render_trace_event(e, &mut split);
+        }
+        split.push_str(TRACE_FOOTER);
+        assert_eq!(split, render_chrome_json(&events, &names));
+    }
+
+    #[test]
+    fn anatomy_spans_nest_and_balance() {
+        use super::super::anatomy::{AnatomySegment, Components, RequestAnatomy};
+        let r = RequestAnatomy {
+            id: 3,
+            model: 1,
+            arrival: 100,
+            completion: 160,
+            latency: 60,
+            device: 0,
+            segments: vec![
+                AnatomySegment { start: 100, end: 120, component: 0 },
+                AnatomySegment { start: 120, end: 160, component: 2 },
+            ],
+            comps: Components::default(),
+        };
+        let mut out = render_trace_header(&["d0".to_string()]);
+        render_anatomy_spans(&[r], &mut out);
+        out.push_str(TRACE_FOOTER);
+        assert!(out.contains("\"name\":\"request\",\"cat\":\"anatomy\",\"ph\":\"b\""));
+        assert!(out.contains("\"name\":\"queue_wait\",\"cat\":\"anatomy\",\"ph\":\"b\""));
+        assert!(out.contains("\"name\":\"prefill_exec\",\"cat\":\"anatomy\",\"ph\":\"e\""));
+        assert!(out.contains("\"name\":\"anatomy\",\"cat\":\"anatomy\",\"ph\":\"s\""));
+        assert_balanced(&out);
     }
 }

@@ -1,0 +1,355 @@
+//! Latency-anatomy conformance (ISSUE 9): the causal span decomposition
+//! is **exact by construction**. For every completed request the nine
+//! anatomy components must sum bit-exactly to the recorded e2e latency,
+//! and the segments must partition `[arrival, completion)` contiguously
+//! — across random rosters, schedules, chunking, migration, preemption
+//! pressure and batch-formation holds. The analysis layer is strictly
+//! one-way: arming spans + audit leaves metrics and completions
+//! bit-identical, the audit report is byte-deterministic per seed, and
+//! threaded runs render byte-identical trace/audit output to the
+//! single-threaded loop.
+
+use cgra_edge::cluster::{
+    ArrivalProcess, BatchPolicy, Discipline, FleetConfig, FleetRequest, FleetSim, GenRequest,
+    ModelClass, Placement, WorkloadGen,
+};
+use cgra_edge::config::DeviceClass;
+use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeSchedule};
+use cgra_edge::obs::anatomy::comp;
+use cgra_edge::obs::{AuditConfig, ObsConfig, RequestAnatomy};
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::prop::{prop_check, CaseResult, PropConfig};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::XformerConfig;
+
+fn gen_classes() -> Vec<ModelClass> {
+    vec![ModelClass {
+        name: "gen-tiny",
+        cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }]
+}
+
+fn gen_request(id: u64, prompt_rows: usize, max_new: usize, arrival: u64, seed: u64) -> GenRequest {
+    let mut rng = XorShiftRng::new(0x0A7A_7000 + seed);
+    let mut prompt = MatF32::zeros(prompt_rows, 16);
+    for v in &mut prompt.data {
+        *v = rng.normal() * 0.5;
+    }
+    GenRequest { id, model: 0, prompt, max_new_tokens: max_new, arrival_cycle: arrival }
+}
+
+/// Spans + audit armed on top of the classic trace/series layers.
+fn anatomy_cfg(window: u64) -> ObsConfig {
+    ObsConfig {
+        trace: true,
+        window_cycles: Some(window),
+        kernels: false,
+        spans: true,
+        audit: true,
+    }
+}
+
+/// The tentpole contract: components sum bit-exactly to the latency and
+/// the segments tile `[arrival, completion)` with no gap or overlap.
+fn check_exactness(anatomies: &[RequestAnatomy]) -> Result<(), String> {
+    for r in anatomies {
+        if r.comps.sum() != r.latency {
+            return Err(format!(
+                "request {}: components sum {} != latency {} ({:?})",
+                r.id,
+                r.comps.sum(),
+                r.latency,
+                r.comps,
+            ));
+        }
+        if r.latency == 0 {
+            if !r.segments.is_empty() {
+                return Err(format!("request {}: zero latency but {} segments", r.id, r.segments.len()));
+            }
+            continue;
+        }
+        let mut cursor = r.arrival;
+        for seg in &r.segments {
+            if seg.start != cursor || seg.end <= seg.start {
+                return Err(format!(
+                    "request {}: segment [{}, {}) breaks the partition at cursor {}",
+                    r.id, seg.start, seg.end, cursor,
+                ));
+            }
+            cursor = seg.end;
+        }
+        if cursor != r.completion {
+            return Err(format!(
+                "request {}: segments end at {} but completion is {}",
+                r.id, cursor, r.completion,
+            ));
+        }
+        let seg_sum: u64 = r.segments.iter().map(|s| s.end - s.start).sum();
+        if seg_sum != r.latency {
+            return Err(format!("request {}: segment spans sum {} != latency {}", r.id, seg_sum, r.latency));
+        }
+    }
+    Ok(())
+}
+
+/// Decode fleets: random rosters, PrefillFirst vs chunked prefill,
+/// migration on/off and occasional tiny KV pools (preemption pressure)
+/// — every completion decomposes exactly.
+#[test]
+fn prop_decode_anatomy_sums_exactly() {
+    prop_check(
+        "decode fleet: anatomy components sum to e2e latency",
+        PropConfig { cases: 4, base_seed: 0x0A7A_0001 },
+        |rng| {
+            let classes = gen_classes();
+            let rosters = ["4x4@100:2", "4x4@100:1,8x4@200:1"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 2)]).unwrap();
+            let schedule = if rng.range(0, 2) == 0 {
+                DecodeSchedule::PrefillFirst
+            } else {
+                DecodeSchedule::Chunked { chunk_tokens: rng.range(1, 4) }
+            };
+            let migrate = rng.range(0, 2) == 0;
+            // A third of the cases squeeze the KV pool to provoke
+            // preemption (rejections are fine — only completions have
+            // an anatomy).
+            let kv_pages = if rng.range(0, 3) == 0 { Some(6) } else { None };
+            let n = rng.range(4, 8);
+            let requests: Vec<GenRequest> = (0..n)
+                .map(|i| {
+                    let prompt = rng.range(1, 5);
+                    let max_new = rng.range(1, 8 - prompt + 1);
+                    let arrival = (i as u64) * rng.below(30_000);
+                    gen_request(i as u64, prompt, max_new, arrival, rng.next_u64())
+                })
+                .collect();
+            let mut fleet = DecodeFleetSim::new(
+                DecodeFleetConfig {
+                    roster,
+                    ref_mhz: 100,
+                    max_running: 2,
+                    schedule,
+                    migrate,
+                    kv_pages,
+                    ..Default::default()
+                },
+                &classes,
+                42,
+            );
+            fleet.enable_obs(&anatomy_cfg(25_000));
+            let (m, _) = fleet.run(requests).unwrap();
+            let anatomies = fleet.obs().anatomy().expect("anatomy was armed");
+            if anatomies.len() as u64 != m.completed {
+                return CaseResult::Fail(format!(
+                    "{} anatomies for {} completions",
+                    anatomies.len(),
+                    m.completed,
+                ));
+            }
+            match check_exactness(&anatomies) {
+                Ok(()) => CaseResult::Ok,
+                Err(e) => CaseResult::Fail(format!("{e} ({schedule:?}, migrate={migrate})")),
+            }
+        },
+    );
+}
+
+/// Encoder fleets: random placement, stealing, batch coalescing *with
+/// a nonzero hold budget* (the park-for-fill path) — every completion
+/// decomposes exactly.
+#[test]
+fn prop_encoder_anatomy_sums_exactly() {
+    prop_check(
+        "encoder fleet: anatomy components sum to e2e latency",
+        PropConfig { cases: 4, base_seed: 0x0A7A_0002 },
+        |rng| {
+            let classes = ModelClass::edge_mix();
+            let rosters = ["4x4@100:3", "4x4@100:2,8x4@200:1"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 2)]).unwrap();
+            let policy = [
+                Placement::RoundRobin,
+                Placement::LeastLoaded,
+                Placement::ShortestExpectedJob,
+            ][rng.range(0, 3)];
+            let batch = BatchPolicy {
+                max_batch: rng.range(1, 4),
+                max_wait_cycles: rng.below(60_000),
+                latency_aware: false,
+            };
+            let steal = rng.range(0, 2) == 0;
+            let seed = rng.next_u64();
+            let mut gen = WorkloadGen::new(
+                ArrivalProcess::Poisson { rate_rps: 300.0 },
+                classes.clone(),
+                100.0,
+                seed,
+            );
+            let requests = gen.generate(rng.range(8, 20));
+            let mut fleet = FleetSim::new(
+                FleetConfig {
+                    roster,
+                    policy,
+                    discipline: Discipline::Fifo,
+                    batch,
+                    steal,
+                    ref_mhz: 100,
+                    ..Default::default()
+                },
+                &classes,
+                42,
+            );
+            fleet.enable_obs(&anatomy_cfg(25_000));
+            let m = fleet.run(requests).unwrap();
+            let anatomies = fleet.obs().anatomy().expect("anatomy was armed");
+            if anatomies.len() as u64 != m.completed {
+                return CaseResult::Fail(format!(
+                    "{} anatomies for {} completions",
+                    anatomies.len(),
+                    m.completed,
+                ));
+            }
+            match check_exactness(&anatomies) {
+                Ok(()) => CaseResult::Ok,
+                Err(e) => CaseResult::Fail(format!("{e} ({policy:?}, steal={steal})")),
+            }
+        },
+    );
+}
+
+/// One-way contract with the analysis layers armed: metrics and
+/// completions bit-identical to the unobserved run; trace + audit
+/// bytes identical between two identical runs and across `threads`
+/// ∈ {1, 4}.
+#[test]
+fn analysis_on_off_bit_identity_and_threaded_byte_identity() {
+    let classes = gen_classes();
+    let requests: Vec<GenRequest> =
+        (0..6).map(|i| gen_request(i, 3, 4, i * 12_000, i)).collect();
+    let audit = AuditConfig::new(10_000, vec![Some(1)]);
+    let mk = |threads: usize, obs: bool| {
+        let mut fleet = DecodeFleetSim::new(
+            DecodeFleetConfig {
+                roster: DeviceClass::parse_roster("4x4@100:2,8x4@200:1").unwrap(),
+                ref_mhz: 100,
+                max_running: 2,
+                schedule: DecodeSchedule::Chunked { chunk_tokens: 2 },
+                migrate: true,
+                threads,
+                ..Default::default()
+            },
+            &classes,
+            42,
+        );
+        if obs {
+            fleet.enable_obs(&anatomy_cfg(10_000));
+        }
+        let (m, done) = fleet.run(requests.clone()).unwrap();
+        let trace = fleet.obs().trace_json();
+        let audit_json = fleet.obs().audit_json(&audit);
+        (m, done, trace, audit_json)
+    };
+    let (m_off, d_off, t_off, a_off) = mk(1, false);
+    assert!(t_off.is_none() && a_off.is_none(), "disabled observer rendered output");
+    let (m_on, d_on, trace, audit_json) = mk(1, true);
+    assert_eq!(m_off, m_on, "anatomy/audit layers perturbed the metrics");
+    assert_eq!(d_off, d_on, "anatomy/audit layers perturbed the completions");
+    let trace = trace.expect("trace + spans were armed");
+    let audit_json = audit_json.expect("audit was armed");
+    assert!(trace.contains("\"cat\":\"anatomy\""), "span tracks missing from the trace");
+    assert!(audit_json.contains("\"schema\":\"cgra-audit-v1\""));
+
+    // Byte determinism: identical rerun.
+    let (_, _, t2, a2) = mk(1, true);
+    assert_eq!(t2.as_deref(), Some(trace.as_str()), "trace bytes differ between identical runs");
+    assert_eq!(a2.as_deref(), Some(audit_json.as_str()), "audit bytes differ between identical runs");
+
+    // Threaded byte identity: 4 workers, same bytes.
+    let (m4, d4, t4, a4) = mk(4, true);
+    assert_eq!(m4, m_on, "threaded run diverged in metrics");
+    assert_eq!(d4, d_on);
+    assert_eq!(t4.as_deref(), Some(trace.as_str()), "threads=4 trace bytes differ from threads=1");
+    assert_eq!(a4.as_deref(), Some(audit_json.as_str()), "threads=4 audit bytes differ");
+}
+
+/// Forced migration (every placement pinned to device 0 of a twin
+/// fleet) must surface as a nonzero migration component in at least
+/// one request's anatomy — and in the fleet audit totals.
+#[test]
+fn forced_migration_shows_migration_blame() {
+    let classes = gen_classes();
+    let mut fleet = DecodeFleetSim::new(
+        DecodeFleetConfig {
+            roster: vec![DeviceClass::paper(); 2],
+            ref_mhz: 100,
+            max_running: 4,
+            schedule: DecodeSchedule::Chunked { chunk_tokens: 2 },
+            migrate: true,
+            pin_device: Some(0),
+            ..Default::default()
+        },
+        &classes,
+        42,
+    );
+    fleet.enable_obs(&anatomy_cfg(10_000));
+    let requests: Vec<GenRequest> = (0..4).map(|i| gen_request(i, 3, 6, 0, i)).collect();
+    let (m, _) = fleet.run(requests).unwrap();
+    assert!(m.migrations > 0, "pinning must force migration to the idle twin");
+    let anatomies = fleet.obs().anatomy().expect("anatomy was armed");
+    check_exactness(&anatomies).unwrap();
+    let migrated: u64 = anatomies.iter().map(|r| r.comps.0[comp::MIGRATION]).sum();
+    assert!(migrated > 0, "no request carries migration-transfer cycles");
+    let report = fleet
+        .obs()
+        .audit_report(&AuditConfig::new(10_000, vec![None]))
+        .expect("audit was armed");
+    assert_eq!(report.completions, m.completed);
+    assert!(report.comp_totals[comp::MIGRATION] > 0, "audit totals lost the migration blame");
+}
+
+/// Batch-formation hold (the satellite bugfix): a parked partial batch
+/// must show up as the `hold` component, and as the new `hold_wait`
+/// histogram in the fleet metrics — no longer lumped into queue wait.
+#[test]
+fn encoder_hold_is_visible_as_its_own_component() {
+    let classes = vec![ModelClass::tiny()];
+    let requests: Vec<FleetRequest> = (0..6)
+        .map(|i| FleetRequest {
+            id: i,
+            model: 0,
+            input: MatF32::zeros(1, 1),
+            arrival_cycle: i * 10_000,
+            priority: 0,
+            deadline_cycle: None,
+        })
+        .collect();
+    let mut fleet = FleetSim::new(
+        FleetConfig {
+            roster: vec![DeviceClass::paper(); 2],
+            policy: Placement::RoundRobin,
+            discipline: Discipline::Fifo,
+            batch: BatchPolicy { max_batch: 4, max_wait_cycles: 200_000, latency_aware: false },
+            steal: false,
+            ref_mhz: 100,
+            timing_only: true,
+            ..Default::default()
+        },
+        &classes,
+        42,
+    );
+    fleet.enable_obs(&anatomy_cfg(25_000));
+    let m = fleet.run(requests).unwrap();
+    assert_eq!(m.completed, 6);
+    assert!(m.hold_wait.max() > 0, "parked batches recorded no hold_wait");
+    let anatomies = fleet.obs().anatomy().expect("anatomy was armed");
+    check_exactness(&anatomies).unwrap();
+    let held: u64 = anatomies.iter().map(|r| r.comps.0[comp::HOLD]).sum();
+    assert!(held > 0, "no request carries a hold component");
+    let report = fleet
+        .obs()
+        .audit_report(&AuditConfig::new(25_000, vec![None]))
+        .expect("audit was armed");
+    assert!(report.comp_totals[comp::HOLD] > 0, "audit totals lost the hold blame");
+}

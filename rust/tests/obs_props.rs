@@ -332,7 +332,12 @@ fn series_csv_schema_and_row_count() {
         &classes,
         42,
     );
-    fleet.enable_obs(&ObsConfig { trace: false, window_cycles: Some(window), kernels: false });
+    fleet.enable_obs(&ObsConfig {
+        trace: false,
+        window_cycles: Some(window),
+        kernels: false,
+        ..Default::default()
+    });
     let requests: Vec<GenRequest> = (0..4).map(|i| gen_request(i, 2, 3, i * 10_000, i)).collect();
     let (m, _) = fleet.run(requests).unwrap();
     let csv = fleet.obs().series_csv().expect("series was armed");
@@ -340,7 +345,8 @@ fn series_csv_schema_and_row_count() {
     assert_eq!(
         lines.next().unwrap(),
         "window,start_cycle,arrivals,completions,tokens,steals,preemptions,\
-         migrations,drops,rejects,busy_permille,queue_depth,kv_occupancy_permille",
+         migrations,drops,rejects,hold_permille,busy_permille,queue_depth,\
+         kv_occupancy_permille",
     );
     let rows: Vec<&str> = lines.collect();
     assert_eq!(rows.len() as u64, m.makespan_cycles / window + 1);
@@ -372,7 +378,12 @@ fn kernel_csv_carries_decode_phases() {
             &classes,
             42,
         );
-        fleet.enable_obs(&ObsConfig { trace: false, window_cycles: None, kernels: true });
+        fleet.enable_obs(&ObsConfig {
+            trace: false,
+            window_cycles: None,
+            kernels: true,
+            ..Default::default()
+        });
         let requests: Vec<GenRequest> = (0..2).map(|i| gen_request(i, 4, 3, 0, i)).collect();
         fleet.run(requests).unwrap();
         fleet.obs().kernel_csv().expect("kernel log was armed")
