@@ -290,5 +290,109 @@ fn main() -> anyhow::Result<()> {
     println!("\nFIG8c': Poisson 1500 req/s summarization stream (16 requests, long-prompt");
     println!("profile), same device — reported for context:\n");
     table_d.print();
+
+    // FIG8d — the prefix-cache headline: TTFT under a shared-prefix
+    // burst. 24 long prompts (24/32/40 rows) arrive at once; a fraction
+    // of them open with the same 16-row system-prompt prefix, bitwise.
+    // With the cache armed on 8-token blocks, repeats skip the shared
+    // rows by copying already-filled KV pages, so every request behind
+    // a hit also queues behind less prefill work. The acceptance
+    // criterion — p50 TTFT improves over cold prefill at ≥ 50% shared
+    // rate — is asserted; outputs stay bit-identical (the disagg_props
+    // contract). The table is also written as BENCH_fig8_ttft.json for
+    // the CI artifact.
+    let mk_shared = |share_every: u64| -> Vec<GenRequest> {
+        let mut rng = XorShiftRng::new(0xF18_8E);
+        let mut pool = vec![0.0f32; 16 * long_cfg.d_model];
+        for v in &mut pool {
+            *v = rng.normal() * 0.5;
+        }
+        (0..24u64)
+            .map(|id| {
+                let rows = 24 + (id as usize % 3) * 8;
+                let mut prompt = MatF32::zeros(rows, long_cfg.d_model);
+                for v in &mut prompt.data {
+                    *v = rng.normal() * 0.5;
+                }
+                if id % share_every == 0 {
+                    let w = 16 * long_cfg.d_model;
+                    prompt.data[..w].copy_from_slice(&pool);
+                }
+                GenRequest { id, model: 0, prompt, max_new_tokens: 4, arrival_cycle: 0 }
+            })
+            .collect()
+    };
+    println!(
+        "\nFIG8d: 1x4x4@100 device, {} model, 24 long prompts arriving at once, a 16-row",
+        long_classes[0].name
+    );
+    println!("prefix shared bitwise by 50% / 100% of them — cold vs prefix-cache(8):\n");
+    let mut table_e = Table::new(&[
+        "share", "arm", "tokens", "ttft p50 ms", "ttft p99 ms", "hits", "hit tokens",
+    ]);
+    let mut ttft_p50 = std::collections::BTreeMap::new();
+    let mut json_rows: Vec<String> = Vec::new();
+    for (share_name, share_every) in [("50%", 2u64), ("100%", 1)] {
+        for (arm, block) in [("cold", None), ("prefix-8", Some(8usize))] {
+            let mut fleet = DecodeFleetSim::new(
+                DecodeFleetConfig {
+                    roster: vec![DeviceClass::paper()],
+                    ref_mhz: 100,
+                    max_running: 8,
+                    page_words: 256,
+                    // Roomy pool: cache inserts never evict live work,
+                    // so the headline isolates reuse, not paging churn.
+                    kv_pages: Some(256),
+                    prefix_block_tokens: block,
+                    ..Default::default()
+                },
+                &long_classes,
+                42,
+            );
+            let (m, _) = fleet.run(mk_shared(share_every))?;
+            assert_eq!(m.completed, 24, "every sequence must finish");
+            ttft_p50.insert((share_name, arm), m.ttft.p50());
+            table_e.row(&[
+                share_name.to_string(),
+                arm.to_string(),
+                m.tokens.to_string(),
+                f3(ms(m.ttft.p50())),
+                f3(ms(m.ttft.p99())),
+                m.prefix_hits.to_string(),
+                m.prefix_hit_tokens.to_string(),
+            ]);
+            json_rows.push(format!(
+                "{{\"share\":\"{share_name}\",\"arm\":\"{arm}\",\"tokens\":{},\
+                 \"ttft_p50_cycles\":{},\"ttft_p99_cycles\":{},\"prefix_hits\":{},\
+                 \"prefix_hit_tokens\":{}}}",
+                m.tokens,
+                m.ttft.p50(),
+                m.ttft.p99(),
+                m.prefix_hits,
+                m.prefix_hit_tokens
+            ));
+            if block.is_some() {
+                assert!(m.prefix_hits > 0, "the shared burst must hit the cache");
+            }
+        }
+    }
+    table_e.print();
+    for share_name in ["50%", "100%"] {
+        assert!(
+            ttft_p50[&(share_name, "prefix-8")] < ttft_p50[&(share_name, "cold")],
+            "the prefix cache must improve p50 TTFT at {share_name} shared-prefix rate: \
+             {} vs {} cycles",
+            ttft_p50[&(share_name, "prefix-8")],
+            ttft_p50[&(share_name, "cold")]
+        );
+    }
+    std::fs::write(
+        "BENCH_fig8_ttft.json",
+        format!("{{\"fig8d_ttft\":[\n{}\n]}}\n", json_rows.join(",\n")),
+    )?;
+    println!("\nEvery hit copies the shared rows' K/V pages instead of recomputing them,");
+    println!("and the whole admission queue behind the hit inherits the saved prefill");
+    println!("cycles — which is why the win shows up at the p50, not just on the");
+    println!("repeats themselves. (Table written to BENCH_fig8_ttft.json.)");
     Ok(())
 }

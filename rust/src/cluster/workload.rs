@@ -315,6 +315,73 @@ impl WorkloadGen {
         }
         out
     }
+
+    /// [`Self::generate_gen`] with a **shared-prefix** mix: a per-class
+    /// pool of `pool_size` fixed prefix blocks (`prefix_rows` rows
+    /// each) is drawn up front, and each request's leading rows are
+    /// overwritten bitwise with one pool entry with probability
+    /// `share_prob`. Repeat prompts therefore share *bit-identical*
+    /// leading rows — the traffic shape the fleet-wide prefix cache
+    /// exists for — while the tails stay independent draws. As
+    /// deterministic in the generator seed as every other stream.
+    pub fn generate_gen_shared(
+        &mut self,
+        n: usize,
+        share_prob: f64,
+        prefix_rows: usize,
+        pool_size: usize,
+    ) -> Vec<GenRequest> {
+        assert!(prefix_rows >= 1 && pool_size >= 1, "need a non-empty prefix pool");
+        let profiles: Vec<GenProfile> =
+            self.classes.iter().map(|c| GenProfile::for_cfg(&c.cfg)).collect();
+        // Pools are drawn before any request so the pool contents do
+        // not depend on `n` and incremental generation stays stable.
+        let mut pools: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.classes.len());
+        for c in 0..self.classes.len() {
+            let d_model = self.classes[c].cfg.d_model;
+            let mut pool = Vec::with_capacity(pool_size);
+            for _ in 0..pool_size {
+                let mut block = vec![0.0f32; prefix_rows * d_model];
+                for v in &mut block {
+                    *v = self.rng.normal() * 0.5;
+                }
+                pool.push(block);
+            }
+            pools.push(pool);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = self.next_arrival_s();
+            let arrival_cycle = (t * self.freq_mhz * 1e6) as u64;
+            let model = self.pick_class();
+            let cfg = self.classes[model].cfg;
+            let p = profiles[model];
+            let prompt_hi = p.prompt_max.clamp(1, cfg.seq);
+            let prompt_lo = p.prompt_min.clamp(1, prompt_hi);
+            let prompt_len = self.rng.range(prompt_lo, prompt_hi + 1);
+            let new_hi = p.new_max.clamp(1, cfg.seq - prompt_len + 1);
+            let new_lo = p.new_min.clamp(1, new_hi);
+            let max_new_tokens = self.rng.range(new_lo, new_hi + 1);
+            let mut prompt = MatF32::zeros(prompt_len, cfg.d_model);
+            for v in &mut prompt.data {
+                *v = self.rng.normal() * 0.5;
+            }
+            if (self.rng.f32() as f64) < share_prob {
+                let k = self.rng.range(0, pool_size);
+                let words = prefix_rows.min(prompt_len) * cfg.d_model;
+                prompt.data[..words].copy_from_slice(&pools[model][k][..words]);
+            }
+            out.push(GenRequest {
+                id: self.next_id,
+                model,
+                prompt,
+                max_new_tokens,
+                arrival_cycle,
+            });
+            self.next_id += 1;
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -453,6 +520,45 @@ mod tests {
         }
         let degenerate = GenProfile::long_prompt_for_cfg(&XformerConfig { seq: 1, ..cfg });
         assert_eq!((degenerate.prompt_min, degenerate.prompt_max, degenerate.new_max), (1, 1, 1));
+    }
+
+    #[test]
+    fn shared_prefix_streams_share_leading_rows_bitwise() {
+        use std::collections::HashSet;
+        let mk = |seed, share| {
+            WorkloadGen::new(
+                ArrivalProcess::Poisson { rate_rps: 500.0 },
+                ModelClass::edge_mix(),
+                100.0,
+                seed,
+            )
+            .generate_gen_shared(32, share, 4, 2)
+        };
+        let a = mk(9, 1.0);
+        let b = mk(9, 1.0);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_cycle, y.arrival_cycle);
+            assert_eq!(x.prompt.data, y.prompt.data);
+        }
+        let classes = ModelClass::edge_mix();
+        let key = |r: &GenRequest| {
+            let d = classes[r.model].cfg.d_model;
+            let rows = 4usize.min(r.prompt.rows);
+            let bits: Vec<u32> = r.prompt.data[..rows * d].iter().map(|v| v.to_bits()).collect();
+            (r.model, bits)
+        };
+        // With share 1.0 and a pool of 2, at most two distinct leading
+        // blocks exist per class; with share 0.0 every draw is unique.
+        let shared: HashSet<_> = a.iter().map(key).collect();
+        assert!(shared.len() <= 4, "pool bounds the prefix patterns: {}", shared.len());
+        let cold = mk(9, 0.0);
+        let distinct: HashSet<_> = cold.iter().map(key).collect();
+        assert_eq!(distinct.len(), cold.len(), "cold prompts never collide bitwise");
+        for r in a.iter().chain(&cold) {
+            let cfg = classes[r.model].cfg;
+            assert!(r.prompt.rows + r.max_new_tokens - 1 <= cfg.seq);
+        }
     }
 
     #[test]

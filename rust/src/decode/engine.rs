@@ -55,10 +55,14 @@ pub fn mat_row(m: &MatF32, r: usize) -> MatF32 {
 /// pages (the same read path — and the same exact dequantized values —
 /// a decode tick uses) and masks causally at the chunk's base offset,
 /// so **any chunk schedule produces bit-identical hidden states to the
-/// one-shot causal forward** of the same rows. Returns each sequence's
-/// chunk hidden-state matrix (`p × d_model`; for the *final* chunk the
-/// last row is the first generated token) plus the kernel accounting
-/// report.
+/// one-shot causal forward** of the same rows. The prefix cache leans
+/// on the same contract: pages pre-filled by
+/// [`PagedKvCache::copy_prefix`] read exactly like pages an earlier
+/// chunk filled, so a cache hit that skips the leading rows is
+/// indistinguishable — bit for bit — from having computed them.
+/// Returns each sequence's chunk hidden-state matrix (`p × d_model`;
+/// for the *final* chunk the last row is the first generated token)
+/// plus the kernel accounting report.
 pub fn run_prefill_batch(
     sim: &mut CgraSim,
     model: &DecoderModel,

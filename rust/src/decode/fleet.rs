@@ -129,6 +129,28 @@ pub struct DecodeFleetConfig {
     /// bit-identical to `threads == 1` for any value — more threads
     /// than devices clamps to one device per shard.
     pub threads: usize,
+    /// Disaggregated prefill/decode serving (the DistServe/Splitwise
+    /// pattern): the roster splits into prefill-role and decode-role
+    /// devices — on a heterogeneous roster the classes cheapest at
+    /// prefill take the prefill role, a uniform roster splits in half.
+    /// Prefill devices run prompts only and park the finished prefill;
+    /// a fleet hand-off pass then moves each parked sequence — KV image
+    /// over the entry links, the migration transfer path — to the
+    /// decode device with the earliest finish estimate, where it
+    /// decodes without recompute. Supersedes [`Self::migrate`] (the
+    /// hand-off *is* the migration path under this mode). Outputs stay
+    /// bit-identical to the unified fleet (`disagg_props.rs`).
+    pub disagg: bool,
+    /// Arm the fleet-wide prefix cache with this token-block size:
+    /// after every fresh prompt's prefill, its leading whole blocks
+    /// are snapshotted (pages copied under a synthetic id) into the
+    /// device's prefix store; a later prompt sharing the prefix
+    /// bitwise is served by copying those pages instead of re-running
+    /// prefill, and placement becomes prefix-affine. Armed only on
+    /// devices that run fresh prefills (under [`Self::disagg`]: the
+    /// prefill role), so decode pools are never diluted by cache
+    /// pages. `None` (default) disables the cache.
+    pub prefix_block_tokens: Option<usize>,
 }
 
 impl Default for DecodeFleetConfig {
@@ -144,6 +166,8 @@ impl Default for DecodeFleetConfig {
             pin_device: None,
             timing_only: false,
             threads: 1,
+            disagg: false,
+            prefix_block_tokens: None,
         }
     }
 }
@@ -219,6 +243,22 @@ pub struct DecodeMetrics {
     pub kv_fill_words: u64,
     /// Exact KV gather (read) words across the fleet.
     pub kv_read_words: u64,
+    /// Prompts whose shared prefix was served from a prefix store
+    /// (pages copied instead of re-running prefill).
+    pub prefix_hits: u64,
+    /// Prompt tokens served from prefix stores across all hits.
+    pub prefix_hit_tokens: u64,
+    /// KV words copied pool-internally by prefix-cache hits (never
+    /// counted as attention fills or reads).
+    pub prefix_copied_words: u64,
+    /// Prefix-cache entries evicted to free pages for live sequences.
+    pub prefix_evictions: u64,
+    /// Disaggregated prefill→decode hand-offs executed.
+    pub handoffs: u64,
+    /// Words moved over the entry links by hand-offs (counted apart
+    /// from [`Self::migrated_words`] — hand-off is phase routing, not
+    /// load balancing).
+    pub handoff_words: u64,
     /// Latest completion stamp.
     pub makespan_cycles: u64,
     /// Per-device counters (served = completed sequences).
@@ -273,6 +313,12 @@ impl DecodeMetrics {
         self.decode_batch.merge(&other.decode_batch);
         self.kv_fill_words += other.kv_fill_words;
         self.kv_read_words += other.kv_read_words;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_hit_tokens += other.prefix_hit_tokens;
+        self.prefix_copied_words += other.prefix_copied_words;
+        self.prefix_evictions += other.prefix_evictions;
+        self.handoffs += other.handoffs;
+        self.handoff_words += other.handoff_words;
         self.makespan_cycles = self.makespan_cycles.max(other.makespan_cycles);
         self.stats.merge(&other.stats);
     }
@@ -326,6 +372,11 @@ struct PendingSeq {
     last_emit: u64,
     preemptions: u64,
     migrations: u64,
+    /// Leading rows of [`Self::prefill_input`] served from the prefix
+    /// cache at admission (their K/V pages were copied in); the
+    /// prefill job computes only the suffix from this offset. Reset to
+    /// zero on preemption — the resume re-prefills from scratch.
+    prefix_done: usize,
 }
 
 impl PendingSeq {
@@ -341,6 +392,7 @@ impl PendingSeq {
             last_emit: 0,
             preemptions: 0,
             migrations: 0,
+            prefix_done: 0,
         }
     }
 
@@ -367,6 +419,20 @@ impl PendingSeq {
             x.data[at..at + d].copy_from_slice(&row.data);
         }
         x
+    }
+
+    /// The rows the prefill job must actually compute: the full
+    /// (re-)prefill input minus any prefix-cache-served leading rows
+    /// (their pages are already filled, so the engine resumes at the
+    /// offset exactly like a later chunk — always ≥ 1 row, because a
+    /// hit never covers the whole prompt).
+    fn prefill_suffix_input(&self) -> MatF32 {
+        let x = self.prefill_input();
+        if self.prefix_done == 0 {
+            return x;
+        }
+        let d = x.cols;
+        MatF32::from_slice(x.rows - self.prefix_done, d, &x.data[self.prefix_done * d..])
     }
 }
 
@@ -425,6 +491,49 @@ fn merge_report(total: &mut CgraEncoderReport, part: &CgraEncoderReport) {
 /// is only claimed for single-model jobs.
 const MIXED_TICK_KEY: usize = usize::MAX;
 
+/// Synthetic KV sequence ids for prefix-cache entries live above this
+/// base so they can never collide with request ids (the CLI and every
+/// workload generator number requests from zero upward).
+const PREFIX_SEQ_BASE: u64 = 1 << 62;
+
+/// One cached shared prefix, resident in the device's KV pool under a
+/// synthetic sequence id.
+#[derive(Debug, Clone)]
+struct PrefixEntry {
+    /// Chained per-block FNV-1a hashes over the prefix rows' bit
+    /// patterns: `hashes[j]` covers blocks `0..=j` (radix-style), so a
+    /// depth-`j` candidate compares one word — but a match certifies
+    /// nothing about shallower depths under collision, which is why
+    /// [`DeviceDecoder::best_prefix_match`] re-verifies bitwise.
+    hashes: Vec<u64>,
+    /// Synthetic KV sequence id holding the copied pages.
+    seq: u64,
+    /// The prefix rows themselves — the bitwise verification that
+    /// turns a hash match into a guaranteed (not merely probable) hit.
+    rows: MatF32,
+    model: usize,
+    /// LRU stamp from the device's prefix clock.
+    last_use: u64,
+}
+
+/// Chained per-block FNV-1a hash of a prompt's leading
+/// `blocks · block` rows: one running hash over every value's bit
+/// pattern, seeded by the model index and snapshotted at each block
+/// boundary — `out[j]` identifies the whole prefix through block `j`.
+fn prefix_chain(model: usize, prompt: &MatF32, block: usize, blocks: usize) -> Vec<u64> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ (model as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let d = prompt.cols;
+    let mut out = Vec::with_capacity(blocks);
+    for b in 0..blocks {
+        for v in &prompt.data[b * block * d..(b + 1) * block * d] {
+            h ^= u64::from(v.to_bits());
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        out.push(h);
+    }
+    out
+}
+
 /// Per-model analytic device-cycle costs for a timing-only device
 /// ([`DecodeFleetConfig::timing_only`]): jobs synthesize their
 /// [`CgraEncoderReport`] from these instead of executing GEMMs.
@@ -465,6 +574,21 @@ pub struct DeviceDecoder {
     /// Analytic cost table for timing-only runs; `None` executes jobs
     /// for real.
     synth: Option<SynthCost>,
+    /// Disaggregation role: this device runs prefills only — its
+    /// "running" sequences are finished prefills parked for hand-off
+    /// to a decode device ([`DecodeFleetSim`]'s hand-off pass); it
+    /// never ticks them and sizes admission by prompt, not worst case.
+    prefill_only: bool,
+    /// Prefix-cache block size in tokens; `None` disarms the cache on
+    /// this device.
+    prefix_block: Option<usize>,
+    /// Cached shared prefixes, each holding pool pages under a
+    /// synthetic id above [`PREFIX_SEQ_BASE`].
+    prefix_store: Vec<PrefixEntry>,
+    /// Next synthetic id offset above [`PREFIX_SEQ_BASE`].
+    prefix_next_id: u64,
+    /// Monotonic LRU clock for [`PrefixEntry::last_use`].
+    prefix_clock: u64,
     admit_counter: u64,
 }
 
@@ -489,6 +613,11 @@ impl DeviceDecoder {
             last_tick_obs: None,
             last_prefill_obs: None,
             synth: None,
+            prefill_only: false,
+            prefix_block: None,
+            prefix_store: Vec::new(),
+            prefix_next_id: 0,
+            prefix_clock: 0,
             admit_counter: 0,
         }
     }
@@ -587,9 +716,13 @@ impl DeviceDecoder {
                 page_words: self.kv.config().page_words,
             });
         }
-        if worst > capacity {
+        // A prefill-only device holds at most the prompt rows — decode
+        // growth happens after the hand-off, sized by the placer
+        // against decode-role capacity.
+        let need = if self.prefill_only { req.prompt.rows } else { worst };
+        if need > capacity {
             return Err(AdmitError::TooLarge {
-                worst_tokens: worst,
+                worst_tokens: need,
                 capacity_tokens: capacity,
             });
         }
@@ -682,7 +815,9 @@ impl DeviceDecoder {
                 return Ok(true);
             }
         }
-        if self.running.is_empty() {
+        // A prefill-only device never ticks: finished prefills park in
+        // `running` until the fleet's hand-off pass moves them.
+        if self.prefill_only || self.running.is_empty() {
             return Ok(false);
         }
         let preempted_any = self.make_room(now, metrics, obs, dev);
@@ -722,7 +857,14 @@ impl DeviceDecoder {
                 } else {
                     self.waiting.front()
                 }?;
-                (head.id, head.model, commit_of(head), head.worst_tokens())
+                // A prefill-only device only ever holds the resident
+                // rows; decode growth happens after the hand-off.
+                let worst = if self.prefill_only {
+                    head.resident_tokens()
+                } else {
+                    head.worst_tokens()
+                };
+                (head.id, head.model, commit_of(head), worst)
             };
             if model_filter.is_some_and(|m| m != c_model) {
                 return None;
@@ -736,16 +878,25 @@ impl DeviceDecoder {
                             obs.record(now, dev, c_id, EventKind::Resume);
                         }
                     }
-                    return Some(
-                        if from_preempted {
-                            self.preempted.pop_front()
-                        } else {
-                            self.waiting.pop_front()
-                        }
-                        .expect("peeked above"),
-                    );
+                    let mut seq = if from_preempted {
+                        self.preempted.pop_front()
+                    } else {
+                        self.waiting.pop_front()
+                    }
+                    .expect("peeked above");
+                    self.try_prefix_hit(&mut seq, c_tokens, now, metrics, obs, dev);
+                    return Some(seq);
                 }
-                Err(AdmitError::NoCapacity { .. }) => return None,
+                Err(AdmitError::NoCapacity { .. }) => {
+                    // Pages held by cold prefix-cache entries must
+                    // never block live work: evict LRU-first and
+                    // retry; give up only when nothing is left to
+                    // evict (the usual wait-or-preempt cue).
+                    if self.evict_one_prefix(metrics) {
+                        continue;
+                    }
+                    return None;
+                }
                 Err(e) => {
                     let seq = if from_preempted {
                         self.preempted.pop_front()
@@ -810,6 +961,10 @@ impl DeviceDecoder {
             if need <= self.kv.free_pages() {
                 break;
             }
+            // Cold prefix-cache entries go before live sequences do.
+            if self.evict_one_prefix(metrics) {
+                continue;
+            }
             let victim = self
                 .running
                 .iter()
@@ -833,12 +988,162 @@ impl DeviceDecoder {
                 last_emit: s.last_emit,
                 preemptions: s.preemptions + 1,
                 migrations: s.migrations,
+                prefix_done: 0,
             });
             if self.running.is_empty() {
                 break;
             }
         }
         any
+    }
+
+    /// Deepest cached prefix matching this prompt: for each same-model
+    /// entry, walk candidate depths deepest-first, accepting depth `j`
+    /// only when the chained hash at `j` matches **and** the stored
+    /// rows equal the prompt's leading rows bit for bit — a chained
+    /// hash match at `j` certifies nothing about shallower depths
+    /// under collision, and the bitwise check makes a false hit
+    /// impossible rather than merely unlikely. Returns `(store index,
+    /// matched tokens)`; ties keep the first (lowest-index) entry, so
+    /// the scan is deterministic.
+    fn best_prefix_match(
+        &self,
+        model: usize,
+        chain: &[u64],
+        prompt: &MatF32,
+        block: usize,
+    ) -> Option<(usize, usize)> {
+        let d = prompt.cols;
+        let mut best: Option<(usize, usize)> = None;
+        for (i, e) in self.prefix_store.iter().enumerate() {
+            if e.model != model {
+                continue;
+            }
+            for j in (1..=chain.len().min(e.hashes.len())).rev() {
+                let words = j * block * d;
+                let bitwise_eq = || {
+                    e.rows.data[..words]
+                        .iter()
+                        .zip(&prompt.data[..words])
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+                };
+                if chain[j - 1] == e.hashes[j - 1] && bitwise_eq() {
+                    let tokens = j * block;
+                    if tokens > best.map_or(0, |(_, t)| t) {
+                        best = Some((i, tokens));
+                    }
+                    break;
+                }
+            }
+        }
+        best
+    }
+
+    /// Serve a freshly admitted prompt's shared prefix from this
+    /// device's prefix store: the deepest bitwise-verified match
+    /// copies its K/V pages into the new sequence (capped at
+    /// `committed`, the tokens admission just committed, and at one
+    /// row short of the prompt — the prefill job always computes at
+    /// least one row, whose output is the first token), and
+    /// `prefix_done` tells the job to start at the offset. A hit is
+    /// bit-identical to recomputing by [`run_prefill_batch`]'s resume
+    /// contract: a page filled by the copy reads exactly like a page
+    /// filled by an earlier chunk.
+    fn try_prefix_hit<O: ObsSink>(
+        &mut self,
+        seq: &mut PendingSeq,
+        committed: usize,
+        now: u64,
+        metrics: &mut DecodeMetrics,
+        obs: &mut O,
+        dev: usize,
+    ) {
+        let Some(block) = self.prefix_block else { return };
+        let blocks = seq.prompt.rows / block;
+        if !seq.emitted.is_empty() || blocks == 0 {
+            return;
+        }
+        let chain = prefix_chain(seq.model, &seq.prompt, block, blocks);
+        let Some((idx, matched)) = self.best_prefix_match(seq.model, &chain, &seq.prompt, block)
+        else {
+            return;
+        };
+        let k = matched.min(seq.prompt.rows - 1).min(committed);
+        if k == 0 {
+            return;
+        }
+        let entry_seq = self.prefix_store[idx].seq;
+        self.prefix_store[idx].last_use = self.prefix_clock;
+        self.prefix_clock += 1;
+        let words = self.kv.copy_prefix(seq.id, entry_seq, k);
+        seq.prefix_done = k;
+        metrics.prefix_hits += 1;
+        metrics.prefix_hit_tokens += k as u64;
+        metrics.prefix_copied_words += words;
+        if obs.enabled() {
+            obs.record(now, dev, seq.id, EventKind::PrefixHit { tokens: k });
+        }
+    }
+
+    /// After a *fresh* prompt finishes its prefill (and before its
+    /// pages can be released), snapshot its leading whole blocks into
+    /// the prefix store if the pool has slack: a later prompt sharing
+    /// the prefix copies these pages instead of recomputing them.
+    /// Inserts never evict — live sequences always outrank cache
+    /// entries — and an already-cached prefix is not duplicated.
+    fn maybe_cache_prefix(&mut self, p: &PendingSeq, n_layers: usize) {
+        let Some(block) = self.prefix_block else { return };
+        let blocks = p.prompt.rows / block;
+        if !p.emitted.is_empty() || blocks == 0 {
+            return;
+        }
+        let tokens = blocks * block;
+        let d = p.prompt.cols;
+        let chain = prefix_chain(p.model, &p.prompt, block, blocks);
+        if self.prefix_store.iter().any(|e| {
+            e.model == p.model
+                && e.hashes.len() >= blocks
+                && e.hashes[blocks - 1] == chain[blocks - 1]
+        }) {
+            return;
+        }
+        if !self.kv.can_admit(d, n_layers, tokens) {
+            return;
+        }
+        let sid = PREFIX_SEQ_BASE + self.prefix_next_id;
+        self.prefix_next_id += 1;
+        self.kv.admit(sid, d, n_layers, tokens, tokens).expect("can_admit checked");
+        self.kv.copy_prefix(sid, p.id, tokens);
+        let rows = MatF32::from_slice(tokens, d, &p.prompt.data[..tokens * d]);
+        let last_use = self.prefix_clock;
+        self.prefix_clock += 1;
+        self.prefix_store.push(PrefixEntry {
+            hashes: chain,
+            seq: sid,
+            rows,
+            model: p.model,
+            last_use,
+        });
+    }
+
+    /// Drop the least-recently-used prefix-cache entry, returning its
+    /// pages to the pool. `false` when the store is empty.
+    /// Deterministic: LRU stamps come from a per-device counter, so
+    /// the minimum is unique.
+    fn evict_one_prefix(&mut self, metrics: &mut DecodeMetrics) -> bool {
+        let Some(idx) = self
+            .prefix_store
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        let e = self.prefix_store.remove(idx);
+        self.kv.release(e.seq);
+        metrics.prefix_evictions += 1;
+        true
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -854,7 +1159,11 @@ impl DeviceDecoder {
         dev: usize,
     ) -> Result<()> {
         let model_idx = admitted[0].model;
-        let inputs: Vec<MatF32> = admitted.iter().map(|p| p.prefill_input()).collect();
+        let n_layers = models[model_idx].cfg.n_layers;
+        // Prefix-cache hits shrink the job to the uncached suffix: the
+        // copied pages read exactly like pages an earlier chunk filled,
+        // so the engine's offset-resume path recomputes nothing.
+        let inputs: Vec<MatF32> = admitted.iter().map(|p| p.prefill_suffix_input()).collect();
         let total_rows: u64 = inputs.iter().map(|x| x.rows as u64).sum();
         self.engine.sim.reset_stats();
         let (outs, report) = if self.synth.is_some() {
@@ -921,7 +1230,16 @@ impl DeviceDecoder {
             }
         }
         for (p, out) in admitted.into_iter().zip(outs) {
-            self.finish_prefilled_seq(p, &out, completion, metrics, completions, obs, dev);
+            self.finish_prefilled_seq(
+                p,
+                &out,
+                completion,
+                n_layers,
+                metrics,
+                completions,
+                obs,
+                dev,
+            );
         }
         metrics.prefill_jobs += 1;
         metrics.prefill_batch.record(inputs.len() as u64);
@@ -943,11 +1261,15 @@ impl DeviceDecoder {
         p: PendingSeq,
         out: &MatF32,
         completion: u64,
+        n_layers: usize,
         metrics: &mut DecodeMetrics,
         completions: &mut Vec<GenCompletion>,
         obs: &mut O,
         dev: usize,
     ) {
+        // Snapshot the freshly filled prefix into the cache before the
+        // sequence can complete and release its pages.
+        self.maybe_cache_prefix(&p, n_layers);
         let fresh = p.emitted.is_empty();
         let mut emitted = p.emitted;
         let ttft = match p.ttft {
@@ -1019,7 +1341,7 @@ impl DeviceDecoder {
         let budget = chunk_tokens.max(1);
         let want_prefill =
             self.chunking.is_some() || !self.waiting.is_empty() || !self.preempted.is_empty();
-        let want_decode = !self.running.is_empty();
+        let want_decode = !self.prefill_only && !self.running.is_empty();
         let prefill_turn = want_prefill && !(want_decode && self.last_was_prefill);
         let chunk_ran = prefill_turn
             && self.run_chunk_job(now, budget, models, quants, metrics, completions, obs, dev)?;
@@ -1074,25 +1396,39 @@ impl DeviceDecoder {
                 return Ok(false);
             };
             let input = seq.prefill_input();
-            self.chunking = Some(ChunkState { seq, input, done: 0 });
-        } else {
-            let st = self.chunking.as_ref().expect("checked");
-            let rows = (st.input.rows - st.done).min(budget);
-            match self.kv.commit_tokens(st.seq.id, rows) {
-                Ok(_) => {}
-                Err(AdmitError::NoCapacity { .. }) => {
-                    // Mid-prompt chunk stalled on KV pressure: pages
-                    // must free before the next chunk can commit. One
-                    // instant per blocked attempt (re-emitted if the
-                    // device is revisited while still blocked) —
-                    // initial-admission blocking stays plain queue
-                    // wait and emits nothing here.
-                    if obs.enabled() {
-                        obs.record(now, dev, st.seq.id, EventKind::ChunkWait);
+            // A prefix hit at admission pre-fills the leading tokens;
+            // the first chunk starts at the offset.
+            let done = seq.prefix_done;
+            self.chunking = Some(ChunkState { seq, input, done });
+        }
+        let (chunk_id, chunk_done, total_rows) = {
+            let st = self.chunking.as_ref().expect("set above");
+            (st.seq.id, st.done, st.input.rows)
+        };
+        if self.kv.len(chunk_id) == chunk_done {
+            // Between chunks — or a prefix hit covered the whole first
+            // commit — so the next budget of rows must commit now.
+            let rows = (total_rows - chunk_done).min(budget);
+            loop {
+                match self.kv.commit_tokens(chunk_id, rows) {
+                    Ok(_) => break,
+                    Err(AdmitError::NoCapacity { .. }) => {
+                        if self.evict_one_prefix(metrics) {
+                            continue;
+                        }
+                        // Mid-prompt chunk stalled on KV pressure: pages
+                        // must free before the next chunk can commit. One
+                        // instant per blocked attempt (re-emitted if the
+                        // device is revisited while still blocked) —
+                        // initial-admission blocking stays plain queue
+                        // wait and emits nothing here.
+                        if obs.enabled() {
+                            obs.record(now, dev, chunk_id, EventKind::ChunkWait);
+                        }
+                        return Ok(false);
                     }
-                    return Ok(false);
+                    Err(e) => return Err(e.into()),
                 }
-                Err(e) => return Err(e.into()),
             }
         }
         let st = self.chunking.take().expect("set above");
@@ -1159,7 +1495,17 @@ impl DeviceDecoder {
         }
         if is_final {
             let out = outs.into_iter().next().expect("one sequence");
-            self.finish_prefilled_seq(st.seq, &out, completion, metrics, completions, obs, dev);
+            let n_layers = models[model_idx].cfg.n_layers;
+            self.finish_prefilled_seq(
+                st.seq,
+                &out,
+                completion,
+                n_layers,
+                metrics,
+                completions,
+                obs,
+                dev,
+            );
         } else {
             self.chunking = Some(ChunkState { done: done_after, ..st });
         }
@@ -1439,7 +1785,7 @@ impl DecodeFleetSim {
         assert!(!classes.is_empty(), "decode fleet needs at least one model class");
         assert!(cfg.ref_mhz > 0, "reference clock must be positive");
         let (device_classes, device_class) = DeviceClass::dedup_roster(&cfg.roster);
-        let devices: Vec<DeviceDecoder> = cfg
+        let mut devices: Vec<DeviceDecoder> = cfg
             .roster
             .iter()
             .map(|c| {
@@ -1507,6 +1853,45 @@ impl DecodeFleetSim {
             .collect();
         let token_observed = vec![false; classes.len() * device_classes.len()];
         let prefill_observed = vec![false; classes.len() * device_classes.len()];
+        if let Some(b) = cfg.prefix_block_tokens {
+            assert!(b > 0, "prefix block must be at least one token");
+        }
+        // Disaggregation roles: the class with the cheapest summed
+        // analytic prefill cost runs prefill-only (the paper's fast
+        // class — wide arrays burn through prompt GEMMs), every other
+        // class holds KV and decodes. A uniform roster has no cost
+        // signal, so the front half prefills — both splits are pure
+        // functions of the roster, hence deterministic.
+        let prefill_role: Vec<bool> = if cfg.disagg {
+            assert!(
+                cfg.roster.len() >= 2,
+                "disaggregation needs at least one prefill and one decode device"
+            );
+            let class_cost: Vec<u64> = (0..device_classes.len())
+                .map(|c| prefill_cost.iter().map(|row| row[c]).sum())
+                .collect();
+            let min = *class_cost.iter().min().expect("at least one class");
+            if class_cost.iter().any(|&c| c != min) {
+                device_class.iter().map(|&c| class_cost[c] == min).collect()
+            } else {
+                let n_prefill = (cfg.roster.len() / 2).max(1);
+                (0..cfg.roster.len()).map(|d| d < n_prefill).collect()
+            }
+        } else {
+            vec![false; cfg.roster.len()]
+        };
+        for (d, dev) in devices.iter_mut().enumerate() {
+            dev.prefill_only = prefill_role[d];
+            // The prefix cache lives where fresh prefills run: every
+            // device in unified mode, prefill-only devices under
+            // disaggregation (decode pools stay reserved for live KV so
+            // hand-offs can always land).
+            dev.prefix_block = if cfg.disagg && !prefill_role[d] {
+                None
+            } else {
+                cfg.prefix_block_tokens
+            };
+        }
         Self {
             cfg,
             devices,
@@ -1615,6 +2000,27 @@ impl DecodeFleetSim {
     fn place(&mut self, req: GenRequest, now: u64, metrics: &mut DecodeMetrics) {
         let cfg = self.models[req.model].cfg;
         let worst = req.prompt.rows + req.max_new_tokens.saturating_sub(1);
+        // Prefix affinity: hash the prompt's whole blocks once, so the
+        // backlog scan can credit devices already holding the prefix
+        // with the rows they would not recompute.
+        let chain = match self.cfg.prefix_block_tokens {
+            Some(b) if req.prompt.rows / b > 0 => {
+                prefix_chain(req.model, &req.prompt, b, req.prompt.rows / b)
+            }
+            _ => Vec::new(),
+        };
+        // Under disaggregation arrivals land on prefill devices (sized
+        // for resident prompt rows), but the *decode* pool must be able
+        // to host the worst case after the hand-off.
+        let decode_cap = if self.cfg.disagg {
+            (0..self.devices.len())
+                .filter(|&d| !self.devices[d].prefill_only)
+                .map(|d| self.devices[d].kv_capacity_tokens(&cfg))
+                .max()
+                .unwrap_or(0)
+        } else {
+            usize::MAX
+        };
         // A pinned device bypasses the least-backlog scan (but never
         // the capacity filter): every request lands on one device, the
         // deterministic way to provoke crowding — and migrations — in
@@ -1624,15 +2030,28 @@ impl DecodeFleetSim {
                 let cap = self.devices[p].kv_capacity_tokens(&cfg);
                 (worst <= cap).then_some(p)
             }
+            _ if self.cfg.disagg && worst > decode_cap => None,
             _ => (0..self.devices.len())
                 .filter(|&d| {
                     let cap = self.devices[d].kv_capacity_tokens(&cfg);
-                    worst <= cap
+                    if self.cfg.disagg {
+                        self.devices[d].prefill_only && req.prompt.rows <= cap
+                    } else {
+                        worst <= cap
+                    }
                 })
                 .min_by_key(|&d| {
                     let c = self.device_class[d];
+                    let matched = if chain.is_empty() {
+                        0
+                    } else {
+                        let b = self.cfg.prefix_block_tokens.expect("chain nonempty");
+                        self.devices[d]
+                            .best_prefix_match(req.model, &chain, &req.prompt, b)
+                            .map_or(0, |(_, t)| t.min(req.prompt.rows - 1))
+                    } as u64;
                     let own = self.prefill_cost[req.model][c]
-                        .saturating_mul(req.prompt.rows as u64)
+                        .saturating_mul(req.prompt.rows as u64 - matched)
                         .saturating_add(
                             self.token_cost[req.model][c]
                                 .saturating_mul(req.max_new_tokens.saturating_sub(1) as u64),
@@ -1644,6 +2063,7 @@ impl DecodeFleetSim {
         };
         let Some(d) = candidate else {
             let best_cap = (0..self.devices.len())
+                .filter(|&d| !self.cfg.disagg || !self.devices[d].prefill_only)
                 .map(|d| self.devices[d].kv_capacity_tokens(&cfg))
                 .max()
                 .unwrap_or(0);
@@ -1886,6 +2306,115 @@ impl DecodeFleetSim {
         id
     }
 
+    /// One disaggregated hand-off pass at `now`: every sequence whose
+    /// prefill just finished on a prefill-only device moves — KV image
+    /// and all, charged at both endpoints' entry-link rates exactly
+    /// like a migration — to the decode device with the best
+    /// class-aware finish estimate. Unlike `rebalance` this is not an
+    /// optimization: prefill devices never decode, so the pass drains
+    /// *every* ready sequence (each iteration moves one, and moved
+    /// sequences land on decode devices, so it terminates).
+    /// Deterministic: fixed scan order, strict-improvement tie-break
+    /// to the lowest destination index.
+    fn disagg_handoff(&mut self, now: u64, metrics: &mut DecodeMetrics) {
+        loop {
+            let mut best: Option<(u64, usize, usize)> = None;
+            for src in 0..self.devices.len() {
+                if !self.devices[src].prefill_only {
+                    continue;
+                }
+                let Some((id, model, rem, kv_len, worst)) =
+                    self.devices[src].peek_newest_running()
+                else {
+                    continue;
+                };
+                let cfgm = &self.models[model].cfg;
+                for dst in 0..self.devices.len() {
+                    if self.devices[dst].prefill_only
+                        || self.devices[dst].running_len() >= self.cfg.max_running
+                        || !self.devices[dst].kv.can_host(
+                            id,
+                            cfgm.d_model,
+                            cfgm.n_layers,
+                            kv_len,
+                            worst,
+                        )
+                    {
+                        continue;
+                    }
+                    let c_dst = self.device_class[dst];
+                    let est = self.devices[dst]
+                        .free_at()
+                        .max(now)
+                        .saturating_add(self.devices[dst].expected_backlog(
+                            c_dst,
+                            &self.prefill_cost,
+                            &self.token_cost,
+                        ))
+                        .saturating_add(
+                            self.token_cost[model][c_dst].saturating_mul(rem as u64),
+                        );
+                    let better = match best {
+                        None => true,
+                        Some((b, _, _)) => est < b,
+                    };
+                    if better {
+                        best = Some((est, dst, src));
+                    }
+                }
+            }
+            let Some((_, dst, src)) = best else { break };
+            self.execute_handoff(dst, src, now, metrics);
+        }
+    }
+
+    /// Move the newest prefilled sequence from prefill device `src` to
+    /// decode device `dst`: the same export/import path as
+    /// [`Self::execute_migration`] (bit-exact KV image, serialization
+    /// and deserialization each charged at that endpoint's entry-link
+    /// rate and clock), booked as a hand-off instead of a migration.
+    fn execute_handoff(&mut self, dst: usize, src: usize, now: u64, metrics: &mut DecodeMetrics) {
+        let (c_src, c_dst) = (self.device_class[src], self.device_class[dst]);
+        let (mut s, image) =
+            self.devices[src].export_newest_running().expect("planner saw a candidate");
+        let words = image.word_count();
+        let worst = s.prompt.rows + s.max_new - 1;
+        s.migrations += 1;
+        let id = s.id;
+        self.devices[dst].import_running(s, &image, worst);
+        let xfer_src = self.transfer_ref_cycles(c_src, words);
+        let xfer_dst = self.transfer_ref_cycles(c_dst, words);
+        // Span starts mirror `charge_transfer`'s `free_at.max(earliest)`
+        // rule, read *before* each charge mutates the clocks.
+        let src_start = self.devices[src].free_at().max(now);
+        let handoff = self.devices[src].charge_transfer(now, xfer_src);
+        let dst_start = self.devices[dst].free_at().max(handoff);
+        self.devices[dst].charge_transfer(handoff, xfer_dst);
+        metrics.handoffs += 1;
+        metrics.handoff_words += words;
+        for x in [src, dst] {
+            debug_assert!(self.devices[x].free_at() > now, "a transfer occupies the timeline");
+            self.ready.remove(&x);
+            if self.devices[x].has_work() {
+                self.cal.push(self.devices[x].free_at(), x);
+            }
+        }
+        if self.obs.enabled() {
+            self.obs.record(
+                src_start,
+                src,
+                id,
+                EventKind::HandoffOut { dst, words, dur: xfer_src },
+            );
+            self.obs.record(
+                dst_start,
+                dst,
+                id,
+                EventKind::HandoffIn { src, words, dur: xfer_dst },
+            );
+        }
+    }
+
     /// Step `d` while it is free and has work, harvesting the
     /// measured-rate observations after every job — the one service
     /// body both event loops share, so job accounting and the
@@ -1994,7 +2523,12 @@ impl DecodeFleetSim {
                     self.ready.remove(&d);
                 }
             }
-            if self.cfg.migrate {
+            if self.cfg.disagg {
+                // Under disaggregation this pass *is* the migration
+                // path — prefilled sequences must leave their prefill
+                // device to decode — so it supersedes the rebalance.
+                self.disagg_handoff(now, &mut metrics);
+            } else if self.cfg.migrate {
                 // Migrated-in work starts after its transfer lands
                 // (free_at > now), so no re-stepping at this instant;
                 // `execute_migration` re-indexes both endpoints.
@@ -2159,7 +2693,11 @@ impl DecodeFleetSim {
                     self.ready.remove(&d);
                 }
             }
-            if self.cfg.migrate {
+            if self.cfg.disagg {
+                // After the barrier, so the hand-off planner sees
+                // exactly the rate tables the reference pass would.
+                self.disagg_handoff(now, &mut metrics);
+            } else if self.cfg.migrate {
                 // After the barrier, so this pass sees exactly the
                 // rate tables the reference pass would — identical to
                 // `run`'s placement of the rebalance after all drains.
@@ -2220,7 +2758,11 @@ impl DecodeFleetSim {
             for d in 0..self.devices.len() {
                 self.drain_device(d, now, &mut metrics, &mut completions)?;
             }
-            if self.cfg.migrate {
+            if self.cfg.disagg {
+                // Hand-offs land with free_at > now at both endpoints,
+                // so no re-stepping at this instant.
+                self.disagg_handoff(now, &mut metrics);
+            } else if self.cfg.migrate {
                 // Migrated-in work starts after its transfer lands
                 // (free_at > now), so no re-stepping at this instant.
                 self.rebalance(now, &mut metrics);
@@ -2825,5 +3367,91 @@ mod tests {
             seq.makespan_cycles
         );
         assert!(cont.tokens_per_sec(100.0) > seq.tokens_per_sec(100.0));
+    }
+
+    #[test]
+    fn disaggregated_handoff_stays_output_exact() {
+        // Two uniform devices: under disaggregation the front half
+        // (device 0) runs prefill-only and every sequence hands off to
+        // device 1 for decode. The token streams must stay bit-
+        // identical to the unified run — the hand-off rides the same
+        // export/import image path the migration suite already pins.
+        let classes = tiny_classes();
+        let mk = |disagg: bool| {
+            let reqs: Vec<GenRequest> = (0..4).map(|i| gen_req(i, 3, 5, i * 100)).collect();
+            let cfg = DecodeFleetConfig {
+                roster: vec![DeviceClass::paper(); 2],
+                ref_mhz: 100,
+                max_running: 4,
+                disagg,
+                ..Default::default()
+            };
+            let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+            fleet.run(reqs).unwrap()
+        };
+        let (m0, mut c0) = mk(false);
+        let (m1, mut c1) = mk(true);
+        assert_eq!(m0.completed, 4);
+        assert_eq!(m0.handoffs, 0);
+        assert_eq!(m1.completed, 4);
+        assert_eq!(m1.handoffs, 4, "every sequence must hand off exactly once");
+        assert!(m1.handoff_words > 0);
+        assert!(c1.iter().all(|c| c.migrations > 0), "hand-offs book as moves per sequence");
+        c0.sort_by_key(|c| c.id);
+        c1.sort_by_key(|c| c.id);
+        for (a, b) in c0.iter().zip(&c1) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens.data, b.tokens.data,
+                "sequence {} perturbed by disaggregated hand-off",
+                a.id
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_cache_serves_repeats_bit_identically() {
+        // Request 1 repeats request 0's prompt after the first prefill
+        // finished, so the cache serves its leading blocks; request 2
+        // is unrelated and must miss. Outputs must match the cold run
+        // bit for bit — a hit copies pages the engine then reads
+        // exactly like chunk-filled ones.
+        let classes = tiny_classes();
+        let shared = gen_req(0, 4, 3, 0).prompt;
+        let mk = |block: Option<usize>| {
+            let mut repeat = gen_req(1, 4, 3, 1_000_000);
+            repeat.prompt = shared.clone();
+            let reqs = vec![gen_req(0, 4, 3, 0), repeat, gen_req(2, 4, 3, 2_000_000)];
+            let cfg = DecodeFleetConfig {
+                roster: vec![DeviceClass::paper()],
+                ref_mhz: 100,
+                max_running: 4,
+                prefix_block_tokens: block,
+                ..Default::default()
+            };
+            let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+            fleet.run(reqs).unwrap()
+        };
+        let (mc, mut cc) = mk(None);
+        let (mh, mut ch) = mk(Some(2));
+        assert_eq!(mc.completed, 3);
+        assert_eq!(mc.prefix_hits, 0);
+        assert_eq!(mh.completed, 3);
+        assert_eq!(mh.prefix_hits, 1, "only the repeat may hit");
+        assert_eq!(
+            mh.prefix_hit_tokens, 3,
+            "both whole blocks match but the last prompt row must still compute"
+        );
+        assert!(mh.prefix_copied_words > 0);
+        cc.sort_by_key(|c| c.id);
+        ch.sort_by_key(|c| c.id);
+        for (a, b) in cc.iter().zip(&ch) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens.data, b.tokens.data,
+                "sequence {} perturbed by a prefix-cache hit",
+                a.id
+            );
+        }
     }
 }

@@ -99,10 +99,16 @@ pub enum AdmitError {
     AlreadyAdmitted { seq: u64 },
     /// The sequence id is not resident (stale handle).
     Unknown { seq: u64 },
-    /// A serialized KV image's word count does not match its header —
+    /// A serialized KV image's token count does not match its header —
     /// the import is refused before any allocation, so the destination
     /// pool (and the source it was exported from) stay intact.
     CorruptImage { expected_words: usize, got_words: usize },
+    /// One token of a serialized KV image carries the wrong number of
+    /// K or V words. Validated **per tensor**: an image whose K is
+    /// truncated and whose V is padded by the same amount has a
+    /// perfectly matching total and must still be refused — a total-
+    /// only check imports it silently and decodes garbage.
+    CorruptTensor { token: usize, expected_words: usize, got_k_words: usize, got_v_words: usize },
 }
 
 impl fmt::Display for AdmitError {
@@ -126,6 +132,11 @@ impl fmt::Display for AdmitError {
                 f,
                 "corrupt KV image: header promises {expected_words} words, payload has \
                  {got_words}"
+            ),
+            Self::CorruptTensor { token, expected_words, got_k_words, got_v_words } => write!(
+                f,
+                "corrupt KV image: token {token} must carry {expected_words} K and \
+                 {expected_words} V words, has {got_k_words} K / {got_v_words} V"
             ),
         }
     }
@@ -162,6 +173,21 @@ pub struct KvMetrics {
     pub import_words: u64,
 }
 
+/// One token of a serialized sequence: its K and V rows across every
+/// layer, as **separate tensors** (`n_layers · d_model` words each,
+/// layer-major). Keeping K and V structurally apart is what lets
+/// [`PagedKvCache::import_seq`] validate them apart — a truncated K
+/// padded back to size by extra V words can never masquerade as a
+/// well-formed token, and a producer physically cannot emit the
+/// swapped interleaved layout the old flat-word image allowed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvTokenImage {
+    /// K rows, layer 0 first: `n_layers · d_model` words.
+    pub k: Vec<f32>,
+    /// V rows, same layout.
+    pub v: Vec<f32>,
+}
+
 /// A serialized resident sequence: everything another device's pool
 /// needs to re-admit it with its cache intact. The payload is the
 /// exact dequantized K/V activations (token-major, page padding
@@ -173,15 +199,41 @@ pub struct KvSeqImage {
     pub n_layers: usize,
     /// Committed tokens at export time.
     pub len: usize,
-    /// `len · 2 · d_model · n_layers` words: each token's K then V row
-    /// for layer 0, then layer 1, … — the in-page token layout.
-    pub words: Vec<f32>,
+    /// One [`KvTokenImage`] per committed token, in token order.
+    pub tokens: Vec<KvTokenImage>,
 }
 
 impl KvSeqImage {
-    /// Words this image moves over a transfer link.
+    /// Words this image moves over a transfer link (the actual payload,
+    /// so a corrupt image is priced at what it really carries).
     pub fn word_count(&self) -> u64 {
-        self.words.len() as u64
+        self.tokens.iter().map(|t| (t.k.len() + t.v.len()) as u64).sum()
+    }
+
+    /// Structural validation against the header: the token count and
+    /// **each token's K and V tensor lengths** must match the shape.
+    /// This is the import gate — checking only the total word count
+    /// lets a truncated-K/padded-V (or otherwise re-balanced) payload
+    /// through silently.
+    pub fn validate(&self) -> Result<(), AdmitError> {
+        let per_tensor = self.d_model * self.n_layers;
+        if self.tokens.len() != self.len {
+            return Err(AdmitError::CorruptImage {
+                expected_words: self.len * 2 * per_tensor,
+                got_words: self.word_count() as usize,
+            });
+        }
+        for (t, tok) in self.tokens.iter().enumerate() {
+            if tok.k.len() != per_tensor || tok.v.len() != per_tensor {
+                return Err(AdmitError::CorruptTensor {
+                    token: t,
+                    expected_words: per_tensor,
+                    got_k_words: tok.k.len(),
+                    got_v_words: tok.v.len(),
+                });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -470,25 +522,33 @@ impl PagedKvCache {
     /// attention-read figure.
     pub fn export_seq(&mut self, seq: u64) -> Result<KvSeqImage, AdmitError> {
         let s = self.seqs.get(&seq).ok_or(AdmitError::Unknown { seq })?;
-        let wpt = s.words_per_token();
-        let mut words = Vec::with_capacity(s.len * wpt);
+        let (d, wpt) = (s.d_model, s.words_per_token());
+        let mut tokens = Vec::with_capacity(s.len);
         for t in 0..s.len {
             let frame = s.pages[t / s.tokens_per_page];
             let base = (t % s.tokens_per_page) * wpt;
-            words.extend_from_slice(&self.frames[frame][base..base + wpt]);
+            let mut k = Vec::with_capacity(s.n_layers * d);
+            let mut v = Vec::with_capacity(s.n_layers * d);
+            for li in 0..s.n_layers {
+                let off = base + li * 2 * d;
+                k.extend_from_slice(&self.frames[frame][off..off + d]);
+                v.extend_from_slice(&self.frames[frame][off + d..off + 2 * d]);
+            }
+            tokens.push(KvTokenImage { k, v });
         }
-        self.metrics.export_words += words.len() as u64;
-        Ok(KvSeqImage { d_model: s.d_model, n_layers: s.n_layers, len: s.len, words })
+        self.metrics.export_words += (s.len * wpt) as u64;
+        Ok(KvSeqImage { d_model: s.d_model, n_layers: s.n_layers, len: s.len, tokens })
     }
 
     /// Re-admit an exported sequence into this pool (migration
     /// import): allocate pages for `image.len` tokens, copy the K/V
     /// words in, and commit the length — **all-or-nothing**. Every
-    /// check (malformed image, token wider than a page, worst case
-    /// beyond the pool, duplicate id, not enough free pages) happens
-    /// before any allocation, so a failed import changes nothing here
-    /// and nothing at the source. `worst_tokens` is the same growth
-    /// bound [`Self::admit`] takes. Words land in
+    /// check (malformed image — token count *and* each token's K/V
+    /// tensor lengths via [`KvSeqImage::validate`] — token wider than
+    /// a page, worst case beyond the pool, duplicate id, not enough
+    /// free pages) happens before any allocation, so a failed import
+    /// changes nothing here and nothing at the source. `worst_tokens`
+    /// is the same growth bound [`Self::admit`] takes. Words land in
     /// [`KvMetrics::import_words`], never in the prefill-fill figure.
     pub fn import_seq(
         &mut self,
@@ -496,23 +556,23 @@ impl PagedKvCache {
         image: &KvSeqImage,
         worst_tokens: usize,
     ) -> Result<(), AdmitError> {
-        let wpt = 2 * image.d_model * image.n_layers;
-        if image.words.len() != image.len * wpt {
-            return Err(AdmitError::CorruptImage {
-                expected_words: image.len * wpt,
-                got_words: image.words.len(),
-            });
-        }
+        image.validate()?;
         self.admit(seq, image.d_model, image.n_layers, image.len, worst_tokens)?;
         let s = self.seqs.get(&seq).expect("just admitted");
+        let d = s.d_model;
+        let wpt = s.words_per_token();
         let (tpp, pages) = (s.tokens_per_page, s.pages.clone());
-        for t in 0..image.len {
+        for (t, tok) in image.tokens.iter().enumerate() {
             let frame = pages[t / tpp];
             let base = (t % tpp) * wpt;
-            self.frames[frame][base..base + wpt]
-                .copy_from_slice(&image.words[t * wpt..(t + 1) * wpt]);
+            for li in 0..image.n_layers {
+                let off = base + li * 2 * d;
+                self.frames[frame][off..off + d].copy_from_slice(&tok.k[li * d..(li + 1) * d]);
+                self.frames[frame][off + d..off + 2 * d]
+                    .copy_from_slice(&tok.v[li * d..(li + 1) * d]);
+            }
         }
-        self.metrics.import_words += image.words.len() as u64;
+        self.metrics.import_words += (image.len * wpt) as u64;
         Ok(())
     }
 
@@ -542,12 +602,50 @@ impl PagedKvCache {
     }
 
     /// Whether [`Self::import_seq`] would succeed right now for this
-    /// image under `worst_tokens` — payload/header agreement plus
-    /// every [`Self::can_host`] check, so a caller may import
-    /// unconditionally after a `true`.
+    /// image under `worst_tokens` — full structural validation
+    /// ([`KvSeqImage::validate`]) plus every [`Self::can_host`] check,
+    /// so a caller may import unconditionally after a `true`.
     pub fn can_import(&self, seq: u64, image: &KvSeqImage, worst_tokens: usize) -> bool {
-        image.words.len() == image.len * 2 * image.d_model * image.n_layers
+        image.validate().is_ok()
             && self.can_host(seq, image.d_model, image.n_layers, image.len, worst_tokens)
+    }
+
+    /// Copy the first `tokens` tokens' K/V words from resident
+    /// sequence `src` into resident sequence `dst` (the prefix-cache
+    /// serve path: a repeated prompt's shared prefix is filled from
+    /// already-computed pages instead of re-running prefill). Both
+    /// sequences must share a model shape and have at least `tokens`
+    /// committed; panics otherwise — a bad prefix copy is a scheduling
+    /// bug, never silent corruption. Returns the words copied. The
+    /// copy is a pool-internal move and is deliberately **not**
+    /// counted as attention fills or reads ([`KvMetrics`] stays the
+    /// compute-traffic figure); the fleet books it as prefix-copy
+    /// traffic.
+    pub fn copy_prefix(&mut self, dst: u64, src: u64, tokens: usize) -> u64 {
+        if tokens == 0 {
+            return 0;
+        }
+        assert_ne!(dst, src, "prefix copy onto itself");
+        let s = self.seqs.get(&src).expect("prefix source must be resident");
+        let d = self.seqs.get(&dst).expect("prefix destination must be resident");
+        assert_eq!(
+            (s.d_model, s.n_layers),
+            (d.d_model, d.n_layers),
+            "prefix copy across model shapes"
+        );
+        assert!(s.len >= tokens, "source holds {} tokens, copy wants {tokens}", s.len);
+        assert!(d.len >= tokens, "destination committed {} tokens, copy wants {tokens}", d.len);
+        let wpt = s.words_per_token();
+        let (src_pages, src_tpp) = (s.pages.clone(), s.tokens_per_page);
+        let (dst_pages, dst_tpp) = (d.pages.clone(), d.tokens_per_page);
+        let mut row = vec![0.0f32; wpt];
+        for t in 0..tokens {
+            let sb = (t % src_tpp) * wpt;
+            let db = (t % dst_tpp) * wpt;
+            row.copy_from_slice(&self.frames[src_pages[t / src_tpp]][sb..sb + wpt]);
+            self.frames[dst_pages[t / dst_tpp]][db..db + wpt].copy_from_slice(&row);
+        }
+        (tokens * wpt) as u64
     }
 
     /// Structural-invariant check (test/debug aid; panics with the
@@ -776,20 +874,101 @@ mod tests {
         assert_eq!(dst.metrics.import_words, 0);
         dst.check_invariants();
         assert_eq!(src.len(1), 4, "source stays intact on import failure");
-        // A corrupt image is refused before any allocation.
+        // A corrupt image is refused before any allocation: a missing
+        // token trips the count check…
         let mut bad = image.clone();
-        bad.words.pop();
+        bad.tokens.pop();
         let mut fresh = tiny_pool();
         match fresh.import_seq(1, &bad, 8) {
             Err(AdmitError::CorruptImage { expected_words, got_words }) => {
                 assert_eq!(expected_words, 4 * 32);
-                assert_eq!(got_words, 4 * 32 - 1);
+                assert_eq!(got_words, 3 * 32);
             }
             other => panic!("expected CorruptImage, got {other:?}"),
         }
         assert!(fresh.is_empty());
+        // …and a short tensor trips the per-token check.
+        let mut bad = image.clone();
+        bad.tokens[2].v.pop();
+        match fresh.import_seq(1, &bad, 8) {
+            Err(AdmitError::CorruptTensor {
+                token: 2,
+                expected_words: 16,
+                got_k_words: 16,
+                got_v_words: 15,
+            }) => {}
+            other => panic!("expected CorruptTensor, got {other:?}"),
+        }
+        assert!(fresh.is_empty());
         let msg = AdmitError::CorruptImage { expected_words: 2, got_words: 1 }.to_string();
         assert!(msg.contains("corrupt KV image"), "reason must be printable: {msg}");
+    }
+
+    #[test]
+    fn matching_total_with_skewed_tensors_is_refused() {
+        // The regression the total-only check missed: truncate a
+        // token's K by one row and pad its V by the same amount — the
+        // image's total word count is untouched, but the payload is
+        // garbage. Per-tensor validation must refuse it, and the pool
+        // must stay byte-identical to before the attempt.
+        let mut src = tiny_pool();
+        src.admit(1, 16, 1, 4, 8).unwrap();
+        for t in 0..4 {
+            src.write_token_layer(1, t, 0, &row(16, 1.0 + t as f32), &row(16, -2.0));
+        }
+        let good = src.export_seq(1).unwrap();
+        let total = good.word_count();
+        let mut skewed = good.clone();
+        skewed.tokens[1].k.truncate(skewed.tokens[1].k.len() - 16);
+        skewed.tokens[1].v.extend(vec![7.5f32; 16]);
+        assert_eq!(skewed.word_count(), total, "the forgery matches the total exactly");
+        let mut dst = tiny_pool();
+        assert!(!dst.can_import(1, &skewed, 8));
+        match dst.import_seq(1, &skewed, 8) {
+            Err(AdmitError::CorruptTensor {
+                token: 1,
+                expected_words: 16,
+                got_k_words: 0,
+                got_v_words: 32,
+            }) => {}
+            other => panic!("expected CorruptTensor, got {other:?}"),
+        }
+        assert!(dst.is_empty(), "refused import must not leave a stub");
+        assert_eq!(dst.metrics.import_words, 0);
+        dst.check_invariants();
+        // Swapping K and V payloads is the same forgery when their
+        // sizes differ (multi-row truncation); equal-size swaps are
+        // structurally impossible to mislabel now that the image keeps
+        // the tensors apart — the fields *are* the layout.
+        assert!(dst.can_import(1, &good, 8), "the honest image still imports");
+        dst.import_seq(1, &good, 8).unwrap();
+        let (ks, vs) = src.read_layer(1, 0);
+        let (kd, vd) = dst.read_layer(1, 0);
+        assert_eq!(ks.data, kd.data);
+        assert_eq!(vs.data, vd.data);
+    }
+
+    #[test]
+    fn copy_prefix_clones_leading_tokens_without_faking_traffic() {
+        let mut kv = tiny_pool();
+        kv.admit(1, 16, 1, 5, 8).unwrap();
+        for t in 0..5 {
+            kv.write_token_layer(1, t, 0, &row(16, t as f32), &row(16, 100.0 + t as f32));
+        }
+        kv.admit(2, 16, 1, 5, 8).unwrap();
+        let (fills, reads) = (kv.metrics.fill_words, kv.metrics.read_words);
+        let copied = kv.copy_prefix(2, 1, 3);
+        assert_eq!(copied, 3 * 32);
+        assert_eq!(kv.metrics.fill_words, fills, "a prefix copy is not an attention fill");
+        assert_eq!(kv.metrics.read_words, reads, "a prefix copy is not an attention read");
+        kv.write_token_layer(2, 3, 0, &row(16, 50.0), &row(16, 51.0));
+        kv.write_token_layer(2, 4, 0, &row(16, 60.0), &row(16, 61.0));
+        let (k1, v1) = kv.read_layer(1, 0);
+        let (k2, v2) = kv.read_layer(2, 0);
+        assert_eq!(&k1.data[..3 * 16], &k2.data[..3 * 16], "prefix K must be bit-identical");
+        assert_eq!(&v1.data[..3 * 16], &v2.data[..3 * 16], "prefix V must be bit-identical");
+        assert_eq!(k2.at(3, 0), 50.0, "suffix stays the destination's own");
+        kv.check_invariants();
     }
 
     #[test]

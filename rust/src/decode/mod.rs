@@ -37,13 +37,26 @@
 //!   charged to both endpoints' timelines, and decode resumes on the
 //!   destination with no recompute.
 //!
+//!   With **disaggregation** ([`fleet::DecodeFleetConfig::disagg`]),
+//!   the fleet specializes by phase instead: the cheapest-prefill
+//!   class runs prefill only and every freshly prefilled sequence
+//!   hands its KV image off to a decode device over the same
+//!   entry-link-charged transfer path. The **fleet-wide prefix cache**
+//!   ([`fleet::DecodeFleetConfig::prefix_block_tokens`]) hashes prompt
+//!   token-blocks radix-style, re-verifies candidate matches bitwise,
+//!   and serves shared prefixes by copying already-filled KV pages —
+//!   placement is prefix-affine, so repeats route to devices already
+//!   holding the prefix.
+//!
 //! Every path — chunk schedules, migrations, preemption/resume, batch
-//! composition, device class — is **bit-identical** to one-shot causal
-//! prefill; `rust/tests/decode_props.rs` and
-//! `rust/tests/migration_props.rs` pin the contract. The CLI serves
-//! this path as `cluster --workload decode` (`--chunk-tokens`,
-//! `--migrate`); the FIG8 bench charts tokens/sec and TTFT against
-//! concurrent sequences and asserts the chunked-prefill p99 ITL win.
+//! composition, device class, disaggregated hand-off, prefix-cache
+//! hits — is **bit-identical** to one-shot causal prefill;
+//! `rust/tests/decode_props.rs`, `rust/tests/migration_props.rs` and
+//! `rust/tests/disagg_props.rs` pin the contract. The CLI serves this
+//! path as `cluster --workload decode` (`--chunk-tokens`, `--migrate`,
+//! `--disagg`, `--prefix-block`); the FIG8 bench charts tokens/sec and
+//! TTFT against concurrent sequences, asserts the chunked-prefill p99
+//! ITL win and the prefix-cache TTFT win at high shared-prefix rates.
 //!
 //! The fleet carries [`crate::obs`] hooks (arm with
 //! [`fleet::DecodeFleetSim::enable_obs`]): every admission, chunk,
@@ -60,4 +73,4 @@ pub use fleet::{
     analytic_decode_token_cycles, analytic_decode_token_ref_cycles, DecodeFleetConfig,
     DecodeFleetSim, DecodeMetrics, DecodeSchedule, DeviceDecoder, GenCompletion,
 };
-pub use kv::{AdmitError, KvConfig, KvMetrics, KvSeqImage, PagedKvCache};
+pub use kv::{AdmitError, KvConfig, KvMetrics, KvSeqImage, KvTokenImage, PagedKvCache};

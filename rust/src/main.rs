@@ -22,6 +22,7 @@
 //!           [--max-running r] [--page-words w]
 //!           [--schedule prefill-first|decode-first|chunked]
 //!           [--chunk-tokens t] [--migrate] [--pin-device d]
+//!           [--disagg] [--prefix-block t] [--prefix-share p]
 //!           [--threads n] [--trace-out f] [--stream-trace]
 //!           [--metrics-window w] [--metrics-out f] [--kernel-trace f]
 //!           [--spans] [--audit-out f]
@@ -43,8 +44,18 @@
 //!                                  prefill with an N-row budget, and
 //!                                  --migrate lets idle devices pull
 //!                                  waiting/running sequences — KV
-//!                                  pages move over the entry links),
-//!                                  reporting TTFT / inter-token
+//!                                  pages move over the entry links;
+//!                                  --disagg splits the fleet into
+//!                                  prefill-only and decode roles with
+//!                                  every prefilled sequence handed
+//!                                  off over the same links,
+//!                                  --prefix-block T arms the
+//!                                  fleet-wide prefix cache on T-token
+//!                                  blocks, and --prefix-share P draws
+//!                                  a workload where a fraction P of
+//!                                  prompts reuse a pooled prefix
+//!                                  bitwise), reporting TTFT /
+//!                                  inter-token
 //!                                  latency / tokens-per-second / KV
 //!                                  occupancy, preemptions and
 //!                                  migrations. Observability (both
@@ -625,12 +636,26 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         Some(s) => Some(s.parse::<usize>()?),
         None => None,
     };
+    // `--disagg` splits the fleet by phase (prefill-only vs decode);
+    // `--prefix-block T` arms the fleet-wide prefix cache on T-token
+    // blocks; `--prefix-share P` draws the shared-prefix workload that
+    // gives the cache something to hit.
+    let disagg = args.switch("disagg");
+    let prefix_block: usize = args.flag_parse("prefix-block", 0usize)?;
+    let prefix_share: f64 = args.flag_parse("prefix-share", 0.0f64)?;
+    if !(0.0..=1.0).contains(&prefix_share) {
+        bail!("--prefix-share must be in [0, 1]");
+    }
     let threads = parse_threads(args)?;
     let arrival = parse_arrival(args, rate)?;
     let classes = ModelClass::edge_mix();
     let ref_mhz = arch.freq_mhz_u64();
     let mut gen = WorkloadGen::new(arrival, classes.clone(), ref_mhz as f64, seed);
-    let requests = gen.generate_gen(n);
+    let requests = if prefix_share > 0.0 {
+        gen.generate_gen_shared(n, prefix_share, prefix_block.max(4), 4)
+    } else {
+        gen.generate_gen(n)
+    };
     let n_devices = roster.len();
     let roster_str = roster_summary(&roster);
     let mut fleet = DecodeFleetSim::new(
@@ -645,6 +670,8 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
             pin_device,
             timing_only: false,
             threads,
+            disagg,
+            prefix_block_tokens: (prefix_block > 0).then_some(prefix_block),
         },
         &classes,
         42,
@@ -700,6 +727,18 @@ fn cmd_cluster_decode(args: &Args) -> Result<()> {
         println!(
             "migrate  : {} sequences moved, {} words over the entry links",
             m.migrations, m.migrated_words
+        );
+    }
+    if disagg {
+        println!(
+            "disagg   : {} hand-offs, {} words over the entry links",
+            m.handoffs, m.handoff_words
+        );
+    }
+    if prefix_block > 0 {
+        println!(
+            "prefix   : {} hits, {} tokens served from cache, {} words copied, {} evictions",
+            m.prefix_hits, m.prefix_hit_tokens, m.prefix_copied_words, m.prefix_evictions
         );
     }
     println!(

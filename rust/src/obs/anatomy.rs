@@ -36,12 +36,16 @@
 //!    encoder (a stolen batch is served at the same cycle it is
 //!    stolen), kept as a named bucket so the report schema is stable
 //!    if relocation ever gains a cost.
+//! 9. `handoff` — disaggregated prefill→decode hand-off: source export
+//!    start to destination import end, the KV-image transfer between
+//!    phase-specialized devices (distinct from `migration`, which is a
+//!    load-balancing move).
 
 use super::trace::{EventKind, ObsEvent, NO_SEQ};
 use std::collections::BTreeMap;
 
 /// Number of anatomy components.
-pub const N_COMPONENTS: usize = 9;
+pub const N_COMPONENTS: usize = 10;
 
 /// Component names, index-aligned with [`Components`].
 pub const COMPONENT_NAMES: [&str; N_COMPONENTS] = [
@@ -54,6 +58,7 @@ pub const COMPONENT_NAMES: [&str; N_COMPONENTS] = [
     "preempt_stall",
     "migration",
     "steal",
+    "handoff",
 ];
 
 /// Component indices, by name.
@@ -67,6 +72,7 @@ pub mod comp {
     pub const PREEMPT_STALL: usize = 6;
     pub const MIGRATION: usize = 7;
     pub const STEAL: usize = 8;
+    pub const HANDOFF: usize = 9;
 }
 
 /// Per-component cycle totals for one request.
@@ -133,6 +139,8 @@ struct SeqState {
     marks: Vec<(u64, usize)>,
     /// Source-side start of an in-flight migration.
     migrate_src: Option<u64>,
+    /// Source-side start of an in-flight disaggregated hand-off.
+    handoff_src: Option<u64>,
 }
 
 impl SeqState {
@@ -143,6 +151,7 @@ impl SeqState {
             intervals: Vec::new(),
             marks: Vec::new(),
             migrate_src: None,
+            handoff_src: None,
         }
     }
 }
@@ -361,6 +370,27 @@ pub fn decompose(events: &[ObsEvent]) -> Vec<RequestAnatomy> {
                     devs.entry(e.device).or_default().decoding.push(e.seq);
                 }
             }
+            EventKind::HandoffOut { .. } => {
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                st.handoff_src = Some(e.cycle);
+                devs.entry(e.device).or_default().drop_decoding(e.seq);
+            }
+            EventKind::HandoffIn { dur, .. } => {
+                let st = seqs.entry(e.seq).or_insert_with(SeqState::new);
+                let start = st.handoff_src.take().unwrap_or(e.cycle);
+                let end = e.cycle + dur;
+                st.intervals.push((start, end, comp::HANDOFF));
+                let after = match st.phase {
+                    Phase::Decoding => comp::DECODE_STALL,
+                    Phase::Preempted => comp::PREEMPT_STALL,
+                    Phase::Prefilling => comp::CHUNK_STALL,
+                    Phase::Queued => comp::QUEUE_WAIT,
+                };
+                st.marks.push((end, after));
+                if st.phase == Phase::Decoding {
+                    devs.entry(e.device).or_default().decoding.push(e.seq);
+                }
+            }
             EventKind::Complete { latency } => {
                 let mut st = seqs.remove(&e.seq).unwrap_or_else(SeqState::new);
                 let dev = devs.entry(e.device).or_default();
@@ -391,6 +421,7 @@ pub fn decompose(events: &[ObsEvent]) -> Vec<RequestAnatomy> {
             | EventKind::Drop
             | EventKind::Steal { .. }
             | EventKind::ChunkWait
+            | EventKind::PrefixHit { .. }
             | EventKind::QueueDepth { .. }
             | EventKind::KvOccupancy { .. } => {}
         }
@@ -528,6 +559,40 @@ mod tests {
         assert_eq!(r.comps.0[comp::MIGRATION], 20); // 40..60
         assert_eq!(r.comps.0[comp::DECODE_EXEC], 10);
         assert_eq!(r.comps.0[comp::DECODE_STALL], 0);
+    }
+
+    #[test]
+    fn disaggregated_handoff_decomposes_exactly() {
+        // Prefill [10, 40) on device 0 (prefill-only), hand-off
+        // [40, 60) to device 1, ticks [60, 70) and [75, 85) there.
+        let events = vec![
+            ev(0, 0, 4, EventKind::Arrival { model: 0 }),
+            ev(10, 0, 4, EventKind::KvAdmit { tokens: 6 }),
+            ev(10, 0, NO_SEQ, EventKind::Prefill {
+                model: 0,
+                batch: 1,
+                rows: 6,
+                chunk: false,
+                tokens: 1,
+                dur: 30,
+            }),
+            ev(40, 0, 4, EventKind::HandoffOut { dst: 1, words: 192, dur: 12 }),
+            ev(52, 1, 4, EventKind::HandoffIn { src: 0, words: 192, dur: 8 }),
+            ev(60, 1, NO_SEQ, EventKind::DecodeTick { batch: 1, dur: 10 }),
+            ev(75, 1, NO_SEQ, EventKind::DecodeTick { batch: 1, dur: 10 }),
+            ev(85, 1, 4, EventKind::Complete { latency: 85 }),
+        ];
+        let anat = decompose(&events);
+        assert_eq!(anat.len(), 1);
+        let r = &anat[0];
+        assert_eq!(r.comps.sum(), 85);
+        assert_eq!(r.device, 1);
+        assert_eq!(r.comps.0[comp::QUEUE_WAIT], 10);
+        assert_eq!(r.comps.0[comp::PREFILL_EXEC], 30);
+        assert_eq!(r.comps.0[comp::HANDOFF], 20); // 40..60
+        assert_eq!(r.comps.0[comp::DECODE_EXEC], 20);
+        assert_eq!(r.comps.0[comp::DECODE_STALL], 5); // 70..75
+        assert_eq!(r.comps.0[comp::MIGRATION], 0);
     }
 
     #[test]

@@ -28,6 +28,10 @@ struct WindowRow {
     /// split exactly across window boundaries like busy cycles.
     hold_cycles: u64,
     busy_cycles: u64,
+    /// Prefix-cache hits (prompts served partly from cached KV pages).
+    prefix_hits: u64,
+    /// Disaggregated prefill→decode hand-offs (counted at the source).
+    handoffs: u64,
     /// Fleet-wide queued requests at the last sample in this window.
     queue_depth: Option<u64>,
     /// Mean per-device KV occupancy permille at the last sample.
@@ -150,6 +154,12 @@ impl MetricsSeries {
                 self.row(cycle).kv_permille = Some(mean);
             }
             EventKind::Hold { dur } => self.add_hold(cycle, *dur),
+            EventKind::HandoffOut { dur, .. } => {
+                self.row(cycle).handoffs += 1;
+                self.add_busy(cycle, *dur);
+            }
+            EventKind::HandoffIn { dur, .. } => self.add_busy(cycle, *dur),
+            EventKind::PrefixHit { .. } => self.row(cycle).prefix_hits += 1,
             EventKind::Resume | EventKind::KvAdmit { .. } | EventKind::ChunkWait => {}
         }
     }
@@ -166,7 +176,7 @@ impl MetricsSeries {
         let mut out = String::from(
             "window,start_cycle,arrivals,completions,tokens,steals,preemptions,\
              migrations,drops,rejects,hold_permille,busy_permille,queue_depth,\
-             kv_occupancy_permille\n",
+             kv_occupancy_permille,prefix_hits,handoffs\n",
         );
         let last = self.makespan / self.window_cycles;
         let span = self.window_cycles * self.n_devices as u64;
@@ -181,7 +191,7 @@ impl MetricsSeries {
             let busy_permille = row.busy_cycles.saturating_mul(1000) / span;
             let _ = writeln!(
                 out,
-                "{w},{},{},{},{},{},{},{},{},{},{hold_permille},{busy_permille},{queue},{kv}",
+                "{w},{},{},{},{},{},{},{},{},{},{hold_permille},{busy_permille},{queue},{kv},{},{}",
                 w * self.window_cycles,
                 row.arrivals,
                 row.completions,
@@ -191,6 +201,8 @@ impl MetricsSeries {
                 row.migrations,
                 row.drops,
                 row.rejects,
+                row.prefix_hits,
+                row.handoffs,
             );
         }
         out
@@ -211,10 +223,10 @@ mod tests {
         let rows: Vec<&str> = csv.lines().skip(1).collect();
         assert_eq!(rows.len(), 4); // windows 0..=3
         // busy_permille over window*devices = 100*2 = 200 cycles.
-        assert!(rows[0].ends_with(",250,0,0"), "w0: {}", rows[0]);
-        assert!(rows[1].ends_with(",500,0,0"), "w1: {}", rows[1]);
-        assert!(rows[2].ends_with(",500,0,0"), "w2: {}", rows[2]);
-        assert!(rows[3].ends_with(",0,0,0"), "w3: {}", rows[3]);
+        assert!(rows[0].ends_with(",250,0,0,0,0"), "w0: {}", rows[0]);
+        assert!(rows[1].ends_with(",500,0,0,0,0"), "w1: {}", rows[1]);
+        assert!(rows[2].ends_with(",500,0,0,0,0"), "w2: {}", rows[2]);
+        assert!(rows[3].ends_with(",0,0,0,0,0"), "w3: {}", rows[3]);
     }
 
     #[test]
@@ -227,7 +239,7 @@ mod tests {
         let rows: Vec<&str> = csv.lines().skip(1).collect();
         assert_eq!(rows.len(), 4);
         for r in &rows {
-            assert!(r.ends_with(",3,700"), "row: {r}");
+            assert!(r.ends_with(",3,700,0,0"), "row: {r}");
         }
     }
 
@@ -240,7 +252,7 @@ mod tests {
         let csv = s.to_csv();
         let row = csv.lines().nth(1).expect("one window");
         // (700 + 301) / 2 = 500.5 → 501; integer truncation said 500.
-        assert!(row.ends_with(",501"), "row: {row}");
+        assert!(row.ends_with(",501,0,0"), "row: {row}");
     }
 
     #[test]
@@ -255,9 +267,9 @@ mod tests {
         let rows: Vec<&str> = csv.lines().skip(1).collect();
         assert_eq!(rows.len(), 3);
         // hold_permille over 100 window cycles × 1 device.
-        assert!(rows[0].ends_with(",500,0,0,0"), "w0: {}", rows[0]);
-        assert!(rows[1].ends_with(",1000,0,0,0"), "w1: {}", rows[1]);
-        assert!(rows[2].ends_with(",0,0,0,0"), "w2: {}", rows[2]);
+        assert!(rows[0].ends_with(",500,0,0,0,0,0"), "w0: {}", rows[0]);
+        assert!(rows[1].ends_with(",1000,0,0,0,0,0"), "w1: {}", rows[1]);
+        assert!(rows[2].ends_with(",0,0,0,0,0,0"), "w2: {}", rows[2]);
     }
 
     #[cfg(debug_assertions)]
@@ -266,6 +278,23 @@ mod tests {
     fn out_of_range_gauge_device_panics_in_debug() {
         let mut s = MetricsSeries::new(10, 2);
         s.feed(5, 2, &EventKind::QueueDepth { depth: 1 });
+    }
+
+    #[test]
+    fn prefix_hits_and_handoffs_get_their_own_columns() {
+        let mut s = MetricsSeries::new(100, 2);
+        s.feed(10, 0, &EventKind::PrefixHit { tokens: 8 });
+        s.feed(20, 0, &EventKind::HandoffOut { dst: 1, words: 64, dur: 30 });
+        s.feed(50, 1, &EventKind::HandoffIn { src: 0, words: 64, dur: 10 });
+        s.finish(150);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("window,"));
+        assert!(csv.lines().next().expect("header").ends_with(",prefix_hits,handoffs"));
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), 2);
+        // Both hand-off spans are busy time: (30 + 10) * 1000 / 200.
+        assert!(rows[0].ends_with(",200,0,0,1,1"), "w0: {}", rows[0]);
+        assert!(rows[1].ends_with(",0,0,0,0,0"), "w1: {}", rows[1]);
     }
 
     #[test]

@@ -87,6 +87,16 @@ pub enum EventKind {
     /// its next KV rows on this visit (pages must free first). One
     /// instant per blocked attempt, carrying the stalled sequence id.
     ChunkWait,
+    /// Disaggregated hand-off source span: a freshly prefilled
+    /// sequence's KV image (`words` words) serializing towards decode
+    /// device `dst`. Opens a flow arrow keyed by the sequence id.
+    HandoffOut { dst: usize, words: u64, dur: u64 },
+    /// Disaggregated hand-off destination span: importing `words` KV
+    /// words from prefill device `src`. Closes the flow arrow.
+    HandoffIn { src: usize, words: u64, dur: u64 },
+    /// Prefix-cache hit: `tokens` leading prompt tokens were served by
+    /// copying cached KV pages instead of re-running prefill.
+    PrefixHit { tokens: usize },
 }
 
 /// One structured fleet event on the reference-clock timeline.
@@ -315,6 +325,48 @@ pub(crate) fn render_trace_event(e: &ObsEvent, out: &mut String) {
             out.push_str(&seq.to_string());
             out.push_str("}}");
         }
+        EventKind::HandoffOut { dst, words, dur } => {
+            push_common(out, "handoff_out", "handoff", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"dst\":");
+            out.push_str(&dst.to_string());
+            out.push_str(",\"words\":");
+            out.push_str(&words.to_string());
+            out.push_str("}},\n");
+            // Flow arrow: opens at the prefill-side span, keyed by seq.
+            push_common(out, "handoff", "handoff", 's', e.cycle, e.device);
+            out.push_str(",\"id\":");
+            out.push_str(&seq.to_string());
+            out.push('}');
+        }
+        EventKind::HandoffIn { src, words, dur } => {
+            push_common(out, "handoff_in", "handoff", 'X', e.cycle, e.device);
+            out.push_str(",\"dur\":");
+            out.push_str(&dur.to_string());
+            out.push_str(",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"src\":");
+            out.push_str(&src.to_string());
+            out.push_str(",\"words\":");
+            out.push_str(&words.to_string());
+            out.push_str("}},\n");
+            // Close the flow arrow on the decode-side span.
+            push_common(out, "handoff", "handoff", 'f', e.cycle, e.device);
+            out.push_str(",\"bp\":\"e\",\"id\":");
+            out.push_str(&seq.to_string());
+            out.push('}');
+        }
+        EventKind::PrefixHit { tokens } => {
+            push_common(out, "prefix_hit", "kv", 'i', e.cycle, e.device);
+            out.push_str(",\"s\":\"t\",\"args\":{\"seq\":");
+            out.push_str(&seq.to_string());
+            out.push_str(",\"tokens\":");
+            out.push_str(&tokens.to_string());
+            out.push_str("}}");
+        }
     }
 }
 
@@ -461,6 +513,35 @@ mod tests {
         assert!(json.contains("\"name\":\"hold\",\"cat\":\"queue\",\"ph\":\"X\",\"ts\":10"));
         assert!(json.contains("\"dur\":40"));
         assert!(json.contains("\"name\":\"chunk_wait\",\"cat\":\"kv\",\"ph\":\"i\",\"ts\":55"));
+        assert_balanced(&json);
+    }
+
+    #[test]
+    fn handoff_and_prefix_hit_render_with_flows() {
+        let events = vec![
+            ObsEvent { cycle: 3, device: 0, seq: 5, kind: EventKind::PrefixHit { tokens: 12 } },
+            ObsEvent {
+                cycle: 9,
+                device: 0,
+                seq: 5,
+                kind: EventKind::HandoffOut { dst: 1, words: 96, dur: 6 },
+            },
+            ObsEvent {
+                cycle: 15,
+                device: 1,
+                seq: 5,
+                kind: EventKind::HandoffIn { src: 0, words: 96, dur: 3 },
+            },
+        ];
+        let names = vec!["p".to_string(), "d".to_string()];
+        let json = render_chrome_json(&events, &names);
+        assert_eq!(json, render_chrome_json(&events, &names));
+        assert!(json.contains("\"name\":\"prefix_hit\",\"cat\":\"kv\",\"ph\":\"i\",\"ts\":3"));
+        assert!(json.contains("\"tokens\":12"));
+        assert!(json.contains("\"name\":\"handoff_out\",\"cat\":\"handoff\",\"ph\":\"X\""));
+        assert!(json.contains("\"name\":\"handoff_in\",\"cat\":\"handoff\",\"ph\":\"X\""));
+        assert!(json.contains("\"name\":\"handoff\",\"cat\":\"handoff\",\"ph\":\"s\""));
+        assert!(json.contains("\"name\":\"handoff\",\"cat\":\"handoff\",\"ph\":\"f\""));
         assert_balanced(&json);
     }
 

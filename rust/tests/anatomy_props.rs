@@ -309,6 +309,75 @@ fn forced_migration_shows_migration_blame() {
     assert!(report.comp_totals[comp::MIGRATION] > 0, "audit totals lost the migration blame");
 }
 
+/// Late joiner inside a retroactive hold span (the ISSUE 9 clamp,
+/// audited in ISSUE 10): request A parks the device at 0, request B
+/// arrives mid-hold at 30k and fills the batch. B's hold charge is
+/// clamped to the hold it actually sat through — `now − max(h,
+/// arrival)` — so queue + hold + service sums bit-exactly to e2e for
+/// both requests, in the event-loop metrics *and* the anatomy. (The
+/// unclamped form `now − h` exceeds B's total wait and underflows the
+/// u64 queue-wait split.)
+#[test]
+fn late_joiner_hold_clamp_is_exact_in_metrics_and_anatomy() {
+    let classes = vec![ModelClass::tiny()];
+    let requests: Vec<FleetRequest> = [0u64, 30_000]
+        .iter()
+        .enumerate()
+        .map(|(i, &arrival)| FleetRequest {
+            id: i as u64,
+            model: 0,
+            input: MatF32::zeros(1, 1),
+            arrival_cycle: arrival,
+            priority: 0,
+            deadline_cycle: None,
+        })
+        .collect();
+    let mut fleet = FleetSim::new(
+        FleetConfig {
+            roster: vec![DeviceClass::paper()],
+            policy: Placement::RoundRobin,
+            discipline: Discipline::Fifo,
+            batch: BatchPolicy { max_batch: 2, max_wait_cycles: 200_000, latency_aware: false },
+            steal: false,
+            ref_mhz: 100,
+            timing_only: true,
+            ..Default::default()
+        },
+        &classes,
+        42,
+    );
+    fleet.enable_obs(&anatomy_cfg(25_000));
+    let m = fleet.run(requests).unwrap();
+    assert_eq!(m.completed, 2);
+    // Event loop: A sat the whole [0, 30k) hold, B none of it; the
+    // dispatcher is blamed for nothing. Both serve in one batch at 30k,
+    // so A's extra e2e latency is *exactly* the hold span.
+    assert_eq!(m.hold_wait.count(), 2);
+    assert_eq!(m.hold_wait.max(), 30_000, "A's hold charge is the whole span");
+    assert_eq!(m.hold_wait.min(), 0, "the late joiner sat through none of the hold");
+    assert_eq!(m.queue_wait.max(), 0, "no hold may leak into queue wait");
+    assert_eq!(
+        m.latency.max(),
+        m.latency.min() + 30_000,
+        "queue(0) + hold + service must sum bit-exactly to e2e for both requests"
+    );
+    // Anatomy: the same split, per request and exact by construction.
+    let anatomies = fleet.obs().anatomy().expect("anatomy was armed");
+    check_exactness(&anatomies).unwrap();
+    assert_eq!(anatomies.len(), 2);
+    let by_id = |id: u64| anatomies.iter().find(|r| r.id == id).unwrap();
+    let (a, b) = (by_id(0), by_id(1));
+    assert_eq!(a.comps.0[comp::HOLD], 30_000);
+    assert_eq!(a.comps.0[comp::QUEUE_WAIT], 0);
+    assert_eq!(b.comps.0[comp::HOLD], 0, "the late joiner carries no retroactive hold");
+    assert_eq!(b.comps.0[comp::QUEUE_WAIT], 0);
+    assert_eq!(
+        a.latency - a.comps.0[comp::HOLD],
+        b.latency,
+        "stripped of the hold, both batch members decompose to the same service time"
+    );
+}
+
 /// Batch-formation hold (the satellite bugfix): a parked partial batch
 /// must show up as the `hold` component, and as the new `hold_wait`
 /// histogram in the fleet metrics — no longer lumped into queue wait.

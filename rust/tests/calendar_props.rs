@@ -140,7 +140,7 @@ fn prop_encoder_calendar_loop_matches_reference_scan() {
 /// Tentpole invariant, decode side: the calendar loop is bit-identical
 /// to the reference loop — metrics, completions with token data, and
 /// trace bytes — across rosters, schedules (chunked prefill included),
-/// migration, and timing-only mode.
+/// migration, disaggregation, the prefix cache, and timing-only mode.
 #[test]
 fn prop_decode_calendar_loop_matches_reference_scan() {
     prop_check(
@@ -155,15 +155,27 @@ fn prop_decode_calendar_loop_matches_reference_scan() {
                 1 => DecodeSchedule::DecodeFirst,
                 _ => DecodeSchedule::Chunked { chunk_tokens: rng.range(1, 4) },
             };
-            let migrate = rng.range(0, 2) == 0;
+            // ISSUE 10: disaggregated prefill/decode roles (rosters all
+            // have ≥ 2 devices) and the fleet-wide prefix cache ride
+            // the same oracle. Prompts draw their seeds from a 2-entry
+            // pool, so repeats share bitwise prefixes for the cache to
+            // hit (the same XorShift stream prefixes shorter prompts).
+            let disagg = rng.range(0, 2) == 0;
+            let prefix_block_tokens = match rng.range(0, 3) {
+                0 => None,
+                b => Some(b),
+            };
+            let migrate = !disagg && rng.range(0, 2) == 0;
             let timing_only = rng.range(0, 2) == 0;
+            let seed_pool = [rng.next_u64(), rng.next_u64()];
             let n = rng.range(3, 8);
             let requests: Vec<GenRequest> = (0..n)
                 .map(|i| {
                     let prompt = rng.range(1, 5);
                     let max_new = rng.range(1, 8 - prompt + 1);
                     let arrival = (i as u64) * rng.below(30_000);
-                    gen_request(i as u64, prompt, max_new, arrival, rng.next_u64())
+                    let seed = seed_pool[rng.range(0, 2)];
+                    gen_request(i as u64, prompt, max_new, arrival, seed)
                 })
                 .collect();
             let cfg = DecodeFleetConfig {
@@ -173,6 +185,8 @@ fn prop_decode_calendar_loop_matches_reference_scan() {
                 schedule,
                 migrate,
                 timing_only,
+                disagg,
+                prefix_block_tokens,
                 ..Default::default()
             };
             let mut calendar = DecodeFleetSim::new(cfg.clone(), &classes, 42);
@@ -184,7 +198,8 @@ fn prop_decode_calendar_loop_matches_reference_scan() {
             if m_cal != m_ref {
                 return CaseResult::Fail(format!(
                     "metrics diverge from the reference loop \
-                     ({schedule:?}, migrate {migrate}, timing_only {timing_only})"
+                     ({schedule:?}, migrate {migrate}, disagg {disagg}, \
+                     prefix {prefix_block_tokens:?}, timing_only {timing_only})"
                 ));
             }
             if d_cal != d_ref {

@@ -1,0 +1,292 @@
+//! Disaggregated serving + fleet-wide prefix cache conformance
+//! (ISSUE 10): both features are *routing* and *reuse* optimizations,
+//! never semantic ones. A sequence that prefills on a fast class and
+//! hands its KV image to a decode device, or that skips leading prompt
+//! rows because a bitwise-verified prefix already sits in the cache,
+//! must emit **bit-identical** tokens to the cold unified fleet — for
+//! any chunk schedule, batch composition, class mix, and `--threads N`
+//! worker count. The oracle is the same one the calendar and threading
+//! refactors answer to: `run_reference`, diffed on metrics,
+//! completions (token data included), rendered trace bytes, and the
+//! windowed series CSV.
+
+use cgra_edge::cluster::{ArrivalProcess, GenRequest, ModelClass, WorkloadGen};
+use cgra_edge::config::DeviceClass;
+use cgra_edge::decode::{DecodeFleetConfig, DecodeFleetSim, DecodeSchedule, GenCompletion};
+use cgra_edge::obs::ObsConfig;
+use cgra_edge::util::mat::MatF32;
+use cgra_edge::util::prop::{prop_check, CaseResult, PropConfig};
+use cgra_edge::util::rng::XorShiftRng;
+use cgra_edge::xformer::XformerConfig;
+
+fn gen_classes() -> Vec<ModelClass> {
+    vec![ModelClass {
+        name: "gen-tiny",
+        cfg: XformerConfig { n_layers: 1, seq: 8, d_model: 16, n_heads: 2, d_ff: 32 },
+        weight: 1.0,
+        sla_ms: 0.0,
+        priority: 0,
+    }]
+}
+
+/// Deterministic prompt from a seed: two requests drawn from the same
+/// seed share the whole XorShift stream, so the shorter prompt is a
+/// bitwise *prefix* of the longer one — exactly the repeat shape the
+/// prefix cache serves.
+fn gen_request(id: u64, prompt_rows: usize, max_new: usize, arrival: u64, seed: u64) -> GenRequest {
+    let mut rng = XorShiftRng::new(0xD15A_6000 + seed);
+    let mut prompt = MatF32::zeros(prompt_rows, 16);
+    for v in &mut prompt.data {
+        *v = rng.normal() * 0.5;
+    }
+    GenRequest { id, model: 0, prompt, max_new_tokens: max_new, arrival_cycle: arrival }
+}
+
+fn sorted(mut done: Vec<GenCompletion>) -> Vec<GenCompletion> {
+    done.sort_by_key(|c| c.id);
+    done
+}
+
+/// Tentpole conformance: with disaggregation and/or the prefix cache
+/// armed, the calendar loop, the reference loop, and the sharded
+/// worker backend at 2/3/8 threads agree bit for bit — metrics,
+/// completions with token data, trace bytes, series CSV — across
+/// rosters (uniform and big.LITTLE), schedules (chunked prefill
+/// included), and timing-only mode.
+#[test]
+fn prop_disagg_prefix_runs_match_reference_for_any_schedule() {
+    prop_check(
+        "disagg + prefix cache: run == reference == threaded",
+        PropConfig { cases: 6, base_seed: 0xD15A_0001 },
+        |rng| {
+            let classes = gen_classes();
+            let rosters = ["4x4@100:2", "4x4@100:1,8x4@200:1", "4x4@100:4"];
+            let roster = DeviceClass::parse_roster(rosters[rng.range(0, 3)]).unwrap();
+            let schedule = match rng.range(0, 3) {
+                0 => DecodeSchedule::PrefillFirst,
+                1 => DecodeSchedule::DecodeFirst,
+                _ => DecodeSchedule::Chunked { chunk_tokens: rng.range(1, 4) },
+            };
+            // At least one of the two ISSUE-10 features is always on.
+            let disagg = rng.range(0, 2) == 0;
+            let prefix_block_tokens = if disagg && rng.range(0, 2) == 0 {
+                None
+            } else {
+                Some(rng.range(1, 3))
+            };
+            let timing_only = rng.range(0, 2) == 0;
+            // Seeds from a 2-entry pool: repeats share bitwise prefixes.
+            let seed_pool = [rng.next_u64(), rng.next_u64()];
+            let n = rng.range(4, 10);
+            let requests: Vec<GenRequest> = (0..n)
+                .map(|i| {
+                    let prompt = rng.range(1, 5);
+                    let max_new = rng.range(1, 8 - prompt + 1);
+                    let arrival = (i as u64) * rng.below(30_000);
+                    let seed = seed_pool[rng.range(0, 2)];
+                    gen_request(i as u64, prompt, max_new, arrival, seed)
+                })
+                .collect();
+            let cfg = DecodeFleetConfig {
+                roster: roster.clone(),
+                ref_mhz: 100,
+                max_running: 2,
+                schedule,
+                timing_only,
+                disagg,
+                prefix_block_tokens,
+                ..Default::default()
+            };
+            let mut calendar = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+            calendar.enable_obs(&ObsConfig::full(25_000));
+            let (m_cal, d_cal) = calendar.run(requests.clone()).unwrap();
+            let mut reference = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+            reference.enable_obs(&ObsConfig::full(25_000));
+            let (m_ref, d_ref) = reference.run_reference(requests.clone()).unwrap();
+            if m_cal != m_ref {
+                return CaseResult::Fail(format!(
+                    "metrics diverge from the reference loop ({schedule:?}, disagg {disagg}, \
+                     prefix {prefix_block_tokens:?}, timing_only {timing_only})"
+                ));
+            }
+            if d_cal != d_ref {
+                return CaseResult::Fail(
+                    "completions (token data included) diverge from the reference loop".into(),
+                );
+            }
+            if calendar.obs().trace_json() != reference.obs().trace_json() {
+                return CaseResult::Fail("trace bytes diverge from the reference loop".into());
+            }
+            if calendar.obs().series_csv() != reference.obs().series_csv() {
+                return CaseResult::Fail("series CSV diverges from the reference loop".into());
+            }
+            for threads in [2usize, 3, 8] {
+                let mut threaded =
+                    DecodeFleetSim::new(DecodeFleetConfig { threads, ..cfg.clone() }, &classes, 42);
+                threaded.enable_obs(&ObsConfig::full(25_000));
+                let (m_thr, d_thr) = threaded.run(requests.clone()).unwrap();
+                if m_thr != m_ref {
+                    return CaseResult::Fail(format!(
+                        "threaded metrics diverge at {threads} threads ({schedule:?}, \
+                         disagg {disagg}, prefix {prefix_block_tokens:?}, \
+                         timing_only {timing_only})"
+                    ));
+                }
+                if d_thr != d_ref {
+                    return CaseResult::Fail(format!(
+                        "threaded completions diverge at {threads} threads"
+                    ));
+                }
+                if threaded.obs().trace_json() != reference.obs().trace_json() {
+                    return CaseResult::Fail(format!(
+                        "threaded trace bytes diverge at {threads} threads"
+                    ));
+                }
+                if threaded.obs().series_csv() != reference.obs().series_csv() {
+                    return CaseResult::Fail(format!(
+                        "threaded series CSV diverges at {threads} threads"
+                    ));
+                }
+            }
+            CaseResult::Ok
+        },
+    );
+}
+
+/// The 2×2 feature matrix — {unified, disaggregated} × {cold, prefix
+/// cache} — emits bitwise-identical tokens per request. The disagg
+/// arms must hand off every decoding sequence; the prefix arms must
+/// register cache hits (the workload repeats seeds, so prefixes
+/// collide by construction).
+#[test]
+fn feature_matrix_emits_bit_identical_tokens() {
+    let classes = gen_classes();
+    let requests: Vec<GenRequest> = (0..12)
+        .map(|i| gen_request(i, 2 + (i as usize % 3), 4, i * 50_000, i % 2))
+        .collect();
+    let mk = |disagg: bool, block: Option<usize>| {
+        let cfg = DecodeFleetConfig {
+            roster: vec![DeviceClass::paper(); 2],
+            ref_mhz: 100,
+            max_running: 8,
+            disagg,
+            prefix_block_tokens: block,
+            ..Default::default()
+        };
+        let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+        let (m, done) = fleet.run(requests.clone()).unwrap();
+        (m, sorted(done))
+    };
+    let (m_uc, d_uc) = mk(false, None);
+    let (m_up, d_up) = mk(false, Some(2));
+    let (m_dc, d_dc) = mk(true, None);
+    let (m_dp, d_dp) = mk(true, Some(2));
+    for (m, d) in [(&m_uc, &d_uc), (&m_up, &d_up), (&m_dc, &d_dc), (&m_dp, &d_dp)] {
+        assert_eq!(m.completed, 12, "every request completes in every arm");
+        assert_eq!(d.len(), 12);
+    }
+    // max_new = 4 everywhere, so every sequence decodes after prefill:
+    // under disaggregation each one crosses the entry links exactly once.
+    assert_eq!(m_uc.handoffs, 0);
+    assert_eq!(m_up.handoffs, 0);
+    assert_eq!(m_dc.handoffs, 12);
+    assert_eq!(m_dp.handoffs, 12);
+    assert!(m_dc.handoff_words > 0, "hand-offs are charged in words over the links");
+    assert_eq!(m_uc.prefix_hits, 0);
+    assert_eq!(m_dc.prefix_hits, 0);
+    assert!(m_up.prefix_hits > 0, "repeated prefixes must hit the unified cache");
+    assert!(m_dp.prefix_hits > 0, "repeated prefixes must hit on the prefill-only devices");
+    assert!(m_up.prefix_copied_words > 0);
+    for (a, b) in d_uc.iter().zip(&d_up) {
+        assert_eq!(a.tokens.data, b.tokens.data, "prefix cache must not change tokens");
+    }
+    for (a, b) in d_uc.iter().zip(&d_dc) {
+        assert_eq!(a.tokens.data, b.tokens.data, "disaggregation must not change tokens");
+    }
+    for (a, b) in d_uc.iter().zip(&d_dp) {
+        assert_eq!(a.tokens.data, b.tokens.data, "the combined mode must not change tokens");
+    }
+}
+
+/// A generator-drawn shared-prefix stream (the `--prefix-share` CLI
+/// workload) served with the cache on is bit-identical to the cold
+/// serve, and actually hits: every prompt reuses one pooled prefix.
+#[test]
+fn shared_prefix_stream_hits_and_stays_bit_identical() {
+    let classes = gen_classes();
+    let mut gen = WorkloadGen::new(
+        ArrivalProcess::Poisson { rate_rps: 50.0 },
+        classes.clone(),
+        100.0,
+        0xD15A_0002,
+    );
+    let requests = gen.generate_gen_shared(10, 1.0, 2, 1);
+    let mk = |block: Option<usize>| {
+        let cfg = DecodeFleetConfig {
+            roster: vec![DeviceClass::paper()],
+            ref_mhz: 100,
+            max_running: 4,
+            prefix_block_tokens: block,
+            ..Default::default()
+        };
+        let mut fleet = DecodeFleetSim::new(cfg, &classes, 42);
+        let (m, done) = fleet.run(requests.clone()).unwrap();
+        (m, sorted(done))
+    };
+    let (m_cold, d_cold) = mk(None);
+    let (m_hot, d_hot) = mk(Some(2));
+    assert_eq!(m_cold.completed, 10);
+    assert_eq!(m_hot.completed, 10);
+    assert_eq!(m_cold.prefix_hits, 0);
+    assert!(m_hot.prefix_hits > 0, "a 100% shared stream must hit after the first insert");
+    assert!(m_hot.prefix_hit_tokens >= m_hot.prefix_hits, "each hit serves ≥ 1 token");
+    assert_eq!(d_cold.len(), d_hot.len());
+    for (a, b) in d_cold.iter().zip(&d_hot) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens.data, b.tokens.data, "cache hits must be invisible in the tokens");
+    }
+}
+
+/// KV pressure: a tiny page pool under a shared-prefix stream — cache
+/// inserts compete with live sequences for pages (inserts never evict
+/// live work; live admissions evict cache entries). Conservation and
+/// the reference/threaded oracle must hold through the churn.
+#[test]
+fn eviction_pressure_conserves_and_matches_reference() {
+    let classes = gen_classes();
+    let requests: Vec<GenRequest> = (0..10)
+        .map(|i| gen_request(i, 2 + (i as usize % 3), 3, i * 20_000, i % 2))
+        .collect();
+    let cfg = DecodeFleetConfig {
+        roster: vec![DeviceClass::paper(); 2],
+        ref_mhz: 100,
+        max_running: 4,
+        page_words: 64,
+        kv_pages: Some(6),
+        schedule: DecodeSchedule::Chunked { chunk_tokens: 2 },
+        prefix_block_tokens: Some(2),
+        ..Default::default()
+    };
+    let mut calendar = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+    calendar.enable_obs(&ObsConfig::full(25_000));
+    let (m, done) = calendar.run(requests.clone()).unwrap();
+    assert_eq!(m.completed + m.rejected, 10, "pressure delays, never loses, sequences");
+    assert_eq!(
+        m.tokens,
+        done.iter().map(|c| c.tokens.rows as u64).sum::<u64>(),
+        "every emitted token belongs to exactly one completion"
+    );
+    let mut reference = DecodeFleetSim::new(cfg.clone(), &classes, 42);
+    reference.enable_obs(&ObsConfig::full(25_000));
+    let (m_ref, d_ref) = reference.run_reference(requests.clone()).unwrap();
+    assert_eq!(m, m_ref, "pressure run must match the reference loop");
+    assert_eq!(sorted(done), sorted(d_ref));
+    assert_eq!(calendar.obs().trace_json(), reference.obs().trace_json());
+    assert_eq!(calendar.obs().series_csv(), reference.obs().series_csv());
+    let mut threaded = DecodeFleetSim::new(DecodeFleetConfig { threads: 3, ..cfg }, &classes, 42);
+    threaded.enable_obs(&ObsConfig::full(25_000));
+    let (m_thr, d_thr) = threaded.run(requests).unwrap();
+    assert_eq!(m, m_thr, "3-thread pressure run must match");
+    assert_eq!(sorted(d_thr), sorted(d_ref));
+    assert_eq!(threaded.obs().trace_json(), reference.obs().trace_json());
+}
